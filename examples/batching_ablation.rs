@@ -1,0 +1,98 @@
+//! Ablation: dynamic-batcher policy sweep (max-batch × max-delay).
+//!
+//! DESIGN.md's coordinator calls out the batching policy as a design
+//! choice; this example quantifies it.  For each (max_batch, max_delay)
+//! cell we drive the Origami engine with the same Poisson request stream
+//! and report throughput and p95 latency — the classic trade-off surface
+//! a deployment tunes.
+//!
+//! ```bash
+//! cargo run --release --example batching_ablation -- [--requests 48] [--rate 60]
+//! ```
+
+use origami::config::Config;
+use origami::launcher::{encrypt_request, start_engine_from_config, synth_images, Stack};
+use origami::util::cli::Args;
+use origami::util::json::{self, Value};
+use origami::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let requests = args.usize_or("requests", 48)?;
+    let rate = args.f64_or("rate", 60.0)?;
+    let base = Config::from_args(&args)?;
+
+    let stack = Stack::load(&base)?;
+    let model = stack.model(&base.model)?;
+    let sample_bytes = stack.sample_bytes(&base.model)?;
+    let batches = stack.artifact_batches(&base.model)?;
+    let images = synth_images(requests, model.image, model.in_channels, 5);
+
+    println!(
+        "batching ablation: {requests} reqs @ {rate}/s, strategy {}\n",
+        base.strategy
+    );
+    println!(
+        "{:>9} {:>10} | {:>10} {:>12} {:>12} {:>10}",
+        "max_batch", "delay_ms", "req/s", "p50_ms", "p95_ms", "mean_bsz"
+    );
+    let mut rows: Vec<Value> = Vec::new();
+    for &max_batch in &[1usize, 4, 8] {
+        for &delay in &[0.0f64, 2.0, 8.0] {
+            let mut cfg = base.clone();
+            cfg.workers = 1;
+            cfg.max_batch = max_batch;
+            cfg.max_delay_ms = delay;
+            let engine = start_engine_from_config(cfg.clone(), sample_bytes, batches.clone())?;
+            let engine = std::sync::Arc::new(engine);
+            let mut rng = origami::util::rng::Rng::new(99);
+            let t0 = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for (i, img) in images.iter().enumerate() {
+                let ct = encrypt_request(&cfg, 0, img);
+                let eng = engine.clone();
+                let m = cfg.model.clone();
+                handles.push(std::thread::spawn(move || eng.infer_blocking(&m, ct, 0)));
+                let _ = i;
+                std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rate)));
+            }
+            let mut lat = Summary::new();
+            let mut failed = 0;
+            for h in handles {
+                match h.join().unwrap() {
+                    Ok(r) if r.error.is_none() => lat.record(r.latency_ms),
+                    _ => failed += 1,
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let engine = std::sync::Arc::try_unwrap(engine)
+                .map_err(|_| anyhow::anyhow!("engine leak"))?;
+            let metrics = engine.shutdown();
+            anyhow::ensure!(failed == 0, "{failed} requests failed");
+            let rps = requests as f64 / wall;
+            println!(
+                "{:>9} {:>10.1} | {:>10.1} {:>12.2} {:>12.2} {:>10.2}",
+                max_batch,
+                delay,
+                rps,
+                lat.p50(),
+                lat.p95(),
+                metrics.batch_size.mean()
+            );
+            rows.push(json::obj(vec![
+                ("max_batch", json::num(max_batch as f64)),
+                ("max_delay_ms", json::num(delay)),
+                ("throughput_rps", json::num(rps)),
+                ("latency_p50_ms", json::num(lat.p50())),
+                ("latency_p95_ms", json::num(lat.p95())),
+                ("mean_batch", json::num(metrics.batch_size.mean())),
+            ]));
+        }
+    }
+    json::to_file(
+        std::path::Path::new("bench_results/batching_ablation.json"),
+        &json::obj(vec![("rows", Value::Arr(rows))]),
+    )?;
+    println!("\nwrote bench_results/batching_ablation.json");
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! End-to-end serving driver (the repo's headline validation run).
+//!
+//! Scenario from the paper's motivation (§III-A): a health-care provider
+//! sends private medical images to a cloud classification service.  This
+//! driver stands the whole stack up — router, dynamic batcher, worker
+//! threads each owning a PJRT client + enclave + factor pools — fires an
+//! open-loop Poisson stream of encrypted requests at it, verifies every
+//! answer against the non-private reference, and reports latency and
+//! throughput per strategy.  Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example medical_serving -- \
+//!     [--requests 96] [--rate 40] [--strategies origami,slalom,baseline2]
+//! ```
+
+use origami::config::Config;
+use origami::coordinator::Router;
+use origami::launcher::{encrypt_request, start_engine_from_config, synth_images, Stack};
+use origami::util::cli::Args;
+use origami::util::json::{self, Value};
+use origami::util::stats::{fmt_ms, Summary};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let requests = args.usize_or("requests", 96)?;
+    let rate = args.f64_or("rate", 40.0)?;
+    let strategies = args.str_list_or("strategies", &["origami/6", "slalom", "baseline2", "open"]);
+    let base = Config::from_args(&args)?;
+
+    // Reference logits for verification (non-private full model).
+    let stack = Stack::load(&base)?;
+    let model = stack.model(&base.model)?;
+    let images = synth_images(requests, model.image, model.in_channels, 42);
+    let sample_bytes = stack.sample_bytes(&base.model)?;
+    let batches = stack.artifact_batches(&base.model)?;
+    let reference: Vec<Vec<f32>> = {
+        let mut cfg = base.clone();
+        cfg.strategy = "open".into();
+        let mut s = stack.build_strategy(&cfg)?;
+        images
+            .iter()
+            .map(|img| {
+                let ct = encrypt_request(&base, 0, img);
+                s.infer(&ct, 1, &[0], &mut Default::default()).unwrap()
+            })
+            .collect()
+    };
+    println!(
+        "medical-serving workload: {requests} encrypted images @ {rate} req/s, \
+         model {}, verifying every response\n",
+        base.model
+    );
+
+    let mut report_rows: Vec<Value> = Vec::new();
+    for strategy in &strategies {
+        let mut cfg = base.clone();
+        cfg.strategy = strategy.clone();
+        cfg.workers = args.usize_or("workers", 2)?;
+        let engine = start_engine_from_config(cfg.clone(), sample_bytes, batches.clone())?;
+        let mut router = Router::new();
+        router.register(&base.model, engine, sample_bytes);
+
+        // Open-loop Poisson arrivals; all under session 0 (one attested
+        // batch channel), verified against the open reference.
+        let router = std::sync::Arc::new(router);
+        let mut rng = origami::util::rng::Rng::new(7);
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for img in images.iter() {
+            let ct = encrypt_request(&cfg, 0, img);
+            let r = router.clone();
+            let model_name = base.model.clone();
+            handles.push(std::thread::spawn(move || {
+                r.infer_blocking(&model_name, ct, 0)
+            }));
+            std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rate)));
+        }
+        let mut lat = Summary::new();
+        let mut sim = Summary::new();
+        let mut wrong = 0usize;
+        let mut failed = 0usize;
+        for (i, h) in handles.into_iter().enumerate() {
+            match h.join().unwrap() {
+                Ok(resp) if resp.error.is_none() => {
+                    lat.record(resp.latency_ms);
+                    sim.record(resp.sim_ms);
+                    let diff = resp
+                        .probs
+                        .iter()
+                        .zip(&reference[i])
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    if diff > 0.05 {
+                        wrong += 1;
+                    }
+                }
+                _ => failed += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let served = requests - failed;
+        println!(
+            "{strategy:<12} {served}/{requests} ok, {wrong} mismatched | \
+             {:.1} req/s | latency p50 {} p95 {} p99 {} | sim/req p50 {}",
+            served as f64 / wall,
+            fmt_ms(lat.p50()),
+            fmt_ms(lat.p95()),
+            fmt_ms(lat.p99()),
+            fmt_ms(sim.p50()),
+        );
+        report_rows.push(json::obj(vec![
+            ("strategy", json::s(strategy)),
+            ("served", json::num(served as f64)),
+            ("mismatched", json::num(wrong as f64)),
+            ("throughput_rps", json::num(served as f64 / wall)),
+            ("latency_p50_ms", json::num(lat.p50())),
+            ("latency_p95_ms", json::num(lat.p95())),
+            ("latency_p99_ms", json::num(lat.p99())),
+            ("sim_per_req_p50_ms", json::num(sim.p50())),
+        ]));
+        std::sync::Arc::try_unwrap(router)
+            .map_err(|_| anyhow::anyhow!("router leak"))?
+            .shutdown();
+        anyhow::ensure!(wrong == 0, "{strategy}: {wrong} responses diverged!");
+        anyhow::ensure!(failed == 0, "{strategy}: {failed} requests failed!");
+    }
+
+    let out = json::obj(vec![
+        ("workload", json::s("medical_serving")),
+        ("requests", json::num(requests as f64)),
+        ("rate_rps", json::num(rate)),
+        ("model", json::s(&base.model)),
+        ("rows", Value::Arr(report_rows)),
+    ]);
+    json::to_file(std::path::Path::new("bench_results/medical_serving.json"), &out)?;
+    println!("\nwrote bench_results/medical_serving.json — all responses verified ✓");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: one private inference through the Origami pipeline.
+//!
+//! ```bash
+//! make artifacts                       # once: AOT-lower the model
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! What happens, end to end (all Rust, Python never runs here):
+//! 1. a client encrypts an image for its attested enclave session;
+//! 2. the enclave decrypts it, quantizes + additively blinds each tier-1
+//!    feature map (one-time pad mod 2^24) and offloads the linear ops to
+//!    the untrusted device;
+//! 3. the enclave unblinds with precomputed factors, applies bias/ReLU;
+//! 4. past the privacy partition (layer 6), the rest of the network runs
+//!    uninterrupted in the open on the device;
+//! 5. probabilities return; the ledger shows where every microsecond went.
+
+use origami::config::Config;
+use origami::enclave::cost::Ledger;
+use origami::launcher::{encrypt_request, synth_images, Stack};
+use origami::util::stats::fmt_ms;
+
+fn main() -> anyhow::Result<()> {
+    let config = Config::default(); // vgg16-32, origami/6, cpu offload
+    let stack = Stack::load(&config)?;
+    let model = stack.model(&config.model)?;
+    println!(
+        "loaded {} ({} layers, {} exported stages)",
+        model.name,
+        model.num_layers(),
+        model.stages.len()
+    );
+
+    let mut strategy = stack.build_strategy(&config)?;
+    println!(
+        "strategy {} ready: enclave requirement {:.1} KB",
+        strategy.name(),
+        strategy.enclave_requirement_bytes() as f64 / 1024.0
+    );
+
+    // Client side: synthesize an "X-ray" and encrypt it for session 0.
+    let image = &synth_images(1, model.image, model.in_channels, 7)[0];
+    let ciphertext = encrypt_request(&config, 0, image);
+
+    // Warm-up (artifact compilation happens lazily on first use).
+    strategy.infer(&ciphertext, 1, &[0], &mut Ledger::new())?;
+
+    // The measured private inference.
+    let mut ledger = Ledger::new();
+    let probs = strategy.infer(&ciphertext, 1, &[0], &mut ledger)?;
+
+    let (top, p) = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    println!("\nprediction: class {top} (p={p:.4})");
+    println!(
+        "inference cost: {} simulated ({}% actually measured on this machine)",
+        fmt_ms(ledger.grand_total_ms()),
+        (ledger.measured_fraction() * 100.0).round()
+    );
+    println!("breakdown:");
+    for (name, ms) in ledger.breakdown() {
+        println!("  {name:<16} {}", fmt_ms(ms));
+    }
+    Ok(())
+}

@@ -1,0 +1,12 @@
+"""Build-time compile path: L2 jax model + L1 Pallas kernels + AOT export.
+
+Nothing in this package runs on the request path — ``aot.py`` lowers the
+stages to HLO text once and the Rust coordinator executes them via PJRT.
+"""
+
+import jax
+
+# The blinded-domain GEMM accumulates exactly in f64 (53-bit mantissa)
+# before reducing mod 2^24 — see kernels/matmul.py.  x64 must be enabled
+# before any tracing happens.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,164 @@
+"""AOT export: lower every stage to HLO *text* + write the manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator then
+loads ``artifacts/manifest.json`` and compiles each ``.hlo.txt`` on its
+embedded PJRT CPU client.  Python never runs on the request path.
+
+HLO text — not ``lowered.compiler_ir("hlo").as_hlo_proto().serialize()`` —
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` 0.1.6
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts \
+        [--models vgg16-32,vgg19-32] [--batches 1,8] [--golden]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .model import build_vgg, model_manifest_entry, stage_fns
+from .vgg import forward_full
+
+DEFAULT_MODELS = ["vgg16-32", "vgg19-32"]
+DEFAULT_BATCHES = [1, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # weight tensors as `constant({...})`, which the text parser on the
+    # Rust side silently reads back as zeros.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # metadata fields grew new attributes (source_end_line, …) that the
+    # 0.5.1-era text parser rejects — strip them.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_stage(fn, arg_specs):
+    args = [
+        jax.ShapeDtypeStruct(shape, jnp.float32 if dt == "f32" else jnp.float64)
+        for shape, dt in arg_specs
+    ]
+    return jax.jit(fn).lower(*args)
+
+
+def export_model(m_name: str, batches, out_dir: str, manifest: dict) -> int:
+    model = build_vgg(m_name)
+    entry = model_manifest_entry(model)
+    entry["stages"] = []
+    count = 0
+    for batch in batches:
+        stages = stage_fns(model, batch)
+        bdir = os.path.join(out_dir, m_name, f"b{batch}")
+        os.makedirs(bdir, exist_ok=True)
+        for name, (fn, arg_specs) in sorted(stages.items()):
+            path = os.path.join(bdir, f"{name}.hlo.txt")
+            rel = os.path.relpath(path, out_dir)
+            lowered = lower_stage(fn, arg_specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            out_aval = lowered.out_info[0]
+            entry["stages"].append(
+                {
+                    "stage": name,
+                    "batch": batch,
+                    "file": rel,
+                    "inputs": [
+                        {"shape": list(s), "dtype": d} for s, d in arg_specs
+                    ],
+                    "output": {
+                        "shape": list(out_aval.shape),
+                        "dtype": "f32",
+                    },
+                    "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                }
+            )
+            count += 1
+    manifest["models"].append(entry)
+    return count
+
+
+def export_golden(m_name: str, out_dir: str) -> None:
+    """Golden vectors for Rust integration tests: input image → logits."""
+    model = build_vgg(m_name)
+    x = data.make_images(1, size=model.image, seed=7)
+    logits = np.asarray(forward_full(model, jnp.asarray(x)))[0]
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    with open(os.path.join(gdir, f"{m_name}_golden.json"), "w") as f:
+        json.dump(
+            {
+                "model": m_name,
+                "input": [float(v) for v in x.reshape(-1)],
+                "input_shape": list(x.shape),
+                "logits": [float(v) for v in logits],
+            },
+            f,
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--batches", default=",".join(map(str, DEFAULT_BATCHES)))
+    ap.add_argument("--golden", action="store_true", default=True)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    batches = [int(b) for b in args.batches.split(",")]
+
+    manifest = {
+        "format": 1,
+        "generated_unix": int(time.time()),
+        "jax": jax.__version__,
+        "models": [],
+    }
+    t0 = time.time()
+    total = 0
+    for m_name in models:
+        n = export_model(m_name, batches, out_dir, manifest)
+        print(f"[aot] {m_name}: {n} stages lowered")
+        total += n
+        if args.golden:
+            export_golden(m_name, out_dir)
+            print(f"[aot] {m_name}: golden vectors written")
+
+    # Metadata-only entries for the full 224-scale models: Table I/II and
+    # the memory/recovery analytics need layer shapes + parameter sizes at
+    # paper scale, but not (slow-to-lower, slow-to-compile) artifacts.
+    for m_name in ("vgg16", "vgg19"):
+        if m_name not in models:
+            entry = model_manifest_entry(build_vgg(m_name))
+            entry["stages"] = []
+            entry["metadata_only"] = True
+            manifest["models"].append(entry)
+            print(f"[aot] {m_name}: metadata-only entry (224 scale)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {total} artifacts + manifest to {out_dir} "
+          f"in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,311 @@
+"""Conditional-GAN adversary (paper §IV-V): reconstruct X from Θ(X).
+
+Architecture follows §V-A scaled to the 32x32 substitute dataset
+(DESIGN.md §2): the Generator is an encoder → residual blocks → nearest-
+neighbor-upsampling decoder; the Discriminator downsamples the candidate
+image to the feature map's spatial size, concatenates the conditioning
+feature map, and classifies real/fake through strided convs + a sigmoid
+head.  BatchNorm is replaced by per-channel InstanceNorm (batch-size
+robust, no running stats to thread through a hand-rolled trainer) and the
+optimizer is a from-scratch Adam (optax is not available offline).
+
+Everything here is *offline adversary tooling* — it never touches the
+request path.  ``export_generator`` lowers a trained generator to an HLO
+artifact so the Rust coordinator can run reconstructions natively during
+partition search.
+"""
+
+import functools
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Layer primitives (plain jnp — the adversary is not on the AOT hot path,
+# but the generator *is* exported via aot.to_hlo_text for Rust-side use).
+# ---------------------------------------------------------------------------
+
+def conv(p, x, name, stride=1):
+    w, b = p[f"{name}_w"], p[f"{name}_b"]
+    y = lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def inorm(p, x, name, eps=1e-5):
+    mu = x.mean(axis=(1, 2), keepdims=True)
+    var = x.var(axis=(1, 2), keepdims=True)
+    xhat = (x - mu) / jnp.sqrt(var + eps)
+    return xhat * p[f"{name}_g"] + p[f"{name}_be"]
+
+
+def lrelu(x, a=0.2):
+    return jnp.where(x >= 0, x, a * x)
+
+
+def upsample2(x):
+    n, h, w, c = x.shape
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def _init_conv(rng, params, name, kh, kw, ci, co):
+    k = rng.standard_normal((kh, kw, ci, co))
+    params[f"{name}_w"] = (k * np.sqrt(2.0 / (kh * kw * ci))).astype(np.float32)
+    params[f"{name}_b"] = np.zeros((co,), np.float32)
+
+
+def _init_norm(rng, params, name, c):
+    params[f"{name}_g"] = np.ones((c,), np.float32)
+    params[f"{name}_be"] = np.zeros((c,), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Generator
+# ---------------------------------------------------------------------------
+
+def init_generator(
+    feat_shape: Tuple[int, int, int],
+    img_size: int = 32,
+    base: int = 32,
+    n_res: int = 2,
+    seed: int = 0,
+) -> Tuple[Dict[str, np.ndarray], dict]:
+    """Build generator params for a feature map of shape (H, W, C).
+
+    The encoder downsamples (stride 2) until spatial dim == bottleneck
+    (img_size//4, the 32-scale analogue of the paper's 14x14), then
+    ``n_res`` residual blocks, then nearest-neighbor upsampling back to
+    ``img_size``.  If the feature map is *smaller* than the bottleneck
+    (deep partition layers), the encoder upsamples instead — information
+    is what's missing there, not resolution.
+    """
+    h, w, c = feat_shape
+    bott = max(4, img_size // 4)
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    plan: List[Tuple[str, int]] = []  # (op, arg)
+
+    # encoder to bottleneck spatial size
+    cur_h, cur_c = h, c
+    i = 0
+    _init_conv(rng, params, f"ge{i}", 3, 3, cur_c, base)
+    _init_norm(rng, params, f"gen{i}", base)
+    plan.append(("conv_norm_relu", i))
+    cur_c = base
+    while cur_h > bott:
+        i += 1
+        _init_conv(rng, params, f"ge{i}", 4, 4, cur_c, cur_c * 2)
+        _init_norm(rng, params, f"gen{i}", cur_c * 2)
+        plan.append(("down", i))
+        cur_c *= 2
+        cur_h //= 2
+    while cur_h < bott:
+        i += 1
+        _init_conv(rng, params, f"ge{i}", 3, 3, cur_c, max(base, cur_c // 2))
+        _init_norm(rng, params, f"gen{i}", max(base, cur_c // 2))
+        plan.append(("up_enc", i))
+        cur_c = max(base, cur_c // 2)
+        cur_h *= 2
+
+    # residual blocks
+    for r in range(n_res):
+        _init_conv(rng, params, f"gr{r}a", 3, 3, cur_c, cur_c)
+        _init_norm(rng, params, f"grn{r}a", cur_c)
+        _init_conv(rng, params, f"gr{r}b", 3, 3, cur_c, cur_c)
+        _init_norm(rng, params, f"grn{r}b", cur_c)
+
+    # decoder to img_size
+    d = 0
+    dec_c = cur_c
+    dec_h = cur_h
+    while dec_h < img_size:
+        _init_conv(rng, params, f"gd{d}", 3, 3, dec_c, max(base // 2, dec_c // 2))
+        _init_norm(rng, params, f"gdn{d}", max(base // 2, dec_c // 2))
+        dec_c = max(base // 2, dec_c // 2)
+        dec_h *= 2
+        d += 1
+    _init_conv(rng, params, "gout", 3, 3, dec_c, 3)
+
+    meta = {
+        "plan": plan,
+        "n_res": n_res,
+        "n_dec": d,
+        "feat_shape": tuple(feat_shape),
+        "img_size": img_size,
+    }
+    return params, meta
+
+
+def generator_forward(params, meta, feat):
+    x = feat
+    for op, i in meta["plan"]:
+        if op == "conv_norm_relu":
+            x = jnp.maximum(inorm(params, conv(params, x, f"ge{i}"), f"gen{i}"), 0.0)
+        elif op == "down":
+            x = jnp.maximum(
+                inorm(params, conv(params, x, f"ge{i}", stride=2), f"gen{i}"), 0.0)
+        elif op == "up_enc":
+            x = upsample2(x)
+            x = jnp.maximum(inorm(params, conv(params, x, f"ge{i}"), f"gen{i}"), 0.0)
+    for r in range(meta["n_res"]):
+        y = jnp.maximum(inorm(params, conv(params, x, f"gr{r}a"), f"grn{r}a"), 0.0)
+        y = inorm(params, conv(params, y, f"gr{r}b"), f"grn{r}b")
+        x = jnp.maximum(x + y, 0.0)
+    for d in range(meta["n_dec"]):
+        x = upsample2(x)
+        x = jnp.maximum(inorm(params, conv(params, x, f"gd{d}"), f"gdn{d}"), 0.0)
+    return jax.nn.sigmoid(conv(params, x, "gout"))
+
+
+# ---------------------------------------------------------------------------
+# Discriminator
+# ---------------------------------------------------------------------------
+
+def init_discriminator(
+    feat_shape: Tuple[int, int, int],
+    img_size: int = 32,
+    base: int = 32,
+    seed: int = 1,
+):
+    h, w, c = feat_shape
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    # image tower: downsample image to the feature spatial size
+    n_down = 0
+    cur = img_size
+    cur_c = 3
+    while cur > max(h, 4):
+        _init_conv(rng, params, f"di{n_down}", 4, 4, cur_c, base)
+        cur_c = base
+        cur //= 2
+        n_down += 1
+    # joint tower after concat with condition
+    joint_c = cur_c + c if h == cur else cur_c + c  # same spatial by constr.
+    n_joint = 0
+    cj = joint_c
+    while cur > 2:
+        _init_conv(rng, params, f"dj{n_joint}", 4, 4, cj, base * 2)
+        _init_norm(rng, params, f"djn{n_joint}", base * 2)
+        cj = base * 2
+        cur //= 2
+        n_joint += 1
+    fan_in = cj * cur * cur
+    params["dd_w"] = (rng.standard_normal((fan_in, 1)) / np.sqrt(fan_in)).astype(
+        np.float32)
+    params["dd_b"] = np.zeros((1,), np.float32)
+    meta = {"n_down": n_down, "n_joint": n_joint, "feat_shape": tuple(feat_shape)}
+    return params, meta
+
+
+def discriminator_forward(params, meta, img, feat):
+    x = img
+    for i in range(meta["n_down"]):
+        x = lrelu(conv(params, x, f"di{i}", stride=2))
+    # align condition to x's spatial dims (deep features may be smaller)
+    fh = feat.shape[1]
+    xh = x.shape[1]
+    f = feat
+    while f.shape[1] < xh:
+        f = upsample2(f)
+    while f.shape[1] > xh:
+        f = f[:, ::2, ::2, :]
+    x = jnp.concatenate([x, f], axis=-1)
+    for i in range(meta["n_joint"]):
+        x = lrelu(inorm(params, conv(params, x, f"dj{i}", stride=2), f"djn{i}"))
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["dd_w"] + params["dd_b"]  # logits
+
+
+# ---------------------------------------------------------------------------
+# From-scratch Adam + GAN training
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    return (
+        {k: np.zeros_like(v) for k, v in params.items()},
+        {k: np.zeros_like(v) for k, v in params.items()},
+    )
+
+
+def adam_update(params, grads, m, v, t, lr=2e-4, b1=0.5, b2=0.999, eps=1e-8):
+    """Paper uses lr=2e-4; b1=0.5 is the standard DCGAN choice."""
+    out = {}
+    f32 = jnp.float32
+    for k in params:
+        m[k] = (b1 * m[k] + (1 - b1) * grads[k]).astype(f32)
+        v[k] = (b2 * v[k] + (1 - b2) * grads[k] ** 2).astype(f32)
+        mhat = m[k] / (1 - b1**t)
+        vhat = v[k] / (1 - b2**t)
+        out[k] = (params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)).astype(f32)
+    return out, m, v
+
+
+def bce_logits(logits, target):
+    # numerically stable binary cross entropy on logits
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * target + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def train_cgan(
+    feats: np.ndarray,
+    imgs: np.ndarray,
+    steps: int = 300,
+    batch: int = 16,
+    l1_weight: float = 50.0,
+    seed: int = 0,
+    verbose: bool = False,
+):
+    """Train the c-GAN adversary on (Θ(X), X) pairs.
+
+    Returns (g_params, g_meta, history).  An L1 reconstruction term is
+    added to the generator loss (standard for conditional image-to-image
+    GANs; it accelerates convergence at this small scale without changing
+    what is/ isn't reconstructible).
+    """
+    feat_shape = feats.shape[1:]
+    img_size = imgs.shape[1]
+    gp, gmeta = init_generator(feat_shape, img_size, seed=seed)
+    dp, dmeta = init_discriminator(feat_shape, img_size, seed=seed + 1)
+    gm, gv = adam_init(gp)
+    dm, dv = adam_init(dp)
+
+    def g_loss(gp_, dp_, f, x):
+        fake = generator_forward(gp_, gmeta, f)
+        adv = bce_logits(discriminator_forward(dp_, dmeta, fake, f), 1.0)
+        return adv + l1_weight * jnp.mean(jnp.abs(fake - x))
+
+    def d_loss(dp_, gp_, f, x):
+        fake = generator_forward(gp_, gmeta, f)
+        lr_ = bce_logits(discriminator_forward(dp_, dmeta, x, f), 1.0)
+        lf_ = bce_logits(discriminator_forward(dp_, dmeta, fake, f), 0.0)
+        return lr_ + lf_
+
+    g_grad = jax.jit(jax.value_and_grad(g_loss))
+    d_grad = jax.jit(jax.value_and_grad(d_loss))
+
+    rng = np.random.default_rng(seed)
+    hist = []
+    n = feats.shape[0]
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, n, batch)
+        f = jnp.asarray(feats[idx])
+        x = jnp.asarray(imgs[idx])
+        dl, dg = d_grad(dp, gp, f, x)
+        dp, dm, dv = adam_update(dp, dg, dm, dv, t)
+        gl, gg = g_grad(gp, dp, f, x)
+        gp, gm, gv = adam_update(gp, gg, gm, gv, t)
+        if t % 50 == 0 or t == 1:
+            hist.append({"step": t, "g_loss": float(gl), "d_loss": float(dl)})
+            if verbose:
+                print(f"  step {t}: g={float(gl):.3f} d={float(dl):.3f}")
+    return gp, gmeta, hist
+
+
+def reconstruct(gp, gmeta, feats):
+    return np.asarray(generator_forward(gp, gmeta, jnp.asarray(feats)))

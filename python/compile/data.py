@@ -1,0 +1,84 @@
+"""Procedural structured-image dataset (ImageNet stand-in, DESIGN.md §2).
+
+The privacy experiments need images with enough spatial structure that an
+adversary *can* reconstruct them from shallow feature maps (edges, shapes,
+color fields) and with per-image variability so reconstruction from deep
+maps is genuinely hard.  We composite random geometric scenes: a gradient
+background, 2-5 filled shapes (rectangles / circles / stripes), and mild
+sensor noise.  Everything is seeded and shape-parametric.
+"""
+
+from typing import Tuple
+
+import numpy as np
+
+
+def _gradient(rng: np.random.Generator, size: int) -> np.ndarray:
+    c0 = rng.uniform(0.0, 1.0, 3)
+    c1 = rng.uniform(0.0, 1.0, 3)
+    axis = rng.integers(0, 2)
+    t = np.linspace(0.0, 1.0, size)
+    ramp = t[:, None] if axis == 0 else t[None, :]
+    ramp = np.broadcast_to(ramp, (size, size))[..., None]
+    img = c0[None, None, :] * (1 - ramp) + c1[None, None, :] * ramp
+    return np.ascontiguousarray(img, dtype=np.float32)
+
+
+def _add_rect(rng, img):
+    s = img.shape[0]
+    x0, y0 = rng.integers(0, s - 4, 2)
+    w, h = rng.integers(3, max(4, s // 2), 2)
+    color = rng.uniform(0, 1, 3)
+    img[y0 : min(s, y0 + h), x0 : min(s, x0 + w)] = color
+    return img
+
+
+def _add_circle(rng, img):
+    s = img.shape[0]
+    cx, cy = rng.uniform(2, s - 2, 2)
+    r = rng.uniform(2, s / 3)
+    color = rng.uniform(0, 1, 3)
+    yy, xx = np.mgrid[0:s, 0:s]
+    mask = (xx - cx) ** 2 + (yy - cy) ** 2 <= r * r
+    img[mask] = color
+    return img
+
+
+def _add_stripes(rng, img):
+    s = img.shape[0]
+    period = int(rng.integers(2, max(3, s // 4)))
+    phase = int(rng.integers(0, period))
+    color = rng.uniform(0, 1, 3)
+    axis = rng.integers(0, 2)
+    idx = (np.arange(s) + phase) % period < max(1, period // 2)
+    if axis == 0:
+        img[idx, :] = 0.5 * img[idx, :] + 0.5 * color
+    else:
+        img[:, idx] = 0.5 * img[:, idx] + 0.5 * color
+    return img
+
+
+_SHAPES = (_add_rect, _add_circle, _add_stripes)
+
+
+def make_images(n: int, size: int = 32, seed: int = 0) -> np.ndarray:
+    """Generate ``n`` structured images, NHWC float32 in [0, 1]."""
+    rng = np.random.default_rng(seed)
+    out = np.empty((n, size, size, 3), np.float32)
+    for i in range(n):
+        img = _gradient(rng, size)
+        for _ in range(int(rng.integers(2, 6))):
+            img = _SHAPES[rng.integers(0, len(_SHAPES))](rng, img)
+        img = img + rng.normal(0, 0.02, img.shape)
+        out[i] = np.clip(img, 0.0, 1.0)
+    return out
+
+
+def train_val_split(
+    n_train: int, n_val: int, size: int = 32, seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Disjoint train/val batches (different seeds → different scenes)."""
+    return (
+        make_images(n_train, size=size, seed=seed),
+        make_images(n_val, size=size, seed=seed + 10_000),
+    )

@@ -1,0 +1,56 @@
+"""Layer-1 Pallas kernels (interpret=True) and their pure-jnp oracles.
+
+Every kernel here is the compute hot-spot of one stage of the Origami
+pipeline and lowers into the same HLO as the surrounding L2 jax code:
+
+- ``matmul``      — tiled MXU-shaped matrix multiply (f32 / f64-exact
+                    mod-domain variant used by blinded linear stages)
+- ``conv2d``      — im2col + tiled matmul convolution
+- ``quantize_blind`` / ``unblind_dequantize``
+                  — Slalom-style fixed-point blinding arithmetic mod 2^24
+- ``relu``, ``maxpool2x2``, ``relu_maxpool2x2``
+                  — non-linear stages for open-tier artifacts
+- ``ssim_map``    — windowed structural-similarity statistics (privacy
+                    metric of the paper's Fig. 8)
+
+All kernels run under ``interpret=True`` so the lowered HLO executes on the
+CPU PJRT client the Rust coordinator embeds (real-TPU lowering would emit
+Mosaic custom-calls the CPU plugin cannot run).
+"""
+
+from .blind import (
+    FRAC_BITS_W,
+    FRAC_BITS_X,
+    MOD_P,
+    SCALE_W,
+    SCALE_X,
+    SCALE_XW,
+    quantize_blind,
+    quantize_weights,
+    unblind_dequantize,
+)
+from .conv import conv2d, conv2d_mod
+from .matmul import matmul, matmul_mod
+from .relu_pool import maxpool2x2, relu, relu_maxpool2x2
+from .ssim import mean_ssim, ssim_map
+
+__all__ = [
+    "FRAC_BITS_W",
+    "FRAC_BITS_X",
+    "MOD_P",
+    "SCALE_W",
+    "SCALE_X",
+    "SCALE_XW",
+    "conv2d",
+    "conv2d_mod",
+    "matmul",
+    "matmul_mod",
+    "maxpool2x2",
+    "mean_ssim",
+    "quantize_blind",
+    "quantize_weights",
+    "relu",
+    "relu_maxpool2x2",
+    "ssim_map",
+    "unblind_dequantize",
+]

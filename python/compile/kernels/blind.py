@@ -1,0 +1,120 @@
+"""Slalom-style cryptographic blinding arithmetic as Pallas kernels.
+
+The paper offloads linear layers to an untrusted device after *additively
+blinding* fixed-point activations inside the enclave (Sec. III-C):
+
+    quantize:   q = round(x * 2^fx)                       (integers)
+    blind:      b = (q + r) mod P         r ~ Uniform[0, P)   (one-time pad
+                                          over the additive group Z_P)
+    offload:    y_b = W_q . b  mod P      (linear, so noise stays linear)
+    unblind:    y_q = (y_b - W_q . r) mod P, centered into [-P/2, P/2)
+    dequantize: y = y_q / 2^(fx+fw)
+
+With P = 2^24 every value is exactly representable in f32, which is the
+whole trick: the untrusted device does plain float linear algebra yet the
+arithmetic is exact modular integer math.  Additive blinding with uniform
+``r`` over Z_P is information-theoretically hiding (a one-time pad), so
+the offloaded tensor leaks nothing; decodability requires the *true*
+quantized result to fit in the centered range, i.e. |y| < 2^(23-fx-fw) —
+an activation-range invariant the Rust enclave asserts at run time.
+
+Both hot loops are bandwidth-bound element-wise streams; blocks are sized
+to a VMEM-resident (8,128)-multiple lane tile (the VPU layout), the TPU
+analogue of the CUDA grid-stride loops Slalom used.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed-point format (Slalom uses 2^8 scaling and p ~ 2^24; we use the
+# full additive group Z_{2^24} since only additive blinding is needed).
+FRAC_BITS_X = 8
+FRAC_BITS_W = 8
+SCALE_X = float(1 << FRAC_BITS_X)
+SCALE_W = float(1 << FRAC_BITS_W)
+SCALE_XW = SCALE_X * SCALE_W
+MOD_P = float(1 << 24)
+
+_LANES = 128
+_SUBLANES = 8
+_TILE = _LANES * _SUBLANES  # one VPU tile of f32
+
+
+def _pad_to_tiles(flat):
+    n = flat.shape[0]
+    rows = max(1, -(-n // _LANES))
+    rows += (-rows) % _SUBLANES
+    padded = jnp.zeros((rows * _LANES,), flat.dtype).at[:n].set(flat)
+    return padded.reshape(rows, _LANES), n
+
+
+def _rows_block(rows: int) -> int:
+    """Block height: a multiple of the sublane count dividing ``rows``."""
+    b = min(rows, 512)
+    while rows % b != 0:
+        b -= _SUBLANES if b > _SUBLANES else 1
+        if b <= _SUBLANES:
+            return _SUBLANES if rows % _SUBLANES == 0 else rows
+    return b
+
+
+def _quantize_blind_kernel(x_ref, r_ref, o_ref):
+    q = jnp.round(x_ref[...] * SCALE_X)
+    o_ref[...] = jnp.mod(q + r_ref[...], MOD_P)
+
+
+def _unblind_dequantize_kernel(y_ref, ru_ref, o_ref):
+    d = jnp.mod(y_ref[...] - ru_ref[...], MOD_P)
+    centered = jnp.where(d >= MOD_P / 2, d - MOD_P, d)
+    o_ref[...] = centered / SCALE_XW
+
+
+def _elementwise(kernel, out_dtype, *tensors):
+    """Run an element-wise kernel over flattened, lane-tiled operands."""
+    shape = tensors[0].shape
+    flats = [t.reshape(-1).astype(jnp.float32) for t in tensors]
+    tiled, n = _pad_to_tiles(flats[0])
+    rest = [_pad_to_tiles(f)[0] for f in flats[1:]]
+    rows = tiled.shape[0]
+    br = _rows_block(rows)
+    grid = (rows // br,)
+    spec = pl.BlockSpec((br, _LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * (1 + len(rest)),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, _LANES), out_dtype),
+        interpret=True,
+    )(tiled, *rest)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def quantize_blind(x, r):
+    """Fused quantize→blind: ``(round(x·2^fx) + r) mod 2^24`` (f32 integers).
+
+    ``r`` must be uniform integers in [0, 2^24) drawn from the enclave's
+    private PRNG stream; the result is safe to hand to an untrusted device.
+    """
+    return _elementwise(_quantize_blind_kernel, jnp.float32, x, r)
+
+
+def unblind_dequantize(y_b, r_u):
+    """Fused unblind→dequantize.
+
+    ``y_b`` is the untrusted device's mod-2^24 linear output, ``r_u`` the
+    precomputed unblinding factors ``(W_q · r) mod 2^24``.  Returns real
+    activations ``y`` (f32).
+    """
+    return _elementwise(_unblind_dequantize_kernel, jnp.float32, y_b, r_u)
+
+
+def quantize_weights(w):
+    """Quantize weights to fixed point: ``round(w · 2^fw)`` as f32 integers.
+
+    Values are clamped to (-2^15, 2^15) so products with blinded
+    activations stay exact in the f64 accumulate of ``matmul_mod``.
+    """
+    q = jnp.round(jnp.asarray(w, jnp.float32) * SCALE_W)
+    return jnp.clip(q, -(2.0**15) + 1, 2.0**15 - 1)

@@ -1,0 +1,66 @@
+"""Convolution as im2col + the tiled Pallas GEMM.
+
+The paper's convolutions (the bulk of VGG compute) are offloaded as matrix
+multiplications (Sec. III-C: "compute intensive convolutions (basically
+matrix multiplications)").  We make that literal: patches are gathered
+into an im2col matrix (the HBM→VMEM schedule a CUDA kernel would express
+with shared-memory staging) and the product runs on the same MXU-shaped
+Pallas GEMM as the dense layers, in both the open (f32) and blinded
+(mod-2^24) domains.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .matmul import matmul, matmul_mod
+
+
+def _im2col(x, kh: int, kw: int, stride: int, padding: str):
+    """NHWC → (N·OH·OW, KH·KW·C) patch matrix.
+
+    Uses ``conv_general_dilated_patches`` so the gather lowers to one
+    XLA op; the channel-major patch order is transposed to (kh, kw, c) to
+    match HWIO weight layout.
+    """
+    n, h, w, c = x.shape
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (N, OH, OW, C*KH*KW) with channel-major ordering (c, kh, kw)
+    oh, ow = patches.shape[1], patches.shape[2]
+    patches = patches.reshape(n, oh, ow, c, kh * kw)
+    patches = jnp.swapaxes(patches, 3, 4)  # (..., kh*kw, c)
+    return patches.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+def conv2d(x, w, b=None, *, stride: int = 1, padding: str = "SAME"):
+    """Open-domain conv: f32 im2col GEMM (+ bias).  x: NHWC, w: HWIO."""
+    kh, kw, _, co = w.shape
+    cols, (n, oh, ow) = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * w.shape[2], co)
+    y = matmul(cols, wmat).reshape(n, oh, ow, co)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv2d_mod(x_b, w_q, *, stride: int = 1, padding: str = "SAME"):
+    """Blinded-domain conv: exact mod-2^24 im2col GEMM.
+
+    ``x_b`` holds blinded fixed-point activations in [0, 2^24); ``w_q``
+    quantized integer weights (HWIO).  Bias is *not* added here — in the
+    blinded domain the enclave folds the (quantized) bias in after
+    unblinding, keeping the offloaded computation purely linear.
+
+    Note: SAME padding inserts zeros, which in the blinded domain are
+    *unblinded* zeros; the Rust enclave therefore blinds with ``r`` drawn
+    for the padded geometry too (factors cover the im2col of the padded
+    tensor), matching how Slalom handles padding.
+    """
+    kh, kw, _, co = w_q.shape
+    cols, (n, oh, ow) = _im2col(x_b, kh, kw, stride, padding)
+    wmat = w_q.reshape(kh * kw * w_q.shape[2], co)
+    return matmul_mod(cols, wmat).reshape(n, oh, ow, co)

@@ -1,0 +1,117 @@
+"""Tiled Pallas matmul — the MXU-shaped GEMM every linear stage lowers to.
+
+Hardware adaptation (paper targeted CUDA GEMMs on a GTX 1080 Ti): instead
+of threadblock/shared-memory tiling we tile for VMEM with BlockSpecs and
+accumulate over a K-grid dimension into the revisited output block — the
+Pallas idiom for an MXU systolic matmul.  Block shapes default to
+(128, 128, 128) (three f32 tiles = 192 KiB, comfortably double-bufferable
+in ~16 MiB VMEM) and shrink automatically for small operands.
+
+Two public entry points:
+
+- ``matmul(x, w)``      — f32 GEMM for open-tier stages.
+- ``matmul_mod(x, w)``  — exact integer GEMM in f64 with a final
+  reduction mod 2^24, used by blinded linear stages.  f64's 53-bit
+  mantissa keeps ``sum_k x*w`` exact for |x| < 2^24, |w| < 2^8,
+  K < 2^21 — far beyond any VGG layer.  (On a real TPU this would be a
+  two-limb f32 kernel; on the CPU PJRT client f64 is exact and simple.)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .blind import MOD_P
+
+_DEF_BLOCK = 128
+
+
+def _pick_block(dim: int, pref: int = _DEF_BLOCK) -> int:
+    """Largest divisor of ``dim`` that is <= pref (grid dims must divide)."""
+    b = min(pref, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nsteps: int):
+    """Grid = (M/bm, N/bn, K/bk); o block revisited across the K axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _mm_mod_kernel(x_ref, w_ref, o_ref, *, nsteps: int):
+    """Mod-domain variant: exact f64 accumulate, reduce mod 2^24 at the end.
+
+    The partial sums stay exact in f64 (see module docstring); only the
+    final K step folds the accumulator into [0, 2^24) so the artifact's
+    output is f32-exact for the Rust side.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _reduce():
+        o_ref[...] = jnp.mod(o_ref[...], MOD_P)
+
+
+def _tiled_matmul(x, w, *, kernel, out_dtype, block=_DEF_BLOCK):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {w.shape}"
+    bm, bk, bn = _pick_block(m, block), _pick_block(k, block), _pick_block(n, block)
+    nsteps = k // bk
+    grid = (m // bm, n // bn, nsteps)
+    return pl.pallas_call(
+        functools.partial(kernel, nsteps=nsteps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,
+    )(x, w)
+
+
+def matmul(x, w, *, block: int = _DEF_BLOCK):
+    """f32 tiled Pallas GEMM: ``x @ w`` with VMEM-sized blocks."""
+    return _tiled_matmul(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        kernel=_mm_kernel,
+        out_dtype=jnp.float32,
+        block=block,
+    )
+
+
+def matmul_mod(x, w, *, block: int = _DEF_BLOCK):
+    """Exact mod-2^24 GEMM over fixed-point operands (blinded domain).
+
+    ``x`` holds blinded activations in [0, 2^24) (f32-exact integers),
+    ``w`` holds quantized weights in [-2^8, 2^8].  Returns f32 integers in
+    [0, 2^24).
+    """
+    out = _tiled_matmul(
+        x.astype(jnp.float64),
+        w.astype(jnp.float64),
+        kernel=_mm_mod_kernel,
+        out_dtype=jnp.float64,
+        block=block,
+    )
+    return out.astype(jnp.float32)

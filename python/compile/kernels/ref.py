@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest (plus hypothesis sweeps)
+asserts each kernel against its oracle over randomized shapes, dtypes and
+values.  They are intentionally written with stock jax/lax ops only — no
+Pallas — so a bug cannot be shared between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .blind import MOD_P, SCALE_X, SCALE_XW
+
+
+def matmul_ref(x, w):
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def matmul_mod_ref(x, w):
+    y = jnp.matmul(x.astype(jnp.float64), w.astype(jnp.float64))
+    return jnp.mod(y, MOD_P).astype(jnp.float32)
+
+
+def conv2d_ref(x, w, b=None, *, stride: int = 1, padding: str = "SAME"):
+    y = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b if b is not None else y
+
+
+def conv2d_mod_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
+    y = lax.conv_general_dilated(
+        x.astype(jnp.float64),
+        w.astype(jnp.float64),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jnp.mod(y, MOD_P).astype(jnp.float32)
+
+
+def quantize_blind_ref(x, r):
+    q = jnp.round(x.astype(jnp.float32) * SCALE_X)
+    return jnp.mod(q + r, MOD_P)
+
+
+def unblind_dequantize_ref(y_b, r_u):
+    d = jnp.mod(y_b.astype(jnp.float32) - r_u, MOD_P)
+    centered = jnp.where(d >= MOD_P / 2, d - MOD_P, d)
+    return centered / SCALE_XW
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2x2_ref(x):
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def relu_maxpool2x2_ref(x):
+    return maxpool2x2_ref(relu_ref(x))
+
+
+def ssim_map_ref(x, y, *, win: int = 8):
+    c1 = (0.01 * 1.0) ** 2
+    c2 = (0.03 * 1.0) ** 2
+    n, h, w, c = x.shape
+    gh, gw = h // win, w // win
+    xw = x.reshape(n, gh, win, gw, win, c).transpose(0, 1, 3, 2, 4, 5)
+    yw = y.reshape(n, gh, win, gw, win, c).transpose(0, 1, 3, 2, 4, 5)
+    xw = xw.reshape(n, gh, gw, win * win, c).astype(jnp.float32)
+    yw = yw.reshape(n, gh, gw, win * win, c).astype(jnp.float32)
+    mx = xw.mean(axis=3)
+    my = yw.mean(axis=3)
+    vx = xw.var(axis=3)
+    vy = yw.var(axis=3)
+    cov = (xw * yw).mean(axis=3) - mx * my
+    lum = (2 * mx * my + c1) / (mx**2 + my**2 + c1)
+    struct = (2 * cov + c2) / (vx + vy + c2)
+    return lum * struct
+
+
+def mean_ssim_ref(x, y, *, win: int = 8):
+    return jnp.mean(ssim_map_ref(x, y, win=win))

@@ -1,0 +1,64 @@
+"""Non-linear stage kernels: ReLU and 2x2 max-pool (and the fusion).
+
+In Origami these ops run *inside the enclave* for tier-1 layers (the Rust
+coordinator implements the same arithmetic natively) and *in the open* for
+tier-2 layers, where they appear in the offloaded tail artifacts via these
+Pallas kernels.  Both are element-wise / window-local VPU streams; the
+pool kernel processes one image block per grid step and reduces the 2x2
+windows with a reshape-max, the TPU-friendly layout for stride-2 pooling.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...], 0.0)
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, H, W, C)
+    _, h, w, c = x.shape
+    o_ref[...] = x.reshape(1, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def _relu_maxpool_kernel(x_ref, o_ref):
+    x = jnp.maximum(x_ref[...], 0.0)
+    _, h, w, c = x.shape
+    o_ref[...] = x.reshape(1, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def relu(x):
+    """Element-wise ReLU as a Pallas kernel (any shape)."""
+    shape = x.shape
+    flat = x.reshape(1, -1)
+    out = pl.pallas_call(
+        _relu_kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=True,
+    )(flat)
+    return out.reshape(shape)
+
+
+def _pool_call(kernel, x):
+    n, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"pool needs even H,W, got {x.shape}"
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h // 2, w // 2, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def maxpool2x2(x):
+    """2x2 stride-2 max pool over NHWC."""
+    return _pool_call(_maxpool_kernel, x)
+
+
+def relu_maxpool2x2(x):
+    """Fused ReLU + 2x2 max pool (the VGG block epilogue)."""
+    return _pool_call(_relu_maxpool_kernel, x)

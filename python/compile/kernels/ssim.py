@@ -1,0 +1,57 @@
+"""SSIM (structural similarity) as a windowed-statistics Pallas kernel.
+
+The paper scores an adversary's reconstructions with SSIM (Fig. 8).  We
+compute SSIM over non-overlapping ``win``x``win`` windows (the paper's
+"average SSIM"; the Gaussian-window variant changes constants, not the
+ordering across partition layers, which is what the experiment needs).
+One kernel invocation computes the per-window mean/variance/covariance
+statistics and the SSIM value — a local reduction ideal for a VPU block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_C1 = (0.01 * 1.0) ** 2  # K1=0.01, dynamic range 1.0
+_C2 = (0.03 * 1.0) ** 2  # K2=0.03
+
+
+def _ssim_kernel(x_ref, y_ref, o_ref, *, win: int):
+    x = x_ref[...].astype(jnp.float32)  # (1, win, win, C)
+    y = y_ref[...].astype(jnp.float32)
+    n = float(win * win)
+    mx = jnp.sum(x, axis=(1, 2), keepdims=True) / n
+    my = jnp.sum(y, axis=(1, 2), keepdims=True) / n
+    dx, dy = x - mx, y - my
+    vx = jnp.sum(dx * dx, axis=(1, 2), keepdims=True) / n
+    vy = jnp.sum(dy * dy, axis=(1, 2), keepdims=True) / n
+    cov = jnp.sum(dx * dy, axis=(1, 2), keepdims=True) / n
+    lum = (2.0 * mx * my + _C1) / (mx * mx + my * my + _C1)
+    struct = (2.0 * cov + _C2) / (vx + vy + _C2)
+    o_ref[...] = lum * struct  # (1, 1, 1, C) — keepdims preserved the rank
+
+
+def ssim_map(x, y, *, win: int = 8):
+    """Per-window SSIM over NHWC images in [0,1] → (N, H/win, W/win, C)."""
+    n, h, w, c = x.shape
+    assert h % win == 0 and w % win == 0, f"{(h, w)} not divisible by {win}"
+    gh, gw = h // win, w // win
+    out = pl.pallas_call(
+        functools.partial(_ssim_kernel, win=win),
+        grid=(n, gh, gw),
+        in_specs=[
+            pl.BlockSpec((1, win, win, c), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1, win, win, c), lambda i, j, k: (i, j, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, c), lambda i, j, k: (i, j, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, gh, gw, c), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))
+    return out
+
+
+def mean_ssim(x, y, *, win: int = 8):
+    """Scalar mean SSIM between two image batches (the Fig. 8 metric)."""
+    return jnp.mean(ssim_map(x, y, win=win))

@@ -1,0 +1,142 @@
+"""Partition-aware stage functions — the exact computations that get AOT
+lowered to HLO artifacts for the Rust coordinator.
+
+Stage menu per model (DESIGN.md §3):
+
+- ``layer{i}_lin_open``   — f32 linear part of conv/dense layer i
+                            (bias included).  Used by Baseline2 (enclave
+                            executes it on the trusted CPU) and Split/x.
+- ``layer{i}_lin_blind``  — mod-2^24 linear part on blinded input (no
+                            bias).  Offloaded to the untrusted device by
+                            Slalom/Privacy and Origami tier-1.  The same
+                            artifact, run on the raw blinding factors r,
+                            yields the precomputed unblinding factors.
+- ``tail_p{p}``           — layers p+1..end in the open (ReLU/pool/softmax
+                            fused in).  Origami tier-2 / Split/x offload.
+- ``head_p{p}``           — layers 1..p in the open: produces Θ(X), the
+                            tensor the privacy adversary observes.
+- ``full_open``           — whole network (non-private baseline and
+                            correctness reference).
+
+Batch size is baked per artifact (PJRT executables are shape-specialized);
+the coordinator's dynamic batcher pads to the artifact batch.
+"""
+
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from .vgg import (
+    VggModel,
+    apply_layer_open,
+    apply_linear_blinded,
+    apply_linear_open,
+    build_vgg,
+    forward_full,
+    forward_range,
+)
+
+# Sequence indices (paper numbering, pools counted) of partition points we
+# export tails/heads for.  Covers Fig 4 (conv-counted 4/6/8 -> seq 5/8/11),
+# Fig 9/10 (Split/6, /8, /10), Origami's p=6 and the SSIM sweep layers.
+PARTITIONS_32 = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+PARTITIONS_224 = [5, 6, 8, 10, 11]
+
+
+def partition_candidates(m: VggModel) -> List[int]:
+    return PARTITIONS_32 if m.image == 32 else PARTITIONS_224
+
+
+def linear_layers(m: VggModel) -> List[int]:
+    """Indices of layers with a linear part (conv + dense)."""
+    return [l.index for l in m.layers if l.kind in ("conv", "dense")]
+
+
+def stage_fns(
+    m: VggModel, batch: int
+) -> Dict[str, Tuple[Callable, List[Tuple[Tuple[int, ...], str]]]]:
+    """All stage functions for a model at a fixed batch size.
+
+    Returns ``{stage_name: (fn, [(input_shape, dtype), ...])}`` — exactly
+    what aot.py lowers and what manifest.json records.
+    """
+    img = (batch, m.image, m.image, m.in_channels)
+    stages: Dict[str, Tuple[Callable, List[Tuple[Tuple[int, ...], str]]]] = {}
+
+    for idx in linear_layers(m):
+        spec = m.layer(idx)
+        in_shape = (batch,) + spec.in_shape
+
+        def lin_open(x, _spec=spec):
+            return (apply_linear_open(m, _spec, x),)
+
+        def lin_blind(x, _spec=spec):
+            return (apply_linear_blinded(m, _spec, x),)
+
+        stages[f"layer{idx:02d}_lin_open"] = (lin_open, [(in_shape, "f32")])
+        stages[f"layer{idx:02d}_lin_blind"] = (lin_blind, [(in_shape, "f32")])
+
+    for p in partition_candidates(m):
+        spec = m.layer(p)
+        feat_shape = (batch,) + spec.out_shape
+
+        def tail(x, _p=p):
+            return (forward_range(m, x, _p + 1, len(m.layers)),)
+
+        def head(x, _p=p):
+            return (forward_range(m, x, 1, _p),)
+
+        stages[f"tail_p{p:02d}"] = (tail, [(feat_shape, "f32")])
+        stages[f"head_p{p:02d}"] = (head, [(img, "f32")])
+
+    def full(x):
+        return (forward_full(m, x),)
+
+    stages["full_open"] = (full, [(img, "f32")])
+    return stages
+
+
+def model_manifest_entry(m: VggModel) -> dict:
+    """Static layer metadata the Rust side needs for EPC accounting,
+    scheduling and cost attribution."""
+    return {
+        "name": m.name,
+        "image": m.image,
+        "in_channels": m.in_channels,
+        "layers": [
+            {
+                "index": l.index,
+                "kind": l.kind,
+                "name": l.name,
+                "in_shape": list(l.in_shape),
+                "out_shape": list(l.out_shape),
+                "has_relu": l.has_relu,
+                "flops": l.flops,
+                "params_bytes": l.params_bytes,
+                "bias": (
+                    [float(v) for v in m.biases[l.name]]
+                    if l.name in m.biases
+                    else []
+                ),
+            }
+            for l in m.layers
+        ],
+        "partitions": partition_candidates(m),
+    }
+
+
+def reference_logits(m: VggModel, x: np.ndarray) -> np.ndarray:
+    """Convenience for tests: open-domain full forward as numpy."""
+    return np.asarray(forward_full(m, x))
+
+
+__all__ = [
+    "PARTITIONS_224",
+    "PARTITIONS_32",
+    "build_vgg",
+    "linear_layers",
+    "model_manifest_entry",
+    "partition_candidates",
+    "reference_logits",
+    "stage_fns",
+]

@@ -1,0 +1,133 @@
+"""Algorithm 1 driver: per-layer adversary → SSIM table + artifacts.
+
+Reproduces the paper's privacy evaluation (Figs 7 & 8): for every
+candidate partition layer p, train/run an adversary that reconstructs the
+input from Θ_p(X) and score reconstructions with mean SSIM against the
+real images.  Two adversaries:
+
+- ``inversion``  (default, every layer): direct feature inversion [25].
+- ``cgan``       (selected layers): the paper's conditional GAN (§V-A),
+  whose trained generator is additionally exported as an HLO artifact so
+  the Rust coordinator can run reconstructions natively during
+  `origami partition-search`.
+
+Outputs under ``artifacts/privacy/``:
+- ``ssim_by_layer.json``    — the Fig 8 data (per-layer mean SSIM).
+- ``recon_l{p:02d}.ppm``    — Fig 7-style real/reconstructed strips.
+- ``cgan_gen_p{p:02d}.hlo.txt`` + entries in the json — Rust-loadable
+  generators (feature map → image).
+
+Usage:
+    python -m compile.privacy_experiment --out ../artifacts \
+        [--model vgg16-32] [--layers 1,2,...] [--cgan-layers 2,3,6]
+        [--inv-steps 120] [--cgan-steps 250] [--n-train 192] [--n-val 12]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import data
+from .aot import to_hlo_text
+from . import cgan
+from .inversion import features_at_ref, invert
+from .kernels import mean_ssim
+from .model import build_vgg, partition_candidates
+
+
+def write_ppm(path: str, rows: np.ndarray) -> None:
+    """Dump an image strip as binary PPM (no PIL dependency needed)."""
+    img = (np.clip(rows, 0, 1) * 255).astype(np.uint8)
+    h, w, _ = img.shape
+    with open(path, "wb") as f:
+        f.write(f"P6\n{w} {h}\n255\n".encode())
+        f.write(img.tobytes())
+
+
+def strip(real: np.ndarray, fake: np.ndarray, k: int = 8) -> np.ndarray:
+    """Two-row strip: real images on top, reconstructions below."""
+    k = min(k, real.shape[0])
+    top = np.concatenate(list(real[:k]), axis=1)
+    bot = np.concatenate(list(fake[:k]), axis=1)
+    return np.concatenate([top, bot], axis=0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="vgg16-32")
+    ap.add_argument("--layers", default="")
+    ap.add_argument("--cgan-layers", default="2,3,4,6")
+    ap.add_argument("--inv-steps", type=int, default=120)
+    ap.add_argument("--cgan-steps", type=int, default=250)
+    ap.add_argument("--n-train", type=int, default=192)
+    ap.add_argument("--n-val", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    pdir = os.path.join(out_dir, "privacy")
+    os.makedirs(pdir, exist_ok=True)
+
+    m = build_vgg(args.model)
+    layers = (
+        [int(v) for v in args.layers.split(",") if v]
+        or partition_candidates(m)
+    )
+    cgan_layers = [int(v) for v in args.cgan_layers.split(",") if v]
+
+    train_x, val_x = data.train_val_split(
+        args.n_train, args.n_val, size=m.image, seed=args.seed)
+
+    results = {"model": args.model, "layers": []}
+    for p in layers:
+        t0 = time.time()
+        row = {"layer": p, "kind": m.layer(p).kind}
+        val_f = np.asarray(features_at_ref(m, jnp.asarray(val_x), p))
+
+        recon, feat_loss = invert(m, val_f, p, steps=args.inv_steps)
+        ssim_inv = float(mean_ssim(jnp.asarray(val_x), jnp.asarray(recon)))
+        row["ssim_inversion"] = ssim_inv
+        row["inv_feat_loss"] = feat_loss
+        write_ppm(os.path.join(pdir, f"recon_inv_l{p:02d}.ppm"),
+                  strip(val_x, recon))
+
+        if p in cgan_layers:
+            train_f = np.asarray(features_at_ref(m, jnp.asarray(train_x), p))
+            gp, gmeta, hist = cgan.train_cgan(
+                train_f, train_x, steps=args.cgan_steps, seed=args.seed)
+            fake = cgan.reconstruct(gp, gmeta, val_f)
+            row["ssim_cgan"] = float(
+                mean_ssim(jnp.asarray(val_x), jnp.asarray(fake)))
+            row["cgan_history"] = hist
+            write_ppm(os.path.join(pdir, f"recon_cgan_l{p:02d}.ppm"),
+                      strip(val_x, fake))
+            # Export the trained generator for Rust-side partition search.
+            import jax
+
+            lowered = jax.jit(
+                lambda f: (cgan.generator_forward(gp, gmeta, f),)
+            ).lower(jax.ShapeDtypeStruct(val_f.shape, jnp.float32))
+            gen_file = f"cgan_gen_p{p:02d}.hlo.txt"
+            with open(os.path.join(pdir, gen_file), "w") as f:
+                f.write(to_hlo_text(lowered))
+            row["generator_artifact"] = f"privacy/{gen_file}"
+            row["generator_input_shape"] = list(val_f.shape)
+
+        results["layers"].append(row)
+        print(f"[privacy] layer {p:2d} ({row['kind']:5s}): "
+              f"ssim_inv={ssim_inv:.3f}"
+              + (f" ssim_cgan={row['ssim_cgan']:.3f}" if "ssim_cgan" in row else "")
+              + f"  ({time.time() - t0:.0f}s)")
+
+    with open(os.path.join(pdir, "ssim_by_layer.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[privacy] wrote {os.path.join(pdir, 'ssim_by_layer.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""VGG-16 / VGG-19 model definitions over the L1 Pallas kernels.
+
+Two scales of each topology:
+
+- ``vgg16`` / ``vgg19``        — the paper's 224x224x3 ImageNet shapes.
+- ``vgg16-32`` / ``vgg19-32``  — 32x32x3 variants with channels/8 and a
+  10-way head: identical layer *structure* (13/16 convs, 5 pools, 3 dense)
+  so every partitioning / blinding / scheduling experiment exercises the
+  same code paths at CI-friendly cost.  (Substitution documented in
+  DESIGN.md §2: runtime and memory experiments depend on layer shapes,
+  not ImageNet weights.)
+
+Layers are numbered 1..N in *sequence order including pools* — the paper's
+convention (its "layer 3" is the first max-pool, "layer 6" the second,
+which is Origami's minimum private partition for VGG-16).  Weights are
+deterministic He-init from a fixed seed; biases are small and layer-unique
+so end-to-end numerics are non-trivial.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import (
+    conv2d,
+    conv2d_mod,
+    matmul,
+    matmul_mod,
+    quantize_weights,
+    relu,
+    relu_maxpool2x2,
+    maxpool2x2,
+)
+
+# Channel plans ('M' = 2x2 max-pool).
+_PLAN16 = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+_PLAN19 = [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+           512, 512, 512, 512, "M", 512, 512, 512, 512, "M"]
+
+
+@dataclass
+class LayerSpec:
+    """One sequential stage of the network."""
+
+    index: int               # 1-based sequence index (paper convention)
+    kind: str                # conv | pool | flatten | dense | softmax
+    name: str
+    in_shape: Tuple[int, ...]   # per-sample (no batch dim)
+    out_shape: Tuple[int, ...]
+    weight_shape: Optional[Tuple[int, ...]] = None
+    has_relu: bool = False   # conv/dense followed by in-enclave ReLU
+    flops: int = 0
+    params_bytes: int = 0
+
+
+@dataclass
+class VggModel:
+    """A VGG topology instance: specs + materialized weights."""
+
+    name: str
+    image: int              # input spatial size
+    in_channels: int
+    layers: List[LayerSpec] = field(default_factory=list)
+    weights: dict = field(default_factory=dict)   # name -> np.ndarray
+    biases: dict = field(default_factory=dict)    # name -> np.ndarray
+
+    @property
+    def conv_indices(self) -> List[int]:
+        return [l.index for l in self.layers if l.kind == "conv"]
+
+    @property
+    def pool_indices(self) -> List[int]:
+        return [l.index for l in self.layers if l.kind == "pool"]
+
+    def layer(self, index: int) -> LayerSpec:
+        return self.layers[index - 1]
+
+    def feature_bytes(self, index: int) -> int:
+        """Bytes of the (f32) feature map output by layer ``index``."""
+        return 4 * int(np.prod(self.layer(index).out_shape))
+
+
+def _he(rng: np.random.Generator, shape, fan_in: int) -> np.ndarray:
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def build_vgg(name: str, seed: int = 2019) -> VggModel:
+    """Construct a named VGG variant with deterministic weights.
+
+    ``name`` in {vgg16, vgg19, vgg16-32, vgg19-32}.
+    """
+    small = name.endswith("-32")
+    base = name.split("-")[0]
+    plan = _PLAN16 if base == "vgg16" else _PLAN19
+    if base not in ("vgg16", "vgg19"):
+        raise ValueError(f"unknown model {name}")
+    image = 32 if small else 224
+    ch_div = 8 if small else 1
+    dense_plan = [64, 64, 10] if small else [4096, 4096, 1000]
+
+    rng = np.random.default_rng(seed)
+    m = VggModel(name=name, image=image, in_channels=3)
+    h = image
+    c = 3
+    idx = 0
+    for item in plan:
+        idx += 1
+        if item == "M":
+            spec = LayerSpec(
+                index=idx, kind="pool", name=f"pool{idx}",
+                in_shape=(h, h, c), out_shape=(h // 2, h // 2, c),
+            )
+            h //= 2
+        else:
+            co = int(item) // ch_div
+            wshape = (3, 3, c, co)
+            flops = 2 * h * h * co * 3 * 3 * c
+            spec = LayerSpec(
+                index=idx, kind="conv", name=f"conv{idx}",
+                in_shape=(h, h, c), out_shape=(h, h, co),
+                weight_shape=wshape, has_relu=True, flops=flops,
+                params_bytes=4 * (int(np.prod(wshape)) + co),
+            )
+            m.weights[spec.name] = _he(rng, wshape, fan_in=9 * c)
+            m.biases[spec.name] = (rng.standard_normal(co) * 0.05).astype(np.float32)
+            c = co
+        m.layers.append(spec)
+
+    # flatten
+    idx += 1
+    flat = h * h * c
+    m.layers.append(LayerSpec(idx, "flatten", f"flatten{idx}",
+                              in_shape=(h, h, c), out_shape=(flat,)))
+    d_in = flat
+    for j, d_out in enumerate(dense_plan):
+        idx += 1
+        last = j == len(dense_plan) - 1
+        spec = LayerSpec(
+            index=idx, kind="dense", name=f"dense{idx}",
+            in_shape=(d_in,), out_shape=(d_out,),
+            weight_shape=(d_in, d_out), has_relu=not last,
+            flops=2 * d_in * d_out,
+            params_bytes=4 * (d_in * d_out + d_out),
+        )
+        m.weights[spec.name] = _he(rng, (d_in, d_out), fan_in=d_in)
+        m.biases[spec.name] = (rng.standard_normal(d_out) * 0.05).astype(np.float32)
+        m.layers.append(spec)
+        d_in = d_out
+    idx += 1
+    m.layers.append(LayerSpec(idx, "softmax", f"softmax{idx}",
+                              in_shape=(d_in,), out_shape=(d_in,)))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Forward functions (L2) — all compute flows through the L1 kernels.
+# ---------------------------------------------------------------------------
+
+def apply_layer_open(m: VggModel, spec: LayerSpec, x):
+    """Open-domain (f32) application of one layer, ReLU fused where spec'd."""
+    if spec.kind == "conv":
+        w = jnp.asarray(m.weights[spec.name])
+        b = jnp.asarray(m.biases[spec.name])
+        y = conv2d(x, w, b)
+        return relu(y) if spec.has_relu else y
+    if spec.kind == "pool":
+        return maxpool2x2(x)
+    if spec.kind == "flatten":
+        return x.reshape(x.shape[0], -1)
+    if spec.kind == "dense":
+        w = jnp.asarray(m.weights[spec.name])
+        b = jnp.asarray(m.biases[spec.name])
+        y = matmul(x, w) + b
+        return relu(y) if spec.has_relu else y
+    if spec.kind == "softmax":
+        z = x - x.max(axis=-1, keepdims=True)
+        e = jnp.exp(z)
+        return e / e.sum(axis=-1, keepdims=True)
+    raise ValueError(spec.kind)
+
+
+def apply_linear_open(m: VggModel, spec: LayerSpec, x):
+    """Only the linear part (conv/dense + bias), no activation — this is
+    what a per-layer artifact computes; the enclave applies the ReLU."""
+    if spec.kind == "conv":
+        return conv2d(x, jnp.asarray(m.weights[spec.name]),
+                      jnp.asarray(m.biases[spec.name]))
+    if spec.kind == "dense":
+        return matmul(x, jnp.asarray(m.weights[spec.name])) + jnp.asarray(
+            m.biases[spec.name])
+    raise ValueError(f"layer {spec.name} has no linear part")
+
+
+def apply_linear_blinded(m: VggModel, spec: LayerSpec, x_b):
+    """Blinded-domain linear part: exact mod-2^24 GEMM on blinded input.
+
+    No bias — the enclave folds the float bias in after unblinding, keeping
+    the offloaded computation strictly linear (Slalom's requirement).
+    """
+    wq = quantize_weights(jnp.asarray(m.weights[spec.name]))
+    if spec.kind == "conv":
+        return conv2d_mod(x_b, wq)
+    if spec.kind == "dense":
+        return matmul_mod(x_b, wq)
+    raise ValueError(f"layer {spec.name} has no linear part")
+
+
+def forward_range(m: VggModel, x, start: int, end: int):
+    """Open-domain forward through layers [start, end] inclusive (1-based)."""
+    for spec in m.layers[start - 1 : end]:
+        x = apply_layer_open(m, spec, x)
+    return x
+
+
+def forward_full(m: VggModel, x):
+    return forward_range(m, x, 1, len(m.layers))
+
+
+def features_at(m: VggModel, x, p: int):
+    """Θ(X): the intermediate feature map after layer ``p`` (the tensor an
+    adversary observes when the tail is offloaded in the open)."""
+    return forward_range(m, x, 1, p)

@@ -1,0 +1,125 @@
+"""Blinding arithmetic: kernel-vs-oracle and the cryptographic invariants.
+
+The properties checked here are the paper's correctness core:
+  1. blind→linear(mod)→unblind == quantized open linear  (decodability)
+  2. blinding output is exactly (q + r) mod 2^24          (pad arithmetic)
+  3. the blinded tensor is statistically independent of x  (hiding —
+     checked as: two different inputs under the same r differ by exactly
+     their quantized difference mod P, and the marginal is full-range)
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    MOD_P,
+    SCALE_X,
+    SCALE_XW,
+    matmul_mod,
+    quantize_blind,
+    quantize_weights,
+    unblind_dequantize,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+P = int(MOD_P)
+
+
+def _rand_r(shape, rng=RNG):
+    return rng.integers(0, P, shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("shape", [(4,), (3, 5), (2, 8, 8, 3), (1, 1), (511,)])
+def test_quantize_blind_matches_ref(shape):
+    x = RNG.uniform(-4, 4, shape).astype(np.float32)
+    r = _rand_r(shape)
+    got = np.asarray(quantize_blind(x, r))
+    want = np.asarray(ref.quantize_blind_ref(x, r))
+    np.testing.assert_array_equal(got, want)
+    assert got.min() >= 0 and got.max() < MOD_P
+
+
+@pytest.mark.parametrize("shape", [(6,), (4, 4), (2, 4, 4, 2)])
+def test_unblind_dequantize_matches_ref(shape):
+    y = _rand_r(shape)
+    ru = _rand_r(shape)
+    got = np.asarray(unblind_dequantize(y, ru))
+    want = np.asarray(ref.unblind_dequantize_ref(y, ru))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_blind_then_unblind_identity():
+    """Unblinding with R = r recovers the quantized input exactly."""
+    x = RNG.uniform(-8, 8, (64,)).astype(np.float32)
+    r = _rand_r((64,))
+    b = np.asarray(quantize_blind(x, r))
+    back = np.asarray(unblind_dequantize(b, r))
+    np.testing.assert_allclose(back, np.round(x * SCALE_X) / SCALE_XW, atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 48),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31),
+)
+def test_slalom_roundtrip_property(m, k, n, seed):
+    """Property 1: the offloaded blinded GEMM decodes to the open result."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, (m, k)).astype(np.float32)
+    wf = rng.uniform(-0.5, 0.5, (k, n)).astype(np.float32)
+    wq = np.asarray(quantize_weights(wf))
+    r = _rand_r((m, k), rng)
+
+    blinded = np.asarray(quantize_blind(x, r))
+    y_b = np.asarray(matmul_mod(blinded, wq))          # untrusted device
+    r_u = np.asarray(matmul_mod(r, wq))                # precomputed factors
+    y = np.asarray(unblind_dequantize(y_b, r_u))       # enclave decodes
+
+    y_true = (np.round(x * SCALE_X) @ wq) / SCALE_XW   # open quantized GEMM
+    np.testing.assert_allclose(y, y_true, atol=1e-6)
+
+
+def test_blinded_difference_is_quantized_difference():
+    """Property 3a: same pad, two inputs — difference leaks only q1-q2 mod P
+    (i.e. the pad cancels; the blinding itself adds no other structure)."""
+    x1 = RNG.uniform(-2, 2, (128,)).astype(np.float32)
+    x2 = RNG.uniform(-2, 2, (128,)).astype(np.float32)
+    r = _rand_r((128,))
+    b1 = np.asarray(quantize_blind(x1, r))
+    b2 = np.asarray(quantize_blind(x2, r))
+    dq = np.mod(np.round(x1 * SCALE_X) - np.round(x2 * SCALE_X), P)
+    np.testing.assert_array_equal(np.mod(b1 - b2, P), dq)
+
+
+def test_blinded_marginal_is_full_range():
+    """Property 3b: with uniform r the blinded values cover Z_P uniformly —
+    a chi-square-ish sanity check on 2^16 buckets."""
+    n = 1 << 16
+    x = np.full((n,), 0.123, np.float32)  # constant input: worst case
+    r = _rand_r((n,))
+    b = np.asarray(quantize_blind(x, r)).astype(np.int64)
+    buckets = np.bincount(b >> 8, minlength=1 << 16)  # 2^16 buckets of 2^8
+    # Uniform multinomial: mean 1, std 1; the max bucket should stay small.
+    assert buckets.max() <= 10, f"suspiciously peaked blinded marginal: {buckets.max()}"
+
+
+def test_decodability_range_invariant():
+    """Values whose true magnitude exceeds the centered range must wrap —
+    documents (and pins) the |y| < 2^23/SCALE_XW decodability bound."""
+    big = np.array([float((1 << 23) // int(SCALE_X) + 10)], np.float32)
+    r = _rand_r((1,))
+    b = np.asarray(quantize_blind(big, r))
+    back = np.asarray(unblind_dequantize(b, r))
+    assert not np.allclose(back, np.round(big * SCALE_X) / SCALE_XW)
+
+
+def test_quantize_weights_integral_and_clamped():
+    w = RNG.standard_normal((1000,)).astype(np.float32) * 1000
+    q = np.asarray(quantize_weights(w))
+    np.testing.assert_array_equal(q, np.round(q))
+    assert np.abs(q).max() < 2**15

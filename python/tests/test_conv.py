@@ -1,0 +1,80 @@
+"""im2col conv kernels vs lax.conv oracle (open + blinded domains)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import conv2d, conv2d_mod, quantize_blind, quantize_weights
+from compile.kernels.blind import MOD_P
+from compile.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize(
+    "n,h,w,ci,co,k,stride,padding",
+    [
+        (1, 8, 8, 3, 8, 3, 1, "SAME"),
+        (2, 16, 16, 4, 16, 3, 1, "SAME"),
+        (1, 8, 8, 3, 4, 3, 2, "SAME"),
+        (1, 9, 9, 2, 4, 3, 1, "VALID"),
+        (1, 7, 7, 1, 2, 1, 1, "SAME"),
+        (2, 12, 10, 3, 5, 5, 2, "SAME"),
+    ],
+)
+def test_conv2d_matches_ref(n, h, w, ci, co, k, stride, padding):
+    x = RNG.standard_normal((n, h, w, ci)).astype(np.float32)
+    wt = RNG.standard_normal((k, k, ci, co)).astype(np.float32) * 0.2
+    b = RNG.standard_normal((co,)).astype(np.float32)
+    got = conv2d(x, wt, b, stride=stride, padding=padding)
+    want = ref.conv2d_ref(x, wt, b, stride=stride, padding=padding)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "n,h,w,ci,co,stride",
+    [(1, 8, 8, 3, 8, 1), (2, 8, 8, 4, 4, 1), (1, 16, 16, 2, 4, 2)],
+)
+def test_conv2d_mod_exact(n, h, w, ci, co, stride):
+    x = RNG.integers(0, int(MOD_P), (n, h, w, ci)).astype(np.float32)
+    wq = RNG.integers(-255, 256, (3, 3, ci, co)).astype(np.float32)
+    got = np.asarray(conv2d_mod(x, wq, stride=stride))
+    want = np.asarray(ref.conv2d_mod_ref(x, wq, stride=stride))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_conv_blinded_roundtrip_matches_open_quantized():
+    """End-to-end conv decodability: blind → conv_mod → unblind == open."""
+    from compile.kernels import unblind_dequantize
+    from compile.kernels.blind import SCALE_X, SCALE_XW
+
+    x = RNG.uniform(-1, 1, (1, 8, 8, 3)).astype(np.float32)
+    wf = RNG.uniform(-0.3, 0.3, (3, 3, 3, 8)).astype(np.float32)
+    wq = np.asarray(quantize_weights(wf))
+    r = RNG.integers(0, int(MOD_P), x.shape).astype(np.float32)
+
+    blinded = np.asarray(quantize_blind(x, r))
+    y_b = np.asarray(conv2d_mod(blinded, wq))
+    r_u = np.asarray(conv2d_mod(r, wq))
+    y = np.asarray(unblind_dequantize(y_b, r_u))
+
+    xq = np.round(x * SCALE_X)
+    want = np.asarray(ref.conv2d_ref(xq, wq)) / SCALE_XW
+    np.testing.assert_allclose(y, want, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(4, 14),
+    ci=st.integers(1, 6),
+    co=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_conv2d_hypothesis(h, ci, co, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1, h, h, ci)).astype(np.float32)
+    wt = rng.standard_normal((3, 3, ci, co)).astype(np.float32) * 0.2
+    got = conv2d(x, wt)
+    want = ref.conv2d_ref(x, wt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

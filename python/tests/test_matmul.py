@@ -1,0 +1,80 @@
+"""Pallas GEMM vs pure-jnp oracle, incl. hypothesis shape/value sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import matmul, matmul_mod
+from compile.kernels.blind import MOD_P
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _assert_close(a, b, tol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(1, 1, 1), (8, 8, 8), (128, 128, 128), (256, 128, 64), (33, 65, 17), (7, 3, 5)],
+)
+def test_matmul_matches_ref(m, k, n):
+    x = RNG.standard_normal((m, k)).astype(np.float32)
+    w = RNG.standard_normal((k, n)).astype(np.float32)
+    _assert_close(matmul(x, w), ref.matmul_ref(x, w), tol=1e-3)
+
+
+def test_matmul_blocking_covers_multi_step_k():
+    # K larger than the block forces the revisited-output accumulate path.
+    x = RNG.standard_normal((64, 512)).astype(np.float32)
+    w = RNG.standard_normal((512, 32)).astype(np.float32)
+    _assert_close(matmul(x, w, block=64), ref.matmul_ref(x, w), tol=1e-2)
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 16, 16), (64, 256, 32), (31, 47, 9)])
+def test_matmul_mod_exact(m, k, n):
+    x = RNG.integers(0, int(MOD_P), (m, k)).astype(np.float32)
+    w = RNG.integers(-255, 256, (k, n)).astype(np.float32)
+    got = np.asarray(matmul_mod(x, w))
+    want = np.asarray(ref.matmul_mod_ref(x, w))
+    np.testing.assert_array_equal(got, want)
+    assert got.min() >= 0.0 and got.max() < MOD_P
+
+
+def test_matmul_mod_output_is_integral():
+    x = RNG.integers(0, int(MOD_P), (32, 64)).astype(np.float32)
+    w = RNG.integers(-255, 256, (64, 8)).astype(np.float32)
+    y = np.asarray(matmul_mod(x, w))
+    np.testing.assert_array_equal(y, np.round(y))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    _assert_close(matmul(x, w), ref.matmul_ref(x, w), tol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_mod_hypothesis_exactness(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, int(MOD_P), (m, k)).astype(np.float32)
+    w = rng.integers(-(2**15) + 1, 2**15, (k, n)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(matmul_mod(x, w)), np.asarray(ref.matmul_mod_ref(x, w))
+    )

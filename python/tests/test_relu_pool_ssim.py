@@ -1,0 +1,83 @@
+"""Non-linear kernels (relu / maxpool / fusion) and the SSIM kernel."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    maxpool2x2,
+    mean_ssim,
+    relu,
+    relu_maxpool2x2,
+    ssim_map,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(5)
+
+
+@pytest.mark.parametrize("shape", [(4,), (3, 7), (2, 8, 8, 3), (1, 1, 1, 1)])
+def test_relu_matches_ref(shape):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(relu(x)), np.asarray(ref.relu_ref(x)))
+
+
+@pytest.mark.parametrize("n,h,w,c", [(1, 4, 4, 1), (2, 8, 8, 3), (1, 16, 8, 7)])
+def test_maxpool_matches_ref(n, h, w, c):
+    x = RNG.standard_normal((n, h, w, c)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(maxpool2x2(x)), np.asarray(ref.maxpool2x2_ref(x))
+    )
+
+
+@pytest.mark.parametrize("n,h,w,c", [(1, 4, 4, 2), (2, 8, 8, 3)])
+def test_fused_relu_maxpool(n, h, w, c):
+    x = RNG.standard_normal((n, h, w, c)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(relu_maxpool2x2(x)), np.asarray(ref.relu_maxpool2x2_ref(x))
+    )
+
+
+def test_pool_rejects_odd_spatial():
+    x = RNG.standard_normal((1, 5, 4, 1)).astype(np.float32)
+    with pytest.raises(AssertionError):
+        maxpool2x2(x)
+
+
+def test_ssim_identity_is_one():
+    x = RNG.uniform(0, 1, (2, 16, 16, 3)).astype(np.float32)
+    assert abs(float(mean_ssim(x, x)) - 1.0) < 1e-6
+
+
+def test_ssim_uncorrelated_noise_is_low():
+    x = RNG.uniform(0, 1, (1, 32, 32, 3)).astype(np.float32)
+    y = RNG.uniform(0, 1, (1, 32, 32, 3)).astype(np.float32)
+    assert float(mean_ssim(x, y)) < 0.25
+
+
+def test_ssim_matches_ref_map():
+    x = RNG.uniform(0, 1, (2, 24, 24, 3)).astype(np.float32)
+    y = np.clip(x + RNG.normal(0, 0.15, x.shape), 0, 1).astype(np.float32)
+    got = np.asarray(ssim_map(x, y))
+    want = np.asarray(ref.ssim_map_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ssim_symmetry():
+    x = RNG.uniform(0, 1, (1, 16, 16, 1)).astype(np.float32)
+    y = RNG.uniform(0, 1, (1, 16, 16, 1)).astype(np.float32)
+    assert abs(float(mean_ssim(x, y)) - float(mean_ssim(y, x))) < 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sigma=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31),
+)
+def test_ssim_decreases_with_noise(sigma, seed):
+    """SSIM(x, x+noise) should not be higher than SSIM(x, x)."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0.2, 0.8, (1, 16, 16, 1)).astype(np.float32)
+    y = np.clip(x + rng.normal(0, sigma, x.shape), 0, 1).astype(np.float32)
+    assert float(mean_ssim(x, y)) <= 1.0 + 1e-6

@@ -1,0 +1,154 @@
+"""L2 model-layer tests: topology, shapes, stage functions, manifest."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data
+from compile.model import (
+    build_vgg,
+    linear_layers,
+    model_manifest_entry,
+    partition_candidates,
+    stage_fns,
+)
+from compile.vgg import (
+    apply_linear_blinded,
+    apply_linear_open,
+    features_at,
+    forward_full,
+    forward_range,
+)
+from compile.inversion import features_at_ref
+from compile.kernels import MOD_P, quantize_blind, quantize_weights, unblind_dequantize
+from compile.kernels.blind import SCALE_X, SCALE_XW
+
+
+def test_vgg16_topology():
+    m = build_vgg("vgg16-32")
+    kinds = [l.kind for l in m.layers]
+    assert kinds.count("conv") == 13
+    assert kinds.count("pool") == 5
+    assert kinds.count("dense") == 3
+    assert kinds[-1] == "softmax"
+    # the paper's privacy-critical indices: layer 3 and 6 are max-pools
+    assert m.layer(3).kind == "pool"
+    assert m.layer(6).kind == "pool"
+
+
+def test_vgg19_topology():
+    m = build_vgg("vgg19-32")
+    kinds = [l.kind for l in m.layers]
+    assert kinds.count("conv") == 16
+    assert kinds.count("pool") == 5
+
+
+def test_full_scale_topology_shapes():
+    m = build_vgg("vgg16")
+    assert m.image == 224
+    assert m.layer(1).out_shape == (224, 224, 64)
+    dense = [l for l in m.layers if l.kind == "dense"]
+    assert dense[0].weight_shape == (7 * 7 * 512, 4096)
+    assert dense[-1].out_shape == (1000,)
+
+
+def test_forward_full_is_probability():
+    m = build_vgg("vgg16-32")
+    x = jnp.asarray(data.make_images(2, 32, seed=3))
+    y = np.asarray(forward_full(m, x))
+    assert y.shape == (2, 10)
+    np.testing.assert_allclose(y.sum(axis=1), 1.0, atol=1e-5)
+    assert (y >= 0).all()
+
+
+def test_forward_range_composes():
+    m = build_vgg("vgg16-32")
+    x = jnp.asarray(data.make_images(1, 32, seed=4))
+    p = 6
+    head = forward_range(m, x, 1, p)
+    tail = forward_range(m, head, p + 1, len(m.layers))
+    full = forward_full(m, x)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full), atol=1e-5)
+
+
+def test_features_ref_matches_pallas_path():
+    """The differentiable oracle forward must equal the Pallas forward."""
+    m = build_vgg("vgg16-32")
+    x = jnp.asarray(data.make_images(1, 32, seed=5))
+    for p in [1, 3, 6, 9]:
+        a = np.asarray(features_at(m, x, p))
+        b = np.asarray(features_at_ref(m, x, p))
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_blinded_layer_decodes_to_open_layer():
+    """Per-layer Slalom correctness on the real model weights."""
+    m = build_vgg("vgg16-32")
+    spec = m.layer(1)
+    x = jnp.asarray(data.make_images(1, 32, seed=6))
+    rng = np.random.default_rng(0)
+    r = rng.integers(0, int(MOD_P), (1,) + spec.in_shape).astype(np.float32)
+
+    blinded = quantize_blind(x, r)
+    y_b = apply_linear_blinded(m, spec, blinded)
+    r_u = apply_linear_blinded(m, spec, jnp.asarray(r))
+    y = np.asarray(unblind_dequantize(y_b, r_u))
+    # open equivalent on the quantized weights (bias excluded in blind path)
+    wq = np.asarray(quantize_weights(m.weights[spec.name]))
+    from compile.kernels import ref
+
+    want = np.asarray(
+        ref.conv2d_ref(jnp.round(x * SCALE_X), jnp.asarray(wq))) / SCALE_XW
+    np.testing.assert_allclose(y, want, atol=1e-5)
+
+
+def test_stage_fns_cover_linear_and_partitions():
+    m = build_vgg("vgg16-32")
+    stages = stage_fns(m, 1)
+    for idx in linear_layers(m):
+        assert f"layer{idx:02d}_lin_open" in stages
+        assert f"layer{idx:02d}_lin_blind" in stages
+    for p in partition_candidates(m):
+        assert f"tail_p{p:02d}" in stages
+        assert f"head_p{p:02d}" in stages
+    assert "full_open" in stages
+
+
+def test_stage_head_tail_equals_full():
+    m = build_vgg("vgg16-32")
+    stages = stage_fns(m, 1)
+    x = jnp.asarray(data.make_images(1, 32, seed=8))
+    p = 6
+    head_fn, _ = stages[f"head_p{p:02d}"]
+    tail_fn, _ = stages[f"tail_p{p:02d}"]
+    full_fn, _ = stages["full_open"]
+    (feat,) = head_fn(x)
+    (out,) = tail_fn(feat)
+    (want,) = full_fn(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_manifest_entry_fields():
+    m = build_vgg("vgg16-32")
+    e = model_manifest_entry(m)
+    assert e["name"] == "vgg16-32"
+    assert len(e["layers"]) == len(m.layers)
+    conv1 = e["layers"][0]
+    assert conv1["kind"] == "conv"
+    assert conv1["params_bytes"] == 4 * (3 * 3 * 3 * 8 + 8)
+    assert len(conv1["bias"]) == 8
+    # pools have no params
+    pool = e["layers"][2]
+    assert pool["params_bytes"] == 0 and pool["bias"] == []
+
+
+def test_weights_deterministic():
+    a = build_vgg("vgg16-32", seed=2019)
+    b = build_vgg("vgg16-32", seed=2019)
+    for k in a.weights:
+        np.testing.assert_array_equal(a.weights[k], b.weights[k])
+
+
+def test_unknown_model_rejected():
+    with pytest.raises(ValueError):
+        build_vgg("vgg13-32")

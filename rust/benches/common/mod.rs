@@ -1,0 +1,112 @@
+//! Shared bench plumbing: strategy timing over the simulated ledger.
+//!
+//! Benches measure the **SimClock** (measured + modeled ns) per
+//! inference, not raw wall time: on the CPU device the two coincide; on
+//! the modeled GPU the SimClock is the honest number (DESIGN.md §5.1).
+//! Every bench prints the measured fraction so modeled time is never
+//! mistaken for hardware.
+
+use origami::config::Config;
+use origami::enclave::cost::Ledger;
+use origami::harness::Bench;
+use origami::launcher::{encrypt_request, synth_images, Stack};
+
+pub fn iters() -> usize {
+    if std::env::var("ORIGAMI_BENCH_FAST").ok().as_deref() == Some("1") {
+        2
+    } else {
+        7
+    }
+}
+
+/// Config whose artifacts root works from the crate dir.
+pub fn bench_config() -> Option<Config> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP bench: run `make artifacts` first");
+        return None;
+    }
+    Some(Config {
+        artifacts: root,
+        ..Config::default()
+    })
+}
+
+/// Result of timing one strategy.
+pub struct StrategyTiming {
+    pub sim_ms: Vec<f64>,
+    pub measured_fraction: f64,
+    pub last_ledger: Ledger,
+}
+
+/// Build + set up `strategy` on `device` for `model`, then run
+/// `iters` single-image inferences (after one warm-up) and collect the
+/// simulated per-inference cost.
+pub fn time_strategy(
+    base: &Config,
+    model: &str,
+    strategy: &str,
+    device: &str,
+    iters: usize,
+) -> anyhow::Result<StrategyTiming> {
+    let mut config = base.clone();
+    config.model = model.into();
+    config.strategy = strategy.into();
+    config.device = device.into();
+    let stack = Stack::load(&config)?;
+    let m = stack.model(model)?;
+    let mut s = stack.build_strategy(&config)?;
+    let img = &synth_images(1, m.image, m.in_channels, 11)[0];
+    let ct = encrypt_request(&config, 0, img);
+    // warm: artifact compile + first-exec autotune out of the timing
+    s.infer(&ct, 1, &[0], &mut Ledger::new())?;
+    s.infer(&ct, 1, &[0], &mut Ledger::new())?;
+    let mut sim_ms = Vec::with_capacity(iters);
+    let mut last = Ledger::new();
+    for i in 0..iters {
+        let mut ledger = Ledger::new();
+        s.infer(&ct, 1, &[0], &mut ledger)?;
+        let _ = i;
+        sim_ms.push(ledger.grand_total_ms());
+        last = ledger;
+    }
+    Ok(StrategyTiming {
+        sim_ms,
+        measured_fraction: last.measured_fraction(),
+        last_ledger: last,
+    })
+}
+
+/// Time a list of (label, strategy) cases into a Bench, returning means.
+pub fn time_cases(
+    bench: &mut Bench,
+    base: &Config,
+    model: &str,
+    device: &str,
+    cases: &[(&str, &str)],
+) -> anyhow::Result<()> {
+    for (label, strategy) in cases {
+        let t = time_strategy(base, model, strategy, device, iters())?;
+        let frac = t.measured_fraction;
+        let r = bench.push_samples(&format!("{model}/{label}"), &t.sim_ms);
+        r.extra.push(("measured_frac".into(), frac));
+    }
+    Ok(())
+}
+
+/// Print paper-vs-ours speedup lines relative to a baseline case.
+pub fn report_speedups(bench: &Bench, model: &str, baseline: &str, labels: &[(&str, f64)]) {
+    let Some(base_ms) = bench.mean_of(&format!("{model}/{baseline}")) else {
+        return;
+    };
+    println!("\nspeedups vs {baseline} ({model}):");
+    for (label, paper) in labels {
+        if let Some(ms) = bench.mean_of(&format!("{model}/{label}")) {
+            println!(
+                "  {label:<12} ours {:>6.2}x   paper {:>5.1}x",
+                base_ms / ms,
+                paper
+            );
+        }
+    }
+}

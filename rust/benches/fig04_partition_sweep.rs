@@ -1,0 +1,52 @@
+//! Fig. 4 — Runtime vs partitioning point for Split/x: first tier inside
+//! the enclave, tail offloaded (CPU and GPU variants).
+//!
+//! Paper (224): partitioning at the 4th/6th/8th *conv* layer gives
+//! 2.5x/3.0x/3.3x (VGG-16) and 2.3x/2.7x/3.2x (VGG-19) slowdowns vs open
+//! CPU; GPU offload cuts slowdowns dramatically.  Conv-counted 4/6/8 map
+//! to sequence indices 5/8/11 in our numbering (pools counted).
+//!
+//! Run: `cargo bench --bench fig04_partition_sweep`
+
+mod common;
+
+use common::{bench_config, iters, time_strategy};
+use origami::harness::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let Some(base) = bench_config() else { return Ok(()) };
+    let mut bench = Bench::new("Fig 4: runtime vs partition point");
+    // seq indices for conv-counted 4, 6, 8:
+    let partitions = [(5usize, "conv4"), (8, "conv6"), (11, "conv8")];
+
+    for model in ["vgg16-32", "vgg19-32"] {
+        let open = time_strategy(&base, model, "open", "cpu", iters())?;
+        bench.push_samples(&format!("{model}/open-cpu"), &open.sim_ms);
+        for device in ["cpu", "gpu"] {
+            for (p, label) in partitions {
+                let t = time_strategy(&base, model, &format!("split/{p}"), device, iters())?;
+                bench.push_samples(&format!("{model}/split@{label}-{device}"), &t.sim_ms);
+            }
+        }
+    }
+    bench.finish();
+
+    for model in ["vgg16-32", "vgg19-32"] {
+        let open = bench.mean_of(&format!("{model}/open-cpu")).unwrap_or(1.0);
+        println!("\n{model}: slowdown vs open CPU (paper VGG-16: 2.5x/3.0x/3.3x)");
+        for (_, label) in partitions {
+            let cpu = bench
+                .mean_of(&format!("{model}/split@{label}-cpu"))
+                .unwrap_or(0.0);
+            let gpu = bench
+                .mean_of(&format!("{model}/split@{label}-gpu"))
+                .unwrap_or(0.0);
+            println!(
+                "  split@{label}: cpu-offload {:.2}x, gpu-offload {:.2}x",
+                cpu / open,
+                gpu / open
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Fig. 8 — Mean SSIM between real and adversary-reconstructed images at
+//! each partition layer.
+//!
+//! Reads the offline privacy table produced by
+//! `python -m compile.privacy_experiment` (inversion adversary at every
+//! layer, c-GAN at selected layers), and — when trained generator
+//! artifacts exist — re-scores the c-GAN natively through the PJRT
+//! runtime on freshly synthesized images, so the figure regenerates
+//! without Python.
+//!
+//! Expected shape (paper): high SSIM for the first two convs, a drop at
+//! the first pool, rebound risk at the following conv, and < 0.2 for all
+//! layers past layer 7.
+//!
+//! Run: `cargo bench --bench fig08_ssim_by_layer`
+
+mod common;
+
+use common::bench_config;
+use origami::enclave::cost::Ledger;
+use origami::harness::Bench;
+use origami::launcher::{synth_images, Stack};
+use origami::privacy::adversary::{GeneratorRunner, PrivacyTable};
+use origami::privacy::{mean_ssim, search_partition};
+use origami::runtime::Device;
+
+fn main() -> anyhow::Result<()> {
+    let Some(base) = bench_config() else { return Ok(()) };
+    let table = match PrivacyTable::load(&base.artifacts) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("SKIP fig08: {e:#}");
+            return Ok(());
+        }
+    };
+    let mut bench = Bench::new("Fig 8: SSIM by partition layer");
+    let stack = Stack::load(&base)?;
+    let model = stack.model(&table.model)?;
+    let images = synth_images(16, model.image, model.in_channels, 2024);
+
+    println!("layer  kind   inversion  cgan(off)  cgan(native)");
+    for row in &table.layers {
+        let mut native = f64::NAN;
+        if row.generator_artifact.is_some() {
+            let gen = GeneratorRunner::load(&stack.client, &table, row.layer)?;
+            let n = gen.input_shape[0];
+            let mut batch = Vec::new();
+            let mut feats_all = Vec::new();
+            for i in 0..n {
+                let img = &images[i % images.len()];
+                batch.extend_from_slice(img);
+                // heads are exported at batch 1/8; run per-sample
+                let f = stack.executor.run(
+                    &model.name,
+                    &format!("head_p{:02}", row.layer),
+                    1,
+                    &[img],
+                    Device::UntrustedCpu,
+                    &mut Ledger::new(),
+                )?;
+                feats_all.extend_from_slice(&f.data);
+            }
+            let recon = gen.reconstruct(&stack.client, &feats_all)?;
+            native = mean_ssim(
+                &batch, &recon, n, model.image, model.image, model.in_channels,
+            ) as f64;
+        }
+        println!(
+            "{:>5}  {:<5}  {:>8.3}  {:>9}  {:>11}",
+            row.layer,
+            row.kind,
+            row.ssim_inversion,
+            row.ssim_cgan
+                .map(|v| format!("{v:.3}"))
+                .unwrap_or_else(|| "-".into()),
+            if native.is_nan() {
+                "-".into()
+            } else {
+                format!("{native:.3}")
+            },
+        );
+        bench.metric(
+            &format!("layer{:02}_{}", row.layer, row.kind),
+            "ssim_worst",
+            table.worst_case_ssim(row.layer).unwrap_or(0.0),
+        );
+    }
+
+    let outcome = search_partition(&table, 0.2)?;
+    println!("\nAlgorithm 1 partition point: p = {}", outcome.partition);
+    bench.metric("algorithm1_partition", "p", outcome.partition as f64);
+    bench.finish();
+    Ok(())
+}

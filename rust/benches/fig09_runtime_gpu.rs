@@ -1,0 +1,44 @@
+//! Fig. 9 — Inference runtime with offloaded computation on the GPU:
+//! Baseline2, Split/6, Split/8, Split/10, Slalom/Privacy, Origami.
+//!
+//! Paper headline (224): vs Baseline2, Slalom is 10x/11x faster and
+//! Origami 12.7x/15.1x (VGG-16/VGG-19); Split/6 only ~4x.  The GPU here
+//! is the calibrated cost model (DESIGN.md §2) — the bench prints each
+//! case's measured fraction.
+//!
+//! Run: `cargo bench --bench fig09_runtime_gpu`
+
+mod common;
+
+use common::{bench_config, report_speedups, time_cases};
+use origami::harness::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let Some(base) = bench_config() else { return Ok(()) };
+    let mut bench = Bench::new("Fig 9: inference runtime, GPU offload");
+    let cases = [
+        ("baseline2", "baseline2"),
+        ("split6", "split/6"),
+        ("split8", "split/8"),
+        ("split10", "split/10"),
+        ("slalom", "slalom"),
+        ("origami", "origami/6"),
+    ];
+    for model in ["vgg16-32", "vgg19-32"] {
+        time_cases(&mut bench, &base, model, "gpu", &cases)?;
+    }
+    bench.finish();
+    report_speedups(
+        &bench,
+        "vgg16-32",
+        "baseline2",
+        &[("split6", 4.0), ("slalom", 10.0), ("origami", 12.7)],
+    );
+    report_speedups(
+        &bench,
+        "vgg19-32",
+        "baseline2",
+        &[("split6", 4.0), ("slalom", 11.0), ("origami", 15.1)],
+    );
+    Ok(())
+}

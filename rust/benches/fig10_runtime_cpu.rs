@@ -1,0 +1,43 @@
+//! Fig. 10 — Inference runtime with offloaded computation on the CPU
+//! (no GPU): same strategy set as Fig 9, fully measured on this machine.
+//!
+//! Paper (224, VGG-19): Slalom ≈ 2.9x and Origami ≈ 3.9x faster than
+//! Baseline2; Slalom lands close to Split/6 because blinding costs
+//! rival running the first six layers in the enclave outright.
+//!
+//! Run: `cargo bench --bench fig10_runtime_cpu`
+
+mod common;
+
+use common::{bench_config, report_speedups, time_cases};
+use origami::harness::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let Some(base) = bench_config() else { return Ok(()) };
+    let mut bench = Bench::new("Fig 10: inference runtime, CPU offload");
+    let cases = [
+        ("baseline2", "baseline2"),
+        ("split6", "split/6"),
+        ("split8", "split/8"),
+        ("split10", "split/10"),
+        ("slalom", "slalom"),
+        ("origami", "origami/6"),
+    ];
+    for model in ["vgg16-32", "vgg19-32"] {
+        time_cases(&mut bench, &base, model, "cpu", &cases)?;
+    }
+    bench.finish();
+    report_speedups(
+        &bench,
+        "vgg16-32",
+        "baseline2",
+        &[("split6", 3.0), ("slalom", 2.9), ("origami", 3.9)],
+    );
+    report_speedups(
+        &bench,
+        "vgg19-32",
+        "baseline2",
+        &[("split6", 3.0), ("slalom", 2.9), ("origami", 3.9)],
+    );
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Fig. 11 — Baseline2 runtime breakdown: where does the full-enclave
+//! execution spend its time?
+//!
+//! Paper findings (224): the three dense layers account for ~40% of
+//! Baseline2 runtime, and ~50% of dense-layer time is data movement
+//! (on-demand parameter fetches + paging).  We reproduce the breakdown
+//! two ways: (a) the cost ledger's per-category split, and (b) a
+//! per-layer-group attribution from running each linear stage in
+//! isolation on the trusted CPU.
+//!
+//! Run: `cargo bench --bench fig11_baseline_breakdown`
+
+mod common;
+
+use common::{bench_config, iters, time_strategy};
+use origami::enclave::cost::{Cat, Ledger};
+use origami::harness::Bench;
+use origami::launcher::{synth_images, Stack};
+use origami::model::LayerKind;
+use origami::runtime::Device;
+
+fn main() -> anyhow::Result<()> {
+    let Some(base) = bench_config() else { return Ok(()) };
+    let mut bench = Bench::new("Fig 11: Baseline2 runtime breakdown");
+
+    // (a) ledger categories from real Baseline2 inferences
+    let t = time_strategy(&base, "vgg16-32", "baseline2", "cpu", iters())?;
+    let ledger = &t.last_ledger;
+    let total_ms = ledger.grand_total_ms();
+    println!("Baseline2 total {total_ms:.2}ms; category split:");
+    for (name, ms) in ledger.breakdown() {
+        println!("  {name:<16} {ms:>8.3}ms  ({:>4.1}%)", 100.0 * ms / total_ms);
+        bench.metric(&format!("cat_{name}"), "ms", ms);
+    }
+    let movement_ms = (ledger.total_ns(Cat::DataMove) + ledger.total_ns(Cat::Paging)) as f64 / 1e6;
+    println!(
+        "data movement (move+paging) share: {:.1}%",
+        100.0 * movement_ms / total_ms
+    );
+
+    // (b) per-layer-group compute attribution (isolated stage runs)
+    let stack = Stack::load(&base)?;
+    let model = stack.model("vgg16-32")?;
+    let img = synth_images(1, model.image, model.in_channels, 3).remove(0);
+    let mut x = img;
+    let mut conv_ms = 0.0;
+    let mut dense_ms = Vec::new();
+    for layer in &model.layers {
+        match layer.kind {
+            LayerKind::Conv | LayerKind::Dense => {
+                let stage = format!("layer{:02}_lin_open", layer.index);
+                // warm then measure
+                let mut scratch = Ledger::new();
+                stack
+                    .executor
+                    .run(&model.name, &stage, 1, &[&x], Device::TrustedCpu, &mut scratch)?;
+                let mut ledger = Ledger::new();
+                let out = stack
+                    .executor
+                    .run(&model.name, &stage, 1, &[&x], Device::TrustedCpu, &mut ledger)?;
+                let ms = ledger.grand_total_ms();
+                if layer.kind == LayerKind::Dense {
+                    dense_ms.push((layer.name.clone(), ms));
+                } else {
+                    conv_ms += ms;
+                }
+                let mut y = out.data;
+                if layer.has_relu {
+                    for v in y.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+                x = y;
+            }
+            LayerKind::Pool => {
+                let (h, w, c) = (layer.in_shape[0], layer.in_shape[1], layer.in_shape[2]);
+                let mut out = vec![f32::NEG_INFINITY; (h / 2) * (w / 2) * c];
+                for yy in 0..h {
+                    for xx in 0..w {
+                        for ch in 0..c {
+                            let d = ((yy / 2) * (w / 2) + xx / 2) * c + ch;
+                            out[d] = out[d].max(x[(yy * w + xx) * c + ch]);
+                        }
+                    }
+                }
+                x = out;
+            }
+            _ => {}
+        }
+    }
+    let dense_total: f64 = dense_ms.iter().map(|(_, m)| m).sum();
+    println!("\nper-group compute: convs {conv_ms:.2}ms, dense {dense_total:.2}ms");
+    for (name, ms) in &dense_ms {
+        println!("  {name}: {ms:.3}ms");
+        bench.metric(&format!("compute_{name}"), "ms", *ms);
+    }
+    bench.metric("compute_convs", "ms", conv_ms);
+    println!(
+        "dense share of linear compute: {:.1}% (paper: dense ≈40% of total)",
+        100.0 * dense_total / (dense_total + conv_ms)
+    );
+    bench.finish();
+    Ok(())
+}

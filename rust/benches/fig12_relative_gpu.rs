@@ -1,0 +1,38 @@
+//! Fig. 12 — Inference runtime *relative to non-private GPU execution*.
+//!
+//! Paper (224): Origami is ≈8x slower than running the whole model on an
+//! untrusted GPU with no privacy; Slalom worse (~10x); Baseline2 far
+//! worse.  Regenerates the same relative series.
+//!
+//! Run: `cargo bench --bench fig12_relative_gpu`
+
+mod common;
+
+use common::{bench_config, iters, time_cases, time_strategy};
+use origami::harness::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let Some(base) = bench_config() else { return Ok(()) };
+    let mut bench = Bench::new("Fig 12: runtime relative to non-private GPU");
+    let cases = [
+        ("baseline2", "baseline2"),
+        ("slalom", "slalom"),
+        ("origami", "origami/6"),
+    ];
+    for model in ["vgg16-32", "vgg19-32"] {
+        let open = time_strategy(&base, model, "open", "gpu", iters())?;
+        bench.push_samples(&format!("{model}/open-gpu"), &open.sim_ms);
+        time_cases(&mut bench, &base, model, "gpu", &cases)?;
+    }
+    bench.finish();
+    for model in ["vgg16-32", "vgg19-32"] {
+        let gpu = bench.mean_of(&format!("{model}/open-gpu")).unwrap_or(1.0);
+        println!("\n{model}: runtime relative to non-private GPU (paper: origami ≈8x)");
+        for (label, _) in cases {
+            if let Some(ms) = bench.mean_of(&format!("{model}/{label}")) {
+                println!("  {label:<10} {:.1}x", ms / gpu);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Fig. 13 — Inference runtime *relative to non-private CPU execution*.
+//!
+//! Paper (224): Origami takes at most ~1.7x the non-private CPU time —
+//! the headline "privacy nearly for free on CPU" claim.  Fully measured
+//! here (no GPU model involved).
+//!
+//! Run: `cargo bench --bench fig13_relative_cpu`
+
+mod common;
+
+use common::{bench_config, iters, time_cases, time_strategy};
+use origami::harness::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let Some(base) = bench_config() else { return Ok(()) };
+    let mut bench = Bench::new("Fig 13: runtime relative to non-private CPU");
+    let cases = [
+        ("baseline2", "baseline2"),
+        ("slalom", "slalom"),
+        ("origami", "origami/6"),
+    ];
+    for model in ["vgg16-32", "vgg19-32"] {
+        let open = time_strategy(&base, model, "open", "cpu", iters())?;
+        bench.push_samples(&format!("{model}/open-cpu"), &open.sim_ms);
+        time_cases(&mut bench, &base, model, "cpu", &cases)?;
+    }
+    bench.finish();
+    for model in ["vgg16-32", "vgg19-32"] {
+        let cpu = bench.mean_of(&format!("{model}/open-cpu")).unwrap_or(1.0);
+        println!("\n{model}: runtime relative to non-private CPU (paper: origami ≤1.7x)");
+        for (label, _) in cases {
+            if let Some(ms) = bench.mean_of(&format!("{model}/{label}")) {
+                println!("  {label:<10} {:.2}x", ms / cpu);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! §Perf — hot-path throughput microbenchmarks (EXPERIMENTS.md §Perf).
+//!
+//! The paper's scalability limit is the blind/unblind stream (§VI-C.2:
+//! ~4 ms per 6 MB on their Xeon ≈ 1.5 GB/s).  Targets per layer:
+//! - L3 blind/unblind: ≥ the paper's 1.5 GB/s on comparable silicon.
+//! - L3 factor generation (ChaCha20): not the bottleneck (≥ blind rate).
+//! - EPC paging: dominated by real AES work (reported for the record).
+//!
+//! Run: `cargo bench --bench perf_hotpaths`
+
+use origami::blinding::blind::{blind_into, fill_factors, unblind_into};
+use origami::enclave::cost::{CostModel, Ledger};
+use origami::enclave::epc::{Epc, PAGE_SIZE};
+use origami::harness::Bench;
+use origami::util::rng::{ChaCha20, Rng};
+
+fn main() {
+    let mut bench = Bench::new("Perf: hot-path throughput");
+    let n = 1_572_864; // 6 MB of f32 — the paper's reference unit
+    let mb = (n * 4) as f64 / (1024.0 * 1024.0);
+
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..n).map(|_| rng.range_f32(-8.0, 8.0)).collect();
+    let mut r = vec![0u32; n];
+    let cipher = ChaCha20::from_seed(7, 1);
+    fill_factors(&cipher, 0, &mut r);
+    let rf: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+    let mut out = vec![0f32; n];
+
+    let reps = 10;
+    let mut samples = Vec::new();
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        blind_into(&x, &r, &mut out);
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let row = bench.push_samples("blind 6MB", &samples);
+    let rate = mb / (row.mean_ms / 1e3) / 1024.0;
+    row.extra.push(("GBps".into(), rate));
+
+    let blinded = out.clone();
+    let mut samples = Vec::new();
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        unblind_into(&blinded, &rf, &mut out);
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let row = bench.push_samples("unblind 6MB", &samples);
+    let rate = mb / (row.mean_ms / 1e3) / 1024.0;
+    row.extra.push(("GBps".into(), rate));
+
+    let mut samples = Vec::new();
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        fill_factors(&cipher, 0, &mut r);
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let row = bench.push_samples("factor-gen 6MB", &samples);
+    let rate = mb / (row.mean_ms / 1e3) / 1024.0;
+    row.extra.push(("GBps".into(), rate));
+
+    // EPC paging throughput: continuously stream a working set 4x the
+    // capacity → every touch evicts + faults with real crypto.
+    let cap_pages = 64usize;
+    let mut epc = Epc::new((cap_pages * PAGE_SIZE) as u64, b"perf", CostModel::default());
+    let mut ledger = Ledger::new();
+    let alloc = epc.alloc(4 * cap_pages * PAGE_SIZE, &mut ledger);
+    let chunk = vec![0xA5u8; PAGE_SIZE];
+    let mut samples = Vec::new();
+    for _ in 0..5 {
+        let t = std::time::Instant::now();
+        for page in 0..4 * cap_pages {
+            epc.write(alloc, page * PAGE_SIZE, &chunk, &mut ledger).unwrap();
+        }
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let row = bench.push_samples("epc stream 1MB oversubscribed", &samples);
+    let rate = (4 * cap_pages * PAGE_SIZE) as f64 / (1024.0 * 1024.0)
+        / (row.mean_ms / 1e3)
+        / 1024.0;
+    row.extra.push(("GBps".into(), rate));
+
+    bench.finish();
+    println!(
+        "\npaper reference: blind/unblind ≈ 6MB per 4ms ≈ 1.46 GB/s on a Xeon E-2174G"
+    );
+}

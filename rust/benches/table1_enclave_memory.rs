@@ -1,0 +1,72 @@
+//! Table I — Enclave memory requirements for VGG-16.
+//!
+//! Paper (224 scale): Baseline2 86 MB, Split/6 29 MB, Split/8 33 MB,
+//! Split/10 35 MB, Slalom/Privacy 39 MB, Origami 39 MB.
+//!
+//! The requirement is an *analytic* property of (model shapes, placement
+//! plan, lazy policy) — DESIGN.md's memory policy — so we evaluate it
+//! directly on the full 224-scale model metadata in the manifest, plus
+//! the 32-scale models the runtime actually executes.
+//!
+//! Run: `cargo bench --bench table1_enclave_memory`
+
+mod common;
+
+use common::bench_config;
+use origami::harness::Bench;
+use origami::model::partition::PartitionPlan;
+use origami::strategies::memory::enclave_requirement;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+fn main() -> anyhow::Result<()> {
+    let Some(base) = bench_config() else { return Ok(()) };
+    let manifest = origami::model::Manifest::load(&base.artifacts)?;
+    let mut bench = Bench::new("Table 1: enclave memory requirements");
+
+    let paper: &[(&str, f64)] = &[
+        ("baseline2", 86.0),
+        ("split/6", 29.0),
+        ("split/8", 33.0),
+        ("split/10", 35.0),
+        ("slalom", 39.0),
+        ("origami/6", 39.0),
+    ];
+
+    for model_name in ["vgg16", "vgg19", "vgg16-32"] {
+        let Ok(model) = manifest.model(model_name) else { continue };
+        let lazy = if model.image >= 224 {
+            8 * 1024 * 1024
+        } else {
+            base.lazy_dense_bytes
+        };
+        println!("\n{model_name} (image {}):", model.image);
+        println!(
+            "{:<12} {:>10} {:>10} | paper(VGG16@224)",
+            "plan", "total MB", "blind MB"
+        );
+        for (name, paper_mb) in paper {
+            let plan = match *name {
+                "baseline2" => PartitionPlan::baseline(model),
+                "slalom" => PartitionPlan::slalom(model),
+                "origami/6" => PartitionPlan::origami(model, 6),
+                s => PartitionPlan::split(model, s.strip_prefix("split/").unwrap().parse()?),
+            };
+            let r = enclave_requirement(model, &plan, lazy, 1);
+            println!(
+                "{:<12} {:>10.1} {:>10.1} | {:>6.0}",
+                name,
+                r.total() as f64 / MB,
+                r.blind_buffers as f64 / MB,
+                paper_mb
+            );
+            bench.metric(
+                &format!("{model_name}/{name}"),
+                "total_mb",
+                r.total() as f64 / MB,
+            );
+        }
+    }
+    bench.finish();
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! The blinding hot loops — the paper's scalability bottleneck.
+//!
+//! §VI-C.2: "unblinding or blinding 6MB features roughly takes 4
+//! milliseconds and there are roughly 47MB and 51MB intermediates … a
+//! significant fraction of the total execution time is hobbled by the
+//! encoding and decoding of data."  These two loops are therefore a
+//! first-class perf target (EXPERIMENTS.md §Perf): branch-free integer
+//! arithmetic, bitmask modulo (P = 2^24), keystream bytes consumed in
+//! bulk.
+
+use super::quant::{MOD_P, SCALE_X, SCALE_XW};
+use crate::enclave::cost::{Cat, Ledger};
+use crate::util::rng::ChaCha20;
+use crate::util::stats::Timer;
+
+const P: u32 = MOD_P;
+const MASK: u32 = MOD_P - 1; // P is a power of two → mod is a mask
+
+/// Fill `r` with uniform residues in [0, P) from the keystream starting
+/// at `block_start` (each 32-bit word masked to 24 bits — exact because
+/// 2^24 | 2^32).
+pub fn fill_factors(cipher: &ChaCha20, block_start: u32, r: &mut [u32]) {
+    let mut block_idx = block_start;
+    let mut i = 0;
+    // 4 blocks at a time, lane-parallel (SIMD across blocks)
+    while i + 64 <= r.len() {
+        let quads = cipher.block_words4(block_idx);
+        for (lane, words) in quads.iter().enumerate() {
+            for j in 0..16 {
+                r[i + lane * 16 + j] = words[j] & MASK;
+            }
+        }
+        i += 64;
+        block_idx = block_idx.wrapping_add(4);
+    }
+    // whole blocks: consume the 16 native u32 words directly
+    while i + 16 <= r.len() {
+        let words = cipher.block_words(block_idx);
+        for j in 0..16 {
+            r[i + j] = words[j] & MASK;
+        }
+        i += 16;
+        block_idx = block_idx.wrapping_add(1);
+    }
+    if i < r.len() {
+        let words = cipher.block_words(block_idx);
+        for (j, slot) in r[i..].iter_mut().enumerate() {
+            *slot = words[j] & MASK;
+        }
+    }
+}
+
+/// Fused quantize+blind: `out[i] = (round(x[i]·2^8) + r[i]) mod 2^24`,
+/// written as f32-exact integers (what the blinded artifact consumes).
+/// Cost is recorded as measured [`Cat::Blind`].
+pub fn quantize_blind(x: &[f32], r: &[u32], out: &mut [f32], ledger: &mut Ledger) {
+    debug_assert_eq!(x.len(), r.len());
+    debug_assert_eq!(x.len(), out.len());
+    let t = Timer::start();
+    blind_into(x, r, out);
+    ledger.add_measured(Cat::Blind, t.elapsed().as_nanos() as u64);
+}
+
+/// The raw blind loop (no ledger) — benchable in isolation.
+#[inline]
+pub fn blind_into(x: &[f32], r: &[u32], out: &mut [f32]) {
+    // All-32-bit, branch-free: quantized values fit i32 (|x·2^8| < 2^31),
+    // wrapping u32 add is exact mod 2^32, and since 2^24 | 2^32 the final
+    // mask gives the correct residue even for negative q in two's
+    // complement.  This form autovectorizes (roundps/cvtps2dq + paddd +
+    // pand + cvtdq2ps).
+    for ((&xi, &ri), o) in x.iter().zip(r.iter()).zip(out.iter_mut()) {
+        let q = (xi * SCALE_X).round() as i32;
+        let b = (q as u32).wrapping_add(ri) & MASK;
+        *o = b as f32;
+    }
+}
+
+/// Fused unblind+dequantize: `out[i] = centered((y[i] − R[i]) mod 2^24) /
+/// 2^16`. `y` and `ru` hold f32-exact integers in [0, P). Cost recorded
+/// as measured [`Cat::Unblind`].
+pub fn unblind_dequantize(y: &[f32], ru: &[f32], out: &mut [f32], ledger: &mut Ledger) {
+    debug_assert_eq!(y.len(), ru.len());
+    debug_assert_eq!(y.len(), out.len());
+    let t = Timer::start();
+    unblind_into(y, ru, out);
+    ledger.add_measured(Cat::Unblind, t.elapsed().as_nanos() as u64);
+}
+
+/// The raw unblind loop (no ledger).
+#[inline]
+pub fn unblind_into(y: &[f32], ru: &[f32], out: &mut [f32]) {
+    const HALF: u32 = P / 2;
+    for ((&yi, &ri), o) in y.iter().zip(ru.iter()).zip(out.iter_mut()) {
+        // yi, ri ∈ [0, P) exactly representable; wrapping diff stays exact
+        let d = (yi as u32).wrapping_sub(ri as u32) & MASK;
+        let c = if d >= HALF {
+            d as i32 - P as i32
+        } else {
+            d as i32
+        };
+        *o = c as f32 / SCALE_XW;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::prop::{forall, Size};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn blind_matches_scalar_definition() {
+        let x = [0.5f32, -1.25, 100.0, -100.0, 0.0];
+        let r = [5u32, P - 1, 12345, 0, P / 2];
+        let mut out = [0f32; 5];
+        let mut l = Ledger::new();
+        quantize_blind(&x, &r, &mut out, &mut l);
+        for i in 0..5 {
+            let q = (x[i] * SCALE_X).round() as i64;
+            let want = (q + r[i] as i64).rem_euclid(MOD_P as i64) as f32;
+            assert_eq!(out[i], want, "i={i}");
+            assert!(out[i] >= 0.0 && out[i] < P as f32);
+        }
+        assert!(l.measured_ns(Cat::Blind) > 0);
+    }
+
+    #[test]
+    fn unblind_with_r_inverts_blind() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..1000).map(|_| rng.range_f32(-8.0, 8.0)).collect();
+        let r: Vec<u32> = (0..1000).map(|_| rng.below(P)).collect();
+        let mut b = vec![0f32; 1000];
+        let mut l = Ledger::new();
+        quantize_blind(&x, &r, &mut b, &mut l);
+        let rf: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+        let mut back = vec![0f32; 1000];
+        unblind_dequantize(&b, &rf, &mut back, &mut l);
+        for i in 0..1000 {
+            let want = (x[i] * SCALE_X).round() / SCALE_XW;
+            assert!((back[i] - want).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_random_shapes() {
+        forall(
+            60,
+            11,
+            |rng: &mut Rng, s: Size| {
+                let n = 1 + rng.below((s.0 * 32) as u32 + 1) as usize;
+                let x: Vec<f32> = (0..n).map(|_| rng.range_f32(-30.0, 30.0)).collect();
+                let r: Vec<u32> = (0..n).map(|_| rng.below(P)).collect();
+                (x, r)
+            },
+            |(x, r)| {
+                let mut b = vec![0f32; x.len()];
+                blind_into(x, r, &mut b);
+                let rf: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+                let mut back = vec![0f32; x.len()];
+                unblind_into(&b, &rf, &mut back);
+                for i in 0..x.len() {
+                    let want = (x[i] * SCALE_X).round() / SCALE_XW;
+                    if (back[i] - want).abs() > 1e-9 {
+                        return Err(format!("mismatch at {i}: {} vs {want}", back[i]));
+                    }
+                    if !(0.0..(P as f32)).contains(&b[i]) {
+                        return Err(format!("blinded out of range: {}", b[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn factors_uniform_and_deterministic() {
+        let c = ChaCha20::from_seed(7, 3);
+        let mut a = vec![0u32; 5000];
+        fill_factors(&c, 0, &mut a);
+        assert!(a.iter().all(|&v| v < P));
+        // deterministic regeneration
+        let mut b = vec![0u32; 5000];
+        fill_factors(&c, 0, &mut b);
+        assert_eq!(a, b);
+        // random access: second half regenerated from its block offset
+        // (5000 words = 312.5 blocks; use an aligned offset of 100 blocks
+        // = 1600 words)
+        let mut tail = vec![0u32; 5000 - 1600];
+        fill_factors(&c, 100, &mut tail);
+        assert_eq!(&tail[..], &a[1600..]);
+        // crude uniformity: mean of 24-bit residues near P/2
+        let mean = a.iter().map(|&v| v as f64).sum::<f64>() / a.len() as f64;
+        assert!((mean - (P as f64) / 2.0).abs() < (P as f64) * 0.02);
+    }
+
+    #[test]
+    fn same_pad_differs_by_quantized_difference() {
+        // hiding sanity: b1-b2 mod P == q1-q2 mod P (pad cancels)
+        let x1 = [1.5f32, -2.0];
+        let x2 = [0.25f32, 7.0];
+        let r = [99u32, 4242];
+        let (mut b1, mut b2) = ([0f32; 2], [0f32; 2]);
+        blind_into(&x1, &r, &mut b1);
+        blind_into(&x2, &r, &mut b2);
+        for i in 0..2 {
+            let d = (b1[i] as u32).wrapping_sub(b2[i] as u32) & MASK;
+            let q1 = (x1[i] * SCALE_X).round() as i64;
+            let q2 = (x2[i] * SCALE_X).round() as i64;
+            assert_eq!(d, (q1 - q2).rem_euclid(MOD_P as i64) as u32);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Blinding-factor streams and the precomputed unblinding-factor store.
+//!
+//! Paper §VI-C: "Blinding factors are generated on demand using the same
+//! Pseudo Random Number Generator seed while unblinding factors are
+//! encrypted and stored outside SGX enclave. When removing noise from
+//! intermediate features, Slalom/Privacy will only fetch parts of
+//! unblinding factors needed for a given layer into SGX enclave."
+//!
+//! [`FactorStream`] is the counter-addressable generator: the factors for
+//! (layer, epoch) regenerate from the enclave key alone, never stored.
+//! [`UnblindStore`] holds `R = W_q·r mod P` per (layer, epoch) sealed in
+//! untrusted memory; `fetch` unseals exactly one layer's worth at a time.
+//! Epochs form a precomputed pool; a fresh epoch per request is the
+//! one-time-pad regime, and pool cycling (allowed for benchmarking only)
+//! is flagged loudly.
+
+use anyhow::{anyhow, Result};
+
+use super::blind::fill_factors;
+use crate::enclave::sealing::SealedStore;
+use crate::util::rng::ChaCha20;
+
+/// Counter-addressable blinding-factor generator.
+pub struct FactorStream {
+    key: [u8; 32],
+}
+
+impl FactorStream {
+    /// Derive from enclave key material (see [`Enclave::derive_key`]).
+    ///
+    /// [`Enclave::derive_key`]: crate::enclave::Enclave::derive_key
+    pub fn new(key: [u8; 32]) -> Self {
+        Self { key }
+    }
+
+    fn cipher(&self, layer: usize, epoch: u64) -> ChaCha20 {
+        let mut nonce = [0u8; 12];
+        nonce[..4].copy_from_slice(&(layer as u32).to_le_bytes());
+        nonce[4..12].copy_from_slice(&epoch.to_le_bytes());
+        ChaCha20::new(&self.key, &nonce)
+    }
+
+    /// Regenerate the `n` blinding factors for (layer, epoch).
+    pub fn factors(&self, layer: usize, epoch: u64, n: usize) -> Vec<u32> {
+        let mut r = vec![0u32; n];
+        fill_factors(&self.cipher(layer, epoch), 0, &mut r);
+        r
+    }
+
+    /// Same, as f32-exact integers (artifact input form for R precompute).
+    pub fn factors_f32(&self, layer: usize, epoch: u64, n: usize) -> Vec<f32> {
+        self.factors(layer, epoch, n)
+            .into_iter()
+            .map(|v| v as f32)
+            .collect()
+    }
+}
+
+/// Sealed store of precomputed unblinding factors.
+pub struct UnblindStore {
+    store: SealedStore,
+    master: Vec<u8>,
+    measurement: [u8; 32],
+    /// Number of precomputed epochs per layer.
+    pub pool_epochs: u64,
+    /// Permit epoch reuse past the pool (bench mode; breaks the OTP).
+    pub allow_reuse: bool,
+    reuse_warned: std::sync::atomic::AtomicBool,
+}
+
+impl UnblindStore {
+    pub fn new(master: &[u8], measurement: [u8; 32], pool_epochs: u64, allow_reuse: bool) -> Self {
+        Self {
+            store: SealedStore::new(),
+            master: master.to_vec(),
+            measurement,
+            pool_epochs: pool_epochs.max(1),
+            allow_reuse,
+            reuse_warned: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Blob key: includes the factor count so batch-1 and batch-N pools
+    /// for the same (layer, epoch) never collide.
+    fn name(layer: usize, epoch: u64, n: usize) -> String {
+        format!("R-l{layer}-e{epoch}-n{n}")
+    }
+
+    /// Map a request's logical epoch onto the precomputed pool.
+    ///
+    /// Errors when the pool is exhausted unless reuse is allowed.
+    pub fn resolve_epoch(&self, logical: u64) -> Result<u64> {
+        if logical < self.pool_epochs {
+            return Ok(logical);
+        }
+        if !self.allow_reuse {
+            return Err(anyhow!(
+                "unblinding-factor pool exhausted at epoch {logical} \
+                 (pool={}) — precompute more or enable reuse (bench only)",
+                self.pool_epochs
+            ));
+        }
+        if !self
+            .reuse_warned
+            .swap(true, std::sync::atomic::Ordering::SeqCst)
+        {
+            eprintln!(
+                "[origami] WARNING: cycling the unblinding-factor pool \
+                 (epoch {logical} -> {}); one-time-pad guarantee void — \
+                 benchmarking mode only",
+                logical % self.pool_epochs
+            );
+        }
+        Ok(logical % self.pool_epochs)
+    }
+
+    /// Store the precomputed `R` for (layer, epoch), sealed.
+    pub fn put(&mut self, layer: usize, epoch: u64, r_u: &[f32]) -> Result<()> {
+        self.store.seal_f32(
+            &self.master,
+            &self.measurement,
+            &Self::name(layer, epoch, r_u.len()),
+            r_u,
+        )
+    }
+
+    /// Fetch one layer's factors (`n` of them) into the enclave — the
+    /// paper's "only fetch parts … needed for a given layer".
+    pub fn fetch(&self, layer: usize, epoch: u64, n: usize) -> Result<Vec<f32>> {
+        self.store
+            .unseal_f32(&self.master, &self.measurement, &Self::name(layer, epoch, n))
+    }
+
+    pub fn contains(&self, layer: usize, epoch: u64, n: usize) -> bool {
+        self.store.contains(&Self::name(layer, epoch, n))
+    }
+
+    /// Bytes held outside the enclave (sealed).
+    pub fn stored_bytes(&self) -> u64 {
+        self.store.stored_bytes
+    }
+
+    /// Failure injection for tests.
+    pub fn tamper(&mut self, layer: usize, epoch: u64, n: usize) {
+        self.store.tamper(&Self::name(layer, epoch, n));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> [u8; 32] {
+        [9u8; 32]
+    }
+
+    #[test]
+    fn factors_deterministic_per_layer_epoch() {
+        let fs = FactorStream::new(key());
+        assert_eq!(fs.factors(1, 0, 100), fs.factors(1, 0, 100));
+        assert_ne!(fs.factors(1, 0, 100), fs.factors(2, 0, 100));
+        assert_ne!(fs.factors(1, 0, 100), fs.factors(1, 1, 100));
+    }
+
+    #[test]
+    fn factors_in_range() {
+        let fs = FactorStream::new(key());
+        assert!(fs
+            .factors(3, 7, 10_000)
+            .iter()
+            .all(|&v| v < crate::blinding::quant::MOD_P));
+    }
+
+    #[test]
+    fn unblind_store_roundtrip() {
+        let mut s = UnblindStore::new(b"master", [1u8; 32], 4, false);
+        s.put(2, 1, &[1.0, 2.0, 3.0]).unwrap();
+        assert!(s.contains(2, 1, 3));
+        assert_eq!(s.fetch(2, 1, 3).unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(s.fetch(2, 0, 3).is_err());
+        assert!(s.fetch(2, 1, 4).is_err(), "length-keyed");
+        assert!(s.stored_bytes() > 0);
+    }
+
+    #[test]
+    fn pool_exhaustion_policy() {
+        let strict = UnblindStore::new(b"m", [0u8; 32], 4, false);
+        assert_eq!(strict.resolve_epoch(3).unwrap(), 3);
+        assert!(strict.resolve_epoch(4).is_err());
+        let relaxed = UnblindStore::new(b"m", [0u8; 32], 4, true);
+        assert_eq!(relaxed.resolve_epoch(6).unwrap(), 2);
+    }
+
+    #[test]
+    fn tampered_factors_detected_on_fetch() {
+        let mut s = UnblindStore::new(b"m", [0u8; 32], 1, false);
+        s.put(1, 0, &[5.0; 16]).unwrap();
+        s.tamper(1, 0, 16);
+        assert!(s.fetch(1, 0, 16).is_err());
+    }
+}

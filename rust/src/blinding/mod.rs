@@ -1,0 +1,23 @@
+//! Cryptographic blinding engine (Slalom arithmetic, paper §III-C).
+//!
+//! Fixed-point domain: activations quantize to `round(x·2^8)`, weights to
+//! `round(w·2^8)`; additive blinding with uniform `r ∈ Z_{2^24}` is a
+//! one-time pad over the additive group, so the offloaded tensor is
+//! information-theoretically hidden.  The untrusted device computes the
+//! *linear* layer exactly in the mod-2^24 domain (the AOT'd
+//! `layer*_lin_blind` artifacts); the enclave unblinds by subtracting the
+//! precomputed `R = W_q·r mod 2^24` and decodes the centered remainder.
+//!
+//! Modules:
+//! - [`quant`]   — scalar domain conversions + the decodability bound.
+//! - [`blind`]   — the hot loops: fused quantize+blind / unblind+dequant.
+//! - [`factors`] — blinding-factor streams (counter-addressable ChaCha20)
+//!                 and the sealed precomputed-unblinding-factor store.
+
+pub mod blind;
+pub mod factors;
+pub mod quant;
+
+pub use blind::{blind_into, quantize_blind, unblind_dequantize};
+pub use factors::{FactorStream, UnblindStore};
+pub use quant::{MOD_P, SCALE_W, SCALE_X, SCALE_XW};

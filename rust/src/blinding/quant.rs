@@ -1,0 +1,94 @@
+//! Fixed-point quantization domain shared with the Python kernels.
+//!
+//! Constants mirror `python/compile/kernels/blind.py` exactly; the pytest
+//! suite pins the Python side, and the Rust unit + integration tests pin
+//! this side against the same identities, so the two stay in lock-step.
+
+/// Fractional bits for activations (scale 2^8).
+pub const FRAC_BITS_X: u32 = 8;
+/// Fractional bits for weights (scale 2^8).
+pub const FRAC_BITS_W: u32 = 8;
+/// Activation scale.
+pub const SCALE_X: f32 = (1u32 << FRAC_BITS_X) as f32;
+/// Weight scale.
+pub const SCALE_W: f32 = (1u32 << FRAC_BITS_W) as f32;
+/// Combined scale of a linear layer's output.
+pub const SCALE_XW: f32 = SCALE_X * SCALE_W;
+/// The additive group modulus (2^24 — every residue is f32-exact).
+pub const MOD_P: u32 = 1 << 24;
+
+/// Quantize one activation: `round(x · 2^8)` (i64 to survive big inputs).
+#[inline]
+pub fn quantize(x: f32) -> i64 {
+    (x * SCALE_X).round() as i64
+}
+
+/// Reduce into [0, P).
+#[inline]
+pub fn wrap(v: i64) -> u32 {
+    (v.rem_euclid(MOD_P as i64)) as u32
+}
+
+/// Centered remainder in [-P/2, P/2).
+#[inline]
+pub fn centered(v: u32) -> i32 {
+    if v >= MOD_P / 2 {
+        v as i32 - MOD_P as i32
+    } else {
+        v as i32
+    }
+}
+
+/// Dequantize a linear-layer output back to float.
+#[inline]
+pub fn dequantize_out(v: i32) -> f32 {
+    v as f32 / SCALE_XW
+}
+
+/// Largest |y| a linear layer may produce and still decode (the
+/// decodability invariant the enclave asserts): |round(y·2^16)| < 2^23.
+pub const DECODE_RANGE: f32 = (1u32 << 23) as f32 / SCALE_XW;
+
+/// Does a real-valued output fit the centered decode range?
+#[inline]
+pub fn decodable(y: f32) -> bool {
+    y.abs() < DECODE_RANGE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_wrap_centered_roundtrip() {
+        for x in [-3.75f32, -0.004, 0.0, 0.004, 1.5, 100.0] {
+            let q = quantize(x);
+            let w = wrap(q);
+            let c = centered(w);
+            assert_eq!(c as i64, q, "x={x}");
+            assert!((dequantize_out(c * SCALE_W as i32) - x).abs() < 1.0 / SCALE_X + 1e-6);
+        }
+    }
+
+    #[test]
+    fn wrap_handles_negatives() {
+        assert_eq!(wrap(-1), MOD_P - 1);
+        assert_eq!(wrap(-(MOD_P as i64)), 0);
+        assert_eq!(wrap(MOD_P as i64 + 5), 5);
+    }
+
+    #[test]
+    fn centered_splits_at_half() {
+        assert_eq!(centered(0), 0);
+        assert_eq!(centered(MOD_P / 2 - 1), (MOD_P / 2 - 1) as i32);
+        assert_eq!(centered(MOD_P / 2), -((MOD_P / 2) as i32));
+        assert_eq!(centered(MOD_P - 1), -1);
+    }
+
+    #[test]
+    fn decode_range_is_128() {
+        assert_eq!(DECODE_RANGE, 128.0);
+        assert!(decodable(127.9));
+        assert!(!decodable(128.0));
+    }
+}

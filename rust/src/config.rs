@@ -1,0 +1,242 @@
+//! Configuration system: JSON config file + CLI overrides.
+//!
+//! Everything the launcher needs to assemble a serving stack: model,
+//! strategy, offload device, enclave geometry, blinding pool, batching
+//! policy.  `Config::default()` is the 32-scale CI profile; the paper-
+//! scale geometry (128 MB EPC etc.) is `Config::paper_scale()`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Value};
+
+/// Top-level configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Artifacts directory (manifest + HLO files).
+    pub artifacts: PathBuf,
+    /// Model name in the manifest.
+    pub model: String,
+    /// Strategy: baseline2 | split/N | slalom | origami[/N] | open.
+    pub strategy: String,
+    /// Offload device: cpu | gpu.
+    pub device: String,
+    /// Enclave protected-memory capacity (bytes).
+    pub epc_bytes: u64,
+    /// Enclave master seed (determinism).
+    pub seed: u64,
+    /// Origami partition point (layer index, paper numbering).
+    pub partition: usize,
+    /// Precomputed unblinding-factor epochs.
+    pub pool_epochs: u64,
+    /// Allow factor-pool cycling (bench mode only).
+    pub allow_factor_reuse: bool,
+    /// Dynamic batcher: max batch size (must be an exported batch).
+    pub max_batch: usize,
+    /// Dynamic batcher: max queueing delay in ms.
+    pub max_delay_ms: f64,
+    /// Server worker threads.
+    pub workers: usize,
+    /// Lazy-load dense layers above this many bytes (Baseline2 policy;
+    /// the paper uses 8 MB).
+    pub lazy_dense_bytes: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            artifacts: crate::model::Manifest::default_root(),
+            model: "vgg16-32".into(),
+            strategy: "origami".into(),
+            device: "cpu".into(),
+            // 32-scale default: EPC scaled so model-vs-EPC pressure is
+            // paper-like (see DESIGN.md §2). vgg16-32 params ≈ 0.13 MB.
+            epc_bytes: 256 * 1024,
+            seed: 2019,
+            partition: 6,
+            pool_epochs: 64,
+            allow_factor_reuse: true,
+            max_batch: 8,
+            max_delay_ms: 2.0,
+            workers: 2,
+            lazy_dense_bytes: 16 * 1024,
+        }
+    }
+}
+
+impl Config {
+    /// Paper-scale geometry (224 models, 128 MB EPC, 8 MB lazy bound).
+    pub fn paper_scale() -> Self {
+        Self {
+            model: "vgg16".into(),
+            epc_bytes: 128 * 1024 * 1024,
+            lazy_dense_bytes: 8 * 1024 * 1024,
+            ..Self::default()
+        }
+    }
+
+    /// Usable EPC after SGX metadata overhead (~93 of 128 MB; same ratio
+    /// applied at every scale).
+    pub fn usable_epc_bytes(&self) -> u64 {
+        (self.epc_bytes as f64 * 0.727) as u64
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let v = json::from_file(path)?;
+        let mut c = Self::default();
+        c.apply_json(&v);
+        Ok(c)
+    }
+
+    fn apply_json(&mut self, v: &Value) {
+        if let Some(s) = v.get("artifacts").and_then(|x| x.as_str()) {
+            self.artifacts = PathBuf::from(s);
+        }
+        for (field, slot) in [
+            ("model", &mut self.model),
+            ("strategy", &mut self.strategy),
+            ("device", &mut self.device),
+        ] {
+            if let Some(s) = v.get(field).and_then(|x| x.as_str()) {
+                *slot = s.to_string();
+            }
+        }
+        for (field, slot) in [
+            ("epc_bytes", &mut self.epc_bytes),
+            ("seed", &mut self.seed),
+            ("pool_epochs", &mut self.pool_epochs),
+            ("lazy_dense_bytes", &mut self.lazy_dense_bytes),
+        ] {
+            if let Some(n) = v.get(field).and_then(|x| x.as_i64()) {
+                *slot = n as u64;
+            }
+        }
+        for (field, slot) in [
+            ("partition", &mut self.partition),
+            ("max_batch", &mut self.max_batch),
+            ("workers", &mut self.workers),
+        ] {
+            if let Some(n) = v.get(field).and_then(|x| x.as_usize()) {
+                *slot = n;
+            }
+        }
+        if let Some(n) = v.get("max_delay_ms").and_then(|x| x.as_f64()) {
+            self.max_delay_ms = n;
+        }
+        if let Some(b) = v.get("allow_factor_reuse").and_then(|x| x.as_bool()) {
+            self.allow_factor_reuse = b;
+        }
+    }
+
+    /// Apply CLI overrides (`--model`, `--device`, …; `--config` first).
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut c = match args.get("config") {
+            Some(path) => Self::from_file(Path::new(path))?,
+            None => Self::default(),
+        };
+        if args.has("paper-scale") {
+            c = Self {
+                artifacts: c.artifacts.clone(),
+                ..Self::paper_scale()
+            };
+        }
+        if let Some(v) = args.get("artifacts") {
+            c.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("model") {
+            c.model = v.into();
+        }
+        if let Some(v) = args.get("strategy") {
+            c.strategy = v.into();
+        }
+        if let Some(v) = args.get("device") {
+            c.device = v.into();
+        }
+        c.epc_bytes = args.u64_or("epc-bytes", c.epc_bytes)?;
+        c.seed = args.u64_or("seed", c.seed)?;
+        c.partition = args.usize_or("partition", c.partition)?;
+        c.pool_epochs = args.u64_or("pool-epochs", c.pool_epochs)?;
+        c.max_batch = args.usize_or("max-batch", c.max_batch)?;
+        c.max_delay_ms = args.f64_or("max-delay-ms", c.max_delay_ms)?;
+        c.workers = args.usize_or("workers", c.workers)?;
+        c.lazy_dense_bytes = args.u64_or("lazy-dense-bytes", c.lazy_dense_bytes)?;
+        if args.has("strict-otp") {
+            c.allow_factor_reuse = false;
+        }
+        Ok(c)
+    }
+
+    /// Serialize (for `origami inspect` and run records).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("artifacts", json::s(&self.artifacts.display().to_string())),
+            ("model", json::s(&self.model)),
+            ("strategy", json::s(&self.strategy)),
+            ("device", json::s(&self.device)),
+            ("epc_bytes", json::num(self.epc_bytes as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("partition", json::num(self.partition as f64)),
+            ("pool_epochs", json::num(self.pool_epochs as f64)),
+            (
+                "allow_factor_reuse",
+                Value::Bool(self.allow_factor_reuse),
+            ),
+            ("max_batch", json::num(self.max_batch as f64)),
+            ("max_delay_ms", json::num(self.max_delay_ms)),
+            ("workers", json::num(self.workers as f64)),
+            ("lazy_dense_bytes", json::num(self.lazy_dense_bytes as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_then_json_roundtrip() {
+        let c = Config::default();
+        let v = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&v);
+        assert_eq!(c2.model, c.model);
+        assert_eq!(c2.epc_bytes, c.epc_bytes);
+    }
+
+    #[test]
+    fn args_override() {
+        let args = Args::parse(
+            "serve --model vgg19-32 --device gpu --max-batch 4 --strict-otp"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = Config::from_args(&args).unwrap();
+        assert_eq!(c.model, "vgg19-32");
+        assert_eq!(c.device, "gpu");
+        assert_eq!(c.max_batch, 4);
+        assert!(!c.allow_factor_reuse);
+    }
+
+    #[test]
+    fn paper_scale_geometry() {
+        let c = Config::paper_scale();
+        assert_eq!(c.epc_bytes, 128 * 1024 * 1024);
+        assert!(c.usable_epc_bytes() > 90 * 1024 * 1024);
+        assert!(c.usable_epc_bytes() < 94 * 1024 * 1024);
+    }
+
+    #[test]
+    fn config_file_loads() {
+        let dir = std::env::temp_dir().join("origami-test-config");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.json");
+        std::fs::write(&path, r#"{"model": "vgg19-32", "max_delay_ms": 7.5}"#).unwrap();
+        let c = Config::from_file(&path).unwrap();
+        assert_eq!(c.model, "vgg19-32");
+        assert_eq!(c.max_delay_ms, 7.5);
+    }
+}

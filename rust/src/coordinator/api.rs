@@ -1,0 +1,130 @@
+//! Request/response types of the serving API.
+
+use std::time::Instant;
+
+use crate::enclave::cost::Ledger;
+use crate::util::threadpool::Channel;
+
+/// A client inference request: one encrypted image.
+pub struct InferRequest {
+    pub id: u64,
+    /// Target model name (routing key).
+    pub model: String,
+    /// AES-CTR ciphertext of the f32 NHWC image (session keystream).
+    pub ciphertext: Vec<u8>,
+    /// Attested session id (selects keys + factor epoch).
+    pub session: u64,
+    /// Enqueue timestamp (queueing latency measurement).
+    pub submitted_at: Instant,
+    /// Where the response goes.
+    pub reply: Channel<InferResponse>,
+}
+
+impl InferRequest {
+    pub fn new(
+        id: u64,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> (Self, Channel<InferResponse>) {
+        let reply = Channel::bounded(1);
+        (
+            Self {
+                id,
+                model: model.to_string(),
+                ciphertext,
+                session,
+                submitted_at: Instant::now(),
+                reply: reply.clone(),
+            },
+            reply,
+        )
+    }
+}
+
+/// The serving response.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    /// Class probabilities, or empty on error.
+    pub probs: Vec<f32>,
+    /// End-to-end latency including queueing (wall, ms).
+    pub latency_ms: f64,
+    /// Simulated-timeline cost of the batch this request rode in (ms,
+    /// amortized per request).
+    pub sim_ms: f64,
+    /// Batch size the request was served in.
+    pub batch: usize,
+    pub error: Option<String>,
+}
+
+/// Per-batch execution record the scheduler emits for metrics.
+#[derive(Debug, Clone)]
+pub struct BatchRecord {
+    pub batch: usize,
+    pub queue_ms: f64,
+    pub exec_wall_ms: f64,
+    pub sim_ms: f64,
+    pub ledger: LedgerSummary,
+}
+
+/// Compact ledger view for metrics streams.
+#[derive(Debug, Clone, Default)]
+pub struct LedgerSummary {
+    pub measured_ms: f64,
+    pub modeled_ms: f64,
+    pub blind_ms: f64,
+    pub device_ms: f64,
+    pub paging_ms: f64,
+}
+
+impl LedgerSummary {
+    pub fn from(l: &Ledger) -> Self {
+        use crate::enclave::cost::Cat;
+        Self {
+            measured_ms: l.total_measured_ns() as f64 / 1e6,
+            modeled_ms: l.total_modeled_ns() as f64 / 1e6,
+            blind_ms: (l.total_ns(Cat::Blind) + l.total_ns(Cat::Unblind)) as f64 / 1e6,
+            device_ms: l.total_ns(Cat::DeviceCompute) as f64 / 1e6,
+            paging_ms: l.total_ns(Cat::Paging) as f64 / 1e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_reply_channel_wiring() {
+        let (req, reply) = InferRequest::new(1, "m", vec![1, 2, 3], 7);
+        req.reply
+            .send(InferResponse {
+                id: req.id,
+                probs: vec![0.5],
+                latency_ms: 1.0,
+                sim_ms: 2.0,
+                batch: 1,
+                error: None,
+            })
+            .map_err(|_| ())
+            .unwrap();
+        let resp = reply.recv().unwrap();
+        assert_eq!(resp.id, 1);
+        assert_eq!(resp.probs, vec![0.5]);
+    }
+
+    #[test]
+    fn ledger_summary_extracts_categories() {
+        use crate::enclave::cost::{Cat, Ledger};
+        let mut l = Ledger::new();
+        l.add_measured(Cat::Blind, 1_000_000);
+        l.add_measured(Cat::Unblind, 500_000);
+        l.add_modeled(Cat::DeviceCompute, 2_000_000);
+        let s = LedgerSummary::from(&l);
+        assert!((s.blind_ms - 1.5).abs() < 1e-9);
+        assert!((s.device_ms - 2.0).abs() < 1e-9);
+        assert!((s.measured_ms - 1.5).abs() < 1e-9);
+        assert!((s.modeled_ms - 2.0).abs() < 1e-9);
+    }
+}

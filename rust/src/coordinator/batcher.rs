@@ -1,0 +1,127 @@
+//! Dynamic batcher: (max-batch, max-delay) request coalescing.
+//!
+//! Requests accumulate until either `max_batch` are waiting or the oldest
+//! has waited `max_delay`; the batch then ships to a worker.  This is the
+//! standard serving trade-off (throughput vs tail latency) and an
+//! ablation bench sweeps both knobs.
+
+use std::time::{Duration, Instant};
+
+use super::api::InferRequest;
+use crate::util::threadpool::Channel;
+
+/// Pulls from the ingress queue and forms batches.
+pub struct DynamicBatcher {
+    ingress: Channel<InferRequest>,
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl DynamicBatcher {
+    pub fn new(ingress: Channel<InferRequest>, max_batch: usize, max_delay_ms: f64) -> Self {
+        Self {
+            ingress,
+            max_batch: max_batch.max(1),
+            max_delay: Duration::from_secs_f64(max_delay_ms.max(0.0) / 1e3),
+        }
+    }
+
+    pub fn ingress(&self) -> Channel<InferRequest> {
+        self.ingress.clone()
+    }
+
+    /// Block for the next batch; None when the queue is closed and empty.
+    pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
+        // block for the first request
+        let first = self.ingress.recv()?;
+        let deadline = Instant::now() + self.max_delay;
+        let mut batch = vec![first];
+        while batch.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            // opportunistically drain, then wait out the remaining delay
+            let more = self.ingress.drain_up_to(self.max_batch - batch.len());
+            if !more.is_empty() {
+                batch.extend(more);
+                continue;
+            }
+            match self.ingress.recv_timeout(deadline - now) {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::api::InferRequest;
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest::new(id, "m", vec![], 0).0
+    }
+
+    #[test]
+    fn batches_fill_to_max() {
+        let ch = Channel::bounded(32);
+        for i in 0..5 {
+            ch.send(req(i)).map_err(|_| ()).unwrap();
+        }
+        let b = DynamicBatcher::new(ch, 4, 50.0);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.len(), 1);
+    }
+
+    #[test]
+    fn delay_bounds_batch_wait() {
+        let ch = Channel::bounded(32);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        let b = DynamicBatcher::new(ch, 8, 20.0);
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = t.elapsed();
+        assert!(waited >= Duration::from_millis(15), "{waited:?}");
+        assert!(waited < Duration::from_millis(500), "{waited:?}");
+    }
+
+    #[test]
+    fn late_arrivals_join_within_window() {
+        let ch = Channel::bounded(32);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        let ch2 = ch.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            ch2.send(req(1)).map_err(|_| ()).unwrap();
+        });
+        let b = DynamicBatcher::new(ch, 8, 60.0);
+        let batch = b.next_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn closed_queue_terminates() {
+        let ch: Channel<InferRequest> = Channel::bounded(4);
+        ch.close();
+        let b = DynamicBatcher::new(ch, 4, 1.0);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn zero_delay_ships_immediately() {
+        let ch = Channel::bounded(8);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        ch.send(req(1)).map_err(|_| ()).unwrap();
+        let b = DynamicBatcher::new(ch, 8, 0.0);
+        // first batch grabs whatever is queued at that instant (≥1)
+        let batch = b.next_batch().unwrap();
+        assert!(!batch.is_empty());
+    }
+}

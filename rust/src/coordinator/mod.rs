@@ -1,0 +1,24 @@
+//! Serving coordinator: request API, router, dynamic batcher, pipeline
+//! scheduler and the serving engine.
+//!
+//! Data path (all Rust, Python never involved):
+//!
+//! ```text
+//! client ──encrypted──▶ Router ──▶ per-model queue ──▶ DynamicBatcher
+//!        ◀──probs────── ServingEngine workers (Strategy::infer) ◀──┘
+//! ```
+//!
+//! Batches form under a (max-batch, max-delay) policy; each worker owns a
+//! full strategy instance (enclave + blinding state) so batches execute
+//! in parallel without sharing enclave state across trust contexts.
+
+pub mod api;
+pub mod batcher;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use api::{InferRequest, InferResponse};
+pub use batcher::DynamicBatcher;
+pub use router::Router;
+pub use server::ServingEngine;

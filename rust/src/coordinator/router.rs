@@ -1,0 +1,116 @@
+//! Request router: maps (model) → serving engine.
+//!
+//! A deployment can host several private-inference engines (e.g. a
+//! VGG-16 Origami engine and a VGG-19 Slalom engine); the router is the
+//! single client-facing entry point and enforces basic admission checks
+//! (known model, correctly sized ciphertext).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::api::InferResponse;
+use super::server::ServingEngine;
+use crate::util::threadpool::Channel;
+
+/// Per-model registration.
+struct Route {
+    engine: ServingEngine,
+    sample_bytes: usize,
+}
+
+/// The client-facing multiplexer.
+#[derive(Default)]
+pub struct Router {
+    routes: HashMap<String, Route>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an engine for `model`; requests must carry ciphertexts of
+    /// exactly `sample_bytes`.
+    pub fn register(&mut self, model: &str, engine: ServingEngine, sample_bytes: usize) {
+        self.routes.insert(
+            model.to_string(),
+            Route {
+                engine,
+                sample_bytes,
+            },
+        );
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.routes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Route a request (admission-checked) to its engine.
+    pub fn submit(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<Channel<InferResponse>> {
+        let route = self
+            .routes
+            .get(model)
+            .ok_or_else(|| anyhow!("no engine for model `{model}` (have {:?})", self.models()))?;
+        if ciphertext.len() != route.sample_bytes {
+            return Err(anyhow!(
+                "model `{model}` expects {}-byte ciphertexts, got {}",
+                route.sample_bytes,
+                ciphertext.len()
+            ));
+        }
+        route.engine.submit(model, ciphertext, session)
+    }
+
+    /// Blocking convenience.
+    pub fn infer_blocking(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<InferResponse> {
+        let route = self
+            .routes
+            .get(model)
+            .ok_or_else(|| anyhow!("no engine for model `{model}`"))?;
+        if ciphertext.len() != route.sample_bytes {
+            return Err(anyhow!(
+                "model `{model}` expects {}-byte ciphertexts, got {}",
+                route.sample_bytes,
+                ciphertext.len()
+            ));
+        }
+        route.engine.infer_blocking(model, ciphertext, session)
+    }
+
+    /// Total queued requests across engines.
+    pub fn queue_depth(&self) -> usize {
+        self.routes.values().map(|r| r.engine.queue_depth()).sum()
+    }
+
+    /// Shut all engines down.
+    pub fn shutdown(self) {
+        for (_, r) in self.routes {
+            r.engine.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_model_rejected() {
+        let r = Router::new();
+        assert!(r.submit("nope", vec![], 0).is_err());
+        assert!(r.models().is_empty());
+    }
+}

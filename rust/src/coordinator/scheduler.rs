@@ -1,0 +1,247 @@
+//! Batch scheduler: executes formed batches on a strategy, splitting the
+//! batched output back into per-request responses.
+//!
+//! Requests in one batch are concatenated into a single padded tensor
+//! matching an exported artifact batch size; padding rides along and its
+//! outputs are discarded (PJRT executables are shape-specialized, so the
+//! batcher pads rather than recompiling — the standard serving trick).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::api::{BatchRecord, InferRequest, InferResponse, LedgerSummary};
+use crate::enclave::cost::Ledger;
+use crate::strategies::Strategy;
+
+/// Executes batches against one strategy instance.
+pub struct BatchScheduler {
+    strategy: Box<dyn Strategy>,
+    /// Bytes of one plaintext sample (f32 image).
+    pub sample_bytes: usize,
+    /// Artifact batch sizes available, ascending (e.g. [1, 8]).
+    pub artifact_batches: Vec<usize>,
+}
+
+impl BatchScheduler {
+    pub fn new(
+        strategy: Box<dyn Strategy>,
+        sample_bytes: usize,
+        mut artifact_batches: Vec<usize>,
+    ) -> Self {
+        artifact_batches.sort_unstable();
+        assert!(!artifact_batches.is_empty(), "no artifact batch sizes");
+        Self {
+            strategy,
+            sample_bytes,
+            artifact_batches,
+        }
+    }
+
+    pub fn strategy_name(&self) -> String {
+        self.strategy.name()
+    }
+
+    pub fn strategy_mut(&mut self) -> &mut dyn Strategy {
+        self.strategy.as_mut()
+    }
+
+    /// Smallest exported batch size ≥ n (or the largest available).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        for &b in &self.artifact_batches {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.artifact_batches.last().unwrap()
+    }
+
+    /// Run one formed batch; replies to every request, returns a record.
+    pub fn execute(&mut self, mut requests: Vec<InferRequest>) -> Result<BatchRecord> {
+        let n = requests.len();
+        let exec_batch = self.pick_batch(n);
+        // If the queue outran the largest artifact, split recursively.
+        if n > exec_batch {
+            let rest = requests.split_off(exec_batch);
+            let rec = self.execute(requests)?;
+            let _ = self.execute(rest)?;
+            return Ok(rec);
+        }
+        let queue_ms = requests
+            .iter()
+            .map(|r| r.submitted_at.elapsed().as_secs_f64() * 1e3)
+            .fold(0.0, f64::max);
+
+        // Concatenate ciphertexts (each independently encrypted under
+        // its own session keystream); pad the batch tail with zeros.
+        let sessions: Vec<u64> = requests.iter().map(|r| r.session).collect();
+        let mut cipher = Vec::with_capacity(exec_batch * self.sample_bytes);
+        for r in &requests {
+            anyhow::ensure!(
+                r.ciphertext.len() == self.sample_bytes,
+                "request {}: ciphertext {} bytes, expected {}",
+                r.id,
+                r.ciphertext.len(),
+                self.sample_bytes
+            );
+            cipher.extend_from_slice(&r.ciphertext);
+        }
+        cipher.resize(exec_batch * self.sample_bytes, 0);
+
+        let mut ledger = Ledger::new();
+        let t = Instant::now();
+        let result = self
+            .strategy
+            .infer(&cipher, exec_batch, &sessions, &mut ledger);
+        let exec_wall_ms = t.elapsed().as_secs_f64() * 1e3;
+        let sim_ms = ledger.grand_total_ms();
+
+        match result {
+            Ok(probs) => {
+                let per = probs.len() / exec_batch;
+                for (i, r) in requests.iter().enumerate() {
+                    let _ = r.reply.send(InferResponse {
+                        id: r.id,
+                        probs: probs[i * per..(i + 1) * per].to_vec(),
+                        latency_ms: r.submitted_at.elapsed().as_secs_f64() * 1e3,
+                        sim_ms: sim_ms / n as f64,
+                        batch: n,
+                        error: None,
+                    });
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in &requests {
+                    let _ = r.reply.send(InferResponse {
+                        id: r.id,
+                        probs: vec![],
+                        latency_ms: r.submitted_at.elapsed().as_secs_f64() * 1e3,
+                        sim_ms: 0.0,
+                        batch: n,
+                        error: Some(msg.clone()),
+                    });
+                }
+            }
+        }
+        Ok(BatchRecord {
+            batch: n,
+            queue_ms,
+            exec_wall_ms,
+            sim_ms,
+            ledger: LedgerSummary::from(&ledger),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Strategy double: echoes batch/softmax-like outputs.
+    struct FakeStrategy {
+        classes: usize,
+        fail: bool,
+    }
+
+    impl Strategy for FakeStrategy {
+        fn name(&self) -> String {
+            "fake".into()
+        }
+
+        fn setup(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn infer(
+            &mut self,
+            ciphertext: &[u8],
+            batch: usize,
+            _sessions: &[u64],
+            ledger: &mut Ledger,
+        ) -> Result<Vec<f32>> {
+            if self.fail {
+                anyhow::bail!("boom");
+            }
+            ledger.add_measured(crate::enclave::cost::Cat::DeviceCompute, 1_000_000);
+            assert_eq!(ciphertext.len() % batch, 0);
+            Ok(vec![1.0 / self.classes as f32; batch * self.classes])
+        }
+
+        fn enclave_requirement_bytes(&self) -> u64 {
+            0
+        }
+    }
+
+    fn sched(fail: bool) -> BatchScheduler {
+        BatchScheduler::new(
+            Box::new(FakeStrategy { classes: 10, fail }),
+            16,
+            vec![1, 8],
+        )
+    }
+
+    fn req(id: u64) -> (InferRequest, crate::util::threadpool::Channel<InferResponse>) {
+        InferRequest::new(id, "m", vec![0u8; 16], 3)
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        let s = sched(false);
+        assert_eq!(s.pick_batch(1), 1);
+        assert_eq!(s.pick_batch(2), 8);
+        assert_eq!(s.pick_batch(8), 8);
+        assert_eq!(s.pick_batch(20), 8);
+    }
+
+    #[test]
+    fn batch_of_three_pads_to_eight_and_splits_output() {
+        let mut s = sched(false);
+        let (r1, c1) = req(1);
+        let (r2, c2) = req(2);
+        let (r3, c3) = req(3);
+        let rec = s.execute(vec![r1, r2, r3]).unwrap();
+        assert_eq!(rec.batch, 3);
+        for c in [c1, c2, c3] {
+            let resp = c.recv().unwrap();
+            assert_eq!(resp.probs.len(), 10);
+            assert!(resp.error.is_none());
+            assert_eq!(resp.batch, 3);
+        }
+        assert!(rec.sim_ms >= 1.0);
+    }
+
+    #[test]
+    fn oversized_queue_splits_across_executions() {
+        let mut s = sched(false);
+        let mut reqs = Vec::new();
+        let mut chans = Vec::new();
+        for i in 0..11 {
+            let (r, c) = req(i);
+            reqs.push(r);
+            chans.push(c);
+        }
+        s.execute(reqs).unwrap();
+        for c in chans {
+            assert!(c.recv().unwrap().error.is_none());
+        }
+    }
+
+    #[test]
+    fn failures_propagate_to_every_request() {
+        let mut s = sched(true);
+        let (r1, c1) = req(1);
+        let (r2, c2) = req(2);
+        s.execute(vec![r1, r2]).unwrap();
+        assert!(c1.recv().unwrap().error.is_some());
+        assert!(c2.recv().unwrap().error.is_some());
+    }
+
+    #[test]
+    fn wrong_sized_ciphertext_rejected() {
+        let mut s = sched(false);
+        let (mut r, _c) = req(1);
+        r.ciphertext = vec![0u8; 7];
+        assert!(s.execute(vec![r]).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! The serving engine: batcher + worker threads + metrics.
+//!
+//! Each worker owns a complete [`BatchScheduler`] (strategy + enclave +
+//! blinding state).  Workers pull formed batches from the shared
+//! [`DynamicBatcher`]; a bounded ingress channel provides backpressure
+//! toward clients.
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::api::{BatchRecord, InferRequest, InferResponse};
+use super::batcher::DynamicBatcher;
+use super::scheduler::BatchScheduler;
+use crate::util::stats::Summary;
+use crate::util::threadpool::Channel;
+
+/// Aggregated serving metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub latency_ms: Summary,
+    pub queue_ms: Summary,
+    pub exec_wall_ms: Summary,
+    pub sim_ms: Summary,
+    pub batch_size: Summary,
+    pub batches: u64,
+    pub requests: u64,
+    pub errors: u64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, rec: &BatchRecord) {
+        self.batches += 1;
+        self.requests += rec.batch as u64;
+        self.queue_ms.record(rec.queue_ms);
+        self.exec_wall_ms.record(rec.exec_wall_ms);
+        self.sim_ms.record(rec.sim_ms);
+        self.batch_size.record(rec.batch as f64);
+    }
+}
+
+/// A running serving stack for one model+strategy.
+pub struct ServingEngine {
+    ingress: Channel<InferRequest>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl ServingEngine {
+    /// Start `workers` worker threads sharing one batcher.
+    ///
+    /// `factory` constructs a complete [`BatchScheduler`] *inside* each
+    /// worker thread — PJRT handles (the `xla` crate) are `Rc`-backed and
+    /// must not cross threads, so every worker owns its own client,
+    /// compiled artifacts, enclave and factor pools.  The factory's
+    /// setup cost (artifact compilation, factor precompute) is incurred
+    /// once per worker at startup, not on the request path.
+    pub fn start<F>(workers: usize, max_batch: usize, max_delay_ms: f64, factory: F) -> Self
+    where
+        F: Fn(usize) -> anyhow::Result<BatchScheduler> + Send + Sync + 'static,
+    {
+        let ingress: Channel<InferRequest> = Channel::bounded(256);
+        let batcher = Arc::new(DynamicBatcher::new(ingress.clone(), max_batch, max_delay_ms));
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let factory = Arc::new(factory);
+        let ready = Arc::new(std::sync::Barrier::new(workers.max(1) + 1));
+        let handles: Vec<JoinHandle<()>> = (0..workers.max(1))
+            .map(|i| {
+                let b = batcher.clone();
+                let m = metrics.clone();
+                let f = factory.clone();
+                let r = ready.clone();
+                std::thread::Builder::new()
+                    .name(format!("origami-serve-{i}"))
+                    .spawn(move || {
+                        let mut sched = match f(i) {
+                            Ok(s) => {
+                                r.wait();
+                                s
+                            }
+                            Err(e) => {
+                                eprintln!("[serve] worker {i} failed to start: {e:#}");
+                                m.lock().unwrap().errors += 1;
+                                r.wait();
+                                return;
+                            }
+                        };
+                        while let Some(batch) = b.next_batch() {
+                            match sched.execute(batch) {
+                                Ok(rec) => m.lock().unwrap().record(&rec),
+                                Err(e) => {
+                                    eprintln!("[serve] batch failed: {e:#}");
+                                    m.lock().unwrap().errors += 1;
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        // wait until every worker finished setup so the caller's first
+        // request latency doesn't include artifact compilation
+        ready.wait();
+        Self {
+            ingress,
+            workers: handles,
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// Submit an encrypted request; returns the reply channel.
+    pub fn submit(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<Channel<InferResponse>> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        let (req, reply) = InferRequest::new(id, model, ciphertext, session);
+        self.ingress
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("serving engine is shut down"))?;
+        Ok(reply)
+    }
+
+    /// Submit and block for the response (records client latency).
+    pub fn infer_blocking(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<InferResponse> {
+        let reply = self.submit(model, ciphertext, session)?;
+        let resp = reply
+            .recv()
+            .ok_or_else(|| anyhow::anyhow!("reply channel closed"))?;
+        self.metrics
+            .lock()
+            .unwrap()
+            .latency_ms
+            .record(resp.latency_ms);
+        Ok(resp)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.ingress.len()
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) -> Metrics {
+        self.ingress.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        Arc::try_unwrap(std::mem::take(&mut self.metrics))
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for ServingEngine {
+    fn drop(&mut self) {
+        self.ingress.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}

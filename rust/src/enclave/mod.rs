@@ -1,0 +1,26 @@
+//! SGX-like enclave simulator (functional + cost model).
+//!
+//! Neither SGX hardware nor its side effects exist in this environment
+//! (DESIGN.md §2), so this module reproduces the three *mechanisms* that
+//! drive every number the paper reports about enclaves:
+//!
+//! 1. **Bounded protected memory with encrypted paging** ([`epc`]): a
+//!    page-granular EPC; evictions past capacity genuinely AES-CTR-encrypt
+//!    + MAC page bytes, faults genuinely decrypt + verify.
+//! 2. **World-switch costs** ([`cost`]): calibrated ECALL/OCALL transition
+//!    costs accounted per crossing.
+//! 3. **Key lifecycle** ([`power`], [`sealing`], [`attestation`]): power
+//!    events destroy enclave keys; recovery re-measures (SHA-256) every
+//!    page like EADD/EEXTEND, which is what makes Table II scale with
+//!    enclave size.
+
+pub mod attestation;
+pub mod cost;
+pub mod enclave;
+pub mod epc;
+pub mod power;
+pub mod sealing;
+
+pub use cost::{CostModel, Ledger};
+pub use enclave::Enclave;
+pub use epc::Epc;

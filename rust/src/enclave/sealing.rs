@@ -1,0 +1,172 @@
+//! Sealed storage: encrypt enclave state for persistence outside the EPC.
+//!
+//! The paper stores precomputed unblinding factors "encrypted … outside
+//! SGX enclave" (§VI-C) and pages them in per layer; this module is that
+//! mechanism.  Sealing keys are derived from the enclave master + the
+//! measurement (MRENCLAVE policy: only the same enclave can unseal).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::crypto;
+
+/// An untrusted blob store holding sealed records (DRAM/disk stand-in).
+#[derive(Default)]
+pub struct SealedStore {
+    blobs: HashMap<String, (u64, Vec<u8>)>, // name -> (nonce, sealed bytes)
+    next_nonce: u64,
+    /// Total sealed bytes currently held (metric: off-EPC footprint).
+    pub stored_bytes: u64,
+}
+
+impl SealedStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn keys(master: &[u8], measurement: &[u8; 32]) -> ([u8; 16], [u8; 32]) {
+        let mut material = master.to_vec();
+        material.extend_from_slice(measurement);
+        (
+            crypto::derive_aes_key(&material, "seal-enc"),
+            crypto::derive_key(&material, "seal-mac"),
+        )
+    }
+
+    /// Seal `plain` under (master, measurement) and store it as `name`.
+    pub fn seal(
+        &mut self,
+        master: &[u8],
+        measurement: &[u8; 32],
+        name: &str,
+        plain: &[u8],
+    ) -> Result<()> {
+        let (ke, km) = Self::keys(master, measurement);
+        self.next_nonce += 1;
+        let nonce = self.next_nonce;
+        let sealed = crypto::seal(&ke, &km, nonce, plain);
+        if let Some((_, old)) = self.blobs.insert(name.to_string(), (nonce, sealed)) {
+            self.stored_bytes -= old.len() as u64;
+        }
+        self.stored_bytes += self.blobs[name].1.len() as u64;
+        Ok(())
+    }
+
+    /// Seal an f32 tensor.
+    pub fn seal_f32(
+        &mut self,
+        master: &[u8],
+        measurement: &[u8; 32],
+        name: &str,
+        data: &[f32],
+    ) -> Result<()> {
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        self.seal(master, measurement, name, &bytes)
+    }
+
+    /// Unseal `name`; fails on unknown name, wrong keys, or tampering.
+    pub fn unseal(&self, master: &[u8], measurement: &[u8; 32], name: &str) -> Result<Vec<u8>> {
+        let (nonce, sealed) = self
+            .blobs
+            .get(name)
+            .ok_or_else(|| anyhow!("no sealed blob `{name}`"))?;
+        let (ke, km) = Self::keys(master, measurement);
+        crypto::open(&ke, &km, *nonce, sealed)
+            .ok_or_else(|| anyhow!("unsealing `{name}` failed (wrong enclave or tampered)"))
+    }
+
+    /// Unseal an f32 tensor.
+    pub fn unseal_f32(
+        &self,
+        master: &[u8],
+        measurement: &[u8; 32],
+        name: &str,
+    ) -> Result<Vec<f32>> {
+        let bytes = self.unseal(master, measurement, name)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.blobs.contains_key(name)
+    }
+
+    pub fn remove(&mut self, name: &str) {
+        if let Some((_, old)) = self.blobs.remove(name) {
+            self.stored_bytes -= old.len() as u64;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.blobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blobs.is_empty()
+    }
+
+    /// Corrupt a stored blob (failure-injection hook for tests).
+    pub fn tamper(&mut self, name: &str) {
+        if let Some((_, blob)) = self.blobs.get_mut(name) {
+            if let Some(b) = blob.first_mut() {
+                *b ^= 0xFF;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const M: &[u8; 32] = &[7u8; 32];
+
+    #[test]
+    fn seal_unseal_roundtrip() {
+        let mut s = SealedStore::new();
+        s.seal(b"master", M, "factors", b"hello").unwrap();
+        assert_eq!(s.unseal(b"master", M, "factors").unwrap(), b"hello");
+        assert!(s.stored_bytes >= 5 + 32);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut s = SealedStore::new();
+        let data = vec![1.5f32, -2.25, 1e-7];
+        s.seal_f32(b"m", M, "t", &data).unwrap();
+        assert_eq!(s.unseal_f32(b"m", M, "t").unwrap(), data);
+    }
+
+    #[test]
+    fn wrong_enclave_cannot_unseal() {
+        let mut s = SealedStore::new();
+        s.seal(b"master", M, "x", b"secret").unwrap();
+        assert!(s.unseal(b"other", M, "x").is_err());
+        let other_m = &[9u8; 32];
+        assert!(s.unseal(b"master", other_m, "x").is_err());
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let mut s = SealedStore::new();
+        s.seal(b"m", M, "x", b"data").unwrap();
+        s.tamper("x");
+        assert!(s.unseal(b"m", M, "x").is_err());
+    }
+
+    #[test]
+    fn overwrite_updates_accounting() {
+        let mut s = SealedStore::new();
+        s.seal(b"m", M, "x", &[0u8; 100]).unwrap();
+        let b1 = s.stored_bytes;
+        s.seal(b"m", M, "x", &[0u8; 10]).unwrap();
+        assert!(s.stored_bytes < b1);
+        assert_eq!(s.len(), 1);
+        s.remove("x");
+        assert_eq!(s.stored_bytes, 0);
+        assert!(s.is_empty());
+    }
+}

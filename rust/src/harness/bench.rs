@@ -1,0 +1,220 @@
+//! Bench harness (criterion substitute): warmup, timed iterations,
+//! mean/stddev/min, aligned table output and JSON dumps under
+//! `bench_results/`.
+//!
+//! Each `rust/benches/*.rs` target sets `harness = false` and drives a
+//! [`Bench`] directly; every paper table/figure has one target that
+//! prints the same rows/series the paper reports.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::util::json::{self, Value};
+use crate::util::stats::fmt_ms;
+
+/// Result of one measured case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ms: f64,
+    pub stddev_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    /// Extra key/value metrics (speedups, memory, modeled time, …).
+    pub extra: Vec<(String, f64)>,
+}
+
+/// A named collection of measured cases.
+pub struct Bench {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+    warmup: u32,
+    iters: u32,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        // ORIGAMI_BENCH_FAST=1 shrinks iteration counts (CI smoke mode).
+        let fast = std::env::var("ORIGAMI_BENCH_FAST").ok().as_deref() == Some("1");
+        Self {
+            title: title.to_string(),
+            results: Vec::new(),
+            warmup: if fast { 1 } else { 2 },
+            iters: if fast { 3 } else { 10 },
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: u32, iters: u32) -> Self {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Measure `f` (called once per iteration) and record under `name`.
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &mut BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        self.push_samples(name, &samples)
+    }
+
+    /// Record externally measured per-iteration samples (ms).
+    pub fn push_samples(&mut self, name: &str, samples_ms: &[f64]) -> &mut BenchResult {
+        let n = samples_ms.len().max(1) as f64;
+        let mean = samples_ms.iter().sum::<f64>() / n;
+        let var = if samples_ms.len() > 1 {
+            samples_ms.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0)
+        } else {
+            0.0
+        };
+        let min = samples_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = samples_ms.iter().cloned().fold(0.0f64, f64::max);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: samples_ms.len() as u32,
+            mean_ms: mean,
+            stddev_ms: var.sqrt(),
+            min_ms: if min.is_finite() { min } else { 0.0 },
+            max_ms: max,
+            extra: Vec::new(),
+        });
+        self.results.last_mut().unwrap()
+    }
+
+    /// Record a derived scalar row (no timing), e.g. a memory requirement.
+    pub fn metric(&mut self, name: &str, key: &str, value: f64) {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 0,
+            mean_ms: 0.0,
+            stddev_ms: 0.0,
+            min_ms: 0.0,
+            max_ms: 0.0,
+            extra: vec![(key.to_string(), value)],
+        });
+    }
+
+    /// Print the aligned results table.
+    pub fn report(&self) {
+        println!("\n=== {} ===", self.title);
+        let name_w = self
+            .results
+            .iter()
+            .map(|r| r.name.len())
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        for r in &self.results {
+            let mut line = if r.iters > 0 {
+                format!(
+                    "{:<w$}  {:>10}  ±{:>9}  (min {:>10}, n={})",
+                    r.name,
+                    fmt_ms(r.mean_ms),
+                    fmt_ms(r.stddev_ms),
+                    fmt_ms(r.min_ms),
+                    r.iters,
+                    w = name_w
+                )
+            } else {
+                format!("{:<w$}", r.name, w = name_w)
+            };
+            for (k, v) in &r.extra {
+                line.push_str(&format!("  {k}={v:.3}"));
+            }
+            println!("{line}");
+        }
+    }
+
+    /// Dump results as JSON to `bench_results/<slug>.json`.
+    pub fn dump(&self) -> anyhow::Result<PathBuf> {
+        let slug: String = self
+            .title
+            .to_lowercase()
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        let path = PathBuf::from("bench_results").join(format!("{slug}.json"));
+        let rows: Vec<Value> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("name".to_string(), json::s(&r.name)),
+                    ("iters".to_string(), json::num(r.iters as f64)),
+                    ("mean_ms".to_string(), json::num(r.mean_ms)),
+                    ("stddev_ms".to_string(), json::num(r.stddev_ms)),
+                    ("min_ms".to_string(), json::num(r.min_ms)),
+                    ("max_ms".to_string(), json::num(r.max_ms)),
+                ];
+                for (k, v) in &r.extra {
+                    fields.push((k.clone(), json::num(*v)));
+                }
+                Value::Obj(fields)
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("title", json::s(&self.title)),
+            ("results", Value::Arr(rows)),
+        ]);
+        json::to_file(&path, &doc)?;
+        Ok(path)
+    }
+
+    /// Convenience: report + dump.
+    pub fn finish(&self) {
+        self.report();
+        match self.dump() {
+            Ok(p) => println!("[bench] wrote {}", p.display()),
+            Err(e) => eprintln!("[bench] dump failed: {e}"),
+        }
+    }
+
+    /// Look up a case's mean by name (for speedup derivations).
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|r| r.name == name && r.iters > 0)
+            .map(|r| r.mean_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_measures_and_records() {
+        let mut b = Bench::new("test").with_iters(0, 3);
+        b.case("sleepless", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].iters, 3);
+        assert!(b.results[0].mean_ms >= 0.0);
+    }
+
+    #[test]
+    fn push_samples_stats() {
+        let mut b = Bench::new("t");
+        let r = b.push_samples("x", &[1.0, 2.0, 3.0]);
+        assert!((r.mean_ms - 2.0).abs() < 1e-9);
+        assert!((r.stddev_ms - 1.0).abs() < 1e-9);
+        assert_eq!(r.min_ms, 1.0);
+        assert_eq!(r.max_ms, 3.0);
+    }
+
+    #[test]
+    fn mean_of_lookup() {
+        let mut b = Bench::new("t");
+        b.push_samples("a", &[4.0]);
+        assert_eq!(b.mean_of("a"), Some(4.0));
+        assert_eq!(b.mean_of("b"), None);
+    }
+}

@@ -1,0 +1,7 @@
+//! Benchmark + property-test harnesses (criterion / proptest substitutes).
+
+pub mod bench;
+pub mod prop;
+
+pub use bench::{Bench, BenchResult};
+pub use prop::forall;

@@ -1,0 +1,129 @@
+//! Mini property-testing framework (proptest substitute).
+//!
+//! `forall(cases, seed, gen, check)` runs `check` over `cases` random
+//! inputs produced by `gen` from a deterministic [`Rng`]. On failure it
+//! reports the case index and seed so the exact input is reproducible,
+//! then retries the generator on progressively "smaller" size hints to
+//! give a crude shrink.
+
+use crate::util::rng::Rng;
+
+/// Size hint passed to generators: shrinks on failure.
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub usize);
+
+/// Run a property over `cases` random inputs.
+///
+/// `gen(rng, size)` produces an input; `check(input)` returns
+/// `Err(message)` to fail. Panics with a reproducible report on failure.
+pub fn forall<T, G, C>(cases: usize, seed: u64, gen: G, check: C)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng, Size) -> T,
+    C: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::with_stream(seed, case as u64);
+        let size = Size(1 + case % 64);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = check(&input) {
+            // crude shrink: try smaller sizes with the same stream
+            let mut smallest: Option<(T, String)> = None;
+            for s in (0..size.0).rev() {
+                let mut r2 = Rng::with_stream(seed, case as u64);
+                let cand = gen(&mut r2, Size(s));
+                if let Err(m2) = check(&cand) {
+                    smallest = Some((cand, m2));
+                }
+            }
+            let (shown, shown_msg) = smallest
+                .map(|(t, m)| (format!("{t:?}"), m))
+                .unwrap_or_else(|| (format!("{input:?}"), msg.clone()));
+            panic!(
+                "property failed at case {case} (seed {seed}): {shown_msg}\n  input: {shown}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gens {
+    use super::Size;
+    use crate::util::rng::Rng;
+
+    /// Vec of f32 in [lo, hi), length scaled by size.
+    pub fn f32_vec(rng: &mut Rng, size: Size, lo: f32, hi: f32) -> Vec<f32> {
+        let n = 1 + rng.below((size.0 * 16) as u32 + 1) as usize;
+        (0..n).map(|_| rng.range_f32(lo, hi)).collect()
+    }
+
+    /// Vec of u32 < bound.
+    pub fn u32_vec(rng: &mut Rng, size: Size, bound: u32) -> Vec<u32> {
+        let n = 1 + rng.below((size.0 * 16) as u32 + 1) as usize;
+        (0..n).map(|_| rng.below(bound)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(
+            50,
+            1,
+            |rng, s| gens::u32_vec(rng, s, 100),
+            |v| {
+                if v.iter().all(|&x| x < 100) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(
+            50,
+            2,
+            |rng, s| gens::u32_vec(rng, s, 10),
+            |v| {
+                if v.len() < 3 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(Vec::new());
+        forall(
+            5,
+            7,
+            |rng, s| gens::f32_vec(rng, s, 0.0, 1.0),
+            |v| {
+                seen.lock().unwrap().push(v.len());
+                Ok(())
+            },
+        );
+        let seen2 = Mutex::new(Vec::new());
+        forall(
+            5,
+            7,
+            |rng, s| gens::f32_vec(rng, s, 0.0, 1.0),
+            |v| {
+                seen2.lock().unwrap().push(v.len());
+                Ok(())
+            },
+        );
+        assert_eq!(*seen.lock().unwrap(), *seen2.lock().unwrap());
+    }
+}

@@ -1,0 +1,182 @@
+//! Launcher: assemble the full stack (PJRT client → registry → executor
+//! → strategy → serving engine) from a [`Config`].  Shared by the CLI,
+//! the examples and the benches.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::scheduler::BatchScheduler;
+use crate::coordinator::ServingEngine;
+use crate::enclave::cost::CostModel;
+use crate::model::{Manifest, Model};
+use crate::runtime::{ArtifactRegistry, PjrtClient, StageExecutor};
+use crate::strategies::{self, Strategy, StrategyCtx};
+
+/// The assembled, strategy-agnostic lower stack.
+pub struct Stack {
+    pub client: Arc<PjrtClient>,
+    pub manifest: Arc<Manifest>,
+    pub registry: Arc<ArtifactRegistry>,
+    pub executor: Arc<StageExecutor>,
+}
+
+impl Stack {
+    /// Build the PJRT client + artifact registry once per process.
+    pub fn load(config: &Config) -> Result<Self> {
+        let client = Arc::new(PjrtClient::cpu().context("creating PJRT CPU client")?);
+        let manifest = Arc::new(
+            Manifest::load(&config.artifacts).context("loading artifacts manifest")?,
+        );
+        let registry = Arc::new(ArtifactRegistry::new(client.clone(), manifest.clone()));
+        let executor = Arc::new(StageExecutor::new(registry.clone(), CostModel::default()));
+        Ok(Self {
+            client,
+            manifest,
+            registry,
+            executor,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<Arc<Model>> {
+        Ok(Arc::new(self.manifest.model(name)?.clone()))
+    }
+
+    /// Build + set up one strategy instance per the config.
+    pub fn build_strategy(&self, config: &Config) -> Result<Box<dyn Strategy>> {
+        let model = self.model(&config.model)?;
+        let ctx = StrategyCtx::new(self.executor.clone(), model, config.clone())?;
+        let mut s = strategies::build(ctx, &config.strategy, config.partition)?;
+        s.setup()
+            .with_context(|| format!("setting up strategy {}", s.name()))?;
+        Ok(s)
+    }
+
+    /// Plaintext image bytes per sample for a model.
+    pub fn sample_bytes(&self, model: &str) -> Result<usize> {
+        let m = self.manifest.model(model)?;
+        Ok(4 * m.image * m.image * m.in_channels)
+    }
+
+    /// Batch sizes exported for the full/tail stages of a model.
+    pub fn artifact_batches(&self, model: &str) -> Result<Vec<usize>> {
+        let m = self.manifest.model(model)?;
+        let mut b = m.batches_for("full_open");
+        if b.is_empty() {
+            b.push(1);
+        }
+        Ok(b)
+    }
+
+    /// Spin up a serving engine with `config.workers` independent
+    /// strategy instances.  Each worker thread builds its *own* Stack
+    /// (PJRT client + compiled artifacts + enclave + factor pools): the
+    /// `xla` crate's handles are thread-local by construction.
+    pub fn start_engine(&self, config: &Config) -> Result<ServingEngine> {
+        let sample_bytes = self.sample_bytes(&config.model)?;
+        let batches = self.artifact_batches(&config.model)?;
+        start_engine_from_config(config.clone(), sample_bytes, batches)
+    }
+}
+
+/// Start a serving engine without a pre-built Stack; every worker builds
+/// its own inside its thread.
+pub fn start_engine_from_config(
+    config: Config,
+    sample_bytes: usize,
+    artifact_batches: Vec<usize>,
+) -> Result<ServingEngine> {
+    let workers = config.workers.max(1);
+    let max_batch = config.max_batch;
+    let max_delay = config.max_delay_ms;
+    Ok(ServingEngine::start(
+        workers,
+        max_batch,
+        max_delay,
+        move |_worker| {
+            let stack = Stack::load(&config)?;
+            let strategy = stack.build_strategy(&config)?;
+            Ok(BatchScheduler::new(
+                strategy,
+                sample_bytes,
+                artifact_batches.clone(),
+            ))
+        },
+    ))
+}
+
+/// Encrypt a plaintext image for `session` under the deployment seed —
+/// the client side of the attested channel.
+pub fn encrypt_request(config: &Config, session: u64, image: &[f32]) -> Vec<u8> {
+    crate::enclave::Enclave::encrypt_for_session(
+        &config.seed.to_le_bytes(),
+        session,
+        image,
+    )
+}
+
+/// Deterministic synthetic image batch (structured, not white noise —
+/// gradients + blocks, mirroring python/compile/data.py's spirit).
+pub fn synth_images(n: usize, image: usize, channels: usize, seed: u64) -> Vec<Vec<f32>> {
+    use crate::util::rng::Rng;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut rng = Rng::with_stream(seed, i as u64);
+        let mut img = vec![0f32; image * image * channels];
+        // gradient background
+        let horizontal = rng.below(2) == 0;
+        let c0: Vec<f32> = (0..channels).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let c1: Vec<f32> = (0..channels).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        for y in 0..image {
+            for x in 0..image {
+                let t = if horizontal {
+                    x as f32 / image as f32
+                } else {
+                    y as f32 / image as f32
+                };
+                for c in 0..channels {
+                    img[(y * image + x) * channels + c] = c0[c] * (1.0 - t) + c1[c] * t;
+                }
+            }
+        }
+        // a few random rectangles
+        for _ in 0..(2 + rng.below(3)) {
+            let x0 = rng.below(image as u32 - 2) as usize;
+            let y0 = rng.below(image as u32 - 2) as usize;
+            let w = 2 + rng.below((image / 2) as u32) as usize;
+            let h = 2 + rng.below((image / 2) as u32) as usize;
+            let col: Vec<f32> = (0..channels).map(|_| rng.range_f32(0.0, 1.0)).collect();
+            for y in y0..(y0 + h).min(image) {
+                for x in x0..(x0 + w).min(image) {
+                    for c in 0..channels {
+                        img[(y * image + x) * channels + c] = col[c];
+                    }
+                }
+            }
+        }
+        out.push(img);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_images_structured_and_deterministic() {
+        let a = synth_images(2, 16, 3, 42);
+        let b = synth_images(2, 16, 3, 42);
+        assert_eq!(a, b);
+        assert_eq!(a[0].len(), 16 * 16 * 3);
+        assert!(a[0].iter().all(|v| (0.0..=1.0).contains(v)));
+        // neighboring-pixel smoothness (structure, not noise)
+        let img = &a[0];
+        let mut diff = 0.0f32;
+        for i in 0..(16 * 15 * 3) {
+            diff += (img[i] - img[i + 3 * 16]).abs();
+        }
+        assert!(diff / (16.0 * 15.0 * 3.0) < 0.2);
+    }
+}

@@ -1,0 +1,34 @@
+//! # Origami — privacy-preserving DNN inference (reproduction)
+//!
+//! Rust coordinator (Layer 3) of the three-layer reproduction of
+//! *Privacy-Preserving Inference in Machine Learning Services Using
+//! Trusted Execution Environments* (Narra et al., 2019).
+//!
+//! The crate embeds a PJRT CPU client ([`runtime`]) that executes HLO
+//! artifacts AOT-lowered from the JAX/Pallas layers, a functional+cost
+//! simulator of an Intel-SGX-like enclave ([`enclave`]), the Slalom-style
+//! cryptographic blinding engine ([`blinding`]), the four execution
+//! strategies the paper evaluates ([`strategies`]), the privacy
+//! evaluation tooling ([`privacy`]) and the serving coordinator
+//! ([`coordinator`]: router, dynamic batcher, two-tier scheduler).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! model once; everything here is self-contained afterwards.
+
+pub mod blinding;
+pub mod config;
+pub mod launcher;
+pub mod coordinator;
+pub mod crypto;
+pub mod enclave;
+pub mod harness;
+pub mod model;
+pub mod privacy;
+pub mod runtime;
+pub mod strategies;
+pub mod util;
+
+pub use config::Config;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,274 @@
+//! `origami` — the CLI entry point of the serving coordinator.
+//!
+//! Subcommands:
+//! - `infer`            one private inference; prints probabilities and
+//!                      the per-category cost breakdown.
+//! - `serve`            start the serving engine and drive it with a
+//!                      Poisson open-loop workload; prints latency and
+//!                      throughput percentiles.
+//! - `partition-search` run the paper's Algorithm 1 over the offline
+//!                      privacy table (and the trained c-GAN generators
+//!                      when present).
+//! - `inspect`          show the manifest, config, and memory analytics.
+
+use anyhow::Result;
+use origami::config::Config;
+use origami::enclave::cost::Cat;
+use origami::launcher::{encrypt_request, synth_images, Stack};
+use origami::util::cli::Args;
+use origami::util::stats::{fmt_bytes, fmt_ms};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "infer" => cmd_infer(args),
+        "serve" => cmd_serve(args),
+        "partition-search" => cmd_partition_search(args),
+        "inspect" => cmd_inspect(args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command `{other}`")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "origami — privacy-preserving DNN inference (paper reproduction)\n\n\
+         Usage: origami <command> [options]\n\n\
+         Commands:\n\
+           infer              run one private inference\n\
+           serve              serve a synthetic request stream\n\
+           partition-search   run Algorithm 1 (partition point selection)\n\
+           inspect            show manifest / config / memory analytics\n\n\
+         Common options:\n\
+           --artifacts <dir>  artifacts root [./artifacts]\n\
+           --model <name>     vgg16-32 | vgg19-32 [vgg16-32]\n\
+           --strategy <s>     baseline2|split/N|slalom|origami[/N]|open\n\
+           --device <d>       cpu | gpu [cpu]\n\
+           --partition <p>    Origami partition layer [6]\n\
+           --seed <n>         deployment seed [2019]\n\
+         Serve options:\n\
+           --requests <n>     total requests [64]\n\
+           --rate <rps>       Poisson arrival rate [50]\n\
+           --workers <n>      strategy workers [2]\n\
+           --max-batch <n>    batcher limit [8]\n\
+           --max-delay-ms <f> batcher delay [2.0]"
+    );
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let config = Config::from_args(args)?;
+    let stack = Stack::load(&config)?;
+    let model = stack.model(&config.model)?;
+    let mut strategy = stack.build_strategy(&config)?;
+    println!(
+        "model={} strategy={} device={} enclave={}",
+        config.model,
+        strategy.name(),
+        config.device,
+        fmt_bytes(strategy.enclave_requirement_bytes())
+    );
+
+    let img = &synth_images(1, model.image, model.in_channels, config.seed)[0];
+    let ct = encrypt_request(&config, 0, img);
+    let mut ledger = origami::enclave::cost::Ledger::new();
+    let t = origami::util::stats::Timer::start();
+    let probs = strategy.infer(&ct, 1, &[0], &mut ledger)?;
+    let wall = t.elapsed_ms();
+
+    let top = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, p)| (i, *p))
+        .unwrap_or((0, 0.0));
+    println!(
+        "probs[..{}] top-1: class {} p={:.4}",
+        probs.len(),
+        top.0,
+        top.1
+    );
+    println!(
+        "wall {} | sim {} (measured fraction {:.0}%)",
+        fmt_ms(wall),
+        fmt_ms(ledger.grand_total_ms()),
+        ledger.measured_fraction() * 100.0
+    );
+    println!("breakdown:");
+    for (name, ms) in ledger.breakdown() {
+        println!("  {name:<16} {}", fmt_ms(ms));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let config = Config::from_args(args)?;
+    let requests = args.usize_or("requests", 64)?;
+    let rate = args.f64_or("rate", 50.0)?;
+    let stack = Stack::load(&config)?;
+    let model = stack.model(&config.model)?;
+    println!(
+        "starting engine: model={} strategy={} device={} workers={} \
+         max_batch={} max_delay={}ms",
+        config.model,
+        config.strategy,
+        config.device,
+        config.workers,
+        config.max_batch,
+        config.max_delay_ms
+    );
+    let engine = stack.start_engine(&config)?;
+
+    // Open-loop Poisson workload from a client thread pool.
+    let images = synth_images(requests, model.image, model.in_channels, config.seed);
+    let mut rng = origami::util::rng::Rng::new(config.seed ^ 0xC11E17);
+    let engine = std::sync::Arc::new(engine);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for (i, img) in images.iter().enumerate() {
+        let ct = encrypt_request(&config, i as u64, img);
+        let eng = engine.clone();
+        let model_name = config.model.clone();
+        handles.push(std::thread::spawn(move || {
+            eng.infer_blocking(&model_name, ct, i as u64)
+        }));
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            rng.exp(rate.max(1e-6)),
+        ));
+    }
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for h in handles {
+        match h.join().unwrap() {
+            Ok(resp) if resp.error.is_none() => ok += 1,
+            _ => failed += 1,
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let engine = std::sync::Arc::try_unwrap(engine)
+        .map_err(|_| anyhow::anyhow!("engine still referenced"))?;
+    let metrics = engine.shutdown();
+    println!(
+        "\nserved {ok} ok / {failed} failed in {:.2}s → {:.1} req/s",
+        elapsed,
+        ok as f64 / elapsed
+    );
+    println!(
+        "latency  p50 {} p95 {} p99 {} max {}",
+        fmt_ms(metrics.latency_ms.p50()),
+        fmt_ms(metrics.latency_ms.p95()),
+        fmt_ms(metrics.latency_ms.p99()),
+        fmt_ms(metrics.latency_ms.max())
+    );
+    println!(
+        "batches  {} formed, mean size {:.2}, exec p50 {} | sim p50 {}",
+        metrics.batches,
+        metrics.batch_size.mean(),
+        fmt_ms(metrics.exec_wall_ms.p50()),
+        fmt_ms(metrics.sim_ms.p50())
+    );
+    Ok(())
+}
+
+fn cmd_partition_search(args: &Args) -> Result<()> {
+    let config = Config::from_args(args)?;
+    let threshold = args.f64_or("threshold", 0.2)?;
+    let table = origami::privacy::adversary::PrivacyTable::load(&config.artifacts)?;
+    println!(
+        "privacy table for `{}` ({} layers measured)",
+        table.model,
+        table.layers.len()
+    );
+    for row in &table.layers {
+        let cg = row
+            .ssim_cgan
+            .map(|v| format!(" cgan={v:.3}"))
+            .unwrap_or_default();
+        let gen = if row.generator_artifact.is_some() {
+            "  [generator artifact]"
+        } else {
+            ""
+        };
+        println!(
+            "  layer {:>2} ({:<5}) inversion={:.3}{cg}{gen}",
+            row.layer, row.kind, row.ssim_inversion
+        );
+    }
+    let outcome = origami::privacy::search_partition(&table, threshold)?;
+    for (p, why) in &outcome.rejected {
+        println!("rejected p={p}: {why}");
+    }
+    println!(
+        "\nAlgorithm 1 selects partition p = {} (threshold {threshold})",
+        outcome.partition
+    );
+    println!("→ run: origami infer --strategy origami/{}", outcome.partition);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let config = Config::from_args(args)?;
+    let stack = Stack::load(&config)?;
+    println!("config: {}", config.to_json().to_json_pretty());
+    println!("\nmanifest ({}):", config.artifacts.display());
+    for m in &stack.manifest.models {
+        println!(
+            "  {}: image={} layers={} stages={} params={}",
+            m.name,
+            m.image,
+            m.layers.len(),
+            m.stages.len(),
+            fmt_bytes(m.total_params_bytes())
+        );
+    }
+    // memory analytics (Table I policy) for the configured model
+    use origami::model::partition::PartitionPlan;
+    use origami::strategies::memory::enclave_requirement;
+    let m = stack.manifest.model(&config.model)?;
+    println!("\nenclave memory requirement ({}):", m.name);
+    let plans = vec![
+        PartitionPlan::baseline(m),
+        PartitionPlan::split(m, 6),
+        PartitionPlan::split(m, 8),
+        PartitionPlan::split(m, 10),
+        PartitionPlan::slalom(m),
+        PartitionPlan::origami(m, config.partition),
+    ];
+    for plan in plans {
+        let r = enclave_requirement(m, &plan, config.lazy_dense_bytes, 1);
+        println!(
+            "  {:<12} total {:>10}  (params {} + lazy {} + feat {} + blind {})",
+            plan.name,
+            fmt_bytes(r.total()),
+            fmt_bytes(r.resident_params),
+            fmt_bytes(r.lazy_chunk),
+            fmt_bytes(r.feature_buffers),
+            fmt_bytes(r.blind_buffers),
+        );
+    }
+    let _ = Cat::all(); // keep the breakdown categories linked in docs
+    Ok(())
+}

@@ -1,0 +1,348 @@
+//! Model layer IR — the Rust-side mirror of the manifest's layer list.
+//!
+//! Loaded from `artifacts/manifest.json` (written by `python -m
+//! compile.aot`); gives the coordinator everything it needs for EPC
+//! accounting, partition planning and cost attribution without touching
+//! Python at run time: per-layer kinds, shapes, parameter sizes, FLOPs,
+//! biases (applied in-enclave after unblinding) and the exported stage
+//! artifact catalog.
+
+pub mod partition;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Layer kinds in a VGG-style sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Pool,
+    Flatten,
+    Dense,
+    Softmax,
+}
+
+impl LayerKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "conv" => Self::Conv,
+            "pool" => Self::Pool,
+            "flatten" => Self::Flatten,
+            "dense" => Self::Dense,
+            "softmax" => Self::Softmax,
+            other => bail!("unknown layer kind `{other}`"),
+        })
+    }
+
+    /// Layers with a linear part that can be offloaded/blinded.
+    pub fn is_linear(&self) -> bool {
+        matches!(self, Self::Conv | Self::Dense)
+    }
+}
+
+/// One layer of the model (paper numbering: 1-based, pools counted).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub index: usize,
+    pub kind: LayerKind,
+    pub name: String,
+    /// Per-sample shapes (no batch dim).
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub has_relu: bool,
+    pub flops: u64,
+    pub params_bytes: u64,
+    /// Bias applied in-enclave after unblind+dequantize (empty for
+    /// pool/flatten/softmax).
+    pub bias: Vec<f32>,
+}
+
+impl Layer {
+    pub fn in_elems(&self) -> usize {
+        self.in_shape.iter().product()
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+
+    /// f32 bytes of the output feature map for `batch` samples.
+    pub fn out_bytes(&self, batch: usize) -> u64 {
+        (4 * batch * self.out_elems()) as u64
+    }
+
+    pub fn in_bytes(&self, batch: usize) -> u64 {
+        (4 * batch * self.in_elems()) as u64
+    }
+}
+
+/// One exported stage artifact (an HLO text file + its I/O signature).
+#[derive(Debug, Clone)]
+pub struct StageArtifact {
+    pub stage: String,
+    pub batch: usize,
+    /// Path relative to the artifacts directory.
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shape: Vec<usize>,
+}
+
+/// A model: ordered layers + stage catalog.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub image: usize,
+    pub in_channels: usize,
+    pub layers: Vec<Layer>,
+    pub partitions: Vec<usize>,
+    pub stages: Vec<StageArtifact>,
+}
+
+impl Model {
+    pub fn layer(&self, index: usize) -> Result<&Layer> {
+        self.layers
+            .get(index - 1)
+            .ok_or_else(|| anyhow!("{}: no layer {index}", self.name))
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Indices of layers with offloadable linear parts.
+    pub fn linear_indices(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter(|l| l.kind.is_linear())
+            .map(|l| l.index)
+            .collect()
+    }
+
+    /// Total model parameter bytes (drives EPC pressure for Baseline2).
+    pub fn total_params_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.params_bytes).sum()
+    }
+
+    /// Parameter bytes of layers 1..=p (the enclave-resident tier).
+    pub fn params_bytes_through(&self, p: usize) -> u64 {
+        self.layers
+            .iter()
+            .take(p)
+            .map(|l| l.params_bytes)
+            .sum()
+    }
+
+    /// Total intermediate feature bytes across all layers (the paper's
+    /// "47MB/51MB of intermediates" figure for VGG-16/19 at 224).
+    pub fn total_feature_bytes(&self, batch: usize) -> u64 {
+        self.layers.iter().map(|l| l.out_bytes(batch)).sum()
+    }
+
+    /// Largest single intermediate feature map (sizes the blinding-factor
+    /// buffer — Table I's 12MB for VGG at 224).
+    pub fn max_feature_bytes(&self, batch: usize) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.out_bytes(batch))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Find a stage artifact by name + batch.
+    pub fn stage(&self, stage: &str, batch: usize) -> Result<&StageArtifact> {
+        self.stages
+            .iter()
+            .find(|s| s.stage == stage && s.batch == batch)
+            .ok_or_else(|| {
+                anyhow!(
+                    "{}: stage `{stage}` (batch {batch}) not in manifest — \
+                     re-run `make artifacts`",
+                    self.name
+                )
+            })
+    }
+
+    /// Batch sizes exported for a given stage.
+    pub fn batches_for(&self, stage: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .stages
+            .iter()
+            .filter(|s| s.stage == stage)
+            .map(|s| s.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// The parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: Vec<Model>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Self> {
+        let doc = json::from_file(&root.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", root.display()))?;
+        let mut models = Vec::new();
+        for m in doc.req("models")?.as_arr().unwrap_or(&[]) {
+            models.push(parse_model(m)?);
+        }
+        if models.is_empty() {
+            bail!("manifest has no models — run `make artifacts`");
+        }
+        Ok(Self {
+            root: root.to_path_buf(),
+            models,
+        })
+    }
+
+    /// Default artifacts root: $ORIGAMI_ARTIFACTS or ./artifacts.
+    pub fn default_root() -> PathBuf {
+        std::env::var("ORIGAMI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&Model> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "model `{name}` not in manifest (have: {})",
+                    self.models
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Absolute path of a stage artifact file.
+    pub fn artifact_path(&self, art: &StageArtifact) -> PathBuf {
+        self.root.join(&art.file)
+    }
+}
+
+fn parse_model(v: &Value) -> Result<Model> {
+    let name = v.req("name")?.as_str().unwrap_or_default().to_string();
+    let mut layers = Vec::new();
+    for l in v.req("layers")?.as_arr().unwrap_or(&[]) {
+        let bias = l
+            .get("bias")
+            .map(|b| {
+                b.as_f64_vec()
+                    .map(|fv| fv.into_iter().map(|f| f as f32).collect())
+            })
+            .transpose()?
+            .unwrap_or_default();
+        layers.push(Layer {
+            index: l.req("index")?.as_usize().unwrap_or(0),
+            kind: LayerKind::parse(l.req("kind")?.as_str().unwrap_or(""))?,
+            name: l.req("name")?.as_str().unwrap_or("").to_string(),
+            in_shape: l.req("in_shape")?.as_usize_vec()?,
+            out_shape: l.req("out_shape")?.as_usize_vec()?,
+            has_relu: l.get("has_relu").and_then(|b| b.as_bool()).unwrap_or(false),
+            flops: l.get("flops").and_then(|n| n.as_i64()).unwrap_or(0) as u64,
+            params_bytes: l
+                .get("params_bytes")
+                .and_then(|n| n.as_i64())
+                .unwrap_or(0) as u64,
+            bias,
+        });
+    }
+    let mut stages = Vec::new();
+    for s in v
+        .get("stages")
+        .and_then(|s| s.as_arr())
+        .unwrap_or(&[])
+    {
+        let input_shapes = s
+            .req("inputs")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|i| i.req("shape").and_then(|sh| sh.as_usize_vec()))
+            .collect::<Result<Vec<_>>>()?;
+        stages.push(StageArtifact {
+            stage: s.req("stage")?.as_str().unwrap_or("").to_string(),
+            batch: s.req("batch")?.as_usize().unwrap_or(1),
+            file: s.req("file")?.as_str().unwrap_or("").to_string(),
+            input_shapes,
+            output_shape: s.req("output")?.req("shape")?.as_usize_vec()?,
+        });
+    }
+    Ok(Model {
+        name,
+        image: v.req("image")?.as_usize().unwrap_or(0),
+        in_channels: v.req("in_channels")?.as_usize().unwrap_or(3),
+        layers,
+        partitions: v.req("partitions")?.as_usize_vec()?,
+        stages,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> &'static str {
+        r#"{
+          "format": 1,
+          "models": [{
+            "name": "m", "image": 8, "in_channels": 3,
+            "layers": [
+              {"index": 1, "kind": "conv", "name": "conv1",
+               "in_shape": [8,8,3], "out_shape": [8,8,4], "has_relu": true,
+               "flops": 100, "params_bytes": 448, "bias": [0.1,0.2,0.3,0.4]},
+              {"index": 2, "kind": "pool", "name": "pool2",
+               "in_shape": [8,8,4], "out_shape": [4,4,4], "has_relu": false,
+               "flops": 0, "params_bytes": 0, "bias": []}
+            ],
+            "partitions": [1, 2],
+            "stages": [
+              {"stage": "full_open", "batch": 1, "file": "m/b1/full_open.hlo.txt",
+               "inputs": [{"shape": [1,8,8,3], "dtype": "f32"}],
+               "output": {"shape": [1,10], "dtype": "f32"}}
+            ]
+          }]
+        }"#
+    }
+
+    #[test]
+    fn parses_models_layers_stages() {
+        let doc = json::parse(tiny_manifest_json()).unwrap();
+        let m = parse_model(&doc.req("models").unwrap().as_arr().unwrap()[0]).unwrap();
+        assert_eq!(m.name, "m");
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layer(1).unwrap().kind, LayerKind::Conv);
+        assert_eq!(m.layer(1).unwrap().bias.len(), 4);
+        assert_eq!(m.layer(2).unwrap().kind, LayerKind::Pool);
+        assert_eq!(m.linear_indices(), vec![1]);
+        assert_eq!(m.total_params_bytes(), 448);
+        assert_eq!(m.layer(1).unwrap().out_bytes(2), 2 * 4 * 8 * 8 * 4);
+        assert_eq!(m.stage("full_open", 1).unwrap().output_shape, vec![1, 10]);
+        assert!(m.stage("full_open", 9).is_err());
+    }
+
+    #[test]
+    fn feature_byte_rollups() {
+        let doc = json::parse(tiny_manifest_json()).unwrap();
+        let m = parse_model(&doc.req("models").unwrap().as_arr().unwrap()[0]).unwrap();
+        assert_eq!(m.total_feature_bytes(1), (8 * 8 * 4 + 4 * 4 * 4) * 4);
+        assert_eq!(m.max_feature_bytes(1), 8 * 8 * 4 * 4);
+    }
+
+    #[test]
+    fn kind_parse_rejects_unknown() {
+        assert!(LayerKind::parse("attention").is_err());
+    }
+}

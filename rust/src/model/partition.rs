@@ -1,0 +1,216 @@
+//! Partition plans: how a model is split across trust domains.
+//!
+//! A [`PartitionPlan`] says, for each layer, *where* its linear part runs
+//! and *whether* the offload is blinded — the static description the
+//! strategies instantiate (paper §III):
+//!
+//! - Baseline2:       every layer in-enclave (lazy dense loading).
+//! - Split/x:         layers 1..=x in-enclave, rest offloaded open.
+//! - Slalom/Privacy:  every linear layer offloaded blinded; non-linear
+//!                    in-enclave.
+//! - Origami(p):      tier 1 (1..=p) blinded-offload like Slalom; tier 2
+//!                    offloaded open as one fused artifact.
+
+use super::Model;
+
+/// Where a layer's linear compute executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Inside the enclave on the trusted CPU.
+    Enclave,
+    /// Offloaded to the untrusted device with cryptographic blinding.
+    BlindedOffload,
+    /// Offloaded to the untrusted device in the open.
+    OpenOffload,
+}
+
+/// Per-layer placement decisions plus the tier-2 boundary (if any).
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub name: String,
+    /// placements[i] is layer i+1's placement.
+    pub placements: Vec<Placement>,
+    /// First layer (1-based) of the open tier-2, if the plan has one.
+    pub open_from: Option<usize>,
+}
+
+impl PartitionPlan {
+    /// Baseline2: everything in the enclave.
+    pub fn baseline(model: &Model) -> Self {
+        Self {
+            name: "baseline2".into(),
+            placements: vec![Placement::Enclave; model.num_layers()],
+            open_from: None,
+        }
+    }
+
+    /// Split/x: first x layers in-enclave, rest open on the device.
+    pub fn split(model: &Model, x: usize) -> Self {
+        let placements = (1..=model.num_layers())
+            .map(|i| {
+                if i <= x {
+                    Placement::Enclave
+                } else {
+                    Placement::OpenOffload
+                }
+            })
+            .collect();
+        Self {
+            name: format!("split/{x}"),
+            placements,
+            open_from: Some(x + 1),
+        }
+    }
+
+    /// Slalom/Privacy: all linear layers blinded-offloaded, everything
+    /// else (ReLU/pool/softmax) in the enclave — for every layer.
+    pub fn slalom(model: &Model) -> Self {
+        let placements = model
+            .layers
+            .iter()
+            .map(|l| {
+                if l.kind.is_linear() {
+                    Placement::BlindedOffload
+                } else {
+                    Placement::Enclave
+                }
+            })
+            .collect();
+        Self {
+            name: "slalom".into(),
+            placements,
+            open_from: None,
+        }
+    }
+
+    /// Origami(p): tier 1 (1..=p) Slalom-style, tier 2 open-offloaded.
+    pub fn origami(model: &Model, p: usize) -> Self {
+        let placements = model
+            .layers
+            .iter()
+            .map(|l| {
+                if l.index > p {
+                    Placement::OpenOffload
+                } else if l.kind.is_linear() {
+                    Placement::BlindedOffload
+                } else {
+                    Placement::Enclave
+                }
+            })
+            .collect();
+        Self {
+            name: format!("origami/{p}"),
+            placements,
+            open_from: Some(p + 1),
+        }
+    }
+
+    pub fn placement(&self, layer_index: usize) -> Placement {
+        self.placements[layer_index - 1]
+    }
+
+    /// Layers whose linear part is blinded-offloaded (need unblinding
+    /// factors precomputed).
+    pub fn blinded_layers(&self) -> Vec<usize> {
+        self.placements
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| **p == Placement::BlindedOffload)
+            .map(|(i, _)| i + 1)
+            .collect()
+    }
+
+    /// Enclave-resident parameter bytes under this plan: layers whose
+    /// linear part runs in the enclave keep their parameters inside
+    /// (Split/x, Baseline2); blinded layers keep only biases (weights
+    /// live on the device in quantized/blinded form).
+    pub fn enclave_params_bytes(&self, model: &Model) -> u64 {
+        model
+            .layers
+            .iter()
+            .map(|l| match self.placement(l.index) {
+                Placement::Enclave => l.params_bytes,
+                // bias only (f32 per output channel)
+                Placement::BlindedOffload => {
+                    l.out_shape.last().map(|&c| 4 * c as u64).unwrap_or(0)
+                }
+                Placement::OpenOffload => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Layer, LayerKind};
+
+    fn toy_model() -> Model {
+        let mk = |i: usize, kind: LayerKind, relu: bool, pb: u64| Layer {
+            index: i,
+            kind,
+            name: format!("l{i}"),
+            in_shape: vec![4, 4, 2],
+            out_shape: vec![4, 4, 2],
+            has_relu: relu,
+            flops: 10,
+            params_bytes: pb,
+            bias: vec![0.0; 2],
+        };
+        Model {
+            name: "toy".into(),
+            image: 4,
+            in_channels: 2,
+            layers: vec![
+                mk(1, LayerKind::Conv, true, 100),
+                mk(2, LayerKind::Pool, false, 0),
+                mk(3, LayerKind::Conv, true, 100),
+                mk(4, LayerKind::Dense, false, 200),
+            ],
+            partitions: vec![2],
+            stages: vec![],
+        }
+    }
+
+    #[test]
+    fn baseline_all_enclave() {
+        let m = toy_model();
+        let p = PartitionPlan::baseline(&m);
+        assert!(p.placements.iter().all(|x| *x == Placement::Enclave));
+        assert_eq!(p.enclave_params_bytes(&m), 400);
+        assert!(p.blinded_layers().is_empty());
+    }
+
+    #[test]
+    fn split_divides_at_x() {
+        let m = toy_model();
+        let p = PartitionPlan::split(&m, 2);
+        assert_eq!(p.placement(2), Placement::Enclave);
+        assert_eq!(p.placement(3), Placement::OpenOffload);
+        assert_eq!(p.open_from, Some(3));
+        assert_eq!(p.enclave_params_bytes(&m), 100);
+    }
+
+    #[test]
+    fn slalom_blinds_linear_only() {
+        let m = toy_model();
+        let p = PartitionPlan::slalom(&m);
+        assert_eq!(p.placement(1), Placement::BlindedOffload);
+        assert_eq!(p.placement(2), Placement::Enclave);
+        assert_eq!(p.blinded_layers(), vec![1, 3, 4]);
+        // bias-only residency for blinded layers
+        assert_eq!(p.enclave_params_bytes(&m), 3 * 8);
+    }
+
+    #[test]
+    fn origami_two_tiers() {
+        let m = toy_model();
+        let p = PartitionPlan::origami(&m, 2);
+        assert_eq!(p.placement(1), Placement::BlindedOffload);
+        assert_eq!(p.placement(2), Placement::Enclave);
+        assert_eq!(p.placement(3), Placement::OpenOffload);
+        assert_eq!(p.placement(4), Placement::OpenOffload);
+        assert_eq!(p.blinded_layers(), vec![1]);
+        assert_eq!(p.open_from, Some(3));
+    }
+}

@@ -1,0 +1,159 @@
+//! Rust-side adversary runner: execute a *trained* c-GAN generator
+//! (exported by `python -m compile.privacy_experiment` as an HLO
+//! artifact) against intermediate feature maps, entirely inside the
+//! coordinator — partition search needs no Python at run time.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::PjrtClient;
+use crate::util::json;
+
+/// One per-layer row from `artifacts/privacy/ssim_by_layer.json`.
+#[derive(Debug, Clone)]
+pub struct LayerPrivacy {
+    pub layer: usize,
+    pub kind: String,
+    pub ssim_inversion: f64,
+    pub ssim_cgan: Option<f64>,
+    /// Relative path of the exported generator HLO, if trained.
+    pub generator_artifact: Option<String>,
+    pub generator_input_shape: Option<Vec<usize>>,
+}
+
+/// The offline privacy-experiment results.
+#[derive(Debug, Clone)]
+pub struct PrivacyTable {
+    pub model: String,
+    pub layers: Vec<LayerPrivacy>,
+    root: PathBuf,
+}
+
+impl PrivacyTable {
+    /// Load from `<artifacts>/privacy/ssim_by_layer.json`.
+    pub fn load(artifacts_root: &Path) -> Result<Self> {
+        let path = artifacts_root.join("privacy").join("ssim_by_layer.json");
+        let doc = json::from_file(&path).with_context(|| {
+            format!(
+                "loading {} — run `python -m compile.privacy_experiment` first",
+                path.display()
+            )
+        })?;
+        let mut layers = Vec::new();
+        for row in doc.req("layers")?.as_arr().unwrap_or(&[]) {
+            layers.push(LayerPrivacy {
+                layer: row.req("layer")?.as_usize().unwrap_or(0),
+                kind: row
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                ssim_inversion: row
+                    .req("ssim_inversion")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("bad ssim"))?,
+                ssim_cgan: row.get("ssim_cgan").and_then(|v| v.as_f64()),
+                generator_artifact: row
+                    .get("generator_artifact")
+                    .and_then(|v| v.as_str())
+                    .map(String::from),
+                generator_input_shape: row
+                    .get("generator_input_shape")
+                    .and_then(|v| v.as_usize_vec().ok()),
+            });
+        }
+        anyhow::ensure!(!layers.is_empty(), "privacy table is empty");
+        Ok(Self {
+            model: doc
+                .req("model")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            layers,
+            root: artifacts_root.to_path_buf(),
+        })
+    }
+
+    pub fn row(&self, layer: usize) -> Option<&LayerPrivacy> {
+        self.layers.iter().find(|l| l.layer == layer)
+    }
+
+    /// Strongest observed adversary score at a layer (max of adversaries).
+    pub fn worst_case_ssim(&self, layer: usize) -> Option<f64> {
+        self.row(layer)
+            .map(|r| r.ssim_cgan.map_or(r.ssim_inversion, |c| c.max(r.ssim_inversion)))
+    }
+}
+
+/// A loaded c-GAN generator: feature map → reconstructed image batch.
+pub struct GeneratorRunner {
+    exe: xla::PjRtLoadedExecutable,
+    pub input_shape: Vec<usize>,
+}
+
+impl GeneratorRunner {
+    /// Compile a generator artifact for native reconstruction.
+    pub fn load(client: &PjrtClient, table: &PrivacyTable, layer: usize) -> Result<Self> {
+        let row = table
+            .row(layer)
+            .ok_or_else(|| anyhow!("no privacy row for layer {layer}"))?;
+        let rel = row
+            .generator_artifact
+            .as_ref()
+            .ok_or_else(|| anyhow!("no trained generator for layer {layer}"))?;
+        let shape = row
+            .generator_input_shape
+            .clone()
+            .ok_or_else(|| anyhow!("generator input shape missing"))?;
+        let exe = client.compile_hlo_text(&table.root.join(rel))?;
+        Ok(Self {
+            exe,
+            input_shape: shape,
+        })
+    }
+
+    /// Reconstruct images from feature maps (flattened NHWC f32).
+    pub fn reconstruct(&self, client: &PjrtClient, feats: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            feats.len() == self.input_shape.iter().product::<usize>(),
+            "feature length {} vs generator input {:?}",
+            feats.len(),
+            self.input_shape
+        );
+        client.run_f32(&self.exe, &[(feats, &self.input_shape)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_parses_minimal_doc() {
+        let dir = std::env::temp_dir().join(format!("origami-priv-{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("privacy")).unwrap();
+        std::fs::write(
+            dir.join("privacy/ssim_by_layer.json"),
+            r#"{"model":"m","layers":[
+                {"layer":1,"kind":"conv","ssim_inversion":0.9},
+                {"layer":3,"kind":"pool","ssim_inversion":0.2,"ssim_cgan":0.35}
+            ]}"#,
+        )
+        .unwrap();
+        let t = PrivacyTable::load(&dir).unwrap();
+        assert_eq!(t.model, "m");
+        assert_eq!(t.layers.len(), 2);
+        assert_eq!(t.worst_case_ssim(1), Some(0.9));
+        // worst case takes the max of the adversaries
+        assert_eq!(t.worst_case_ssim(3), Some(0.35));
+        assert!(t.row(9).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_table_is_actionable_error() {
+        let err = PrivacyTable::load(Path::new("/nonexistent-xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("privacy_experiment"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Privacy evaluation: SSIM scoring, the c-GAN adversary runner, and the
+//! paper's Algorithm 1 partition search.
+
+pub mod adversary;
+pub mod partition_search;
+pub mod ssim;
+
+pub use partition_search::{search_partition, SearchOutcome};
+pub use ssim::mean_ssim;

@@ -1,0 +1,162 @@
+//! Algorithm 1 — the paper's model-partitioning search.
+//!
+//! Walk the layers from the front; at each candidate p score the
+//! strongest available adversary's reconstructions (SSIM).  Select the
+//! first p whose SSIM falls below the threshold **and** whose next two
+//! layers also stay below — the paper's guard against the "surprising
+//! observation" that a pool layer can look safe while the following conv
+//! recovers enough spatial structure to reconstruct again (§IV-C).
+
+use anyhow::Result;
+
+use super::adversary::PrivacyTable;
+
+/// Default reconstructability threshold (paper: "stays below 0.2 for all
+/// layers past layer 7").
+pub const DEFAULT_THRESHOLD: f64 = 0.2;
+
+/// Result of the partition search.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// Chosen partition layer p.
+    pub partition: usize,
+    /// Layers that individually passed but failed the look-ahead (the
+    /// pool-then-conv rebound cases).
+    pub rejected: Vec<(usize, String)>,
+    /// (layer, worst-case ssim) trace for reporting.
+    pub trace: Vec<(usize, f64)>,
+}
+
+/// Run Algorithm 1 over an offline privacy table.
+pub fn search_partition(table: &PrivacyTable, threshold: f64) -> Result<SearchOutcome> {
+    let mut trace = Vec::new();
+    let mut rejected = Vec::new();
+    let layers: Vec<usize> = table.layers.iter().map(|l| l.layer).collect();
+    for (i, &p) in layers.iter().enumerate() {
+        let ssim = table
+            .worst_case_ssim(p)
+            .ok_or_else(|| anyhow::anyhow!("missing ssim for layer {p}"))?;
+        trace.push((p, ssim));
+        if ssim >= threshold {
+            continue;
+        }
+        // look-ahead: verify p+1, p+2 (when measured) also stay below
+        let mut ok = true;
+        for &q in layers.iter().skip(i + 1).take(2) {
+            let s = table.worst_case_ssim(q).unwrap_or(0.0);
+            if s >= threshold {
+                rejected.push((
+                    p,
+                    format!("layer {q} rebounds to ssim {s:.3} >= {threshold}"),
+                ));
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            // extend the trace through the look-ahead for reporting
+            for &q in layers.iter().skip(i + 1).take(2) {
+                if let Some(s) = table.worst_case_ssim(q) {
+                    trace.push((q, s));
+                }
+            }
+            return Ok(SearchOutcome {
+                partition: p,
+                rejected,
+                trace,
+            });
+        }
+    }
+    anyhow::bail!(
+        "no partition point found under threshold {threshold} — \
+         adversary reconstructs everywhere measured"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::privacy::adversary::PrivacyTable;
+    use std::path::PathBuf;
+
+    fn table(rows: &[(usize, f64, Option<f64>)]) -> PrivacyTable {
+        let dir = std::env::temp_dir().join(format!(
+            "origami-psearch-{}-{}",
+            std::process::id(),
+            rows.len()
+        ));
+        std::fs::create_dir_all(dir.join("privacy")).unwrap();
+        let body: Vec<String> = rows
+            .iter()
+            .map(|(l, inv, cg)| {
+                let cgan = cg
+                    .map(|c| format!(",\"ssim_cgan\":{c}"))
+                    .unwrap_or_default();
+                format!(
+                    "{{\"layer\":{l},\"kind\":\"conv\",\"ssim_inversion\":{inv}{cgan}}}"
+                )
+            })
+            .collect();
+        std::fs::write(
+            dir.join("privacy/ssim_by_layer.json"),
+            format!("{{\"model\":\"m\",\"layers\":[{}]}}", body.join(",")),
+        )
+        .unwrap();
+        let t = PrivacyTable::load(&dir).unwrap();
+        std::fs::remove_dir_all(PathBuf::from(dir)).ok();
+        t
+    }
+
+    #[test]
+    fn picks_first_stable_layer() {
+        let t = table(&[
+            (1, 0.9, None),
+            (2, 0.7, None),
+            (3, 0.15, None),
+            (4, 0.1, None),
+            (5, 0.08, None),
+        ]);
+        let o = search_partition(&t, 0.2).unwrap();
+        assert_eq!(o.partition, 3);
+        assert!(o.rejected.is_empty());
+    }
+
+    #[test]
+    fn pool_rebound_is_rejected() {
+        // the paper's surprise: layer 3 (pool) looks safe, layer 4 (conv)
+        // reconstructs again → must skip to layer 6
+        let t = table(&[
+            (1, 0.9, None),
+            (2, 0.7, None),
+            (3, 0.15, None),
+            (4, 0.35, None),
+            (5, 0.25, None),
+            (6, 0.1, None),
+            (7, 0.1, None),
+            (8, 0.09, None),
+        ]);
+        let o = search_partition(&t, 0.2).unwrap();
+        assert_eq!(o.partition, 6);
+        assert!(o.rejected.iter().any(|(p, _)| *p == 3));
+    }
+
+    #[test]
+    fn cgan_overrides_weak_inversion() {
+        // inversion says layer 2 is safe but the c-GAN reconstructs it
+        let t = table(&[
+            (1, 0.9, None),
+            (2, 0.1, Some(0.5)),
+            (3, 0.1, Some(0.12)),
+            (4, 0.08, None),
+            (5, 0.07, None),
+        ]);
+        let o = search_partition(&t, 0.2).unwrap();
+        assert_eq!(o.partition, 3);
+    }
+
+    #[test]
+    fn fails_when_everything_reconstructs() {
+        let t = table(&[(1, 0.9, None), (2, 0.8, None)]);
+        assert!(search_partition(&t, 0.2).is_err());
+    }
+}

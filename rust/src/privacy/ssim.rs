@@ -1,0 +1,119 @@
+//! SSIM (structural similarity) in Rust — the Fig 8 metric, matching the
+//! windowed-statistics definition of `python/compile/kernels/ssim.py`
+//! (non-overlapping 8x8 windows, K1=0.01, K2=0.03, dynamic range 1).
+
+const C1: f32 = 0.01 * 0.01;
+const C2: f32 = 0.03 * 0.03;
+
+/// Mean SSIM between two NHWC image batches in [0,1].
+pub fn mean_ssim(x: &[f32], y: &[f32], n: usize, h: usize, w: usize, c: usize) -> f32 {
+    mean_ssim_win(x, y, n, h, w, c, 8)
+}
+
+/// Mean SSIM with an explicit window size.
+pub fn mean_ssim_win(
+    x: &[f32],
+    y: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    win: usize,
+) -> f32 {
+    assert_eq!(x.len(), n * h * w * c, "x shape mismatch");
+    assert_eq!(y.len(), x.len(), "y shape mismatch");
+    assert!(h % win == 0 && w % win == 0, "spatial dims not divisible");
+    let gh = h / win;
+    let gw = w / win;
+    let mut total = 0.0f64;
+    let mut count = 0u64;
+    let area = (win * win) as f32;
+    for b in 0..n {
+        for wy in 0..gh {
+            for wx in 0..gw {
+                for ch in 0..c {
+                    let (mut sx, mut sy, mut sxx, mut syy, mut sxy) =
+                        (0.0f32, 0.0, 0.0, 0.0, 0.0);
+                    for dy in 0..win {
+                        for dx in 0..win {
+                            let yy = wy * win + dy;
+                            let xx = wx * win + dx;
+                            let idx = ((b * h + yy) * w + xx) * c + ch;
+                            let (a, bb) = (x[idx], y[idx]);
+                            sx += a;
+                            sy += bb;
+                            sxx += a * a;
+                            syy += bb * bb;
+                            sxy += a * bb;
+                        }
+                    }
+                    let mx = sx / area;
+                    let my = sy / area;
+                    let vx = sxx / area - mx * mx;
+                    let vy = syy / area - my * my;
+                    let cov = sxy / area - mx * my;
+                    let lum = (2.0 * mx * my + C1) / (mx * mx + my * my + C1);
+                    let s = (2.0 * cov + C2) / (vx + vy + C2);
+                    total += (lum * s) as f64;
+                    count += 1;
+                }
+            }
+        }
+    }
+    (total / count as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_images_score_one() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..2 * 16 * 16 * 3).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let s = mean_ssim(&x, &x, 2, 16, 16, 3);
+        assert!((s - 1.0).abs() < 1e-5, "{s}");
+    }
+
+    #[test]
+    fn independent_noise_scores_low() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let y: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let s = mean_ssim(&x, &y, 1, 32, 32, 3);
+        assert!(s < 0.3, "{s}");
+    }
+
+    #[test]
+    fn monotone_in_noise() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..32 * 32).map(|i| (i / 32) as f32 / 32.0).collect();
+        let mk = |sigma: f32, rng: &mut Rng| -> Vec<f32> {
+            x.iter()
+                .map(|v| (v + sigma * rng.normal() as f32).clamp(0.0, 1.0))
+                .collect()
+        };
+        let near = mk(0.02, &mut rng);
+        let far = mk(0.5, &mut rng);
+        let s_near = mean_ssim(&x, &near, 1, 32, 32, 1);
+        let s_far = mean_ssim(&x, &far, 1, 32, 32, 1);
+        assert!(s_near > s_far, "{s_near} vs {s_far}");
+    }
+
+    #[test]
+    fn symmetry() {
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..16 * 16).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let y: Vec<f32> = (0..16 * 16).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let a = mean_ssim(&x, &y, 1, 16, 16, 1);
+        let b = mean_ssim(&y, &x, 1, 16, 16, 1);
+        assert!((a - b).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_checked() {
+        mean_ssim(&[0.0; 10], &[0.0; 10], 1, 8, 8, 1);
+    }
+}

@@ -1,0 +1,68 @@
+//! PJRT CPU client wrapper.
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A process-wide PJRT CPU client.
+pub struct PjrtClient {
+    inner: xla::PjRtClient,
+}
+
+impl PjrtClient {
+    /// Create the CPU client (one per process is plenty).
+    pub fn cpu() -> Result<Self> {
+        let inner = xla::PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        Ok(Self { inner })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    /// Load an HLO-text file and compile it to a loaded executable.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.inner
+            .compile(&comp)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Execute with f32 tensor inputs; returns the flat f32 output of the
+    /// (single-element-tuple-rooted) result.
+    pub fn run_f32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(anyhow::Error::msg)
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(anyhow::Error::msg)?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(anyhow::Error::msg)?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = lit.to_tuple1().map_err(anyhow::Error::msg)?;
+        out.to_vec::<f32>().map_err(anyhow::Error::msg)
+    }
+}

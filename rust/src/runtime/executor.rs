@@ -1,0 +1,156 @@
+//! Stage executor: typed tensor execution with device cost attribution.
+//!
+//! One [`StageExecutor`] per process wraps the artifact registry and
+//! provides `run(model, stage, batch, inputs, device, ledger)`:
+//! PJRT-execute the compiled stage, measure wall time, and let the
+//! [`Device`] profile decide how that time enters the simulated ledger.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::artifact::ArtifactRegistry;
+use super::device::Device;
+use crate::enclave::cost::{CostModel, Ledger};
+use crate::util::stats::Timer;
+
+/// Coarse operation class of a stage (drives the GPU scaling factor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Conv,
+    Dense,
+    /// Fused multi-layer stages (tails, full model).
+    Mixed,
+}
+
+impl OpClass {
+    /// Infer from the stage naming convention of `python/compile/model.py`.
+    pub fn of_stage(model_layers: &crate::model::Model, stage: &str) -> OpClass {
+        if let Some(idx) = stage
+            .strip_prefix("layer")
+            .and_then(|s| s.get(..2))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            if let Ok(l) = model_layers.layer(idx) {
+                return match l.kind {
+                    crate::model::LayerKind::Dense => OpClass::Dense,
+                    _ => OpClass::Conv,
+                };
+            }
+        }
+        OpClass::Mixed
+    }
+}
+
+/// The result of one stage execution.
+pub struct StageOutput {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+    /// Nanoseconds charged to the simulated timeline.
+    pub sim_ns: u64,
+    /// Real wall nanoseconds spent on this machine.
+    pub wall_ns: u64,
+}
+
+/// Executes stages through the registry on a given device profile.
+pub struct StageExecutor {
+    registry: Arc<ArtifactRegistry>,
+    pub cost: CostModel,
+}
+
+impl StageExecutor {
+    pub fn new(registry: Arc<ArtifactRegistry>, cost: CostModel) -> Self {
+        Self { registry, cost }
+    }
+
+    pub fn registry(&self) -> &Arc<ArtifactRegistry> {
+        &self.registry
+    }
+
+    /// Execute `stage` of `model` with `inputs` on `device`, attributing
+    /// cost to `ledger`.
+    pub fn run(
+        &self,
+        model: &str,
+        stage: &str,
+        batch: usize,
+        inputs: &[&[f32]],
+        device: Device,
+        ledger: &mut Ledger,
+    ) -> Result<StageOutput> {
+        let meta = self.registry.stage_meta(model, stage, batch)?;
+        anyhow::ensure!(
+            inputs.len() == meta.input_shapes.len(),
+            "stage {stage}: {} inputs given, {} expected",
+            inputs.len(),
+            meta.input_shapes.len()
+        );
+        for (i, (data, shape)) in inputs.iter().zip(&meta.input_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            anyhow::ensure!(
+                data.len() == want,
+                "stage {stage} input {i}: {} elems given, shape {:?} wants {want}",
+                data.len(),
+                shape
+            );
+        }
+        let exe = self.registry.get(model, stage, batch)?;
+        let shaped: Vec<(&[f32], &[usize])> = inputs
+            .iter()
+            .zip(&meta.input_shapes)
+            .map(|(d, s)| (*d, s.as_slice()))
+            .collect();
+        let t = Timer::start();
+        let data = self.registry.client().run_f32(&exe, &shaped)?;
+        let wall_ns = t.elapsed().as_nanos() as u64;
+
+        let model_meta = self.registry.manifest().model(model)?;
+        let class = OpClass::of_stage(model_meta, stage);
+        let bytes_moved: u64 = inputs.iter().map(|d| 4 * d.len() as u64).sum::<u64>()
+            + 4 * data.len() as u64;
+        let sim_ns = device.account(wall_ns, bytes_moved, class, &self.cost, ledger);
+        Ok(StageOutput {
+            data,
+            shape: meta.output_shape.clone(),
+            sim_ns,
+            wall_ns,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Layer, LayerKind, Model};
+
+    fn model_with(kind: LayerKind) -> Model {
+        Model {
+            name: "m".into(),
+            image: 8,
+            in_channels: 3,
+            layers: vec![Layer {
+                index: 1,
+                kind,
+                name: "l".into(),
+                in_shape: vec![4],
+                out_shape: vec![4],
+                has_relu: false,
+                flops: 0,
+                params_bytes: 0,
+                bias: vec![],
+            }],
+            partitions: vec![],
+            stages: vec![],
+        }
+    }
+
+    #[test]
+    fn opclass_from_stage_names() {
+        let dense = model_with(LayerKind::Dense);
+        assert_eq!(OpClass::of_stage(&dense, "layer01_lin_blind"), OpClass::Dense);
+        let conv = model_with(LayerKind::Conv);
+        assert_eq!(OpClass::of_stage(&conv, "layer01_lin_open"), OpClass::Conv);
+        assert_eq!(OpClass::of_stage(&conv, "tail_p06"), OpClass::Mixed);
+        assert_eq!(OpClass::of_stage(&conv, "full_open"), OpClass::Mixed);
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts, compile once, execute on
+//! the request path.
+//!
+//! - [`client`]   — thin wrapper over the `xla` crate's PJRT CPU client.
+//! - [`artifact`] — manifest-driven registry; compiles each stage once
+//!                  per process and caches the loaded executable.
+//! - [`executor`] — typed f32-tensor execute (literals in/out) with cost
+//!                  attribution to a [`Ledger`](crate::enclave::Ledger).
+//! - [`device`]   — device profiles: trusted CPU / untrusted CPU run the
+//!                  artifacts for real (measured); the GPU profile scales
+//!                  the measured CPU time by calibrated per-op-class
+//!                  speedups (modeled — DESIGN.md §2).
+
+pub mod artifact;
+pub mod client;
+pub mod device;
+pub mod executor;
+
+pub use artifact::ArtifactRegistry;
+pub use client::PjrtClient;
+pub use device::Device;
+pub use executor::StageExecutor;

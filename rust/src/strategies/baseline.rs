@@ -1,0 +1,96 @@
+//! Baseline2: the whole model inside the enclave, with lazy on-demand
+//! loading of large dense layers (the paper's primary baseline; §VI-C:
+//! "performs lazy loading of model parameters into SGX when loading
+//! fully connected layers that require more than 8MB memory").
+
+use anyhow::Result;
+
+use super::ctx::StrategyCtx;
+use super::memory::enclave_requirement;
+use super::Strategy;
+use crate::enclave::cost::Ledger;
+use crate::enclave::power::power_cycle;
+use crate::model::partition::PartitionPlan;
+use crate::model::LayerKind;
+
+/// Full-enclave execution with lazy dense loading.
+pub struct Baseline2 {
+    ctx: StrategyCtx,
+    requirement: u64,
+}
+
+impl Baseline2 {
+    pub fn new(ctx: StrategyCtx) -> Self {
+        Self {
+            ctx,
+            requirement: 0,
+        }
+    }
+}
+
+impl Strategy for Baseline2 {
+    fn name(&self) -> String {
+        "baseline2".into()
+    }
+
+    fn setup(&mut self) -> Result<()> {
+        let model = self.ctx.model.clone();
+        let plan = PartitionPlan::baseline(&model);
+        let req = enclave_requirement(&model, &plan, self.ctx.config.lazy_dense_bytes, 1);
+        self.requirement = req.total();
+        self.ctx.with_enclave(self.requirement)?;
+        // Pre-load everything except lazy dense layers.
+        let mut setup_ledger = Ledger::new();
+        for idx in model.linear_indices() {
+            let layer = model.layer(idx)?;
+            let lazy = layer.kind == LayerKind::Dense
+                && layer.params_bytes >= self.ctx.config.lazy_dense_bytes;
+            if !lazy {
+                self.ctx.load_params_resident(idx, &mut setup_ledger)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn infer(
+        &mut self,
+        ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        let x = self.ctx.decrypt_request(sessions, batch, ciphertext, ledger)?;
+        let n = self.ctx.model.num_layers();
+        self.ctx.enclave_walk(1, n, x, batch, ledger)
+    }
+
+    fn enclave_requirement_bytes(&self) -> u64 {
+        self.requirement
+    }
+
+    fn power_cycle(&mut self) -> Result<f64> {
+        let model = self.ctx.model.clone();
+        let lazy_bound = self.ctx.config.lazy_dense_bytes;
+        // Rebuild the enclave, then re-establish parameter residency: the
+        // reload is proportional to the preloaded (non-lazy) params —
+        // exactly why Baseline2 recovers slowest (Table II).
+        let mut ledger = Ledger::new();
+        self.ctx.resident_params.clear();
+        let enclave = self.ctx.enclave_mut()?;
+        enclave.power_event();
+        let rebuild_ms = {
+            let report = power_cycle(enclave, &[], &mut ledger);
+            report.rebuild_ms
+        };
+        let t = crate::util::stats::Timer::start();
+        for idx in model.linear_indices() {
+            let layer = model.layer(idx)?;
+            let lazy =
+                layer.kind == LayerKind::Dense && layer.params_bytes >= lazy_bound;
+            if !lazy {
+                self.ctx.load_params_resident(idx, &mut ledger)?;
+            }
+        }
+        Ok(rebuild_ms + t.elapsed_ms())
+    }
+}

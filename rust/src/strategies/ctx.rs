@@ -1,0 +1,380 @@
+//! Shared strategy context: executor + model + enclave + blinding state,
+//! and the layer-walk helpers every strategy composes.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::blinding::{self, FactorStream, UnblindStore};
+use crate::config::Config;
+use crate::enclave::cost::{Cat, CostModel, Ledger};
+use crate::enclave::epc::AllocId;
+use crate::enclave::Enclave;
+use crate::model::{LayerKind, Model};
+use crate::runtime::{Device, StageExecutor};
+use crate::util::stats::Timer;
+
+/// Everything a strategy needs to run one model privately.
+pub struct StrategyCtx {
+    pub executor: Arc<StageExecutor>,
+    pub model: Arc<Model>,
+    pub device: Device,
+    pub config: Config,
+    /// The simulated enclave (None for the open strategy).
+    pub enclave: Option<Enclave>,
+    pub factors: Option<FactorStream>,
+    pub unblind: Option<UnblindStore>,
+    /// Param-blob residency handles (EPC accounting), by layer index.
+    pub(crate) resident_params: Vec<(usize, AllocId)>,
+    /// Enclave-internal blinding-epoch counter (one per inference).
+    epoch_ctr: u64,
+}
+
+impl StrategyCtx {
+    /// Assemble a context from config (enclave geometry decided by the
+    /// strategy via `with_enclave`).
+    pub fn new(executor: Arc<StageExecutor>, model: Arc<Model>, config: Config) -> Result<Self> {
+        let device = Device::parse(&config.device)?;
+        Ok(Self {
+            executor,
+            model,
+            device,
+            config,
+            enclave: None,
+            factors: None,
+            unblind: None,
+            resident_params: Vec::new(),
+            epoch_ctr: 0,
+        })
+    }
+
+    /// Build the enclave with `declared_bytes` and wire the blinding
+    /// subsystems off its key material.
+    pub fn with_enclave(&mut self, declared_bytes: u64) -> Result<()> {
+        let seed = self.config.seed.to_le_bytes();
+        let enclave = Enclave::create(
+            declared_bytes,
+            self.config.usable_epc_bytes(),
+            &seed,
+            self.executor.cost.clone(),
+        );
+        let key = enclave.derive_key("blinding-stream")?;
+        let measurement = crate::crypto::sha256(&[&seed[..], self.model.name.as_bytes()].concat());
+        self.factors = Some(FactorStream::new(key));
+        self.unblind = Some(UnblindStore::new(
+            &seed,
+            measurement,
+            self.config.pool_epochs,
+            self.config.allow_factor_reuse,
+        ));
+        self.enclave = Some(enclave);
+        Ok(())
+    }
+
+    pub fn enclave_mut(&mut self) -> Result<&mut Enclave> {
+        self.enclave
+            .as_mut()
+            .ok_or_else(|| anyhow!("strategy has no enclave"))
+    }
+
+    /// Stage-name helpers (naming convention of python/compile/model.py).
+    pub fn lin_open(idx: usize) -> String {
+        format!("layer{idx:02}_lin_open")
+    }
+
+    pub fn lin_blind(idx: usize) -> String {
+        format!("layer{idx:02}_lin_blind")
+    }
+
+    pub fn tail(p: usize) -> String {
+        format!("tail_p{p:02}")
+    }
+
+    /// Declare layer parameters enclave-resident: allocates + writes a
+    /// blob of the layer's `params_bytes` through the EPC (residency and
+    /// paging accounting; values live in the AOT artifacts).
+    pub fn load_params_resident(&mut self, idx: usize, ledger: &mut Ledger) -> Result<()> {
+        let bytes = self.model.layer(idx)?.params_bytes as usize;
+        if bytes == 0 {
+            return Ok(());
+        }
+        let enclave = self.enclave_mut()?;
+        let id = enclave.alloc_bytes(bytes, ledger)?;
+        enclave.write_bytes(id, &vec![0u8; bytes], ledger)?;
+        self.resident_params.push((idx, id));
+        Ok(())
+    }
+
+    /// Lazy-load params for one inference step and free them after
+    /// (Baseline2's ≥8 MB dense policy). Returns measured load ns.
+    pub fn with_lazy_params<R>(
+        &mut self,
+        idx: usize,
+        ledger: &mut Ledger,
+        f: impl FnOnce(&mut Self, &mut Ledger) -> Result<R>,
+    ) -> Result<R> {
+        let bytes = self.model.layer(idx)?.params_bytes as usize;
+        let enclave = self.enclave_mut()?;
+        let t = Timer::start();
+        let id = enclave.alloc_bytes(bytes.max(1), ledger)?;
+        enclave.write_bytes(id, &vec![0u8; bytes.max(1)], ledger)?;
+        ledger.add_measured(Cat::DataMove, t.elapsed().as_nanos() as u64 / 2);
+        let out = f(self, ledger);
+        self.enclave_mut()?.free_bytes(id)?;
+        out
+    }
+
+    // ----------------------------------------------------------------------
+    // Layer walks
+    // ----------------------------------------------------------------------
+
+    /// Execute layers [from..=to] entirely inside the enclave: linear
+    /// parts as TrustedCpu artifacts, non-linear natively, with the
+    /// feature map resident in the EPC between layers.
+    pub fn enclave_walk(
+        &mut self,
+        from: usize,
+        to: usize,
+        mut x: Vec<f32>,
+        batch: usize,
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        let model = self.model.clone();
+        for idx in from..=to {
+            let layer = model.layer(idx)?.clone();
+            match layer.kind {
+                LayerKind::Conv | LayerKind::Dense => {
+                    let lazy = layer.params_bytes >= self.config.lazy_dense_bytes
+                        && layer.kind == LayerKind::Dense;
+                    // compute reads its weights through the EPC: fault
+                    // evicted param pages back in (real decryption)
+                    if let Some(&(_, id)) = self
+                        .resident_params
+                        .iter()
+                        .find(|(i, _)| *i == idx)
+                    {
+                        let bytes = layer.params_bytes as usize;
+                        self.enclave_mut()?.touch_bytes(id, bytes, ledger)?;
+                    }
+                    let stage = Self::lin_open(idx);
+                    let run = |ctx: &mut Self, ledger: &mut Ledger| {
+                        let out = ctx.executor.run(
+                            &model.name,
+                            &stage,
+                            batch,
+                            &[&x],
+                            Device::TrustedCpu,
+                            ledger,
+                        )?;
+                        Ok(out.data)
+                    };
+                    let mut y = if lazy {
+                        self.with_lazy_params(idx, ledger, run)?
+                    } else {
+                        run(self, ledger)?
+                    };
+                    if layer.has_relu {
+                        self.enclave_mut()?.relu(&mut y, ledger);
+                    }
+                    x = y;
+                    // feature map stays enclave-resident between layers
+                    self.touch_feature(idx, &x, ledger)?;
+                }
+                LayerKind::Pool => {
+                    let (h, w, c) = spatial(&layer.in_shape)?;
+                    x = self
+                        .enclave_mut()?
+                        .maxpool2x2(&x, batch, h, w, c, ledger);
+                }
+                LayerKind::Flatten => { /* layout no-op */ }
+                LayerKind::Softmax => {
+                    let classes = *layer.out_shape.last().unwrap_or(&1);
+                    self.enclave_mut()?.softmax(&mut x, classes, ledger);
+                }
+            }
+        }
+        Ok(x)
+    }
+
+    /// Execute layers [from..=to] Slalom-style: each linear layer's input
+    /// is quantize+blinded in the enclave, offloaded to the untrusted
+    /// device in the mod-2^24 domain, unblinded with the precomputed
+    /// factors, bias-added; non-linear ops run natively in the enclave.
+    pub fn blinded_walk(
+        &mut self,
+        from: usize,
+        to: usize,
+        mut x: Vec<f32>,
+        batch: usize,
+        epoch: u64,
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        let model = self.model.clone();
+        let device = self.device;
+        for idx in from..=to {
+            let layer = model.layer(idx)?.clone();
+            match layer.kind {
+                LayerKind::Conv | LayerKind::Dense => {
+                    let n = batch * layer.in_elems();
+                    let epoch = self
+                        .unblind
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("no unblind store"))?
+                        .resolve_epoch(epoch)?;
+                    // 1. blind inside the enclave
+                    let r = self
+                        .factors
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("no factor stream"))?
+                        .factors(idx, epoch, n);
+                    let mut blinded = vec![0f32; n];
+                    blinding::quantize_blind(&x, &r, &mut blinded, ledger);
+                    // 2. offload the linear op (OCALL out, OCALL back)
+                    self.enclave_mut()?.round_trip(ledger);
+                    let out = self.executor.run(
+                        &model.name,
+                        &Self::lin_blind(idx),
+                        batch,
+                        &[&blinded],
+                        device,
+                        ledger,
+                    )?;
+                    // 3. fetch this layer's unblinding factors (sealed,
+                    //    outside the EPC) and decode
+                    let t = Timer::start();
+                    let ru = self
+                        .unblind
+                        .as_ref()
+                        .unwrap()
+                        .fetch(idx, epoch, out.data.len())?;
+                    ledger.add_measured(Cat::DataMove, t.elapsed().as_nanos() as u64);
+                    let mut y = vec![0f32; out.data.len()];
+                    blinding::unblind_dequantize(&out.data, &ru, &mut y, ledger);
+                    // 4. bias + ReLU in the enclave
+                    self.enclave_mut()?.bias_add(&mut y, &layer.bias, ledger);
+                    if layer.has_relu {
+                        self.enclave_mut()?.relu(&mut y, ledger);
+                    }
+                    debug_assert!(
+                        y.iter().all(|v| v.abs() < blinding::quant::DECODE_RANGE),
+                        "decodability range violated at layer {idx}"
+                    );
+                    x = y;
+                }
+                LayerKind::Pool => {
+                    let (h, w, c) = spatial(&layer.in_shape)?;
+                    x = self
+                        .enclave_mut()?
+                        .maxpool2x2(&x, batch, h, w, c, ledger);
+                }
+                LayerKind::Flatten => {}
+                LayerKind::Softmax => {
+                    let classes = *layer.out_shape.last().unwrap_or(&1);
+                    self.enclave_mut()?.softmax(&mut x, classes, ledger);
+                }
+            }
+        }
+        Ok(x)
+    }
+
+    /// Offload layers [p+1..] as one open tail artifact on the device.
+    pub fn tail_offload(
+        &mut self,
+        p: usize,
+        feat: &[f32],
+        batch: usize,
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        if let Some(enclave) = self.enclave.as_mut() {
+            enclave.round_trip(ledger);
+        }
+        let out = self.executor.run(
+            &self.model.name,
+            &Self::tail(p),
+            batch,
+            &[feat],
+            self.device,
+            ledger,
+        )?;
+        Ok(out.data)
+    }
+
+    /// Precompute + seal the unblinding factors for the given layers and
+    /// epochs: R = lin_blind(r) run on the device (setup phase).
+    pub fn precompute_unblind_factors(
+        &mut self,
+        layers: &[usize],
+        epochs: u64,
+        batch: usize,
+    ) -> Result<()> {
+        let model = self.model.clone();
+        let mut scratch = Ledger::new(); // setup cost, not inference
+        for &idx in layers {
+            let layer = model.layer(idx)?;
+            let n = batch * layer.in_elems();
+            for epoch in 0..epochs {
+                let r_f32 = self
+                    .factors
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("no factor stream"))?
+                    .factors_f32(idx, epoch, n);
+                let out = self.executor.run(
+                    &model.name,
+                    &Self::lin_blind(idx),
+                    batch,
+                    &[&r_f32],
+                    self.device,
+                    &mut scratch,
+                )?;
+                self.unblind
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("no unblind store"))?
+                    .put(idx, epoch, &out.data)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decrypt a client request batch inside the enclave (per-sample
+    /// session keystreams — see [`Enclave::decrypt_batch`]).
+    pub fn decrypt_request(
+        &mut self,
+        sessions: &[u64],
+        batch: usize,
+        ciphertext: &[u8],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        self.enclave_mut()?.transition(ledger); // ECALL in
+        self.enclave_mut()?.decrypt_batch(sessions, batch, ciphertext, ledger)
+    }
+
+    /// Next enclave-internal blinding epoch (monotone per inference).
+    pub fn next_epoch(&mut self) -> u64 {
+        let e = self.epoch_ctr;
+        self.epoch_ctr += 1;
+        e
+    }
+
+    /// Keep the working feature map resident in the EPC (write-through;
+    /// drives Baseline2's data-movement share, Fig 11).
+    fn touch_feature(&mut self, idx: usize, x: &[f32], ledger: &mut Ledger) -> Result<()> {
+        let name = format!("feat-{idx}");
+        let enclave = self.enclave_mut()?;
+        enclave.put_tensor(&name, x, ledger)?;
+        enclave.drop_tensor(&name)?;
+        Ok(())
+    }
+
+    /// Cost model passthrough.
+    pub fn cost(&self) -> &CostModel {
+        &self.executor.cost
+    }
+}
+
+/// (H, W, C) of an NHWC per-sample shape.
+pub fn spatial(shape: &[usize]) -> Result<(usize, usize, usize)> {
+    match shape {
+        [h, w, c] => Ok((*h, *w, *c)),
+        other => Err(anyhow!("expected HWC shape, got {other:?}")),
+    }
+}

@@ -1,0 +1,89 @@
+//! Execution strategies — the four systems the paper evaluates, plus the
+//! non-private reference.
+//!
+//! | Strategy           | Linear layers            | Non-linear | Tail |
+//! |--------------------|--------------------------|------------|------|
+//! | [`baseline`] (Baseline2) | enclave (lazy dense) | enclave    | —    |
+//! | [`split`] (Split/x)      | enclave through x    | enclave    | open offload |
+//! | [`slalom`] (Slalom/Privacy) | blinded offload, every layer | enclave | — |
+//! | [`origami`] (Origami/p)  | blinded offload through p | enclave | open offload |
+//! | [`open`] (no privacy)    | device, whole model  | device     | —    |
+//!
+//! All strategies implement [`Strategy`]: `setup()` (model/params/factor
+//! precompute — explicitly *not* inference time, matching the paper) and
+//! `infer()` (the timed request path, returning class probabilities and
+//! a cost [`Ledger`]).
+
+pub mod baseline;
+pub mod ctx;
+pub mod memory;
+pub mod open;
+pub mod origami;
+pub mod slalom;
+pub mod split;
+
+use anyhow::Result;
+
+use crate::enclave::cost::Ledger;
+pub use ctx::StrategyCtx;
+
+/// A private-inference execution strategy.
+///
+/// NOT `Send`: strategies hold PJRT handles (the `xla` crate's client and
+/// executables are `Rc`-backed), so each serving worker constructs its
+/// own strategy inside its thread via [`ServingEngine::start`]'s factory.
+///
+/// [`ServingEngine::start`]: crate::coordinator::ServingEngine::start
+pub trait Strategy {
+    /// Human-readable name (matches the paper's figure labels).
+    fn name(&self) -> String;
+
+    /// One-time setup: enclave build, parameter residency, unblinding-
+    /// factor precompute, artifact warmup. Not counted as inference time.
+    fn setup(&mut self) -> Result<()>;
+
+    /// Run one encrypted inference request of `batch` images.
+    ///
+    /// `ciphertext` concatenates `batch` independently encrypted samples;
+    /// `sessions[i]` is the attested session of sample i (padding slots
+    /// may be absent and decrypt under session 0).  Blinding-factor
+    /// epochs are enclave-internal (a monotone counter), NOT client
+    /// sessions — clients must not be able to pick the pad.  Returns
+    /// class probabilities (batch × classes flattened).
+    fn infer(
+        &mut self,
+        ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>>;
+
+    /// Enclave memory the strategy declares (Table I).
+    fn enclave_requirement_bytes(&self) -> u64;
+
+    /// Simulate a power event + recovery; returns total recovery ms
+    /// (Table II). Default: strategies without an enclave return 0.
+    fn power_cycle(&mut self) -> Result<f64> {
+        Ok(0.0)
+    }
+}
+
+/// Instantiate a strategy by config name.
+pub fn build(ctx: StrategyCtx, strategy: &str, partition: usize) -> Result<Box<dyn Strategy>> {
+    let s = strategy.to_ascii_lowercase();
+    if let Some(x) = s.strip_prefix("split/") {
+        return Ok(Box::new(split::Split::new(ctx, x.parse()?)));
+    }
+    if let Some(p) = s.strip_prefix("origami/") {
+        return Ok(Box::new(origami::Origami::new(ctx, p.parse()?)));
+    }
+    Ok(match s.as_str() {
+        "baseline2" | "baseline" => Box::new(baseline::Baseline2::new(ctx)),
+        "slalom" => Box::new(slalom::Slalom::new(ctx)),
+        "origami" => Box::new(origami::Origami::new(ctx, partition)),
+        "open" | "none" => Box::new(open::OpenInference::new(ctx)),
+        other => anyhow::bail!(
+            "unknown strategy `{other}` (baseline2|split/N|slalom|origami[/N]|open)"
+        ),
+    })
+}

@@ -1,0 +1,78 @@
+//! Non-private reference: the whole model on the untrusted device, no
+//! enclave, no blinding — the "fast hardware without any privacy
+//! guarantees" baseline of Figs 12/13.
+
+use anyhow::Result;
+
+use super::ctx::StrategyCtx;
+use super::Strategy;
+use crate::enclave::cost::Ledger;
+
+/// Plain full-model inference on the configured device.
+pub struct OpenInference {
+    ctx: StrategyCtx,
+}
+
+impl OpenInference {
+    pub fn new(ctx: StrategyCtx) -> Self {
+        Self { ctx }
+    }
+}
+
+impl Strategy for OpenInference {
+    fn name(&self) -> String {
+        format!("open/{}", self.ctx.device.name())
+    }
+
+    fn setup(&mut self) -> Result<()> {
+        // warm the full-model artifact
+        self.ctx
+            .executor
+            .registry()
+            .warm(&self.ctx.model.name, &[("full_open", 1)])?;
+        Ok(())
+    }
+
+    fn infer(
+        &mut self,
+        ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        // No enclave: the "ciphertext" is decoded outside any trust
+        // boundary (the client's data is exposed — that is the point of
+        // this baseline). Same per-sample session keystreams as the
+        // enclave path so callers can reuse one encryption helper.
+        anyhow::ensure!(batch > 0 && ciphertext.len() % batch == 0, "bad batch");
+        let sample_bytes = ciphertext.len() / batch;
+        let mut x = Vec::with_capacity(ciphertext.len() / 4);
+        for (i, chunk) in ciphertext.chunks_exact(sample_bytes).enumerate() {
+            let session = sessions.get(i).copied().unwrap_or(0);
+            let key = crate::crypto::derive_aes_key(
+                &self.ctx.config.seed.to_le_bytes(),
+                &format!("session-{session}"),
+            );
+            let mut plain = chunk.to_vec();
+            crate::crypto::AesCtr::new(&key, session).apply(0, &mut plain);
+            x.extend(
+                plain
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+            );
+        }
+        let out = self.ctx.executor.run(
+            &self.ctx.model.name,
+            "full_open",
+            batch,
+            &[&x],
+            self.ctx.device,
+            ledger,
+        )?;
+        Ok(out.data)
+    }
+
+    fn enclave_requirement_bytes(&self) -> u64 {
+        0
+    }
+}

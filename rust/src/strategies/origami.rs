@@ -1,0 +1,106 @@
+//! Origami(p): the paper's contribution.  Tier 1 (layers 1..=p) runs
+//! Slalom-style — linear parts blinded-offloaded, non-linear in the
+//! enclave; tier 2 (layers p+1..) runs *entirely in the open* on the
+//! untrusted device as one fused artifact, because past layer p the
+//! c-GAN adversary can no longer reconstruct the input (Fig 8).
+//!
+//! This eliminates Slalom's per-layer blind/unblind for the deep tier —
+//! the ~47-51 MB of intermediate encoding traffic that caps Slalom at
+//! 10-11x — and lifts the speedup to 12.7x/15.1x (Fig 9).
+
+use anyhow::Result;
+
+use super::ctx::StrategyCtx;
+use super::memory::enclave_requirement;
+use super::Strategy;
+use crate::enclave::cost::Ledger;
+use crate::enclave::power::power_cycle;
+use crate::model::partition::PartitionPlan;
+
+/// Blinded tier-1 + open tier-2.
+pub struct Origami {
+    ctx: StrategyCtx,
+    p: usize,
+    requirement: u64,
+}
+
+impl Origami {
+    pub fn new(ctx: StrategyCtx, p: usize) -> Self {
+        Self {
+            ctx,
+            p,
+            requirement: 0,
+        }
+    }
+
+    /// The partition point in use.
+    pub fn partition(&self) -> usize {
+        self.p
+    }
+}
+
+impl Strategy for Origami {
+    fn name(&self) -> String {
+        format!("origami/{}", self.p)
+    }
+
+    fn setup(&mut self) -> Result<()> {
+        let model = self.ctx.model.clone();
+        anyhow::ensure!(
+            self.p < model.num_layers(),
+            "partition {} out of range",
+            self.p
+        );
+        let _ = model
+            .stage(&StrategyCtx::tail(self.p), 1)
+            .map_err(|e| anyhow::anyhow!("origami needs tail_p{:02} artifact: {e}", self.p))?;
+        let plan = PartitionPlan::origami(&model, self.p);
+        let req = enclave_requirement(&model, &plan, self.ctx.config.lazy_dense_bytes, 1);
+        self.requirement = req.total();
+        self.ctx.with_enclave(self.requirement)?;
+        // unblinding factors only for tier-1 linear layers
+        let layers: Vec<usize> = model
+            .linear_indices()
+            .into_iter()
+            .filter(|&i| i <= self.p)
+            .collect();
+        let epochs = self.ctx.config.pool_epochs;
+        self.ctx.precompute_unblind_factors(&layers, epochs, 1)?;
+        if self.ctx.config.max_batch > 1 {
+            self.ctx
+                .precompute_unblind_factors(&layers, epochs, self.ctx.config.max_batch)
+                .ok();
+        }
+        Ok(())
+    }
+
+    fn infer(
+        &mut self,
+        ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        let x = self.ctx.decrypt_request(sessions, batch, ciphertext, ledger)?;
+        let epoch = self.ctx.next_epoch();
+        // Tier 1: Slalom-style blinded execution through layer p.
+        let feat = self
+            .ctx
+            .blinded_walk(1, self.p, x, batch, epoch, ledger)?;
+        // Tier 2: uninterrupted open execution on the device.
+        self.ctx.tail_offload(self.p, &feat, batch, ledger)
+    }
+
+    fn enclave_requirement_bytes(&self) -> u64 {
+        self.requirement
+    }
+
+    fn power_cycle(&mut self) -> Result<f64> {
+        // Same profile as Slalom: nothing heavy to reload (factors are
+        // sealed outside; weights live in the artifacts).
+        let mut ledger = Ledger::new();
+        let enclave = self.ctx.enclave_mut()?;
+        enclave.power_event();
+        Ok(power_cycle(enclave, &[], &mut ledger).rebuild_ms)
+    }
+}

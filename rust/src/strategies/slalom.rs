@@ -1,0 +1,94 @@
+//! Slalom/Privacy: every linear layer offloaded under cryptographic
+//! blinding; every non-linear op inside the enclave (Tramèr & Boneh,
+//! reproduced as the paper's strongest prior-work baseline).
+//!
+//! The cost structure the paper dissects (§VI-C.2): per linear layer, a
+//! blind pass + an unblind pass over the full feature map — ~4 ms per
+//! 6 MB on their Xeon — which is what Origami later eliminates for the
+//! deep tier.
+
+use anyhow::Result;
+
+use super::ctx::StrategyCtx;
+use super::memory::enclave_requirement;
+use super::Strategy;
+use crate::enclave::cost::Ledger;
+use crate::enclave::power::power_cycle;
+use crate::model::partition::PartitionPlan;
+
+/// Blinded offload for the whole network.
+pub struct Slalom {
+    ctx: StrategyCtx,
+    requirement: u64,
+}
+
+impl Slalom {
+    pub fn new(ctx: StrategyCtx) -> Self {
+        Self {
+            ctx,
+            requirement: 0,
+        }
+    }
+}
+
+impl Strategy for Slalom {
+    fn name(&self) -> String {
+        "slalom".into()
+    }
+
+    fn setup(&mut self) -> Result<()> {
+        let model = self.ctx.model.clone();
+        let plan = PartitionPlan::slalom(&model);
+        let req = enclave_requirement(&model, &plan, self.ctx.config.lazy_dense_bytes, 1);
+        self.requirement = req.total();
+        self.ctx.with_enclave(self.requirement)?;
+        // Precompute + seal unblinding factors for every linear layer
+        // (paper: "Unblinding factors are pre-computed and are not part
+        // of the inference time").
+        let layers = model.linear_indices();
+        let epochs = self.ctx.config.pool_epochs;
+        self.ctx.precompute_unblind_factors(&layers, epochs, 1)?;
+        if self.ctx.config.max_batch > 1 {
+            // batched artifacts share the per-sample factors? No — each
+            // batch size has its own artifact; precompute for it too.
+            self.ctx
+                .precompute_unblind_factors(&layers, epochs, self.ctx.config.max_batch)
+                .ok(); // batched stages may not be exported for all models
+        }
+        Ok(())
+    }
+
+    fn infer(
+        &mut self,
+        ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        let x = self.ctx.decrypt_request(sessions, batch, ciphertext, ledger)?;
+        let epoch = self.ctx.next_epoch();
+        let n = self.ctx.model.num_layers();
+        self.ctx.blinded_walk(1, n, x, batch, epoch, ledger)
+    }
+
+    fn enclave_requirement_bytes(&self) -> u64 {
+        self.requirement
+    }
+
+    fn power_cycle(&mut self) -> Result<f64> {
+        // Slalom keeps only biases + factor buffers in the enclave; the
+        // sealed unblinding factors survive outside and only the enclave
+        // itself must be rebuilt.
+        let mut ledger = Ledger::new();
+        let enclave = self.ctx.enclave_mut()?;
+        enclave.power_event();
+        Ok(power_cycle(enclave, &[], &mut ledger).rebuild_ms)
+    }
+}
+
+// NOTE on batched factors: factors are generated per (layer, epoch) for
+// `batch * in_elems` elements, so a batch-8 request simply consumes an
+// 8x longer stream — `precompute_unblind_factors(layers, epochs, 8)`
+// stores the matching R under the same (layer, epoch) namespacing as the
+// batch-1 pool because the artifact output length disambiguates them.
+// The integration tests cover both paths.

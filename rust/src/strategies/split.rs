@@ -1,0 +1,90 @@
+//! Split/x: layers 1..=x inside the enclave, the rest offloaded to the
+//! untrusted device in the open (paper §III-B, "Key Idea 1").
+//!
+//! Privacy rests on the partition point alone — the offloaded tail sees
+//! the layer-x feature map in plaintext, so x must be at or past the
+//! layer where the c-GAN adversary fails (x ≥ 6 for VGG-16, Fig 8).
+
+use anyhow::Result;
+
+use super::ctx::StrategyCtx;
+use super::memory::enclave_requirement;
+use super::Strategy;
+use crate::enclave::cost::Ledger;
+use crate::enclave::power::power_cycle;
+use crate::model::partition::PartitionPlan;
+
+/// Enclave head + open offloaded tail.
+pub struct Split {
+    ctx: StrategyCtx,
+    x: usize,
+    requirement: u64,
+}
+
+impl Split {
+    pub fn new(ctx: StrategyCtx, x: usize) -> Self {
+        Self {
+            ctx,
+            x,
+            requirement: 0,
+        }
+    }
+}
+
+impl Strategy for Split {
+    fn name(&self) -> String {
+        format!("split/{}", self.x)
+    }
+
+    fn setup(&mut self) -> Result<()> {
+        let model = self.ctx.model.clone();
+        anyhow::ensure!(
+            self.x < model.num_layers(),
+            "split point {} out of range",
+            self.x
+        );
+        // the tail artifact must exist for this partition
+        let _ = model.stage(&StrategyCtx::tail(self.x), self.ctx.config.max_batch.max(1))
+            .or_else(|_| model.stage(&StrategyCtx::tail(self.x), 1))?;
+        let plan = PartitionPlan::split(&model, self.x);
+        let req = enclave_requirement(&model, &plan, self.ctx.config.lazy_dense_bytes, 1);
+        self.requirement = req.total();
+        self.ctx.with_enclave(self.requirement)?;
+        let mut setup_ledger = Ledger::new();
+        for idx in model.linear_indices().into_iter().filter(|&i| i <= self.x) {
+            self.ctx.load_params_resident(idx, &mut setup_ledger)?;
+        }
+        Ok(())
+    }
+
+    fn infer(
+        &mut self,
+        ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        let x0 = self.ctx.decrypt_request(sessions, batch, ciphertext, ledger)?;
+        let feat = self.ctx.enclave_walk(1, self.x, x0, batch, ledger)?;
+        self.ctx.tail_offload(self.x, &feat, batch, ledger)
+    }
+
+    fn enclave_requirement_bytes(&self) -> u64 {
+        self.requirement
+    }
+
+    fn power_cycle(&mut self) -> Result<f64> {
+        let model = self.ctx.model.clone();
+        let x = self.x;
+        let mut ledger = Ledger::new();
+        self.ctx.resident_params.clear();
+        let enclave = self.ctx.enclave_mut()?;
+        enclave.power_event();
+        let rebuild_ms = power_cycle(enclave, &[], &mut ledger).rebuild_ms;
+        let t = crate::util::stats::Timer::start();
+        for idx in model.linear_indices().into_iter().filter(|&i| i <= x) {
+            self.ctx.load_params_resident(idx, &mut ledger)?;
+        }
+        Ok(rebuild_ms + t.elapsed_ms())
+    }
+}

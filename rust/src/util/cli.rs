@@ -1,0 +1,220 @@
+//! Declarative CLI argument parsing (clap substitute).
+//!
+//! Supports `binary <subcommand> [--flag value] [--switch] [positional…]`
+//! with typed accessors, defaults, and generated `--help` text.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One declared option, for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the binary name). The first non-flag token
+    /// becomes the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else if args.command.is_empty() {
+                args.command = tok;
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
+    /// Comma-separated list of integers (e.g. `--splits 6,8,10`).
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key}: bad integer `{s}`"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().to_string())
+                .collect(),
+        }
+    }
+
+    /// Error on unknown flags (catches typos) given the declared specs.
+    pub fn validate(&self, specs: &[OptSpec]) -> Result<()> {
+        for key in self.flags.keys() {
+            if !specs.iter().any(|s| s.name == key) {
+                bail!("unknown option --{key} (see --help)");
+            }
+        }
+        for key in &self.switches {
+            if key != "help" && !specs.iter().any(|s| s.name == key) {
+                bail!("unknown switch --{key} (see --help)");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render help text for a command.
+pub fn render_help(binary: &str, command: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUsage: {binary} {command} [options]\n\nOptions:\n");
+    for spec in specs {
+        let arg = if spec.is_switch {
+            format!("--{}", spec.name)
+        } else {
+            format!("--{} <v>", spec.name)
+        };
+        let default = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  {arg:<26} {}{default}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_switches_positionals() {
+        let a = parse("serve --model vgg16-32 input.json --port=8080 --verbose");
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("model"), Some("vgg16-32"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positionals, vec!["input.json"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("bench --iters 32 --rate 1.5 --splits 6,8,10");
+        assert_eq!(a.usize_or("iters", 1).unwrap(), 32);
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 1.5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.usize_list_or("splits", &[]).unwrap(), vec![6, 8, 10]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("x --iters abc");
+        assert!(a.usize_or("iters", 1).is_err());
+        assert!(a.req("nope").is_err());
+    }
+
+    #[test]
+    fn validate_catches_typos() {
+        let specs = [OptSpec {
+            name: "model",
+            help: "",
+            default: None,
+            is_switch: false,
+        }];
+        let a = parse("run --model x");
+        assert!(a.validate(&specs).is_ok());
+        let b = parse("run --modle x");
+        assert!(b.validate(&specs).is_err());
+    }
+
+    #[test]
+    fn trailing_switch_not_eating_value() {
+        let a = parse("run --flag --other v");
+        assert!(a.has("flag"));
+        assert_eq!(a.get("other"), Some("v"));
+    }
+}

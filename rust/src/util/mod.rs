@@ -1,0 +1,11 @@
+//! From-scratch substrates: JSON, CLI parsing, thread pool, PRNG, stats.
+//!
+//! The offline crate registry excludes serde/clap/tokio/rand/criterion, so
+//! these are implemented here (DESIGN.md §3, "Substrate note") — each is a
+//! small, tested, purpose-built replacement.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,226 @@
+//! Timing + distribution statistics: timers, percentile histograms,
+//! throughput counters. Shared by the metrics pipeline and the bench
+//! harness (criterion substitute).
+
+use std::time::{Duration, Instant};
+
+/// Sample-collecting summary (exact percentiles up to a cap, then
+/// reservoir-sampled). Units are whatever the caller records — the bench
+/// harness records seconds, the coordinator nanoseconds.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    samples: Vec<f64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    cap: usize,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::with_cap(65_536)
+    }
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_cap(cap: usize) -> Self {
+        Self {
+            samples: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            cap,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // reservoir sampling keeps percentiles representative
+            let idx = (self.count as usize * 2_654_435_761) % self.count as usize;
+            if idx < self.cap {
+                self.samples[idx] = v;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.samples.iter().sum::<f64>() / self.samples.len() as f64;
+        let var = self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Exact percentile over retained samples, q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (q / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// RAII wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Format a duration given in *milliseconds* for human-readable tables.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 1000.0 {
+        format!("{:.2}s", ms / 1000.0)
+    } else if ms >= 1.0 {
+        format!("{ms:.2}ms")
+    } else {
+        format!("{:.1}µs", ms * 1000.0)
+    }
+}
+
+/// Format a byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: u64 = 1024;
+    const MB: u64 = 1024 * KB;
+    const GB: u64 = 1024 * MB;
+    if b >= GB {
+        format!("{:.2}GB", b as f64 / GB as f64)
+    } else if b >= MB {
+        format!("{:.1}MB", b as f64 / MB as f64)
+    } else if b >= KB {
+        format!("{:.1}KB", b as f64 / KB as f64)
+    } else {
+        format!("{b}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let mut s = Summary::new();
+        for i in 0..1000 {
+            s.record(i as f64);
+        }
+        assert!(s.percentile(10.0) <= s.percentile(50.0));
+        assert!(s.p50() <= s.p95());
+        assert!(s.p95() <= s.p99());
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+    }
+
+    #[test]
+    fn reservoir_caps_memory() {
+        let mut s = Summary::with_cap(100);
+        for i in 0..10_000 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.count(), 10_000);
+        assert!(s.percentile(50.0) >= 0.0);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(fmt_ms(1500.0), "1.50s");
+        assert_eq!(fmt_ms(2.5), "2.50ms");
+        assert_eq!(fmt_ms(0.5), "500.0µs");
+        assert_eq!(fmt_bytes(1024), "1.0KB");
+        assert_eq!(fmt_bytes(10), "10B");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0MB");
+    }
+}

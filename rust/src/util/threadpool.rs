@@ -1,0 +1,328 @@
+//! Thread pool + bounded MPMC channel — the serving loop's substrate
+//! (tokio substitute; the coordinator's workloads are CPU-bound PJRT
+//! executions, so a thread pool is the honest architecture anyway).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Bounded multi-producer multi-consumer channel with blocking send/recv
+/// — backpressure for the request pipeline (paper's enclave stage must
+/// not be overrun by the untrusted stage or vice versa).
+pub struct Channel<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    queue: Mutex<VecDeque<T>>,
+    cap: usize,
+    closed: AtomicBool,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Self {
+        Self {
+            inner: Arc::new(ChannelInner {
+                queue: Mutex::new(VecDeque::new()),
+                cap: cap.max(1),
+                closed: AtomicBool::new(false),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Blocking send; returns Err(item) if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return Err(item);
+            }
+            if q.len() < self.inner.cap {
+                q.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            q = self.inner.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking send.
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        if self.inner.closed.load(Ordering::SeqCst) || q.len() >= self.inner.cap {
+            return Err(item);
+        }
+        q.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; None when closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            q = self.inner.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Receive with timeout; None on timeout or closed+drained.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if self.inner.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self
+                .inner
+                .not_empty
+                .wait_timeout(q, deadline - now)
+                .unwrap();
+            q = guard;
+            if res.timed_out() && q.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking (dynamic batcher pull).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        let n = q.len().min(max);
+        let out: Vec<T> = q.drain(..n).collect();
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the channel: senders fail, receivers drain then get None.
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::SeqCst)
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool executing boxed jobs.
+pub struct ThreadPool {
+    jobs: Channel<Job>,
+    workers: Vec<JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (min 1).
+    pub fn new(n: usize) -> Self {
+        let jobs: Channel<Job> = Channel::bounded(1024);
+        let active = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let rx = jobs.clone();
+                let act = active.clone();
+                std::thread::Builder::new()
+                    .name(format!("origami-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            act.fetch_add(1, Ordering::SeqCst);
+                            job();
+                            act.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            jobs,
+            workers,
+            active,
+        }
+    }
+
+    /// Submit a job (blocks if the queue is full — backpressure).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let _ = self.jobs.send(Box::new(f));
+    }
+
+    /// Jobs currently executing.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Queued + executing.
+    pub fn pending(&self) -> usize {
+        self.jobs.len() + self.active()
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scoped parallel map: runs `f` over items on `n` threads, preserving
+/// order. Used by the blinding hot loop and workload generators.
+pub fn par_map<T, R, F>(items: Vec<T>, n: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if n <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let items: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = Mutex::new(items);
+    let results = Mutex::new(&mut out);
+    std::thread::scope(|s| {
+        for _ in 0..n {
+            s.spawn(|| loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((i, t)) => {
+                        let r = f(t);
+                        results.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn channel_fifo() {
+        let ch = Channel::bounded(10);
+        for i in 0..5 {
+            ch.send(i).unwrap();
+        }
+        assert_eq!(ch.len(), 5);
+        for i in 0..5 {
+            assert_eq!(ch.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn channel_close_drains() {
+        let ch = Channel::bounded(10);
+        ch.send(1).unwrap();
+        ch.close();
+        assert!(ch.send(2).is_err());
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn channel_backpressure_blocks_then_unblocks() {
+        let ch = Channel::bounded(1);
+        ch.send(1).unwrap();
+        assert!(ch.try_send(2).is_err());
+        let ch2 = ch.clone();
+        let h = std::thread::spawn(move || ch2.send(2).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(ch.recv(), Some(1));
+        assert!(h.join().unwrap());
+        assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn channel_recv_timeout() {
+        let ch: Channel<u32> = Channel::bounded(1);
+        let t = std::time::Instant::now();
+        assert_eq!(ch.recv_timeout(Duration::from_millis(30)), None);
+        assert!(t.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn drain_up_to_takes_prefix() {
+        let ch = Channel::bounded(10);
+        for i in 0..6 {
+            ch.send(i).unwrap();
+        }
+        assert_eq!(ch.drain_up_to(4), vec![0, 1, 2, 3]);
+        assert_eq!(ch.len(), 2);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let v: Vec<u64> = (0..200).collect();
+        let out = par_map(v, 8, |x| x * 2);
+        assert_eq!(out, (0..200).map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,78 @@
+//! Shared helpers for the integration tests (artifact-gated).
+
+use std::path::PathBuf;
+
+use origami::config::Config;
+use origami::launcher::Stack;
+
+/// Artifacts root for tests: $ORIGAMI_ARTIFACTS or <repo>/artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("ORIGAMI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Skip (return None) when artifacts haven't been built.
+pub fn test_config() -> Option<Config> {
+    let root = artifacts_root();
+    if !root.join("manifest.json").exists() {
+        eprintln!(
+            "SKIP: no artifacts at {} — run `make artifacts`",
+            root.display()
+        );
+        return None;
+    }
+    Some(Config {
+        artifacts: root,
+        ..Config::default()
+    })
+}
+
+/// Build a stack or skip.
+pub fn test_stack() -> Option<(Stack, Config)> {
+    let config = test_config()?;
+    let stack = Stack::load(&config).expect("stack loads");
+    Some((stack, config))
+}
+
+/// Golden vectors exported by aot.py.
+#[allow(dead_code)]
+pub struct Golden {
+    pub input: Vec<f32>,
+    pub input_shape: Vec<usize>,
+    pub logits: Vec<f32>,
+}
+
+pub fn golden(model: &str) -> Option<Golden> {
+    let path = artifacts_root().join("golden").join(format!("{model}_golden.json"));
+    if !path.exists() {
+        return None;
+    }
+    let doc = origami::util::json::from_file(&path).ok()?;
+    Some(Golden {
+        input: doc
+            .req("input")
+            .ok()?
+            .as_f64_vec()
+            .ok()?
+            .into_iter()
+            .map(|v| v as f32)
+            .collect(),
+        input_shape: doc.req("input_shape").ok()?.as_usize_vec().ok()?,
+        logits: doc
+            .req("logits")
+            .ok()?
+            .as_f64_vec()
+            .ok()?
+            .into_iter()
+            .map(|v| v as f32)
+            .collect(),
+    })
+}
+
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}

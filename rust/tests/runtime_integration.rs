@@ -1,0 +1,139 @@
+//! Runtime integration: AOT artifacts load, compile, execute, and match
+//! the golden vectors JAX computed at export time — the core proof that
+//! the Python→HLO→Rust bridge is numerically sound.
+
+mod common;
+
+use common::{golden, max_abs_diff, test_stack};
+use origami::enclave::cost::{Cat, Ledger};
+use origami::runtime::Device;
+
+#[test]
+fn full_open_matches_golden_logits() {
+    let Some((stack, _)) = test_stack() else { return };
+    let Some(g) = golden("vgg16-32") else { return };
+    let mut ledger = Ledger::new();
+    let out = stack
+        .executor
+        .run("vgg16-32", "full_open", 1, &[&g.input], Device::UntrustedCpu, &mut ledger)
+        .expect("full_open executes");
+    assert_eq!(out.data.len(), g.logits.len());
+    let diff = max_abs_diff(&out.data, &g.logits);
+    assert!(diff < 1e-4, "golden mismatch: {diff}");
+    assert!(ledger.measured_ns(Cat::DeviceCompute) > 0);
+}
+
+#[test]
+fn vgg19_golden_matches_too() {
+    let Some((stack, _)) = test_stack() else { return };
+    let Some(g) = golden("vgg19-32") else { return };
+    let mut ledger = Ledger::new();
+    let out = stack
+        .executor
+        .run("vgg19-32", "full_open", 1, &[&g.input], Device::UntrustedCpu, &mut ledger)
+        .expect("executes");
+    assert!(max_abs_diff(&out.data, &g.logits) < 1e-4);
+}
+
+#[test]
+fn head_plus_tail_compose_to_full() {
+    let Some((stack, _)) = test_stack() else { return };
+    let Some(g) = golden("vgg16-32") else { return };
+    let mut ledger = Ledger::new();
+    let p = 6;
+    let head = stack
+        .executor
+        .run("vgg16-32", "head_p06", 1, &[&g.input], Device::UntrustedCpu, &mut ledger)
+        .unwrap();
+    let tail = stack
+        .executor
+        .run("vgg16-32", &format!("tail_p{p:02}"), 1, &[&head.data], Device::UntrustedCpu, &mut ledger)
+        .unwrap();
+    assert!(max_abs_diff(&tail.data, &g.logits) < 1e-4);
+}
+
+#[test]
+fn batched_artifact_runs_and_broadcasts() {
+    let Some((stack, _)) = test_stack() else { return };
+    let Some(g) = golden("vgg16-32") else { return };
+    // tile the golden input 8x; every row must produce the same logits
+    let mut batch_in = Vec::with_capacity(8 * g.input.len());
+    for _ in 0..8 {
+        batch_in.extend_from_slice(&g.input);
+    }
+    let mut ledger = Ledger::new();
+    let out = stack
+        .executor
+        .run("vgg16-32", "full_open", 8, &[&batch_in], Device::UntrustedCpu, &mut ledger)
+        .unwrap();
+    assert_eq!(out.data.len(), 8 * g.logits.len());
+    for i in 0..8 {
+        let row = &out.data[i * g.logits.len()..(i + 1) * g.logits.len()];
+        assert!(max_abs_diff(row, &g.logits) < 1e-4, "row {i}");
+    }
+}
+
+#[test]
+fn executor_rejects_wrong_shapes() {
+    let Some((stack, _)) = test_stack() else { return };
+    let mut ledger = Ledger::new();
+    let bad = vec![0f32; 10];
+    assert!(stack
+        .executor
+        .run("vgg16-32", "full_open", 1, &[&bad], Device::UntrustedCpu, &mut ledger)
+        .is_err());
+    assert!(stack
+        .executor
+        .run("vgg16-32", "nonexistent_stage", 1, &[&bad], Device::UntrustedCpu, &mut ledger)
+        .is_err());
+    assert!(stack
+        .executor
+        .run("no-such-model", "full_open", 1, &[&bad], Device::UntrustedCpu, &mut ledger)
+        .is_err());
+}
+
+#[test]
+fn registry_caches_compilations() {
+    let Some((stack, _)) = test_stack() else { return };
+    let before = stack.registry.cached_count();
+    let _ = stack.registry.get("vgg16-32", "layer01_lin_open", 1).unwrap();
+    let after_first = stack.registry.cached_count();
+    let _ = stack.registry.get("vgg16-32", "layer01_lin_open", 1).unwrap();
+    assert_eq!(stack.registry.cached_count(), after_first);
+    assert!(after_first > before);
+}
+
+#[test]
+fn gpu_device_models_time_cpu_measures_it() {
+    let Some((stack, _)) = test_stack() else { return };
+    let Some(g) = golden("vgg16-32") else { return };
+    let mut cpu_ledger = Ledger::new();
+    let mut gpu_ledger = Ledger::new();
+    // warm first so compile time doesn't skew
+    for _ in 0..2 {
+        let _ = stack
+            .executor
+            .run("vgg16-32", "full_open", 1, &[&g.input], Device::UntrustedCpu, &mut Ledger::new())
+            .unwrap();
+    }
+    let cpu_out = stack
+        .executor
+        .run("vgg16-32", "full_open", 1, &[&g.input], Device::UntrustedCpu, &mut cpu_ledger)
+        .unwrap();
+    let gpu_out = stack
+        .executor
+        .run("vgg16-32", "full_open", 1, &[&g.input], Device::Gpu, &mut gpu_ledger)
+        .unwrap();
+    // same numerics either way (GPU is a cost model, not different math)
+    assert!(max_abs_diff(&cpu_out.data, &gpu_out.data) < 1e-6);
+    assert_eq!(gpu_ledger.measured_ns(Cat::DeviceCompute), 0);
+    assert!(gpu_ledger.modeled_ns(Cat::DeviceCompute) > 0);
+    assert!(cpu_ledger.measured_ns(Cat::DeviceCompute) > 0);
+    // modeled GPU time must be well under measured CPU time
+    assert!(
+        gpu_ledger.modeled_ns(Cat::DeviceCompute) < cpu_ledger.measured_ns(Cat::DeviceCompute),
+        "gpu {} vs cpu {}",
+        gpu_ledger.modeled_ns(Cat::DeviceCompute),
+        cpu_ledger.measured_ns(Cat::DeviceCompute)
+    );
+}

@@ -1,0 +1,94 @@
+//! Serving-stack integration: router → batcher → workers → strategy,
+//! end to end over real artifacts.
+
+mod common;
+
+use common::{golden, max_abs_diff, test_stack};
+use origami::coordinator::Router;
+use origami::launcher::{encrypt_request, start_engine_from_config};
+
+#[test]
+fn engine_serves_concurrent_requests_correctly() {
+    let Some((stack, mut config)) = test_stack() else { return };
+    config.strategy = "origami/6".into();
+    config.workers = 1;
+    config.max_batch = 8;
+    config.max_delay_ms = 5.0;
+    let sample_bytes = stack.sample_bytes(&config.model).unwrap();
+    let batches = stack.artifact_batches(&config.model).unwrap();
+    let engine = start_engine_from_config(config.clone(), sample_bytes, batches).unwrap();
+
+    let g = golden("vgg16-32").unwrap();
+    // batched requests share the first request's session/epoch keystream,
+    // so submit them all under session 0 (one attested batch channel).
+    let replies: Vec<_> = (0..12)
+        .map(|_| {
+            let ct = encrypt_request(&config, 0, &g.input);
+            engine.submit("vgg16-32", ct, 0).unwrap()
+        })
+        .collect();
+    for (i, r) in replies.into_iter().enumerate() {
+        let resp = r.recv().expect("reply arrives");
+        assert!(resp.error.is_none(), "req {i}: {:?}", resp.error);
+        assert!(
+            max_abs_diff(&resp.probs, &g.logits) < 0.05,
+            "req {i} diverged"
+        );
+        assert!(resp.latency_ms > 0.0);
+    }
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.requests, 12);
+    assert!(metrics.batches >= 2, "12 reqs / max 8 → ≥2 batches");
+    assert!(metrics.batch_size.mean() > 1.0, "batching actually batched");
+}
+
+#[test]
+fn router_routes_and_rejects() {
+    let Some((stack, mut config)) = test_stack() else { return };
+    config.strategy = "open".into();
+    config.workers = 1;
+    config.max_delay_ms = 1.0;
+    let sample_bytes = stack.sample_bytes(&config.model).unwrap();
+    let batches = stack.artifact_batches(&config.model).unwrap();
+    let engine = start_engine_from_config(config.clone(), sample_bytes, batches).unwrap();
+
+    let mut router = Router::new();
+    router.register("vgg16-32", engine, sample_bytes);
+    assert_eq!(router.models(), vec!["vgg16-32".to_string()]);
+
+    let g = golden("vgg16-32").unwrap();
+    let ct = encrypt_request(&config, 0, &g.input);
+    let resp = router.infer_blocking("vgg16-32", ct, 0).unwrap();
+    assert!(resp.error.is_none());
+    assert!(max_abs_diff(&resp.probs, &g.logits) < 1e-4);
+
+    // admission checks
+    assert!(router.submit("vgg19-32", vec![0u8; sample_bytes], 0).is_err());
+    assert!(router.submit("vgg16-32", vec![0u8; 3], 0).is_err());
+    router.shutdown();
+}
+
+#[test]
+fn engine_reports_failures_not_hangs() {
+    let Some((stack, mut config)) = test_stack() else { return };
+    config.strategy = "origami/6".into();
+    config.workers = 1;
+    config.pool_epochs = 1;
+    config.allow_factor_reuse = false; // strict OTP: later sessions fail
+    let sample_bytes = stack.sample_bytes(&config.model).unwrap();
+    let batches = stack.artifact_batches(&config.model).unwrap();
+    let engine = start_engine_from_config(config.clone(), sample_bytes, batches).unwrap();
+    let g = golden("vgg16-32").unwrap();
+
+    let ok = engine
+        .infer_blocking("vgg16-32", encrypt_request(&config, 0, &g.input), 0)
+        .unwrap();
+    assert!(ok.error.is_none());
+    // session 5 is outside the 1-epoch pool → the strategy errors and the
+    // response must carry the error rather than the engine hanging
+    let bad = engine
+        .infer_blocking("vgg16-32", encrypt_request(&config, 5, &g.input), 5)
+        .unwrap();
+    assert!(bad.error.is_some());
+    engine.shutdown();
+}

@@ -1,0 +1,204 @@
+//! Strategy integration: every execution strategy produces (nearly) the
+//! same probabilities as the open reference on the same encrypted input,
+//! costs land in the right ledger categories, and the paper's qualitative
+//! orderings hold at 32 scale.
+
+mod common;
+
+use common::{golden, max_abs_diff, test_stack};
+use origami::config::Config;
+use origami::enclave::cost::{Cat, Ledger};
+use origami::launcher::encrypt_request;
+
+/// Blinded paths quantize activations to 2^-8 per layer; at 32 scale the
+/// accumulated softmax deviation stays well under this.
+const QUANT_TOL: f32 = 0.05;
+
+fn run_strategy(config: &Config, strategy: &str) -> (Vec<f32>, Ledger) {
+    let stack = origami::launcher::Stack::load(config).unwrap();
+    let mut cfg = config.clone();
+    cfg.strategy = strategy.to_string();
+    let mut s = stack.build_strategy(&cfg).unwrap();
+    let g = golden(&config.model).expect("golden vectors");
+    let ct = encrypt_request(config, 0, &g.input);
+    // warm once (artifact compile + first-exec autotune), then measure
+    let mut warm = Ledger::new();
+    let _ = s.infer(&ct, 1, &[0], &mut warm).unwrap();
+    let mut ledger = Ledger::new();
+    let probs = s.infer(&ct, 1, &[0], &mut ledger).unwrap();
+    (probs, ledger)
+}
+
+#[test]
+fn all_strategies_agree_with_golden() {
+    let Some((_, config)) = test_stack() else { return };
+    let g = golden("vgg16-32").unwrap();
+    for strategy in ["open", "baseline2", "split/6", "slalom", "origami/6"] {
+        let (probs, _) = run_strategy(&config, strategy);
+        let tol = if strategy == "slalom" || strategy.starts_with("origami") {
+            QUANT_TOL // fixed-point quantization in the blinded tier
+        } else {
+            1e-4
+        };
+        let diff = max_abs_diff(&probs, &g.logits);
+        assert!(diff < tol, "{strategy}: diff {diff} (tol {tol})");
+        // probabilities sum to 1
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "{strategy}: sum {sum}");
+    }
+}
+
+#[test]
+fn ledger_categories_match_strategy_structure() {
+    let Some((_, config)) = test_stack() else { return };
+
+    let (_, open) = run_strategy(&config, "open");
+    assert_eq!(open.total_ns(Cat::Blind), 0);
+    assert_eq!(open.total_ns(Cat::EnclaveCompute), 0);
+    assert!(open.total_ns(Cat::DeviceCompute) > 0);
+
+    let (_, b2) = run_strategy(&config, "baseline2");
+    assert!(b2.total_ns(Cat::EnclaveCompute) > 0);
+    assert_eq!(b2.total_ns(Cat::Blind), 0);
+    assert_eq!(
+        b2.total_ns(Cat::DeviceCompute),
+        0,
+        "baseline2 never touches the untrusted device"
+    );
+    assert!(b2.total_ns(Cat::Paging) > 0, "oversubscribed EPC must page");
+
+    let (_, sl) = run_strategy(&config, "slalom");
+    assert!(sl.total_ns(Cat::Blind) > 0);
+    assert!(sl.total_ns(Cat::Unblind) > 0);
+    assert!(sl.total_ns(Cat::DeviceCompute) > 0);
+    assert_eq!(
+        sl.total_ns(Cat::EnclaveCompute),
+        0,
+        "slalom offloads every linear op"
+    );
+
+    let (_, og) = run_strategy(&config, "origami/6");
+    assert!(og.total_ns(Cat::Blind) > 0);
+    assert!(og.total_ns(Cat::DeviceCompute) > 0);
+    // origami blinds strictly less than slalom (only tier 1)
+    assert!(
+        og.total_ns(Cat::Blind) + og.total_ns(Cat::Unblind)
+            < sl.total_ns(Cat::Blind) + sl.total_ns(Cat::Unblind),
+        "origami must blind less than slalom"
+    );
+}
+
+#[test]
+fn paper_ordering_baseline_slowest_origami_beats_slalom() {
+    let Some((_, config)) = test_stack() else { return };
+    let (_, b2) = run_strategy(&config, "baseline2");
+    let (_, sl) = run_strategy(&config, "slalom");
+    let (_, og) = run_strategy(&config, "origami/6");
+    let (b2_ms, sl_ms, og_ms) = (
+        b2.grand_total_ms(),
+        sl.grand_total_ms(),
+        og.grand_total_ms(),
+    );
+    assert!(
+        b2_ms > sl_ms && b2_ms > og_ms,
+        "baseline2 ({b2_ms:.2}ms) must be slowest (slalom {sl_ms:.2}, origami {og_ms:.2})"
+    );
+    assert!(
+        og_ms < sl_ms,
+        "origami ({og_ms:.2}ms) must beat slalom ({sl_ms:.2}ms)"
+    );
+}
+
+#[test]
+fn memory_requirements_follow_table1_ordering() {
+    let Some((_, config)) = test_stack() else { return };
+    let stack = origami::launcher::Stack::load(&config).unwrap();
+    let req = |strategy: &str| {
+        let mut cfg = config.clone();
+        cfg.strategy = strategy.into();
+        stack.build_strategy(&cfg).unwrap().enclave_requirement_bytes()
+    };
+    let b2 = req("baseline2");
+    let s6 = req("split/6");
+    let s8 = req("split/8");
+    let s10 = req("split/10");
+    let sl = req("slalom");
+    let og = req("origami/6");
+    // Table I: baseline2 largest; splits grow with x; slalom==origami-ish
+    assert!(b2 > s10 && s10 > s8 && s8 > s6, "{b2} {s10} {s8} {s6}");
+    assert!(sl > s6, "blind buffers add over split/6");
+    let rel = (sl as f64 - og as f64).abs() / sl as f64;
+    assert!(rel < 0.15, "slalom {sl} vs origami {og} should be close");
+}
+
+#[test]
+fn power_recovery_scales_with_enclave_size() {
+    let Some((_, config)) = test_stack() else { return };
+    let stack = origami::launcher::Stack::load(&config).unwrap();
+    let recover = |strategy: &str| {
+        let mut cfg = config.clone();
+        cfg.strategy = strategy.into();
+        let mut s = stack.build_strategy(&cfg).unwrap();
+        // median of 3 cycles to de-noise
+        let mut times: Vec<f64> = (0..3).map(|_| s.power_cycle().unwrap()).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times[1]
+    };
+    let b2 = recover("baseline2");
+    let og = recover("origami/6");
+    assert!(
+        b2 > og,
+        "baseline2 recovery ({b2:.3}ms) must exceed origami ({og:.3}ms)"
+    );
+}
+
+#[test]
+fn strict_otp_pool_exhaustion_fails_closed() {
+    let Some((_, config)) = test_stack() else { return };
+    let stack = origami::launcher::Stack::load(&config).unwrap();
+    let mut cfg = config.clone();
+    cfg.strategy = "origami/6".into();
+    cfg.pool_epochs = 2;
+    cfg.allow_factor_reuse = false;
+    let mut s = stack.build_strategy(&cfg).unwrap();
+    let g = golden("vgg16-32").unwrap();
+    for session in 0..2u64 {
+        let ct = encrypt_request(&cfg, session, &g.input);
+        s.infer(&ct, 1, &[session], &mut Ledger::new()).unwrap();
+    }
+    let ct = encrypt_request(&cfg, 2, &g.input);
+    let err = s.infer(&ct, 1, &[2], &mut Ledger::new()).unwrap_err();
+    assert!(format!("{err:#}").contains("pool exhausted"), "{err:#}");
+}
+
+#[test]
+fn batched_inference_matches_single() {
+    let Some((_, config)) = test_stack() else { return };
+    let stack = origami::launcher::Stack::load(&config).unwrap();
+    let mut cfg = config.clone();
+    cfg.strategy = "origami/6".into();
+    let mut s = stack.build_strategy(&cfg).unwrap();
+    let g = golden("vgg16-32").unwrap();
+    // each sample is encrypted independently under its own session (the
+    // batcher's contract), then concatenated
+    let mut ct = Vec::new();
+    let sessions: Vec<u64> = (0..8).collect();
+    for &s_id in &sessions {
+        ct.extend_from_slice(&encrypt_request(&cfg, s_id, &g.input));
+    }
+    let probs = s.infer(&ct, 8, &sessions, &mut Ledger::new()).unwrap();
+    assert_eq!(probs.len(), 8 * g.logits.len());
+    for i in 0..8 {
+        let row = &probs[i * g.logits.len()..(i + 1) * g.logits.len()];
+        assert!(max_abs_diff(row, &g.logits) < QUANT_TOL, "row {i}");
+    }
+}
+
+#[test]
+fn unknown_strategy_rejected() {
+    let Some((_, config)) = test_stack() else { return };
+    let stack = origami::launcher::Stack::load(&config).unwrap();
+    let mut cfg = config.clone();
+    cfg.strategy = "quantum".into();
+    assert!(stack.build_strategy(&cfg).is_err());
+}
