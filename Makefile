@@ -1,0 +1,32 @@
+# Build/test entry points for the Rust coordinator workspace.
+#
+# The workspace is fully offline: all dependencies are vendored path
+# crates (rust/vendor/*), so every target below works without network or
+# a crates.io registry.  `make artifacts` (the Python AOT lowering) is
+# only needed for the artifact-gated integration tests/benches; the
+# hermetic `sim*` reference-backend paths run everywhere.
+
+.PHONY: ci build test clippy bench-smoke pool-demo clean
+
+## The CI gate: release build, full test suite, clippy as errors.
+ci: build test clippy
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+clippy:
+	cargo clippy -p origami -- -D warnings
+
+## Fast smoke of the pool-scaling bench (reference backend, no artifacts).
+bench-smoke:
+	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig14_pool_scaling
+
+## The worker-pool demo: 4 pipelined workers vs the serial path.
+pool-demo:
+	cargo run --release -p origami --example pool_serving
+
+clean:
+	cargo clean

@@ -1,0 +1,86 @@
+//! Fig 14 (extension) — worker-pool throughput scaling.
+//!
+//! Sweeps the pool across worker counts on the hermetic reference
+//! backend (`sim8`, Origami/6) and reports, per count:
+//! - wall-clock requests/s on this machine (informational; core-bound),
+//! - the simulated-cost speedup over one serial worker (deterministic:
+//!   each worker is an independent enclave lane + device lane on the
+//!   simulated timeline),
+//! - tier-2 work stealing and batching stats.
+//!
+//! Run: `cargo bench --bench fig14_pool_scaling`
+//! (ORIGAMI_BENCH_FAST=1 shrinks the request count for CI smoke runs.)
+
+use origami::config::Config;
+use origami::harness::Bench;
+use origami::launcher::{encrypt_request, start_pool_from_config, synth_images};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("ORIGAMI_BENCH_FAST").ok().as_deref() == Some("1");
+    let requests = if fast { 32 } else { 128 };
+    let mut bench = Bench::new("Fig 14: pool scaling (origami/6, sim8, simulated cost)");
+
+    let base = Config {
+        model: "sim8".into(),
+        strategy: "origami/6".into(),
+        max_batch: 4,
+        max_delay_ms: 1.0,
+        pool_epochs: 32,
+        ..Config::default()
+    };
+    let images = synth_images(requests, 8, 3, base.seed);
+
+    let mut serial_req_s = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = Config {
+            workers,
+            ..base.clone()
+        };
+        let pool = start_pool_from_config(cfg.clone())?;
+        let t = std::time::Instant::now();
+        let replies: Vec<_> = images
+            .iter()
+            .enumerate()
+            .map(|(i, img)| {
+                let session = i as u64;
+                pool.submit("sim8", encrypt_request(&cfg, session, img), session)
+                    .expect("submit")
+            })
+            .collect();
+        let mut ok = 0usize;
+        for r in replies {
+            let resp = r.recv().expect("reply");
+            if resp.error.is_none() {
+                ok += 1;
+            }
+        }
+        let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+        let metrics = pool.shutdown();
+        anyhow::ensure!(ok == requests, "{ok}/{requests} served");
+
+        let req_s = ok as f64 / (wall_ms / 1e3);
+        if workers == 1 {
+            serial_req_s = req_s;
+        }
+        let row = bench.push_samples(&format!("pool workers={workers}"), &[wall_ms]);
+        row.extra.push(("req_per_s".into(), req_s));
+        row.extra
+            .push(("wall_speedup".into(), req_s / serial_req_s.max(1e-9)));
+        row.extra
+            .push(("sim_speedup".into(), metrics.simulated_speedup()));
+        row.extra
+            .push(("sim_makespan_ms".into(), metrics.simulated_makespan_ms()));
+        row.extra
+            .push(("stolen_tier2".into(), metrics.stolen_batches as f64));
+        row.extra
+            .push(("mean_batch".into(), metrics.batch_size.mean()));
+    }
+
+    bench.finish();
+    println!(
+        "\nacceptance: 4-worker sim_speedup must be ≥ 1.3x over workers=1 \
+         (outputs are bit-identical across worker counts — see \
+         tests/pool_integration.rs)"
+    );
+    Ok(())
+}

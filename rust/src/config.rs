@@ -42,6 +42,13 @@ pub struct Config {
     /// Lazy-load dense layers above this many bytes (Baseline2 policy;
     /// the paper uses 8 MB).
     pub lazy_dense_bytes: u64,
+    /// Worker pool: overlap tier-1 (enclave) of batch k+1 with tier-2
+    /// (open device) of batch k inside every worker.
+    pub pipeline: bool,
+    /// Blinding-keyspace domain for this strategy instance.  The worker
+    /// pool assigns each worker its index so pad streams are disjoint
+    /// across workers; single-instance deployments leave it at 0.
+    pub blind_domain: u64,
 }
 
 impl Default for Config {
@@ -62,6 +69,8 @@ impl Default for Config {
             max_delay_ms: 2.0,
             workers: 2,
             lazy_dense_bytes: 16 * 1024,
+            pipeline: true,
+            blind_domain: 0,
         }
     }
 }
@@ -129,6 +138,12 @@ impl Config {
         if let Some(b) = v.get("allow_factor_reuse").and_then(|x| x.as_bool()) {
             self.allow_factor_reuse = b;
         }
+        if let Some(b) = v.get("pipeline").and_then(|x| x.as_bool()) {
+            self.pipeline = b;
+        }
+        if let Some(n) = v.get("blind_domain").and_then(|x| x.as_i64()) {
+            self.blind_domain = n as u64;
+        }
     }
 
     /// Apply CLI overrides (`--model`, `--device`, …; `--config` first).
@@ -166,6 +181,9 @@ impl Config {
         if args.has("strict-otp") {
             c.allow_factor_reuse = false;
         }
+        if args.has("no-pipeline") {
+            c.pipeline = false;
+        }
         Ok(c)
     }
 
@@ -188,6 +206,8 @@ impl Config {
             ("max_delay_ms", json::num(self.max_delay_ms)),
             ("workers", json::num(self.workers as f64)),
             ("lazy_dense_bytes", json::num(self.lazy_dense_bytes as f64)),
+            ("pipeline", Value::Bool(self.pipeline)),
+            ("blind_domain", json::num(self.blind_domain as f64)),
         ])
     }
 }

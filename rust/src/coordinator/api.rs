@@ -58,6 +58,19 @@ pub struct InferResponse {
     pub error: Option<String>,
 }
 
+/// Reply to a request with an error response (lets serving loops fail
+/// loudly instead of dropping the reply channel and hanging the client).
+pub fn reply_error(req: &InferRequest, msg: &str) {
+    let _ = req.reply.send(InferResponse {
+        id: req.id,
+        probs: vec![],
+        latency_ms: req.submitted_at.elapsed().as_secs_f64() * 1e3,
+        sim_ms: 0.0,
+        batch: 0,
+        error: Some(msg.to_string()),
+    });
+}
+
 /// Per-batch execution record the scheduler emits for metrics.
 #[derive(Debug, Clone)]
 pub struct BatchRecord {

@@ -124,4 +124,75 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert!(!batch.is_empty());
     }
+
+    #[test]
+    fn max_batch_one_never_waits_for_peers() {
+        let ch = Channel::bounded(8);
+        for i in 0..3 {
+            ch.send(req(i)).map_err(|_| ()).unwrap();
+        }
+        // generous delay: with max_batch=1 it must still not be consulted
+        let b = DynamicBatcher::new(ch, 1, 10_000.0);
+        let t = Instant::now();
+        for _ in 0..3 {
+            assert_eq!(b.next_batch().unwrap().len(), 1);
+        }
+        assert!(t.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn max_batch_zero_normalizes_to_one() {
+        let ch = Channel::bounded(4);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        let b = DynamicBatcher::new(ch, 0, 1.0);
+        assert_eq!(b.max_batch, 1);
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn close_mid_batch_ships_partial_then_terminates() {
+        let ch = Channel::bounded(8);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        let ch2 = ch.clone();
+        let closer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            ch2.send(req(1)).map_err(|_| ()).unwrap();
+            ch2.close();
+        });
+        // long delay window: the close must cut the wait short
+        let b = DynamicBatcher::new(ch, 8, 5_000.0);
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        closer.join().unwrap();
+        assert!(batch.len() <= 2 && !batch.is_empty());
+        assert!(
+            t.elapsed() < Duration::from_millis(2_000),
+            "close() must not wait out the full delay window"
+        );
+        // drain whatever the close left behind, then terminate
+        let mut seen = batch.len();
+        while let Some(more) = b.next_batch() {
+            seen += more.len();
+        }
+        assert_eq!(seen, 2, "no request lost across the close");
+        assert!(b.next_batch().is_none(), "stays terminated");
+    }
+
+    #[test]
+    fn burst_larger_than_max_batch_splits_without_loss() {
+        let ch = Channel::bounded(32);
+        for i in 0..10 {
+            ch.send(req(i)).map_err(|_| ()).unwrap();
+        }
+        ch.close();
+        let b = DynamicBatcher::new(ch, 4, 50.0);
+        let mut sizes = Vec::new();
+        let mut ids = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            sizes.push(batch.len());
+            ids.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(sizes, vec![4, 4, 2], "burst splits at max_batch, FIFO");
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    }
 }

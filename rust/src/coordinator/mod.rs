@@ -1,5 +1,6 @@
 //! Serving coordinator: request API, router, dynamic batcher, pipeline
-//! scheduler and the serving engine.
+//! scheduler, the single-batcher serving engine and the sharded worker
+//! pool.
 //!
 //! Data path (all Rust, Python never involved):
 //!
@@ -8,17 +9,29 @@
 //!        ◀──probs────── ServingEngine workers (Strategy::infer) ◀──┘
 //! ```
 //!
+//! or, at pool scale ([`pool::WorkerPool`]):
+//!
+//! ```text
+//! client ──▶ Router ──▶ dispatcher (session % N) ──▶ per-worker batcher
+//!                 tier-1: enclave w (blind/unblind, disjoint pad domain)
+//!                 tier-2: shared open-device lanes (work-stealing tails)
+//! ```
+//!
 //! Batches form under a (max-batch, max-delay) policy; each worker owns a
 //! full strategy instance (enclave + blinding state) so batches execute
-//! in parallel without sharing enclave state across trust contexts.
+//! in parallel without sharing enclave state across trust contexts.  The
+//! pool additionally double-buffers Origami's two tiers, overlapping
+//! batch *k+1*'s enclave work with batch *k*'s device tail.
 
 pub mod api;
 pub mod batcher;
+pub mod pool;
 pub mod router;
 pub mod scheduler;
 pub mod server;
 
 pub use api::{InferRequest, InferResponse};
 pub use batcher::DynamicBatcher;
-pub use router::Router;
+pub use pool::{PoolMetrics, PoolOptions, WorkerPool};
+pub use router::{EngineHandle, Router};
 pub use server::ServingEngine;

@@ -1,0 +1,600 @@
+//! Sharded multi-worker serving pool with pipelined Origami tiers.
+//!
+//! ```text
+//!                       ┌─ worker 0: [batcher]→ tier-1 (enclave w0) ─┐
+//! clients → ingress → dispatcher (session-affinity shard)           ├→ shared tier-2 queue
+//!                       └─ worker N: [batcher]→ tier-1 (enclave wN) ─┘        │
+//!                                            tier-2 lanes (open device) ◀────┘  (work-stealing)
+//! ```
+//!
+//! Three properties the single-engine serving loop lacks:
+//!
+//! 1. **Session-affinity sharding.**  The dispatcher routes a request to
+//!    worker `session % N`, so a session's tier-1 — the part that touches
+//!    blinding state — always executes on the same enclave.  Each worker's
+//!    pad stream lives in a disjoint keyspace (`Config::blind_domain` =
+//!    worker index), so pooling never reuses a one-time pad across
+//!    workers.
+//! 2. **Tier pipelining.**  Inside a worker, tier-1 of batch *k+1*
+//!    (enclave: decrypt, blind, unblind, non-linear) overlaps tier-2 of
+//!    batch *k* (open device: the fused tail) — the overlap Origami's
+//!    two-tier split creates and a serial `Strategy::infer` loop wastes.
+//! 3. **Work stealing.**  Tier-2 tasks carry no enclave state, so they
+//!    drain through one shared queue: any idle tier-2 lane finishes any
+//!    worker's tail, absorbing load imbalance between shards.
+//!
+//! Outputs are bit-identical to the serial single-worker path: tier
+//! splitting reorders *when* work happens, never *what* is computed.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::api::{reply_error, BatchRecord, InferRequest, InferResponse};
+use super::batcher::DynamicBatcher;
+use super::scheduler::{BatchScheduler, Tier2Finisher, Tier2Task};
+use crate::util::stats::Summary;
+use crate::util::threadpool::Channel;
+
+/// Pool geometry and policy.
+#[derive(Debug, Clone)]
+pub struct PoolOptions {
+    /// Worker shards (one strategy instance + enclave each).
+    pub workers: usize,
+    /// Dynamic batcher: max batch per shard.
+    pub max_batch: usize,
+    /// Dynamic batcher: max queueing delay (ms).
+    pub max_delay_ms: f64,
+    /// Overlap tier-1/tier-2 (double-buffered tiers + stealing lanes).
+    pub pipeline: bool,
+    /// Shared ingress bound (client backpressure).
+    pub ingress_cap: usize,
+    /// Per-worker queue bound (shard backpressure).
+    pub worker_queue_cap: usize,
+}
+
+impl Default for PoolOptions {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 8,
+            max_delay_ms: 2.0,
+            pipeline: true,
+            ingress_cap: 256,
+            worker_queue_cap: 64,
+        }
+    }
+}
+
+/// Aggregated pool metrics, including per-lane simulated busy time.
+pub struct PoolMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub latency_ms: Summary,
+    pub queue_ms: Summary,
+    pub exec_wall_ms: Summary,
+    pub batch_size: Summary,
+    /// Sum of every batch's simulated cost — what one serial worker
+    /// would spend on the same traffic.
+    pub sim_ms_total: f64,
+    /// Simulated busy time of each worker's tier-1 (enclave) lane.
+    pub tier1_sim_ms: Vec<f64>,
+    /// Simulated busy time of each tier-2 (open device) lane.
+    pub tier2_sim_ms: Vec<f64>,
+    /// Sessions whose tier-1 ran on each worker (affinity audit: the
+    /// sets must be pairwise disjoint).
+    pub sessions_per_worker: Vec<BTreeSet<u64>>,
+    /// Tier-2 batches finished by a lane other than the home worker's.
+    pub stolen_batches: u64,
+}
+
+impl PoolMetrics {
+    fn new(workers: usize) -> Self {
+        Self {
+            requests: 0,
+            batches: 0,
+            errors: 0,
+            latency_ms: Summary::new(),
+            queue_ms: Summary::new(),
+            exec_wall_ms: Summary::new(),
+            batch_size: Summary::new(),
+            sim_ms_total: 0.0,
+            tier1_sim_ms: vec![0.0; workers],
+            tier2_sim_ms: vec![0.0; workers],
+            sessions_per_worker: vec![BTreeSet::new(); workers],
+            stolen_batches: 0,
+        }
+    }
+
+    fn record_batch(&mut self, rec: &BatchRecord) {
+        self.batches += 1;
+        self.requests += rec.batch as u64;
+        self.queue_ms.record(rec.queue_ms);
+        self.exec_wall_ms.record(rec.exec_wall_ms);
+        self.batch_size.record(rec.batch as f64);
+        self.sim_ms_total += rec.sim_ms;
+    }
+
+    /// Pool makespan on the simulated timeline: each tier-1 lane is an
+    /// independent enclave and each tier-2 lane an independent device
+    /// stream, so the makespan is the busiest lane.
+    pub fn simulated_makespan_ms(&self) -> f64 {
+        self.tier1_sim_ms
+            .iter()
+            .chain(self.tier2_sim_ms.iter())
+            .fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    /// Throughput speedup of the pool over one serial worker, on the
+    /// simulated-cost timeline (deterministic; independent of host core
+    /// count).
+    pub fn simulated_speedup(&self) -> f64 {
+        let makespan = self.simulated_makespan_ms();
+        if makespan <= 0.0 {
+            return 1.0;
+        }
+        self.sim_ms_total / makespan
+    }
+
+    /// True when no session's tier-1 ran on two different workers.
+    pub fn affinity_held(&self) -> bool {
+        let mut seen = BTreeSet::new();
+        for set in &self.sessions_per_worker {
+            for s in set {
+                if !seen.insert(*s) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// The multi-worker serving pool.
+pub struct WorkerPool {
+    ingress: Channel<InferRequest>,
+    worker_queues: Vec<Channel<InferRequest>>,
+    tier2_queue: Channel<Tier2Task>,
+    threads: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<PoolMetrics>>,
+    next_id: AtomicU64,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Start the pool.
+    ///
+    /// `sched_factory(w)` builds worker *w*'s [`BatchScheduler`] inside
+    /// its tier-1 thread (strategies hold thread-local runtime handles);
+    /// it must configure the strategy with `blind_domain = w` so pad
+    /// streams stay disjoint — the launcher's factories do.
+    /// `finisher_factory(w)` builds lane *w*'s [`Tier2Finisher`] inside
+    /// its tier-2 thread (only used when `opts.pipeline`).
+    pub fn start<S, F>(opts: PoolOptions, sched_factory: S, finisher_factory: F) -> Self
+    where
+        S: Fn(usize) -> Result<BatchScheduler> + Send + Sync + 'static,
+        F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
+    {
+        let workers = opts.workers.max(1);
+        let ingress: Channel<InferRequest> = Channel::bounded(opts.ingress_cap.max(1));
+        let worker_queues: Vec<Channel<InferRequest>> = (0..workers)
+            .map(|_| Channel::bounded(opts.worker_queue_cap.max(1)))
+            .collect();
+        // Double-buffer depth: one in-flight tier-2 task per worker keeps
+        // every enclave lane busy without unbounded feature-map buildup.
+        let tier2_queue: Channel<Tier2Task> = Channel::bounded(workers.max(2));
+        let metrics = Arc::new(Mutex::new(PoolMetrics::new(workers)));
+        let sched_factory = Arc::new(sched_factory);
+        let finisher_factory = Arc::new(finisher_factory);
+        let lanes = workers * if opts.pipeline { 2 } else { 1 };
+        let ready = Arc::new(Barrier::new(lanes + 1));
+        let t1_active = Arc::new(AtomicUsize::new(workers));
+        let mut threads = Vec::new();
+
+        // Dispatcher: session-affinity sharding with backpressure.
+        {
+            let ingress = ingress.clone();
+            let queues = worker_queues.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("origami-pool-dispatch".into())
+                    .spawn(move || {
+                        while let Some(req) = ingress.recv() {
+                            let w = (req.session % queues.len() as u64) as usize;
+                            if let Err(req) = queues[w].send(req) {
+                                // shard queue closed mid-shutdown: fail loud
+                                reply_error(&req, "worker pool is shutting down");
+                            }
+                        }
+                        for q in &queues {
+                            q.close();
+                        }
+                    })
+                    .expect("spawn dispatcher"),
+            );
+        }
+
+        // Tier-1 workers: one enclave-owning shard each.
+        for w in 0..workers {
+            let queue = worker_queues[w].clone();
+            let t2q = tier2_queue.clone();
+            let m = metrics.clone();
+            let factory = sched_factory.clone();
+            let r = ready.clone();
+            let active = t1_active.clone();
+            let opts_c = opts.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("origami-pool-w{w}-t1"))
+                    .spawn(move || {
+                        let batcher =
+                            DynamicBatcher::new(queue, opts_c.max_batch, opts_c.max_delay_ms);
+                        let mut sched = match factory(w) {
+                            Ok(s) => {
+                                r.wait();
+                                Some(s)
+                            }
+                            Err(e) => {
+                                eprintln!("[pool] worker {w} failed to start: {e:#}");
+                                m.lock().unwrap().errors += 1;
+                                r.wait();
+                                None
+                            }
+                        };
+                        while let Some(batch) = batcher.next_batch() {
+                            let Some(sched) = sched.as_mut() else {
+                                for req in &batch {
+                                    reply_error(req, "worker failed to start");
+                                }
+                                continue;
+                            };
+                            // Admission: a mis-sized ciphertext would fail
+                            // the whole concatenated batch (and the batch's
+                            // reply channels would be dropped, hanging the
+                            // peers' clients) — reject it alone instead.
+                            // Reachable because the pool can be driven
+                            // directly, without the Router's size check.
+                            let (batch, rejected): (Vec<InferRequest>, Vec<InferRequest>) =
+                                batch.into_iter().partition(|r| {
+                                    r.ciphertext.len() == sched.sample_bytes
+                                });
+                            if !rejected.is_empty() {
+                                let mut g = m.lock().unwrap();
+                                g.errors += rejected.len() as u64;
+                                drop(g);
+                                for req in &rejected {
+                                    reply_error(req, "ciphertext has the wrong length");
+                                }
+                            }
+                            if batch.is_empty() {
+                                continue;
+                            }
+                            {
+                                let mut g = m.lock().unwrap();
+                                for req in &batch {
+                                    g.sessions_per_worker[w].insert(req.session);
+                                }
+                            }
+                            if opts_c.pipeline {
+                                match sched.execute_tier1(batch, w) {
+                                    Ok(tasks) => {
+                                        for task in tasks {
+                                            // tier-1 failures are counted once,
+                                            // by the finisher (ok=false)
+                                            let mut g = m.lock().unwrap();
+                                            g.tier1_sim_ms[w] +=
+                                                task.ledger.grand_total_ms();
+                                            drop(g);
+                                            if let Err(task) = t2q.send(task) {
+                                                for req in &task.requests {
+                                                    reply_error(
+                                                        req,
+                                                        "tier-2 lanes are shut down",
+                                                    );
+                                                }
+                                            }
+                                        }
+                                    }
+                                    Err(e) => {
+                                        // unreachable after admission; keep
+                                        // the pool alive if it ever fires
+                                        eprintln!("[pool] w{w} tier-1 failed: {e:#}");
+                                        m.lock().unwrap().errors += 1;
+                                    }
+                                }
+                            } else {
+                                match sched.execute(batch) {
+                                    Ok(rec) => {
+                                        let mut g = m.lock().unwrap();
+                                        g.tier1_sim_ms[w] += rec.sim_ms;
+                                        g.record_batch(&rec);
+                                    }
+                                    Err(e) => {
+                                        eprintln!("[pool] w{w} batch failed: {e:#}");
+                                        m.lock().unwrap().errors += 1;
+                                    }
+                                }
+                            }
+                        }
+                        // last tier-1 worker out closes the tier-2 queue
+                        if active.fetch_sub(1, Ordering::SeqCst) == 1 {
+                            t2q.close();
+                        }
+                    })
+                    .expect("spawn tier-1 worker"),
+            );
+        }
+
+        // Tier-2 lanes: keyless finishers draining the shared queue
+        // (work stealing: any lane takes any worker's tail).
+        if opts.pipeline {
+            for w in 0..workers {
+                let t2q = tier2_queue.clone();
+                let m = metrics.clone();
+                let factory = finisher_factory.clone();
+                let r = ready.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("origami-pool-w{w}-t2"))
+                        .spawn(move || {
+                            let fin = match factory(w) {
+                                Ok(f) => {
+                                    r.wait();
+                                    Some(f)
+                                }
+                                Err(e) => {
+                                    eprintln!("[pool] tier-2 lane {w} failed: {e:#}");
+                                    m.lock().unwrap().errors += 1;
+                                    r.wait();
+                                    None
+                                }
+                            };
+                            while let Some(task) = t2q.recv() {
+                                let Some(fin) = fin.as_ref() else {
+                                    for req in &task.requests {
+                                        reply_error(req, "tier-2 lane failed to start");
+                                    }
+                                    continue;
+                                };
+                                let home = task.home_worker;
+                                let out = fin.finish(task);
+                                let mut g = m.lock().unwrap();
+                                g.tier2_sim_ms[w] += out.tier2_sim_ms;
+                                if home != w {
+                                    g.stolen_batches += 1;
+                                }
+                                if !out.ok {
+                                    g.errors += 1;
+                                }
+                                g.record_batch(&out.record);
+                            }
+                        })
+                        .expect("spawn tier-2 lane"),
+                );
+            }
+        }
+
+        ready.wait();
+        Self {
+            ingress,
+            worker_queues,
+            tier2_queue,
+            threads,
+            metrics,
+            next_id: AtomicU64::new(1),
+            workers,
+        }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    /// Submit an encrypted request; returns the reply channel.
+    pub fn submit(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<Channel<InferResponse>> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (req, reply) = InferRequest::new(id, model, ciphertext, session);
+        self.ingress
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("worker pool is shut down"))?;
+        Ok(reply)
+    }
+
+    /// Submit and block for the response (records client latency).
+    pub fn infer_blocking(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<InferResponse> {
+        let reply = self.submit(model, ciphertext, session)?;
+        let resp = reply
+            .recv()
+            .ok_or_else(|| anyhow::anyhow!("reply channel closed"))?;
+        self.metrics
+            .lock()
+            .unwrap()
+            .latency_ms
+            .record(resp.latency_ms);
+        Ok(resp)
+    }
+
+    /// Pending work across the pool: queued *requests* (ingress + shard
+    /// queues) plus queued tier-2 *batches* (each carrying up to
+    /// max-batch requests awaiting their open tail).
+    pub fn queue_depth(&self) -> usize {
+        self.ingress.len()
+            + self.worker_queues.iter().map(|q| q.len()).sum::<usize>()
+            + self.tier2_queue.len()
+    }
+
+    /// Drain and stop everything; returns the final metrics.
+    pub fn shutdown(mut self) -> PoolMetrics {
+        self.ingress.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        let metrics = std::mem::replace(
+            &mut self.metrics,
+            Arc::new(Mutex::new(PoolMetrics::new(0))),
+        );
+        Arc::try_unwrap(metrics)
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_else(|arc| {
+                let g = arc.lock().unwrap();
+                PoolMetrics {
+                    requests: g.requests,
+                    batches: g.batches,
+                    errors: g.errors,
+                    latency_ms: g.latency_ms.clone(),
+                    queue_ms: g.queue_ms.clone(),
+                    exec_wall_ms: g.exec_wall_ms.clone(),
+                    batch_size: g.batch_size.clone(),
+                    sim_ms_total: g.sim_ms_total,
+                    tier1_sim_ms: g.tier1_sim_ms.clone(),
+                    tier2_sim_ms: g.tier2_sim_ms.clone(),
+                    sessions_per_worker: g.sessions_per_worker.clone(),
+                    stolen_batches: g.stolen_batches,
+                }
+            })
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.ingress.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::enclave::cost::{Cat, CostModel, Ledger};
+    use crate::runtime::{Device, ReferenceBackend, StageExecutor};
+    use crate::strategies::Strategy;
+
+    /// Minimal deterministic strategy double: "probability" = session id.
+    struct Echo;
+
+    impl Strategy for Echo {
+        fn name(&self) -> String {
+            "echo".into()
+        }
+        fn setup(&mut self) -> Result<()> {
+            Ok(())
+        }
+        fn infer(
+            &mut self,
+            _ciphertext: &[u8],
+            batch: usize,
+            sessions: &[u64],
+            ledger: &mut Ledger,
+        ) -> Result<Vec<f32>> {
+            ledger.add_measured(Cat::DeviceCompute, 500_000);
+            Ok((0..batch)
+                .map(|i| sessions.get(i).copied().unwrap_or(0) as f32)
+                .collect())
+        }
+        fn enclave_requirement_bytes(&self) -> u64 {
+            0
+        }
+    }
+
+    fn echo_pool(workers: usize, pipeline: bool) -> WorkerPool {
+        let opts = PoolOptions {
+            workers,
+            max_batch: 4,
+            max_delay_ms: 1.0,
+            pipeline,
+            ..PoolOptions::default()
+        };
+        WorkerPool::start(
+            opts,
+            |_w| Ok(BatchScheduler::new(Box::new(Echo), 8, vec![1, 4])),
+            |_w| {
+                let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 1)?);
+                Ok(Tier2Finisher::new(
+                    Arc::new(StageExecutor::reference(rb, CostModel::default())),
+                    "sim8",
+                    Device::UntrustedCpu,
+                ))
+            },
+        )
+    }
+
+    #[test]
+    fn pool_serves_and_shards_by_session() {
+        for pipeline in [false, true] {
+            let pool = echo_pool(3, pipeline);
+            let replies: Vec<_> = (0..30u64)
+                .map(|s| (s, pool.submit("m", vec![0u8; 8], s).unwrap()))
+                .collect();
+            for (s, r) in replies {
+                let resp = r.recv().expect("reply");
+                assert!(resp.error.is_none(), "pipeline={pipeline}: {:?}", resp.error);
+                assert_eq!(resp.probs[0], s as f32, "echoed its own session");
+            }
+            let m = pool.shutdown();
+            assert_eq!(m.requests, 30);
+            assert!(m.affinity_held(), "pipeline={pipeline}");
+            // every shard saw exactly its residue class
+            for (w, set) in m.sessions_per_worker.iter().enumerate() {
+                assert!(set.iter().all(|s| (s % 3) as usize == w));
+                assert!(!set.is_empty(), "worker {w} starved");
+            }
+        }
+    }
+
+    #[test]
+    fn drop_and_idle_shutdown_are_clean() {
+        // Drop without shutdown must close + join without hanging…
+        let pool = echo_pool(2, true);
+        drop(pool);
+        // …and an idle pool shuts down with empty metrics.
+        let pool2 = echo_pool(1, false);
+        let metrics = pool2.shutdown();
+        assert_eq!(metrics.errors, 0);
+        assert_eq!(metrics.requests, 0);
+    }
+
+    #[test]
+    fn wrong_sized_ciphertext_rejected_without_hanging_peers() {
+        let pool = echo_pool(1, true);
+        // same shard, same batch window: one bad request + two good ones
+        let bad = pool.submit("m", vec![0u8; 3], 0).unwrap();
+        let good: Vec<_> = (1..=2u64)
+            .map(|i| pool.submit("m", vec![0u8; 8], 3 * i).unwrap())
+            .collect();
+        let resp = bad.recv().expect("bad request still gets a reply");
+        assert!(resp.error.is_some(), "mis-sized ciphertext must error");
+        for (i, g) in good.into_iter().enumerate() {
+            let resp = g.recv().expect("peer reply arrives (no hang)");
+            assert!(resp.error.is_none(), "peer {i}: {:?}", resp.error);
+        }
+        let m = pool.shutdown();
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.requests, 2, "only well-formed requests are served");
+    }
+
+    #[test]
+    fn lane_accounting_feeds_speedup() {
+        let mut m = PoolMetrics::new(2);
+        m.tier1_sim_ms = vec![10.0, 12.0];
+        m.tier2_sim_ms = vec![5.0, 3.0];
+        m.sim_ms_total = 30.0;
+        assert_eq!(m.simulated_makespan_ms(), 12.0);
+        assert!((m.simulated_speedup() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,7 +1,7 @@
-//! Request router: maps (model) → serving engine.
+//! Request router: maps (model) → serving engine or worker pool.
 //!
-//! A deployment can host several private-inference engines (e.g. a
-//! VGG-16 Origami engine and a VGG-19 Slalom engine); the router is the
+//! A deployment can host several private-inference backends (e.g. a
+//! VGG-16 Origami pool and a VGG-19 Slalom engine); the router is the
 //! single client-facing entry point and enforces basic admission checks
 //! (known model, correctly sized ciphertext).
 
@@ -10,12 +10,76 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Result};
 
 use super::api::InferResponse;
+use super::pool::WorkerPool;
 use super::server::ServingEngine;
 use crate::util::threadpool::Channel;
 
+/// A registered serving backend: the classic shared-batcher engine or
+/// the sharded worker pool.
+pub enum EngineHandle {
+    Engine(ServingEngine),
+    Pool(WorkerPool),
+}
+
+impl EngineHandle {
+    pub fn submit(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<Channel<InferResponse>> {
+        match self {
+            EngineHandle::Engine(e) => e.submit(model, ciphertext, session),
+            EngineHandle::Pool(p) => p.submit(model, ciphertext, session),
+        }
+    }
+
+    pub fn infer_blocking(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<InferResponse> {
+        match self {
+            EngineHandle::Engine(e) => e.infer_blocking(model, ciphertext, session),
+            EngineHandle::Pool(p) => p.infer_blocking(model, ciphertext, session),
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        match self {
+            EngineHandle::Engine(e) => e.queue_depth(),
+            EngineHandle::Pool(p) => p.queue_depth(),
+        }
+    }
+
+    pub fn shutdown(self) {
+        match self {
+            EngineHandle::Engine(e) => {
+                e.shutdown();
+            }
+            EngineHandle::Pool(p) => {
+                p.shutdown();
+            }
+        }
+    }
+}
+
+impl From<ServingEngine> for EngineHandle {
+    fn from(e: ServingEngine) -> Self {
+        EngineHandle::Engine(e)
+    }
+}
+
+impl From<WorkerPool> for EngineHandle {
+    fn from(p: WorkerPool) -> Self {
+        EngineHandle::Pool(p)
+    }
+}
+
 /// Per-model registration.
 struct Route {
-    engine: ServingEngine,
+    engine: EngineHandle,
     sample_bytes: usize,
 }
 
@@ -30,13 +94,18 @@ impl Router {
         Self::default()
     }
 
-    /// Register an engine for `model`; requests must carry ciphertexts of
-    /// exactly `sample_bytes`.
-    pub fn register(&mut self, model: &str, engine: ServingEngine, sample_bytes: usize) {
+    /// Register an engine or pool for `model`; requests must carry
+    /// ciphertexts of exactly `sample_bytes`.
+    pub fn register(
+        &mut self,
+        model: &str,
+        engine: impl Into<EngineHandle>,
+        sample_bytes: usize,
+    ) {
         self.routes.insert(
             model.to_string(),
             Route {
-                engine,
+                engine: engine.into(),
                 sample_bytes,
             },
         );

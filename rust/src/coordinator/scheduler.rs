@@ -5,14 +5,24 @@
 //! matching an exported artifact batch size; padding rides along and its
 //! outputs are discarded (PJRT executables are shape-specialized, so the
 //! batcher pads rather than recompiling — the standard serving trick).
+//!
+//! Two execution shapes:
+//! - [`BatchScheduler::execute`] — the serial path: one call runs tier-1
+//!   and tier-2 back to back and replies.
+//! - [`BatchScheduler::execute_tier1`] + [`Tier2Finisher::finish`] — the
+//!   pipelined path the worker pool uses: tier-1 (enclave-bound) yields a
+//!   [`Tier2Task`] that any open-device lane can finish, so batch *k+1*'s
+//!   tier-1 overlaps batch *k*'s tier-2.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::api::{BatchRecord, InferRequest, InferResponse, LedgerSummary};
 use crate::enclave::cost::Ledger;
-use crate::strategies::Strategy;
+use crate::runtime::{Device, StageExecutor};
+use crate::strategies::{Strategy, Tier1Output};
 
 /// Executes batches against one strategy instance.
 pub struct BatchScheduler {
@@ -132,6 +142,215 @@ impl BatchScheduler {
             ledger: LedgerSummary::from(&ledger),
         })
     }
+
+    /// Whether this scheduler's strategy supports the tier-1/tier-2 split.
+    pub fn tiered(&self) -> bool {
+        self.strategy.tiered()
+    }
+
+    /// Run only tier-1 of one formed batch, returning the open-tail tasks
+    /// (one per artifact-sized sub-batch).  Strategy failures are folded
+    /// into the task (`error`) so the finisher still replies and the
+    /// batch still produces a record.
+    pub fn execute_tier1(
+        &mut self,
+        mut requests: Vec<InferRequest>,
+        home_worker: usize,
+    ) -> Result<Vec<Tier2Task>> {
+        let n = requests.len();
+        let exec_batch = self.pick_batch(n);
+        if n > exec_batch {
+            let rest = requests.split_off(exec_batch);
+            let mut tasks = self.execute_tier1(requests, home_worker)?;
+            tasks.extend(self.execute_tier1(rest, home_worker)?);
+            return Ok(tasks);
+        }
+        let queue_ms = requests
+            .iter()
+            .map(|r| r.submitted_at.elapsed().as_secs_f64() * 1e3)
+            .fold(0.0, f64::max);
+        let sessions: Vec<u64> = requests.iter().map(|r| r.session).collect();
+        let mut cipher = Vec::with_capacity(exec_batch * self.sample_bytes);
+        for r in &requests {
+            anyhow::ensure!(
+                r.ciphertext.len() == self.sample_bytes,
+                "request {}: ciphertext {} bytes, expected {}",
+                r.id,
+                r.ciphertext.len(),
+                self.sample_bytes
+            );
+            cipher.extend_from_slice(&r.ciphertext);
+        }
+        cipher.resize(exec_batch * self.sample_bytes, 0);
+
+        let mut ledger = Ledger::new();
+        let started = Instant::now();
+        let task = match self
+            .strategy
+            .infer_tier1(&cipher, exec_batch, &sessions, &mut ledger)
+        {
+            Ok(Tier1Output::Final(probs)) => Tier2Task {
+                requests,
+                exec_batch,
+                stage: None,
+                features: probs,
+                ledger,
+                queue_ms,
+                started,
+                home_worker,
+                error: None,
+            },
+            Ok(Tier1Output::Handoff { features, stage }) => Tier2Task {
+                requests,
+                exec_batch,
+                stage: Some(stage),
+                features,
+                ledger,
+                queue_ms,
+                started,
+                home_worker,
+                error: None,
+            },
+            Err(e) => Tier2Task {
+                requests,
+                exec_batch,
+                stage: None,
+                features: Vec::new(),
+                ledger,
+                queue_ms,
+                started,
+                home_worker,
+                error: Some(format!("{e:#}")),
+            },
+        };
+        Ok(vec![task])
+    }
+}
+
+/// A tier-1-complete batch: everything a peer lane needs to finish it.
+///
+/// Carries no enclave state — only the plaintext-safe intermediate
+/// feature map (already past the privacy partition) and the reply
+/// handles, which is exactly why tier-2 tasks may be work-stolen by any
+/// worker without moving session keys.
+pub struct Tier2Task {
+    pub requests: Vec<InferRequest>,
+    pub exec_batch: usize,
+    /// Open-tail stage to run, or None when `features` are already final.
+    pub stage: Option<String>,
+    pub features: Vec<f32>,
+    /// Tier-1 costs, merged into the batch record at finish time.
+    pub ledger: Ledger,
+    pub queue_ms: f64,
+    /// When tier-1 execution began (end-to-end batch wall clock).
+    pub started: Instant,
+    /// Worker whose enclave ran tier-1 (affinity audit).
+    pub home_worker: usize,
+    /// Tier-1 failure, delivered to every request by the finisher.
+    pub error: Option<String>,
+}
+
+/// Finishes [`Tier2Task`]s on an open device: runs the tail stage,
+/// splits the batched output into per-request responses, replies.
+///
+/// Holds only an executor + device — no enclave, no keys — so the pool
+/// creates one per tier-2 lane and lets lanes steal freely.
+pub struct Tier2Finisher {
+    executor: Arc<StageExecutor>,
+    model: String,
+    device: Device,
+}
+
+impl Tier2Finisher {
+    pub fn new(executor: Arc<StageExecutor>, model: &str, device: Device) -> Self {
+        Self {
+            executor,
+            model: model.to_string(),
+            device,
+        }
+    }
+
+    /// Finish one task. The outcome's `record.sim_ms` covers both tiers;
+    /// `tier2_sim_ms` is the tier-2 share alone (lane accounting).
+    pub fn finish(&self, task: Tier2Task) -> FinishOutcome {
+        let Tier2Task {
+            requests,
+            exec_batch,
+            stage,
+            features,
+            ledger: mut total,
+            queue_ms,
+            started,
+            error,
+            ..
+        } = task;
+        let n = requests.len();
+        let mut tier2_ms = 0.0;
+        let outcome: Result<Vec<f32>> = match (error, stage) {
+            (Some(msg), _) => Err(anyhow::anyhow!(msg)),
+            (None, None) => Ok(features),
+            (None, Some(stage)) => {
+                let mut t2 = Ledger::new();
+                let r = self
+                    .executor
+                    .run(&self.model, &stage, exec_batch, &[&features], self.device, &mut t2)
+                    .map(|out| out.data);
+                tier2_ms = t2.grand_total_ms();
+                total.merge(&t2);
+                r
+            }
+        };
+        let sim_ms = total.grand_total_ms();
+        let ok = outcome.is_ok();
+        match outcome {
+            Ok(probs) => {
+                let per = probs.len() / exec_batch;
+                for (i, r) in requests.iter().enumerate() {
+                    let _ = r.reply.send(InferResponse {
+                        id: r.id,
+                        probs: probs[i * per..(i + 1) * per].to_vec(),
+                        latency_ms: r.submitted_at.elapsed().as_secs_f64() * 1e3,
+                        sim_ms: sim_ms / n as f64,
+                        batch: n,
+                        error: None,
+                    });
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in &requests {
+                    let _ = r.reply.send(InferResponse {
+                        id: r.id,
+                        probs: vec![],
+                        latency_ms: r.submitted_at.elapsed().as_secs_f64() * 1e3,
+                        sim_ms: 0.0,
+                        batch: n,
+                        error: Some(msg.clone()),
+                    });
+                }
+            }
+        }
+        FinishOutcome {
+            record: BatchRecord {
+                batch: n,
+                queue_ms,
+                exec_wall_ms: started.elapsed().as_secs_f64() * 1e3,
+                sim_ms,
+                ledger: LedgerSummary::from(&total),
+            },
+            tier2_sim_ms: tier2_ms,
+            ok,
+        }
+    }
+}
+
+/// What finishing a [`Tier2Task`] produced.
+pub struct FinishOutcome {
+    pub record: BatchRecord,
+    /// Simulated ms spent in the tier-2 tail alone.
+    pub tier2_sim_ms: f64,
+    /// False when the batch failed (tier-1 or tail error).
+    pub ok: bool,
 }
 
 #[cfg(test)]
@@ -243,5 +462,77 @@ mod tests {
         let (mut r, _c) = req(1);
         r.ciphertext = vec![0u8; 7];
         assert!(s.execute(vec![r]).is_err());
+    }
+
+    fn finisher() -> Tier2Finisher {
+        let rb = Arc::new(
+            crate::runtime::ReferenceBackend::vgg_lite("sim8", 1).unwrap(),
+        );
+        let ex = Arc::new(StageExecutor::reference(
+            rb,
+            crate::enclave::cost::CostModel::default(),
+        ));
+        Tier2Finisher::new(ex, "sim8", Device::UntrustedCpu)
+    }
+
+    #[test]
+    fn tier1_plus_finish_replies_like_execute() {
+        let mut s = sched(false);
+        assert!(!s.tiered(), "fake strategy has no open tail");
+        let (r1, c1) = req(1);
+        let (r2, c2) = req(2);
+        let tasks = s.execute_tier1(vec![r1, r2], 3).unwrap();
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].home_worker, 3);
+        assert!(tasks[0].stage.is_none(), "non-tiered → Final task");
+        let fin = finisher();
+        let out = fin.finish(tasks.into_iter().next().unwrap());
+        assert!(out.ok);
+        assert_eq!(out.record.batch, 2);
+        assert_eq!(out.tier2_sim_ms, 0.0, "no tail stage ran");
+        assert!(out.record.sim_ms >= 1.0, "tier-1 ledger carried into the record");
+        for c in [c1, c2] {
+            let resp = c.recv().unwrap();
+            assert!(resp.error.is_none());
+            assert_eq!(resp.probs.len(), 10);
+            assert_eq!(resp.batch, 2);
+        }
+    }
+
+    #[test]
+    fn tier1_splits_oversized_batches() {
+        let mut s = sched(false);
+        let mut reqs = Vec::new();
+        let mut chans = Vec::new();
+        for i in 0..11 {
+            let (r, c) = req(i);
+            reqs.push(r);
+            chans.push(c);
+        }
+        let tasks = s.execute_tier1(reqs, 0).unwrap();
+        assert_eq!(tasks.len(), 2, "11 reqs over [1,8] artifacts → 8 + 3");
+        let fin = finisher();
+        for t in tasks {
+            fin.finish(t);
+        }
+        for c in chans {
+            assert!(c.recv().unwrap().error.is_none());
+        }
+    }
+
+    #[test]
+    fn tier1_failure_reaches_every_request_via_finisher() {
+        let mut s = sched(true);
+        let (r1, c1) = req(1);
+        let (r2, c2) = req(2);
+        let tasks = s.execute_tier1(vec![r1, r2], 0).unwrap();
+        assert_eq!(tasks.len(), 1);
+        assert!(tasks[0].error.is_some());
+        let fin = finisher();
+        let out = fin.finish(tasks.into_iter().next().unwrap());
+        assert!(!out.ok);
+        assert_eq!(out.record.batch, 2);
+        assert!(c1.recv().unwrap().error.is_some());
+        assert!(c2.recv().unwrap().error.is_some());
     }
 }

@@ -75,6 +75,11 @@ impl ServingEngine {
                 std::thread::Builder::new()
                     .name(format!("origami-serve-{i}"))
                     .spawn(move || {
+                        // NOTE: workers share one batcher, so a worker
+                        // that fails setup simply exits — its peers keep
+                        // serving.  (The WorkerPool differs: per-worker
+                        // queues mean a failed shard must keep draining
+                        // and erroring, which pool.rs does.)
                         let mut sched = match f(i) {
                             Ok(s) => {
                                 r.wait();

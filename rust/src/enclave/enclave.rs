@@ -306,8 +306,10 @@ impl Enclave {
     /// Decrypt a *batch* of independently encrypted samples: the dynamic
     /// batcher concatenates requests from different client sessions, so
     /// each `sample_bytes`-sized slice is decrypted under its own session
-    /// keystream (`sessions[i]`; missing entries — batch padding — use
-    /// session 0).
+    /// keystream (`sessions[i]`).  Slices with no session entry are batch
+    /// padding and decode to zero samples — decrypting padding under some
+    /// default keystream would inject unbounded garbage activations into
+    /// the blinded pipeline (and violate its decodability invariant).
     pub fn decrypt_batch(
         &mut self,
         sessions: &[u64],
@@ -322,7 +324,10 @@ impl Enclave {
         let t = Timer::start();
         let mut out = Vec::with_capacity(ciphertext.len() / 4);
         for (i, chunk) in ciphertext.chunks_exact(sample_bytes).enumerate() {
-            let session = sessions.get(i).copied().unwrap_or(0);
+            let Some(&session) = sessions.get(i) else {
+                out.resize(out.len() + sample_bytes / 4, 0.0);
+                continue;
+            };
             let key = crypto::derive_aes_key(&self.master, &format!("session-{session}"));
             let mut plain = chunk.to_vec();
             AesCtr::new(&key, session).apply(0, &mut plain);
@@ -453,6 +458,22 @@ mod tests {
         assert_ne!(&ct[..4], &input[0].to_le_bytes());
         let back = e.decrypt_input(42, &ct, &mut l).unwrap();
         assert_eq!(back, input);
+    }
+
+    #[test]
+    fn batch_padding_decodes_to_zeros() {
+        let mut e = enclave(1);
+        let mut l = Ledger::new();
+        let input = vec![0.5f32, -1.25, 3.0, 0.0];
+        let ct = Enclave::encrypt_for_session(b"seed", 7, &input);
+        let mut batch_ct = ct.clone();
+        batch_ct.extend_from_slice(&vec![0u8; ct.len()]); // padding slot
+        let out = e.decrypt_batch(&[7], 2, &batch_ct, &mut l).unwrap();
+        assert_eq!(&out[..4], &input[..]);
+        assert!(
+            out[4..].iter().all(|&v| v == 0.0),
+            "padding must decode to zero samples, not keystream garbage"
+        );
     }
 
     #[test]

@@ -101,6 +101,121 @@ mod tests {
         );
     }
 
+    /// End-to-end blinding identity over random shapes and batches: for a
+    /// random quantized weight matrix W_q, blinding factors r and inputs
+    /// x, the full pipeline
+    ///
+    ///   blind(x, r) → device computes W_q·(x_q + r) mod 2^24 →
+    ///   unblind with R = W_q·r mod 2^24 → dequantize
+    ///
+    /// must equal the unblinded quantized reference W_q·x_q / 2^16
+    /// computed in exact i64 arithmetic — the identity Origami's tier-1
+    /// offload (and the Pallas `lin_blind` kernel) rests on.  The device
+    /// side uses the same wrapping-u32 arithmetic as the reference
+    /// backend, so this pins the quantized path hermetically.
+    #[test]
+    fn blinded_offload_roundtrip_matches_reference() {
+        use crate::blinding::blind::{blind_into, unblind_into};
+        use crate::blinding::quant::{MOD_P, SCALE_X, SCALE_XW};
+        const MASK: u32 = MOD_P - 1;
+
+        struct Case {
+            batch: usize,
+            d_in: usize,
+            d_out: usize,
+            x: Vec<f32>,
+            wq: Vec<i32>,
+            r: Vec<u32>,
+        }
+        impl std::fmt::Debug for Case {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(
+                    f,
+                    "Case(batch={}, d_in={}, d_out={})",
+                    self.batch, self.d_in, self.d_out
+                )
+            }
+        }
+
+        // mod-P matmul with wrapping u32 (the device/offload arithmetic)
+        fn matmul_mod(inp: &[u32], wq: &[i32], batch: usize, d_in: usize, d_out: usize) -> Vec<u32> {
+            let mut out = vec![0u32; batch * d_out];
+            for b in 0..batch {
+                for i in 0..d_in {
+                    let xv = inp[b * d_in + i];
+                    for o in 0..d_out {
+                        let prod = (wq[i * d_out + o] as u32).wrapping_mul(xv);
+                        out[b * d_out + o] = out[b * d_out + o].wrapping_add(prod);
+                    }
+                }
+            }
+            for v in out.iter_mut() {
+                *v &= MASK;
+            }
+            out
+        }
+
+        forall(
+            48,
+            2024,
+            |rng: &mut Rng, s: Size| {
+                let batch = 1 + rng.below(4) as usize;
+                let d_in = 1 + rng.below(1 + (s.0 as u32 * 2).min(95)) as usize;
+                let d_out = 1 + rng.below(8) as usize;
+                // bounds keep |W_q·x_q| < 2^23 (the decodability invariant)
+                let x: Vec<f32> = (0..batch * d_in).map(|_| rng.range_f32(-4.0, 4.0)).collect();
+                let wq: Vec<i32> = (0..d_in * d_out)
+                    .map(|_| rng.below(129) as i32 - 64)
+                    .collect();
+                let r: Vec<u32> = (0..batch * d_in).map(|_| rng.below(MOD_P)).collect();
+                Case {
+                    batch,
+                    d_in,
+                    d_out,
+                    x,
+                    wq,
+                    r,
+                }
+            },
+            |c: &Case| {
+                // 1. enclave: fused quantize+blind
+                let mut blinded = vec![0f32; c.x.len()];
+                blind_into(&c.x, &c.r, &mut blinded);
+                // 2. device: linear op in the mod-2^24 domain
+                let bl_u: Vec<u32> = blinded.iter().map(|&v| v as u32).collect();
+                let y_dev = matmul_mod(&bl_u, &c.wq, c.batch, c.d_in, c.d_out);
+                // 3. setup-time unblinding factors: R = W_q·r mod P
+                let r_u = matmul_mod(&c.r, &c.wq, c.batch, c.d_in, c.d_out);
+                // 4. enclave: fused unblind+dequantize
+                let y_f: Vec<f32> = y_dev.iter().map(|&v| v as f32).collect();
+                let ru_f: Vec<f32> = r_u.iter().map(|&v| v as f32).collect();
+                let mut out = vec![0f32; y_f.len()];
+                unblind_into(&y_f, &ru_f, &mut out);
+                // reference: exact i64 quantized linear algebra
+                for b in 0..c.batch {
+                    for o in 0..c.d_out {
+                        let mut acc: i64 = 0;
+                        for i in 0..c.d_in {
+                            let xq = (c.x[b * c.d_in + i] * SCALE_X).round() as i64;
+                            acc += c.wq[i * c.d_out + o] as i64 * xq;
+                        }
+                        if acc.abs() >= (1 << 23) {
+                            return Err(format!("generator violated decode range: {acc}"));
+                        }
+                        let want = acc as f32 / SCALE_XW;
+                        let got = out[b * c.d_out + o];
+                        if (got - want).abs() > 1e-6 {
+                            return Err(format!(
+                                "b={b} o={o}: roundtrip {got} vs reference {want}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn deterministic_given_seed() {
         use std::sync::Mutex;

@@ -1,17 +1,24 @@
-//! Launcher: assemble the full stack (PJRT client → registry → executor
-//! → strategy → serving engine) from a [`Config`].  Shared by the CLI,
+//! Launcher: assemble the full stack (backend → executor → strategy →
+//! serving engine / worker pool) from a [`Config`].  Shared by the CLI,
 //! the examples and the benches.
+//!
+//! Two backends, picked by model name:
+//! - `sim*` models (e.g. `sim8`) run on the hermetic pure-Rust
+//!   [`ReferenceBackend`] — no artifacts, no PJRT, fully deterministic.
+//! - everything else loads compiled HLO artifacts through the PJRT
+//!   client ([`Stack::load`]).
 
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::config::Config;
-use crate::coordinator::scheduler::BatchScheduler;
-use crate::coordinator::ServingEngine;
+use crate::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
+use crate::coordinator::{PoolOptions, ServingEngine, WorkerPool};
 use crate::enclave::cost::CostModel;
 use crate::model::{Manifest, Model};
-use crate::runtime::{ArtifactRegistry, PjrtClient, StageExecutor};
+use crate::runtime::reference::is_sim_model;
+use crate::runtime::{ArtifactRegistry, Device, PjrtClient, ReferenceBackend, StageExecutor};
 use crate::strategies::{self, Strategy, StrategyCtx};
 
 /// The assembled, strategy-agnostic lower stack.
@@ -46,11 +53,7 @@ impl Stack {
     /// Build + set up one strategy instance per the config.
     pub fn build_strategy(&self, config: &Config) -> Result<Box<dyn Strategy>> {
         let model = self.model(&config.model)?;
-        let ctx = StrategyCtx::new(self.executor.clone(), model, config.clone())?;
-        let mut s = strategies::build(ctx, &config.strategy, config.partition)?;
-        s.setup()
-            .with_context(|| format!("setting up strategy {}", s.name()))?;
-        Ok(s)
+        build_strategy_with(self.executor.clone(), model, config)
     }
 
     /// Plaintext image bytes per sample for a model.
@@ -61,12 +64,7 @@ impl Stack {
 
     /// Batch sizes exported for the full/tail stages of a model.
     pub fn artifact_batches(&self, model: &str) -> Result<Vec<usize>> {
-        let m = self.manifest.model(model)?;
-        let mut b = m.batches_for("full_open");
-        if b.is_empty() {
-            b.push(1);
-        }
-        Ok(b)
+        Ok(self.manifest.model(model)?.serving_batches())
     }
 
     /// Spin up a serving engine with `config.workers` independent
@@ -78,10 +76,65 @@ impl Stack {
         let batches = self.artifact_batches(&config.model)?;
         start_engine_from_config(config.clone(), sample_bytes, batches)
     }
+
+    /// Spin up a sharded worker pool per the config (see
+    /// [`start_pool_from_config`]).
+    pub fn start_pool(&self, config: &Config) -> Result<WorkerPool> {
+        start_pool_from_config(config.clone())
+    }
+}
+
+/// Build the executor + model for a config, on whichever backend the
+/// model name selects (`sim*` → reference interpreter, else artifacts).
+pub fn executor_for(config: &Config) -> Result<(Arc<StageExecutor>, Arc<Model>)> {
+    if is_sim_model(&config.model) {
+        let rb = Arc::new(ReferenceBackend::vgg_lite(&config.model, config.seed)?);
+        let model = Arc::new(rb.model().clone());
+        let executor = Arc::new(StageExecutor::reference(rb, CostModel::default()));
+        Ok((executor, model))
+    } else {
+        let stack = Stack::load(config)?;
+        let model = stack.model(&config.model)?;
+        Ok((stack.executor, model))
+    }
+}
+
+/// Build + set up a strategy on an already-constructed executor.
+pub fn build_strategy_with(
+    executor: Arc<StageExecutor>,
+    model: Arc<Model>,
+    config: &Config,
+) -> Result<Box<dyn Strategy>> {
+    let ctx = StrategyCtx::new(executor, model, config.clone())?;
+    let mut s = strategies::build(ctx, &config.strategy, config.partition)?;
+    s.setup()
+        .with_context(|| format!("setting up strategy {}", s.name()))?;
+    Ok(s)
+}
+
+/// Build a complete [`BatchScheduler`] (backend + strategy + batch
+/// policy) for a config — one call per worker thread.
+pub fn scheduler_for(config: &Config) -> Result<BatchScheduler> {
+    let (executor, model) = executor_for(config)?;
+    let sample_bytes = 4 * model.image * model.image * model.in_channels;
+    let batches = model.serving_batches();
+    let strategy = build_strategy_with(executor, model, config)?;
+    Ok(BatchScheduler::new(strategy, sample_bytes, batches))
+}
+
+/// Build a keyless tier-2 finisher for a config — one call per tier-2
+/// lane thread.
+pub fn finisher_for(config: &Config) -> Result<Tier2Finisher> {
+    let (executor, model) = executor_for(config)?;
+    Ok(Tier2Finisher::new(
+        executor,
+        &model.name,
+        Device::parse(&config.device)?,
+    ))
 }
 
 /// Start a serving engine without a pre-built Stack; every worker builds
-/// its own inside its thread.
+/// its own backend inside its thread.
 pub fn start_engine_from_config(
     config: Config,
     sample_bytes: usize,
@@ -95,14 +148,41 @@ pub fn start_engine_from_config(
         max_batch,
         max_delay,
         move |_worker| {
-            let stack = Stack::load(&config)?;
-            let strategy = stack.build_strategy(&config)?;
+            let (executor, model) = executor_for(&config)?;
+            let strategy = build_strategy_with(executor, model, &config)?;
             Ok(BatchScheduler::new(
                 strategy,
                 sample_bytes,
                 artifact_batches.clone(),
             ))
         },
+    ))
+}
+
+/// Start the sharded worker pool: `config.workers` enclave shards with
+/// session-affinity routing, disjoint per-worker blinding domains, and
+/// (when `config.pipeline`) double-buffered tier-1/tier-2 execution with
+/// work-stealing tier-2 lanes.
+pub fn start_pool_from_config(config: Config) -> Result<WorkerPool> {
+    let opts = PoolOptions {
+        workers: config.workers.max(1),
+        max_batch: config.max_batch,
+        max_delay_ms: config.max_delay_ms,
+        pipeline: config.pipeline,
+        ..PoolOptions::default()
+    };
+    let sched_cfg = config.clone();
+    let fin_cfg = config;
+    Ok(WorkerPool::start(
+        opts,
+        move |worker| {
+            // Worker index = blinding domain: pads never repeat across
+            // shards even though all shards share the deployment master.
+            let mut c = sched_cfg.clone();
+            c.blind_domain = worker as u64;
+            scheduler_for(&c)
+        },
+        move |_lane| finisher_for(&fin_cfg),
     ))
 }
 
@@ -163,6 +243,64 @@ pub fn synth_images(n: usize, image: usize, channels: usize, seed: u64) -> Vec<V
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sim_scheduler_builds_and_serves_one_request() {
+        let cfg = Config {
+            model: "sim8".into(),
+            strategy: "origami/6".into(),
+            pool_epochs: 4,
+            ..Config::default()
+        };
+        let mut sched = scheduler_for(&cfg).unwrap();
+        assert!(sched.tiered(), "origami splits into tiers");
+        assert_eq!(sched.sample_bytes, 4 * 8 * 8 * 3);
+        let img = &synth_images(1, 8, 3, cfg.seed)[0];
+        let ct = encrypt_request(&cfg, 0, img);
+        let (req, reply) = crate::coordinator::InferRequest::new(1, "sim8", ct, 0);
+        let rec = sched.execute(vec![req]).unwrap();
+        assert_eq!(rec.batch, 1);
+        assert!(rec.sim_ms > 0.0);
+        let resp = reply.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.probs.len(), 10);
+        let sum: f32 = resp.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "softmax sums to 1: {sum}");
+    }
+
+    /// Hermetic version of the artifact-gated strategy agreement test:
+    /// every strategy run on the reference backend must land close to
+    /// the open (non-private) reference on the same encrypted input.
+    #[test]
+    fn sim_strategies_agree_with_open_reference() {
+        let base = Config {
+            model: "sim8".into(),
+            pool_epochs: 4,
+            ..Config::default()
+        };
+        let img = &synth_images(1, 8, 3, base.seed)[0];
+        let run = |strategy: &str| -> Vec<f32> {
+            let mut cfg = base.clone();
+            cfg.strategy = strategy.into();
+            let (executor, model) = executor_for(&cfg).unwrap();
+            let mut s = build_strategy_with(executor, model, &cfg).unwrap();
+            let ct = encrypt_request(&cfg, 0, img);
+            s.infer(&ct, 1, &[0], &mut crate::enclave::cost::Ledger::new())
+                .unwrap()
+        };
+        let open = run("open");
+        assert_eq!(open.len(), 10);
+        for strategy in ["baseline2", "split/6", "slalom", "origami/6"] {
+            let probs = run(strategy);
+            let diff = probs
+                .iter()
+                .zip(&open)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // blinded tiers quantize activations to 2^-8 per layer
+            assert!(diff < 0.05, "{strategy}: max diff {diff}");
+        }
+    }
 
     #[test]
     fn synth_images_structured_and_deterministic() {

@@ -5,15 +5,37 @@
 //! Trusted Execution Environments* (Narra et al., 2019).
 //!
 //! The crate embeds a PJRT CPU client ([`runtime`]) that executes HLO
-//! artifacts AOT-lowered from the JAX/Pallas layers, a functional+cost
-//! simulator of an Intel-SGX-like enclave ([`enclave`]), the Slalom-style
-//! cryptographic blinding engine ([`blinding`]), the four execution
-//! strategies the paper evaluates ([`strategies`]), the privacy
-//! evaluation tooling ([`privacy`]) and the serving coordinator
-//! ([`coordinator`]: router, dynamic batcher, two-tier scheduler).
+//! artifacts AOT-lowered from the JAX/Pallas layers — plus a hermetic
+//! pure-Rust reference backend ([`runtime::reference`]) for `sim*`
+//! models — a functional+cost simulator of an Intel-SGX-like enclave
+//! ([`enclave`]), the Slalom-style cryptographic blinding engine
+//! ([`blinding`]), the four execution strategies the paper evaluates
+//! ([`strategies`]), the privacy evaluation tooling ([`privacy`]) and
+//! the serving coordinator ([`coordinator`]).
+//!
+//! ## Serving architecture
+//!
+//! Two serving shapes share the router/batcher/scheduler substrate:
+//!
+//! - [`coordinator::ServingEngine`] — N workers pulling batches from one
+//!   shared [`coordinator::DynamicBatcher`]; each worker owns a complete
+//!   strategy instance and runs `Strategy::infer` serially.
+//! - [`coordinator::WorkerPool`] — the production-scale path: requests
+//!   shard by session affinity onto per-worker batchers (`session % N`),
+//!   each worker owns its own enclave whose blinding pads live in a
+//!   *disjoint keyspace* (`Config::blind_domain` = worker index), and
+//!   Origami's two tiers are split ([`strategies::Tier1Output`]) and
+//!   double-buffered: while a worker's enclave blinds batch *k+1*
+//!   (tier 1), batch *k*'s open tail (tier 2) streams on the device
+//!   through shared work-stealing finisher lanes
+//!   ([`coordinator::scheduler::Tier2Finisher`]).  Tier splitting
+//!   reorders when work happens, never what is computed, so pooled
+//!   outputs are bit-identical to the serial path.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
-//! model once; everything here is self-contained afterwards.
+//! model once; everything here is self-contained afterwards.  Offline
+//! builds (no PJRT) run every strategy end-to-end on the reference
+//! backend: `cargo run --example pool_serving`.
 
 pub mod blinding;
 pub mod config;

@@ -64,7 +64,7 @@ fn print_help() {
            inspect            show manifest / config / memory analytics\n\n\
          Common options:\n\
            --artifacts <dir>  artifacts root [./artifacts]\n\
-           --model <name>     vgg16-32 | vgg19-32 [vgg16-32]\n\
+           --model <name>     vgg16-32 | vgg19-32 | sim8 (no artifacts) [vgg16-32]\n\
            --strategy <s>     baseline2|split/N|slalom|origami[/N]|open\n\
            --device <d>       cpu | gpu [cpu]\n\
            --partition <p>    Origami partition layer [6]\n\
@@ -74,15 +74,18 @@ fn print_help() {
            --rate <rps>       Poisson arrival rate [50]\n\
            --workers <n>      strategy workers [2]\n\
            --max-batch <n>    batcher limit [8]\n\
-           --max-delay-ms <f> batcher delay [2.0]"
+           --max-delay-ms <f> batcher delay [2.0]\n\
+           --pool             sharded worker pool (session affinity +\n\
+                              pipelined Origami tiers) instead of the\n\
+                              shared-batcher engine\n\
+           --no-pipeline      pool only: serialize tier-1/tier-2 again"
     );
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {
     let config = Config::from_args(args)?;
-    let stack = Stack::load(&config)?;
-    let model = stack.model(&config.model)?;
-    let mut strategy = stack.build_strategy(&config)?;
+    let (executor, model) = origami::launcher::executor_for(&config)?;
+    let mut strategy = origami::launcher::build_strategy_with(executor, model.clone(), &config)?;
     println!(
         "model={} strategy={} device={} enclave={}",
         config.model,
@@ -127,29 +130,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let config = Config::from_args(args)?;
     let requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 50.0)?;
-    let stack = Stack::load(&config)?;
-    let model = stack.model(&config.model)?;
+    let use_pool = args.has("pool");
+    // metadata probe (validates the model/backend before spawning workers)
+    let (_, model) = origami::launcher::executor_for(&config)?;
     println!(
-        "starting engine: model={} strategy={} device={} workers={} \
-         max_batch={} max_delay={}ms",
+        "starting {}: model={} strategy={} device={} workers={} \
+         max_batch={} max_delay={}ms pipeline={}",
+        if use_pool { "worker pool" } else { "engine" },
         config.model,
         config.strategy,
         config.device,
         config.workers,
         config.max_batch,
-        config.max_delay_ms
+        config.max_delay_ms,
+        config.pipeline,
     );
-    let engine = stack.start_engine(&config)?;
+    let handle: origami::coordinator::EngineHandle = if use_pool {
+        origami::launcher::start_pool_from_config(config.clone())?.into()
+    } else {
+        let sample_bytes = 4 * model.image * model.image * model.in_channels;
+        origami::launcher::start_engine_from_config(
+            config.clone(),
+            sample_bytes,
+            model.serving_batches(),
+        )?
+        .into()
+    };
 
     // Open-loop Poisson workload from a client thread pool.
     let images = synth_images(requests, model.image, model.in_channels, config.seed);
     let mut rng = origami::util::rng::Rng::new(config.seed ^ 0xC11E17);
-    let engine = std::sync::Arc::new(engine);
+    let handle = std::sync::Arc::new(handle);
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for (i, img) in images.iter().enumerate() {
         let ct = encrypt_request(&config, i as u64, img);
-        let eng = engine.clone();
+        let eng = handle.clone();
         let model_name = config.model.clone();
         handles.push(std::thread::spawn(move || {
             eng.infer_blocking(&model_name, ct, i as u64)
@@ -168,28 +184,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let elapsed = t0.elapsed().as_secs_f64();
 
-    let engine = std::sync::Arc::try_unwrap(engine)
-        .map_err(|_| anyhow::anyhow!("engine still referenced"))?;
-    let metrics = engine.shutdown();
+    let handle = std::sync::Arc::try_unwrap(handle)
+        .map_err(|_| anyhow::anyhow!("serving handle still referenced"))?;
     println!(
         "\nserved {ok} ok / {failed} failed in {:.2}s → {:.1} req/s",
         elapsed,
         ok as f64 / elapsed
     );
-    println!(
-        "latency  p50 {} p95 {} p99 {} max {}",
-        fmt_ms(metrics.latency_ms.p50()),
-        fmt_ms(metrics.latency_ms.p95()),
-        fmt_ms(metrics.latency_ms.p99()),
-        fmt_ms(metrics.latency_ms.max())
-    );
-    println!(
-        "batches  {} formed, mean size {:.2}, exec p50 {} | sim p50 {}",
-        metrics.batches,
-        metrics.batch_size.mean(),
-        fmt_ms(metrics.exec_wall_ms.p50()),
-        fmt_ms(metrics.sim_ms.p50())
-    );
+    match handle {
+        origami::coordinator::EngineHandle::Engine(engine) => {
+            let metrics = engine.shutdown();
+            println!(
+                "latency  p50 {} p95 {} p99 {} max {}",
+                fmt_ms(metrics.latency_ms.p50()),
+                fmt_ms(metrics.latency_ms.p95()),
+                fmt_ms(metrics.latency_ms.p99()),
+                fmt_ms(metrics.latency_ms.max())
+            );
+            println!(
+                "batches  {} formed, mean size {:.2}, exec p50 {} | sim p50 {}",
+                metrics.batches,
+                metrics.batch_size.mean(),
+                fmt_ms(metrics.exec_wall_ms.p50()),
+                fmt_ms(metrics.sim_ms.p50())
+            );
+        }
+        origami::coordinator::EngineHandle::Pool(pool) => {
+            let metrics = pool.shutdown();
+            println!(
+                "latency  p50 {} p95 {} p99 {} max {}",
+                fmt_ms(metrics.latency_ms.p50()),
+                fmt_ms(metrics.latency_ms.p95()),
+                fmt_ms(metrics.latency_ms.p99()),
+                fmt_ms(metrics.latency_ms.max())
+            );
+            println!(
+                "batches  {} formed, mean size {:.2}, tier-2 steals {}",
+                metrics.batches,
+                metrics.batch_size.mean(),
+                metrics.stolen_batches
+            );
+            println!(
+                "pool     sim total {} | sim makespan {} | simulated speedup {:.2}x | affinity {}",
+                fmt_ms(metrics.sim_ms_total),
+                fmt_ms(metrics.simulated_makespan_ms()),
+                metrics.simulated_speedup(),
+                if metrics.affinity_held() { "held" } else { "VIOLATED" }
+            );
+        }
+    }
     Ok(())
 }
 

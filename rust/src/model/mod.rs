@@ -165,6 +165,18 @@ impl Model {
             })
     }
 
+    /// Batch sizes the serving scheduler may pick for this model: the
+    /// exported `full_open` set, falling back to batch 1.  Single source
+    /// of the batching policy shared by the launcher, the strategies'
+    /// unblinding-factor precompute and the CLI.
+    pub fn serving_batches(&self) -> Vec<usize> {
+        let mut b = self.batches_for("full_open");
+        if b.is_empty() {
+            b.push(1);
+        }
+        b
+    }
+
     /// Batch sizes exported for a given stage.
     pub fn batches_for(&self, stage: &str) -> Vec<usize> {
         let mut v: Vec<usize> = self

@@ -1,9 +1,16 @@
 //! Stage executor: typed tensor execution with device cost attribution.
 //!
-//! One [`StageExecutor`] per process wraps the artifact registry and
-//! provides `run(model, stage, batch, inputs, device, ledger)`:
-//! PJRT-execute the compiled stage, measure wall time, and let the
-//! [`Device`] profile decide how that time enters the simulated ledger.
+//! One [`StageExecutor`] per worker wraps a *stage backend* and provides
+//! `run(model, stage, batch, inputs, device, ledger)`: execute the stage,
+//! measure wall time, and let the [`Device`] profile decide how that time
+//! enters the simulated ledger.
+//!
+//! Two backends exist:
+//! - [`StageBackend::Pjrt`] — compiled HLO artifacts through the PJRT
+//!   client (requires the real `xla` crate + `make artifacts`).
+//! - [`StageBackend::Reference`] — the pure-Rust interpreter over a
+//!   synthetic model ([`ReferenceBackend`]); hermetic, deterministic,
+//!   used by the worker-pool tests/benches and any `sim*` model.
 
 use std::sync::Arc;
 
@@ -11,6 +18,7 @@ use anyhow::Result;
 
 use super::artifact::ArtifactRegistry;
 use super::device::Device;
+use super::reference::ReferenceBackend;
 use crate::enclave::cost::{CostModel, Ledger};
 use crate::util::stats::Timer;
 
@@ -52,19 +60,57 @@ pub struct StageOutput {
     pub wall_ns: u64,
 }
 
-/// Executes stages through the registry on a given device profile.
+/// Where stages actually execute.
+pub enum StageBackend {
+    /// Compiled HLO artifacts on the embedded PJRT client.
+    Pjrt(Arc<ArtifactRegistry>),
+    /// The pure-Rust reference interpreter (no artifacts needed).
+    Reference(Arc<ReferenceBackend>),
+}
+
+/// Executes stages through a backend on a given device profile.
 pub struct StageExecutor {
-    registry: Arc<ArtifactRegistry>,
+    backend: StageBackend,
     pub cost: CostModel,
 }
 
 impl StageExecutor {
+    /// PJRT-artifact executor (the production path).
     pub fn new(registry: Arc<ArtifactRegistry>, cost: CostModel) -> Self {
-        Self { registry, cost }
+        Self {
+            backend: StageBackend::Pjrt(registry),
+            cost,
+        }
     }
 
-    pub fn registry(&self) -> &Arc<ArtifactRegistry> {
-        &self.registry
+    /// Reference-backend executor (hermetic path).
+    pub fn reference(backend: Arc<ReferenceBackend>, cost: CostModel) -> Self {
+        Self {
+            backend: StageBackend::Reference(backend),
+            cost,
+        }
+    }
+
+    /// Pre-compile/warm a set of stages (setup phase). No-op for the
+    /// reference backend, which has nothing to compile.
+    pub fn warm(&self, model: &str, stages: &[(&str, usize)]) -> Result<()> {
+        match &self.backend {
+            StageBackend::Pjrt(reg) => reg.warm(model, stages),
+            StageBackend::Reference(rb) => {
+                for (stage, batch) in stages {
+                    rb.stage_meta(model, stage, *batch)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The artifact registry, when running on the PJRT backend.
+    pub fn registry(&self) -> Option<&Arc<ArtifactRegistry>> {
+        match &self.backend {
+            StageBackend::Pjrt(reg) => Some(reg),
+            StageBackend::Reference(_) => None,
+        }
     }
 
     /// Execute `stage` of `model` with `inputs` on `device`, attributing
@@ -78,7 +124,10 @@ impl StageExecutor {
         device: Device,
         ledger: &mut Ledger,
     ) -> Result<StageOutput> {
-        let meta = self.registry.stage_meta(model, stage, batch)?;
+        let meta = match &self.backend {
+            StageBackend::Pjrt(reg) => reg.stage_meta(model, stage, batch)?,
+            StageBackend::Reference(rb) => rb.stage_meta(model, stage, batch)?,
+        };
         anyhow::ensure!(
             inputs.len() == meta.input_shapes.len(),
             "stage {stage}: {} inputs given, {} expected",
@@ -94,18 +143,26 @@ impl StageExecutor {
                 shape
             );
         }
-        let exe = self.registry.get(model, stage, batch)?;
-        let shaped: Vec<(&[f32], &[usize])> = inputs
-            .iter()
-            .zip(&meta.input_shapes)
-            .map(|(d, s)| (*d, s.as_slice()))
-            .collect();
+
         let t = Timer::start();
-        let data = self.registry.client().run_f32(&exe, &shaped)?;
+        let data = match &self.backend {
+            StageBackend::Pjrt(reg) => {
+                let exe = reg.get(model, stage, batch)?;
+                let shaped: Vec<(&[f32], &[usize])> = inputs
+                    .iter()
+                    .zip(&meta.input_shapes)
+                    .map(|(d, s)| (*d, s.as_slice()))
+                    .collect();
+                reg.client().run_f32(&exe, &shaped)?
+            }
+            StageBackend::Reference(rb) => rb.execute(model, stage, batch, inputs)?,
+        };
         let wall_ns = t.elapsed().as_nanos() as u64;
 
-        let model_meta = self.registry.manifest().model(model)?;
-        let class = OpClass::of_stage(model_meta, stage);
+        let class = match &self.backend {
+            StageBackend::Pjrt(reg) => OpClass::of_stage(reg.manifest().model(model)?, stage),
+            StageBackend::Reference(rb) => OpClass::of_stage(rb.model(), stage),
+        };
         let bytes_moved: u64 = inputs.iter().map(|d| 4 * d.len() as u64).sum::<u64>()
             + 4 * data.len() as u64;
         let sim_ns = device.account(wall_ns, bytes_moved, class, &self.cost, ledger);
@@ -152,5 +209,26 @@ mod tests {
         assert_eq!(OpClass::of_stage(&conv, "layer01_lin_open"), OpClass::Conv);
         assert_eq!(OpClass::of_stage(&conv, "tail_p06"), OpClass::Mixed);
         assert_eq!(OpClass::of_stage(&conv, "full_open"), OpClass::Mixed);
+    }
+
+    #[test]
+    fn reference_backend_runs_and_accounts() {
+        use crate::runtime::reference::ReferenceBackend;
+        let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 7).unwrap());
+        let ex = StageExecutor::reference(rb, CostModel::default());
+        ex.warm("sim8", &[("full_open", 1)]).unwrap();
+        let x = vec![0.5f32; 8 * 8 * 3];
+        let mut l = Ledger::new();
+        let out = ex
+            .run("sim8", "full_open", 1, &[&x], Device::UntrustedCpu, &mut l)
+            .unwrap();
+        assert_eq!(out.shape, vec![1, 10]);
+        assert_eq!(out.data.len(), 10);
+        assert!(l.measured_ns(crate::enclave::cost::Cat::DeviceCompute) > 0);
+        // wrong input length rejected
+        assert!(ex
+            .run("sim8", "full_open", 1, &[&x[..10]], Device::UntrustedCpu, &mut l)
+            .is_err());
+        assert!(ex.registry().is_none());
     }
 }

@@ -10,13 +10,18 @@
 //!                  artifacts for real (measured); the GPU profile scales
 //!                  the measured CPU time by calibrated per-op-class
 //!                  speedups (modeled — DESIGN.md §2).
+//! - [`reference`]— pure-Rust stage interpreter over synthetic `sim*`
+//!                  models: the hermetic backend the pool tests, benches
+//!                  and offline builds execute against.
 
 pub mod artifact;
 pub mod client;
 pub mod device;
 pub mod executor;
+pub mod reference;
 
 pub use artifact::ArtifactRegistry;
 pub use client::PjrtClient;
 pub use device::Device;
-pub use executor::StageExecutor;
+pub use executor::{StageBackend, StageExecutor};
+pub use reference::ReferenceBackend;

@@ -1,0 +1,638 @@
+//! Pure-Rust reference backend: executes the same stage catalog the AOT
+//! artifacts export (`layerNN_lin_open`, `layerNN_lin_blind`, `tail_pNN`,
+//! `full_open`) with deterministic synthetic weights — no PJRT, no
+//! Python, no files on disk.
+//!
+//! Two jobs:
+//!
+//! 1. **Runnable-everywhere serving path.**  The offline build carries
+//!    only a stub of the PJRT bindings, so `sim*` models route every
+//!    stage through this interpreter instead.  The whole strategy stack
+//!    (blinding, enclave walks, tail offload, the worker pool) runs
+//!    unmodified on top of it.
+//! 2. **Ground truth for the blinded arithmetic.**  `lin_blind` here is
+//!    the same mod-2^24 fixed-point contraction the Pallas kernel
+//!    implements, computed with wrapping u32 arithmetic, so the
+//!    blind → offload → unblind identities are testable hermetically.
+//!
+//! Determinism: weights derive from `(seed, layer)` ChaCha streams and
+//! every loop has a fixed iteration order, so two backend instances built
+//! from the same config produce bit-identical outputs — the property the
+//! pool integration test pins (N pooled workers == 1 serial worker).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::blinding::quant::MOD_P;
+use crate::model::{Layer, LayerKind, Model, StageArtifact};
+use crate::util::rng::Rng;
+
+const MASK: u32 = MOD_P - 1;
+/// Batch sizes the synthetic stage catalog exports.
+pub const SIM_BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+/// Per-layer parameters (quantized master copy; floats derived from it so
+/// the open and blinded paths share one source of truth).
+enum Params {
+    Conv {
+        /// `[ky][kx][cin][cout]` quantized weights, round(w * 2^8).
+        wq: Vec<i32>,
+        cin: usize,
+        cout: usize,
+    },
+    Dense {
+        /// `[in][out]` quantized weights.
+        wq: Vec<i32>,
+        d_in: usize,
+        d_out: usize,
+    },
+    None,
+}
+
+/// The reference stage interpreter for one synthetic model.
+pub struct ReferenceBackend {
+    model: Model,
+    params: Vec<Params>, // params[i] belongs to layer index i+1
+}
+
+/// Parse a `sim*` model name: `sim` or `sim<image>` (e.g. `sim8`, `sim16`).
+pub fn is_sim_model(name: &str) -> bool {
+    name.strip_prefix("sim")
+        .map(|rest| rest.is_empty() || rest.chars().all(|c| c.is_ascii_digit()))
+        .unwrap_or(false)
+}
+
+impl ReferenceBackend {
+    /// Build the VGG-lite synthetic model for `name` (`sim`/`sim8`/`sim16`)
+    /// with weights derived from `seed`.
+    pub fn vgg_lite(name: &str, seed: u64) -> Result<Self> {
+        if !is_sim_model(name) {
+            bail!("`{name}` is not a sim model (expected sim / sim8 / sim16)");
+        }
+        let image: usize = name
+            .strip_prefix("sim")
+            .unwrap()
+            .parse()
+            .unwrap_or(8)
+            .clamp(4, 64);
+        let channels = 3usize;
+        let classes = 10usize;
+
+        // VGG-lite: conv conv pool conv pool flatten dense dense softmax.
+        let half = image / 2;
+        let quarter = half / 2;
+        let feat = quarter * quarter * 16;
+        let specs: Vec<(LayerKind, Vec<usize>, Vec<usize>, bool)> = vec![
+            (LayerKind::Conv, vec![image, image, channels], vec![image, image, 8], true),
+            (LayerKind::Conv, vec![image, image, 8], vec![image, image, 8], true),
+            (LayerKind::Pool, vec![image, image, 8], vec![half, half, 8], false),
+            (LayerKind::Conv, vec![half, half, 8], vec![half, half, 16], true),
+            (LayerKind::Pool, vec![half, half, 16], vec![quarter, quarter, 16], false),
+            (LayerKind::Flatten, vec![quarter, quarter, 16], vec![feat], false),
+            (LayerKind::Dense, vec![feat], vec![32], true),
+            (LayerKind::Dense, vec![32], vec![classes], false),
+            (LayerKind::Softmax, vec![classes], vec![classes], false),
+        ];
+
+        let mut layers = Vec::new();
+        let mut params = Vec::new();
+        for (i, (kind, in_shape, out_shape, has_relu)) in specs.into_iter().enumerate() {
+            let index = i + 1;
+            let mut rng = Rng::with_stream(seed ^ 0x0516_AC10, index as u64);
+            let (p, bias, params_bytes, flops) = match kind {
+                LayerKind::Conv => {
+                    let cin = *in_shape.last().unwrap();
+                    let cout = *out_shape.last().unwrap();
+                    let fan_in = 9 * cin;
+                    let wq = gen_weights(&mut rng, 9 * cin * cout, fan_in);
+                    let bias = gen_bias(&mut rng, cout);
+                    let pb = (4 * (9 * cin * cout + cout)) as u64;
+                    let fl = (2 * 9 * cin * cout * in_shape[0] * in_shape[1]) as u64;
+                    (Params::Conv { wq, cin, cout }, bias, pb, fl)
+                }
+                LayerKind::Dense => {
+                    let d_in = in_shape.iter().product();
+                    let d_out = *out_shape.last().unwrap();
+                    let wq = gen_weights(&mut rng, d_in * d_out, d_in);
+                    let bias = gen_bias(&mut rng, d_out);
+                    let pb = (4 * (d_in * d_out + d_out)) as u64;
+                    let fl = (2 * d_in * d_out) as u64;
+                    (Params::Dense { wq, d_in, d_out }, bias, pb, fl)
+                }
+                _ => (Params::None, Vec::new(), 0, 0),
+            };
+            layers.push(Layer {
+                index,
+                kind,
+                name: format!("{kind:?}{index}").to_lowercase(),
+                in_shape,
+                out_shape,
+                has_relu,
+                flops,
+                params_bytes,
+                bias,
+            });
+            params.push(p);
+        }
+
+        // Stage catalog: the same names aot.py exports, at SIM_BATCHES.
+        let num_layers = layers.len();
+        let mut stages = Vec::new();
+        for &batch in &SIM_BATCHES {
+            for l in &layers {
+                if l.kind.is_linear() {
+                    for kind in ["lin_open", "lin_blind"] {
+                        stages.push(StageArtifact {
+                            stage: format!("layer{:02}_{kind}", l.index),
+                            batch,
+                            file: "<reference>".into(),
+                            input_shapes: vec![with_batch(batch, &l.in_shape)],
+                            output_shape: with_batch(batch, &l.out_shape),
+                        });
+                    }
+                }
+            }
+            for p in 1..num_layers {
+                stages.push(StageArtifact {
+                    stage: format!("tail_p{p:02}"),
+                    batch,
+                    file: "<reference>".into(),
+                    input_shapes: vec![with_batch(batch, &layers[p - 1].out_shape)],
+                    output_shape: with_batch(batch, &layers[num_layers - 1].out_shape),
+                });
+            }
+            stages.push(StageArtifact {
+                stage: "full_open".into(),
+                batch,
+                file: "<reference>".into(),
+                input_shapes: vec![with_batch(batch, &layers[0].in_shape)],
+                output_shape: with_batch(batch, &layers[num_layers - 1].out_shape),
+            });
+        }
+
+        let model = Model {
+            name: name.to_string(),
+            image,
+            in_channels: channels,
+            layers,
+            partitions: vec![3, 4, 6],
+            stages,
+        };
+        Ok(Self { model, params })
+    }
+
+    /// The synthesized model IR (layer metadata + stage catalog).
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Stage metadata lookup (same contract as the artifact manifest).
+    pub fn stage_meta(&self, model: &str, stage: &str, batch: usize) -> Result<StageArtifact> {
+        self.check_model(model)?;
+        Ok(self.model.stage(stage, batch)?.clone())
+    }
+
+    fn check_model(&self, model: &str) -> Result<()> {
+        if model != self.model.name {
+            bail!(
+                "reference backend holds `{}`, not `{model}`",
+                self.model.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute a stage; `inputs` follows the executor's calling convention
+    /// (one flat f32 tensor per declared input).
+    pub fn execute(
+        &self,
+        model: &str,
+        stage: &str,
+        batch: usize,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<f32>> {
+        self.check_model(model)?;
+        let x = *inputs
+            .first()
+            .ok_or_else(|| anyhow!("stage {stage}: no input"))?;
+        if let Some(idx) = parse_layer_stage(stage, "_lin_open") {
+            return self.lin_open(idx, batch, x);
+        }
+        if let Some(idx) = parse_layer_stage(stage, "_lin_blind") {
+            return self.lin_blind(idx, batch, x);
+        }
+        if let Some(p) = stage
+            .strip_prefix("tail_p")
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            return self.open_walk(p + 1, batch, x.to_vec());
+        }
+        if stage == "full_open" {
+            return self.open_walk(1, batch, x.to_vec());
+        }
+        bail!("reference backend: unknown stage `{stage}`")
+    }
+
+    /// Float linear layer + bias (the enclave applies ReLU itself).
+    fn lin_open(&self, idx: usize, batch: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let layer = self.model.layer(idx)?;
+        let mut y = self.linear_f32(idx, batch, x)?;
+        bias_add(&mut y, &layer.bias);
+        Ok(y)
+    }
+
+    /// Mod-2^24 linear layer over blinded residues (no bias — that lives
+    /// with the enclave, after unblinding).
+    fn lin_blind(&self, idx: usize, batch: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let layer = self.model.layer(idx)?;
+        let xu: Vec<u32> = x.iter().map(|&v| v as u32).collect();
+        let yu = match &self.params[idx - 1] {
+            Params::Conv { wq, cin, cout } => {
+                let (h, w) = (layer.in_shape[0], layer.in_shape[1]);
+                conv2d_mod(&xu, batch, h, w, *cin, *cout, wq)
+            }
+            Params::Dense { wq, d_in, d_out } => dense_mod(&xu, batch, *d_in, *d_out, wq),
+            Params::None => bail!("layer {idx} has no linear part"),
+        };
+        Ok(yu.into_iter().map(|v| v as f32).collect())
+    }
+
+    fn linear_f32(&self, idx: usize, batch: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let layer = self.model.layer(idx)?;
+        Ok(match &self.params[idx - 1] {
+            Params::Conv { wq, cin, cout } => {
+                let (h, w) = (layer.in_shape[0], layer.in_shape[1]);
+                conv2d_f32(x, batch, h, w, *cin, *cout, wq)
+            }
+            Params::Dense { wq, d_in, d_out } => dense_f32(x, batch, *d_in, *d_out, wq),
+            Params::None => bail!("layer {idx} has no linear part"),
+        })
+    }
+
+    /// Open execution of layers [from..=n] in float (tails + full model).
+    fn open_walk(&self, from: usize, batch: usize, mut x: Vec<f32>) -> Result<Vec<f32>> {
+        for idx in from..=self.model.num_layers() {
+            let layer = self.model.layer(idx)?.clone();
+            match layer.kind {
+                LayerKind::Conv | LayerKind::Dense => {
+                    let mut y = self.linear_f32(idx, batch, &x)?;
+                    bias_add(&mut y, &layer.bias);
+                    if layer.has_relu {
+                        for v in y.iter_mut() {
+                            if *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                    x = y;
+                }
+                LayerKind::Pool => {
+                    let (h, w, c) = (
+                        layer.in_shape[0],
+                        layer.in_shape[1],
+                        layer.in_shape[2],
+                    );
+                    x = maxpool2x2(&x, batch, h, w, c);
+                }
+                LayerKind::Flatten => {}
+                LayerKind::Softmax => {
+                    let classes = *layer.out_shape.last().unwrap_or(&1);
+                    softmax(&mut x, classes);
+                }
+            }
+        }
+        Ok(x)
+    }
+}
+
+fn with_batch(batch: usize, shape: &[usize]) -> Vec<usize> {
+    let mut s = Vec::with_capacity(shape.len() + 1);
+    s.push(batch);
+    s.extend_from_slice(shape);
+    s
+}
+
+fn parse_layer_stage(stage: &str, suffix: &str) -> Option<usize> {
+    stage
+        .strip_prefix("layer")?
+        .strip_suffix(suffix)?
+        .parse()
+        .ok()
+}
+
+/// Uniform weights in ±1/sqrt(fan_in), quantized to round(w·2^8).  The
+/// float path derives its weights from the quantized master copy, so the
+/// blinded fixed-point result is the exact quantization of the float one.
+fn gen_weights(rng: &mut Rng, n: usize, fan_in: usize) -> Vec<i32> {
+    let a = 1.0 / (fan_in as f32).sqrt();
+    (0..n)
+        .map(|_| (rng.range_f32(-a, a) * 256.0).round() as i32)
+        .collect()
+}
+
+fn gen_bias(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(-0.05, 0.05)).collect()
+}
+
+fn bias_add(x: &mut [f32], bias: &[f32]) {
+    let c = bias.len();
+    if c > 0 {
+        for (i, v) in x.iter_mut().enumerate() {
+            *v += bias[i % c];
+        }
+    }
+}
+
+fn maxpool2x2(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; n * oh * ow * c];
+    for b in 0..n {
+        for y in 0..2 * oh {
+            for xx in 0..2 * ow {
+                let src = ((b * h + y) * w + xx) * c;
+                let dst = ((b * oh + y / 2) * ow + xx / 2) * c;
+                for ch in 0..c {
+                    if x[src + ch] > out[dst + ch] {
+                        out[dst + ch] = x[src + ch];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn softmax(x: &mut [f32], row: usize) {
+    if row == 0 {
+        return;
+    }
+    for chunk in x.chunks_mut(row) {
+        let max = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in chunk.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in chunk.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// 3x3 same-padding NHWC convolution, float.
+fn conv2d_f32(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    wq: &[i32],
+) -> Vec<f32> {
+    let mut out = vec![0f32; n * h * w * cout];
+    for b in 0..n {
+        for y in 0..h {
+            for xx in 0..w {
+                let dst = ((b * h + y) * w + xx) * cout;
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                        let wbase = (ky * 3 + kx) * cin * cout;
+                        for ic in 0..cin {
+                            let xv = x[src + ic];
+                            let wrow = wbase + ic * cout;
+                            for oc in 0..cout {
+                                out[dst + oc] += xv * (wq[wrow + oc] as f32 / 256.0);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 3x3 same-padding NHWC convolution over mod-2^24 residues.  Wrapping
+/// u32 arithmetic is exact: 2^24 | 2^32, so the final mask recovers the
+/// residue even through two's-complement weights and overflowing sums.
+fn conv2d_mod(
+    x: &[u32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    wq: &[i32],
+) -> Vec<u32> {
+    let mut out = vec![0u32; n * h * w * cout];
+    for b in 0..n {
+        for y in 0..h {
+            for xx in 0..w {
+                let dst = ((b * h + y) * w + xx) * cout;
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                        let wbase = (ky * 3 + kx) * cin * cout;
+                        for ic in 0..cin {
+                            let xv = x[src + ic];
+                            let wrow = wbase + ic * cout;
+                            for oc in 0..cout {
+                                let prod = (wq[wrow + oc] as u32).wrapping_mul(xv);
+                                out[dst + oc] = out[dst + oc].wrapping_add(prod);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        *v &= MASK;
+    }
+    out
+}
+
+fn dense_f32(x: &[f32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<f32> {
+    let mut out = vec![0f32; n * d_out];
+    for b in 0..n {
+        for i in 0..d_in {
+            let xv = x[b * d_in + i];
+            let wrow = i * d_out;
+            let dst = b * d_out;
+            for o in 0..d_out {
+                out[dst + o] += xv * (wq[wrow + o] as f32 / 256.0);
+            }
+        }
+    }
+    out
+}
+
+fn dense_mod(x: &[u32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<u32> {
+    let mut out = vec![0u32; n * d_out];
+    for b in 0..n {
+        for i in 0..d_in {
+            let xv = x[b * d_in + i];
+            let wrow = i * d_out;
+            let dst = b * d_out;
+            for o in 0..d_out {
+                let prod = (wq[wrow + o] as u32).wrapping_mul(xv);
+                out[dst + o] = out[dst + o].wrapping_add(prod);
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        *v &= MASK;
+    }
+    out
+}
+
+#[cfg(test)]
+impl ReferenceBackend {
+    /// Test helper: open-walk a bounded prefix [from..=to].
+    fn open_walk_prefix(&self, from: usize, to: usize, batch: usize, mut x: Vec<f32>) -> Vec<f32> {
+        for idx in from..=to {
+            let layer = self.model.layer(idx).unwrap().clone();
+            match layer.kind {
+                LayerKind::Conv | LayerKind::Dense => {
+                    let mut y = self.linear_f32(idx, batch, &x).unwrap();
+                    bias_add(&mut y, &layer.bias);
+                    if layer.has_relu {
+                        for v in y.iter_mut() {
+                            if *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                    x = y;
+                }
+                LayerKind::Pool => {
+                    let (h, w, c) = (
+                        layer.in_shape[0],
+                        layer.in_shape[1],
+                        layer.in_shape[2],
+                    );
+                    x = maxpool2x2(&x, batch, h, w, c);
+                }
+                LayerKind::Flatten => {}
+                LayerKind::Softmax => {
+                    let classes = *layer.out_shape.last().unwrap_or(&1);
+                    softmax(&mut x, classes);
+                }
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blinding::quant::{SCALE_X, SCALE_XW};
+
+    fn backend() -> ReferenceBackend {
+        ReferenceBackend::vgg_lite("sim8", 2019).unwrap()
+    }
+
+    #[test]
+    fn sim_model_names() {
+        assert!(is_sim_model("sim"));
+        assert!(is_sim_model("sim8"));
+        assert!(is_sim_model("sim16"));
+        assert!(!is_sim_model("vgg16-32"));
+        assert!(!is_sim_model("simx"));
+    }
+
+    #[test]
+    fn catalog_covers_the_strategy_stages() {
+        let b = backend();
+        let m = b.model();
+        assert_eq!(m.num_layers(), 9);
+        assert_eq!(m.linear_indices(), vec![1, 2, 4, 7, 8]);
+        for &batch in &SIM_BATCHES {
+            assert!(m.stage("full_open", batch).is_ok());
+            assert!(m.stage("tail_p06", batch).is_ok());
+            assert!(m.stage("layer01_lin_blind", batch).is_ok());
+            assert!(m.stage("layer07_lin_open", batch).is_ok());
+        }
+        assert!(m.stage("tail_p09", 1).is_err(), "no tail past last layer");
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = backend();
+        let b = backend();
+        let x: Vec<f32> = (0..8 * 8 * 3).map(|i| (i % 7) as f32 / 7.0).collect();
+        let ya = a.execute("sim8", "full_open", 1, &[&x]).unwrap();
+        let yb = b.execute("sim8", "full_open", 1, &[&x]).unwrap();
+        assert_eq!(ya, yb, "two backends from one seed must agree bitwise");
+        let sum: f32 = ya.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "softmax output sums to 1: {sum}");
+    }
+
+    #[test]
+    fn blinded_linear_is_quantized_float_linear() {
+        // lin_blind on unblinded quantized residues == quantize(lin_open - bias)
+        let b = backend();
+        let m = b.model();
+        let layer = m.layer(1).unwrap().clone();
+        let n = layer.in_elems();
+        let x: Vec<f32> = (0..n).map(|i| ((i * 13) % 97) as f32 / 97.0).collect();
+        let xq: Vec<f32> = x
+            .iter()
+            .map(|&v| ((v * SCALE_X).round() as i64).rem_euclid(MOD_P as i64) as f32)
+            .collect();
+        let yq = b.execute("sim8", "layer01_lin_blind", 1, &[&xq]).unwrap();
+        let mut yf = b.execute("sim8", "layer01_lin_open", 1, &[&x]).unwrap();
+        // undo the bias lin_open adds
+        for (i, v) in yf.iter_mut().enumerate() {
+            *v -= layer.bias[i % layer.bias.len()];
+        }
+        for i in 0..yq.len() {
+            let centered = if yq[i] >= (MOD_P / 2) as f32 {
+                yq[i] - MOD_P as f32
+            } else {
+                yq[i]
+            };
+            let decoded = centered / SCALE_XW;
+            assert!(
+                (decoded - yf[i]).abs() < 0.02,
+                "i={i}: blinded-domain {decoded} vs float {}",
+                yf[i]
+            );
+        }
+    }
+
+    #[test]
+    fn tail_composes_with_head() {
+        // full_open == open head through p, then tail_p
+        let b = backend();
+        let x: Vec<f32> = (0..2 * 8 * 8 * 3).map(|i| (i % 11) as f32 / 11.0).collect();
+        let full = b.execute("sim8", "full_open", 2, &[&x]).unwrap();
+        let head = b.open_walk_prefix(1, 6, 2, x);
+        let tail = b.execute("sim8", "tail_p06", 2, &[&head]).unwrap();
+        assert_eq!(full, tail);
+    }
+
+    #[test]
+    fn unknown_stage_rejected() {
+        let b = backend();
+        assert!(b.execute("sim8", "layer99_lin_open", 1, &[&[]]).is_err());
+        assert!(b.execute("other", "full_open", 1, &[&[]]).is_err());
+    }
+}

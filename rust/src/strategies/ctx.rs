@@ -50,6 +50,13 @@ impl StrategyCtx {
 
     /// Build the enclave with `declared_bytes` and wire the blinding
     /// subsystems off its key material.
+    ///
+    /// The blinding stream is derived under the config's `blind_domain`,
+    /// which the worker pool sets to the worker index: every worker keeps
+    /// the shared deployment master (so any worker can decrypt any
+    /// session's ciphertext) but draws its one-time pads from a disjoint
+    /// keyspace — two workers can never emit the same pad for the same
+    /// (layer, epoch), which would void the OTP across the pool.
     pub fn with_enclave(&mut self, declared_bytes: u64) -> Result<()> {
         let seed = self.config.seed.to_le_bytes();
         let enclave = Enclave::create(
@@ -58,7 +65,10 @@ impl StrategyCtx {
             &seed,
             self.executor.cost.clone(),
         );
-        let key = enclave.derive_key("blinding-stream")?;
+        let key = enclave.derive_key(&format!(
+            "blinding-stream-{}",
+            self.config.blind_domain
+        ))?;
         let measurement = crate::crypto::sha256(&[&seed[..], self.model.name.as_bytes()].concat());
         self.factors = Some(FactorStream::new(key));
         self.unblind = Some(UnblindStore::new(

@@ -27,6 +27,24 @@ use anyhow::Result;
 use crate::enclave::cost::Ledger;
 pub use ctx::StrategyCtx;
 
+/// What tier-1 of a request produced.
+///
+/// Tiered strategies (Origami, Split) hand back the intermediate feature
+/// map plus the open-tail stage that finishes it; the tail needs no
+/// enclave keys, so *any* executor — another worker's tier-2 lane, a
+/// work-stealing peer — can run it.  Non-tiered strategies return the
+/// final probabilities directly.
+pub enum Tier1Output {
+    /// The strategy has no open tier-2; these are the class probabilities.
+    Final(Vec<f32>),
+    /// Tier-1 is done; run `stage` on `features` (open device) to finish.
+    Handoff {
+        features: Vec<f32>,
+        /// Tail stage name (e.g. `tail_p06`).
+        stage: String,
+    },
+}
+
 /// A private-inference execution strategy.
 ///
 /// NOT `Send`: strategies hold PJRT handles (the `xla` crate's client and
@@ -46,7 +64,7 @@ pub trait Strategy {
     ///
     /// `ciphertext` concatenates `batch` independently encrypted samples;
     /// `sessions[i]` is the attested session of sample i (padding slots
-    /// may be absent and decrypt under session 0).  Blinding-factor
+    /// have no session entry and decode to zero samples).  Blinding-factor
     /// epochs are enclave-internal (a monotone counter), NOT client
     /// sessions — clients must not be able to pick the pad.  Returns
     /// class probabilities (batch × classes flattened).
@@ -60,6 +78,30 @@ pub trait Strategy {
 
     /// Enclave memory the strategy declares (Table I).
     fn enclave_requirement_bytes(&self) -> u64;
+
+    /// Tier-1 of one request: everything that requires enclave state
+    /// (session decryption, blinding, unblinding, in-enclave non-linear
+    /// ops).  Tiered strategies return a [`Tier1Output::Handoff`] whose
+    /// open tail can execute on a different thread/worker, which is what
+    /// lets the pool overlap batch *k+1*'s tier-1 with batch *k*'s
+    /// tier-2.  The default runs the whole inference (no overlap).
+    fn infer_tier1(
+        &mut self,
+        ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Tier1Output> {
+        Ok(Tier1Output::Final(self.infer(
+            ciphertext, batch, sessions, ledger,
+        )?))
+    }
+
+    /// Whether [`Strategy::infer_tier1`] can return a `Handoff` (i.e. the
+    /// pipelined pool path actually overlaps something for this strategy).
+    fn tiered(&self) -> bool {
+        false
+    }
 
     /// Simulate a power event + recovery; returns total recovery ms
     /// (Table II). Default: strategies without an enclave return 0.

@@ -25,10 +25,9 @@ impl Strategy for OpenInference {
     }
 
     fn setup(&mut self) -> Result<()> {
-        // warm the full-model artifact
+        // warm the full-model artifact (no-op on the reference backend)
         self.ctx
             .executor
-            .registry()
             .warm(&self.ctx.model.name, &[("full_open", 1)])?;
         Ok(())
     }

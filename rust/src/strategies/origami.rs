@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use super::ctx::StrategyCtx;
 use super::memory::enclave_requirement;
-use super::Strategy;
+use super::{Strategy, Tier1Output};
 use crate::enclave::cost::Ledger;
 use crate::enclave::power::power_cycle;
 use crate::model::partition::PartitionPlan;
@@ -65,11 +65,14 @@ impl Strategy for Origami {
             .filter(|&i| i <= self.p)
             .collect();
         let epochs = self.ctx.config.pool_epochs;
+        // Precompute for every batch size the scheduler can pick (the
+        // exported serving set), batch 1 mandatory, the rest best-effort
+        // (batched stages may not be exported for every model).
         self.ctx.precompute_unblind_factors(&layers, epochs, 1)?;
-        if self.ctx.config.max_batch > 1 {
-            self.ctx
-                .precompute_unblind_factors(&layers, epochs, self.ctx.config.max_batch)
-                .ok();
+        for b in model.serving_batches() {
+            if b > 1 {
+                self.ctx.precompute_unblind_factors(&layers, epochs, b).ok();
+            }
         }
         Ok(())
     }
@@ -81,14 +84,49 @@ impl Strategy for Origami {
         sessions: &[u64],
         ledger: &mut Ledger,
     ) -> Result<Vec<f32>> {
+        // The serial path is exactly tier-1 followed by the open tail on
+        // this worker's own executor, so the pipelined pool path (tier-2
+        // finished by a peer lane) is bit-identical by construction.
+        match self.infer_tier1(ciphertext, batch, sessions, ledger)? {
+            Tier1Output::Final(probs) => Ok(probs),
+            Tier1Output::Handoff { features, stage } => {
+                let out = self.ctx.executor.run(
+                    &self.ctx.model.name,
+                    &stage,
+                    batch,
+                    &[&features],
+                    self.ctx.device,
+                    ledger,
+                )?;
+                Ok(out.data)
+            }
+        }
+    }
+
+    fn infer_tier1(
+        &mut self,
+        ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Tier1Output> {
         let x = self.ctx.decrypt_request(sessions, batch, ciphertext, ledger)?;
         let epoch = self.ctx.next_epoch();
         // Tier 1: Slalom-style blinded execution through layer p.
-        let feat = self
+        let features = self
             .ctx
             .blinded_walk(1, self.p, x, batch, epoch, ledger)?;
-        // Tier 2: uninterrupted open execution on the device.
-        self.ctx.tail_offload(self.p, &feat, batch, ledger)
+        // The OCALL pair that ships the feature map out belongs to tier-1
+        // (it is the enclave's last act for this request).
+        self.ctx.enclave_mut()?.round_trip(ledger);
+        Ok(Tier1Output::Handoff {
+            features,
+            stage: StrategyCtx::tail(self.p),
+        })
+    }
+
+    fn tiered(&self) -> bool {
+        true
     }
 
     fn enclave_requirement_bytes(&self) -> u64 {

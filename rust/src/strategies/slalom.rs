@@ -48,12 +48,14 @@ impl Strategy for Slalom {
         let layers = model.linear_indices();
         let epochs = self.ctx.config.pool_epochs;
         self.ctx.precompute_unblind_factors(&layers, epochs, 1)?;
-        if self.ctx.config.max_batch > 1 {
-            // batched artifacts share the per-sample factors? No — each
-            // batch size has its own artifact; precompute for it too.
-            self.ctx
-                .precompute_unblind_factors(&layers, epochs, self.ctx.config.max_batch)
-                .ok(); // batched stages may not be exported for all models
+        // batched artifacts share the per-sample factors? No — each
+        // batch size has its own artifact; precompute every size the
+        // scheduler can pick (best-effort: batched stages may not be
+        // exported for all models).
+        for b in model.serving_batches() {
+            if b > 1 {
+                self.ctx.precompute_unblind_factors(&layers, epochs, b).ok();
+            }
         }
         Ok(())
     }

@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use super::ctx::StrategyCtx;
 use super::memory::enclave_requirement;
-use super::Strategy;
+use super::{Strategy, Tier1Output};
 use crate::enclave::cost::Ledger;
 use crate::enclave::power::power_cycle;
 use crate::model::partition::PartitionPlan;
@@ -64,9 +64,40 @@ impl Strategy for Split {
         sessions: &[u64],
         ledger: &mut Ledger,
     ) -> Result<Vec<f32>> {
+        match self.infer_tier1(ciphertext, batch, sessions, ledger)? {
+            Tier1Output::Final(probs) => Ok(probs),
+            Tier1Output::Handoff { features, stage } => {
+                let out = self.ctx.executor.run(
+                    &self.ctx.model.name,
+                    &stage,
+                    batch,
+                    &[&features],
+                    self.ctx.device,
+                    ledger,
+                )?;
+                Ok(out.data)
+            }
+        }
+    }
+
+    fn infer_tier1(
+        &mut self,
+        ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Tier1Output> {
         let x0 = self.ctx.decrypt_request(sessions, batch, ciphertext, ledger)?;
-        let feat = self.ctx.enclave_walk(1, self.x, x0, batch, ledger)?;
-        self.ctx.tail_offload(self.x, &feat, batch, ledger)
+        let features = self.ctx.enclave_walk(1, self.x, x0, batch, ledger)?;
+        self.ctx.enclave_mut()?.round_trip(ledger);
+        Ok(Tier1Output::Handoff {
+            features,
+            stage: StrategyCtx::tail(self.x),
+        })
+    }
+
+    fn tiered(&self) -> bool {
+        true
     }
 
     fn enclave_requirement_bytes(&self) -> u64 {

@@ -1,0 +1,244 @@
+//! Offline stand-in for the `aes` crate: a real FIPS-197 AES-128
+//! implementation behind the RustCrypto trait subset this workspace uses
+//! ([`cipher::KeyInit`] / [`cipher::BlockEncrypt`]).  Table-free S-box
+//! lookups but table-driven in the usual sense (a 256-byte S-box); this
+//! is a simulator substrate, not a side-channel-hardened cipher.
+//! Pinned by the FIPS-197 Appendix C known-answer test below.
+
+pub mod cipher {
+    /// 128-bit key wrapper (`(&[u8; 16]).into()` at call sites).
+    pub struct Key(pub(crate) [u8; 16]);
+
+    impl From<&[u8; 16]> for Key {
+        fn from(k: &[u8; 16]) -> Self {
+            Key(*k)
+        }
+    }
+
+    impl From<[u8; 16]> for Key {
+        fn from(k: [u8; 16]) -> Self {
+            Key(k)
+        }
+    }
+
+    /// One 16-byte block; derefs to `[u8; 16]` for iteration.
+    pub struct Block(pub(crate) [u8; 16]);
+
+    impl From<[u8; 16]> for Block {
+        fn from(b: [u8; 16]) -> Self {
+            Block(b)
+        }
+    }
+
+    impl std::ops::Deref for Block {
+        type Target = [u8; 16];
+        fn deref(&self) -> &[u8; 16] {
+            &self.0
+        }
+    }
+
+    impl std::ops::DerefMut for Block {
+        fn deref_mut(&mut self) -> &mut [u8; 16] {
+            &mut self.0
+        }
+    }
+
+    /// Construct a cipher from key material.
+    pub trait KeyInit: Sized {
+        fn new(key: Key) -> Self;
+    }
+
+    /// Encrypt a single block in place.
+    pub trait BlockEncrypt {
+        fn encrypt_block(&self, block: &mut Block);
+    }
+}
+
+use cipher::{Block, BlockEncrypt, Key, KeyInit};
+
+const SBOX: [u8; 256] = [
+    0x63, 0x7c, 0x77, 0x7b, 0xf2, 0x6b, 0x6f, 0xc5, 0x30, 0x01, 0x67, 0x2b, 0xfe, 0xd7, 0xab,
+    0x76, 0xca, 0x82, 0xc9, 0x7d, 0xfa, 0x59, 0x47, 0xf0, 0xad, 0xd4, 0xa2, 0xaf, 0x9c, 0xa4,
+    0x72, 0xc0, 0xb7, 0xfd, 0x93, 0x26, 0x36, 0x3f, 0xf7, 0xcc, 0x34, 0xa5, 0xe5, 0xf1, 0x71,
+    0xd8, 0x31, 0x15, 0x04, 0xc7, 0x23, 0xc3, 0x18, 0x96, 0x05, 0x9a, 0x07, 0x12, 0x80, 0xe2,
+    0xeb, 0x27, 0xb2, 0x75, 0x09, 0x83, 0x2c, 0x1a, 0x1b, 0x6e, 0x5a, 0xa0, 0x52, 0x3b, 0xd6,
+    0xb3, 0x29, 0xe3, 0x2f, 0x84, 0x53, 0xd1, 0x00, 0xed, 0x20, 0xfc, 0xb1, 0x5b, 0x6a, 0xcb,
+    0xbe, 0x39, 0x4a, 0x4c, 0x58, 0xcf, 0xd0, 0xef, 0xaa, 0xfb, 0x43, 0x4d, 0x33, 0x85, 0x45,
+    0xf9, 0x02, 0x7f, 0x50, 0x3c, 0x9f, 0xa8, 0x51, 0xa3, 0x40, 0x8f, 0x92, 0x9d, 0x38, 0xf5,
+    0xbc, 0xb6, 0xda, 0x21, 0x10, 0xff, 0xf3, 0xd2, 0xcd, 0x0c, 0x13, 0xec, 0x5f, 0x97, 0x44,
+    0x17, 0xc4, 0xa7, 0x7e, 0x3d, 0x64, 0x5d, 0x19, 0x73, 0x60, 0x81, 0x4f, 0xdc, 0x22, 0x2a,
+    0x90, 0x88, 0x46, 0xee, 0xb8, 0x14, 0xde, 0x5e, 0x0b, 0xdb, 0xe0, 0x32, 0x3a, 0x0a, 0x49,
+    0x06, 0x24, 0x5c, 0xc2, 0xd3, 0xac, 0x62, 0x91, 0x95, 0xe4, 0x79, 0xe7, 0xc8, 0x37, 0x6d,
+    0x8d, 0xd5, 0x4e, 0xa9, 0x6c, 0x56, 0xf4, 0xea, 0x65, 0x7a, 0xae, 0x08, 0xba, 0x78, 0x25,
+    0x2e, 0x1c, 0xa6, 0xb4, 0xc6, 0xe8, 0xdd, 0x74, 0x1f, 0x4b, 0xbd, 0x8b, 0x8a, 0x70, 0x3e,
+    0xb5, 0x66, 0x48, 0x03, 0xf6, 0x0e, 0x61, 0x35, 0x57, 0xb9, 0x86, 0xc1, 0x1d, 0x9e, 0xe1,
+    0xf8, 0x98, 0x11, 0x69, 0xd9, 0x8e, 0x94, 0x9b, 0x1e, 0x87, 0xe9, 0xce, 0x55, 0x28, 0xdf,
+    0x8c, 0xa1, 0x89, 0x0d, 0xbf, 0xe6, 0x42, 0x68, 0x41, 0x99, 0x2d, 0x0f, 0xb0, 0x54, 0xbb,
+    0x16,
+];
+
+const RCON: [u8; 10] = [0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1b, 0x36];
+
+#[inline]
+fn xtime(b: u8) -> u8 {
+    (b << 1) ^ (((b >> 7) & 1) * 0x1b)
+}
+
+/// AES-128 with expanded round keys.
+pub struct Aes128 {
+    round_keys: [[u8; 16]; 11],
+}
+
+impl Aes128 {
+    fn expand(key: &[u8; 16]) -> [[u8; 16]; 11] {
+        let mut w = [[0u8; 4]; 44];
+        for i in 0..4 {
+            w[i].copy_from_slice(&key[4 * i..4 * i + 4]);
+        }
+        for i in 4..44 {
+            let mut t = w[i - 1];
+            if i % 4 == 0 {
+                t = [
+                    SBOX[t[1] as usize] ^ RCON[i / 4 - 1],
+                    SBOX[t[2] as usize],
+                    SBOX[t[3] as usize],
+                    SBOX[t[0] as usize],
+                ];
+            }
+            for j in 0..4 {
+                w[i][j] = w[i - 4][j] ^ t[j];
+            }
+        }
+        let mut rk = [[0u8; 16]; 11];
+        for (r, key) in rk.iter_mut().enumerate() {
+            for c in 0..4 {
+                key[4 * c..4 * c + 4].copy_from_slice(&w[4 * r + c]);
+            }
+        }
+        rk
+    }
+}
+
+impl KeyInit for Aes128 {
+    fn new(key: Key) -> Self {
+        Self {
+            round_keys: Self::expand(&key.0),
+        }
+    }
+}
+
+impl BlockEncrypt for Aes128 {
+    fn encrypt_block(&self, block: &mut Block) {
+        let state = &mut block.0;
+        add_round_key(state, &self.round_keys[0]);
+        for round in 1..10 {
+            sub_bytes(state);
+            shift_rows(state);
+            mix_columns(state);
+            add_round_key(state, &self.round_keys[round]);
+        }
+        sub_bytes(state);
+        shift_rows(state);
+        add_round_key(state, &self.round_keys[10]);
+    }
+}
+
+#[inline]
+fn add_round_key(state: &mut [u8; 16], rk: &[u8; 16]) {
+    for (s, k) in state.iter_mut().zip(rk.iter()) {
+        *s ^= k;
+    }
+}
+
+#[inline]
+fn sub_bytes(state: &mut [u8; 16]) {
+    for s in state.iter_mut() {
+        *s = SBOX[*s as usize];
+    }
+}
+
+/// Row r (bytes r, r+4, r+8, r+12 in column-major order) rotates left r.
+#[inline]
+fn shift_rows(state: &mut [u8; 16]) {
+    let s = *state;
+    for r in 1..4 {
+        for c in 0..4 {
+            state[r + 4 * c] = s[r + 4 * ((c + r) % 4)];
+        }
+    }
+}
+
+#[inline]
+fn mix_columns(state: &mut [u8; 16]) {
+    for c in 0..4 {
+        let col = [
+            state[4 * c],
+            state[4 * c + 1],
+            state[4 * c + 2],
+            state[4 * c + 3],
+        ];
+        let t = col[0] ^ col[1] ^ col[2] ^ col[3];
+        state[4 * c] = col[0] ^ t ^ xtime(col[0] ^ col[1]);
+        state[4 * c + 1] = col[1] ^ t ^ xtime(col[1] ^ col[2]);
+        state[4 * c + 2] = col[2] ^ t ^ xtime(col[2] ^ col[3]);
+        state[4 * c + 3] = col[3] ^ t ^ xtime(col[3] ^ col[0]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// FIPS-197 Appendix C.1 known-answer test.
+    #[test]
+    fn fips197_vector() {
+        let key: [u8; 16] = [
+            0x00, 0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0x09, 0x0a, 0x0b, 0x0c, 0x0d,
+            0x0e, 0x0f,
+        ];
+        let plain: [u8; 16] = [
+            0x00, 0x11, 0x22, 0x33, 0x44, 0x55, 0x66, 0x77, 0x88, 0x99, 0xaa, 0xbb, 0xcc, 0xdd,
+            0xee, 0xff,
+        ];
+        let want: [u8; 16] = [
+            0x69, 0xc4, 0xe0, 0xd8, 0x6a, 0x7b, 0x04, 0x30, 0xd8, 0xcd, 0xb7, 0x80, 0x70, 0xb4,
+            0xc5, 0x5a,
+        ];
+        let aes = Aes128::new((&key).into());
+        let mut b: Block = plain.into();
+        aes.encrypt_block(&mut b);
+        assert_eq!(*b, want);
+    }
+
+    /// FIPS-197 Appendix B vector (different key/plaintext pair).
+    #[test]
+    fn fips197_appendix_b() {
+        let key: [u8; 16] = [
+            0x2b, 0x7e, 0x15, 0x16, 0x28, 0xae, 0xd2, 0xa6, 0xab, 0xf7, 0x15, 0x88, 0x09, 0xcf,
+            0x4f, 0x3c,
+        ];
+        let plain: [u8; 16] = [
+            0x32, 0x43, 0xf6, 0xa8, 0x88, 0x5a, 0x30, 0x8d, 0x31, 0x31, 0x98, 0xa2, 0xe0, 0x37,
+            0x07, 0x34,
+        ];
+        let want: [u8; 16] = [
+            0x39, 0x25, 0x84, 0x1d, 0x02, 0xdc, 0x09, 0xfb, 0xdc, 0x11, 0x85, 0x97, 0x19, 0x6a,
+            0x0b, 0x32,
+        ];
+        let aes = Aes128::new((&key).into());
+        let mut b: Block = plain.into();
+        aes.encrypt_block(&mut b);
+        assert_eq!(*b, want);
+    }
+
+    #[test]
+    fn deterministic_and_key_sensitive() {
+        let aes1 = Aes128::new((&[1u8; 16]).into());
+        let aes2 = Aes128::new((&[2u8; 16]).into());
+        let mut a: Block = [0u8; 16].into();
+        let mut b: Block = [0u8; 16].into();
+        aes1.encrypt_block(&mut a);
+        aes2.encrypt_block(&mut b);
+        assert_ne!(*a, *b);
+    }
+}

@@ -1,0 +1,126 @@
+//! Offline stand-in for the `hmac` crate: RFC 2104 HMAC-SHA256 behind the
+//! RustCrypto [`Mac`] trait subset (`new_from_slice` / `update` /
+//! `finalize().into_bytes()`).  Pinned by RFC 4231 test vectors below.
+
+use sha2::{Digest, Sha256};
+
+/// Message-authentication-code interface (RustCrypto-compatible subset).
+pub trait Mac: Sized {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength>;
+    fn update(&mut self, data: &[u8]);
+    fn finalize(self) -> Output;
+}
+
+/// Key-length error (HMAC accepts any length; kept for API parity).
+#[derive(Debug)]
+pub struct InvalidLength;
+
+impl std::fmt::Display for InvalidLength {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("invalid key length")
+    }
+}
+
+impl std::error::Error for InvalidLength {}
+
+/// Finalized tag wrapper.
+pub struct Output {
+    tag: [u8; 32],
+}
+
+impl Output {
+    pub fn into_bytes(self) -> [u8; 32] {
+        self.tag
+    }
+}
+
+const BLOCK: usize = 64;
+
+/// HMAC over a digest; only `Hmac<Sha256>` is instantiated here.
+pub struct Hmac<D> {
+    inner: D,
+    opad_key: [u8; BLOCK],
+}
+
+impl Mac for Hmac<Sha256> {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength> {
+        let mut block_key = [0u8; BLOCK];
+        if key.len() > BLOCK {
+            let mut h = Sha256::new();
+            h.update(key);
+            block_key[..32].copy_from_slice(&h.finalize());
+        } else {
+            block_key[..key.len()].copy_from_slice(key);
+        }
+        let mut ipad = [0u8; BLOCK];
+        let mut opad = [0u8; BLOCK];
+        for i in 0..BLOCK {
+            ipad[i] = block_key[i] ^ 0x36;
+            opad[i] = block_key[i] ^ 0x5c;
+        }
+        let mut inner = Sha256::new();
+        Digest::update(&mut inner, ipad);
+        Ok(Self {
+            inner,
+            opad_key: opad,
+        })
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        Digest::update(&mut self.inner, data);
+    }
+
+    fn finalize(self) -> Output {
+        let inner_hash = self.inner.finalize();
+        let mut outer = Sha256::new();
+        Digest::update(&mut outer, self.opad_key);
+        Digest::update(&mut outer, inner_hash);
+        Output {
+            tag: outer.finalize(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn hmac(key: &[u8], data: &[u8]) -> [u8; 32] {
+        let mut m = <Hmac<Sha256> as Mac>::new_from_slice(key).unwrap();
+        m.update(data);
+        m.finalize().into_bytes()
+    }
+
+    /// RFC 4231 test case 1.
+    #[test]
+    fn rfc4231_case1() {
+        let key = [0x0bu8; 20];
+        assert_eq!(
+            hex(&hmac(&key, b"Hi There")),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    /// RFC 4231 test case 2 ("Jefe").
+    #[test]
+    fn rfc4231_case2() {
+        assert_eq!(
+            hex(&hmac(b"Jefe", b"what do ya want for nothing?")),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+    }
+
+    /// RFC 4231 test case 6: key longer than the block size.
+    #[test]
+    fn rfc4231_long_key() {
+        let key = [0xaau8; 131];
+        assert_eq!(
+            hex(&hmac(&key, b"Test Using Larger Than Block-Size Key - Hash Key First")),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Offline stand-in for the `subtle` crate: the [`ConstantTimeEq`] /
+//! [`Choice`] subset used for MAC-tag comparison.  The comparison
+//! accumulates a byte-OR of differences and reduces once at the end, so
+//! no data-dependent branch exists on the comparison path.
+
+/// A boolean that was computed without data-dependent branches.
+#[derive(Clone, Copy, Debug)]
+pub struct Choice(u8);
+
+impl Choice {
+    pub fn unwrap_u8(&self) -> u8 {
+        self.0
+    }
+}
+
+impl From<Choice> for bool {
+    fn from(c: Choice) -> bool {
+        c.0 != 0
+    }
+}
+
+/// Constant-time equality comparison.
+pub trait ConstantTimeEq {
+    fn ct_eq(&self, other: &Self) -> Choice;
+}
+
+impl ConstantTimeEq for [u8] {
+    fn ct_eq(&self, other: &Self) -> Choice {
+        if self.len() != other.len() {
+            return Choice(0);
+        }
+        let mut diff = 0u8;
+        for (a, b) in self.iter().zip(other.iter()) {
+            diff |= a ^ b;
+        }
+        // reduce without branching on the value
+        Choice(u8::from(diff == 0))
+    }
+}
+
+impl<const N: usize> ConstantTimeEq for [u8; N] {
+    fn ct_eq(&self, other: &Self) -> Choice {
+        self[..].ct_eq(&other[..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_and_unequal() {
+        let a = [1u8, 2, 3];
+        let b = [1u8, 2, 3];
+        let c = [1u8, 2, 4];
+        assert!(bool::from(a.ct_eq(&b)));
+        assert!(!bool::from(a.ct_eq(&c)));
+        assert_eq!(a.ct_eq(&b).unwrap_u8(), 1);
+    }
+
+    #[test]
+    fn slices_of_unequal_length_differ() {
+        let a: &[u8] = &[1, 2, 3];
+        let b: &[u8] = &[1, 2];
+        assert!(!bool::from(a.ct_eq(b)));
+    }
+}

@@ -1,0 +1,184 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! The execution environment for this workspace has no PJRT runtime, so
+//! this stub keeps the artifact code paths *compiling* and failing with
+//! an actionable error at the point where a real backend would execute.
+//! Everything that runs in CI — unit tests, the pool integration tests,
+//! the pool example/bench — goes through the pure-Rust reference backend
+//! (`origami::runtime::reference`), which needs none of this.
+//!
+//! API parity notes: the shapes of `PjRtClient`, `PjRtLoadedExecutable`,
+//! `Literal`, `HloModuleProto` and `XlaComputation` mirror the subset the
+//! coordinator uses, so swapping the real crate back in is a one-line
+//! Cargo change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: always a message.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} unavailable (offline build without PJRT) — \
+         use the pure-Rust reference backend (see origami::runtime::reference)"
+    ))
+}
+
+/// A parsed HLO module (text retained, never lowered here).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read HLO text from a file; fails only on I/O.
+    pub fn from_text_file(path: &Path) -> Result<Self, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {}: {e}", path.display())))?;
+        Ok(Self { text })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self
+    }
+}
+
+/// A PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The stub client constructs fine; only execution is unavailable.
+    pub fn cpu() -> Result<Self, Error> {
+        Ok(Self)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("HLO compilation"))
+    }
+}
+
+/// A loaded executable handle (never produced by the stub client).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("executable invocation"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("buffer readback"))
+    }
+}
+
+/// Element types a [`Literal`] can read back as.
+pub trait Element: Sized + Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl Element for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// A host-side tensor literal.
+#[derive(Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Self {
+        Self {
+            dims: vec![data.len() as i64],
+            data: data.to_vec(),
+        }
+    }
+
+    /// Reshape; errors when the element count changes.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Self, Error> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Self {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Unwrap a single-element tuple literal (identity in the stub).
+    pub fn to_tuple1(&self) -> Result<Self, Error> {
+        Ok(self.clone())
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shapes() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn client_constructs_but_execution_is_gated() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub-cpu");
+        assert_eq!(c.device_count(), 1);
+        let comp = XlaComputation::from_proto(&HloModuleProto {
+            text: String::new(),
+        });
+        let err = c.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("reference backend"));
+    }
+}
