@@ -6,10 +6,10 @@
 # only needed for the artifact-gated integration tests/benches; the
 # hermetic `sim*` reference-backend paths run everywhere.
 
-.PHONY: ci build test clippy bench-smoke pool-demo clean
+.PHONY: ci build test clippy fmt-check bench-smoke bench-smoke-fabric pool-demo fabric-demo clean
 
-## The CI gate: release build, full test suite, clippy as errors.
-ci: build test clippy
+## The CI gate: release build, full test suite, clippy as errors, rustfmt.
+ci: build test clippy fmt-check
 
 build:
 	cargo build --release
@@ -20,13 +20,25 @@ test:
 clippy:
 	cargo clippy -p origami -- -D warnings
 
+## Formatting drift fails fast (no write; CI runs this).
+fmt-check:
+	cargo fmt --check
+
 ## Fast smoke of the pool-scaling bench (reference backend, no artifacts).
 bench-smoke:
 	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig14_pool_scaling
 
+## Fast smoke of the fabric-sharing bench (asserts the ≥1.2x sharing gain).
+bench-smoke-fabric:
+	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig15_fabric_sharing
+
 ## The worker-pool demo: 4 pipelined workers vs the serial path.
 pool-demo:
 	cargo run --release -p origami --example pool_serving
+
+## The multi-tenant demo: two models sharing a lane fabric + autoscaler.
+fabric-demo:
+	cargo run --release -p origami --example multi_model_serving
 
 clean:
 	cargo clean

@@ -1,0 +1,157 @@
+//! Multi-model serving: two Origami deployments sharing one tier-2 lane
+//! fabric, with queue-depth autoscaling — end to end on the hermetic
+//! reference backend (no artifacts required).
+//!
+//! ```bash
+//! cargo run --release --example multi_model_serving
+//! ```
+//!
+//! What happens:
+//! 1. a `sim16` Origami/2 pool (the hot tenant) and a `sim8` Origami/6
+//!    pool (the cold tenant) register in one [`Deployment`]: each model
+//!    keeps its own tier-1 enclave shards and pad domains, but both
+//!    models' open tails drain through a single shared [`LaneFabric`]
+//!    with a cpu+gpu lane cycle and weighted-fair popping;
+//! 2. a request burst drives the queue-depth autoscaler: tier-1 worker
+//!    counts and the fabric's lane count grow under backlog and shrink
+//!    back to their floors once drained;
+//! 3. every response is compared bit-for-bit against the model's serial
+//!    single-worker path, and per-tenant / per-lane accounting is
+//!    printed.
+//!
+//! [`Deployment`]: origami::coordinator::Deployment
+//! [`LaneFabric`]: origami::coordinator::LaneFabric
+
+use origami::config::{Config, ModelSpec};
+use origami::enclave::cost::Ledger;
+use origami::launcher::{
+    build_strategy_with, encrypt_request, executor_for, start_deployment_from_config,
+    synth_images,
+};
+use origami::util::stats::fmt_ms;
+
+fn serial_reference(cfg: &Config, sessions: &[u64], images: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let (executor, model) = executor_for(cfg).expect("reference stack");
+    let mut strategy = build_strategy_with(executor, model, cfg).expect("strategy");
+    sessions
+        .iter()
+        .zip(images)
+        .map(|(&s, img)| {
+            strategy
+                .infer(&encrypt_request(cfg, s, img), 1, &[s], &mut Ledger::new())
+                .expect("serial inference")
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let base = Config {
+        model: "sim16".into(),
+        models: "sim16=origami/2*2,sim8=origami/6".into(),
+        workers: 1,
+        min_workers: 1,
+        max_workers: 4,
+        lanes: 1,
+        min_lanes: 1,
+        max_lanes: 4,
+        lane_devices: "cpu,gpu".into(),
+        autoscale: true,
+        autoscale_tick_ms: 2,
+        max_batch: 4,
+        max_delay_ms: 1.0,
+        pool_epochs: 32,
+        occupancy_flush: true,
+        ..Config::default()
+    };
+    let specs = ModelSpec::parse_list(&base.models)?;
+    println!("deploying {} tenants over one shared lane fabric…", specs.len());
+    let dep = start_deployment_from_config(&base, &specs)?;
+
+    // Workloads: hot sim16 traffic + a trickle of sim8.
+    let (n_hot, n_cold) = (48usize, 8usize);
+    let cfg_hot = specs[0].apply(&base);
+    let cfg_cold = specs[1].apply(&base);
+    let hot_sessions: Vec<u64> = (0..n_hot as u64).collect();
+    let cold_sessions: Vec<u64> = (0..n_cold as u64).map(|i| 100_000 + i).collect();
+    let hot_images = synth_images(n_hot, 16, 3, cfg_hot.seed);
+    let cold_images = synth_images(n_cold, 8, 3, cfg_cold.seed);
+    let hot_expected = serial_reference(&cfg_hot, &hot_sessions, &hot_images);
+    let cold_expected = serial_reference(&cfg_cold, &cold_sessions, &cold_images);
+
+    let t = std::time::Instant::now();
+    let mut replies = Vec::new();
+    for i in 0..n_hot.max(n_cold) {
+        if i < n_hot {
+            let s = hot_sessions[i];
+            let ct = encrypt_request(&cfg_hot, s, &hot_images[i]);
+            replies.push(("sim16", i, dep.submit("sim16", ct, s).map_err(|e| anyhow::anyhow!("{e}"))?));
+        }
+        if i < n_cold {
+            let s = cold_sessions[i];
+            let ct = encrypt_request(&cfg_cold, s, &cold_images[i]);
+            replies.push(("sim8", i, dep.submit("sim8", ct, s).map_err(|e| anyhow::anyhow!("{e}"))?));
+        }
+    }
+    let peak_workers = dep.active_workers("sim16");
+    let peak_lanes = dep.lane_count();
+
+    let mut identical = 0usize;
+    for (model, i, reply) in replies {
+        let resp = reply
+            .recv()
+            .ok_or_else(|| anyhow::anyhow!("{model} req {i}: reply channel closed"))?;
+        anyhow::ensure!(resp.error.is_none(), "{model} req {i}: {:?}", resp.error);
+        let expected = if model == "sim16" {
+            &hot_expected[i]
+        } else {
+            &cold_expected[i]
+        };
+        anyhow::ensure!(
+            &resp.probs == expected,
+            "{model} request {i} diverged from its serial path"
+        );
+        identical += 1;
+    }
+    let wall = t.elapsed().as_secs_f64() * 1e3;
+
+    println!(
+        "served {identical} requests in {} — every output bit-identical to its \
+         model's serial path",
+        fmt_ms(wall)
+    );
+    println!(
+        "mid-burst scale observed: sim16 workers={peak_workers} fabric lanes={peak_lanes}"
+    );
+
+    let m = dep.shutdown();
+    println!("\nper-tenant fabric accounting:");
+    for (name, t) in &m.fabric.tenants {
+        println!(
+            "  {name:<6} batches={:<4} requests={:<4} tier2 {}  total {}",
+            t.batches,
+            t.requests,
+            fmt_ms(t.tier2_sim_ms),
+            fmt_ms(t.sim_ms_total),
+        );
+    }
+    println!("\nper-lane ledgers (device-aware):");
+    for (i, busy) in m.fabric.lane_sim_ms.iter().enumerate() {
+        println!(
+            "  lane {i} [{}] busy {} ({} batches)",
+            m.fabric.lane_device[i].name(),
+            fmt_ms(*busy),
+            m.fabric.lane_batches[i],
+        );
+    }
+    println!(
+        "\nautoscale: fabric peak {} lanes ({} grow / {} shrink); sim16 pool peak {} \
+         workers ({} grow / {} shrink)",
+        m.fabric.peak_lanes,
+        m.fabric.grow_events,
+        m.fabric.shrink_events,
+        m.models["sim16"].peak_workers,
+        m.models["sim16"].grow_events,
+        m.models["sim16"].shrink_events,
+    );
+    Ok(())
+}

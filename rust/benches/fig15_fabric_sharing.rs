@@ -1,0 +1,264 @@
+//! Fig 15 (extension) — multi-tenant lane-fabric sharing.
+//!
+//! Two models serve concurrently: a *hot* sim16 Origami/2 tenant (most
+//! of the traffic, tail-heavy partition) and a *cold* sim8 tenant.  At
+//! an equal total lane budget L we compare:
+//!
+//! - **partitioned** — two deployments, each model owning L/2 private
+//!   tier-2 lanes (what per-pool lanes give you), vs.
+//! - **shared**      — one deployment, both models attached to a single
+//!   L-lane fabric with weighted-fair popping.
+//!
+//! Throughput is reported on the simulated-cost timeline: every batch's
+//! tier-2 cost is recorded by the lanes' ledgers, then replayed through
+//! a deterministic greedy scheduler (least-loaded lane first, tasks in
+//! weighted-fair order) — so the result is independent of host core
+//! count and thread wakeup timing, like every other SimClock number in
+//! this repo.  Observed per-lane busy time is printed alongside.
+//!
+//! The sharing win is structural: partitioned, the cold model's lanes
+//! idle while the hot model's two lanes grind; shared, all L lanes
+//! drain the hot tail stream (the cold tenant adds almost nothing), so
+//! the same lane budget finishes the same work in roughly half the
+//! lane-time.  Outputs stay bit-identical to each model's serial path —
+//! checked here for every request.
+//!
+//! Run: `cargo bench --bench fig15_fabric_sharing`
+//! (ORIGAMI_BENCH_FAST=1 shrinks the request counts for CI smoke runs.)
+
+use origami::config::Config;
+use origami::coordinator::{AutoscalePolicy, Deployment, DeploymentMetrics};
+use origami::enclave::cost::Ledger;
+use origami::harness::Bench;
+use origami::launcher::{
+    build_strategy_with, deploy_from_config, encrypt_request, executor_for,
+    fabric_options_from_config, synth_images,
+};
+
+const HOT: &str = "sim16";
+const COLD: &str = "sim8";
+
+fn model_config(model: &str, workers: usize) -> Config {
+    Config {
+        model: model.into(),
+        // tail-heavy partition: everything past layer 2 is open tier-2
+        strategy: "origami/2".into(),
+        workers,
+        max_batch: 1, // batch == request: deterministic batch counts
+        max_delay_ms: 0.0,
+        pool_epochs: 16,
+        pipeline: true,
+        ..Config::default()
+    }
+}
+
+struct Workload {
+    cfg: Config,
+    sessions: Vec<u64>,
+    images: Vec<Vec<f32>>,
+    expected: Vec<Vec<f32>>,
+}
+
+fn workload(model: &str, workers: usize, n: usize, session_base: u64) -> anyhow::Result<Workload> {
+    let cfg = model_config(model, workers);
+    let (_, m) = executor_for(&cfg)?;
+    let images = synth_images(n, m.image, m.in_channels, cfg.seed);
+    let sessions: Vec<u64> = (0..n as u64).map(|i| session_base + i).collect();
+    let (executor, m) = executor_for(&cfg)?;
+    let mut strategy = build_strategy_with(executor, m, &cfg)?;
+    let expected = images
+        .iter()
+        .zip(&sessions)
+        .map(|(img, &s)| {
+            let ct = encrypt_request(&cfg, s, img);
+            strategy.infer(&ct, 1, &[s], &mut Ledger::new())
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(Workload {
+        cfg,
+        sessions,
+        images,
+        expected,
+    })
+}
+
+/// Drive one deployment with the given workloads; every reply must be
+/// bit-identical to the serial reference.
+fn drive(dep: &Deployment, loads: &[&Workload]) -> anyhow::Result<()> {
+    let mut replies = Vec::new();
+    let longest = loads.iter().map(|l| l.sessions.len()).max().unwrap_or(0);
+    for i in 0..longest {
+        for l in loads {
+            if i < l.sessions.len() {
+                let s = l.sessions[i];
+                let ct = encrypt_request(&l.cfg, s, &l.images[i]);
+                let reply = dep
+                    .submit(&l.cfg.model, ct, s)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                replies.push((l.cfg.model.clone(), i, reply));
+            }
+        }
+    }
+    for (model, i, reply) in replies {
+        let resp = reply
+            .recv()
+            .ok_or_else(|| anyhow::anyhow!("{model} req {i}: reply channel closed"))?;
+        anyhow::ensure!(resp.error.is_none(), "{model} req {i}: {:?}", resp.error);
+        let expected = loads
+            .iter()
+            .find(|l| l.cfg.model == model)
+            .map(|l| &l.expected[i])
+            .unwrap();
+        anyhow::ensure!(
+            &resp.probs == expected,
+            "{model} request {i} diverged from the serial path"
+        );
+    }
+    Ok(())
+}
+
+/// Deterministic greedy replay: tasks (in weighted-fair order) land on
+/// the least-loaded lane; the makespan is the busiest lane.
+fn greedy_makespan(tasks: &[f64], lanes: usize) -> f64 {
+    let mut lane = vec![0.0f64; lanes.max(1)];
+    for &c in tasks {
+        let i = (0..lane.len())
+            .min_by(|&a, &b| lane[a].partial_cmp(&lane[b]).unwrap())
+            .unwrap();
+        lane[i] += c;
+    }
+    lane.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Weighted-fair task order over (count, per-task cost, weight) streams —
+/// the same virtual-time rule the fabric's queue pops with.
+fn fair_order(streams: &[(usize, f64, f64)]) -> Vec<f64> {
+    let mut left: Vec<usize> = streams.iter().map(|s| s.0).collect();
+    let mut vtime = vec![0.0f64; streams.len()];
+    let mut out = Vec::new();
+    loop {
+        let mut best: Option<usize> = None;
+        for i in 0..streams.len() {
+            if left[i] == 0 {
+                continue;
+            }
+            if best.map(|b| vtime[i] < vtime[b]).unwrap_or(true) {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { break };
+        out.push(streams[i].1);
+        left[i] -= 1;
+        vtime[i] += 1.0 / streams[i].2;
+    }
+    out
+}
+
+/// (count, mean tier-2 cost) of one tenant in a finished deployment.
+fn tenant_cost(m: &DeploymentMetrics, model: &str) -> (usize, f64) {
+    let t = &m.fabric.tenants[model];
+    let n = t.batches as usize;
+    (n, if n > 0 { t.tier2_sim_ms / n as f64 } else { 0.0 })
+}
+
+fn new_deployment(base: &Config, lanes: usize) -> anyhow::Result<Deployment> {
+    let mut cfg = base.clone();
+    cfg.lanes = lanes;
+    cfg.lane_devices = "cpu".into();
+    Ok(Deployment::new(
+        fabric_options_from_config(&cfg)?,
+        AutoscalePolicy::default(),
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("ORIGAMI_BENCH_FAST").ok().as_deref() == Some("1");
+    let (n_hot, n_cold) = if fast { (32, 4) } else { (64, 8) };
+    let mut bench = Bench::new("Fig 15: fabric sharing (hot sim16 + cold sim8, origami/2)");
+
+    let hot = workload(HOT, 4, n_hot, 0)?;
+    let cold = workload(COLD, 2, n_cold, 100_000)?;
+
+    for lane_budget in [2usize, 4] {
+        // ── shared: one fabric, both tenants, `lane_budget` lanes ──
+        let shared = new_deployment(&hot.cfg, lane_budget)?;
+        deploy_from_config(&shared, &hot.cfg, 1.0)?;
+        deploy_from_config(&shared, &cold.cfg, 1.0)?;
+        let t = std::time::Instant::now();
+        drive(&shared, &[&hot, &cold])?;
+        let shared_wall_ms = t.elapsed().as_secs_f64() * 1e3;
+        let sm = shared.shutdown();
+
+        // ── partitioned: each model owns lane_budget/2 private lanes ──
+        let per_model = (lane_budget / 2).max(1);
+        let part_hot = new_deployment(&hot.cfg, per_model)?;
+        deploy_from_config(&part_hot, &hot.cfg, 1.0)?;
+        let part_cold = new_deployment(&cold.cfg, per_model)?;
+        deploy_from_config(&part_cold, &cold.cfg, 1.0)?;
+        let t = std::time::Instant::now();
+        drive(&part_hot, &[&hot])?;
+        drive(&part_cold, &[&cold])?;
+        let part_wall_ms = t.elapsed().as_secs_f64() * 1e3;
+        let pm_hot = part_hot.shutdown();
+        let pm_cold = part_cold.shutdown();
+
+        // ── simulated-cost throughput at equal lane budget ──
+        let (sn_hot, sc_hot) = tenant_cost(&sm, HOT);
+        let (sn_cold, sc_cold) = tenant_cost(&sm, COLD);
+        let shared_total = sn_hot as f64 * sc_hot + sn_cold as f64 * sc_cold;
+        let shared_makespan = greedy_makespan(
+            &fair_order(&[(sn_hot, sc_hot, 1.0), (sn_cold, sc_cold, 1.0)]),
+            lane_budget,
+        );
+        let shared_tput = shared_total / shared_makespan;
+
+        let (pn_hot, pc_hot) = tenant_cost(&pm_hot, HOT);
+        let (pn_cold, pc_cold) = tenant_cost(&pm_cold, COLD);
+        let part_total = pn_hot as f64 * pc_hot + pn_cold as f64 * pc_cold;
+        let part_makespan = greedy_makespan(&vec![pc_hot; pn_hot], per_model)
+            .max(greedy_makespan(&vec![pc_cold; pn_cold], per_model));
+        let part_tput = part_total / part_makespan;
+
+        let gain = shared_tput / part_tput;
+
+        let row = bench.push_samples(
+            &format!("shared fabric: {lane_budget} lanes"),
+            &[shared_wall_ms],
+        );
+        row.extra.push(("sim_tput".into(), shared_tput));
+        row.extra.push(("sim_makespan_ms".into(), shared_makespan));
+        row.extra
+            .push(("observed_max_lane_ms".into(), sm.fabric.makespan_ms()));
+        let row = bench.push_samples(
+            &format!("partitioned: {per_model}+{per_model} lanes"),
+            &[part_wall_ms],
+        );
+        row.extra.push(("sim_tput".into(), part_tput));
+        row.extra.push(("sim_makespan_ms".into(), part_makespan));
+        row.extra.push((
+            "observed_max_lane_ms".into(),
+            pm_hot
+                .fabric
+                .makespan_ms()
+                .max(pm_cold.fabric.makespan_ms()),
+        ));
+        bench.metric(
+            &format!("sharing gain @ {lane_budget} lanes"),
+            "x",
+            gain,
+        );
+        anyhow::ensure!(
+            gain >= 1.2,
+            "lane sharing gain {gain:.2}x below the 1.2x acceptance bar \
+             (shared {shared_tput:.2}, partitioned {part_tput:.2})"
+        );
+    }
+
+    bench.finish();
+    println!(
+        "\nacceptance: shared-fabric simulated-cost throughput ≥ 1.2x the same \
+         total lanes statically partitioned per model; every request above was \
+         verified bit-identical to its model's serial path"
+    );
+    Ok(())
+}

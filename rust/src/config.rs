@@ -49,6 +49,34 @@ pub struct Config {
     /// pool assigns each worker its index so pad streams are disjoint
     /// across workers; single-instance deployments leave it at 0.
     pub blind_domain: u64,
+    /// Multi-model deployment spec, comma-separated
+    /// (`model[=strategy[@device][*weight]]`, e.g.
+    /// `sim8=origami/6@cpu*2,sim16=slalom`).  Empty = single-model.
+    pub models: String,
+    /// Shared tier-2 lane fabric: initial lane count (0 → `workers`).
+    pub lanes: usize,
+    /// Lane autoscale floor (0 → `lanes`).
+    pub min_lanes: usize,
+    /// Lane autoscale ceiling (0 → `lanes`).
+    pub max_lanes: usize,
+    /// Per-lane device cycle, comma-separated (`cpu,gpu`); lane *i* is
+    /// pinned to entry `i % len`.  Empty → every lane uses `device`.
+    pub lane_devices: String,
+    /// Tier-1 worker autoscale floor (0 → `workers`).
+    pub min_workers: usize,
+    /// Tier-1 worker autoscale ceiling (0 → `workers`).
+    pub max_workers: usize,
+    /// Run the deployment's queue-depth autoscaler thread.
+    pub autoscale: bool,
+    /// Autoscaler cadence (ms).
+    pub autoscale_tick_ms: u64,
+    /// Grow a pool/fabric when queue depth exceeds `high × active`.
+    pub autoscale_high_depth: usize,
+    /// Shrink when depth falls to `low × (active − 1)`.
+    pub autoscale_low_depth: usize,
+    /// Occupancy-aware batching: flush partial batches early while the
+    /// tier-2 side is starved.
+    pub occupancy_flush: bool,
 }
 
 impl Default for Config {
@@ -71,6 +99,18 @@ impl Default for Config {
             lazy_dense_bytes: 16 * 1024,
             pipeline: true,
             blind_domain: 0,
+            models: String::new(),
+            lanes: 0,
+            min_lanes: 0,
+            max_lanes: 0,
+            lane_devices: String::new(),
+            min_workers: 0,
+            max_workers: 0,
+            autoscale: false,
+            autoscale_tick_ms: 20,
+            autoscale_high_depth: 4,
+            autoscale_low_depth: 1,
+            occupancy_flush: false,
         }
     }
 }
@@ -108,6 +148,8 @@ impl Config {
             ("model", &mut self.model),
             ("strategy", &mut self.strategy),
             ("device", &mut self.device),
+            ("models", &mut self.models),
+            ("lane_devices", &mut self.lane_devices),
         ] {
             if let Some(s) = v.get(field).and_then(|x| x.as_str()) {
                 *slot = s.to_string();
@@ -118,6 +160,7 @@ impl Config {
             ("seed", &mut self.seed),
             ("pool_epochs", &mut self.pool_epochs),
             ("lazy_dense_bytes", &mut self.lazy_dense_bytes),
+            ("autoscale_tick_ms", &mut self.autoscale_tick_ms),
         ] {
             if let Some(n) = v.get(field).and_then(|x| x.as_i64()) {
                 *slot = n as u64;
@@ -127,6 +170,13 @@ impl Config {
             ("partition", &mut self.partition),
             ("max_batch", &mut self.max_batch),
             ("workers", &mut self.workers),
+            ("lanes", &mut self.lanes),
+            ("min_lanes", &mut self.min_lanes),
+            ("max_lanes", &mut self.max_lanes),
+            ("min_workers", &mut self.min_workers),
+            ("max_workers", &mut self.max_workers),
+            ("autoscale_high_depth", &mut self.autoscale_high_depth),
+            ("autoscale_low_depth", &mut self.autoscale_low_depth),
         ] {
             if let Some(n) = v.get(field).and_then(|x| x.as_usize()) {
                 *slot = n;
@@ -140,6 +190,12 @@ impl Config {
         }
         if let Some(b) = v.get("pipeline").and_then(|x| x.as_bool()) {
             self.pipeline = b;
+        }
+        if let Some(b) = v.get("autoscale").and_then(|x| x.as_bool()) {
+            self.autoscale = b;
+        }
+        if let Some(b) = v.get("occupancy_flush").and_then(|x| x.as_bool()) {
+            self.occupancy_flush = b;
         }
         if let Some(n) = v.get("blind_domain").and_then(|x| x.as_i64()) {
             self.blind_domain = n as u64;
@@ -170,6 +226,12 @@ impl Config {
         if let Some(v) = args.get("device") {
             c.device = v.into();
         }
+        if let Some(v) = args.get("models") {
+            c.models = v.into();
+        }
+        if let Some(v) = args.get("lane-devices") {
+            c.lane_devices = v.into();
+        }
         c.epc_bytes = args.u64_or("epc-bytes", c.epc_bytes)?;
         c.seed = args.u64_or("seed", c.seed)?;
         c.partition = args.usize_or("partition", c.partition)?;
@@ -177,12 +239,26 @@ impl Config {
         c.max_batch = args.usize_or("max-batch", c.max_batch)?;
         c.max_delay_ms = args.f64_or("max-delay-ms", c.max_delay_ms)?;
         c.workers = args.usize_or("workers", c.workers)?;
+        c.lanes = args.usize_or("lanes", c.lanes)?;
+        c.min_lanes = args.usize_or("min-lanes", c.min_lanes)?;
+        c.max_lanes = args.usize_or("max-lanes", c.max_lanes)?;
+        c.min_workers = args.usize_or("min-workers", c.min_workers)?;
+        c.max_workers = args.usize_or("max-workers", c.max_workers)?;
+        c.autoscale_tick_ms = args.u64_or("autoscale-tick-ms", c.autoscale_tick_ms)?;
+        c.autoscale_high_depth = args.usize_or("autoscale-high-depth", c.autoscale_high_depth)?;
+        c.autoscale_low_depth = args.usize_or("autoscale-low-depth", c.autoscale_low_depth)?;
         c.lazy_dense_bytes = args.u64_or("lazy-dense-bytes", c.lazy_dense_bytes)?;
         if args.has("strict-otp") {
             c.allow_factor_reuse = false;
         }
         if args.has("no-pipeline") {
             c.pipeline = false;
+        }
+        if args.has("autoscale") {
+            c.autoscale = true;
+        }
+        if args.has("occupancy-flush") {
+            c.occupancy_flush = true;
         }
         Ok(c)
     }
@@ -208,7 +284,113 @@ impl Config {
             ("lazy_dense_bytes", json::num(self.lazy_dense_bytes as f64)),
             ("pipeline", Value::Bool(self.pipeline)),
             ("blind_domain", json::num(self.blind_domain as f64)),
+            ("models", json::s(&self.models)),
+            ("lanes", json::num(self.lanes as f64)),
+            ("min_lanes", json::num(self.min_lanes as f64)),
+            ("max_lanes", json::num(self.max_lanes as f64)),
+            ("lane_devices", json::s(&self.lane_devices)),
+            ("min_workers", json::num(self.min_workers as f64)),
+            ("max_workers", json::num(self.max_workers as f64)),
+            ("autoscale", Value::Bool(self.autoscale)),
+            ("autoscale_tick_ms", json::num(self.autoscale_tick_ms as f64)),
+            (
+                "autoscale_high_depth",
+                json::num(self.autoscale_high_depth as f64),
+            ),
+            (
+                "autoscale_low_depth",
+                json::num(self.autoscale_low_depth as f64),
+            ),
+            ("occupancy_flush", Value::Bool(self.occupancy_flush)),
         ])
+    }
+}
+
+/// One model's slot in a multi-model deployment spec.
+///
+/// Text form: `model[=strategy[@device][*weight]]` — e.g. `sim8`,
+/// `sim8=origami/6`, `sim8=origami/6@gpu*2`, `sim16=slalom@cpu`.
+/// Omitted parts inherit the base config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub model: String,
+    pub strategy: Option<String>,
+    pub device: Option<String>,
+    /// Weighted-fair share of the shared tier-2 lane fabric.
+    pub weight: f64,
+}
+
+impl ModelSpec {
+    /// Parse one spec.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        anyhow::ensure!(!spec.is_empty(), "empty model spec");
+        let (model, rest) = match spec.split_once('=') {
+            Some((m, r)) => (m.trim(), Some(r.trim())),
+            None => (spec, None),
+        };
+        anyhow::ensure!(!model.is_empty(), "model spec `{spec}`: empty model name");
+        let mut strategy = None;
+        let mut device = None;
+        let mut weight = 1.0f64;
+        if let Some(rest) = rest {
+            let (rest, w) = match rest.split_once('*') {
+                Some((r, w)) => (r.trim(), Some(w.trim())),
+                None => (rest, None),
+            };
+            if let Some(w) = w {
+                weight = w
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("model spec `{spec}`: bad weight `{w}`"))?;
+                anyhow::ensure!(
+                    weight > 0.0,
+                    "model spec `{spec}`: weight must be positive"
+                );
+            }
+            let (strat, dev) = match rest.split_once('@') {
+                Some((s, d)) => (s.trim(), Some(d.trim())),
+                None => (rest, None),
+            };
+            if !strat.is_empty() {
+                strategy = Some(strat.to_string());
+            }
+            if let Some(d) = dev {
+                anyhow::ensure!(!d.is_empty(), "model spec `{spec}`: empty device");
+                device = Some(d.to_string());
+            }
+        }
+        Ok(Self {
+            model: model.to_string(),
+            strategy,
+            device,
+            weight,
+        })
+    }
+
+    /// Parse a comma-separated spec list (`--models`).
+    pub fn parse_list(s: &str) -> Result<Vec<Self>> {
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            if part.trim().is_empty() {
+                continue;
+            }
+            out.push(Self::parse(part)?);
+        }
+        anyhow::ensure!(!out.is_empty(), "no model specs in `{s}`");
+        Ok(out)
+    }
+
+    /// The per-model config: the base with this spec's overrides applied.
+    pub fn apply(&self, base: &Config) -> Config {
+        let mut c = base.clone();
+        c.model = self.model.clone();
+        if let Some(s) = &self.strategy {
+            c.strategy = s.clone();
+        }
+        if let Some(d) = &self.device {
+            c.device = d.clone();
+        }
+        c
     }
 }
 
@@ -247,6 +429,80 @@ mod tests {
         assert_eq!(c.epc_bytes, 128 * 1024 * 1024);
         assert!(c.usable_epc_bytes() > 90 * 1024 * 1024);
         assert!(c.usable_epc_bytes() < 94 * 1024 * 1024);
+    }
+
+    #[test]
+    fn model_spec_parses_all_shapes() {
+        let s = ModelSpec::parse("sim8").unwrap();
+        assert_eq!(s.model, "sim8");
+        assert_eq!(s.strategy, None);
+        assert_eq!(s.device, None);
+        assert_eq!(s.weight, 1.0);
+
+        let s = ModelSpec::parse("sim8=origami/6@gpu*2").unwrap();
+        assert_eq!(s.model, "sim8");
+        assert_eq!(s.strategy.as_deref(), Some("origami/6"));
+        assert_eq!(s.device.as_deref(), Some("gpu"));
+        assert_eq!(s.weight, 2.0);
+
+        let s = ModelSpec::parse(" sim16 = slalom ").unwrap();
+        assert_eq!(s.model, "sim16");
+        assert_eq!(s.strategy.as_deref(), Some("slalom"));
+
+        let list = ModelSpec::parse_list("sim8=origami/6*2, sim16=slalom@cpu").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[1].model, "sim16");
+        assert_eq!(list[1].device.as_deref(), Some("cpu"));
+
+        assert!(ModelSpec::parse("").is_err());
+        assert!(ModelSpec::parse("=origami").is_err());
+        assert!(ModelSpec::parse("sim8=origami*zero").is_err());
+        assert!(ModelSpec::parse("sim8=origami*-1").is_err());
+        assert!(ModelSpec::parse_list(" , ").is_err());
+    }
+
+    #[test]
+    fn model_spec_apply_overrides_base() {
+        let base = Config::default();
+        let cfg = ModelSpec::parse("sim8=origami/4@gpu").unwrap().apply(&base);
+        assert_eq!(cfg.model, "sim8");
+        assert_eq!(cfg.strategy, "origami/4");
+        assert_eq!(cfg.device, "gpu");
+        let cfg = ModelSpec::parse("sim16").unwrap().apply(&base);
+        assert_eq!(cfg.model, "sim16");
+        assert_eq!(cfg.strategy, base.strategy, "unspecified parts inherit");
+    }
+
+    #[test]
+    fn fabric_and_autoscale_args_parse() {
+        let args = Args::parse(
+            "serve --models sim8=origami/6,sim16=slalom --lanes 4 --min-lanes 2 \
+             --max-lanes 8 --lane-devices cpu,gpu --min-workers 1 --max-workers 6 \
+             --autoscale --occupancy-flush --autoscale-high-depth 3"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = Config::from_args(&args).unwrap();
+        assert_eq!(c.models, "sim8=origami/6,sim16=slalom");
+        assert_eq!(c.lanes, 4);
+        assert_eq!(c.min_lanes, 2);
+        assert_eq!(c.max_lanes, 8);
+        assert_eq!(c.lane_devices, "cpu,gpu");
+        assert_eq!(c.min_workers, 1);
+        assert_eq!(c.max_workers, 6);
+        assert!(c.autoscale);
+        assert!(c.occupancy_flush);
+        assert_eq!(c.autoscale_high_depth, 3);
+        // round-trips through JSON
+        let v = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&v);
+        assert_eq!(c2.models, c.models);
+        assert_eq!(c2.lane_devices, c.lane_devices);
+        assert_eq!(c2.max_lanes, c.max_lanes);
+        assert!(c2.autoscale);
+        assert!(c2.occupancy_flush);
     }
 
     #[test]

@@ -4,17 +4,42 @@
 //! has waited `max_delay`; the batch then ships to a worker.  This is the
 //! standard serving trade-off (throughput vs tail latency) and an
 //! ablation bench sweeps both knobs.
+//!
+//! Two policy details matter under load:
+//!
+//! - The delay window is anchored at the *oldest queued request's
+//!   submission time*, not at the moment the batcher happened to poll.
+//!   When the ingress queue backs up, a request may already be older
+//!   than `max_delay` by the time it is pulled; restarting the window
+//!   then would add a full extra delay on top of its queueing time
+//!   (starvation under sustained mixed load).
+//! - An optional **occupancy probe** makes the flush tier-aware: when
+//!   the downstream tier-2 lanes are starved (probe returns `true`),
+//!   waiting out the delay window only creates a pipeline bubble, so the
+//!   batcher ships what it has immediately.  When the lanes are busy the
+//!   full window is used to form larger batches.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::api::InferRequest;
 use crate::util::threadpool::Channel;
+
+/// Signals that the downstream execution stage is idle and a partial
+/// batch should flush now rather than wait out the delay window.
+pub type FlushProbe = Arc<dyn Fn() -> bool + Send + Sync>;
+
+/// How often the occupancy probe is re-sampled while waiting inside the
+/// delay window (tier-2 can go idle mid-wait; a bubble should not last
+/// longer than this).
+const PROBE_INTERVAL: Duration = Duration::from_millis(1);
 
 /// Pulls from the ingress queue and forms batches.
 pub struct DynamicBatcher {
     ingress: Channel<InferRequest>,
     pub max_batch: usize,
     pub max_delay: Duration,
+    flush_probe: Option<FlushProbe>,
 }
 
 impl DynamicBatcher {
@@ -23,7 +48,15 @@ impl DynamicBatcher {
             ingress,
             max_batch: max_batch.max(1),
             max_delay: Duration::from_secs_f64(max_delay_ms.max(0.0) / 1e3),
+            flush_probe: None,
         }
+    }
+
+    /// Attach an occupancy probe (see module docs): `probe() == true`
+    /// means downstream is starved and partial batches flush early.
+    pub fn with_flush_probe(mut self, probe: FlushProbe) -> Self {
+        self.flush_probe = Some(probe);
+        self
     }
 
     pub fn ingress(&self) -> Channel<InferRequest> {
@@ -34,22 +67,46 @@ impl DynamicBatcher {
     pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
         // block for the first request
         let first = self.ingress.recv()?;
-        let deadline = Instant::now() + self.max_delay;
+        // Delay window anchored at the oldest request's submission: a
+        // request that already out-waited the window in the ingress
+        // queue ships immediately instead of paying the window twice.
+        let deadline = first.submitted_at + self.max_delay;
         let mut batch = vec![first];
         while batch.len() < self.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            // opportunistically drain, then wait out the remaining delay
+            // Opportunistic drain costs no latency, so it happens even
+            // past the deadline: under backlog the batcher still forms
+            // full batches — only *waiting* is cut short.
             let more = self.ingress.drain_up_to(self.max_batch - batch.len());
             if !more.is_empty() {
                 batch.extend(more);
                 continue;
             }
-            match self.ingress.recv_timeout(deadline - now) {
-                Some(r) => batch.push(r),
-                None => break,
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match &self.flush_probe {
+                // nothing queued: if downstream is starved, ship what we
+                // have — and re-sample while waiting, since tier-2 can
+                // drain to idle mid-window
+                Some(probe) => {
+                    if probe() {
+                        break;
+                    }
+                    match self.ingress.recv_timeout((deadline - now).min(PROBE_INTERVAL)) {
+                        Some(r) => batch.push(r),
+                        None => {
+                            if self.ingress.is_closed() {
+                                break;
+                            }
+                            // timed out: loop re-checks deadline + probe
+                        }
+                    }
+                }
+                None => match self.ingress.recv_timeout(deadline - now) {
+                    Some(r) => batch.push(r),
+                    None => break,
+                },
             }
         }
         Some(batch)
@@ -176,6 +233,111 @@ mod tests {
         }
         assert_eq!(seen, 2, "no request lost across the close");
         assert!(b.next_batch().is_none(), "stays terminated");
+    }
+
+    #[test]
+    fn stale_request_ships_without_restarting_the_window() {
+        // Starvation regression: under sustained load the batcher can
+        // pull a request that already waited out max_delay in the
+        // ingress queue.  The window is anchored at submission time, so
+        // the batch must ship immediately — not wait another full
+        // window from the poll instant.
+        let ch = Channel::bounded(8);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let b = DynamicBatcher::new(ch, 8, 20.0);
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t.elapsed() < Duration::from_millis(15),
+            "stale request must flush immediately, waited {:?}",
+            t.elapsed()
+        );
+    }
+
+    #[test]
+    fn half_spent_window_only_waits_the_remainder() {
+        // The oldest request spent part of its window queued; only the
+        // remainder may be waited out.
+        let ch = Channel::bounded(8);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        let b = DynamicBatcher::new(ch, 8, 80.0);
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = t.elapsed();
+        assert!(waited < Duration::from_millis(70), "{waited:?}");
+    }
+
+    #[test]
+    fn idle_downstream_flushes_partial_batches_early() {
+        let ch = Channel::bounded(8);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        let b = DynamicBatcher::new(ch, 8, 10_000.0)
+            .with_flush_probe(Arc::new(|| true));
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t.elapsed() < Duration::from_millis(500),
+            "idle downstream must cut the window short"
+        );
+    }
+
+    #[test]
+    fn busy_downstream_keeps_the_window() {
+        let ch = Channel::bounded(8);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        let b = DynamicBatcher::new(ch, 8, 25.0).with_flush_probe(Arc::new(|| false));
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t.elapsed() >= Duration::from_millis(15),
+            "busy downstream keeps coalescing, waited {:?}",
+            t.elapsed()
+        );
+    }
+
+    #[test]
+    fn probe_resampled_mid_wait_cuts_the_window() {
+        // tier-2 going idle *after* the batcher starts waiting must
+        // still flush the partial batch promptly
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let ch = Channel::bounded(8);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        let idle = Arc::new(AtomicBool::new(false));
+        let idle2 = idle.clone();
+        let b = DynamicBatcher::new(ch, 8, 10_000.0)
+            .with_flush_probe(Arc::new(move || idle2.load(Ordering::SeqCst)));
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            idle.store(true, Ordering::SeqCst);
+        });
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t.elapsed() < Duration::from_millis(1_000),
+            "mid-wait idle must flush, waited {:?}",
+            t.elapsed()
+        );
+    }
+
+    #[test]
+    fn probe_still_drains_queued_requests_first() {
+        // An idle-downstream flush must not strand already-queued peers.
+        let ch = Channel::bounded(8);
+        for i in 0..3 {
+            ch.send(req(i)).map_err(|_| ()).unwrap();
+        }
+        let b = DynamicBatcher::new(ch, 8, 10_000.0)
+            .with_flush_probe(Arc::new(|| true));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3, "queued requests join before the flush");
     }
 
     #[test]

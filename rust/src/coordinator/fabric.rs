@@ -1,0 +1,816 @@
+//! Shared multi-tenant tier-2 lane fabric.
+//!
+//! ```text
+//!  model A pool ─ tier-1 (enclaves, pads) ─┐        ┌─ lane 0 (cpu)  ─┐
+//!  model B pool ─ tier-1 (enclaves, pads) ─┼→ fair  ├─ lane 1 (gpu)  ─┼→ replies
+//!  model C pool ─ tier-1 (enclaves, pads) ─┘  queue └─ lane N (cpu)  ─┘
+//!                     (Tier2Task, tenant-tagged, weighted-fair pop)
+//! ```
+//!
+//! Origami's tier split means the tier-2 tail is *plain accelerator
+//! work*: no enclave, no session keys, no blinding state.  That is why
+//! tails from different models can share one fleet of device lanes — the
+//! capacity-sharing opportunity the paper's two-tier design creates and
+//! per-pool lanes waste.  The fabric makes that substrate first-class:
+//!
+//! 1. **Multi-tenant fair queue.**  Every [`Tier2Task`] is tagged with
+//!    its model; the queue pops by least weighted virtual service
+//!    (batches served ÷ tenant weight), so a hot model cannot starve a
+//!    cold one's tails.  A tenant returning from idle is floored to the
+//!    queue-wide virtual clock so it cannot replay its idle credit as a
+//!    burst.
+//! 2. **Device-aware lanes.**  Each lane is pinned to an *explicit*
+//!    [`Device`] from the fabric's device cycle — not the config device
+//!    the model inherited — so a deployment can mix CPU and modeled-GPU
+//!    lanes and each lane's cost ledger reflects its own hardware
+//!    profile.  Numerics never change (the modeled GPU computes on the
+//!    CPU), so pooled outputs stay bit-identical to the serial path.
+//! 3. **Lane autoscaling.**  [`LaneFabric::scale_to`] grows or retires
+//!    lanes between configurable min/max bounds; the deployment
+//!    autoscaler drives it from queue depth.  Retired lanes finish
+//!    their in-flight task, then exit; queued tasks are never dropped.
+//!
+//! Per-tenant finishers are constructed lazily *inside* each lane
+//! thread (the PJRT path holds thread-local handles), then cached for
+//! the lane's lifetime.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::api::reply_error;
+use super::scheduler::{Tier2Finisher, Tier2Task};
+use crate::runtime::Device;
+
+/// Fabric geometry and policy.
+#[derive(Debug, Clone)]
+pub struct FabricOptions {
+    /// Initial lane count.
+    pub lanes: usize,
+    /// Autoscale floor (0 → `lanes`).
+    pub min_lanes: usize,
+    /// Autoscale ceiling (0 → `lanes`).
+    pub max_lanes: usize,
+    /// Device cycle: lane *i* is pinned to `lane_devices[i % len]`.
+    /// Empty → every lane on the untrusted CPU.
+    pub lane_devices: Vec<Device>,
+    /// Per-tenant queue bound (backpressure toward that tenant's tier-1
+    /// workers; other tenants are unaffected).
+    pub queue_cap: usize,
+}
+
+impl Default for FabricOptions {
+    fn default() -> Self {
+        Self {
+            lanes: 2,
+            min_lanes: 0,
+            max_lanes: 0,
+            lane_devices: vec![Device::UntrustedCpu],
+            queue_cap: 64,
+        }
+    }
+}
+
+/// Per-tenant serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    /// Tier-2 batches finished for this tenant.
+    pub batches: u64,
+    /// Requests replied to across those batches.
+    pub requests: u64,
+    /// Failed batches / orphaned requests.
+    pub errors: u64,
+    /// Simulated ms spent in this tenant's tier-2 tails alone.
+    pub tier2_sim_ms: f64,
+    /// Simulated ms across both tiers (tier-1 ledgers ride along in the
+    /// task and are merged at finish time).
+    pub sim_ms_total: f64,
+}
+
+/// Aggregated fabric metrics: per-lane ledgers + per-tenant stats.
+#[derive(Debug, Clone, Default)]
+pub struct FabricMetrics {
+    /// Simulated tier-2 busy ms of each lane (the lane cost ledger).
+    pub lane_sim_ms: Vec<f64>,
+    /// Batches each lane finished.
+    pub lane_batches: Vec<u64>,
+    /// The device each lane is pinned to.
+    pub lane_device: Vec<Device>,
+    /// Per-tenant serving stats, keyed by model.
+    pub tenants: BTreeMap<String, TenantStats>,
+    /// Autoscale events.
+    pub grow_events: u64,
+    pub shrink_events: u64,
+    /// Highest concurrent lane count reached.
+    pub peak_lanes: usize,
+    /// Failed batches across all tenants.
+    pub errors: u64,
+}
+
+impl FabricMetrics {
+    /// Busiest lane on the simulated timeline — the fabric's makespan
+    /// (each lane is an independent device stream).
+    pub fn makespan_ms(&self) -> f64 {
+        self.lane_sim_ms.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    /// Total simulated tier-2 ms served across all tenants.
+    pub fn tier2_total_ms(&self) -> f64 {
+        self.tenants.values().map(|t| t.tier2_sim_ms).sum()
+    }
+
+    /// Tier-2 substrate throughput: work served per unit of busiest-lane
+    /// time.  Comparing this at equal lane budgets is the fabric-sharing
+    /// experiment (`benches/fig15_fabric_sharing.rs`).
+    pub fn lane_throughput(&self) -> f64 {
+        let makespan = self.makespan_ms();
+        if makespan <= 0.0 {
+            return 0.0;
+        }
+        self.tier2_total_ms() / makespan
+    }
+}
+
+/// Per-tenant deque + weighted-fair accounting.
+struct TenantQueueState {
+    tasks: VecDeque<Tier2Task>,
+    weight: f64,
+    /// Batches popped ÷ weight (weighted virtual service time).
+    vtime: f64,
+}
+
+impl TenantQueueState {
+    fn new(weight: f64) -> Self {
+        Self {
+            tasks: VecDeque::new(),
+            weight: weight.max(1e-6),
+            vtime: 0.0,
+        }
+    }
+}
+
+struct FairQueueInner {
+    tenants: BTreeMap<String, TenantQueueState>,
+    len: usize,
+    closed: bool,
+    /// Queue-wide virtual clock: the highest vtime any pop has reached.
+    /// Tenants returning from idle are floored to it even when every
+    /// deque happens to be empty at that instant (depth oscillates
+    /// through zero constantly while lanes are in flight), so idle time
+    /// can never be banked as a burst credit.
+    vclock: f64,
+}
+
+/// What a timed pop produced.
+enum Pop {
+    Task(Tier2Task),
+    TimedOut,
+    Closed,
+}
+
+/// Bounded multi-tenant queue with a weighted-fair pop.
+struct FairQueue {
+    inner: Mutex<FairQueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl FairQueue {
+    fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(FairQueueInner {
+                tenants: BTreeMap::new(),
+                len: 0,
+                closed: false,
+                vclock: 0.0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Declare a tenant (idempotent; updates the weight).
+    fn register(&self, model: &str, weight: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .tenants
+            .entry(model.to_string())
+            .or_insert_with(|| TenantQueueState::new(weight));
+        t.weight = weight.max(1e-6);
+    }
+
+    /// Blocking push with per-tenant backpressure; Err(task) when closed.
+    fn push(&self, task: Tier2Task) -> std::result::Result<(), Tier2Task> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(task);
+            }
+            // an unregistered tenant counts as depth 0 (it is created on
+            // first push below), so the per-tenant cap applies to every
+            // producer — attached or not
+            let depth = g
+                .tenants
+                .get(&task.model)
+                .map(|t| t.tasks.len())
+                .unwrap_or(0);
+            if depth < self.cap {
+                break;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+        // A tenant returning from idle is floored to the queue-wide
+        // virtual clock: idle periods must not accumulate into a burst
+        // credit that starves steadily-loaded tenants.  (The clock, not
+        // a min over currently-queued tenants: the queue routinely
+        // passes through depth zero while lanes are in flight, and a
+        // momentary empty instant must not let stale credit survive.)
+        let vclock = g.vclock;
+        let t = g
+            .tenants
+            .entry(task.model.clone())
+            .or_insert_with(|| TenantQueueState::new(1.0));
+        if t.tasks.is_empty() {
+            t.vtime = t.vtime.max(vclock);
+        }
+        t.tasks.push_back(task);
+        g.len += 1;
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Weighted-fair pop: the non-empty tenant with the least weighted
+    /// virtual service goes first (ties break lexicographically, so the
+    /// order is deterministic).
+    fn pop_timeout(&self, timeout: Duration) -> Pop {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let pick = g
+                .tenants
+                .iter()
+                .filter(|(_, t)| !t.tasks.is_empty())
+                .min_by(|a, b| a.1.vtime.partial_cmp(&b.1.vtime).unwrap())
+                .map(|(name, _)| name.clone());
+            if let Some(name) = pick {
+                let t = g.tenants.get_mut(&name).unwrap();
+                let task = t.tasks.pop_front().unwrap();
+                t.vtime += 1.0 / t.weight;
+                let v = t.vtime;
+                g.vclock = g.vclock.max(v);
+                g.len -= 1;
+                self.not_full.notify_all();
+                return Pop::Task(task);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, _) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Per-tenant registration: how a lane builds this model's finisher.
+struct TenantEntry {
+    factory: Arc<dyn Fn(usize) -> Result<Tier2Finisher> + Send + Sync>,
+}
+
+/// State shared between the fabric handle, its lanes and the owner.
+struct FabricShared {
+    queue: FairQueue,
+    tenants: Mutex<HashMap<String, TenantEntry>>,
+    desired: AtomicUsize,
+    /// Lanes currently processing a task (occupancy probe: "starved"
+    /// means an idle lane exists *and* nothing is queued — an empty
+    /// queue alone just means the lanes are keeping up).
+    busy_lanes: AtomicUsize,
+    metrics: Mutex<FabricMetrics>,
+    devices: Vec<Device>,
+}
+
+/// Cloneable submission handle an attached pool holds.
+#[derive(Clone)]
+pub struct FabricHandle {
+    shared: Arc<FabricShared>,
+}
+
+impl FabricHandle {
+    /// Enqueue a tier-1-complete task; Err(task) when the fabric is
+    /// shut down (the caller replies an error to each request).
+    pub fn submit(&self, task: Tier2Task) -> std::result::Result<(), Tier2Task> {
+        self.shared.queue.push(task)
+    }
+
+    /// Queued tier-2 batches across all tenants.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.depth()
+    }
+
+    /// True when at least one lane sits idle with nothing queued — the
+    /// signal the occupancy-aware batcher flushes on.  (Queue depth
+    /// alone is the wrong signal: it passes through zero constantly
+    /// while every lane is busy.)
+    pub fn starved(&self) -> bool {
+        self.shared.queue.depth() == 0
+            && self.shared.busy_lanes.load(Ordering::SeqCst)
+                < self.shared.desired.load(Ordering::SeqCst)
+    }
+}
+
+/// The shared, device-aware tier-2 lane fleet (see module docs).
+pub struct LaneFabric {
+    shared: Arc<FabricShared>,
+    slots: Mutex<Vec<Option<JoinHandle<()>>>>,
+    /// Serializes concurrent scale_to calls: an unserialized shrink can
+    /// block joining a lane whose `desired` check a concurrent grow just
+    /// un-tripped, and a concurrent grow could double-spawn a slot.
+    scale_lock: Mutex<()>,
+    min_lanes: usize,
+    max_lanes: usize,
+}
+
+impl LaneFabric {
+    /// Start the fabric with its initial lane fleet.
+    pub fn start(opts: FabricOptions) -> Self {
+        let lanes = opts.lanes.max(1);
+        let min_lanes = if opts.min_lanes == 0 {
+            lanes
+        } else {
+            opts.min_lanes.min(lanes).max(1)
+        };
+        let max_lanes = if opts.max_lanes == 0 {
+            lanes
+        } else {
+            opts.max_lanes.max(lanes)
+        };
+        let devices = if opts.lane_devices.is_empty() {
+            vec![Device::UntrustedCpu]
+        } else {
+            opts.lane_devices.clone()
+        };
+        let shared = Arc::new(FabricShared {
+            queue: FairQueue::new(opts.queue_cap),
+            tenants: Mutex::new(HashMap::new()),
+            desired: AtomicUsize::new(lanes),
+            busy_lanes: AtomicUsize::new(0),
+            metrics: Mutex::new(FabricMetrics {
+                peak_lanes: lanes,
+                ..FabricMetrics::default()
+            }),
+            devices,
+        });
+        let fabric = Self {
+            shared,
+            slots: Mutex::new(Vec::new()),
+            scale_lock: Mutex::new(()),
+            min_lanes,
+            max_lanes,
+        };
+        fabric.ensure_lanes(lanes);
+        fabric
+    }
+
+    /// Register a tenant: `factory(lane)` builds the model's finisher
+    /// inside a lane thread; the lane re-pins it to its own device.
+    /// Returns the submission handle its pool attaches with.
+    pub fn attach<F>(&self, model: &str, weight: f64, factory: F) -> Result<FabricHandle>
+    where
+        F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
+    {
+        {
+            let mut g = self.shared.tenants.lock().unwrap();
+            anyhow::ensure!(
+                !g.contains_key(model),
+                "model `{model}` is already attached to the fabric"
+            );
+            g.insert(
+                model.to_string(),
+                TenantEntry {
+                    factory: Arc::new(factory),
+                },
+            );
+        }
+        self.shared.queue.register(model, weight);
+        Ok(self.handle())
+    }
+
+    /// A cloneable submission handle.
+    pub fn handle(&self) -> FabricHandle {
+        FabricHandle {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Current (desired) lane count.
+    pub fn lane_count(&self) -> usize {
+        self.shared.desired.load(Ordering::SeqCst)
+    }
+
+    /// Queued tier-2 batches.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.depth()
+    }
+
+    /// Grow/retire lanes toward `n` (clamped to the configured bounds);
+    /// returns the resulting lane count.  Retired lanes finish their
+    /// in-flight task and are joined before this returns; queued tasks
+    /// stay queued for the surviving lanes.
+    pub fn scale_to(&self, n: usize) -> usize {
+        let _guard = self.scale_lock.lock().unwrap();
+        let n = n.clamp(self.min_lanes, self.max_lanes).max(1);
+        let cur = self.shared.desired.load(Ordering::SeqCst);
+        if n == cur {
+            return cur;
+        }
+        self.shared.desired.store(n, Ordering::SeqCst);
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            if n > cur {
+                m.grow_events += 1;
+                m.peak_lanes = m.peak_lanes.max(n);
+            } else {
+                m.shrink_events += 1;
+            }
+        }
+        if n > cur {
+            self.ensure_lanes(n);
+        } else {
+            let handles: Vec<JoinHandle<()>> = {
+                let mut g = self.slots.lock().unwrap();
+                (n..g.len()).filter_map(|i| g[i].take()).collect()
+            };
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        n
+    }
+
+    /// Make sure lanes `0..n` are running (spawning any that are missing
+    /// or previously retired).
+    fn ensure_lanes(&self, n: usize) {
+        let mut g = self.slots.lock().unwrap();
+        while g.len() < n {
+            g.push(None);
+        }
+        for i in 0..n {
+            let respawn = match &g[i] {
+                None => true,
+                Some(h) => h.is_finished(),
+            };
+            if !respawn {
+                continue;
+            }
+            if let Some(h) = g[i].take() {
+                let _ = h.join();
+            }
+            let device = self.shared.devices[i % self.shared.devices.len()];
+            {
+                let mut m = self.shared.metrics.lock().unwrap();
+                if m.lane_sim_ms.len() <= i {
+                    m.lane_sim_ms.resize(i + 1, 0.0);
+                    m.lane_batches.resize(i + 1, 0);
+                    m.lane_device.resize(i + 1, Device::UntrustedCpu);
+                }
+                m.lane_device[i] = device;
+            }
+            let shared = self.shared.clone();
+            g[i] = Some(
+                std::thread::Builder::new()
+                    .name(format!("origami-fabric-lane{i}"))
+                    .spawn(move || lane_main(shared, i, device))
+                    .expect("spawn fabric lane"),
+            );
+        }
+    }
+
+    fn stop(&self) {
+        self.shared.queue.close();
+        let handles: Vec<JoinHandle<()>> = {
+            let mut g = self.slots.lock().unwrap();
+            g.iter_mut().filter_map(|s| s.take()).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Drain the queue, stop every lane, return the final metrics.
+    pub fn shutdown(self) -> FabricMetrics {
+        self.stop();
+        let m = self.shared.metrics.lock().unwrap();
+        m.clone()
+    }
+}
+
+impl Drop for LaneFabric {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Give a lane this many attempts at building a tenant's finisher
+/// before writing the tenant off for the lane's lifetime — a transient
+/// factory failure (runtime init hiccup) heals on a later task instead
+/// of turning the lane into a permanent error source for that model.
+const FINISHER_BUILD_ATTEMPTS: u32 = 3;
+
+/// One lane: pop fairly, lazily build (and cache) the tenant's finisher
+/// pinned to this lane's device, finish, account.
+fn lane_main(shared: Arc<FabricShared>, lane: usize, device: Device) {
+    let mut finishers: HashMap<String, Option<Tier2Finisher>> = HashMap::new();
+    let mut build_attempts: HashMap<String, u32> = HashMap::new();
+    loop {
+        if lane >= shared.desired.load(Ordering::SeqCst) {
+            break; // retired by a scale-down
+        }
+        let task = match shared.queue.pop_timeout(Duration::from_millis(20)) {
+            Pop::Task(t) => t,
+            Pop::TimedOut => continue,
+            Pop::Closed => break,
+        };
+        shared.busy_lanes.fetch_add(1, Ordering::SeqCst);
+        let model = task.model.clone();
+        if !finishers.contains_key(&model) {
+            let factory = shared
+                .tenants
+                .lock()
+                .unwrap()
+                .get(&model)
+                .map(|e| e.factory.clone());
+            // an unknown tenant is not cached: it may attach later
+            if let Some(f) = factory {
+                match f(lane) {
+                    Ok(fin) => {
+                        finishers.insert(model.clone(), Some(fin.with_device(device)));
+                    }
+                    Err(e) => {
+                        let a = build_attempts.entry(model.clone()).or_insert(0);
+                        *a += 1;
+                        eprintln!(
+                            "[fabric] lane {lane}: finisher for `{model}` failed \
+                             (attempt {a}/{FINISHER_BUILD_ATTEMPTS}): {e:#}"
+                        );
+                        if *a >= FINISHER_BUILD_ATTEMPTS {
+                            finishers.insert(model.clone(), None);
+                        }
+                    }
+                }
+            }
+        }
+        match finishers.get(&model).and_then(|f| f.as_ref()) {
+            Some(fin) => {
+                let out = fin.finish(task);
+                let mut g = shared.metrics.lock().unwrap();
+                g.lane_sim_ms[lane] += out.tier2_sim_ms;
+                g.lane_batches[lane] += 1;
+                let t = g.tenants.entry(model).or_default();
+                t.batches += 1;
+                t.requests += out.record.batch as u64;
+                t.tier2_sim_ms += out.tier2_sim_ms;
+                t.sim_ms_total += out.record.sim_ms;
+                if !out.ok {
+                    t.errors += 1;
+                    g.errors += 1;
+                }
+            }
+            None => {
+                for req in &task.requests {
+                    reply_error(req, "no tier-2 finisher available for this model");
+                }
+                let mut g = shared.metrics.lock().unwrap();
+                g.errors += 1;
+                let t = g.tenants.entry(model).or_default();
+                t.errors += task.requests.len() as u64;
+            }
+        }
+        shared.busy_lanes.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::api::InferRequest;
+    use crate::enclave::cost::{CostModel, Ledger};
+    use crate::runtime::{ReferenceBackend, StageExecutor};
+    use std::time::Instant;
+
+    fn task(
+        model: &str,
+    ) -> (
+        Tier2Task,
+        crate::util::threadpool::Channel<crate::coordinator::api::InferResponse>,
+    ) {
+        let (req, reply) = InferRequest::new(1, model, vec![], 0);
+        (
+            Tier2Task {
+                model: model.to_string(),
+                requests: vec![req],
+                exec_batch: 1,
+                stage: None,
+                features: vec![0.5, 0.5],
+                ledger: Ledger::new(),
+                queue_ms: 0.0,
+                started: Instant::now(),
+                home_worker: 0,
+                error: None,
+            },
+            reply,
+        )
+    }
+
+    fn pop_model(q: &FairQueue) -> String {
+        match q.pop_timeout(Duration::from_millis(100)) {
+            Pop::Task(t) => t.model,
+            _ => panic!("expected a task"),
+        }
+    }
+
+    #[test]
+    fn fair_queue_interleaves_equal_weights() {
+        let q = FairQueue::new(16);
+        q.register("a", 1.0);
+        q.register("b", 1.0);
+        let mut keep = Vec::new();
+        for m in ["a", "a", "a", "a", "b", "b"] {
+            let (t, r) = task(m);
+            q.push(t).map_err(|_| ()).unwrap();
+            keep.push(r);
+        }
+        let order: Vec<String> = (0..6).map(|_| pop_model(&q)).collect();
+        assert_eq!(order, vec!["a", "b", "a", "b", "a", "a"]);
+    }
+
+    #[test]
+    fn fair_queue_respects_weights() {
+        let q = FairQueue::new(16);
+        q.register("a", 2.0);
+        q.register("b", 1.0);
+        let mut keep = Vec::new();
+        for _ in 0..4 {
+            let (t, r) = task("a");
+            q.push(t).map_err(|_| ()).unwrap();
+            keep.push(r);
+            let (t, r) = task("b");
+            q.push(t).map_err(|_| ()).unwrap();
+            keep.push(r);
+        }
+        let order: Vec<String> = (0..6).map(|_| pop_model(&q)).collect();
+        // weight 2 tenant gets ~2 pops per weight-1 pop
+        assert_eq!(order, vec!["a", "b", "a", "a", "b", "a"]);
+    }
+
+    #[test]
+    fn returning_tenant_is_floored_not_bursty() {
+        let q = FairQueue::new(16);
+        q.register("a", 1.0);
+        q.register("b", 1.0);
+        let mut keep = Vec::new();
+        for _ in 0..4 {
+            let (t, r) = task("b");
+            q.push(t).map_err(|_| ()).unwrap();
+            keep.push(r);
+        }
+        // b serves alone for a while…
+        assert_eq!(pop_model(&q), "b");
+        assert_eq!(pop_model(&q), "b");
+        // …then a returns from idle: it must be floored to b's virtual
+        // time and alternate, not drain its backlog first
+        for _ in 0..2 {
+            let (t, r) = task("a");
+            q.push(t).map_err(|_| ()).unwrap();
+            keep.push(r);
+        }
+        let order: Vec<String> = (0..4).map(|_| pop_model(&q)).collect();
+        assert_eq!(order, vec!["a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn idle_credit_does_not_survive_an_empty_queue_instant() {
+        // The queue routinely drains to zero while lanes are in flight;
+        // a tenant returning at such an instant must still be floored
+        // (to the queue-wide virtual clock), or it would bank its idle
+        // time and lock out the hot tenant for a long burst.
+        let q = FairQueue::new(16);
+        q.register("hot", 1.0);
+        q.register("idle", 1.0);
+        let mut keep = Vec::new();
+        for _ in 0..4 {
+            let (t, r) = task("hot");
+            q.push(t).map_err(|_| ()).unwrap();
+            keep.push(r);
+        }
+        for _ in 0..4 {
+            assert_eq!(pop_model(&q), "hot"); // hot vtime climbs to 4
+        }
+        // queue is now EMPTY; the idle tenant wakes up…
+        for m in ["idle", "hot", "idle", "hot"] {
+            let (t, r) = task(m);
+            q.push(t).map_err(|_| ()).unwrap();
+            keep.push(r);
+        }
+        // …and must alternate with the hot tenant, not drain first
+        let order: Vec<String> = (0..4).map(|_| pop_model(&q)).collect();
+        assert_eq!(order, vec!["hot", "idle", "hot", "idle"]);
+    }
+
+    #[test]
+    fn closed_queue_rejects_push_and_drains_pops() {
+        let q = FairQueue::new(4);
+        q.register("a", 1.0);
+        let (t, _r) = task("a");
+        q.push(t).map_err(|_| ()).unwrap();
+        q.close();
+        let (t2, _r2) = task("a");
+        assert!(q.push(t2).is_err(), "push after close fails");
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Pop::Task(_)));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Pop::Closed));
+    }
+
+    #[test]
+    fn fabric_finishes_final_tasks_and_scales() {
+        let fabric = LaneFabric::start(FabricOptions {
+            lanes: 1,
+            min_lanes: 1,
+            max_lanes: 3,
+            lane_devices: vec![Device::UntrustedCpu, Device::Gpu],
+            ..FabricOptions::default()
+        });
+        let handle = fabric
+            .attach("sim8", 1.0, |_lane| {
+                let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 1)?);
+                Ok(Tier2Finisher::new(
+                    Arc::new(StageExecutor::reference(rb, CostModel::default())),
+                    "sim8",
+                    Device::UntrustedCpu,
+                ))
+            })
+            .unwrap();
+        assert_eq!(fabric.lane_count(), 1);
+        assert_eq!(fabric.scale_to(10), 3, "clamped to max_lanes");
+        assert_eq!(fabric.scale_to(0), 1, "clamped to min_lanes");
+        assert_eq!(fabric.scale_to(2), 2);
+
+        // duplicate tenants are rejected
+        assert!(fabric.attach("sim8", 1.0, |_| anyhow::bail!("unused")).is_err());
+
+        let mut replies = Vec::new();
+        for _ in 0..6 {
+            let (t, r) = task("sim8");
+            handle.submit(t).map_err(|_| ()).unwrap();
+            replies.push(r);
+        }
+        for r in replies {
+            let resp = r.recv().expect("reply");
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(resp.probs, vec![0.5, 0.5], "Final task passes through");
+        }
+        let m = fabric.shutdown();
+        let t = m.tenants.get("sim8").expect("tenant stats");
+        assert_eq!(t.batches, 6);
+        assert_eq!(t.requests, 6);
+        assert_eq!(t.errors, 0);
+        assert_eq!(m.grow_events, 2, "1→3 and 1→2");
+        assert_eq!(m.shrink_events, 1, "3→1");
+        assert_eq!(m.peak_lanes, 3);
+        assert_eq!(m.lane_device[0], Device::UntrustedCpu);
+        assert_eq!(m.lane_device[1], Device::Gpu, "device cycle respected");
+    }
+
+    #[test]
+    fn unattached_tenant_gets_error_replies_not_hangs() {
+        let fabric = LaneFabric::start(FabricOptions {
+            lanes: 1,
+            ..FabricOptions::default()
+        });
+        let handle = fabric.handle();
+        let (t, r) = task("ghost-model");
+        handle.submit(t).map_err(|_| ()).unwrap();
+        let resp = r.recv().expect("error reply arrives");
+        assert!(resp.error.is_some());
+        let m = fabric.shutdown();
+        assert_eq!(m.errors, 1);
+    }
+}

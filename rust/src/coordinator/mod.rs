@@ -1,6 +1,6 @@
-//! Serving coordinator: request API, router, dynamic batcher, pipeline
-//! scheduler, the single-batcher serving engine and the sharded worker
-//! pool.
+//! Serving coordinator: request API, router/deployment, dynamic batcher,
+//! pipeline scheduler, the single-batcher serving engine, the sharded
+//! worker pool and the shared tier-2 lane fabric.
 //!
 //! Data path (all Rust, Python never involved):
 //!
@@ -17,14 +17,27 @@
 //!                 tier-2: shared open-device lanes (work-stealing tails)
 //! ```
 //!
-//! Batches form under a (max-batch, max-delay) policy; each worker owns a
-//! full strategy instance (enclave + blinding state) so batches execute
-//! in parallel without sharing enclave state across trust contexts.  The
-//! pool additionally double-buffers Origami's two tiers, overlapping
-//! batch *k+1*'s enclave work with batch *k*'s device tail.
+//! or, multi-tenant ([`router::Deployment`] + [`fabric::LaneFabric`]):
+//!
+//! ```text
+//! client ─▶ Deployment ─▶ model A pool: tier-1 shards (enclaves) ─┐
+//!   (admission:           model B pool: tier-1 shards (enclaves) ─┼─▶ LaneFabric
+//!    model, size,                                                 │   fair queue →
+//!    session binding)          autoscaler (queue depth) ──────────┘   device lanes
+//! ```
+//!
+//! Batches form under a (max-batch, max-delay) policy — optionally
+//! occupancy-aware, flushing early while tier-2 lanes are starved; each
+//! worker owns a full strategy instance (enclave + blinding state) so
+//! batches execute in parallel without sharing enclave state across
+//! trust contexts.  The pool double-buffers Origami's two tiers,
+//! overlapping batch *k+1*'s enclave work with batch *k*'s device tail;
+//! the fabric lets *different models* share that tier-2 device capacity,
+//! since tails carry no enclave state at all.
 
 pub mod api;
 pub mod batcher;
+pub mod fabric;
 pub mod pool;
 pub mod router;
 pub mod scheduler;
@@ -32,6 +45,9 @@ pub mod server;
 
 pub use api::{InferRequest, InferResponse};
 pub use batcher::DynamicBatcher;
+pub use fabric::{FabricHandle, FabricMetrics, FabricOptions, LaneFabric, TenantStats};
 pub use pool::{PoolMetrics, PoolOptions, WorkerPool};
-pub use router::{EngineHandle, Router};
+pub use router::{
+    AdmissionError, AutoscalePolicy, Deployment, DeploymentMetrics, EngineHandle, Router,
+};
 pub use server::ServingEngine;

@@ -2,39 +2,54 @@
 //!
 //! ```text
 //!                       ┌─ worker 0: [batcher]→ tier-1 (enclave w0) ─┐
-//! clients → ingress → dispatcher (session-affinity shard)           ├→ shared tier-2 queue
-//!                       └─ worker N: [batcher]→ tier-1 (enclave wN) ─┘        │
-//!                                            tier-2 lanes (open device) ◀────┘  (work-stealing)
+//! clients → ingress → dispatcher (session-affinity shard)           ├→ tier-2 sink
+//!                       └─ worker N: [batcher]→ tier-1 (enclave wN) ─┘      │
+//!                 owned lanes (open device) ◀── or ──▶ shared LaneFabric ◀──┘
 //! ```
 //!
 //! Three properties the single-engine serving loop lacks:
 //!
 //! 1. **Session-affinity sharding.**  The dispatcher routes a request to
-//!    worker `session % N`, so a session's tier-1 — the part that touches
-//!    blinding state — always executes on the same enclave.  Each worker's
-//!    pad stream lives in a disjoint keyspace (`Config::blind_domain` =
-//!    worker index), so pooling never reuses a one-time pad across
-//!    workers.
+//!    worker `session % active`, so a session's tier-1 — the part that
+//!    touches blinding state — executes on one enclave at any given pool
+//!    size.  Each worker's pad stream lives in a disjoint keyspace
+//!    (`Config::blind_domain` = worker index), so pooling never reuses a
+//!    one-time pad across workers.
 //! 2. **Tier pipelining.**  Inside a worker, tier-1 of batch *k+1*
 //!    (enclave: decrypt, blind, unblind, non-linear) overlaps tier-2 of
 //!    batch *k* (open device: the fused tail) — the overlap Origami's
 //!    two-tier split creates and a serial `Strategy::infer` loop wastes.
-//! 3. **Work stealing.**  Tier-2 tasks carry no enclave state, so they
-//!    drain through one shared queue: any idle tier-2 lane finishes any
-//!    worker's tail, absorbing load imbalance between shards.
+//! 3. **A pluggable tier-2 sink.**  Tier-2 tasks carry no enclave state,
+//!    so they drain either through the pool's own work-stealing lanes
+//!    ([`WorkerPool::start`]) or — the multi-tenant shape — through a
+//!    shared, device-aware [`LaneFabric`](super::fabric::LaneFabric)
+//!    other models' pools attach to as well
+//!    ([`WorkerPool::start_attached`]).
+//!
+//! Pools resize at runtime: [`WorkerPool::scale_to`] grows or retires
+//! tier-1 shards between the configured min/max bounds (the deployment
+//! autoscaler drives it from queue depth).  Re-homing a session on a
+//! resize is *safe*: any enclave can re-derive any session's keys from
+//! the deployment master, and blinding pads stay disjoint because every
+//! worker *incarnation* draws a fresh pad domain from a monotone
+//! counter — a shard retired and later respawned at the same slot index
+//! never reuses its predecessor's pad stream (its epoch counter restarts
+//! at zero, so sharing the domain would re-emit consumed one-time pads).
+//! Affinity is a locality property, not a correctness one.
 //!
 //! Outputs are bit-identical to the serial single-worker path: tier
 //! splitting reorders *when* work happens, never *what* is computed.
 
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
 use super::api::{reply_error, BatchRecord, InferRequest, InferResponse};
 use super::batcher::DynamicBatcher;
+use super::fabric::FabricHandle;
 use super::scheduler::{BatchScheduler, Tier2Finisher, Tier2Task};
 use crate::util::stats::Summary;
 use crate::util::threadpool::Channel;
@@ -42,14 +57,21 @@ use crate::util::threadpool::Channel;
 /// Pool geometry and policy.
 #[derive(Debug, Clone)]
 pub struct PoolOptions {
-    /// Worker shards (one strategy instance + enclave each).
+    /// Initial worker shards (one strategy instance + enclave each).
     pub workers: usize,
+    /// Autoscale floor (0 → `workers`).
+    pub min_workers: usize,
+    /// Autoscale ceiling (0 → `workers`).
+    pub max_workers: usize,
     /// Dynamic batcher: max batch per shard.
     pub max_batch: usize,
     /// Dynamic batcher: max queueing delay (ms).
     pub max_delay_ms: f64,
-    /// Overlap tier-1/tier-2 (double-buffered tiers + stealing lanes).
+    /// Overlap tier-1/tier-2 (double-buffered tiers + tier-2 lanes).
     pub pipeline: bool,
+    /// Occupancy-aware batching: flush partial batches early while the
+    /// tier-2 side is starved (no point coalescing into an idle lane).
+    pub occupancy_flush: bool,
     /// Shared ingress bound (client backpressure).
     pub ingress_cap: usize,
     /// Per-worker queue bound (shard backpressure).
@@ -60,9 +82,12 @@ impl Default for PoolOptions {
     fn default() -> Self {
         Self {
             workers: 2,
+            min_workers: 0,
+            max_workers: 0,
             max_batch: 8,
             max_delay_ms: 2.0,
             pipeline: true,
+            occupancy_flush: false,
             ingress_cap: 256,
             worker_queue_cap: 64,
         }
@@ -70,6 +95,7 @@ impl Default for PoolOptions {
 }
 
 /// Aggregated pool metrics, including per-lane simulated busy time.
+#[derive(Clone)]
 pub struct PoolMetrics {
     pub requests: u64,
     pub batches: u64,
@@ -83,13 +109,20 @@ pub struct PoolMetrics {
     pub sim_ms_total: f64,
     /// Simulated busy time of each worker's tier-1 (enclave) lane.
     pub tier1_sim_ms: Vec<f64>,
-    /// Simulated busy time of each tier-2 (open device) lane.
+    /// Simulated busy time of each *owned* tier-2 lane (attached pools
+    /// leave this empty — the fabric keeps per-lane ledgers instead).
     pub tier2_sim_ms: Vec<f64>,
-    /// Sessions whose tier-1 ran on each worker (affinity audit: the
-    /// sets must be pairwise disjoint).
+    /// Sessions whose tier-1 ran on each worker (affinity audit: at a
+    /// fixed pool size the sets must be pairwise disjoint; a resize may
+    /// legitimately re-home a session's residue class).
     pub sessions_per_worker: Vec<BTreeSet<u64>>,
     /// Tier-2 batches finished by a lane other than the home worker's.
     pub stolen_batches: u64,
+    /// Autoscale events.
+    pub grow_events: u64,
+    pub shrink_events: u64,
+    /// Highest concurrent tier-1 worker count reached.
+    pub peak_workers: usize,
 }
 
 impl PoolMetrics {
@@ -107,6 +140,9 @@ impl PoolMetrics {
             tier2_sim_ms: vec![0.0; workers],
             sessions_per_worker: vec![BTreeSet::new(); workers],
             stolen_batches: 0,
+            grow_events: 0,
+            shrink_events: 0,
+            peak_workers: workers,
         }
     }
 
@@ -154,244 +190,364 @@ impl PoolMetrics {
     }
 }
 
+/// Grow-on-demand indexing for per-worker metric vectors (worker slots
+/// beyond the initial count appear when the pool scales up).
+fn at<T: Default + Clone>(v: &mut Vec<T>, i: usize) -> &mut T {
+    if v.len() <= i {
+        v.resize(i + 1, T::default());
+    }
+    &mut v[i]
+}
+
+type SchedFactory = Arc<dyn Fn(usize) -> Result<BatchScheduler> + Send + Sync>;
+type FinisherFactory = Arc<dyn Fn(usize) -> Result<Tier2Finisher> + Send + Sync>;
+
+/// Where a worker's tier-1 output goes.
+#[derive(Clone)]
+enum Tier2Sink {
+    /// Pool-owned work-stealing lanes drain a private queue.
+    Owned {
+        queue: Channel<Tier2Task>,
+        /// Lanes currently finishing a task (occupancy probe).
+        busy: Arc<AtomicUsize>,
+        lanes: usize,
+    },
+    /// Tails are handed to a shared multi-tenant lane fabric.
+    Fabric(FabricHandle),
+}
+
+impl Tier2Sink {
+    fn send(&self, task: Tier2Task) -> std::result::Result<(), Tier2Task> {
+        match self {
+            Tier2Sink::Owned { queue, .. } => queue.send(task),
+            Tier2Sink::Fabric(h) => h.submit(task),
+        }
+    }
+
+    /// True when a tier-2 lane sits idle with nothing queued — the
+    /// batcher's flush signal.  An empty queue alone is *not* starvation
+    /// (depth oscillates through zero while every lane is busy).
+    fn starved(&self) -> bool {
+        match self {
+            Tier2Sink::Owned { queue, busy, lanes } => {
+                queue.is_empty() && busy.load(Ordering::SeqCst) < *lanes
+            }
+            Tier2Sink::Fabric(h) => h.starved(),
+        }
+    }
+}
+
+/// One tier-1 shard: its request queue and (while running) its thread.
+struct WorkerSlot {
+    queue: Channel<InferRequest>,
+    handle: Option<JoinHandle<()>>,
+}
+
 /// The multi-worker serving pool.
 pub struct WorkerPool {
     ingress: Channel<InferRequest>,
-    worker_queues: Vec<Channel<InferRequest>>,
-    tier2_queue: Channel<Tier2Task>,
-    threads: Vec<JoinHandle<()>>,
+    slots: Arc<Mutex<Vec<WorkerSlot>>>,
+    active: Arc<AtomicUsize>,
+    dispatcher: Option<JoinHandle<()>>,
+    lane_threads: Vec<JoinHandle<()>>,
+    sink: Tier2Sink,
+    sched_factory: SchedFactory,
+    opts: PoolOptions,
+    /// Serializes concurrent scale_to calls (autoscaler vs. operator).
+    scale_lock: Mutex<()>,
+    /// Monotone blinding-domain allocator: every worker incarnation —
+    /// initial, grown, or respawned after a retire — gets a domain index
+    /// no previous incarnation of this pool ever used (OTP safety; see
+    /// module docs).
+    next_domain: Arc<AtomicUsize>,
     pub metrics: Arc<Mutex<PoolMetrics>>,
     next_id: AtomicU64,
-    workers: usize,
+    configured_workers: usize,
 }
 
 impl WorkerPool {
-    /// Start the pool.
+    /// Start a self-contained pool that owns its tier-2 lanes.
     ///
-    /// `sched_factory(w)` builds worker *w*'s [`BatchScheduler`] inside
-    /// its tier-1 thread (strategies hold thread-local runtime handles);
-    /// it must configure the strategy with `blind_domain = w` so pad
-    /// streams stay disjoint — the launcher's factories do.
+    /// `sched_factory(domain)` builds a worker's [`BatchScheduler`]
+    /// inside its tier-1 thread (strategies hold thread-local runtime
+    /// handles).  `domain` is a pool-unique blinding-domain index —
+    /// equal to the worker index for the initial fleet, and strictly
+    /// increasing for every later spawn — and the factory must configure
+    /// the strategy with `blind_domain = domain` so pad streams stay
+    /// disjoint across workers *and* across incarnations of the same
+    /// slot — the launcher's factories do.
     /// `finisher_factory(w)` builds lane *w*'s [`Tier2Finisher`] inside
-    /// its tier-2 thread (only used when `opts.pipeline`).
+    /// its tier-2 thread (only used when `opts.pipeline`).  Owned lanes
+    /// are provisioned up to `max_workers` so a later [`scale_to`] grow
+    /// has matching tier-2 capacity — an idle lane just blocks on the
+    /// queue; with no autoscale bounds configured this is exactly one
+    /// lane per worker, as before.
+    ///
+    /// [`scale_to`]: WorkerPool::scale_to
     pub fn start<S, F>(opts: PoolOptions, sched_factory: S, finisher_factory: F) -> Self
     where
         S: Fn(usize) -> Result<BatchScheduler> + Send + Sync + 'static,
         F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
     {
         let workers = opts.workers.max(1);
+        let max_workers = workers.max(opts.max_workers);
+        // Double-buffer depth: one in-flight tier-2 task per (potential)
+        // worker keeps every enclave lane busy without unbounded
+        // feature-map buildup.
+        let t2q: Channel<Tier2Task> = Channel::bounded(max_workers.max(2));
+        Self::start_inner(
+            opts,
+            Arc::new(sched_factory),
+            Tier2Sink::Owned {
+                queue: t2q.clone(),
+                busy: Arc::new(AtomicUsize::new(0)),
+                lanes: max_workers,
+            },
+            Some((t2q, Arc::new(finisher_factory) as FinisherFactory)),
+        )
+    }
+
+    /// Start a pool whose tier-2 tails drain through a shared
+    /// [`LaneFabric`](super::fabric::LaneFabric) instead of owned lanes.
+    /// The pool's model must already be attached to the fabric (the
+    /// handle comes from [`LaneFabric::attach`](super::fabric::LaneFabric::attach)).
+    pub fn start_attached<S>(opts: PoolOptions, sched_factory: S, fabric: FabricHandle) -> Self
+    where
+        S: Fn(usize) -> Result<BatchScheduler> + Send + Sync + 'static,
+    {
+        Self::start_inner(
+            opts,
+            Arc::new(sched_factory),
+            Tier2Sink::Fabric(fabric),
+            None,
+        )
+    }
+
+    fn start_inner(
+        opts: PoolOptions,
+        sched_factory: SchedFactory,
+        sink: Tier2Sink,
+        owned: Option<(Channel<Tier2Task>, FinisherFactory)>,
+    ) -> Self {
+        let mut opts = opts;
+        let workers = opts.workers.max(1);
+        opts.workers = workers;
+        opts.min_workers = if opts.min_workers == 0 {
+            workers
+        } else {
+            opts.min_workers.min(workers).max(1)
+        };
+        opts.max_workers = if opts.max_workers == 0 {
+            workers
+        } else {
+            opts.max_workers.max(workers)
+        };
+
         let ingress: Channel<InferRequest> = Channel::bounded(opts.ingress_cap.max(1));
-        let worker_queues: Vec<Channel<InferRequest>> = (0..workers)
-            .map(|_| Channel::bounded(opts.worker_queue_cap.max(1)))
-            .collect();
-        // Double-buffer depth: one in-flight tier-2 task per worker keeps
-        // every enclave lane busy without unbounded feature-map buildup.
-        let tier2_queue: Channel<Tier2Task> = Channel::bounded(workers.max(2));
         let metrics = Arc::new(Mutex::new(PoolMetrics::new(workers)));
-        let sched_factory = Arc::new(sched_factory);
-        let finisher_factory = Arc::new(finisher_factory);
-        let lanes = workers * if opts.pipeline { 2 } else { 1 };
-        let ready = Arc::new(Barrier::new(lanes + 1));
-        let t1_active = Arc::new(AtomicUsize::new(workers));
-        let mut threads = Vec::new();
+        let slots: Arc<Mutex<Vec<WorkerSlot>>> = Arc::new(Mutex::new(Vec::new()));
+        let active = Arc::new(AtomicUsize::new(0));
+        let dispatcher = Some(spawn_dispatcher(
+            ingress.clone(),
+            slots.clone(),
+            active.clone(),
+        ));
 
-        // Dispatcher: session-affinity sharding with backpressure.
+        // Startup barrier: the caller's first request must not pay for
+        // factory setup (artifact compilation, factor precompute).
+        let ready: Channel<()> = Channel::bounded(workers + opts.max_workers);
+        let mut expected_ready = workers;
+        let next_domain = Arc::new(AtomicUsize::new(0));
         {
-            let ingress = ingress.clone();
-            let queues = worker_queues.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name("origami-pool-dispatch".into())
-                    .spawn(move || {
-                        while let Some(req) = ingress.recv() {
-                            let w = (req.session % queues.len() as u64) as usize;
-                            if let Err(req) = queues[w].send(req) {
-                                // shard queue closed mid-shutdown: fail loud
-                                reply_error(&req, "worker pool is shutting down");
-                            }
-                        }
-                        for q in &queues {
-                            q.close();
-                        }
-                    })
-                    .expect("spawn dispatcher"),
-            );
+            let mut g = slots.lock().unwrap();
+            for w in 0..workers {
+                let queue: Channel<InferRequest> = Channel::bounded(opts.worker_queue_cap.max(1));
+                let domain = next_domain.fetch_add(1, Ordering::SeqCst);
+                let handle = spawn_worker(
+                    w,
+                    domain,
+                    queue.clone(),
+                    sink.clone(),
+                    metrics.clone(),
+                    sched_factory.clone(),
+                    opts.clone(),
+                    Some(ready.clone()),
+                );
+                g.push(WorkerSlot {
+                    queue,
+                    handle: Some(handle),
+                });
+            }
         }
+        active.store(workers, Ordering::SeqCst);
 
-        // Tier-1 workers: one enclave-owning shard each.
-        for w in 0..workers {
-            let queue = worker_queues[w].clone();
-            let t2q = tier2_queue.clone();
-            let m = metrics.clone();
-            let factory = sched_factory.clone();
-            let r = ready.clone();
-            let active = t1_active.clone();
-            let opts_c = opts.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("origami-pool-w{w}-t1"))
-                    .spawn(move || {
-                        let batcher =
-                            DynamicBatcher::new(queue, opts_c.max_batch, opts_c.max_delay_ms);
-                        let mut sched = match factory(w) {
-                            Ok(s) => {
-                                r.wait();
-                                Some(s)
-                            }
-                            Err(e) => {
-                                eprintln!("[pool] worker {w} failed to start: {e:#}");
-                                m.lock().unwrap().errors += 1;
-                                r.wait();
-                                None
-                            }
-                        };
-                        while let Some(batch) = batcher.next_batch() {
-                            let Some(sched) = sched.as_mut() else {
-                                for req in &batch {
-                                    reply_error(req, "worker failed to start");
-                                }
-                                continue;
-                            };
-                            // Admission: a mis-sized ciphertext would fail
-                            // the whole concatenated batch (and the batch's
-                            // reply channels would be dropped, hanging the
-                            // peers' clients) — reject it alone instead.
-                            // Reachable because the pool can be driven
-                            // directly, without the Router's size check.
-                            let (batch, rejected): (Vec<InferRequest>, Vec<InferRequest>) =
-                                batch.into_iter().partition(|r| {
-                                    r.ciphertext.len() == sched.sample_bytes
-                                });
-                            if !rejected.is_empty() {
-                                let mut g = m.lock().unwrap();
-                                g.errors += rejected.len() as u64;
-                                drop(g);
-                                for req in &rejected {
-                                    reply_error(req, "ciphertext has the wrong length");
-                                }
-                            }
-                            if batch.is_empty() {
-                                continue;
-                            }
-                            {
-                                let mut g = m.lock().unwrap();
-                                for req in &batch {
-                                    g.sessions_per_worker[w].insert(req.session);
-                                }
-                            }
-                            if opts_c.pipeline {
-                                match sched.execute_tier1(batch, w) {
-                                    Ok(tasks) => {
-                                        for task in tasks {
-                                            // tier-1 failures are counted once,
-                                            // by the finisher (ok=false)
-                                            let mut g = m.lock().unwrap();
-                                            g.tier1_sim_ms[w] +=
-                                                task.ledger.grand_total_ms();
-                                            drop(g);
-                                            if let Err(task) = t2q.send(task) {
-                                                for req in &task.requests {
-                                                    reply_error(
-                                                        req,
-                                                        "tier-2 lanes are shut down",
-                                                    );
-                                                }
+        // Owned tier-2 lanes: keyless finishers draining the private
+        // queue (work stealing: any lane takes any worker's tail).
+        // Provisioned up to the autoscale ceiling so scaled-up tier-1
+        // shards are not serialized behind a smaller lane fleet.
+        let lane_count = opts.max_workers;
+        let mut lane_threads = Vec::new();
+        if opts.pipeline {
+            if let Some((t2q, fin_factory)) = owned {
+                let lane_busy = match &sink {
+                    Tier2Sink::Owned { busy, .. } => busy.clone(),
+                    Tier2Sink::Fabric(_) => Arc::new(AtomicUsize::new(0)),
+                };
+                expected_ready += lane_count;
+                for w in 0..lane_count {
+                    let t2q = t2q.clone();
+                    let m = metrics.clone();
+                    let factory = fin_factory.clone();
+                    let r = ready.clone();
+                    let busy = lane_busy.clone();
+                    lane_threads.push(
+                        std::thread::Builder::new()
+                            .name(format!("origami-pool-w{w}-t2"))
+                            .spawn(move || {
+                                let fin = match factory(w) {
+                                    Ok(f) => {
+                                        let _ = r.send(());
+                                        Some(f)
+                                    }
+                                    Err(e) => {
+                                        eprintln!("[pool] tier-2 lane {w} failed: {e:#}");
+                                        m.lock().unwrap().errors += 1;
+                                        let _ = r.send(());
+                                        None
+                                    }
+                                };
+                                while let Some(task) = t2q.recv() {
+                                    busy.fetch_add(1, Ordering::SeqCst);
+                                    match fin.as_ref() {
+                                        None => {
+                                            for req in &task.requests {
+                                                reply_error(
+                                                    req,
+                                                    "tier-2 lane failed to start",
+                                                );
                                             }
                                         }
+                                        Some(fin) => {
+                                            let home = task.home_worker;
+                                            let out = fin.finish(task);
+                                            let mut g = m.lock().unwrap();
+                                            *at(&mut g.tier2_sim_ms, w) += out.tier2_sim_ms;
+                                            if home != w {
+                                                g.stolen_batches += 1;
+                                            }
+                                            if !out.ok {
+                                                g.errors += 1;
+                                            }
+                                            g.record_batch(&out.record);
+                                        }
                                     }
-                                    Err(e) => {
-                                        // unreachable after admission; keep
-                                        // the pool alive if it ever fires
-                                        eprintln!("[pool] w{w} tier-1 failed: {e:#}");
-                                        m.lock().unwrap().errors += 1;
-                                    }
+                                    busy.fetch_sub(1, Ordering::SeqCst);
                                 }
-                            } else {
-                                match sched.execute(batch) {
-                                    Ok(rec) => {
-                                        let mut g = m.lock().unwrap();
-                                        g.tier1_sim_ms[w] += rec.sim_ms;
-                                        g.record_batch(&rec);
-                                    }
-                                    Err(e) => {
-                                        eprintln!("[pool] w{w} batch failed: {e:#}");
-                                        m.lock().unwrap().errors += 1;
-                                    }
-                                }
-                            }
-                        }
-                        // last tier-1 worker out closes the tier-2 queue
-                        if active.fetch_sub(1, Ordering::SeqCst) == 1 {
-                            t2q.close();
-                        }
-                    })
-                    .expect("spawn tier-1 worker"),
-            );
-        }
-
-        // Tier-2 lanes: keyless finishers draining the shared queue
-        // (work stealing: any lane takes any worker's tail).
-        if opts.pipeline {
-            for w in 0..workers {
-                let t2q = tier2_queue.clone();
-                let m = metrics.clone();
-                let factory = finisher_factory.clone();
-                let r = ready.clone();
-                threads.push(
-                    std::thread::Builder::new()
-                        .name(format!("origami-pool-w{w}-t2"))
-                        .spawn(move || {
-                            let fin = match factory(w) {
-                                Ok(f) => {
-                                    r.wait();
-                                    Some(f)
-                                }
-                                Err(e) => {
-                                    eprintln!("[pool] tier-2 lane {w} failed: {e:#}");
-                                    m.lock().unwrap().errors += 1;
-                                    r.wait();
-                                    None
-                                }
-                            };
-                            while let Some(task) = t2q.recv() {
-                                let Some(fin) = fin.as_ref() else {
-                                    for req in &task.requests {
-                                        reply_error(req, "tier-2 lane failed to start");
-                                    }
-                                    continue;
-                                };
-                                let home = task.home_worker;
-                                let out = fin.finish(task);
-                                let mut g = m.lock().unwrap();
-                                g.tier2_sim_ms[w] += out.tier2_sim_ms;
-                                if home != w {
-                                    g.stolen_batches += 1;
-                                }
-                                if !out.ok {
-                                    g.errors += 1;
-                                }
-                                g.record_batch(&out.record);
-                            }
-                        })
-                        .expect("spawn tier-2 lane"),
-                );
+                            })
+                            .expect("spawn tier-2 lane"),
+                    );
+                }
             }
         }
 
-        ready.wait();
+        for _ in 0..expected_ready {
+            let _ = ready.recv();
+        }
+
         Self {
             ingress,
-            worker_queues,
-            tier2_queue,
-            threads,
+            slots,
+            active,
+            dispatcher,
+            lane_threads,
+            sink,
+            sched_factory,
+            opts,
+            scale_lock: Mutex::new(()),
+            next_domain,
             metrics,
             next_id: AtomicU64::new(1),
-            workers,
+            configured_workers: workers,
         }
     }
 
+    /// The worker count the pool was configured with.
     pub fn worker_count(&self) -> usize {
-        self.workers
+        self.configured_workers
+    }
+
+    /// Tier-1 workers currently running.
+    pub fn active_workers(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Grow/retire tier-1 shards toward `n` (clamped to the configured
+    /// min/max bounds); returns the resulting worker count.  Retired
+    /// shards drain their queued requests first — nothing is dropped —
+    /// and their residue classes re-home to the surviving shards (safe:
+    /// see the module docs).
+    pub fn scale_to(&self, n: usize) -> usize {
+        let _guard = self.scale_lock.lock().unwrap();
+        let n = n
+            .clamp(self.opts.min_workers, self.opts.max_workers)
+            .max(1);
+        let cur = self.active.load(Ordering::SeqCst);
+        if n == cur {
+            return cur;
+        }
+        if n > cur {
+            {
+                let mut g = self.slots.lock().unwrap();
+                for w in cur..n {
+                    let queue: Channel<InferRequest> =
+                        Channel::bounded(self.opts.worker_queue_cap.max(1));
+                    // fresh pad domain per incarnation: a respawned slot
+                    // must never replay its predecessor's pad stream
+                    let domain = self.next_domain.fetch_add(1, Ordering::SeqCst);
+                    let handle = spawn_worker(
+                        w,
+                        domain,
+                        queue.clone(),
+                        self.sink.clone(),
+                        self.metrics.clone(),
+                        self.sched_factory.clone(),
+                        self.opts.clone(),
+                        None,
+                    );
+                    let slot = WorkerSlot {
+                        queue,
+                        handle: Some(handle),
+                    };
+                    if w < g.len() {
+                        g[w] = slot;
+                    } else {
+                        g.push(slot);
+                    }
+                }
+            }
+            self.active.store(n, Ordering::SeqCst);
+            let mut m = self.metrics.lock().unwrap();
+            m.grow_events += 1;
+            m.peak_workers = m.peak_workers.max(n);
+        } else {
+            // stop routing first, then drain + join the retired shards
+            self.active.store(n, Ordering::SeqCst);
+            let handles: Vec<JoinHandle<()>> = {
+                let mut g = self.slots.lock().unwrap();
+                let upper = cur.min(g.len());
+                (n..upper)
+                    .filter_map(|w| {
+                        g[w].queue.close();
+                        g[w].handle.take()
+                    })
+                    .collect()
+            };
+            for h in handles {
+                let _ = h.join();
+            }
+            self.metrics.lock().unwrap().shrink_events += 1;
+        }
+        n
     }
 
     /// Submit an encrypted request; returns the reply channel.
@@ -429,51 +585,228 @@ impl WorkerPool {
     }
 
     /// Pending work across the pool: queued *requests* (ingress + shard
-    /// queues) plus queued tier-2 *batches* (each carrying up to
-    /// max-batch requests awaiting their open tail).
+    /// queues) plus — for owned lanes — queued tier-2 *batches*.  An
+    /// attached pool's tier-2 backlog lives in the shared fabric and is
+    /// accounted there (the deployment sums both).
     pub fn queue_depth(&self) -> usize {
-        self.ingress.len()
-            + self.worker_queues.iter().map(|q| q.len()).sum::<usize>()
-            + self.tier2_queue.len()
+        let shard: usize = {
+            let g = self.slots.lock().unwrap();
+            g.iter().map(|s| s.queue.len()).sum()
+        };
+        let t2 = match &self.sink {
+            Tier2Sink::Owned { queue, .. } => queue.len(),
+            Tier2Sink::Fabric(_) => 0,
+        };
+        self.ingress.len() + shard + t2
+    }
+
+    fn stop(&mut self) {
+        self.ingress.close();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut g = self.slots.lock().unwrap();
+            g.iter_mut()
+                .filter_map(|s| {
+                    s.queue.close();
+                    s.handle.take()
+                })
+                .collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Tier2Sink::Owned { queue, .. } = &self.sink {
+            queue.close();
+        }
+        for h in self.lane_threads.drain(..) {
+            let _ = h.join();
+        }
     }
 
     /// Drain and stop everything; returns the final metrics.
     pub fn shutdown(mut self) -> PoolMetrics {
-        self.ingress.close();
-        for t in self.threads.drain(..) {
-            let _ = t.join();
-        }
+        self.stop();
         let metrics = std::mem::replace(
             &mut self.metrics,
             Arc::new(Mutex::new(PoolMetrics::new(0))),
         );
         Arc::try_unwrap(metrics)
             .map(|m| m.into_inner().unwrap())
-            .unwrap_or_else(|arc| {
-                let g = arc.lock().unwrap();
-                PoolMetrics {
-                    requests: g.requests,
-                    batches: g.batches,
-                    errors: g.errors,
-                    latency_ms: g.latency_ms.clone(),
-                    queue_ms: g.queue_ms.clone(),
-                    exec_wall_ms: g.exec_wall_ms.clone(),
-                    batch_size: g.batch_size.clone(),
-                    sim_ms_total: g.sim_ms_total,
-                    tier1_sim_ms: g.tier1_sim_ms.clone(),
-                    tier2_sim_ms: g.tier2_sim_ms.clone(),
-                    sessions_per_worker: g.sessions_per_worker.clone(),
-                    stolen_batches: g.stolen_batches,
-                }
-            })
+            .unwrap_or_else(|arc| arc.lock().unwrap().clone())
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.ingress.close();
-        for t in self.threads.drain(..) {
-            let _ = t.join();
+        self.stop();
+    }
+}
+
+/// Dispatcher: session-affinity sharding with backpressure.  On a send
+/// that fails because a shard retired mid-flight, the request reroutes
+/// under the new active count instead of erroring.
+fn spawn_dispatcher(
+    ingress: Channel<InferRequest>,
+    slots: Arc<Mutex<Vec<WorkerSlot>>>,
+    active: Arc<AtomicUsize>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("origami-pool-dispatch".into())
+        .spawn(move || {
+            while let Some(mut req) = ingress.recv() {
+                loop {
+                    let n = active.load(Ordering::SeqCst).max(1);
+                    let w = (req.session % n as u64) as usize;
+                    let q = {
+                        let g = slots.lock().unwrap();
+                        g.get(w).map(|s| s.queue.clone())
+                    };
+                    let Some(q) = q else {
+                        reply_error(&req, "worker pool has no worker for this shard");
+                        break;
+                    };
+                    match q.send(req) {
+                        Ok(()) => break,
+                        Err(r) => {
+                            req = r;
+                            if ingress.is_closed() {
+                                reply_error(&req, "worker pool is shutting down");
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }
+            let g = slots.lock().unwrap();
+            for s in g.iter() {
+                s.queue.close();
+            }
+        })
+        .expect("spawn dispatcher")
+}
+
+fn spawn_worker(
+    w: usize,
+    domain: usize,
+    queue: Channel<InferRequest>,
+    sink: Tier2Sink,
+    metrics: Arc<Mutex<PoolMetrics>>,
+    factory: SchedFactory,
+    opts: PoolOptions,
+    ready: Option<Channel<()>>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("origami-pool-w{w}-t1"))
+        .spawn(move || worker_main(w, domain, queue, sink, metrics, factory, opts, ready))
+        .expect("spawn tier-1 worker")
+}
+
+fn worker_main(
+    w: usize,
+    domain: usize,
+    queue: Channel<InferRequest>,
+    sink: Tier2Sink,
+    m: Arc<Mutex<PoolMetrics>>,
+    factory: SchedFactory,
+    opts: PoolOptions,
+    ready: Option<Channel<()>>,
+) {
+    let batcher = {
+        let b = DynamicBatcher::new(queue, opts.max_batch, opts.max_delay_ms);
+        if opts.occupancy_flush && opts.pipeline {
+            let s = sink.clone();
+            b.with_flush_probe(Arc::new(move || s.starved()))
+        } else {
+            b
+        }
+    };
+    let mut sched = match factory(domain) {
+        Ok(s) => {
+            if let Some(r) = &ready {
+                let _ = r.send(());
+            }
+            Some(s)
+        }
+        Err(e) => {
+            eprintln!("[pool] worker {w} failed to start: {e:#}");
+            m.lock().unwrap().errors += 1;
+            if let Some(r) = &ready {
+                let _ = r.send(());
+            }
+            None
+        }
+    };
+    while let Some(batch) = batcher.next_batch() {
+        let Some(sched) = sched.as_mut() else {
+            for req in &batch {
+                reply_error(req, "worker failed to start");
+            }
+            continue;
+        };
+        // Admission: a mis-sized ciphertext would fail the whole
+        // concatenated batch (and the batch's reply channels would be
+        // dropped, hanging the peers' clients) — reject it alone
+        // instead.  Reachable because the pool can be driven directly,
+        // without the Router/Deployment size check.
+        let (batch, rejected): (Vec<InferRequest>, Vec<InferRequest>) = batch
+            .into_iter()
+            .partition(|r| r.ciphertext.len() == sched.sample_bytes);
+        if !rejected.is_empty() {
+            let mut g = m.lock().unwrap();
+            g.errors += rejected.len() as u64;
+            drop(g);
+            for req in &rejected {
+                reply_error(req, "ciphertext has the wrong length");
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        {
+            let mut g = m.lock().unwrap();
+            let set = at(&mut g.sessions_per_worker, w);
+            for req in &batch {
+                set.insert(req.session);
+            }
+        }
+        if opts.pipeline {
+            match sched.execute_tier1(batch, w) {
+                Ok(tasks) => {
+                    for task in tasks {
+                        // tier-1 failures are counted once, by the
+                        // finisher (ok=false)
+                        let mut g = m.lock().unwrap();
+                        *at(&mut g.tier1_sim_ms, w) += task.ledger.grand_total_ms();
+                        drop(g);
+                        if let Err(task) = sink.send(task) {
+                            for req in &task.requests {
+                                reply_error(req, "tier-2 lanes are shut down");
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    // unreachable after admission; keep the pool alive
+                    // if it ever fires
+                    eprintln!("[pool] w{w} tier-1 failed: {e:#}");
+                    m.lock().unwrap().errors += 1;
+                }
+            }
+        } else {
+            match sched.execute(batch) {
+                Ok(rec) => {
+                    let mut g = m.lock().unwrap();
+                    *at(&mut g.tier1_sim_ms, w) += rec.sim_ms;
+                    g.record_batch(&rec);
+                }
+                Err(e) => {
+                    eprintln!("[pool] w{w} batch failed: {e:#}");
+                    m.lock().unwrap().errors += 1;
+                }
+            }
         }
     }
 }
@@ -512,14 +845,17 @@ mod tests {
         }
     }
 
-    fn echo_pool(workers: usize, pipeline: bool) -> WorkerPool {
-        let opts = PoolOptions {
+    fn echo_opts(workers: usize, pipeline: bool) -> PoolOptions {
+        PoolOptions {
             workers,
             max_batch: 4,
             max_delay_ms: 1.0,
             pipeline,
             ..PoolOptions::default()
-        };
+        }
+    }
+
+    fn echo_pool_with(opts: PoolOptions) -> WorkerPool {
         WorkerPool::start(
             opts,
             |_w| Ok(BatchScheduler::new(Box::new(Echo), 8, vec![1, 4])),
@@ -532,6 +868,10 @@ mod tests {
                 ))
             },
         )
+    }
+
+    fn echo_pool(workers: usize, pipeline: bool) -> WorkerPool {
+        echo_pool_with(echo_opts(workers, pipeline))
     }
 
     #[test]
@@ -596,5 +936,81 @@ mod tests {
         m.sim_ms_total = 30.0;
         assert_eq!(m.simulated_makespan_ms(), 12.0);
         assert!((m.simulated_speedup() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_up_and_down_serves_throughout() {
+        let opts = PoolOptions {
+            min_workers: 1,
+            max_workers: 4,
+            ..echo_opts(1, true)
+        };
+        let pool = echo_pool_with(opts);
+        assert_eq!(pool.active_workers(), 1);
+
+        let serve = |n: u64, base: u64| {
+            let replies: Vec<_> = (0..n)
+                .map(|s| (base + s, pool.submit("m", vec![0u8; 8], base + s).unwrap()))
+                .collect();
+            for (s, r) in replies {
+                let resp = r.recv().expect("reply");
+                assert!(resp.error.is_none(), "session {s}: {:?}", resp.error);
+                assert_eq!(resp.probs[0], s as f32);
+            }
+        };
+
+        serve(8, 0);
+        assert_eq!(pool.scale_to(3), 3, "grow within bounds");
+        serve(8, 100);
+        assert_eq!(pool.scale_to(9), 4, "clamped to max_workers");
+        assert_eq!(pool.scale_to(0), 1, "clamped to min_workers");
+        serve(8, 200);
+
+        let m = pool.shutdown();
+        assert_eq!(m.requests, 24);
+        assert_eq!(m.errors, 0);
+        assert!(m.grow_events >= 2);
+        assert!(m.shrink_events >= 1);
+        assert_eq!(m.peak_workers, 4);
+        // workers beyond the initial one actually did tier-1 work
+        assert!(m.tier1_sim_ms.len() > 1, "scaled workers appear in metrics");
+    }
+
+    #[test]
+    fn respawned_workers_never_reuse_a_blinding_domain() {
+        // OTP safety under autoscaling: a retired slot that respawns
+        // must get a *fresh* domain — its new strategy restarts its
+        // epoch counter at 0, so reusing the old domain would re-emit
+        // already-consumed one-time pads.
+        let domains = Arc::new(Mutex::new(Vec::new()));
+        let d2 = domains.clone();
+        let opts = PoolOptions {
+            min_workers: 1,
+            max_workers: 3,
+            ..echo_opts(1, true)
+        };
+        let pool = WorkerPool::start(
+            opts,
+            move |domain| {
+                d2.lock().unwrap().push(domain);
+                Ok(BatchScheduler::new(Box::new(Echo), 8, vec![1, 4]))
+            },
+            |_w| {
+                let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 1)?);
+                Ok(Tier2Finisher::new(
+                    Arc::new(StageExecutor::reference(rb, CostModel::default())),
+                    "sim8",
+                    Device::UntrustedCpu,
+                ))
+            },
+        );
+        pool.scale_to(3); // slots 1,2 spawn
+        pool.scale_to(1); // slots 1,2 retire
+        pool.scale_to(3); // slots 1,2 respawn — must not repeat domains
+        drop(pool);
+        let seen = domains.lock().unwrap().clone();
+        assert_eq!(seen.len(), 5, "1 initial + 2 grown + 2 respawned: {seen:?}");
+        let unique: std::collections::BTreeSet<usize> = seen.iter().copied().collect();
+        assert_eq!(unique.len(), seen.len(), "a blinding domain was reused: {seen:?}");
     }
 }

@@ -1,16 +1,35 @@
-//! Request router: maps (model) → serving engine or worker pool.
+//! Request routing: the legacy single-engine [`Router`] and the
+//! multi-tenant [`Deployment`] registry.
 //!
-//! A deployment can host several private-inference backends (e.g. a
-//! VGG-16 Origami pool and a VGG-19 Slalom engine); the router is the
-//! single client-facing entry point and enforces basic admission checks
-//! (known model, correctly sized ciphertext).
+//! A deployment hosts several private-inference models at once (e.g. a
+//! VGG-16 Origami pool and a VGG-19 Slalom pool).  Each model gets its
+//! own [`WorkerPool`] of tier-1 shards — enclaves and blinding state are
+//! never shared across models — while every pool's open tier-2 tails
+//! drain through one shared, device-aware [`LaneFabric`]: the
+//! capacity-sharing opportunity Origami's tier split creates.
+//!
+//! The deployment is the single client-facing entry point and enforces
+//! admission as *typed* errors ([`AdmissionError`]): unknown model,
+//! mis-sized ciphertext, and cross-model session collisions (a session
+//! is bound to the first model it touches; reusing its id against
+//! another model is rejected, since session keystreams are per-session,
+//! not per-model).  A queue-depth autoscaler ([`AutoscalePolicy`])
+//! grows and shrinks each pool's tier-1 workers and the fabric's lane
+//! count between their configured bounds.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use super::api::InferResponse;
-use super::pool::WorkerPool;
+use super::fabric::{FabricMetrics, FabricOptions, LaneFabric};
+use super::pool::{PoolMetrics, PoolOptions, WorkerPool};
+use super::scheduler::{BatchScheduler, Tier2Finisher};
 use super::server::ServingEngine;
 use crate::util::threadpool::Channel;
 
@@ -83,7 +102,9 @@ struct Route {
     sample_bytes: usize,
 }
 
-/// The client-facing multiplexer.
+/// The legacy client-facing multiplexer (single-tenant engines that own
+/// their own tier-2 capacity; see [`Deployment`] for the shared-fabric
+/// shape).
 #[derive(Default)]
 pub struct Router {
     routes: HashMap<String, Route>,
@@ -172,6 +193,416 @@ impl Router {
     }
 }
 
+/// Typed admission failures: every rejected request gets a precise,
+/// matchable reason — and is rejected *synchronously*, so a bad request
+/// can never hang a client waiting for a reply that won't come.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The model has no deployment.
+    UnknownModel { model: String, known: Vec<String> },
+    /// The ciphertext is not one encrypted sample for this model.
+    WrongSize {
+        model: String,
+        expected: usize,
+        got: usize,
+    },
+    /// The session id is already bound to a different model.
+    SessionCollision {
+        session: u64,
+        bound: String,
+        requested: String,
+    },
+    /// The model's pool refused the request (shutting down).
+    Unavailable { model: String },
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::UnknownModel { model, known } => {
+                write!(f, "no deployment for model `{model}` (have {known:?})")
+            }
+            AdmissionError::WrongSize {
+                model,
+                expected,
+                got,
+            } => write!(
+                f,
+                "model `{model}` expects {expected}-byte ciphertexts, got {got}"
+            ),
+            AdmissionError::SessionCollision {
+                session,
+                bound,
+                requested,
+            } => write!(
+                f,
+                "session {session} is bound to model `{bound}`; cannot serve `{requested}`"
+            ),
+            AdmissionError::Unavailable { model } => {
+                write!(f, "deployment for model `{model}` is shutting down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Queue-depth autoscaling policy (deployment-wide).
+#[derive(Debug, Clone)]
+pub struct AutoscalePolicy {
+    /// Grow a pool (or the fabric) when its queue depth exceeds
+    /// `high × active` workers (lanes).
+    pub high_depth_per_worker: usize,
+    /// Shrink when depth falls to `low × (active − 1)` — i.e. when the
+    /// remaining workers would still sit under the low watermark.
+    pub low_depth_per_worker: usize,
+    /// Background autoscaler cadence (ms).
+    pub tick_ms: u64,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        Self {
+            high_depth_per_worker: 4,
+            low_depth_per_worker: 1,
+            tick_ms: 20,
+        }
+    }
+}
+
+struct ModelEntry {
+    /// Arc so the autoscaler can scale (and block on shard joins)
+    /// without holding the registry lock across the operation.
+    pool: Arc<WorkerPool>,
+    sample_bytes: usize,
+}
+
+struct DeploymentCore {
+    fabric: LaneFabric,
+    models: Mutex<HashMap<String, ModelEntry>>,
+    sessions: Mutex<HashMap<u64, String>>,
+    policy: AutoscalePolicy,
+    /// Monotone tenant-band allocator (blinding keyspace): never reused,
+    /// so concurrent deploys cannot end up sharing a band.
+    next_band: AtomicU64,
+}
+
+impl DeploymentCore {
+    /// One autoscaler pass: per-pool tier-1 scaling from each pool's
+    /// queue depth, then fabric lane scaling from tier-2 demand (its own
+    /// queue plus the tier-1 backlog about to become tail work).
+    ///
+    /// Pools are snapshotted out of the registry first: a shrink blocks
+    /// until the retired shard drains, and holding the registry lock
+    /// through that would stall every submit.
+    fn tick(&self) {
+        let p = &self.policy;
+        let pools: Vec<Arc<WorkerPool>> = {
+            let g = self.models.lock().unwrap();
+            g.values().map(|e| e.pool.clone()).collect()
+        };
+        let mut t1_backlog = 0usize;
+        for pool in &pools {
+            let depth = pool.queue_depth();
+            let active = pool.active_workers();
+            if depth > p.high_depth_per_worker.saturating_mul(active) {
+                pool.scale_to(active + 1);
+            } else if depth
+                <= p.low_depth_per_worker
+                    .saturating_mul(active.saturating_sub(1))
+            {
+                pool.scale_to(active.saturating_sub(1));
+            }
+            t1_backlog += depth;
+        }
+        let lanes = self.fabric.lane_count();
+        let demand = self.fabric.queue_depth() + t1_backlog;
+        if demand > p.high_depth_per_worker.saturating_mul(lanes) {
+            self.fabric.scale_to(lanes + 1);
+        } else if demand
+            <= p.low_depth_per_worker
+                .saturating_mul(lanes.saturating_sub(1))
+        {
+            self.fabric.scale_to(lanes.saturating_sub(1));
+        }
+    }
+}
+
+/// Final metrics of a shut-down deployment.
+pub struct DeploymentMetrics {
+    /// Per-model tier-1 pool metrics.
+    pub models: BTreeMap<String, PoolMetrics>,
+    /// The shared fabric: per-lane ledgers + per-tenant stats.
+    pub fabric: FabricMetrics,
+}
+
+/// The multi-tenant serving registry (see module docs).
+pub struct Deployment {
+    core: Arc<DeploymentCore>,
+    pump: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Deployment {
+    /// Create a deployment around a fresh lane fabric.
+    pub fn new(fabric_opts: FabricOptions, policy: AutoscalePolicy) -> Self {
+        Self {
+            core: Arc::new(DeploymentCore {
+                fabric: LaneFabric::start(fabric_opts),
+                models: Mutex::new(HashMap::new()),
+                sessions: Mutex::new(HashMap::new()),
+                policy,
+                next_band: AtomicU64::new(0),
+            }),
+            pump: None,
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Register `model`: attach it to the fabric as a tenant with
+    /// `weight` (weighted-fair share of lane capacity) and start its
+    /// tier-1 pool attached to the fabric.  Requests must carry
+    /// ciphertexts of exactly `sample_bytes`.
+    ///
+    /// `sched_factory(band, domain)` builds one worker's scheduler:
+    /// `band` is the tenant index this deployment assigns from a
+    /// monotone allocator — concurrent deploys can never share one —
+    /// and `domain` is the pool-unique worker-incarnation index.
+    /// Together they must select a globally disjoint blinding keyspace
+    /// (the launcher uses `band · BLIND_DOMAIN_STRIDE + domain`).
+    pub fn deploy<S, F>(
+        &self,
+        model: &str,
+        sample_bytes: usize,
+        weight: f64,
+        pool_opts: PoolOptions,
+        sched_factory: S,
+        finisher_factory: F,
+    ) -> Result<()>
+    where
+        S: Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static,
+        F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
+    {
+        // Fast duplicate check, then release: pool startup is slow
+        // (factor precompute, artifact compilation) and must not stall
+        // admission on a live deployment by pinning the registry lock.
+        {
+            let g = self.core.models.lock().unwrap();
+            anyhow::ensure!(
+                !g.contains_key(model),
+                "model `{model}` is already deployed"
+            );
+        }
+        // The fabric's tenant table is the atomic claim on the model
+        // name: a concurrent duplicate deploy fails here, before any
+        // pool is started.
+        let handle = self.core.fabric.attach(model, weight, finisher_factory)?;
+        let band = self.core.next_band.fetch_add(1, Ordering::SeqCst);
+        let pool = Arc::new(WorkerPool::start_attached(
+            pool_opts,
+            move |domain| sched_factory(band, domain),
+            handle,
+        ));
+        let mut g = self.core.models.lock().unwrap();
+        g.insert(
+            model.to_string(),
+            ModelEntry { pool, sample_bytes },
+        );
+        Ok(())
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let g = self.core.models.lock().unwrap();
+        let mut v: Vec<String> = g.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.core.models.lock().unwrap().len()
+    }
+
+    /// Admission-checked submit; typed rejections, never a hang.
+    pub fn submit(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> std::result::Result<Channel<InferResponse>, AdmissionError> {
+        // snapshot the route, then drop the registry lock — a pool
+        // submit can block on ingress backpressure and must not stall
+        // other models' admission
+        let pool = {
+            let g = self.core.models.lock().unwrap();
+            let entry = g.get(model).ok_or_else(|| AdmissionError::UnknownModel {
+                model: model.to_string(),
+                known: {
+                    let mut v: Vec<String> = g.keys().cloned().collect();
+                    v.sort();
+                    v
+                },
+            })?;
+            if ciphertext.len() != entry.sample_bytes {
+                return Err(AdmissionError::WrongSize {
+                    model: model.to_string(),
+                    expected: entry.sample_bytes,
+                    got: ciphertext.len(),
+                });
+            }
+            entry.pool.clone()
+        };
+        // Session binding: first touch claims the id for this model.
+        // The map grows with distinct session ids for the deployment's
+        // lifetime — sessions are the attested client channels, so that
+        // is the intended bookkeeping, not a cache.
+        let newly_bound = {
+            let mut s = self.core.sessions.lock().unwrap();
+            match s.get(&session) {
+                Some(bound) if bound != model => {
+                    return Err(AdmissionError::SessionCollision {
+                        session,
+                        bound: bound.clone(),
+                        requested: model.to_string(),
+                    });
+                }
+                Some(_) => false,
+                None => {
+                    s.insert(session, model.to_string());
+                    true
+                }
+            }
+        };
+        match pool.submit(model, ciphertext, session) {
+            Ok(reply) => Ok(reply),
+            Err(_) => {
+                // the request never entered the pool: release a binding
+                // this attempt created so the session can retry anywhere
+                if newly_bound {
+                    self.core.sessions.lock().unwrap().remove(&session);
+                }
+                Err(AdmissionError::Unavailable {
+                    model: model.to_string(),
+                })
+            }
+        }
+    }
+
+    /// Blocking convenience (records client latency in the model's pool).
+    pub fn infer_blocking(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<InferResponse> {
+        let reply = self.submit(model, ciphertext, session)?;
+        let resp = reply
+            .recv()
+            .ok_or_else(|| anyhow!("reply channel closed"))?;
+        let pool = {
+            let g = self.core.models.lock().unwrap();
+            g.get(model).map(|e| e.pool.clone())
+        };
+        if let Some(pool) = pool {
+            pool.metrics
+                .lock()
+                .unwrap()
+                .latency_ms
+                .record(resp.latency_ms);
+        }
+        Ok(resp)
+    }
+
+    /// Pending work: tier-1 backlogs of every pool plus the fabric's
+    /// tier-2 queue.
+    pub fn queue_depth(&self) -> usize {
+        let g = self.core.models.lock().unwrap();
+        let t1: usize = g.values().map(|e| e.pool.queue_depth()).sum();
+        t1 + self.core.fabric.queue_depth()
+    }
+
+    /// Current fabric lane count.
+    pub fn lane_count(&self) -> usize {
+        self.core.fabric.lane_count()
+    }
+
+    /// A model's current tier-1 worker count (0 if unknown).
+    pub fn active_workers(&self, model: &str) -> usize {
+        let g = self.core.models.lock().unwrap();
+        g.get(model).map(|e| e.pool.active_workers()).unwrap_or(0)
+    }
+
+    /// Run one autoscaler pass now (the background pump calls this on
+    /// its cadence; tests call it directly for determinism).
+    pub fn autoscale_tick(&self) {
+        self.core.tick();
+    }
+
+    /// Start the background autoscaler (idempotent).
+    pub fn enable_autoscaler(&mut self) {
+        if self.pump.is_some() {
+            return;
+        }
+        let core = self.core.clone();
+        let stop = self.stop.clone();
+        let tick = Duration::from_millis(self.core.policy.tick_ms.max(1));
+        self.pump = Some(
+            std::thread::Builder::new()
+                .name("origami-deploy-autoscale".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        core.tick();
+                        std::thread::sleep(tick);
+                    }
+                })
+                .expect("spawn deployment autoscaler"),
+        );
+    }
+
+    /// Stop the autoscaler, drain and shut down every pool, then the
+    /// fabric; returns the final metrics.
+    pub fn shutdown(mut self) -> DeploymentMetrics {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
+        }
+        let core = self.core.clone();
+        drop(self); // releases the struct's Arc (pump already stopped)
+        match Arc::try_unwrap(core) {
+            Ok(core) => {
+                let mut models = BTreeMap::new();
+                for (name, e) in core.models.into_inner().unwrap() {
+                    let pm = match Arc::try_unwrap(e.pool) {
+                        Ok(pool) => pool.shutdown(),
+                        // a straggling tick still holds the pool (it will
+                        // stop via Drop when released): snapshot metrics
+                        Err(arc) => arc.metrics.lock().unwrap().clone(),
+                    };
+                    models.insert(name, pm);
+                }
+                DeploymentMetrics {
+                    models,
+                    fabric: core.fabric.shutdown(),
+                }
+            }
+            // unreachable: nothing else holds the core once the pump is
+            // joined; degrade to empty metrics rather than panic
+            Err(_) => DeploymentMetrics {
+                models: BTreeMap::new(),
+                fabric: FabricMetrics::default(),
+            },
+        }
+    }
+}
+
+impl Drop for Deployment {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,5 +612,43 @@ mod tests {
         let r = Router::new();
         assert!(r.submit("nope", vec![], 0).is_err());
         assert!(r.models().is_empty());
+    }
+
+    #[test]
+    fn empty_deployment_rejects_with_typed_error() {
+        let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
+        let err = dep.submit("nope", vec![], 0).unwrap_err();
+        assert_eq!(
+            err,
+            AdmissionError::UnknownModel {
+                model: "nope".into(),
+                known: vec![],
+            }
+        );
+        assert_eq!(dep.model_count(), 0);
+        let m = dep.shutdown();
+        assert!(m.models.is_empty());
+    }
+
+    #[test]
+    fn admission_errors_display_precisely() {
+        let e = AdmissionError::WrongSize {
+            model: "m".into(),
+            expected: 8,
+            got: 3,
+        };
+        assert_eq!(
+            e.to_string(),
+            "model `m` expects 8-byte ciphertexts, got 3"
+        );
+        let e = AdmissionError::SessionCollision {
+            session: 7,
+            bound: "a".into(),
+            requested: "b".into(),
+        };
+        assert!(e.to_string().contains("session 7"));
+        // typed errors flow into anyhow for callers that want that
+        let any: anyhow::Error = e.into();
+        assert!(format!("{any}").contains("bound to model `a`"));
     }
 }

@@ -169,6 +169,10 @@ impl BatchScheduler {
             .iter()
             .map(|r| r.submitted_at.elapsed().as_secs_f64() * 1e3)
             .fold(0.0, f64::max);
+        let model = requests
+            .first()
+            .map(|r| r.model.clone())
+            .unwrap_or_default();
         let sessions: Vec<u64> = requests.iter().map(|r| r.session).collect();
         let mut cipher = Vec::with_capacity(exec_batch * self.sample_bytes);
         for r in &requests {
@@ -190,6 +194,7 @@ impl BatchScheduler {
             .infer_tier1(&cipher, exec_batch, &sessions, &mut ledger)
         {
             Ok(Tier1Output::Final(probs)) => Tier2Task {
+                model,
                 requests,
                 exec_batch,
                 stage: None,
@@ -201,6 +206,7 @@ impl BatchScheduler {
                 error: None,
             },
             Ok(Tier1Output::Handoff { features, stage }) => Tier2Task {
+                model,
                 requests,
                 exec_batch,
                 stage: Some(stage),
@@ -212,6 +218,7 @@ impl BatchScheduler {
                 error: None,
             },
             Err(e) => Tier2Task {
+                model,
                 requests,
                 exec_batch,
                 stage: None,
@@ -232,8 +239,12 @@ impl BatchScheduler {
 /// Carries no enclave state — only the plaintext-safe intermediate
 /// feature map (already past the privacy partition) and the reply
 /// handles, which is exactly why tier-2 tasks may be work-stolen by any
-/// worker without moving session keys.
+/// worker — or drained by a *shared* multi-tenant lane fabric
+/// ([`crate::coordinator::LaneFabric`]) — without moving session keys.
 pub struct Tier2Task {
+    /// Tenant tag: the model whose tail this is (fabric routing +
+    /// weighted-fair accounting).
+    pub model: String,
     pub requests: Vec<InferRequest>,
     pub exec_batch: usize,
     /// Open-tail stage to run, or None when `features` are already final.
@@ -268,6 +279,26 @@ impl Tier2Finisher {
             model: model.to_string(),
             device,
         }
+    }
+
+    /// Re-pin the finisher to an explicit device.  The lane fabric uses
+    /// this to give every lane its *own* device cost profile instead of
+    /// whatever the model's config inherited — numerics are unchanged
+    /// (the modeled GPU runs on the CPU for bits), only the simulated
+    /// cost accounting moves.
+    pub fn with_device(mut self, device: Device) -> Self {
+        self.device = device;
+        self
+    }
+
+    /// The device this finisher charges tail stages to.
+    pub fn device(&self) -> Device {
+        self.device
+    }
+
+    /// The model this finisher can finish tails for.
+    pub fn model(&self) -> &str {
+        &self.model
     }
 
     /// Finish one task. The outcome's `record.sim_ms` covers both tiers;

@@ -12,9 +12,11 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::config::Config;
+use crate::config::{Config, ModelSpec};
 use crate::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
-use crate::coordinator::{PoolOptions, ServingEngine, WorkerPool};
+use crate::coordinator::{
+    AutoscalePolicy, Deployment, FabricOptions, PoolOptions, ServingEngine, WorkerPool,
+};
 use crate::enclave::cost::CostModel;
 use crate::model::{Manifest, Model};
 use crate::runtime::reference::is_sim_model;
@@ -159,31 +161,131 @@ pub fn start_engine_from_config(
     ))
 }
 
+/// Pool geometry/policy from a config (min/max worker bounds feed the
+/// deployment autoscaler; 0 means "pin at `workers`").
+pub fn pool_options_from_config(config: &Config) -> PoolOptions {
+    PoolOptions {
+        workers: config.workers.max(1),
+        min_workers: config.min_workers,
+        max_workers: config.max_workers,
+        max_batch: config.max_batch,
+        max_delay_ms: config.max_delay_ms,
+        pipeline: config.pipeline,
+        occupancy_flush: config.occupancy_flush,
+        ..PoolOptions::default()
+    }
+}
+
+/// Lane-fabric geometry from a config: the lane device cycle comes from
+/// `lane_devices` (falling back to the config device), so tier-2 lanes
+/// carry explicit per-lane cost profiles instead of inheriting whatever
+/// the model was configured with.
+pub fn fabric_options_from_config(config: &Config) -> Result<FabricOptions> {
+    let devices = if config.lane_devices.trim().is_empty() {
+        vec![Device::parse(&config.device)?]
+    } else {
+        config
+            .lane_devices
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| Device::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?
+    };
+    Ok(FabricOptions {
+        lanes: if config.lanes == 0 {
+            config.workers.max(1)
+        } else {
+            config.lanes
+        },
+        min_lanes: config.min_lanes,
+        max_lanes: config.max_lanes,
+        lane_devices: devices,
+        ..FabricOptions::default()
+    })
+}
+
+/// Autoscaler thresholds from a config.
+pub fn autoscale_policy_from_config(config: &Config) -> AutoscalePolicy {
+    AutoscalePolicy {
+        high_depth_per_worker: config.autoscale_high_depth.max(1),
+        low_depth_per_worker: config.autoscale_low_depth,
+        tick_ms: config.autoscale_tick_ms.max(1),
+    }
+}
+
+/// Keyspace stride between tenants' blinding domains: tenant *t*'s pool
+/// draws its workers' domains from `t·STRIDE + incarnation`, where the
+/// incarnation index is the pool's monotone spawn counter (never reused,
+/// even when an autoscaled shard is retired and respawned).  No two
+/// enclaves in a deployment — same model or not, same slot or not — can
+/// ever derive the same pad stream, as long as a pool never performs
+/// 2^32 spawns (an autoscaler flapping once per millisecond would need
+/// ~50 days; the counter is checked nowhere near that in practice).
+pub const BLIND_DOMAIN_STRIDE: u64 = 1 << 32;
+
 /// Start the sharded worker pool: `config.workers` enclave shards with
 /// session-affinity routing, disjoint per-worker blinding domains, and
 /// (when `config.pipeline`) double-buffered tier-1/tier-2 execution with
 /// work-stealing tier-2 lanes.
 pub fn start_pool_from_config(config: Config) -> Result<WorkerPool> {
-    let opts = PoolOptions {
-        workers: config.workers.max(1),
-        max_batch: config.max_batch,
-        max_delay_ms: config.max_delay_ms,
-        pipeline: config.pipeline,
-        ..PoolOptions::default()
-    };
+    let opts = pool_options_from_config(&config);
     let sched_cfg = config.clone();
     let fin_cfg = config;
     Ok(WorkerPool::start(
         opts,
-        move |worker| {
-            // Worker index = blinding domain: pads never repeat across
-            // shards even though all shards share the deployment master.
+        move |domain| {
+            // Pool-unique domain index = blinding domain: pads never
+            // repeat across shards (or shard incarnations) even though
+            // all shards share the deployment master.
             let mut c = sched_cfg.clone();
-            c.blind_domain = worker as u64;
+            c.blind_domain = domain as u64;
             scheduler_for(&c)
         },
         move |_lane| finisher_for(&fin_cfg),
     ))
+}
+
+/// Register `config.model` in a deployment: probes the model geometry,
+/// attaches the model to the shared lane fabric with `weight`, and
+/// starts its tier-1 pool.  The deployment assigns the tenant's keyspace
+/// band under its registry lock; each worker incarnation then blinds
+/// under `band · BLIND_DOMAIN_STRIDE + domain` — disjoint across models,
+/// workers, and respawns.
+pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Result<()> {
+    let (_, model) = executor_for(config)?;
+    let sample_bytes = 4 * model.image * model.image * model.in_channels;
+    let sched_cfg = config.clone();
+    let fin_cfg = config.clone();
+    dep.deploy(
+        &config.model,
+        sample_bytes,
+        weight,
+        pool_options_from_config(config),
+        move |band, domain| {
+            let mut c = sched_cfg.clone();
+            c.blind_domain = band * BLIND_DOMAIN_STRIDE + domain as u64;
+            scheduler_for(&c)
+        },
+        move |_lane| finisher_for(&fin_cfg),
+    )
+}
+
+/// Assemble a full multi-model deployment: one shared lane fabric, one
+/// attached tier-1 pool per spec, and (when `base.autoscale`) the
+/// background queue-depth autoscaler.
+pub fn start_deployment_from_config(base: &Config, specs: &[ModelSpec]) -> Result<Deployment> {
+    let mut dep = Deployment::new(
+        fabric_options_from_config(base)?,
+        autoscale_policy_from_config(base),
+    );
+    for spec in specs {
+        let cfg = spec.apply(base);
+        deploy_from_config(&dep, &cfg, spec.weight)?;
+    }
+    if base.autoscale {
+        dep.enable_autoscaler();
+    }
+    Ok(dep)
 }
 
 /// Encrypt a plaintext image for `session` under the deployment seed —

@@ -31,6 +31,15 @@
 //!   ([`coordinator::scheduler::Tier2Finisher`]).  Tier splitting
 //!   reorders when work happens, never what is computed, so pooled
 //!   outputs are bit-identical to the serial path.
+//! - [`coordinator::Deployment`] over a [`coordinator::LaneFabric`] —
+//!   the multi-tenant shape: per-model pools keep their own enclaves
+//!   and pad domains, while every model's open tier-2 tails drain
+//!   through one shared fleet of device-pinned lanes with weighted-fair
+//!   popping (a tail carries no enclave state, so capacity is fungible
+//!   across models).  Admission is typed
+//!   ([`coordinator::AdmissionError`]) and a queue-depth autoscaler
+//!   resizes tier-1 worker counts and the fabric's lane count between
+//!   configured bounds.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! model once; everything here is self-contained afterwards.  Offline

@@ -78,7 +78,16 @@ fn print_help() {
            --pool             sharded worker pool (session affinity +\n\
                               pipelined Origami tiers) instead of the\n\
                               shared-batcher engine\n\
-           --no-pipeline      pool only: serialize tier-1/tier-2 again"
+           --no-pipeline      pool only: serialize tier-1/tier-2 again\n\
+         Multi-model serve (shared tier-2 lane fabric):\n\
+           --models <spec>    comma list of model[=strategy[@device][*weight]]\n\
+                              e.g. sim16=origami/2*2,sim8=slalom\n\
+           --lanes <n>        fabric lane count [workers]\n\
+           --lane-devices <l> per-lane device cycle, e.g. cpu,gpu [device]\n\
+           --min-lanes/--max-lanes, --min-workers/--max-workers\n\
+                              autoscale bounds (0 = pinned)\n\
+           --autoscale        enable the queue-depth autoscaler\n\
+           --occupancy-flush  flush partial batches while tier-2 is idle"
     );
 }
 
@@ -128,6 +137,9 @@ fn cmd_infer(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let config = Config::from_args(args)?;
+    if !config.models.trim().is_empty() {
+        return cmd_serve_multi(args, config);
+    }
     let requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 50.0)?;
     let use_pool = args.has("pool");
@@ -233,6 +245,119 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// Multi-model serve: per-model pools over the shared tier-2 lane
+/// fabric, driven by a Poisson open-loop workload round-robined across
+/// the deployed models.
+fn cmd_serve_multi(args: &Args, config: Config) -> Result<()> {
+    use origami::config::ModelSpec;
+    let requests = args.usize_or("requests", 64)?;
+    let rate = args.f64_or("rate", 50.0)?;
+    let specs = ModelSpec::parse_list(&config.models)?;
+    println!(
+        "starting deployment: {} models over a shared lane fabric \
+         (lanes={} devices=[{}] autoscale={})",
+        specs.len(),
+        if config.lanes == 0 {
+            config.workers.max(1)
+        } else {
+            config.lanes
+        },
+        if config.lane_devices.trim().is_empty() {
+            config.device.as_str()
+        } else {
+            config.lane_devices.as_str()
+        },
+        config.autoscale,
+    );
+    // per-model configs + synthetic inputs (one pool of images each)
+    let mut tenants = Vec::new();
+    for spec in &specs {
+        let cfg = spec.apply(&config);
+        let (_, model) = origami::launcher::executor_for(&cfg)?;
+        let images = synth_images(8, model.image, model.in_channels, cfg.seed);
+        println!(
+            "  {} strategy={} weight={} (tier-1 device={})",
+            cfg.model, cfg.strategy, spec.weight, cfg.device
+        );
+        tenants.push((cfg, images));
+    }
+    let dep = origami::launcher::start_deployment_from_config(&config, &specs)?;
+    let dep = std::sync::Arc::new(dep);
+
+    let mut rng = origami::util::rng::Rng::new(config.seed ^ 0xC11E17);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..requests {
+        let (cfg, images) = &tenants[i % tenants.len()];
+        let session = i as u64;
+        let img = &images[(i / tenants.len()) % images.len()];
+        let ct = encrypt_request(cfg, session, img);
+        let model = cfg.model.clone();
+        let d = dep.clone();
+        handles.push(std::thread::spawn(move || {
+            d.infer_blocking(&model, ct, session)
+        }));
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            rng.exp(rate.max(1e-6)),
+        ));
+    }
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for h in handles {
+        match h.join().unwrap() {
+            Ok(resp) if resp.error.is_none() => ok += 1,
+            _ => failed += 1,
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "\nserved {ok} ok / {failed} failed in {:.2}s → {:.1} req/s",
+        elapsed,
+        ok as f64 / elapsed
+    );
+
+    let dep = std::sync::Arc::try_unwrap(dep)
+        .map_err(|_| anyhow::anyhow!("deployment still referenced"))?;
+    let m = dep.shutdown();
+    println!("\nper-model pools:");
+    for (name, pm) in &m.models {
+        println!(
+            "  {name:<8} latency p50 {} p95 {} | tier-1 busy {} | peak workers {} \
+             ({}+ / {}-)",
+            fmt_ms(pm.latency_ms.p50()),
+            fmt_ms(pm.latency_ms.p95()),
+            fmt_ms(pm.tier1_sim_ms.iter().sum::<f64>()),
+            pm.peak_workers,
+            pm.grow_events,
+            pm.shrink_events,
+        );
+    }
+    println!("fabric tenants:");
+    for (name, t) in &m.fabric.tenants {
+        println!(
+            "  {name:<8} batches {:<4} requests {:<4} tier-2 {} (errors {})",
+            t.batches,
+            t.requests,
+            fmt_ms(t.tier2_sim_ms),
+            t.errors,
+        );
+    }
+    println!("fabric lanes:");
+    for (i, busy) in m.fabric.lane_sim_ms.iter().enumerate() {
+        println!(
+            "  lane {i} [{}] busy {} ({} batches)",
+            m.fabric.lane_device[i].name(),
+            fmt_ms(*busy),
+            m.fabric.lane_batches[i],
+        );
+    }
+    println!(
+        "fabric autoscale: peak {} lanes ({}+ / {}-)",
+        m.fabric.peak_lanes, m.fabric.grow_events, m.fabric.shrink_events
+    );
     Ok(())
 }
 
