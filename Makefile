@@ -6,7 +6,7 @@
 # only needed for the artifact-gated integration tests/benches; the
 # hermetic `sim*` reference-backend paths run everywhere.
 
-.PHONY: ci build test clippy fmt-check bench-smoke bench-smoke-fabric pool-demo fabric-demo clean
+.PHONY: ci build test test-sim clippy fmt-check bench-smoke bench-smoke-fabric bench-smoke-slo pool-demo fabric-demo clean
 
 ## The CI gate: release build, full test suite, clippy as errors, rustfmt.
 ci: build test clippy fmt-check
@@ -16,6 +16,11 @@ build:
 
 test:
 	cargo test -q
+
+## The serving-simulation harness tests under a fixed seed: the fair
+## queue / splitting / SLO-autoscale suites replayed deterministically.
+test-sim:
+	ORIGAMI_SIM_SEED=2019 cargo test -q --test slo_integration --test fabric_integration --test pool_integration
 
 clippy:
 	cargo clippy -p origami -- -D warnings
@@ -31,6 +36,11 @@ bench-smoke:
 ## Fast smoke of the fabric-sharing bench (asserts the ≥1.2x sharing gain).
 bench-smoke-fabric:
 	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig15_fabric_sharing
+
+## Fast smoke of the SLO-autoscaling bench (asserts p95 ≤ SLO at ≥1.2x
+## fewer lane-seconds than depth scaling).
+bench-smoke-slo:
+	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig16_slo_autoscale
 
 ## The worker-pool demo: 4 pipelined workers vs the serial path.
 pool-demo:

@@ -77,6 +77,20 @@ pub struct Config {
     /// Occupancy-aware batching: flush partial batches early while the
     /// tier-2 side is starved.
     pub occupancy_flush: bool,
+    /// End-to-end latency objective (ms) for the model(s); 0 = none.
+    /// Per-model overrides come from the deployment spec
+    /// (`model=strategy:slo=20ms`).
+    pub slo_ms: f64,
+    /// Autoscaler signal: `depth` (queue depth, the PR-2 rule) or `p95`
+    /// (windowed p95-vs-SLO error with depth fallback).
+    pub autoscale_policy: String,
+    /// Ticks a scaling target holds after any scale event (hysteresis).
+    pub autoscale_cooldown: usize,
+    /// Tail-batch splitting: per-task simulated-cost ceiling (ms);
+    /// 0 disables cost-based chunk sizing.
+    pub split_tail_ms: f64,
+    /// Tail-batch splitting: hard per-task request ceiling; 0 disables.
+    pub split_tail_chunk: usize,
 }
 
 impl Default for Config {
@@ -111,6 +125,11 @@ impl Default for Config {
             autoscale_high_depth: 4,
             autoscale_low_depth: 1,
             occupancy_flush: false,
+            slo_ms: 0.0,
+            autoscale_policy: "depth".into(),
+            autoscale_cooldown: 2,
+            split_tail_ms: 0.0,
+            split_tail_chunk: 0,
         }
     }
 }
@@ -137,6 +156,12 @@ impl Config {
         let v = json::from_file(path)?;
         let mut c = Self::default();
         c.apply_json(&v);
+        anyhow::ensure!(
+            c.autoscale_policy == "depth" || c.autoscale_policy == "p95",
+            "config {}: autoscale_policy must be `depth` or `p95`, got `{}`",
+            path.display(),
+            c.autoscale_policy
+        );
         Ok(c)
     }
 
@@ -150,6 +175,7 @@ impl Config {
             ("device", &mut self.device),
             ("models", &mut self.models),
             ("lane_devices", &mut self.lane_devices),
+            ("autoscale_policy", &mut self.autoscale_policy),
         ] {
             if let Some(s) = v.get(field).and_then(|x| x.as_str()) {
                 *slot = s.to_string();
@@ -177,6 +203,8 @@ impl Config {
             ("max_workers", &mut self.max_workers),
             ("autoscale_high_depth", &mut self.autoscale_high_depth),
             ("autoscale_low_depth", &mut self.autoscale_low_depth),
+            ("autoscale_cooldown", &mut self.autoscale_cooldown),
+            ("split_tail_chunk", &mut self.split_tail_chunk),
         ] {
             if let Some(n) = v.get(field).and_then(|x| x.as_usize()) {
                 *slot = n;
@@ -184,6 +212,12 @@ impl Config {
         }
         if let Some(n) = v.get("max_delay_ms").and_then(|x| x.as_f64()) {
             self.max_delay_ms = n;
+        }
+        if let Some(n) = v.get("slo_ms").and_then(|x| x.as_f64()) {
+            self.slo_ms = n;
+        }
+        if let Some(n) = v.get("split_tail_ms").and_then(|x| x.as_f64()) {
+            self.split_tail_ms = n;
         }
         if let Some(b) = v.get("allow_factor_reuse").and_then(|x| x.as_bool()) {
             self.allow_factor_reuse = b;
@@ -247,6 +281,17 @@ impl Config {
         c.autoscale_tick_ms = args.u64_or("autoscale-tick-ms", c.autoscale_tick_ms)?;
         c.autoscale_high_depth = args.usize_or("autoscale-high-depth", c.autoscale_high_depth)?;
         c.autoscale_low_depth = args.usize_or("autoscale-low-depth", c.autoscale_low_depth)?;
+        c.autoscale_cooldown = args.usize_or("autoscale-cooldown", c.autoscale_cooldown)?;
+        if let Some(v) = args.get("autoscale-policy") {
+            anyhow::ensure!(
+                v == "depth" || v == "p95",
+                "--autoscale-policy must be `depth` or `p95`, got `{v}`"
+            );
+            c.autoscale_policy = v.into();
+        }
+        c.slo_ms = args.f64_or("slo-ms", c.slo_ms)?;
+        c.split_tail_ms = args.f64_or("split-tail-ms", c.split_tail_ms)?;
+        c.split_tail_chunk = args.usize_or("split-tail-chunk", c.split_tail_chunk)?;
         c.lazy_dense_bytes = args.u64_or("lazy-dense-bytes", c.lazy_dense_bytes)?;
         if args.has("strict-otp") {
             c.allow_factor_reuse = false;
@@ -302,15 +347,28 @@ impl Config {
                 json::num(self.autoscale_low_depth as f64),
             ),
             ("occupancy_flush", Value::Bool(self.occupancy_flush)),
+            ("slo_ms", json::num(self.slo_ms)),
+            ("autoscale_policy", json::s(&self.autoscale_policy)),
+            (
+                "autoscale_cooldown",
+                json::num(self.autoscale_cooldown as f64),
+            ),
+            ("split_tail_ms", json::num(self.split_tail_ms)),
+            (
+                "split_tail_chunk",
+                json::num(self.split_tail_chunk as f64),
+            ),
         ])
     }
 }
 
 /// One model's slot in a multi-model deployment spec.
 ///
-/// Text form: `model[=strategy[@device][*weight]]` — e.g. `sim8`,
-/// `sim8=origami/6`, `sim8=origami/6@gpu*2`, `sim16=slalom@cpu`.
-/// Omitted parts inherit the base config.
+/// Text form: `model[=strategy[@device][*weight]][:slo=Nms]` — e.g.
+/// `sim8`, `sim8=origami/6`, `sim8=origami/6@gpu*2:slo=20ms`,
+/// `sim16=slalom@cpu`, `sim16:slo=50`.  Omitted parts inherit the base
+/// config; `slo` is the model's end-to-end latency objective the p95
+/// autoscaler holds it to (ms; the `ms` suffix is optional).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
     pub model: String,
@@ -318,12 +376,29 @@ pub struct ModelSpec {
     pub device: Option<String>,
     /// Weighted-fair share of the shared tier-2 lane fabric.
     pub weight: f64,
+    /// Per-model latency objective (ms).
+    pub slo_ms: Option<f64>,
 }
 
 impl ModelSpec {
     /// Parse one spec.
     pub fn parse(spec: &str) -> Result<Self> {
         let spec = spec.trim();
+        anyhow::ensure!(!spec.is_empty(), "empty model spec");
+        let (spec, slo_ms) = match spec.split_once(":slo=") {
+            Some((head, tail)) => {
+                let raw = tail.trim().trim_end_matches("ms").trim();
+                let slo = raw
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("model spec `{spec}`: bad SLO `{tail}`"))?;
+                anyhow::ensure!(
+                    slo > 0.0,
+                    "model spec `{spec}`: SLO must be positive"
+                );
+                (head.trim(), Some(slo))
+            }
+            None => (spec, None),
+        };
         anyhow::ensure!(!spec.is_empty(), "empty model spec");
         let (model, rest) = match spec.split_once('=') {
             Some((m, r)) => (m.trim(), Some(r.trim())),
@@ -364,6 +439,7 @@ impl ModelSpec {
             strategy,
             device,
             weight,
+            slo_ms,
         })
     }
 
@@ -389,6 +465,9 @@ impl ModelSpec {
         }
         if let Some(d) = &self.device {
             c.device = d.clone();
+        }
+        if let Some(slo) = self.slo_ms {
+            c.slo_ms = slo;
         }
         c
     }
@@ -438,6 +517,7 @@ mod tests {
         assert_eq!(s.strategy, None);
         assert_eq!(s.device, None);
         assert_eq!(s.weight, 1.0);
+        assert_eq!(s.slo_ms, None);
 
         let s = ModelSpec::parse("sim8=origami/6@gpu*2").unwrap();
         assert_eq!(s.model, "sim8");
@@ -462,6 +542,39 @@ mod tests {
     }
 
     #[test]
+    fn model_spec_parses_slo_suffix() {
+        let s = ModelSpec::parse("sim8=origami/6@gpu*2:slo=20ms").unwrap();
+        assert_eq!(s.model, "sim8");
+        assert_eq!(s.strategy.as_deref(), Some("origami/6"));
+        assert_eq!(s.device.as_deref(), Some("gpu"));
+        assert_eq!(s.weight, 2.0);
+        assert_eq!(s.slo_ms, Some(20.0));
+
+        // ms suffix optional; works without strategy too
+        let s = ModelSpec::parse("sim16:slo=7.5").unwrap();
+        assert_eq!(s.model, "sim16");
+        assert_eq!(s.strategy, None);
+        assert_eq!(s.slo_ms, Some(7.5));
+
+        assert!(ModelSpec::parse("sim8:slo=").is_err());
+        assert!(ModelSpec::parse("sim8:slo=-3").is_err());
+        assert!(ModelSpec::parse("sim8:slo=fast").is_err());
+        assert!(ModelSpec::parse(":slo=5").is_err(), "SLO without a model");
+
+        // the SLO flows into the per-model config
+        let base = Config::default();
+        let cfg = ModelSpec::parse("sim8:slo=12ms").unwrap().apply(&base);
+        assert_eq!(cfg.slo_ms, 12.0);
+        let cfg = ModelSpec::parse("sim8").unwrap().apply(&base);
+        assert_eq!(cfg.slo_ms, base.slo_ms, "no SLO in the spec inherits");
+
+        let list = ModelSpec::parse_list("sim8:slo=5ms,sim16=slalom:slo=50ms").unwrap();
+        assert_eq!(list[0].slo_ms, Some(5.0));
+        assert_eq!(list[1].slo_ms, Some(50.0));
+        assert_eq!(list[1].strategy.as_deref(), Some("slalom"));
+    }
+
+    #[test]
     fn model_spec_apply_overrides_base() {
         let base = Config::default();
         let cfg = ModelSpec::parse("sim8=origami/4@gpu").unwrap().apply(&base);
@@ -476,15 +589,17 @@ mod tests {
     #[test]
     fn fabric_and_autoscale_args_parse() {
         let args = Args::parse(
-            "serve --models sim8=origami/6,sim16=slalom --lanes 4 --min-lanes 2 \
+            "serve --models sim8=origami/6:slo=20ms,sim16=slalom --lanes 4 --min-lanes 2 \
              --max-lanes 8 --lane-devices cpu,gpu --min-workers 1 --max-workers 6 \
-             --autoscale --occupancy-flush --autoscale-high-depth 3"
+             --autoscale --occupancy-flush --autoscale-high-depth 3 \
+             --autoscale-policy p95 --autoscale-cooldown 4 --slo-ms 25 \
+             --split-tail-ms 6.5 --split-tail-chunk 2"
                 .split_whitespace()
                 .map(String::from),
         )
         .unwrap();
         let c = Config::from_args(&args).unwrap();
-        assert_eq!(c.models, "sim8=origami/6,sim16=slalom");
+        assert_eq!(c.models, "sim8=origami/6:slo=20ms,sim16=slalom");
         assert_eq!(c.lanes, 4);
         assert_eq!(c.min_lanes, 2);
         assert_eq!(c.max_lanes, 8);
@@ -494,6 +609,11 @@ mod tests {
         assert!(c.autoscale);
         assert!(c.occupancy_flush);
         assert_eq!(c.autoscale_high_depth, 3);
+        assert_eq!(c.autoscale_policy, "p95");
+        assert_eq!(c.autoscale_cooldown, 4);
+        assert_eq!(c.slo_ms, 25.0);
+        assert_eq!(c.split_tail_ms, 6.5);
+        assert_eq!(c.split_tail_chunk, 2);
         // round-trips through JSON
         let v = c.to_json();
         let mut c2 = Config::default();
@@ -503,6 +623,22 @@ mod tests {
         assert_eq!(c2.max_lanes, c.max_lanes);
         assert!(c2.autoscale);
         assert!(c2.occupancy_flush);
+        assert_eq!(c2.autoscale_policy, "p95");
+        assert_eq!(c2.autoscale_cooldown, 4);
+        assert_eq!(c2.slo_ms, 25.0);
+        assert_eq!(c2.split_tail_ms, 6.5);
+        assert_eq!(c2.split_tail_chunk, 2);
+    }
+
+    #[test]
+    fn bad_autoscale_policy_rejected() {
+        let args = Args::parse(
+            "serve --autoscale-policy depth95"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(Config::from_args(&args).is_err());
     }
 
     #[test]
@@ -514,5 +650,10 @@ mod tests {
         let c = Config::from_file(&path).unwrap();
         assert_eq!(c.model, "vgg19-32");
         assert_eq!(c.max_delay_ms, 7.5);
+        // a bad autoscale_policy is rejected at load time on the file
+        // path too — a typo must not silently fall back to depth scaling
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, r#"{"autoscale_policy": "P95"}"#).unwrap();
+        assert!(Config::from_file(&bad).is_err());
     }
 }

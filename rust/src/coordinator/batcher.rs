@@ -29,6 +29,12 @@ use crate::util::threadpool::Channel;
 /// batch should flush now rather than wait out the delay window.
 pub type FlushProbe = Arc<dyn Fn() -> bool + Send + Sync>;
 
+/// Fraction of a latency SLO the batcher may spend coalescing: a pool
+/// with an SLO caps its delay window at `SLO × this` (see
+/// [`DynamicBatcher::with_deadline_cap`]), leaving the rest of the
+/// budget for queueing and both execution tiers.
+pub const SLO_WINDOW_FRACTION: f64 = 0.25;
+
 /// How often the occupancy probe is re-sampled while waiting inside the
 /// delay window (tier-2 can go idle mid-wait; a bubble should not last
 /// longer than this).
@@ -56,6 +62,18 @@ impl DynamicBatcher {
     /// means downstream is starved and partial batches flush early.
     pub fn with_flush_probe(mut self, probe: FlushProbe) -> Self {
         self.flush_probe = Some(probe);
+        self
+    }
+
+    /// SLO-aware window cap: clamp the delay window to `cap` so batch
+    /// coalescing can consume at most a bounded share of a request's
+    /// latency budget.  Since the window is anchored at the oldest
+    /// request's submission time, this bounds the batching contribution
+    /// to end-to-end latency at exactly `cap`.
+    pub fn with_deadline_cap(mut self, cap: Duration) -> Self {
+        if cap < self.max_delay {
+            self.max_delay = cap;
+        }
         self
     }
 
@@ -269,6 +287,26 @@ mod tests {
         assert_eq!(batch.len(), 1);
         let waited = t.elapsed();
         assert!(waited < Duration::from_millis(70), "{waited:?}");
+    }
+
+    #[test]
+    fn deadline_cap_clamps_the_window_only_downward() {
+        let ch = Channel::bounded(8);
+        ch.send(req(0)).map_err(|_| ()).unwrap();
+        // a 10 s window capped at 20 ms must flush within the cap
+        let b = DynamicBatcher::new(ch, 8, 10_000.0)
+            .with_deadline_cap(Duration::from_millis(20));
+        assert_eq!(b.max_delay, Duration::from_millis(20));
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = t.elapsed();
+        assert!(waited < Duration::from_millis(500), "{waited:?}");
+        // a cap looser than the window leaves the window alone
+        let ch2: Channel<InferRequest> = Channel::bounded(8);
+        let b2 = DynamicBatcher::new(ch2, 8, 5.0)
+            .with_deadline_cap(Duration::from_millis(500));
+        assert_eq!(b2.max_delay, Duration::from_secs_f64(0.005));
     }
 
     #[test]

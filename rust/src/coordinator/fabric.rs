@@ -33,18 +33,163 @@
 //! Per-tenant finishers are constructed lazily *inside* each lane
 //! thread (the PJRT path holds thread-local handles), then cached for
 //! the lane's lifetime.
+//!
+//! Two latency-SLO mechanisms live here as of PR 3:
+//!
+//! 4. **Tail-batch splitting** ([`SplitPolicy`]).  A queued tail over
+//!    the configured cost/size ceiling is split into chunked sub-tasks
+//!    ([`Tier2Task::split`]) *before* it enters the fair queue, so the
+//!    weighted-fair clock interleaves at chunk granularity: a cold
+//!    tenant's single tail pops after at most one chunk of a hot burst,
+//!    never behind a whole batch-8 tail.  The fair clock charges pops by
+//!    request count, so splitting changes *preemption granularity*, not
+//!    a tenant's aggregate share — and outputs stay bit-identical to
+//!    the unsplit path (tail stages are per-sample maps).
+//! 5. **Latency telemetry** ([`super::telemetry`]).  Lanes record each
+//!    task's fabric queue wait, tier-2 cost and per-request end-to-end
+//!    latency into the deployment's [`TelemetryHub`]; the SLO autoscaler
+//!    reads windowed p95s from it.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::api::reply_error;
 use super::scheduler::{Tier2Finisher, Tier2Task};
+use super::telemetry::{Stage, TelemetryHub};
 use crate::runtime::Device;
+
+/// Weighted-fair virtual-clock bookkeeping, extracted so the live
+/// fabric queue, the fairness property tests (`harness/prop.rs`) and
+/// the deterministic serving simulator (`harness/sim.rs`) all run the
+/// *same* policy code.
+///
+/// Tenants accumulate virtual time `cost / weight` per dequeue; the
+/// next tenant is always the backlogged one with the least virtual
+/// time (ties break lexicographically, so orders are deterministic).
+/// A tenant returning from idle is floored to the queue-wide virtual
+/// clock, so idle periods can never be banked as burst credit.
+#[derive(Debug, Default)]
+pub struct FairClock {
+    tenants: BTreeMap<String, ClockTenant>,
+    /// Highest virtual time any dequeue has reached.
+    vclock: f64,
+}
+
+#[derive(Debug)]
+struct ClockTenant {
+    weight: f64,
+    vtime: f64,
+    queued: usize,
+}
+
+impl FairClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a tenant (idempotent; updates the weight).
+    pub fn register(&mut self, tenant: &str, weight: f64) {
+        let t = self
+            .tenants
+            .entry(tenant.to_string())
+            .or_insert(ClockTenant {
+                weight: 1.0,
+                vtime: 0.0,
+                queued: 0,
+            });
+        t.weight = weight.max(1e-6);
+    }
+
+    /// Note one item entering `tenant`'s queue.  A tenant whose queue
+    /// was empty is floored to the queue-wide virtual clock.
+    pub fn on_enqueue(&mut self, tenant: &str) {
+        let vclock = self.vclock;
+        let t = self
+            .tenants
+            .entry(tenant.to_string())
+            .or_insert(ClockTenant {
+                weight: 1.0,
+                vtime: 0.0,
+                queued: 0,
+            });
+        if t.queued == 0 {
+            t.vtime = t.vtime.max(vclock);
+        }
+        t.queued += 1;
+    }
+
+    /// The backlogged tenant with the least virtual time, if any.
+    pub fn pick(&self) -> Option<String> {
+        let mut best: Option<(&String, f64)> = None;
+        for (name, t) in &self.tenants {
+            if t.queued == 0 {
+                continue;
+            }
+            if best.map(|(_, v)| t.vtime < v).unwrap_or(true) {
+                best = Some((name, t.vtime));
+            }
+        }
+        best.map(|(name, _)| name.clone())
+    }
+
+    /// Charge `tenant` for one dequeued item of `cost` service units.
+    pub fn on_dequeue(&mut self, tenant: &str, cost: f64) {
+        if let Some(t) = self.tenants.get_mut(tenant) {
+            t.vtime += cost.max(0.0) / t.weight;
+            t.queued = t.queued.saturating_sub(1);
+            self.vclock = self.vclock.max(t.vtime);
+        }
+    }
+
+    /// Items currently queued for `tenant`.
+    pub fn queued(&self, tenant: &str) -> usize {
+        self.tenants.get(tenant).map(|t| t.queued).unwrap_or(0)
+    }
+
+    /// A tenant's accumulated virtual time.
+    pub fn vtime(&self, tenant: &str) -> f64 {
+        self.tenants.get(tenant).map(|t| t.vtime).unwrap_or(0.0)
+    }
+}
+
+/// Tail-batch splitting policy (bounds the worst-case head-of-line
+/// blocking one queued tail can inflict on other tenants).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitPolicy {
+    /// Target ceiling for one tier-2 task's simulated cost (ms).  Once a
+    /// tenant has a learned per-request cost estimate, its tasks are
+    /// chunked so each sub-task stays under this.  0 disables cost-based
+    /// chunk sizing.
+    pub max_task_ms: f64,
+    /// Hard per-task request ceiling, applied even before any cost
+    /// estimate exists (cold start).  0 disables.
+    pub max_chunk: usize,
+}
+
+impl SplitPolicy {
+    /// No splitting at all (the PR-2 behavior).
+    pub fn disabled() -> Self {
+        Self {
+            max_task_ms: 0.0,
+            max_chunk: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_task_ms > 0.0 || self.max_chunk > 0
+    }
+}
+
+impl Default for SplitPolicy {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
 
 /// Fabric geometry and policy.
 #[derive(Debug, Clone)]
@@ -61,6 +206,8 @@ pub struct FabricOptions {
     /// Per-tenant queue bound (backpressure toward that tenant's tier-1
     /// workers; other tenants are unaffected).
     pub queue_cap: usize,
+    /// Tail-batch splitting (see [`SplitPolicy`]).
+    pub split: SplitPolicy,
 }
 
 impl Default for FabricOptions {
@@ -71,6 +218,7 @@ impl Default for FabricOptions {
             max_lanes: 0,
             lane_devices: vec![Device::UntrustedCpu],
             queue_cap: 64,
+            split: SplitPolicy::disabled(),
         }
     }
 }
@@ -109,6 +257,10 @@ pub struct FabricMetrics {
     pub peak_lanes: usize,
     /// Failed batches across all tenants.
     pub errors: u64,
+    /// Tail batches that were split on submit.
+    pub split_tasks: u64,
+    /// Sub-tasks those splits produced (≥ 2 × `split_tasks`).
+    pub split_subtasks: u64,
 }
 
 impl FabricMetrics {
@@ -135,44 +287,31 @@ impl FabricMetrics {
     }
 }
 
-/// Per-tenant deque + weighted-fair accounting.
-struct TenantQueueState {
-    tasks: VecDeque<Tier2Task>,
-    weight: f64,
-    /// Batches popped ÷ weight (weighted virtual service time).
-    vtime: f64,
-}
-
-impl TenantQueueState {
-    fn new(weight: f64) -> Self {
-        Self {
-            tasks: VecDeque::new(),
-            weight: weight.max(1e-6),
-            vtime: 0.0,
-        }
-    }
-}
-
 struct FairQueueInner {
-    tenants: BTreeMap<String, TenantQueueState>,
+    /// Weighted-fair policy state (queue-wide virtual clock + per-tenant
+    /// vtimes): tenants returning from idle are floored to the clock
+    /// even when every deque happens to be empty at that instant (depth
+    /// oscillates through zero constantly while lanes are in flight),
+    /// so idle time can never be banked as a burst credit.
+    clock: FairClock,
+    /// Per-tenant deques of (enqueue instant, task).
+    tenants: BTreeMap<String, VecDeque<(Instant, Tier2Task)>>,
     len: usize,
     closed: bool,
-    /// Queue-wide virtual clock: the highest vtime any pop has reached.
-    /// Tenants returning from idle are floored to it even when every
-    /// deque happens to be empty at that instant (depth oscillates
-    /// through zero constantly while lanes are in flight), so idle time
-    /// can never be banked as a burst credit.
-    vclock: f64,
 }
 
-/// What a timed pop produced.
+/// What a timed pop produced: a task plus the wall ms it spent queued.
 enum Pop {
-    Task(Tier2Task),
+    Task(Tier2Task, f64),
     TimedOut,
     Closed,
 }
 
-/// Bounded multi-tenant queue with a weighted-fair pop.
+/// Bounded multi-tenant queue with a weighted-fair pop.  Pops are
+/// charged by *request count*, so an 8-request tail consumes eight
+/// times the virtual service of a single-request tail — which is what
+/// makes tail-batch splitting fairness-neutral: the chunks of a split
+/// task cost exactly what the unsplit task would have.
 struct FairQueue {
     inner: Mutex<FairQueueInner>,
     not_empty: Condvar,
@@ -184,10 +323,10 @@ impl FairQueue {
     fn new(cap: usize) -> Self {
         Self {
             inner: Mutex::new(FairQueueInner {
+                clock: FairClock::new(),
                 tenants: BTreeMap::new(),
                 len: 0,
                 closed: false,
-                vclock: 0.0,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
@@ -198,11 +337,8 @@ impl FairQueue {
     /// Declare a tenant (idempotent; updates the weight).
     fn register(&self, model: &str, weight: f64) {
         let mut g = self.inner.lock().unwrap();
-        let t = g
-            .tenants
-            .entry(model.to_string())
-            .or_insert_with(|| TenantQueueState::new(weight));
-        t.weight = weight.max(1e-6);
+        g.clock.register(model, weight);
+        g.tenants.entry(model.to_string()).or_default();
     }
 
     /// Blocking push with per-tenant backpressure; Err(task) when closed.
@@ -218,28 +354,16 @@ impl FairQueue {
             let depth = g
                 .tenants
                 .get(&task.model)
-                .map(|t| t.tasks.len())
+                .map(|t| t.len())
                 .unwrap_or(0);
             if depth < self.cap {
                 break;
             }
             g = self.not_full.wait(g).unwrap();
         }
-        // A tenant returning from idle is floored to the queue-wide
-        // virtual clock: idle periods must not accumulate into a burst
-        // credit that starves steadily-loaded tenants.  (The clock, not
-        // a min over currently-queued tenants: the queue routinely
-        // passes through depth zero while lanes are in flight, and a
-        // momentary empty instant must not let stale credit survive.)
-        let vclock = g.vclock;
-        let t = g
-            .tenants
-            .entry(task.model.clone())
-            .or_insert_with(|| TenantQueueState::new(1.0));
-        if t.tasks.is_empty() {
-            t.vtime = t.vtime.max(vclock);
-        }
-        t.tasks.push_back(task);
+        g.clock.on_enqueue(&task.model);
+        let deque = g.tenants.entry(task.model.clone()).or_default();
+        deque.push_back((Instant::now(), task));
         g.len += 1;
         self.not_empty.notify_one();
         Ok(())
@@ -249,29 +373,26 @@ impl FairQueue {
     /// virtual service goes first (ties break lexicographically, so the
     /// order is deterministic).
     fn pop_timeout(&self, timeout: Duration) -> Pop {
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
-            let pick = g
-                .tenants
-                .iter()
-                .filter(|(_, t)| !t.tasks.is_empty())
-                .min_by(|a, b| a.1.vtime.partial_cmp(&b.1.vtime).unwrap())
-                .map(|(name, _)| name.clone());
-            if let Some(name) = pick {
-                let t = g.tenants.get_mut(&name).unwrap();
-                let task = t.tasks.pop_front().unwrap();
-                t.vtime += 1.0 / t.weight;
-                let v = t.vtime;
-                g.vclock = g.vclock.max(v);
+            if let Some(name) = g.clock.pick() {
+                let (enqueued, task) = g
+                    .tenants
+                    .get_mut(&name)
+                    .and_then(|d| d.pop_front())
+                    .expect("fair clock and deques agree on backlog");
+                let cost = task.requests.len().max(1) as f64;
+                g.clock.on_dequeue(&name, cost);
                 g.len -= 1;
                 self.not_full.notify_all();
-                return Pop::Task(task);
+                let wait_ms = enqueued.elapsed().as_secs_f64() * 1e3;
+                return Pop::Task(task, wait_ms);
             }
             if g.closed {
                 return Pop::Closed;
             }
-            let now = std::time::Instant::now();
+            let now = Instant::now();
             if now >= deadline {
                 return Pop::TimedOut;
             }
@@ -307,6 +428,43 @@ struct FabricShared {
     busy_lanes: AtomicUsize,
     metrics: Mutex<FabricMetrics>,
     devices: Vec<Device>,
+    /// Tail-batch splitting policy (applied on submit).
+    split: SplitPolicy,
+    /// Learned per-request tier-2 cost (simulated ms, EWMA) per tenant —
+    /// converts the split policy's ms ceiling into a chunk size.
+    cost_est: Mutex<HashMap<String, f64>>,
+    /// Latency telemetry sink (None outside a deployment).
+    telemetry: Option<Arc<TelemetryHub>>,
+}
+
+impl FabricShared {
+    /// Chunk size the split policy implies for this task (0 = don't
+    /// split).  Final and failed tasks never split — there is no tail
+    /// stage to chunk.
+    fn chunk_for(&self, task: &Tier2Task) -> usize {
+        let p = &self.split;
+        if !p.enabled() || task.stage.is_none() || task.error.is_some() {
+            return 0;
+        }
+        let n = task.requests.len();
+        if n <= 1 {
+            return 0;
+        }
+        let mut chunk = if p.max_chunk > 0 { p.max_chunk } else { usize::MAX };
+        if p.max_task_ms > 0.0 {
+            if let Some(&per_req) = self.cost_est.lock().unwrap().get(&task.model) {
+                if per_req > 0.0 {
+                    let by_cost = (p.max_task_ms / per_req).floor() as usize;
+                    chunk = chunk.min(by_cost.max(1));
+                }
+            }
+        }
+        if chunk >= n {
+            0
+        } else {
+            chunk
+        }
+    }
 }
 
 /// Cloneable submission handle an attached pool holds.
@@ -318,8 +476,39 @@ pub struct FabricHandle {
 impl FabricHandle {
     /// Enqueue a tier-1-complete task; Err(task) when the fabric is
     /// shut down (the caller replies an error to each request).
+    ///
+    /// When the fabric's [`SplitPolicy`] flags the task as an oversized
+    /// tail, it is split into chunked sub-tasks first; each chunk
+    /// enqueues as its own fair-queue entry.  If the fabric closes
+    /// between chunks, the not-yet-queued chunks get error replies here
+    /// (already-queued chunks still drain normally), so every request
+    /// receives exactly one reply either way.
     pub fn submit(&self, task: Tier2Task) -> std::result::Result<(), Tier2Task> {
-        self.shared.queue.push(task)
+        let chunk = self.shared.chunk_for(&task);
+        if chunk == 0 {
+            return self.shared.queue.push(task);
+        }
+        let parts = task.split(chunk);
+        let total = parts.len();
+        let mut parts = parts.into_iter();
+        while let Some(part) = parts.next() {
+            if let Err(failed) = self.shared.queue.push(part) {
+                for rejected in std::iter::once(failed).chain(parts) {
+                    for req in &rejected.requests {
+                        reply_error(req, "tier-2 lane fabric is shut down");
+                    }
+                }
+                return Ok(());
+            }
+        }
+        // count the split only once every chunk is actually queued —
+        // shutdown-time rejections must not inflate the accounting
+        if total > 1 {
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.split_tasks += 1;
+            m.split_subtasks += total as u64;
+        }
+        Ok(())
     }
 
     /// Queued tier-2 batches across all tenants.
@@ -353,6 +542,16 @@ pub struct LaneFabric {
 impl LaneFabric {
     /// Start the fabric with its initial lane fleet.
     pub fn start(opts: FabricOptions) -> Self {
+        Self::start_with_telemetry(opts, None)
+    }
+
+    /// Start the fabric with a telemetry sink: lanes record per-task
+    /// queue wait, tier-2 cost and per-request end-to-end latency into
+    /// the hub (the deployment shares one hub across fabric + pools).
+    pub fn start_with_telemetry(
+        opts: FabricOptions,
+        telemetry: Option<Arc<TelemetryHub>>,
+    ) -> Self {
         let lanes = opts.lanes.max(1);
         let min_lanes = if opts.min_lanes == 0 {
             lanes
@@ -379,6 +578,9 @@ impl LaneFabric {
                 ..FabricMetrics::default()
             }),
             devices,
+            split: opts.split.clone(),
+            cost_est: Mutex::new(HashMap::new()),
+            telemetry,
         });
         let fabric = Self {
             shared,
@@ -541,17 +743,29 @@ const FINISHER_BUILD_ATTEMPTS: u32 = 3;
 fn lane_main(shared: Arc<FabricShared>, lane: usize, device: Device) {
     let mut finishers: HashMap<String, Option<Tier2Finisher>> = HashMap::new();
     let mut build_attempts: HashMap<String, u32> = HashMap::new();
+    // per-lane telemetry cache: after a tenant's first task the hub's
+    // registry mutex is never touched again on this lane's hot path
+    let mut telemetry: HashMap<String, Arc<super::telemetry::TenantTelemetry>> = HashMap::new();
     loop {
         if lane >= shared.desired.load(Ordering::SeqCst) {
             break; // retired by a scale-down
         }
-        let task = match shared.queue.pop_timeout(Duration::from_millis(20)) {
-            Pop::Task(t) => t,
+        let (task, queue_wait_ms) = match shared.queue.pop_timeout(Duration::from_millis(20)) {
+            Pop::Task(t, wait) => (t, wait),
             Pop::TimedOut => continue,
             Pop::Closed => break,
         };
         shared.busy_lanes.fetch_add(1, Ordering::SeqCst);
         let model = task.model.clone();
+        let tenant_tel = shared.telemetry.as_ref().map(|hub| {
+            telemetry
+                .entry(model.clone())
+                .or_insert_with(|| hub.register(&model))
+                .clone()
+        });
+        if let Some(tel) = &tenant_tel {
+            tel.record(Stage::QueueWait, queue_wait_ms);
+        }
         if !finishers.contains_key(&model) {
             let factory = shared
                 .tenants
@@ -582,6 +796,20 @@ fn lane_main(shared: Arc<FabricShared>, lane: usize, device: Device) {
         match finishers.get(&model).and_then(|f| f.as_ref()) {
             Some(fin) => {
                 let out = fin.finish(task);
+                if let Some(tel) = &tenant_tel {
+                    tel.record(Stage::Tier2, out.tier2_sim_ms);
+                    for &lat in &out.latencies_ms {
+                        tel.record(Stage::EndToEnd, lat);
+                    }
+                }
+                // refresh the learned per-request tail cost (feeds the
+                // split policy's ms → chunk-size conversion)
+                if out.tier2_sim_ms > 0.0 && out.record.batch > 0 {
+                    let per_req = out.tier2_sim_ms / out.record.batch as f64;
+                    let mut est = shared.cost_est.lock().unwrap();
+                    let e = est.entry(model.clone()).or_insert(per_req);
+                    *e = 0.8 * *e + 0.2 * per_req;
+                }
                 let mut g = shared.metrics.lock().unwrap();
                 g.lane_sim_ms[lane] += out.tier2_sim_ms;
                 g.lane_batches[lane] += 1;
@@ -623,27 +851,47 @@ mod tests {
         Tier2Task,
         crate::util::threadpool::Channel<crate::coordinator::api::InferResponse>,
     ) {
-        let (req, reply) = InferRequest::new(1, model, vec![], 0);
+        task_sized(model, 1)
+    }
+
+    /// A task carrying `n` requests (fair pops charge by request count).
+    fn task_sized(
+        model: &str,
+        n: usize,
+    ) -> (
+        Tier2Task,
+        crate::util::threadpool::Channel<crate::coordinator::api::InferResponse>,
+    ) {
+        let mut requests = Vec::new();
+        let mut reply = None;
+        for i in 0..n.max(1) {
+            let (req, r) = InferRequest::new(i as u64 + 1, model, vec![], 0);
+            requests.push(req);
+            if reply.is_none() {
+                reply = Some(r);
+            }
+        }
         (
             Tier2Task {
                 model: model.to_string(),
-                requests: vec![req],
-                exec_batch: 1,
+                requests,
+                exec_batch: n.max(1),
                 stage: None,
-                features: vec![0.5, 0.5],
+                features: vec![0.5; 2 * n.max(1)],
                 ledger: Ledger::new(),
                 queue_ms: 0.0,
                 started: Instant::now(),
                 home_worker: 0,
                 error: None,
+                artifact_batches: vec![],
             },
-            reply,
+            reply.unwrap(),
         )
     }
 
     fn pop_model(q: &FairQueue) -> String {
         match q.pop_timeout(Duration::from_millis(100)) {
-            Pop::Task(t) => t.model,
+            Pop::Task(t, _wait) => t.model,
             _ => panic!("expected a task"),
         }
     }
@@ -745,8 +993,91 @@ mod tests {
         q.close();
         let (t2, _r2) = task("a");
         assert!(q.push(t2).is_err(), "push after close fails");
-        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Pop::Task(_)));
+        assert!(matches!(
+            q.pop_timeout(Duration::from_millis(10)),
+            Pop::Task(_, _)
+        ));
         assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Pop::Closed));
+    }
+
+    #[test]
+    fn fair_clock_charges_cost_over_weight_and_floors_idlers() {
+        let mut c = FairClock::new();
+        c.register("a", 2.0);
+        c.register("b", 1.0);
+        assert_eq!(c.pick(), None, "no backlog, nothing to pick");
+        c.on_enqueue("a");
+        c.on_enqueue("b");
+        assert_eq!(c.pick().as_deref(), Some("a"), "ties break lexicographically");
+        c.on_dequeue("a", 4.0); // vtime a = 2.0
+        assert_eq!(c.pick().as_deref(), Some("b"));
+        c.on_dequeue("b", 1.0); // vtime b = 1.0, vclock = 2.0
+        assert_eq!(c.queued("a"), 0);
+        assert_eq!(c.queued("b"), 0);
+        // an idle newcomer is floored to the queue-wide clock
+        c.on_enqueue("late");
+        assert!((c.vtime("late") - 2.0).abs() < 1e-12, "floored to vclock");
+        assert_eq!(c.pick().as_deref(), Some("late"));
+    }
+
+    #[test]
+    fn fair_pops_charge_by_request_count() {
+        // One 4-request batch from `a` costs as much virtual service as
+        // four 1-request batches from `b`: after a's big pop, all of
+        // b's singles go first.
+        let q = FairQueue::new(16);
+        q.register("a", 1.0);
+        q.register("b", 1.0);
+        let mut keep = Vec::new();
+        let (t, r) = task_sized("a", 4);
+        q.push(t).map_err(|_| ()).unwrap();
+        keep.push(r);
+        let (t, r) = task_sized("a", 1);
+        q.push(t).map_err(|_| ()).unwrap();
+        keep.push(r);
+        for _ in 0..4 {
+            let (t, r) = task_sized("b", 1);
+            q.push(t).map_err(|_| ()).unwrap();
+            keep.push(r);
+        }
+        let order: Vec<String> = (0..6).map(|_| pop_model(&q)).collect();
+        assert_eq!(order, vec!["a", "b", "b", "b", "b", "a"]);
+    }
+
+    #[test]
+    fn split_policy_chunks_by_size_then_by_learned_cost() {
+        let fabric = LaneFabric::start(FabricOptions {
+            lanes: 1,
+            split: SplitPolicy {
+                max_task_ms: 4.5,
+                max_chunk: 2,
+            },
+            ..FabricOptions::default()
+        });
+        let tiered = |n: usize| {
+            let (mut t, _r) = task_sized("m", n);
+            t.stage = Some("tail_p06".into());
+            t
+        };
+        // cold start: no cost estimate yet → the hard request ceiling
+        assert_eq!(fabric.shared.chunk_for(&tiered(4)), 2);
+        assert_eq!(fabric.shared.chunk_for(&tiered(2)), 0, "already small enough");
+        // a learned 3 ms/request estimate tightens the chunk: 4.5 ms
+        // ceiling / 3 ms per request → 1-request chunks
+        fabric.shared.cost_est.lock().unwrap().insert("m".into(), 3.0);
+        assert_eq!(fabric.shared.chunk_for(&tiered(4)), 1);
+        // Final and failed tasks never split
+        let (final_task, _r) = task_sized("m", 4);
+        assert_eq!(fabric.shared.chunk_for(&final_task), 0);
+        let mut failed = tiered(4);
+        failed.error = Some("boom".into());
+        assert_eq!(fabric.shared.chunk_for(&failed), 0);
+        // disabled policy never splits
+        let plain = LaneFabric::start(FabricOptions {
+            lanes: 1,
+            ..FabricOptions::default()
+        });
+        assert_eq!(plain.shared.chunk_for(&tiered(8)), 0);
     }
 
     #[test]

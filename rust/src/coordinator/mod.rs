@@ -42,12 +42,19 @@ pub mod pool;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod telemetry;
 
 pub use api::{InferRequest, InferResponse};
 pub use batcher::DynamicBatcher;
-pub use fabric::{FabricHandle, FabricMetrics, FabricOptions, LaneFabric, TenantStats};
+pub use fabric::{
+    FabricHandle, FabricMetrics, FabricOptions, FairClock, LaneFabric, SplitPolicy, TenantStats,
+};
 pub use pool::{PoolMetrics, PoolOptions, WorkerPool};
 pub use router::{
     AdmissionError, AutoscalePolicy, Deployment, DeploymentMetrics, EngineHandle, Router,
+    ScaleMode, ScaleSignals,
 };
 pub use server::ServingEngine;
+pub use telemetry::{
+    HistogramSnapshot, LatencyHistogram, Stage, TelemetryHub, TenantTelemetry, WindowedHistogram,
+};

@@ -48,9 +48,10 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use super::api::{reply_error, BatchRecord, InferRequest, InferResponse};
-use super::batcher::DynamicBatcher;
+use super::batcher::{DynamicBatcher, SLO_WINDOW_FRACTION};
 use super::fabric::FabricHandle;
 use super::scheduler::{BatchScheduler, Tier2Finisher, Tier2Task};
+use super::telemetry::{Stage, TenantTelemetry};
 use crate::util::stats::Summary;
 use crate::util::threadpool::Channel;
 
@@ -76,6 +77,10 @@ pub struct PoolOptions {
     pub ingress_cap: usize,
     /// Per-worker queue bound (shard backpressure).
     pub worker_queue_cap: usize,
+    /// End-to-end latency objective (ms); > 0 caps the batcher's delay
+    /// window at [`SLO_WINDOW_FRACTION`] of it, so batch coalescing can
+    /// never eat the whole latency budget.  0 = no SLO.
+    pub slo_ms: f64,
 }
 
 impl Default for PoolOptions {
@@ -90,6 +95,7 @@ impl Default for PoolOptions {
             occupancy_flush: false,
             ingress_cap: 256,
             worker_queue_cap: 64,
+            slo_ms: 0.0,
         }
     }
 }
@@ -260,6 +266,9 @@ pub struct WorkerPool {
     /// no previous incarnation of this pool ever used (OTP safety; see
     /// module docs).
     next_domain: Arc<AtomicUsize>,
+    /// Tenant latency sink (tier-1 stage recording; deployment-attached
+    /// pools only).
+    telemetry: Option<Arc<TenantTelemetry>>,
     pub metrics: Arc<Mutex<PoolMetrics>>,
     next_id: AtomicU64,
     configured_workers: usize,
@@ -304,6 +313,7 @@ impl WorkerPool {
                 lanes: max_workers,
             },
             Some((t2q, Arc::new(finisher_factory) as FinisherFactory)),
+            None,
         )
     }
 
@@ -311,7 +321,15 @@ impl WorkerPool {
     /// [`LaneFabric`](super::fabric::LaneFabric) instead of owned lanes.
     /// The pool's model must already be attached to the fabric (the
     /// handle comes from [`LaneFabric::attach`](super::fabric::LaneFabric::attach)).
-    pub fn start_attached<S>(opts: PoolOptions, sched_factory: S, fabric: FabricHandle) -> Self
+    /// `telemetry` is the tenant's latency sink: tier-1 workers record
+    /// per-batch enclave time into it (the fabric's lanes record the
+    /// queue-wait/tier-2/end-to-end stages).
+    pub fn start_attached<S>(
+        opts: PoolOptions,
+        sched_factory: S,
+        fabric: FabricHandle,
+        telemetry: Option<Arc<TenantTelemetry>>,
+    ) -> Self
     where
         S: Fn(usize) -> Result<BatchScheduler> + Send + Sync + 'static,
     {
@@ -320,6 +338,7 @@ impl WorkerPool {
             Arc::new(sched_factory),
             Tier2Sink::Fabric(fabric),
             None,
+            telemetry,
         )
     }
 
@@ -328,6 +347,7 @@ impl WorkerPool {
         sched_factory: SchedFactory,
         sink: Tier2Sink,
         owned: Option<(Channel<Tier2Task>, FinisherFactory)>,
+        telemetry: Option<Arc<TenantTelemetry>>,
     ) -> Self {
         let mut opts = opts;
         let workers = opts.workers.max(1);
@@ -371,6 +391,7 @@ impl WorkerPool {
                     metrics.clone(),
                     sched_factory.clone(),
                     opts.clone(),
+                    telemetry.clone(),
                     Some(ready.clone()),
                 );
                 g.push(WorkerSlot {
@@ -465,6 +486,7 @@ impl WorkerPool {
             opts,
             scale_lock: Mutex::new(()),
             next_domain,
+            telemetry,
             metrics,
             next_id: AtomicU64::new(1),
             configured_workers: workers,
@@ -512,6 +534,7 @@ impl WorkerPool {
                         self.metrics.clone(),
                         self.sched_factory.clone(),
                         self.opts.clone(),
+                        self.telemetry.clone(),
                         None,
                     );
                     let slot = WorkerSlot {
@@ -696,11 +719,14 @@ fn spawn_worker(
     metrics: Arc<Mutex<PoolMetrics>>,
     factory: SchedFactory,
     opts: PoolOptions,
+    telemetry: Option<Arc<TenantTelemetry>>,
     ready: Option<Channel<()>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("origami-pool-w{w}-t1"))
-        .spawn(move || worker_main(w, domain, queue, sink, metrics, factory, opts, ready))
+        .spawn(move || {
+            worker_main(w, domain, queue, sink, metrics, factory, opts, telemetry, ready)
+        })
         .expect("spawn tier-1 worker")
 }
 
@@ -712,10 +738,17 @@ fn worker_main(
     m: Arc<Mutex<PoolMetrics>>,
     factory: SchedFactory,
     opts: PoolOptions,
+    telemetry: Option<Arc<TenantTelemetry>>,
     ready: Option<Channel<()>>,
 ) {
     let batcher = {
-        let b = DynamicBatcher::new(queue, opts.max_batch, opts.max_delay_ms);
+        let mut b = DynamicBatcher::new(queue, opts.max_batch, opts.max_delay_ms);
+        if opts.slo_ms > 0.0 {
+            // never let batch coalescing alone eat the latency budget
+            b = b.with_deadline_cap(std::time::Duration::from_secs_f64(
+                opts.slo_ms * SLO_WINDOW_FRACTION / 1e3,
+            ));
+        }
         if opts.occupancy_flush && opts.pipeline {
             let s = sink.clone();
             b.with_flush_probe(Arc::new(move || s.starved()))
@@ -778,8 +811,12 @@ fn worker_main(
                     for task in tasks {
                         // tier-1 failures are counted once, by the
                         // finisher (ok=false)
+                        let tier1_ms = task.ledger.grand_total_ms();
+                        if let Some(tel) = &telemetry {
+                            tel.record(Stage::Tier1, tier1_ms);
+                        }
                         let mut g = m.lock().unwrap();
-                        *at(&mut g.tier1_sim_ms, w) += task.ledger.grand_total_ms();
+                        *at(&mut g.tier1_sim_ms, w) += tier1_ms;
                         drop(g);
                         if let Err(task) = sink.send(task) {
                             for req in &task.requests {
@@ -798,6 +835,16 @@ fn worker_main(
         } else {
             match sched.execute(batch) {
                 Ok(rec) => {
+                    if let Some(tel) = &telemetry {
+                        tel.record(Stage::Tier1, rec.sim_ms);
+                        // one sample per request (matching the pipelined
+                        // path's weighting), at the batch-level latency —
+                        // execute() replies inline, so per-request wall
+                        // clocks are not observable here
+                        for _ in 0..rec.batch {
+                            tel.record(Stage::EndToEnd, rec.exec_wall_ms + rec.queue_ms);
+                        }
+                    }
                     let mut g = m.lock().unwrap();
                     *at(&mut g.tier1_sim_ms, w) += rec.sim_ms;
                     g.record_batch(&rec);

@@ -31,6 +31,7 @@ use super::fabric::{FabricMetrics, FabricOptions, LaneFabric};
 use super::pool::{PoolMetrics, PoolOptions, WorkerPool};
 use super::scheduler::{BatchScheduler, Tier2Finisher};
 use super::server::ServingEngine;
+use super::telemetry::{Stage, TelemetryHub};
 use crate::util::threadpool::Channel;
 
 /// A registered serving backend: the classic shared-batcher engine or
@@ -247,7 +248,18 @@ impl fmt::Display for AdmissionError {
 
 impl std::error::Error for AdmissionError {}
 
-/// Queue-depth autoscaling policy (deployment-wide).
+/// Which signal drives scaling decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleMode {
+    /// Queue depth only (the PR-2 behavior).
+    Depth,
+    /// Windowed p95-vs-SLO error, with depth as the cold-start fallback
+    /// (before the telemetry window holds enough samples) and as the
+    /// shrink guard (never shrink into a standing backlog).
+    SloP95,
+}
+
+/// Deployment-wide autoscaling policy.
 #[derive(Debug, Clone)]
 pub struct AutoscalePolicy {
     /// Grow a pool (or the fabric) when its queue depth exceeds
@@ -258,6 +270,20 @@ pub struct AutoscalePolicy {
     pub low_depth_per_worker: usize,
     /// Background autoscaler cadence (ms).
     pub tick_ms: u64,
+    /// Scaling signal (see [`ScaleMode`]).
+    pub mode: ScaleMode,
+    /// SLO mode: shrink only once p95 has fallen under
+    /// `slo_shrink_margin × SLO` (head-room guard against shrink→breach
+    /// →grow oscillation).
+    pub slo_shrink_margin: f64,
+    /// SLO mode: minimum windowed samples before p95 is trusted; below
+    /// it the depth signal decides.
+    pub min_window_samples: u64,
+    /// Hysteresis: after any scale event on a target, that target holds
+    /// for this many ticks before the next event.  A trace oscillating
+    /// around a threshold can therefore churn `scale_to` at most once
+    /// per cooldown window (regression-pinned).
+    pub cooldown_ticks: u64,
 }
 
 impl Default for AutoscalePolicy {
@@ -266,6 +292,71 @@ impl Default for AutoscalePolicy {
             high_depth_per_worker: 4,
             low_depth_per_worker: 1,
             tick_ms: 20,
+            mode: ScaleMode::Depth,
+            slo_shrink_margin: 0.5,
+            min_window_samples: 8,
+            cooldown_ticks: 2,
+        }
+    }
+}
+
+/// The signals one scaling target (a pool or the lane fabric) exposes
+/// to the autoscaler each tick.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleSignals {
+    /// Queued work items at this target.
+    pub depth: usize,
+    /// Current worker/lane count.
+    pub active: usize,
+    /// Windowed end-to-end p95 (ms), when telemetry has it.
+    pub p95_ms: Option<f64>,
+    /// Samples in the telemetry readout window.
+    pub window_samples: u64,
+    /// The target's latency objective (ms), when configured.
+    pub slo_ms: Option<f64>,
+    /// Ticks since this target's last scale event (None = never scaled).
+    pub ticks_since_scale: Option<u64>,
+}
+
+impl AutoscalePolicy {
+    /// Pure per-target scaling decision: the desired size (always a ±1
+    /// step from `active`), or None to hold.  Pure so the flap
+    /// regression tests and the serving simulator can drive the exact
+    /// production decision rule over scripted traces.
+    pub fn decide(&self, s: &ScaleSignals) -> Option<usize> {
+        if let Some(t) = s.ticks_since_scale {
+            if t < self.cooldown_ticks {
+                return None; // holding after a recent scale event
+            }
+        }
+        let active = s.active.max(1);
+        let depth_high = s.depth > self.high_depth_per_worker.saturating_mul(active);
+        let depth_low = s.depth
+            <= self
+                .low_depth_per_worker
+                .saturating_mul(active.saturating_sub(1));
+        match (self.mode, s.slo_ms) {
+            (ScaleMode::SloP95, Some(slo))
+                if slo > 0.0 && s.window_samples >= self.min_window_samples =>
+            {
+                let p95 = s.p95_ms.unwrap_or(0.0);
+                if p95 > slo {
+                    Some(active + 1)
+                } else if p95 < slo * self.slo_shrink_margin && depth_low && active > 1 {
+                    Some(active - 1)
+                } else {
+                    None
+                }
+            }
+            _ => {
+                if depth_high {
+                    Some(active + 1)
+                } else if depth_low && active > 1 {
+                    Some(active - 1)
+                } else {
+                    None
+                }
+            }
         }
     }
 }
@@ -275,6 +366,17 @@ struct ModelEntry {
     /// without holding the registry lock across the operation.
     pool: Arc<WorkerPool>,
     sample_bytes: usize,
+    /// Latency objective (ms) the SLO autoscaler holds this model to.
+    slo_ms: Option<f64>,
+}
+
+/// Hysteresis bookkeeping: the autoscaler's tick counter plus each
+/// target's last scale-event tick.
+#[derive(Default)]
+struct AutoscaleState {
+    tick: u64,
+    last_pool_scale: HashMap<String, u64>,
+    last_fabric_scale: Option<u64>,
 }
 
 struct DeploymentCore {
@@ -282,48 +384,116 @@ struct DeploymentCore {
     models: Mutex<HashMap<String, ModelEntry>>,
     sessions: Mutex<HashMap<u64, String>>,
     policy: AutoscalePolicy,
+    /// Per-tenant latency telemetry (shared with the fabric's lanes and
+    /// every pool's tier-1 workers).
+    telemetry: Arc<TelemetryHub>,
+    scale_state: Mutex<AutoscaleState>,
     /// Monotone tenant-band allocator (blinding keyspace): never reused,
     /// so concurrent deploys cannot end up sharing a band.
     next_band: AtomicU64,
 }
 
 impl DeploymentCore {
-    /// One autoscaler pass: per-pool tier-1 scaling from each pool's
-    /// queue depth, then fabric lane scaling from tier-2 demand (its own
-    /// queue plus the tier-1 backlog about to become tail work).
+    /// One autoscaler pass: per-pool tier-1 scaling, then fabric lane
+    /// scaling from tier-2 demand (its own queue plus the tier-1
+    /// backlog about to become tail work).
+    ///
+    /// In [`ScaleMode::SloP95`] each model scales on its windowed
+    /// end-to-end p95 against its SLO (depth remains the cold-start
+    /// fallback and the shrink guard); in [`ScaleMode::Depth`] the PR-2
+    /// queue-depth rule applies.  Either way a target that just scaled
+    /// holds for `cooldown_ticks` ticks (hysteresis).
     ///
     /// Pools are snapshotted out of the registry first: a shrink blocks
     /// until the retired shard drains, and holding the registry lock
     /// through that would stall every submit.
     fn tick(&self) {
         let p = &self.policy;
-        let pools: Vec<Arc<WorkerPool>> = {
+        let entries: Vec<(String, Arc<WorkerPool>, Option<f64>)> = {
             let g = self.models.lock().unwrap();
-            g.values().map(|e| e.pool.clone()).collect()
+            g.iter()
+                .map(|(name, e)| (name.clone(), e.pool.clone(), e.slo_ms))
+                .collect()
+        };
+        // close the live telemetry window; readouts below cover the
+        // retained ring (the last `keep` ticks)
+        self.telemetry.rotate_all();
+        let (tick_no, last_pool, last_fabric) = {
+            let mut st = self.scale_state.lock().unwrap();
+            st.tick += 1;
+            (st.tick, st.last_pool_scale.clone(), st.last_fabric_scale)
         };
         let mut t1_backlog = 0usize;
-        for pool in &pools {
+        // worst p95-vs-SLO pressure across tenants (drives the fabric)
+        let mut worst_ratio: Option<f64> = None;
+        let mut fabric_samples = 0u64;
+        // The fabric may scale on p95 only when *every* tenant declares
+        // an SLO: a no-SLO tenant has no latency signal of its own, and
+        // weighted-fair popping keeps the SLO tenants healthy even
+        // while its backlog diverges — so a mixed deployment must keep
+        // the depth rule for the shared lanes.
+        let mut all_have_slo = !entries.is_empty();
+        let slo_mode = p.mode == ScaleMode::SloP95;
+        for (name, pool, slo_ms) in &entries {
             let depth = pool.queue_depth();
-            let active = pool.active_workers();
-            if depth > p.high_depth_per_worker.saturating_mul(active) {
-                pool.scale_to(active + 1);
-            } else if depth
-                <= p.low_depth_per_worker
-                    .saturating_mul(active.saturating_sub(1))
-            {
-                pool.scale_to(active.saturating_sub(1));
-            }
             t1_backlog += depth;
+            // one windowed-snapshot merge per tenant, and only for
+            // SLO-mode tenants that have an SLO — decide() reads p95
+            // nowhere else
+            let (p95_ms, window_samples) = match self.telemetry.get(name) {
+                Some(t) if slo_mode && slo_ms.is_some() => {
+                    let snap = t.snapshot(Stage::EndToEnd);
+                    (Some(snap.percentile(95.0)), snap.count())
+                }
+                _ => (None, 0),
+            };
+            if slo_ms.is_none() {
+                all_have_slo = false;
+            }
+            if let (Some(p95), Some(slo)) = (p95_ms, *slo_ms) {
+                if slo > 0.0 && window_samples >= p.min_window_samples {
+                    let r = p95 / slo;
+                    worst_ratio = Some(worst_ratio.map_or(r, |w: f64| w.max(r)));
+                    fabric_samples += window_samples;
+                }
+            }
+            let signals = ScaleSignals {
+                depth,
+                active: pool.active_workers(),
+                p95_ms,
+                window_samples,
+                slo_ms: *slo_ms,
+                ticks_since_scale: last_pool.get(name).map(|&l| tick_no - l),
+            };
+            if let Some(n) = p.decide(&signals) {
+                let prev = pool.active_workers();
+                if pool.scale_to(n) != prev {
+                    self.scale_state
+                        .lock()
+                        .unwrap()
+                        .last_pool_scale
+                        .insert(name.clone(), tick_no);
+                }
+            }
         }
+        // The fabric serves every tenant, so its SLO signal is the worst
+        // tenant's p95/SLO ratio mapped onto a synthetic slo of 1.0 —
+        // `decide` then grows lanes whenever any tenant is in breach.
+        // With any no-SLO tenant deployed the synthetic SLO is withheld
+        // and the lanes stay depth-scaled (see `all_have_slo` above).
         let lanes = self.fabric.lane_count();
-        let demand = self.fabric.queue_depth() + t1_backlog;
-        if demand > p.high_depth_per_worker.saturating_mul(lanes) {
-            self.fabric.scale_to(lanes + 1);
-        } else if demand
-            <= p.low_depth_per_worker
-                .saturating_mul(lanes.saturating_sub(1))
-        {
-            self.fabric.scale_to(lanes.saturating_sub(1));
+        let signals = ScaleSignals {
+            depth: self.fabric.queue_depth() + t1_backlog,
+            active: lanes,
+            p95_ms: worst_ratio,
+            window_samples: fabric_samples,
+            slo_ms: (all_have_slo && worst_ratio.is_some()).then_some(1.0),
+            ticks_since_scale: last_fabric.map(|l| tick_no - l),
+        };
+        if let Some(n) = p.decide(&signals) {
+            if self.fabric.scale_to(n) != lanes {
+                self.scale_state.lock().unwrap().last_fabric_scale = Some(tick_no);
+            }
         }
     }
 }
@@ -343,15 +513,26 @@ pub struct Deployment {
     stop: Arc<AtomicBool>,
 }
 
+/// Wall-clock span the windowed telemetry readout targets (ms).  The
+/// hub's retained-window count is derived from the autoscaler tick so
+/// the p95 window covers roughly this much time at any `tick_ms` — a
+/// fixed window *count* would make the readout span (and how long a
+/// finished burst haunts scaling decisions) scale with the tick.
+const TELEMETRY_WINDOW_MS: u64 = 1_000;
+
 impl Deployment {
     /// Create a deployment around a fresh lane fabric.
     pub fn new(fabric_opts: FabricOptions, policy: AutoscalePolicy) -> Self {
+        let keep = (TELEMETRY_WINDOW_MS / policy.tick_ms.max(1)).clamp(5, 200) as usize;
+        let telemetry = Arc::new(TelemetryHub::new(keep));
         Self {
             core: Arc::new(DeploymentCore {
-                fabric: LaneFabric::start(fabric_opts),
+                fabric: LaneFabric::start_with_telemetry(fabric_opts, Some(telemetry.clone())),
                 models: Mutex::new(HashMap::new()),
                 sessions: Mutex::new(HashMap::new()),
                 policy,
+                telemetry,
+                scale_state: Mutex::new(AutoscaleState::default()),
                 next_band: AtomicU64::new(0),
             }),
             pump: None,
@@ -362,7 +543,9 @@ impl Deployment {
     /// Register `model`: attach it to the fabric as a tenant with
     /// `weight` (weighted-fair share of lane capacity) and start its
     /// tier-1 pool attached to the fabric.  Requests must carry
-    /// ciphertexts of exactly `sample_bytes`.
+    /// ciphertexts of exactly `sample_bytes`.  `slo_ms` is the model's
+    /// end-to-end latency objective: the SLO autoscaler holds the
+    /// windowed p95 under it (None = depth-scaled only).
     ///
     /// `sched_factory(band, domain)` builds one worker's scheduler:
     /// `band` is the tenant index this deployment assigns from a
@@ -375,6 +558,7 @@ impl Deployment {
         model: &str,
         sample_bytes: usize,
         weight: f64,
+        slo_ms: Option<f64>,
         pool_opts: PoolOptions,
         sched_factory: S,
         finisher_factory: F,
@@ -398,17 +582,39 @@ impl Deployment {
         // pool is started.
         let handle = self.core.fabric.attach(model, weight, finisher_factory)?;
         let band = self.core.next_band.fetch_add(1, Ordering::SeqCst);
+        let tenant_tel = self.core.telemetry.register(model);
+        let mut pool_opts = pool_opts;
+        if pool_opts.slo_ms <= 0.0 {
+            pool_opts.slo_ms = slo_ms.unwrap_or(0.0);
+        }
         let pool = Arc::new(WorkerPool::start_attached(
             pool_opts,
             move |domain| sched_factory(band, domain),
             handle,
+            Some(tenant_tel),
         ));
         let mut g = self.core.models.lock().unwrap();
         g.insert(
             model.to_string(),
-            ModelEntry { pool, sample_bytes },
+            ModelEntry {
+                pool,
+                sample_bytes,
+                slo_ms,
+            },
         );
         Ok(())
+    }
+
+    /// The deployment's latency telemetry hub (per-tenant, per-stage
+    /// windowed histograms — what the SLO autoscaler reads).
+    pub fn telemetry(&self) -> Arc<TelemetryHub> {
+        self.core.telemetry.clone()
+    }
+
+    /// A model's configured latency objective (ms), if any.
+    pub fn slo_ms(&self, model: &str) -> Option<f64> {
+        let g = self.core.models.lock().unwrap();
+        g.get(model).and_then(|e| e.slo_ms)
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -628,6 +834,75 @@ mod tests {
         assert_eq!(dep.model_count(), 0);
         let m = dep.shutdown();
         assert!(m.models.is_empty());
+    }
+
+    fn signals(depth: usize, active: usize) -> ScaleSignals {
+        ScaleSignals {
+            depth,
+            active,
+            p95_ms: None,
+            window_samples: 0,
+            slo_ms: None,
+            ticks_since_scale: None,
+        }
+    }
+
+    #[test]
+    fn depth_decide_matches_watermarks() {
+        let p = AutoscalePolicy::default(); // high 4, low 1
+        assert_eq!(p.decide(&signals(9, 2)), Some(3), "9 > 4×2 grows");
+        assert_eq!(p.decide(&signals(8, 2)), None, "8 = 4×2 holds");
+        assert_eq!(p.decide(&signals(1, 2)), Some(1), "1 ≤ 1×(2−1) shrinks");
+        assert_eq!(p.decide(&signals(2, 2)), None);
+        assert_eq!(p.decide(&signals(0, 1)), None, "floor: never below 1");
+    }
+
+    #[test]
+    fn slo_decide_scales_on_p95_error_with_depth_fallback() {
+        let p = AutoscalePolicy {
+            mode: ScaleMode::SloP95,
+            min_window_samples: 4,
+            slo_shrink_margin: 0.5,
+            ..AutoscalePolicy::default()
+        };
+        let mut s = signals(0, 2);
+        s.slo_ms = Some(20.0);
+        s.window_samples = 10;
+        s.p95_ms = Some(25.0);
+        assert_eq!(p.decide(&s), Some(3), "p95 over SLO grows");
+        s.p95_ms = Some(15.0);
+        assert_eq!(p.decide(&s), None, "inside SLO, above shrink margin");
+        s.p95_ms = Some(5.0);
+        assert_eq!(p.decide(&s), Some(1), "far under SLO with empty queue shrinks");
+        s.depth = 3;
+        assert_eq!(p.decide(&s), None, "standing backlog blocks the shrink");
+        // cold start: too few samples → depth rule decides
+        s.depth = 9;
+        s.window_samples = 2;
+        s.p95_ms = Some(25.0);
+        assert_eq!(p.decide(&s), Some(3), "depth fallback grows");
+        // no SLO configured → depth rule even in SLO mode
+        let mut s2 = signals(9, 2);
+        s2.window_samples = 100;
+        s2.p95_ms = Some(1.0);
+        assert_eq!(p.decide(&s2), Some(3));
+    }
+
+    #[test]
+    fn cooldown_holds_after_a_scale_event() {
+        let p = AutoscalePolicy {
+            cooldown_ticks: 3,
+            ..AutoscalePolicy::default()
+        };
+        let mut s = signals(100, 2);
+        s.ticks_since_scale = Some(1);
+        assert_eq!(p.decide(&s), None, "inside the cooldown window");
+        s.ticks_since_scale = Some(2);
+        assert_eq!(p.decide(&s), None);
+        s.ticks_since_scale = Some(3);
+        assert_eq!(p.decide(&s), Some(3), "cooldown expired");
+        s.ticks_since_scale = None;
+        assert_eq!(p.decide(&s), Some(3), "never-scaled targets act at once");
     }
 
     #[test]

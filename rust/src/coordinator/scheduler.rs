@@ -204,6 +204,7 @@ impl BatchScheduler {
                 started,
                 home_worker,
                 error: None,
+                artifact_batches: self.artifact_batches.clone(),
             },
             Ok(Tier1Output::Handoff { features, stage }) => Tier2Task {
                 model,
@@ -216,6 +217,7 @@ impl BatchScheduler {
                 started,
                 home_worker,
                 error: None,
+                artifact_batches: self.artifact_batches.clone(),
             },
             Err(e) => Tier2Task {
                 model,
@@ -228,6 +230,7 @@ impl BatchScheduler {
                 started,
                 home_worker,
                 error: Some(format!("{e:#}")),
+                artifact_batches: self.artifact_batches.clone(),
             },
         };
         Ok(vec![task])
@@ -259,6 +262,107 @@ pub struct Tier2Task {
     pub home_worker: usize,
     /// Tier-1 failure, delivered to every request by the finisher.
     pub error: Option<String>,
+    /// Batch sizes the model's stages are exported at (ascending) —
+    /// tail-batch splitting picks sub-batch shapes from it.  Empty means
+    /// "any batch size executes" (test doubles).
+    pub artifact_batches: Vec<usize>,
+}
+
+impl Tier2Task {
+    /// Tail-batch splitting: break this task into chunks of at most
+    /// `max_requests` requests each, so a long tail interleaves with
+    /// other tenants under the fabric's weighted-fair clock instead of
+    /// occupying a lane for its whole batch.
+    ///
+    /// Bit-safety: every tail stage computes samples independently (both
+    /// the reference interpreter and the exported HLO stages are
+    /// per-sample maps over the batch axis), so running a sub-range of
+    /// the feature map at a smaller exported batch size produces exactly
+    /// the bytes the unsplit batch would have produced for those
+    /// requests — pinned by `tests/slo_integration.rs`.  Padding samples
+    /// added to fill a sub-batch shape are discarded, as in the unsplit
+    /// path.
+    ///
+    /// Final tasks (`stage == None`) and failed tasks are never split:
+    /// there is no tail work to chunk.  The tier-1 ledger rides with the
+    /// first chunk only, so merged records never double-count enclave
+    /// time.
+    pub fn split(self, max_requests: usize) -> Vec<Tier2Task> {
+        let n = self.requests.len();
+        if max_requests == 0 || n <= max_requests || self.stage.is_none() || self.error.is_some()
+        {
+            return vec![self];
+        }
+        // Chunks must map onto exported batch shapes: cap the chunk at
+        // the largest exported size so `pick_exported_batch` always
+        // finds one (today redundant — n ≤ exec_batch ≤ largest — but
+        // it keeps the invariant explicit rather than implicit).
+        let max_requests = match self.artifact_batches.last() {
+            Some(&largest) => max_requests.min(largest),
+            None => max_requests,
+        };
+        let per = if self.exec_batch > 0 {
+            self.features.len() / self.exec_batch
+        } else {
+            0
+        };
+        if per == 0 {
+            return vec![self];
+        }
+        let Tier2Task {
+            model,
+            mut requests,
+            exec_batch: _,
+            stage,
+            features,
+            ledger,
+            queue_ms,
+            started,
+            home_worker,
+            error: _,
+            artifact_batches,
+        } = self;
+        let mut out = Vec::with_capacity((n + max_requests - 1) / max_requests);
+        let mut offset = 0usize; // sample offset into the feature map
+        while !requests.is_empty() {
+            let take = requests.len().min(max_requests);
+            let rest = requests.split_off(take);
+            let chunk = std::mem::replace(&mut requests, rest);
+            let sub_exec = pick_exported_batch(&artifact_batches, take);
+            let mut feats = features[offset * per..(offset + take) * per].to_vec();
+            feats.resize(sub_exec * per, 0.0);
+            offset += take;
+            out.push(Tier2Task {
+                model: model.clone(),
+                requests: chunk,
+                exec_batch: sub_exec,
+                stage: stage.clone(),
+                features: feats,
+                ledger: if out.is_empty() {
+                    ledger.clone()
+                } else {
+                    Ledger::new()
+                },
+                queue_ms,
+                started,
+                home_worker,
+                error: None,
+                artifact_batches: artifact_batches.clone(),
+            });
+        }
+        out
+    }
+}
+
+/// Smallest exported batch size ≥ n (n itself when none is exported —
+/// the reference backend and test doubles accept any batch).
+fn pick_exported_batch(batches: &[usize], n: usize) -> usize {
+    for &b in batches {
+        if b >= n {
+            return b;
+        }
+    }
+    n
 }
 
 /// Finishes [`Tier2Task`]s on an open device: runs the tail stage,
@@ -333,14 +437,17 @@ impl Tier2Finisher {
         };
         let sim_ms = total.grand_total_ms();
         let ok = outcome.is_ok();
+        let mut latencies_ms = Vec::with_capacity(n);
         match outcome {
             Ok(probs) => {
                 let per = probs.len() / exec_batch;
                 for (i, r) in requests.iter().enumerate() {
+                    let latency_ms = r.submitted_at.elapsed().as_secs_f64() * 1e3;
+                    latencies_ms.push(latency_ms);
                     let _ = r.reply.send(InferResponse {
                         id: r.id,
                         probs: probs[i * per..(i + 1) * per].to_vec(),
-                        latency_ms: r.submitted_at.elapsed().as_secs_f64() * 1e3,
+                        latency_ms,
                         sim_ms: sim_ms / n as f64,
                         batch: n,
                         error: None,
@@ -350,10 +457,12 @@ impl Tier2Finisher {
             Err(e) => {
                 let msg = format!("{e:#}");
                 for r in &requests {
+                    let latency_ms = r.submitted_at.elapsed().as_secs_f64() * 1e3;
+                    latencies_ms.push(latency_ms);
                     let _ = r.reply.send(InferResponse {
                         id: r.id,
                         probs: vec![],
-                        latency_ms: r.submitted_at.elapsed().as_secs_f64() * 1e3,
+                        latency_ms,
                         sim_ms: 0.0,
                         batch: n,
                         error: Some(msg.clone()),
@@ -371,6 +480,7 @@ impl Tier2Finisher {
             },
             tier2_sim_ms: tier2_ms,
             ok,
+            latencies_ms,
         }
     }
 }
@@ -382,6 +492,9 @@ pub struct FinishOutcome {
     pub tier2_sim_ms: f64,
     /// False when the batch failed (tier-1 or tail error).
     pub ok: bool,
+    /// Client-visible latency of each request in the batch at reply
+    /// time (wall ms) — the samples SLO telemetry records.
+    pub latencies_ms: Vec<f64>,
 }
 
 #[cfg(test)]
@@ -549,6 +662,90 @@ mod tests {
         for c in chans {
             assert!(c.recv().unwrap().error.is_none());
         }
+    }
+
+    #[test]
+    fn split_chunks_requests_and_feature_map_consistently() {
+        // A tiered 8-request task over a 2-wide feature map splits into
+        // 3-request chunks whose features are the matching sample rows.
+        let mut reqs = Vec::new();
+        let mut chans = Vec::new();
+        for i in 0..8 {
+            let (r, c) = req(i);
+            reqs.push(r);
+            chans.push(c);
+        }
+        let features: Vec<f32> = (0..16).map(|v| v as f32).collect(); // 8 samples × 2
+        let task = Tier2Task {
+            model: "m".into(),
+            requests: reqs,
+            exec_batch: 8,
+            stage: Some("tail_p02".into()),
+            features,
+            ledger: {
+                let mut l = Ledger::new();
+                l.add_measured(crate::enclave::cost::Cat::Blind, 2_000_000);
+                l
+            },
+            queue_ms: 1.5,
+            started: Instant::now(),
+            home_worker: 4,
+            error: None,
+            artifact_batches: vec![1, 2, 4, 8],
+        };
+        let parts = task.split(3);
+        assert_eq!(parts.len(), 3, "8 requests at chunk 3 → 3+3+2");
+        assert_eq!(parts[0].requests.len(), 3);
+        assert_eq!(parts[1].requests.len(), 3);
+        assert_eq!(parts[2].requests.len(), 2);
+        // sub-batches round up to exported sizes, features padded to fit
+        assert_eq!(parts[0].exec_batch, 4);
+        assert_eq!(parts[0].features.len(), 8);
+        assert_eq!(&parts[0].features[..6], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(&parts[0].features[6..], &[0.0, 0.0], "padding is zeroed");
+        assert_eq!(&parts[1].features[..6], &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(parts[2].exec_batch, 2);
+        assert_eq!(&parts[2].features[..], &[12.0, 13.0, 14.0, 15.0]);
+        // request order preserved end to end
+        let ids: Vec<u64> = parts.iter().flat_map(|p| p.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<u64>>());
+        // tier-1 ledger rides with the first chunk only
+        assert!(parts[0].ledger.grand_total_ms() > 0.0);
+        assert_eq!(parts[1].ledger.grand_total_ms(), 0.0);
+        assert_eq!(parts[2].ledger.grand_total_ms(), 0.0);
+        for p in &parts {
+            assert_eq!(p.stage.as_deref(), Some("tail_p02"));
+            assert_eq!(p.home_worker, 4);
+            assert_eq!(p.queue_ms, 1.5);
+        }
+    }
+
+    #[test]
+    fn split_leaves_small_final_and_failed_tasks_alone() {
+        let mut s = sched(false);
+        let (r1, _c1) = req(1);
+        let (r2, _c2) = req(2);
+        let tasks = s.execute_tier1(vec![r1, r2], 0).unwrap();
+        let task = tasks.into_iter().next().unwrap();
+        assert!(task.stage.is_none(), "fake strategy yields Final tasks");
+        let parts = task.split(1);
+        assert_eq!(parts.len(), 1, "Final tasks are never split");
+
+        let mut s = sched(true);
+        let (r1, _c1) = req(1);
+        let (r2, _c2) = req(2);
+        let tasks = s.execute_tier1(vec![r1, r2], 0).unwrap();
+        let task = tasks.into_iter().next().unwrap();
+        assert!(task.error.is_some());
+        let parts = task.split(1);
+        assert_eq!(parts.len(), 1, "failed tasks are never split");
+
+        // chunk 0 disables splitting outright
+        let mut s = sched(false);
+        let (r1, _c1) = req(1);
+        let tasks = s.execute_tier1(vec![r1], 0).unwrap();
+        let parts = tasks.into_iter().next().unwrap().split(0);
+        assert_eq!(parts.len(), 1);
     }
 
     #[test]

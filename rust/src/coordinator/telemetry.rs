@@ -1,0 +1,511 @@
+//! Per-tenant, per-stage latency telemetry: lock-free histograms with
+//! windowed percentile readout.
+//!
+//! The SLO autoscaler needs *latency* signals, not just queue depth — a
+//! hot tenant's tier-2 tail can park a cold tenant's batch behind it and
+//! blow p95 without depth ever crossing a threshold.  This module gives
+//! every tenant a histogram per pipeline stage:
+//!
+//! - [`Stage::Tier1`]     — enclave-side batch execution (blind,
+//!   non-linear layers, unblind), on the simulated timeline.
+//! - [`Stage::QueueWait`] — wall time a tier-2 task spent queued in the
+//!   shared lane fabric before a lane popped it.
+//! - [`Stage::Tier2`]     — the open-device tail itself (simulated).
+//! - [`Stage::EndToEnd`]  — client-visible request latency (wall), the
+//!   number SLOs are written against.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Cheap recording.**  `record` is a single atomic `fetch_add` on a
+//!    log-spaced bucket — no locks, no allocation — so it can sit on the
+//!    per-request hot path of every lane and worker.
+//! 2. **Order-independent merging.**  Histograms are bucket-count
+//!    vectors; merging worker shards is commutative addition, so readout
+//!    never depends on which lane flushed first (pinned by a test).
+//! 3. **Windowed readout.**  Percentiles answer "p95 over the last few
+//!    ticks", not "since boot": the autoscaler rotates the live buckets
+//!    into a short ring each tick and reads the union, so a morning
+//!    burst cannot haunt the afternoon's scaling decisions.
+//!
+//! Buckets are geometric: [`SUB_BUCKETS`] buckets per octave starting at
+//! [`MIN_MS`], so any quantile estimate is within one bucket (a factor
+//! of 2^(1/SUB_BUCKETS)) of the exact sample quantile — also pinned by a
+//! test against a known synthetic distribution.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Histogram bucket count (covers ~1 µs .. ~50 min at 2 buckets/octave).
+pub const BUCKETS: usize = 64;
+/// Geometric sub-buckets per octave (resolution = 2^(1/SUB_BUCKETS) ≈
+/// 1.41x per bucket).
+pub const SUB_BUCKETS: usize = 2;
+/// Lower bound of bucket 0 (ms).
+pub const MIN_MS: f64 = 0.001;
+
+/// Bucket index for a latency in ms (clamped to the histogram range).
+pub fn bucket_index(ms: f64) -> usize {
+    if !(ms > MIN_MS) {
+        return 0; // also catches NaN and non-positive values
+    }
+    let i = ((ms / MIN_MS).log2() * SUB_BUCKETS as f64).floor() as isize;
+    i.clamp(0, BUCKETS as isize - 1) as usize
+}
+
+/// Inclusive-lower / exclusive-upper bounds of a bucket (ms).
+pub fn bucket_bounds(i: usize) -> (f64, f64) {
+    let lo = MIN_MS * 2f64.powf(i as f64 / SUB_BUCKETS as f64);
+    let hi = MIN_MS * 2f64.powf((i + 1) as f64 / SUB_BUCKETS as f64);
+    (lo, hi)
+}
+
+/// Representative value reported for a bucket: its geometric midpoint.
+fn bucket_value(i: usize) -> f64 {
+    MIN_MS * 2f64.powf((i as f64 + 0.5) / SUB_BUCKETS as f64)
+}
+
+/// Pipeline stage a latency sample is attributed to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Enclave-side tier-1 execution (simulated ms per batch).
+    Tier1,
+    /// Wall time queued in the fabric's fair queue.
+    QueueWait,
+    /// Open-device tier-2 tail execution (simulated ms per batch).
+    Tier2,
+    /// Client-visible end-to-end request latency (wall ms).
+    EndToEnd,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] = [
+        Stage::Tier1,
+        Stage::QueueWait,
+        Stage::Tier2,
+        Stage::EndToEnd,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Tier1 => "tier1",
+            Stage::QueueWait => "queue_wait",
+            Stage::Tier2 => "tier2",
+            Stage::EndToEnd => "e2e",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Stage::Tier1 => 0,
+            Stage::QueueWait => 1,
+            Stage::Tier2 => 2,
+            Stage::EndToEnd => 3,
+        }
+    }
+}
+
+/// Lock-free latency histogram: log-spaced atomic bucket counters.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    /// Sum in nanoseconds (for means).
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (ms).  Lock-free; safe on any hot path.
+    pub fn record(&self, ms: f64) {
+        self.buckets[bucket_index(ms)].fetch_add(1, Ordering::Relaxed);
+        let ns = (ms.max(0.0) * 1e6) as u64;
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Samples recorded (derived from the buckets, so it stays exact
+    /// across concurrent `drain` rotations).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Copy the current counts out (concurrent records may land on
+    /// either side; that is fine for a monitoring snapshot).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(&self.buckets) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            counts,
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drain the counters into a snapshot (window rotation).
+    pub fn drain(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(&self.buckets) {
+            *dst = src.swap(0, Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            counts,
+            sum_ns: self.sum_ns.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned bucket-count view; merging is commutative addition.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    counts: [u64; BUCKETS],
+    sum_ns: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> Self {
+        Self {
+            counts: [0u64; BUCKETS],
+            sum_ns: 0,
+        }
+    }
+
+    /// Merge another shard's counts in (order-independent by
+    /// construction: addition commutes).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum_ns += other.sum_ns;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / 1e6 / n as f64
+        }
+    }
+
+    /// Quantile estimate (q in [0, 100]): the geometric midpoint of the
+    /// bucket holding the q-th sample — within one bucket of the exact
+    /// sample quantile by construction.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_value(i);
+            }
+        }
+        bucket_value(BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// A live histogram plus a short ring of rotated windows.  Recording
+/// touches only the live atomics; `rotate` (autoscaler cadence) shifts
+/// the live counts into the ring so readouts cover "the last
+/// `keep`+1 windows", not all of history.
+pub struct WindowedHistogram {
+    live: LatencyHistogram,
+    windows: Mutex<Vec<HistogramSnapshot>>,
+    keep: usize,
+}
+
+impl WindowedHistogram {
+    pub fn new(keep: usize) -> Self {
+        Self {
+            live: LatencyHistogram::new(),
+            windows: Mutex::new(Vec::new()),
+            keep: keep.max(1),
+        }
+    }
+
+    /// Record one sample (ms) into the live window.  Lock-free.
+    pub fn record(&self, ms: f64) {
+        self.live.record(ms);
+    }
+
+    /// Close the live window: drain it into the ring, dropping windows
+    /// beyond the retention depth.
+    pub fn rotate(&self) {
+        let snap = self.live.drain();
+        let mut g = self.windows.lock().unwrap();
+        g.push(snap);
+        let len = g.len();
+        if len > self.keep {
+            g.drain(0..len - self.keep);
+        }
+    }
+
+    /// Union of the live window and the retained ring.
+    pub fn window_snapshot(&self) -> HistogramSnapshot {
+        let mut acc = self.live.snapshot();
+        let g = self.windows.lock().unwrap();
+        for w in g.iter() {
+            acc.merge(w);
+        }
+        acc
+    }
+
+    /// Samples currently visible in the readout window.
+    pub fn window_count(&self) -> u64 {
+        self.window_snapshot().count()
+    }
+}
+
+/// One tenant's per-stage windowed histograms.
+pub struct TenantTelemetry {
+    stages: [WindowedHistogram; 4],
+}
+
+impl TenantTelemetry {
+    fn new(keep: usize) -> Self {
+        Self {
+            stages: std::array::from_fn(|_| WindowedHistogram::new(keep)),
+        }
+    }
+
+    /// Record a latency sample for one stage.  Lock-free.
+    pub fn record(&self, stage: Stage, ms: f64) {
+        self.stages[stage.idx()].record(ms);
+    }
+
+    /// Windowed percentile for a stage (0.0 when no samples).
+    pub fn percentile(&self, stage: Stage, q: f64) -> f64 {
+        self.stages[stage.idx()].window_snapshot().percentile(q)
+    }
+
+    /// Windowed snapshot of one stage.
+    pub fn snapshot(&self, stage: Stage) -> HistogramSnapshot {
+        self.stages[stage.idx()].window_snapshot()
+    }
+
+    /// Samples visible in a stage's readout window.
+    pub fn window_count(&self, stage: Stage) -> u64 {
+        self.stages[stage.idx()].window_count()
+    }
+
+    fn rotate(&self) {
+        for s in &self.stages {
+            s.rotate();
+        }
+    }
+}
+
+/// Deployment-wide registry: one [`TenantTelemetry`] per model, shared
+/// by reference with every lane and worker that records into it.
+pub struct TelemetryHub {
+    tenants: Mutex<HashMap<String, Arc<TenantTelemetry>>>,
+    keep_windows: usize,
+}
+
+impl Default for TelemetryHub {
+    fn default() -> Self {
+        // 50 windows at the default 20 ms autoscaler tick ≈ a 1 s
+        // sliding readout window.
+        Self::new(50)
+    }
+}
+
+impl TelemetryHub {
+    pub fn new(keep_windows: usize) -> Self {
+        Self {
+            tenants: Mutex::new(HashMap::new()),
+            keep_windows: keep_windows.max(1),
+        }
+    }
+
+    /// Get-or-create a tenant's telemetry (idempotent).
+    pub fn register(&self, model: &str) -> Arc<TenantTelemetry> {
+        let mut g = self.tenants.lock().unwrap();
+        g.entry(model.to_string())
+            .or_insert_with(|| Arc::new(TenantTelemetry::new(self.keep_windows)))
+            .clone()
+    }
+
+    /// Look a tenant up without creating it.
+    pub fn get(&self, model: &str) -> Option<Arc<TenantTelemetry>> {
+        self.tenants.lock().unwrap().get(model).cloned()
+    }
+
+    /// Registered tenant names (sorted).
+    pub fn tenants(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.tenants.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Close every tenant's live window (autoscaler tick cadence).
+    pub fn rotate_all(&self) {
+        let tenants: Vec<Arc<TenantTelemetry>> =
+            self.tenants.lock().unwrap().values().cloned().collect();
+        for t in tenants {
+            t.rotate();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_index_monotone_and_bounded() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(1e12), BUCKETS - 1);
+        let mut prev = 0;
+        for i in 0..200 {
+            let ms = 0.001 * 1.5f64.powi(i);
+            let b = bucket_index(ms);
+            assert!(b >= prev, "bucket index must be monotone in ms");
+            prev = b;
+        }
+        // bounds are consistent with the index
+        for i in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo < hi);
+            let mid = (lo * hi).sqrt();
+            assert_eq!(bucket_index(mid), i, "midpoint of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn merge_is_order_independent_across_workers() {
+        // Three "workers" record disjoint sample streams; merging their
+        // snapshots in any order must give identical counts and
+        // percentiles (bucket addition commutes).
+        let shards: Vec<LatencyHistogram> =
+            (0..3).map(|_| LatencyHistogram::new()).collect();
+        let mut rng = Rng::new(42);
+        for (w, h) in shards.iter().enumerate() {
+            for _ in 0..500 {
+                let ms = rng.range_f32(0.1 * (w + 1) as f32, 50.0 * (w + 1) as f32);
+                h.record(ms as f64);
+            }
+        }
+        let snaps: Vec<HistogramSnapshot> = shards.iter().map(|h| h.snapshot()).collect();
+        let orders: [[usize; 3]; 3] = [[0, 1, 2], [2, 0, 1], [1, 2, 0]];
+        let merged: Vec<HistogramSnapshot> = orders
+            .iter()
+            .map(|ord| {
+                let mut acc = HistogramSnapshot::empty();
+                for &i in ord {
+                    acc.merge(&snaps[i]);
+                }
+                acc
+            })
+            .collect();
+        for m in &merged[1..] {
+            assert_eq!(m.count(), merged[0].count());
+            for q in [50.0, 95.0, 99.0] {
+                assert_eq!(m.percentile(q), merged[0].percentile(q), "q={q}");
+            }
+        }
+        assert_eq!(merged[0].count(), 1500);
+    }
+
+    #[test]
+    fn p95_of_known_distribution_lands_within_one_bucket_of_truth() {
+        // 1..=1000 ms uniform: the exact sample p95 is 950 ms.  The
+        // histogram's estimate must land in the truth's bucket ± one.
+        let h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 1000);
+        let truth = 950.0;
+        let est = snap.p95();
+        let diff = (bucket_index(est) as i64 - bucket_index(truth) as i64).abs();
+        assert!(
+            diff <= 1,
+            "p95 estimate {est:.1}ms (bucket {}) vs truth {truth}ms (bucket {})",
+            bucket_index(est),
+            bucket_index(truth)
+        );
+        // and the p50 likewise
+        let est50 = snap.p50();
+        let diff50 = (bucket_index(est50) as i64 - bucket_index(500.0) as i64).abs();
+        assert!(diff50 <= 1, "p50 estimate {est50:.1}ms");
+    }
+
+    #[test]
+    fn windowed_rotation_expires_old_samples() {
+        let w = WindowedHistogram::new(2);
+        w.record(100.0);
+        assert_eq!(w.window_count(), 1);
+        w.rotate(); // window -1
+        w.record(1.0);
+        w.rotate(); // window -2
+        assert_eq!(w.window_count(), 2, "both windows retained");
+        w.rotate(); // 100ms sample falls off the ring
+        w.rotate();
+        assert_eq!(w.window_count(), 0, "old windows expired");
+        w.record(5.0);
+        assert_eq!(w.window_count(), 1);
+    }
+
+    #[test]
+    fn hub_registers_and_rotates_tenants() {
+        let hub = TelemetryHub::new(4);
+        let a = hub.register("sim8");
+        let a2 = hub.register("sim8");
+        assert!(Arc::ptr_eq(&a, &a2), "register is idempotent");
+        a.record(Stage::EndToEnd, 10.0);
+        a.record(Stage::Tier1, 3.0);
+        assert_eq!(a.window_count(Stage::EndToEnd), 1);
+        assert!(hub.get("missing").is_none());
+        assert_eq!(hub.tenants(), vec!["sim8".to_string()]);
+        hub.rotate_all();
+        assert_eq!(
+            a.window_count(Stage::EndToEnd),
+            1,
+            "rotation keeps the sample in the readout window"
+        );
+        let p = a.percentile(Stage::EndToEnd, 95.0);
+        let diff = (bucket_index(p) as i64 - bucket_index(10.0) as i64).abs();
+        assert!(diff <= 1, "p95 {p} vs 10ms");
+    }
+}

@@ -1,7 +1,10 @@
-//! Benchmark + property-test harnesses (criterion / proptest substitutes).
+//! Benchmark + property-test + serving-simulation harnesses (criterion
+//! / proptest / discrete-event-sim substitutes).
 
 pub mod bench;
 pub mod prop;
+pub mod sim;
 
 pub use bench::{Bench, BenchResult};
 pub use prop::forall;
+pub use sim::{exact_percentile, replay, sim_seed, SimClock, SimConfig, SimResult, Trace};

@@ -216,6 +216,118 @@ mod tests {
         );
     }
 
+    /// Weighted-fair service bound, with and without tail splitting:
+    /// while every tenant stays backlogged, no tenant's served request
+    /// share may drift below its weight-proportional entitlement minus
+    /// the discretization bound of the classic WFQ argument —
+    /// `(w/W)·(n−1)·c_max`, i.e. at most one max-size task per *other*
+    /// tenant, share-scaled (for two tenants: one max task).  Splitting
+    /// shrinks `c_max` to the chunk size, so the same property must
+    /// hold with a strictly *tighter* bound — which is exactly why
+    /// tail-batch splitting bounds cross-tenant tail latency.
+    #[test]
+    fn fair_clock_share_never_drifts_below_weighted_minimum() {
+        use crate::coordinator::fabric::FairClock;
+        use std::collections::VecDeque;
+
+        struct Case {
+            weights: Vec<f64>,
+            /// tasks[t] = request counts of tenant t's queued tasks
+            /// (service cost ∝ requests, as in the live fair queue).
+            tasks: Vec<Vec<u32>>,
+            chunk: usize,
+        }
+        impl std::fmt::Debug for Case {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(
+                    f,
+                    "Case(weights={:?}, tasks={:?}, chunk={})",
+                    self.weights, self.tasks, self.chunk
+                )
+            }
+        }
+
+        /// Drain the clock while all tenants are backlogged, checking
+        /// the service bound after every pop.  `chunk == 0` = unsplit.
+        fn run(c: &Case, chunk: usize) -> Result<(), String> {
+            let n = c.weights.len();
+            let names: Vec<String> = (0..n).map(|i| format!("t{i}")).collect();
+            let mut clock = FairClock::new();
+            let mut queues: Vec<VecDeque<f64>> = vec![VecDeque::new(); n];
+            let mut c_max = 0.0f64;
+            for (i, tasks) in c.tasks.iter().enumerate() {
+                clock.register(&names[i], c.weights[i]);
+                for &req in tasks {
+                    let mut left = req as usize;
+                    let take_max = if chunk == 0 { left } else { chunk };
+                    while left > 0 {
+                        let take = left.min(take_max);
+                        left -= take;
+                        clock.on_enqueue(&names[i]);
+                        queues[i].push_back(take as f64);
+                        c_max = c_max.max(take as f64);
+                    }
+                }
+            }
+            let total_w: f64 = c.weights.iter().sum();
+            let mut served = vec![0.0f64; n];
+            let mut total = 0.0f64;
+            loop {
+                if queues.iter().any(|q| q.is_empty()) {
+                    return Ok(()); // a tenant drained; backlog phase over
+                }
+                let name = clock
+                    .pick()
+                    .ok_or_else(|| "clock lost the backlog".to_string())?;
+                let idx = names
+                    .iter()
+                    .position(|m| *m == name)
+                    .ok_or_else(|| "unknown tenant picked".to_string())?;
+                let cost = queues[idx].pop_front().unwrap();
+                clock.on_dequeue(&name, cost);
+                served[idx] += cost;
+                total += cost;
+                for j in 0..n {
+                    let share = c.weights[j] / total_w;
+                    let entitled = share * total - share * (n as f64 - 1.0) * c_max;
+                    if served[j] < entitled - 1e-9 {
+                        return Err(format!(
+                            "tenant {j} served {} < entitled {entitled:.3} \
+                             (total {total}, c_max {c_max}, chunk {chunk})",
+                            served[j]
+                        ));
+                    }
+                }
+            }
+        }
+
+        forall(
+            60,
+            2026,
+            |rng: &mut Rng, s: Size| {
+                let n = 2 + rng.below(3) as usize;
+                let weights: Vec<f64> =
+                    (0..n).map(|_| 0.5 + rng.below(8) as f64 * 0.5).collect();
+                let tasks: Vec<Vec<u32>> = (0..n)
+                    .map(|_| {
+                        let k = 3 + rng.below((s.0 as u32).min(8) + 1) as usize;
+                        (0..k).map(|_| 1 + rng.below(8)).collect()
+                    })
+                    .collect();
+                let chunk = 1 + rng.below(3) as usize;
+                Case {
+                    weights,
+                    tasks,
+                    chunk,
+                }
+            },
+            |c: &Case| {
+                run(c, 0)?; // unsplit: bound with c_max = biggest task
+                run(c, c.chunk) // split: same property, tighter c_max
+            },
+        );
+    }
+
     #[test]
     fn deterministic_given_seed() {
         use std::sync::Mutex;

@@ -1,0 +1,563 @@
+//! Deterministic serving-simulation harness.
+//!
+//! The serving stack's latency behavior (fair queueing, tail-batch
+//! splitting, SLO autoscaling) must be testable without wall-clock
+//! sleeps or thread-wakeup races.  This module replays *scripted
+//! arrival traces* of tier-2 work through the exact production policy
+//! code — the fabric's [`FairClock`] and the router's
+//! [`AutoscalePolicy::decide`] — on a simulated timeline:
+//!
+//! - [`SimClock`] — the simulated wall clock (ms).
+//! - [`Trace`] — scripted or seeded (Poisson / periodic) arrivals of
+//!   batched tier-2 tasks, tagged per tenant with request counts and
+//!   simulated costs.
+//! - [`replay`] — a discrete-event replay over a fleet of lanes: fair
+//!   pops, optional tail-batch splitting, optional autoscaling, exact
+//!   per-request latencies and a provisioned lane-seconds integral (the
+//!   over-provisioning metric `benches/fig16_slo_autoscale.rs` reports).
+//!
+//! Everything is a pure function of the trace and configuration, so
+//! tests assert exact latency distributions; the fixed seed used by CI
+//! comes from [`sim_seed`] (`ORIGAMI_SIM_SEED` overrides it).
+
+use crate::coordinator::fabric::FairClock;
+use crate::coordinator::router::{AutoscalePolicy, ScaleSignals};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+/// The fixed seed the simulation tests run under; `ORIGAMI_SIM_SEED`
+/// overrides it (the `make test-sim` target pins it explicitly).
+pub fn sim_seed() -> u64 {
+    std::env::var("ORIGAMI_SIM_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2019)
+}
+
+/// Simulated wall clock (milliseconds since replay start).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimClock {
+    now_ms: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    /// Advance to an absolute time (monotone; earlier times are no-ops).
+    pub fn advance_to(&mut self, t_ms: f64) -> f64 {
+        let dt = (t_ms - self.now_ms).max(0.0);
+        self.now_ms += dt;
+        dt
+    }
+
+    pub fn advance_by(&mut self, dt_ms: f64) {
+        self.now_ms += dt_ms.max(0.0);
+    }
+}
+
+/// One scripted arrival: a batched tier-2 task entering the fair queue.
+#[derive(Debug, Clone)]
+pub struct SimArrival {
+    pub at_ms: f64,
+    pub tenant: String,
+    /// Requests riding in the batch (fair pops charge by this).
+    pub requests: usize,
+    /// Simulated service cost of the whole batch on one lane (ms).
+    pub cost_ms: f64,
+}
+
+/// A scripted arrival trace (kept sorted by arrival time).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    arrivals: Vec<SimArrival>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at_ms: f64, tenant: &str, requests: usize, cost_ms: f64) {
+        self.arrivals.push(SimArrival {
+            at_ms,
+            tenant: tenant.to_string(),
+            requests: requests.max(1),
+            cost_ms: cost_ms.max(0.0),
+        });
+    }
+
+    /// Append `count` arrivals every `period_ms` starting at `start_ms`.
+    pub fn push_periodic(
+        &mut self,
+        tenant: &str,
+        start_ms: f64,
+        period_ms: f64,
+        count: usize,
+        requests: usize,
+        cost_ms: f64,
+    ) {
+        for i in 0..count {
+            self.push(start_ms + i as f64 * period_ms, tenant, requests, cost_ms);
+        }
+    }
+
+    /// Append a seeded Poisson stream: `count` arrivals at `rate_per_s`,
+    /// starting at `start_ms` (deterministic given the Rng state).
+    pub fn push_poisson(
+        &mut self,
+        rng: &mut Rng,
+        tenant: &str,
+        start_ms: f64,
+        rate_per_s: f64,
+        count: usize,
+        requests: usize,
+        cost_ms: f64,
+    ) {
+        let mut t = start_ms;
+        for _ in 0..count {
+            t += rng.exp(rate_per_s.max(1e-9)) * 1e3;
+            self.push(t, tenant, requests, cost_ms);
+        }
+    }
+
+    /// Arrivals in time order (stable for ties: insertion order).
+    pub fn sorted(&self) -> Vec<SimArrival> {
+        let mut v = self.arrivals.clone();
+        v.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap());
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Total requests across the trace.
+    pub fn total_requests(&self) -> usize {
+        self.arrivals.iter().map(|a| a.requests).sum()
+    }
+}
+
+/// Replay configuration: tenants, lanes, splitting, autoscaling.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// (tenant, weighted-fair share) — tenants absent from the list
+    /// default to weight 1.
+    pub weights: Vec<(String, f64)>,
+    /// Starting (and autoscale-floor) lane count.
+    pub lanes: usize,
+    /// Autoscale ceiling (0 → pinned at `lanes`).
+    pub max_lanes: usize,
+    /// Tail-batch splitting chunk (requests); 0 = splitting off.
+    pub split_chunk: usize,
+    /// Autoscaler (None = fixed lane fleet).  `decide` runs every
+    /// `policy.tick_ms` of simulated time with the same signals the
+    /// deployment tick computes.
+    pub policy: Option<AutoscalePolicy>,
+    /// The SLO handed to the policy's signals (ms).
+    pub slo_ms: Option<f64>,
+    /// Sliding telemetry window the simulated p95 is computed over (ms).
+    pub window_ms: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            weights: Vec::new(),
+            lanes: 1,
+            max_lanes: 0,
+            split_chunk: 0,
+            policy: None,
+            slo_ms: None,
+            window_ms: 100.0,
+        }
+    }
+}
+
+/// One served request's latency sample.
+#[derive(Debug, Clone)]
+pub struct SimSample {
+    pub tenant: String,
+    pub arrival_ms: f64,
+    pub done_ms: f64,
+    pub latency_ms: f64,
+}
+
+/// Exact sample percentile (q in [0, 100]) — sorts in place and ranks
+/// by `ceil(q·n)` (nearest-rank rule).  One definition shared by the
+/// result readout and the replay's autoscaler signal, so the simulated
+/// scaling decisions and the reported percentiles can never diverge.
+pub fn exact_percentile(values: &mut [f64], q: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q / 100.0) * values.len() as f64).ceil().max(1.0) as usize;
+    values[rank.min(values.len()) - 1]
+}
+
+/// What a replay produced.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Per-*request* latency samples (a chunk of n requests yields n
+    /// identical samples — every rider completes with its chunk).
+    pub samples: Vec<SimSample>,
+    /// ∫ provisioned-lanes dt over the replay, in lane-seconds — the
+    /// capacity bill (over-provisioning metric).
+    pub lane_seconds: f64,
+    pub peak_lanes: usize,
+    pub scale_events: u64,
+    /// When the last chunk finished (ms).
+    pub end_ms: f64,
+}
+
+impl SimResult {
+    /// Exact latency percentile over (optionally one tenant's) samples.
+    pub fn percentile(&self, tenant: Option<&str>, q: f64) -> f64 {
+        let mut lat: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|s| tenant.map(|t| s.tenant == t).unwrap_or(true))
+            .map(|s| s.latency_ms)
+            .collect();
+        exact_percentile(&mut lat, q)
+    }
+
+    pub fn p95(&self, tenant: Option<&str>) -> f64 {
+        self.percentile(tenant, 95.0)
+    }
+
+    pub fn count(&self, tenant: Option<&str>) -> usize {
+        self.samples
+            .iter()
+            .filter(|s| tenant.map(|t| s.tenant == t).unwrap_or(true))
+            .count()
+    }
+
+    /// Per-tenant served request counts.
+    pub fn served_by_tenant(&self) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for s in &self.samples {
+            *m.entry(s.tenant.clone()).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+/// A queued chunk (post-split unit of lane work).
+#[derive(Debug, Clone)]
+struct Chunk {
+    arrival_ms: f64,
+    requests: usize,
+    cost_ms: f64,
+}
+
+/// Discrete-event replay of a trace through fair lanes (see module
+/// docs).  Deterministic: a pure function of `cfg` and `trace`.
+pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
+    let arrivals = trace.sorted();
+    let min_lanes = cfg.lanes.max(1);
+    let max_lanes = if cfg.max_lanes == 0 {
+        min_lanes
+    } else {
+        cfg.max_lanes.max(min_lanes)
+    };
+
+    let mut clock = SimClock::new();
+    let mut fair = FairClock::new();
+    for (tenant, w) in &cfg.weights {
+        fair.register(tenant, *w);
+    }
+    let mut queues: BTreeMap<String, VecDeque<Chunk>> = BTreeMap::new();
+    let mut queued_chunks = 0usize;
+
+    // lane l is busy until free_at[l]; only lanes < desired take work
+    let mut free_at = vec![0.0f64; max_lanes];
+    let mut desired = min_lanes;
+    let mut peak_lanes = desired;
+    let mut scale_events = 0u64;
+    let mut lane_seconds = 0.0f64;
+    let mut end_ms = 0.0f64;
+
+    let mut samples: Vec<SimSample> = Vec::with_capacity(trace.total_requests());
+    // completed-sample cursor for the sliding p95 window (samples are
+    // appended in assignment order, not completion order, so the window
+    // scan filters by done_ms)
+    let tick_ms = cfg.policy.as_ref().map(|p| p.tick_ms.max(1) as f64);
+    let mut next_tick = tick_ms.unwrap_or(f64::INFINITY);
+    let mut tick_no = 0u64;
+    let mut last_scale_tick: Option<u64> = None;
+
+    let mut idx = 0usize; // next arrival
+    loop {
+        // 1. assign queued chunks to free lanes, fair order
+        loop {
+            let Some(tenant) = fair.pick() else { break };
+            let lane = (0..desired)
+                .filter(|&l| free_at[l] <= clock.now_ms())
+                .min_by(|&a, &b| {
+                    free_at[a]
+                        .partial_cmp(&free_at[b])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+            let Some(lane) = lane else { break };
+            let chunk = queues
+                .get_mut(&tenant)
+                .and_then(|q| q.pop_front())
+                .expect("fair clock and queues agree");
+            fair.on_dequeue(&tenant, chunk.requests as f64);
+            queued_chunks -= 1;
+            let done = clock.now_ms() + chunk.cost_ms;
+            free_at[lane] = done;
+            end_ms = end_ms.max(done);
+            for _ in 0..chunk.requests {
+                samples.push(SimSample {
+                    tenant: tenant.clone(),
+                    arrival_ms: chunk.arrival_ms,
+                    done_ms: done,
+                    latency_ms: done - chunk.arrival_ms,
+                });
+            }
+        }
+
+        // 2. next event: arrival, lane becoming free, autoscaler tick
+        let mut next = f64::INFINITY;
+        if idx < arrivals.len() {
+            next = next.min(arrivals[idx].at_ms);
+        }
+        if queued_chunks > 0 {
+            for l in 0..desired {
+                if free_at[l] > clock.now_ms() {
+                    next = next.min(free_at[l]);
+                }
+            }
+        }
+        let work_pending = idx < arrivals.len()
+            || queued_chunks > 0
+            || free_at[..desired].iter().any(|&f| f > clock.now_ms());
+        if tick_ms.is_some() && work_pending {
+            next = next.min(next_tick);
+        }
+        if !next.is_finite() {
+            break;
+        }
+
+        // 3. advance, billing provisioned capacity
+        let dt = clock.advance_to(next);
+        lane_seconds += desired as f64 * dt / 1e3;
+
+        // 4. admit arrivals (splitting applied before the fair queue,
+        //    exactly like FabricHandle::submit)
+        while idx < arrivals.len() && arrivals[idx].at_ms <= clock.now_ms() {
+            let a = &arrivals[idx];
+            idx += 1;
+            let chunk_req = if cfg.split_chunk > 0 && a.requests > cfg.split_chunk {
+                cfg.split_chunk
+            } else {
+                a.requests
+            };
+            let per_req_cost = a.cost_ms / a.requests as f64;
+            let mut left = a.requests;
+            while left > 0 {
+                let take = left.min(chunk_req);
+                left -= take;
+                fair.on_enqueue(&a.tenant);
+                queues.entry(a.tenant.clone()).or_default().push_back(Chunk {
+                    arrival_ms: a.at_ms,
+                    requests: take,
+                    cost_ms: per_req_cost * take as f64,
+                });
+                queued_chunks += 1;
+            }
+        }
+
+        // 5. autoscaler tick (same signals + decision rule as the
+        //    deployment's tick)
+        if let (Some(policy), Some(t)) = (&cfg.policy, tick_ms) {
+            while next_tick <= clock.now_ms() {
+                tick_no += 1;
+                let now = clock.now_ms();
+                let window_lo = now - cfg.window_ms;
+                let mut lat: Vec<f64> = samples
+                    .iter()
+                    .filter(|s| s.done_ms <= now && s.done_ms > window_lo)
+                    .map(|s| s.latency_ms)
+                    .collect();
+                let p95 = if lat.is_empty() {
+                    None
+                } else {
+                    Some(exact_percentile(&mut lat, 95.0))
+                };
+                let signals = ScaleSignals {
+                    depth: queued_chunks,
+                    active: desired,
+                    p95_ms: p95,
+                    window_samples: lat.len() as u64,
+                    slo_ms: cfg.slo_ms,
+                    ticks_since_scale: last_scale_tick.map(|l| tick_no - l),
+                };
+                if let Some(n) = policy.decide(&signals) {
+                    let n = n.clamp(min_lanes, max_lanes);
+                    if n != desired {
+                        desired = n;
+                        peak_lanes = peak_lanes.max(n);
+                        scale_events += 1;
+                        last_scale_tick = Some(tick_no);
+                    }
+                }
+                next_tick += t;
+            }
+        }
+    }
+
+    // bill the trailing in-flight period (the loop exits once nothing
+    // further can be scheduled, which can precede the last completion)
+    let dt = clock.advance_to(end_ms);
+    lane_seconds += desired as f64 * dt / 1e3;
+
+    SimResult {
+        samples,
+        lane_seconds,
+        peak_lanes,
+        scale_events,
+        end_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::ScaleMode;
+
+    #[test]
+    fn sim_clock_is_monotone() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        assert_eq!(c.advance_to(5.0), 5.0);
+        assert_eq!(c.advance_to(3.0), 0.0, "going backwards is a no-op");
+        c.advance_by(2.5);
+        assert_eq!(c.now_ms(), 7.5);
+    }
+
+    #[test]
+    fn single_lane_fifo_latencies_are_exact() {
+        // two 2 ms tasks arriving together on one lane: the second waits
+        // for the first
+        let mut t = Trace::new();
+        t.push(0.0, "a", 1, 2.0);
+        t.push(0.0, "a", 1, 2.0);
+        let r = replay(&SimConfig::default(), &t);
+        assert_eq!(r.count(None), 2);
+        let mut lats: Vec<f64> = r.samples.iter().map(|s| s.latency_ms).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(lats, vec![2.0, 4.0]);
+        assert_eq!(r.end_ms, 4.0);
+        // one provisioned lane for 4 ms
+        assert!((r.lane_seconds - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_lanes_halve_the_makespan() {
+        let mut t = Trace::new();
+        for _ in 0..4 {
+            t.push(0.0, "a", 1, 3.0);
+        }
+        let r = replay(
+            &SimConfig {
+                lanes: 2,
+                ..SimConfig::default()
+            },
+            &t,
+        );
+        assert_eq!(r.end_ms, 6.0, "4 × 3 ms over 2 lanes");
+        assert_eq!(r.p95(None), 6.0);
+    }
+
+    #[test]
+    fn splitting_bounds_cross_tenant_head_of_line_blocking() {
+        // A hot 8-request 8 ms batch lands just before a cold 1-request
+        // 1 ms task on one lane.  Unsplit, the cold task waits the full
+        // 8 ms; split into 1-request chunks, the fair clock lets it in
+        // after a single 1 ms chunk.
+        let mut t = Trace::new();
+        t.push(0.0, "hot", 8, 8.0);
+        t.push(0.5, "cold", 1, 1.0);
+        let unsplit = replay(&SimConfig::default(), &t);
+        let split = replay(
+            &SimConfig {
+                split_chunk: 1,
+                ..SimConfig::default()
+            },
+            &t,
+        );
+        let cold_unsplit = unsplit.p95(Some("cold"));
+        let cold_split = split.p95(Some("cold"));
+        assert_eq!(cold_unsplit, 8.5, "8 ms head-of-line wait + 1 ms service");
+        // split: hot chunk [0,1), cold arrives 0.5; at t=1 fair clock
+        // has hot vtime 1 > cold (floored to 1? no: cold enqueued at
+        // vclock after 1 pop = 1 → tie breaks lex: "cold" < "hot") →
+        // cold runs [1,2) → latency 1.5
+        assert_eq!(cold_split, 1.5);
+        // total work is conserved: both runs finish at t = 9 ms
+        assert_eq!(unsplit.end_ms, 9.0);
+        assert_eq!(split.end_ms, 9.0);
+        assert_eq!(split.count(Some("hot")), 8);
+    }
+
+    #[test]
+    fn depth_policy_grows_lanes_in_the_replay() {
+        let mut t = Trace::new();
+        t.push_periodic("a", 0.0, 1.0, 40, 4, 4.0);
+        let r = replay(
+            &SimConfig {
+                lanes: 1,
+                max_lanes: 4,
+                policy: Some(AutoscalePolicy {
+                    high_depth_per_worker: 1,
+                    low_depth_per_worker: 0,
+                    tick_ms: 1,
+                    mode: ScaleMode::Depth,
+                    cooldown_ticks: 1,
+                    ..AutoscalePolicy::default()
+                }),
+                ..SimConfig::default()
+            },
+            &t,
+        );
+        assert!(r.peak_lanes > 1, "overload must grow lanes");
+        assert!(r.scale_events >= 1);
+        assert_eq!(r.count(None), 160);
+    }
+
+    #[test]
+    fn seeded_traces_are_reproducible() {
+        let build = || {
+            let mut rng = Rng::with_stream(sim_seed(), 7);
+            let mut t = Trace::new();
+            t.push_poisson(&mut rng, "a", 0.0, 100.0, 50, 2, 1.0);
+            t
+        };
+        let a = build();
+        let b = build();
+        let (sa, sb) = (a.sorted(), b.sorted());
+        assert_eq!(sa.len(), sb.len());
+        for (x, y) in sa.iter().zip(&sb) {
+            assert_eq!(x.at_ms, y.at_ms);
+        }
+        let ra = replay(&SimConfig::default(), &a);
+        let rb = replay(&SimConfig::default(), &b);
+        assert_eq!(ra.p95(None), rb.p95(None));
+        assert_eq!(ra.lane_seconds, rb.lane_seconds);
+    }
+}

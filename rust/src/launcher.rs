@@ -15,7 +15,8 @@ use anyhow::{Context, Result};
 use crate::config::{Config, ModelSpec};
 use crate::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
 use crate::coordinator::{
-    AutoscalePolicy, Deployment, FabricOptions, PoolOptions, ServingEngine, WorkerPool,
+    AutoscalePolicy, Deployment, FabricOptions, PoolOptions, ScaleMode, ServingEngine,
+    SplitPolicy, WorkerPool,
 };
 use crate::enclave::cost::CostModel;
 use crate::model::{Manifest, Model};
@@ -172,6 +173,7 @@ pub fn pool_options_from_config(config: &Config) -> PoolOptions {
         max_delay_ms: config.max_delay_ms,
         pipeline: config.pipeline,
         occupancy_flush: config.occupancy_flush,
+        slo_ms: config.slo_ms,
         ..PoolOptions::default()
     }
 }
@@ -200,16 +202,28 @@ pub fn fabric_options_from_config(config: &Config) -> Result<FabricOptions> {
         min_lanes: config.min_lanes,
         max_lanes: config.max_lanes,
         lane_devices: devices,
+        split: SplitPolicy {
+            max_task_ms: config.split_tail_ms,
+            max_chunk: config.split_tail_chunk,
+        },
         ..FabricOptions::default()
     })
 }
 
-/// Autoscaler thresholds from a config.
+/// Autoscaler thresholds from a config (`autoscale_policy` selects the
+/// depth rule or the p95-vs-SLO rule).
 pub fn autoscale_policy_from_config(config: &Config) -> AutoscalePolicy {
     AutoscalePolicy {
         high_depth_per_worker: config.autoscale_high_depth.max(1),
         low_depth_per_worker: config.autoscale_low_depth,
         tick_ms: config.autoscale_tick_ms.max(1),
+        mode: if config.autoscale_policy == "p95" {
+            ScaleMode::SloP95
+        } else {
+            ScaleMode::Depth
+        },
+        cooldown_ticks: config.autoscale_cooldown as u64,
+        ..AutoscalePolicy::default()
     }
 }
 
@@ -256,10 +270,12 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
     let sample_bytes = 4 * model.image * model.image * model.in_channels;
     let sched_cfg = config.clone();
     let fin_cfg = config.clone();
+    let slo_ms = (config.slo_ms > 0.0).then_some(config.slo_ms);
     dep.deploy(
         &config.model,
         sample_bytes,
         weight,
+        slo_ms,
         pool_options_from_config(config),
         move |band, domain| {
             let mut c = sched_cfg.clone();

@@ -37,9 +37,15 @@
 //!   through one shared fleet of device-pinned lanes with weighted-fair
 //!   popping (a tail carries no enclave state, so capacity is fungible
 //!   across models).  Admission is typed
-//!   ([`coordinator::AdmissionError`]) and a queue-depth autoscaler
-//!   resizes tier-1 worker counts and the fabric's lane count between
-//!   configured bounds.
+//!   ([`coordinator::AdmissionError`]); an autoscaler resizes tier-1
+//!   worker counts and the fabric's lane count between configured
+//!   bounds, driven either by queue depth or — with per-tenant SLOs —
+//!   by windowed p95 latency read from lock-free per-stage telemetry
+//!   ([`coordinator::telemetry`]).  Oversized tier-2 tails can be
+//!   split into chunked sub-tasks ([`coordinator::SplitPolicy`]) that
+//!   interleave under the weighted-fair clock, bounding the tail
+//!   latency one tenant's burst can inflict on another — with outputs
+//!   still bit-identical to the unsplit path.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! model once; everything here is self-contained afterwards.  Offline

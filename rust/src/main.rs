@@ -80,13 +80,21 @@ fn print_help() {
                               shared-batcher engine\n\
            --no-pipeline      pool only: serialize tier-1/tier-2 again\n\
          Multi-model serve (shared tier-2 lane fabric):\n\
-           --models <spec>    comma list of model[=strategy[@device][*weight]]\n\
-                              e.g. sim16=origami/2*2,sim8=slalom\n\
+           --models <spec>    comma list of\n\
+                              model[=strategy[@device][*weight]][:slo=Nms]\n\
+                              e.g. sim16=origami/2*2:slo=20ms,sim8=slalom\n\
            --lanes <n>        fabric lane count [workers]\n\
            --lane-devices <l> per-lane device cycle, e.g. cpu,gpu [device]\n\
            --min-lanes/--max-lanes, --min-workers/--max-workers\n\
                               autoscale bounds (0 = pinned)\n\
-           --autoscale        enable the queue-depth autoscaler\n\
+           --autoscale        enable the background autoscaler\n\
+           --autoscale-policy depth | p95 (scale on windowed p95 vs SLO,\n\
+                              depth as cold-start fallback) [depth]\n\
+           --autoscale-cooldown <t>  hold ticks after any scale event [2]\n\
+           --slo-ms <f>       default per-model latency objective [0=off]\n\
+           --split-tail-ms <f>  split tier-2 tails over this simulated\n\
+                              cost into chunks (0 = off)\n\
+           --split-tail-chunk <n>  hard per-tail request ceiling (0 = off)\n\
            --occupancy-flush  flush partial batches while tier-2 is idle"
     );
 }
@@ -321,6 +329,29 @@ fn cmd_serve_multi(args: &Args, config: Config) -> Result<()> {
 
     let dep = std::sync::Arc::try_unwrap(dep)
         .map_err(|_| anyhow::anyhow!("deployment still referenced"))?;
+    // windowed telemetry readout before shutdown consumes the deployment
+    {
+        use origami::coordinator::Stage;
+        let hub = dep.telemetry();
+        println!("\nlatency telemetry (windowed):");
+        for name in hub.tenants() {
+            let Some(t) = hub.get(&name) else { continue };
+            let slo = dep.slo_ms(&name);
+            let p95 = t.percentile(Stage::EndToEnd, 95.0);
+            let verdict = match slo {
+                Some(s) if p95 > s => "VIOLATED",
+                Some(_) => "met",
+                None => "-",
+            };
+            println!(
+                "  {name:<8} e2e p50 {} p95 {} | queue-wait p95 {} | slo {} [{verdict}]",
+                fmt_ms(t.percentile(Stage::EndToEnd, 50.0)),
+                fmt_ms(p95),
+                fmt_ms(t.percentile(Stage::QueueWait, 95.0)),
+                slo.map(fmt_ms).unwrap_or_else(|| "-".into()),
+            );
+        }
+    }
     let m = dep.shutdown();
     println!("\nper-model pools:");
     for (name, pm) in &m.models {
@@ -358,6 +389,12 @@ fn cmd_serve_multi(args: &Args, config: Config) -> Result<()> {
         "fabric autoscale: peak {} lanes ({}+ / {}-)",
         m.fabric.peak_lanes, m.fabric.grow_events, m.fabric.shrink_events
     );
+    if m.fabric.split_tasks > 0 {
+        println!(
+            "tail splitting: {} oversized tails → {} chunks",
+            m.fabric.split_tasks, m.fabric.split_subtasks
+        );
+    }
     Ok(())
 }
 

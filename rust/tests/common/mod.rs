@@ -1,4 +1,10 @@
-//! Shared helpers for the integration tests (artifact-gated).
+//! Shared helpers for the integration tests: artifact-gated stack
+//! loaders (below) and the deterministic serving-simulation harness
+//! ([`sim`]).  Each test binary compiles this module privately and uses
+//! its own subset, so unused helpers are expected.
+#![allow(dead_code)]
+
+pub mod sim;
 
 use std::path::PathBuf;
 

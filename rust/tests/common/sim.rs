@@ -1,0 +1,154 @@
+//! Deterministic serving-simulation harness for the integration tests.
+//!
+//! Two layers:
+//!
+//! 1. **Seeded tenant workloads** ([`TenantLoad`], [`tenant_load`]):
+//!    a model config + seeded sessions + synthetic images + the *serial*
+//!    reference outputs (one strategy instance, batch-1, in order) every
+//!    pooled/fabric execution must reproduce bit-for-bit.
+//! 2. **Replay drivers** ([`drive_deployment`], [`drive_pool`],
+//!    [`submit_interleaved`] / [`assert_replies`]): scripted submission
+//!    orders against live deployments and pools, with bit-equality
+//!    asserted on every reply.
+//!
+//! The pure simulated-timeline replay (SimClock, scripted arrival
+//! traces, autoscale policy replay) lives in `origami::harness::sim`,
+//! shared with the benches; this module re-exports its seed helper so
+//! `make test-sim` pins one seed (`ORIGAMI_SIM_SEED`) across both.
+
+use origami::config::Config;
+use origami::coordinator::{Deployment, InferResponse, WorkerPool};
+use origami::enclave::cost::Ledger;
+use origami::launcher::{build_strategy_with, encrypt_request, executor_for, synth_images};
+use origami::util::threadpool::Channel;
+
+pub use origami::harness::sim::sim_seed;
+
+/// One tenant's seeded workload and its serial reference outputs.
+pub struct TenantLoad {
+    pub cfg: Config,
+    pub sessions: Vec<u64>,
+    pub images: Vec<Vec<f32>>,
+    /// Serial-path outputs, the bit-equality ground truth.
+    pub expected: Vec<Vec<f32>>,
+}
+
+/// Build a seeded workload of `n` requests for `cfg`'s model (sessions
+/// `base, base+stride, …`), computing the serial reference output for
+/// each.  Deterministic: everything derives from `cfg.seed`.
+pub fn tenant_load(cfg: Config, n: usize, session_base: u64, session_stride: u64) -> TenantLoad {
+    let (executor, model) = executor_for(&cfg).expect("reference stack");
+    let images = synth_images(n, model.image, model.in_channels, cfg.seed);
+    let sessions: Vec<u64> = (0..n as u64)
+        .map(|i| session_base + i * session_stride.max(1))
+        .collect();
+    let mut strategy = build_strategy_with(executor, model, &cfg).expect("strategy");
+    let expected = images
+        .iter()
+        .zip(&sessions)
+        .map(|(img, &session)| {
+            let ct = encrypt_request(&cfg, session, img);
+            strategy
+                .infer(&ct, 1, &[session], &mut Ledger::new())
+                .expect("serial inference")
+        })
+        .collect();
+    TenantLoad {
+        cfg,
+        sessions,
+        images,
+        expected,
+    }
+}
+
+impl TenantLoad {
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn model(&self) -> &str {
+        &self.cfg.model
+    }
+
+    /// Encrypt request `i` under its session keystream.
+    pub fn ciphertext(&self, i: usize) -> Vec<u8> {
+        encrypt_request(&self.cfg, self.sessions[i], &self.images[i])
+    }
+}
+
+/// A submitted-but-unread reply: (model, request index, channel).
+pub type PendingReply = (String, usize, Channel<InferResponse>);
+
+/// Submit every load's requests round-robin-interleaved across tenants
+/// (request 0 of each load, then request 1 of each, …) — the scripted
+/// multi-tenant arrival order the fabric tests replay.
+pub fn submit_interleaved(dep: &Deployment, loads: &[&TenantLoad]) -> Vec<PendingReply> {
+    let mut pending = Vec::new();
+    let longest = loads.iter().map(|l| l.len()).max().unwrap_or(0);
+    for i in 0..longest {
+        for l in loads {
+            if i < l.len() {
+                let reply = dep
+                    .submit(l.model(), l.ciphertext(i), l.sessions[i])
+                    .unwrap_or_else(|e| panic!("{} request {i}: {e}", l.model()));
+                pending.push((l.model().to_string(), i, reply));
+            }
+        }
+    }
+    pending
+}
+
+/// Collect every pending reply and assert it is error-free and
+/// bit-identical to its load's serial reference.
+pub fn assert_replies(pending: Vec<PendingReply>, loads: &[&TenantLoad]) {
+    for (model, i, reply) in pending {
+        let resp = reply
+            .recv()
+            .unwrap_or_else(|| panic!("{model} request {i}: reply channel closed"));
+        assert!(resp.error.is_none(), "{model} request {i}: {:?}", resp.error);
+        let expected = loads
+            .iter()
+            .find(|l| l.model() == model)
+            .map(|l| &l.expected[i])
+            .expect("reply for an unknown load");
+        assert_eq!(
+            &resp.probs, expected,
+            "{model} request {i} diverged from the serial path"
+        );
+    }
+}
+
+/// Submit + collect in one go (fixed-capacity deployments).
+pub fn drive_deployment(dep: &Deployment, loads: &[&TenantLoad]) {
+    let pending = submit_interleaved(dep, loads);
+    assert_replies(pending, loads);
+}
+
+/// Drive a single-model pool with a load (all requests submitted up
+/// front, replies gathered after), asserting bit-equality throughout;
+/// returns the outputs for callers that inspect them further.
+pub fn drive_pool(pool: &WorkerPool, load: &TenantLoad) -> Vec<Vec<f32>> {
+    let replies: Vec<_> = (0..load.len())
+        .map(|i| {
+            pool.submit(load.model(), load.ciphertext(i), load.sessions[i])
+                .expect("submit")
+        })
+        .collect();
+    replies
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let resp = r.recv().expect("reply");
+            assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+            assert_eq!(
+                resp.probs, load.expected[i],
+                "request {i} diverged from the serial path"
+            );
+            resp.probs
+        })
+        .collect()
+}

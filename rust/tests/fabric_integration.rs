@@ -1,18 +1,24 @@
 //! Multi-tenant fabric integration: two models deployed over one shared
 //! tier-2 lane fabric must produce outputs bit-identical to each model's
 //! serial path, admission failures must be typed (and synchronous — no
-//! hangs), and the queue-depth autoscaler must demonstrably grow and
-//! shrink both tier-1 worker counts and the fabric's lane count.
+//! hangs), and the autoscaler must demonstrably grow and shrink both
+//! tier-1 worker counts and the fabric's lane count.
+//!
+//! Workloads, interleaved submission orders and bit-equality checks come
+//! from the deterministic serving-simulation harness
+//! (`tests/common/sim.rs`) instead of ad-hoc replay loops.
 //!
 //! Runs hermetically on the pure-Rust reference backend (`sim8`/`sim16`)
 //! — no artifacts, no PJRT — so it executes in every CI environment.
 
+mod common;
+
+use common::sim::{assert_replies, drive_deployment, submit_interleaved, tenant_load};
 use origami::config::Config;
 use origami::coordinator::{AdmissionError, AutoscalePolicy, Deployment};
-use origami::enclave::cost::Ledger;
 use origami::launcher::{
-    autoscale_policy_from_config, build_strategy_with, deploy_from_config, encrypt_request,
-    executor_for, fabric_options_from_config, start_deployment_from_config, synth_images,
+    autoscale_policy_from_config, deploy_from_config, fabric_options_from_config,
+    start_deployment_from_config,
 };
 
 fn sim_config(model: &str, workers: usize) -> Config {
@@ -28,70 +34,28 @@ fn sim_config(model: &str, workers: usize) -> Config {
     }
 }
 
-/// Serial reference: one strategy instance, batch-1 requests in order.
-fn serial_outputs(cfg: &Config, images: &[Vec<f32>], sessions: &[u64]) -> Vec<Vec<f32>> {
-    let (executor, model) = executor_for(cfg).expect("reference stack");
-    let mut strategy = build_strategy_with(executor, model, cfg).expect("strategy");
-    images
-        .iter()
-        .zip(sessions)
-        .map(|(img, &session)| {
-            let ct = encrypt_request(cfg, session, img);
-            strategy
-                .infer(&ct, 1, &[session], &mut Ledger::new())
-                .expect("serial inference")
-        })
-        .collect()
-}
-
 #[test]
 fn two_models_on_shared_fabric_bit_identical_to_serial() {
-    let cfg_a = sim_config("sim8", 2);
-    let cfg_b = sim_config("sim16", 2);
     // disjoint session id spaces (a session binds to one model)
-    let sessions_a: Vec<u64> = (0..16).map(|i| 2 * i).collect();
-    let sessions_b: Vec<u64> = (0..8).map(|i| 2 * i + 1).collect();
-    let images_a = synth_images(sessions_a.len(), 8, 3, cfg_a.seed);
-    let images_b = synth_images(sessions_b.len(), 16, 3, cfg_b.seed);
-    let expected_a = serial_outputs(&cfg_a, &images_a, &sessions_a);
-    let expected_b = serial_outputs(&cfg_b, &images_b, &sessions_b);
+    let load_a = tenant_load(sim_config("sim8", 2), 16, 0, 2);
+    let load_b = tenant_load(sim_config("sim16", 2), 8, 1, 2);
 
     // shared fabric with a mixed cpu/gpu lane cycle: device-aware lanes
     // change cost accounting, never bits
-    let mut base = cfg_a.clone();
+    let mut base = load_a.cfg.clone();
     base.lanes = 3;
     base.lane_devices = "cpu,gpu".into();
     let dep = Deployment::new(
         fabric_options_from_config(&base).unwrap(),
         AutoscalePolicy::default(),
     );
-    deploy_from_config(&dep, &cfg_a, 2.0).unwrap();
-    deploy_from_config(&dep, &cfg_b, 1.0).unwrap();
+    deploy_from_config(&dep, &load_a.cfg, 2.0).unwrap();
+    deploy_from_config(&dep, &load_b.cfg, 1.0).unwrap();
     assert_eq!(dep.models(), vec!["sim16".to_string(), "sim8".to_string()]);
 
-    // interleave submissions across the two tenants
-    let mut replies_a = Vec::new();
-    let mut replies_b = Vec::new();
-    for i in 0..sessions_a.len().max(sessions_b.len()) {
-        if i < sessions_a.len() {
-            let ct = encrypt_request(&cfg_a, sessions_a[i], &images_a[i]);
-            replies_a.push(dep.submit("sim8", ct, sessions_a[i]).expect("submit a"));
-        }
-        if i < sessions_b.len() {
-            let ct = encrypt_request(&cfg_b, sessions_b[i], &images_b[i]);
-            replies_b.push(dep.submit("sim16", ct, sessions_b[i]).expect("submit b"));
-        }
-    }
-    for (i, r) in replies_a.into_iter().enumerate() {
-        let resp = r.recv().expect("reply a");
-        assert!(resp.error.is_none(), "sim8 req {i}: {:?}", resp.error);
-        assert_eq!(resp.probs, expected_a[i], "sim8 request {i} diverged");
-    }
-    for (i, r) in replies_b.into_iter().enumerate() {
-        let resp = r.recv().expect("reply b");
-        assert!(resp.error.is_none(), "sim16 req {i}: {:?}", resp.error);
-        assert_eq!(resp.probs, expected_b[i], "sim16 request {i} diverged");
-    }
+    // interleave submissions across the two tenants; every reply is
+    // checked bit-identical to its model's serial path
+    drive_deployment(&dep, &[&load_a, &load_b]);
 
     let m = dep.shutdown();
     let a = m.fabric.tenants.get("sim8").expect("sim8 tenant stats");
@@ -119,17 +83,16 @@ fn two_models_on_shared_fabric_bit_identical_to_serial() {
 
 #[test]
 fn admission_failures_are_typed_and_synchronous() {
-    let cfg = sim_config("sim8", 1);
+    let load_a = tenant_load(sim_config("sim8", 1), 1, 7, 1);
+    let load_b = tenant_load(sim_config("sim16", 1), 1, 8, 1);
     let dep = Deployment::new(
-        fabric_options_from_config(&cfg).unwrap(),
+        fabric_options_from_config(&load_a.cfg).unwrap(),
         AutoscalePolicy::default(),
     );
-    deploy_from_config(&dep, &cfg, 1.0).unwrap();
-    let cfg_b = sim_config("sim16", 1);
-    deploy_from_config(&dep, &cfg_b, 1.0).unwrap();
+    deploy_from_config(&dep, &load_a.cfg, 1.0).unwrap();
+    deploy_from_config(&dep, &load_b.cfg, 1.0).unwrap();
 
-    let img = &synth_images(1, 8, 3, cfg.seed)[0];
-    let good_ct = encrypt_request(&cfg, 7, img);
+    let good_ct = load_a.ciphertext(0);
     let sample_bytes = good_ct.len();
     assert_eq!(sample_bytes, 4 * 8 * 8 * 3);
 
@@ -156,15 +119,12 @@ fn admission_failures_are_typed_and_synchronous() {
         other => panic!("expected WrongSize, got {other:?}"),
     }
 
-    // a successful request binds its session to sim8…
-    let reply = dep.submit("sim8", good_ct, 7).expect("well-formed request");
-    let resp = reply.recv().expect("reply");
-    assert!(resp.error.is_none(), "{:?}", resp.error);
+    // a successful request binds its session (7) to sim8…
+    drive_deployment(&dep, &[&load_a]);
 
     // …so reusing session 7 against sim16 is a typed collision
-    let img16 = &synth_images(1, 16, 3, cfg_b.seed)[0];
-    let ct16 = encrypt_request(&cfg_b, 7, img16);
-    match dep.submit("sim16", ct16.clone(), 7).unwrap_err() {
+    let ct16 = origami::launcher::encrypt_request(&load_b.cfg, 7, &load_b.images[0]);
+    match dep.submit("sim16", ct16, 7).unwrap_err() {
         AdmissionError::SessionCollision {
             session,
             bound,
@@ -176,9 +136,8 @@ fn admission_failures_are_typed_and_synchronous() {
         }
         other => panic!("expected SessionCollision, got {other:?}"),
     }
-    // a fresh session id serves fine
-    let reply = dep.submit("sim16", ct16, 8).expect("fresh session admitted");
-    assert!(reply.recv().expect("reply").error.is_none());
+    // a fresh session id serves fine (and bit-identically)
+    drive_deployment(&dep, &[&load_b]);
 
     let m = dep.shutdown();
     assert_eq!(m.fabric.errors, 0, "rejections never reached the fabric");
@@ -206,14 +165,8 @@ fn autoscaler_grows_and_shrinks_workers_and_lanes() {
     assert_eq!(dep.lane_count(), 1);
 
     // burst: far more requests than one worker drains instantly
-    let n = 96u64;
-    let images = synth_images(n as usize, 8, 3, cfg.seed);
-    let replies: Vec<_> = (0..n)
-        .map(|s| {
-            let ct = encrypt_request(&cfg, s, &images[s as usize]);
-            dep.submit("sim8", ct, s).expect("submit")
-        })
-        .collect();
+    let load = tenant_load(cfg, 96, 0, 1);
+    let pending = submit_interleaved(&dep, &[&load]);
 
     // tick until the backlog forces growth (bounded retries: the queue
     // is deep enough that the first ticks already see depth ≫ high)
@@ -234,13 +187,12 @@ fn autoscaler_grows_and_shrinks_workers_and_lanes() {
     assert!(grew_workers, "queue pressure must grow tier-1 workers");
     assert!(grew_lanes, "queue pressure must grow fabric lanes");
 
-    for (i, r) in replies.into_iter().enumerate() {
-        let resp = r.recv().expect("reply");
-        assert!(resp.error.is_none(), "req {i}: {:?}", resp.error);
-    }
+    assert_replies(pending, &[&load]);
 
     // drained: repeated ticks must shrink both back to their floors
-    for _ in 0..8 {
+    // (cooldown hysteresis holds each target for `cooldown` ticks
+    // between events, so budget ticks accordingly)
+    for _ in 0..16 {
         dep.autoscale_tick();
     }
     assert_eq!(dep.queue_depth(), 0);
@@ -248,7 +200,7 @@ fn autoscaler_grows_and_shrinks_workers_and_lanes() {
     assert_eq!(dep.lane_count(), 1, "lanes shrink to min");
 
     let m = dep.shutdown();
-    assert_eq!(m.fabric.tenants["sim8"].requests, n);
+    assert_eq!(m.fabric.tenants["sim8"].requests, 96);
     assert_eq!(m.fabric.tenants["sim8"].errors, 0);
     let pm = &m.models["sim8"];
     assert!(pm.grow_events >= 1 && pm.shrink_events >= 1);
@@ -274,16 +226,8 @@ fn background_autoscaler_runs_and_shuts_down_cleanly() {
 
     let specs = origami::config::ModelSpec::parse_list(&base.models).unwrap();
     let dep = start_deployment_from_config(&base, &specs).unwrap();
-    let images = synth_images(24, 8, 3, base.seed);
-    let replies: Vec<_> = (0..24u64)
-        .map(|s| {
-            let ct = encrypt_request(&sim_config("sim8", 1), s, &images[s as usize]);
-            dep.submit("sim8", ct, s).expect("submit")
-        })
-        .collect();
-    for r in replies {
-        assert!(r.recv().expect("reply").error.is_none());
-    }
+    let load = tenant_load(sim_config("sim8", 1), 24, 0, 1);
+    drive_deployment(&dep, &[&load]);
     let m = dep.shutdown();
     assert_eq!(m.fabric.tenants["sim8"].requests, 24);
     assert!(m.models.contains_key("sim16"), "idle tenant still registered");

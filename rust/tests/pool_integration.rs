@@ -3,15 +3,19 @@
 //! single-worker path, hold session affinity, and never share a blinding
 //! pad across workers.
 //!
+//! Workloads and bit-equality checks come from the deterministic
+//! serving-simulation harness (`tests/common/sim.rs`): seeded tenant
+//! loads with precomputed serial references replace the ad-hoc replay
+//! loops this file used to carry.
+//!
 //! Runs hermetically on the pure-Rust reference backend (`sim8`) — no
 //! artifacts, no PJRT — so it executes in every CI environment.
 
+mod common;
+
+use common::sim::{drive_pool, tenant_load, TenantLoad};
 use origami::config::Config;
-use origami::coordinator::WorkerPool;
-use origami::enclave::cost::Ledger;
-use origami::launcher::{
-    build_strategy_with, encrypt_request, executor_for, start_pool_from_config, synth_images,
-};
+use origami::launcher::{executor_for, start_pool_from_config};
 use origami::strategies::StrategyCtx;
 
 fn sim_config(workers: usize, pipeline: bool) -> Config {
@@ -27,64 +31,25 @@ fn sim_config(workers: usize, pipeline: bool) -> Config {
     }
 }
 
-/// Serial reference: one strategy instance, batch-1 requests in order.
-fn serial_outputs(cfg: &Config, images: &[Vec<f32>]) -> Vec<Vec<f32>> {
-    let (executor, model) = executor_for(cfg).expect("reference stack");
-    let mut strategy = build_strategy_with(executor, model, cfg).expect("strategy");
-    images
-        .iter()
-        .enumerate()
-        .map(|(i, img)| {
-            let session = i as u64;
-            let ct = encrypt_request(cfg, session, img);
-            strategy
-                .infer(&ct, 1, &[session], &mut Ledger::new())
-                .expect("serial inference")
-        })
-        .collect()
-}
-
-fn drive_pool(pool: &WorkerPool, cfg: &Config, images: &[Vec<f32>]) -> Vec<Vec<f32>> {
-    // submit everything up front: concurrent sessions, replies gathered after
-    let replies: Vec<_> = images
-        .iter()
-        .enumerate()
-        .map(|(i, img)| {
-            let session = i as u64;
-            let ct = encrypt_request(cfg, session, img);
-            pool.submit("sim8", ct, session).expect("submit")
-        })
-        .collect();
-    replies
-        .into_iter()
-        .enumerate()
-        .map(|(i, r)| {
-            let resp = r.recv().expect("reply");
-            assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
-            resp.probs
-        })
-        .collect()
+/// Seeded workload with serial references (sessions 0..n, stride 1).
+fn load(n: usize) -> TenantLoad {
+    tenant_load(sim_config(1, true), n, 0, 1)
 }
 
 #[test]
 fn pooled_outputs_bit_identical_to_single_worker() {
     let m = 24;
-    let cfg1 = sim_config(1, true);
-    let images = synth_images(m, 8, 3, cfg1.seed);
-    let expected = serial_outputs(&cfg1, &images);
+    let load = load(m);
 
     for workers in [1usize, 4] {
         for pipeline in [false, true] {
             let cfg = sim_config(workers, pipeline);
             let pool = start_pool_from_config(cfg.clone()).expect("pool starts");
             assert_eq!(pool.worker_count(), workers);
-            let got = drive_pool(&pool, &cfg, &images);
-            for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
-                assert_eq!(
-                    g, e,
-                    "request {i} diverged (workers={workers}, pipeline={pipeline})"
-                );
-            }
+            // drive_pool asserts bit-equality against the serial path
+            // for every reply
+            let got = drive_pool(&pool, &load);
+            assert_eq!(got.len(), m, "workers={workers}, pipeline={pipeline}");
             let metrics = pool.shutdown();
             assert_eq!(metrics.requests, m as u64);
             assert_eq!(metrics.errors, 0);
@@ -97,10 +62,9 @@ fn pooled_outputs_bit_identical_to_single_worker() {
 fn session_affinity_held_across_the_pool() {
     let workers = 4;
     let cfg = sim_config(workers, true);
-    let pool = start_pool_from_config(cfg.clone()).expect("pool starts");
+    let pool = start_pool_from_config(cfg).expect("pool starts");
     let m = 32;
-    let images = synth_images(m, 8, 3, cfg.seed);
-    let _ = drive_pool(&pool, &cfg, &images);
+    let _ = drive_pool(&pool, &load(m));
     let metrics = pool.shutdown();
 
     assert!(metrics.affinity_held(), "a session ran tier-1 on 2 workers");
@@ -149,10 +113,8 @@ fn pool_simulated_speedup_scales_with_workers() {
     // over the serial single-worker cost by a wide margin.
     let workers = 4;
     let cfg = sim_config(workers, true);
-    let pool = start_pool_from_config(cfg.clone()).expect("pool starts");
-    let m = 48;
-    let images = synth_images(m, 8, 3, cfg.seed);
-    let _ = drive_pool(&pool, &cfg, &images);
+    let pool = start_pool_from_config(cfg).expect("pool starts");
+    let _ = drive_pool(&pool, &load(48));
     let metrics = pool.shutdown();
     let speedup = metrics.simulated_speedup();
     assert!(

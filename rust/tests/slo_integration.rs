@@ -1,0 +1,285 @@
+//! Latency-SLO acceptance: tail-batch splitting and SLO-aware
+//! autoscaling, pinned by the deterministic serving-simulation harness.
+//!
+//! Three layers of coverage:
+//!
+//! 1. **Bit-equality on the live fabric** — a hot tenant's batch-8 tails
+//!    are split into chunks on a single shared lane; every reply (hot
+//!    and cold) must stay bit-identical to its model's serial path, and
+//!    identical to the unsplit run.  (Real threads; structural asserts
+//!    only, no wall-clock latency assertions.)
+//! 2. **Latency behavior on the simulated timeline** — the discrete-
+//!    event replay (`origami::harness::sim`, same `FairClock` +
+//!    `AutoscalePolicy::decide` code as production) shows the cold
+//!    tenant's p95 meeting its SLO *only* when splitting is on, at equal
+//!    total work.
+//! 3. **Autoscaler flap regression** — an oscillating trace around the
+//!    thresholds churns `scale_to` at most once per cooldown window,
+//!    for both the depth and the p95 policies.
+
+mod common;
+
+use common::sim::{assert_replies, submit_interleaved, tenant_load};
+use origami::config::Config;
+use origami::coordinator::{AutoscalePolicy, Deployment, ScaleMode, ScaleSignals, Stage};
+use origami::harness::sim::{replay, SimConfig, Trace};
+use origami::launcher::{deploy_from_config, fabric_options_from_config};
+
+fn hot_config() -> Config {
+    Config {
+        model: "sim16".into(),
+        // tail-heavy partition: everything past layer 2 is open tier-2
+        strategy: "origami/2".into(),
+        workers: 1,
+        max_batch: 8,
+        // generous window: a burst submitted up front always coalesces
+        // into full batch-8 tails
+        max_delay_ms: 200.0,
+        pool_epochs: 16,
+        pipeline: true,
+        ..Config::default()
+    }
+}
+
+fn cold_config() -> Config {
+    Config {
+        model: "sim8".into(),
+        strategy: "origami/6".into(),
+        workers: 1,
+        max_batch: 1,
+        max_delay_ms: 0.0,
+        pool_epochs: 16,
+        pipeline: true,
+        ..Config::default()
+    }
+}
+
+/// One shared lane, hot batch-8 tails + cold singles; returns the final
+/// fabric metrics after asserting every reply bit-identical to serial.
+fn run_shared_lane(split_chunk: usize) -> origami::coordinator::FabricMetrics {
+    let hot = tenant_load(hot_config(), 16, 0, 2);
+    let cold = tenant_load(cold_config(), 4, 1, 2);
+    let mut base = hot.cfg.clone();
+    base.lanes = 1;
+    base.lane_devices = "cpu".into();
+    base.split_tail_chunk = split_chunk;
+    let dep = Deployment::new(
+        fabric_options_from_config(&base).unwrap(),
+        AutoscalePolicy::default(),
+    );
+    deploy_from_config(&dep, &hot.cfg, 1.0).unwrap();
+    deploy_from_config(&dep, &cold.cfg, 1.0).unwrap();
+
+    // hot burst first (coalesces into batch-8 tails), cold rides behind
+    let mut pending = submit_interleaved(&dep, &[&hot]);
+    pending.extend(submit_interleaved(&dep, &[&cold]));
+    assert_replies(pending, &[&hot, &cold]);
+
+    // telemetry recorded every request end-to-end, per tenant.  Lanes
+    // record after replying, so poll briefly before the exact asserts.
+    let hub = dep.telemetry();
+    let t_hot = hub.get("sim16").expect("hot telemetry");
+    let t_cold = hub.get("sim8").expect("cold telemetry");
+    for _ in 0..500 {
+        if t_hot.window_count(Stage::EndToEnd) >= 16
+            && t_cold.window_count(Stage::EndToEnd) >= 4
+        {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(t_hot.window_count(Stage::EndToEnd), 16);
+    assert_eq!(t_cold.window_count(Stage::EndToEnd), 4);
+    assert!(t_hot.window_count(Stage::QueueWait) > 0, "queue waits recorded");
+    assert!(t_hot.percentile(Stage::EndToEnd, 95.0) > 0.0);
+
+    let m = dep.shutdown();
+    assert_eq!(m.fabric.tenants["sim16"].requests, 16);
+    assert_eq!(m.fabric.tenants["sim8"].requests, 4);
+    assert_eq!(m.fabric.errors, 0);
+    m.fabric
+}
+
+#[test]
+fn split_tails_stay_bit_identical_on_a_shared_lane() {
+    // splitting on: batch-8 hot tails must actually split…
+    let split = run_shared_lane(2);
+    assert!(
+        split.split_tasks >= 1,
+        "no tail was split (split_tasks = {})",
+        split.split_tasks
+    );
+    assert!(
+        split.split_subtasks >= 2 * split.split_tasks,
+        "splits must produce ≥ 2 chunks each"
+    );
+    // …and the chunk batches all land on the one lane's ledger
+    assert!(split.makespan_ms() > 0.0);
+
+    // splitting off: same workload, no splits — and since BOTH runs are
+    // asserted bit-identical to the serial references request by
+    // request, the split outputs are bit-identical to the unsplit ones.
+    let unsplit = run_shared_lane(0);
+    assert_eq!(unsplit.split_tasks, 0);
+    assert_eq!(unsplit.split_subtasks, 0);
+    assert_eq!(
+        split.tenants["sim16"].requests,
+        unsplit.tenants["sim16"].requests
+    );
+    // splitting multiplies the number of tail batches served
+    assert!(
+        split.tenants["sim16"].batches > unsplit.tenants["sim16"].batches,
+        "split run must finish more (smaller) tail batches: {} vs {}",
+        split.tenants["sim16"].batches,
+        unsplit.tenants["sim16"].batches
+    );
+}
+
+#[test]
+fn cold_tenant_p95_meets_slo_only_with_splitting() {
+    // One lane; a hot tenant ships a 12-request, 12 ms tail every 15 ms
+    // (80% utilization), the cold tenant one 1 ms request per period,
+    // arriving 4 ms into the hot tail.  Cold SLO: 5 ms.
+    const SLO_MS: f64 = 5.0;
+    let mut trace = Trace::new();
+    trace.push_periodic("hot", 0.0, 15.0, 20, 12, 12.0);
+    trace.push_periodic("cold", 4.0, 15.0, 20, 1, 1.0);
+    let cfg = |chunk: usize| SimConfig {
+        weights: vec![("hot".into(), 1.0), ("cold".into(), 1.0)],
+        lanes: 1,
+        split_chunk: chunk,
+        ..SimConfig::default()
+    };
+
+    let unsplit = replay(&cfg(0), &trace);
+    let split = replay(&cfg(1), &trace);
+    assert_eq!(unsplit.count(None), split.count(None), "equal traffic");
+
+    let cold_unsplit = unsplit.p95(Some("cold"));
+    let cold_split = split.p95(Some("cold"));
+    // unsplit: the cold request waits out the remaining 8 ms of the hot
+    // tail + 1 ms service → 9 ms, every period
+    assert_eq!(cold_unsplit, 9.0);
+    assert!(
+        cold_unsplit > SLO_MS,
+        "without splitting the cold tenant must blow its {SLO_MS} ms SLO"
+    );
+    // split: the fair clock admits the cold chunk after at most one
+    // 1 ms hot chunk → 1 ms latency, every period
+    assert_eq!(cold_split, 1.0);
+    assert!(
+        cold_split <= SLO_MS,
+        "with splitting the cold tenant must meet its {SLO_MS} ms SLO"
+    );
+
+    // the hot tenant's completion is not starved: its tail finishes one
+    // cold-chunk (1 ms) later per period, and total work is conserved
+    assert_eq!(unsplit.p95(Some("hot")), 12.0);
+    assert_eq!(split.p95(Some("hot")), 13.0);
+    assert_eq!(unsplit.end_ms, split.end_ms, "same total work, same finish");
+}
+
+/// Drive `policy.decide` over a scripted oscillating trace with the
+/// deployment's cooldown bookkeeping; returns the ticks at which a
+/// scale event fired.
+fn scale_events_over(
+    policy: &AutoscalePolicy,
+    ticks: u64,
+    signals_at: impl Fn(u64, usize) -> ScaleSignals,
+) -> Vec<u64> {
+    let mut active = 2usize;
+    let mut last: Option<u64> = None;
+    let mut events = Vec::new();
+    for tick in 1..=ticks {
+        let mut s = signals_at(tick, active);
+        s.active = active;
+        s.ticks_since_scale = last.map(|l| tick - l);
+        if let Some(n) = policy.decide(&s) {
+            let n = n.clamp(1, 4);
+            if n != active {
+                active = n;
+                last = Some(tick);
+                events.push(tick);
+            }
+        }
+    }
+    events
+}
+
+fn base_signals() -> ScaleSignals {
+    ScaleSignals {
+        depth: 0,
+        active: 2,
+        p95_ms: None,
+        window_samples: 0,
+        slo_ms: None,
+        ticks_since_scale: None,
+    }
+}
+
+#[test]
+fn autoscaler_never_flaps_faster_than_the_cooldown_window() {
+    const COOLDOWN: u64 = 3;
+    const TICKS: u64 = 42;
+
+    // depth policy: depth oscillates far above high and down to zero on
+    // alternating ticks — the worst flapping trace
+    let depth_policy = AutoscalePolicy {
+        cooldown_ticks: COOLDOWN,
+        ..AutoscalePolicy::default()
+    };
+    let events = scale_events_over(&depth_policy, TICKS, |tick, _active| {
+        let mut s = base_signals();
+        s.depth = if tick % 2 == 1 { 100 } else { 0 };
+        s
+    });
+    assert!(
+        events.len() >= 2,
+        "the oscillation must still drive (rate-limited) scaling"
+    );
+    for pair in events.windows(2) {
+        assert!(
+            pair[1] - pair[0] >= COOLDOWN,
+            "depth policy churned twice inside one cooldown window: {events:?}"
+        );
+    }
+
+    // p95 policy: p95 oscillates across the SLO (and its shrink margin)
+    // every tick
+    let slo_policy = AutoscalePolicy {
+        mode: ScaleMode::SloP95,
+        cooldown_ticks: COOLDOWN,
+        min_window_samples: 1,
+        ..AutoscalePolicy::default()
+    };
+    let events = scale_events_over(&slo_policy, TICKS, |tick, _active| {
+        let mut s = base_signals();
+        s.slo_ms = Some(20.0);
+        s.window_samples = 100;
+        s.p95_ms = Some(if tick % 2 == 1 { 25.0 } else { 5.0 });
+        s
+    });
+    assert!(events.len() >= 2, "p95 oscillation must still drive scaling");
+    for pair in events.windows(2) {
+        assert!(
+            pair[1] - pair[0] >= COOLDOWN,
+            "p95 policy churned twice inside one cooldown window: {events:?}"
+        );
+    }
+
+    // without the hysteresis (cooldown 0) the same depth trace flaps
+    // every tick — the regression this test pins
+    let flappy = AutoscalePolicy {
+        cooldown_ticks: 0,
+        ..AutoscalePolicy::default()
+    };
+    let events = scale_events_over(&flappy, 8, |tick, _active| {
+        let mut s = base_signals();
+        s.depth = if tick % 2 == 1 { 100 } else { 0 };
+        s
+    });
+    assert!(
+        events.len() >= 6,
+        "cooldown 0 must reproduce the flapping baseline: {events:?}"
+    );
+}
