@@ -6,7 +6,7 @@
 # only needed for the artifact-gated integration tests/benches; the
 # hermetic `sim*` reference-backend paths run everywhere.
 
-.PHONY: ci build test test-sim clippy fmt-check bench-smoke bench-smoke-fabric bench-smoke-slo pool-demo fabric-demo clean
+.PHONY: ci build test test-sim clippy fmt-check bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission pool-demo fabric-demo clean
 
 ## The CI gate: release build, full test suite, clippy as errors, rustfmt.
 ci: build test clippy fmt-check
@@ -18,9 +18,12 @@ test:
 	cargo test -q
 
 ## The serving-simulation harness tests under a fixed seed: the fair
-## queue / splitting / SLO-autoscale suites replayed deterministically.
+## queue / splitting / SLO-autoscale / admission suites replayed
+## deterministically.  Override the seed to hunt seed-coupled
+## assertions: `make test-sim ORIGAMI_SIM_SEED=1` (CI runs both).
+ORIGAMI_SIM_SEED ?= 2019
 test-sim:
-	ORIGAMI_SIM_SEED=2019 cargo test -q --test slo_integration --test fabric_integration --test pool_integration
+	ORIGAMI_SIM_SEED=$(ORIGAMI_SIM_SEED) cargo test -q --test slo_integration --test fabric_integration --test pool_integration --test admission_integration
 
 clippy:
 	cargo clippy -p origami -- -D warnings
@@ -41,6 +44,11 @@ bench-smoke-fabric:
 ## fewer lane-seconds than depth scaling).
 bench-smoke-slo:
 	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig16_slo_autoscale
+
+## Fast smoke of the admission bench (asserts compliant tenants hold
+## their SLO under a 10x rogue overload, with only the rogue shed).
+bench-smoke-admission:
+	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig17_admission
 
 ## The worker-pool demo: 4 pipelined workers vs the serial path.
 pool-demo:

@@ -48,6 +48,7 @@ fn sim_config(policy: AutoscalePolicy) -> SimConfig {
         policy: Some(policy),
         slo_ms: Some(SLO_MS),
         window_ms: 100.0,
+        ..SimConfig::default()
     }
 }
 

@@ -91,6 +91,26 @@ pub struct Config {
     pub split_tail_ms: f64,
     /// Tail-batch splitting: hard per-task request ceiling; 0 disables.
     pub split_tail_chunk: usize,
+    /// Admission: sustained per-tenant request rate (requests/s);
+    /// 0 = unlimited.  Per-model overrides via `:rps=` in the spec.
+    pub rps: f64,
+    /// Admission: token-bucket burst capacity (requests); 0 derives
+    /// `max(1, rps / 10)`.
+    pub admission_burst: f64,
+    /// Admission: per-tenant in-flight request quota; 0 = unlimited.
+    /// Per-model overrides via `:inflight=` in the spec.
+    pub inflight: usize,
+    /// Admission: shed requests once the tenant's tier-1 backlog reaches
+    /// this depth; 0 = off.  Per-model overrides via `:shed=`.
+    pub shed_depth: usize,
+    /// What happens to shed requests: `reject` (typed error with a
+    /// retry-after hint) or `degrade` (serve from a cheaper strategy
+    /// tier; see `degrade_strategy`).
+    pub shed_policy: String,
+    /// Strategy tier shed requests degrade to under `--shed-policy
+    /// degrade`.  `baseline2` keeps the whole network in the enclave, so
+    /// degraded traffic stays off the shared tier-2 lanes entirely.
+    pub degrade_strategy: String,
 }
 
 impl Default for Config {
@@ -130,6 +150,12 @@ impl Default for Config {
             autoscale_cooldown: 2,
             split_tail_ms: 0.0,
             split_tail_chunk: 0,
+            rps: 0.0,
+            admission_burst: 0.0,
+            inflight: 0,
+            shed_depth: 0,
+            shed_policy: "reject".into(),
+            degrade_strategy: "baseline2".into(),
         }
     }
 }
@@ -162,6 +188,12 @@ impl Config {
             path.display(),
             c.autoscale_policy
         );
+        anyhow::ensure!(
+            c.shed_policy == "reject" || c.shed_policy == "degrade",
+            "config {}: shed_policy must be `reject` or `degrade`, got `{}`",
+            path.display(),
+            c.shed_policy
+        );
         Ok(c)
     }
 
@@ -176,6 +208,8 @@ impl Config {
             ("models", &mut self.models),
             ("lane_devices", &mut self.lane_devices),
             ("autoscale_policy", &mut self.autoscale_policy),
+            ("shed_policy", &mut self.shed_policy),
+            ("degrade_strategy", &mut self.degrade_strategy),
         ] {
             if let Some(s) = v.get(field).and_then(|x| x.as_str()) {
                 *slot = s.to_string();
@@ -205,6 +239,8 @@ impl Config {
             ("autoscale_low_depth", &mut self.autoscale_low_depth),
             ("autoscale_cooldown", &mut self.autoscale_cooldown),
             ("split_tail_chunk", &mut self.split_tail_chunk),
+            ("inflight", &mut self.inflight),
+            ("shed_depth", &mut self.shed_depth),
         ] {
             if let Some(n) = v.get(field).and_then(|x| x.as_usize()) {
                 *slot = n;
@@ -218,6 +254,12 @@ impl Config {
         }
         if let Some(n) = v.get("split_tail_ms").and_then(|x| x.as_f64()) {
             self.split_tail_ms = n;
+        }
+        if let Some(n) = v.get("rps").and_then(|x| x.as_f64()) {
+            self.rps = n;
+        }
+        if let Some(n) = v.get("admission_burst").and_then(|x| x.as_f64()) {
+            self.admission_burst = n;
         }
         if let Some(b) = v.get("allow_factor_reuse").and_then(|x| x.as_bool()) {
             self.allow_factor_reuse = b;
@@ -292,6 +334,20 @@ impl Config {
         c.slo_ms = args.f64_or("slo-ms", c.slo_ms)?;
         c.split_tail_ms = args.f64_or("split-tail-ms", c.split_tail_ms)?;
         c.split_tail_chunk = args.usize_or("split-tail-chunk", c.split_tail_chunk)?;
+        c.rps = args.f64_or("rps", c.rps)?;
+        c.admission_burst = args.f64_or("admission-burst", c.admission_burst)?;
+        c.inflight = args.usize_or("inflight", c.inflight)?;
+        c.shed_depth = args.usize_or("shed-depth", c.shed_depth)?;
+        if let Some(v) = args.get("shed-policy") {
+            anyhow::ensure!(
+                v == "reject" || v == "degrade",
+                "--shed-policy must be `reject` or `degrade`, got `{v}`"
+            );
+            c.shed_policy = v.into();
+        }
+        if let Some(v) = args.get("degrade-strategy") {
+            c.degrade_strategy = v.into();
+        }
         c.lazy_dense_bytes = args.u64_or("lazy-dense-bytes", c.lazy_dense_bytes)?;
         if args.has("strict-otp") {
             c.allow_factor_reuse = false;
@@ -358,17 +414,29 @@ impl Config {
                 "split_tail_chunk",
                 json::num(self.split_tail_chunk as f64),
             ),
+            ("rps", json::num(self.rps)),
+            ("admission_burst", json::num(self.admission_burst)),
+            ("inflight", json::num(self.inflight as f64)),
+            ("shed_depth", json::num(self.shed_depth as f64)),
+            ("shed_policy", json::s(&self.shed_policy)),
+            ("degrade_strategy", json::s(&self.degrade_strategy)),
         ])
     }
 }
 
 /// One model's slot in a multi-model deployment spec.
 ///
-/// Text form: `model[=strategy[@device][*weight]][:slo=Nms]` — e.g.
+/// Text form: `model[=strategy[@device][*weight]][:key=value…]` — e.g.
 /// `sim8`, `sim8=origami/6`, `sim8=origami/6@gpu*2:slo=20ms`,
-/// `sim16=slalom@cpu`, `sim16:slo=50`.  Omitted parts inherit the base
-/// config; `slo` is the model's end-to-end latency objective the p95
-/// autoscaler holds it to (ms; the `ms` suffix is optional).
+/// `sim16=slalom@cpu`, `sim16:slo=20ms:rps=500:inflight=64:shed=128`.
+/// Omitted parts inherit the base config.  Suffix keys:
+///
+/// - `slo` — end-to-end latency objective the p95 autoscaler (and the
+///   fabric's deadline-aware popping) holds the model to (ms; the `ms`
+///   suffix is optional).
+/// - `rps` — admission token-bucket rate limit (requests/s).
+/// - `inflight` — admission in-flight concurrency quota.
+/// - `shed` — admission queue-depth shed threshold.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
     pub model: String,
@@ -378,6 +446,12 @@ pub struct ModelSpec {
     pub weight: f64,
     /// Per-model latency objective (ms).
     pub slo_ms: Option<f64>,
+    /// Admission: sustained request rate (requests/s).
+    pub rps: Option<f64>,
+    /// Admission: in-flight request quota.
+    pub inflight: Option<usize>,
+    /// Admission: tier-1 queue depth at which requests are shed.
+    pub shed_depth: Option<usize>,
 }
 
 impl ModelSpec {
@@ -385,24 +459,67 @@ impl ModelSpec {
     pub fn parse(spec: &str) -> Result<Self> {
         let spec = spec.trim();
         anyhow::ensure!(!spec.is_empty(), "empty model spec");
-        let (spec, slo_ms) = match spec.split_once(":slo=") {
-            Some((head, tail)) => {
-                let raw = tail.trim().trim_end_matches("ms").trim();
-                let slo = raw
-                    .parse::<f64>()
-                    .map_err(|_| anyhow::anyhow!("model spec `{spec}`: bad SLO `{tail}`"))?;
-                anyhow::ensure!(
-                    slo > 0.0,
-                    "model spec `{spec}`: SLO must be positive"
-                );
-                (head.trim(), Some(slo))
+        let mut suffixes = spec.split(':');
+        let head = suffixes.next().unwrap_or_default().trim();
+        anyhow::ensure!(!head.is_empty(), "model spec `{spec}`: empty model name");
+        let mut slo_ms = None;
+        let mut rps = None;
+        let mut inflight = None;
+        let mut shed_depth = None;
+        for part in suffixes {
+            let (key, value) = part
+                .trim()
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("model spec `{spec}`: bad option `{part}`"))?;
+            let value = value.trim();
+            match key.trim() {
+                "slo" => {
+                    let raw = value.trim_end_matches("ms").trim();
+                    let slo = raw.parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("model spec `{spec}`: bad SLO `{value}`")
+                    })?;
+                    anyhow::ensure!(
+                        slo > 0.0,
+                        "model spec `{spec}`: SLO must be positive"
+                    );
+                    slo_ms = Some(slo);
+                }
+                "rps" => {
+                    let r = value.parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("model spec `{spec}`: bad rps `{value}`")
+                    })?;
+                    anyhow::ensure!(
+                        r > 0.0,
+                        "model spec `{spec}`: rps must be positive"
+                    );
+                    rps = Some(r);
+                }
+                "inflight" => {
+                    let n = value.parse::<usize>().map_err(|_| {
+                        anyhow::anyhow!("model spec `{spec}`: bad inflight `{value}`")
+                    })?;
+                    anyhow::ensure!(
+                        n > 0,
+                        "model spec `{spec}`: inflight must be positive"
+                    );
+                    inflight = Some(n);
+                }
+                "shed" => {
+                    let n = value.parse::<usize>().map_err(|_| {
+                        anyhow::anyhow!("model spec `{spec}`: bad shed depth `{value}`")
+                    })?;
+                    anyhow::ensure!(
+                        n > 0,
+                        "model spec `{spec}`: shed depth must be positive"
+                    );
+                    shed_depth = Some(n);
+                }
+                other => anyhow::bail!("model spec `{spec}`: unknown option `{other}`"),
             }
-            None => (spec, None),
-        };
-        anyhow::ensure!(!spec.is_empty(), "empty model spec");
-        let (model, rest) = match spec.split_once('=') {
+        }
+        let (model, rest) = match head.split_once('=') {
             Some((m, r)) => (m.trim(), Some(r.trim())),
-            None => (spec, None),
+            None => (head, None),
         };
         anyhow::ensure!(!model.is_empty(), "model spec `{spec}`: empty model name");
         let mut strategy = None;
@@ -440,6 +557,9 @@ impl ModelSpec {
             device,
             weight,
             slo_ms,
+            rps,
+            inflight,
+            shed_depth,
         })
     }
 
@@ -468,6 +588,15 @@ impl ModelSpec {
         }
         if let Some(slo) = self.slo_ms {
             c.slo_ms = slo;
+        }
+        if let Some(rps) = self.rps {
+            c.rps = rps;
+        }
+        if let Some(inflight) = self.inflight {
+            c.inflight = inflight;
+        }
+        if let Some(shed) = self.shed_depth {
+            c.shed_depth = shed;
         }
         c
     }
@@ -572,6 +701,88 @@ mod tests {
         assert_eq!(list[0].slo_ms, Some(5.0));
         assert_eq!(list[1].slo_ms, Some(50.0));
         assert_eq!(list[1].strategy.as_deref(), Some("slalom"));
+    }
+
+    #[test]
+    fn model_spec_parses_admission_suffixes() {
+        let s = ModelSpec::parse("sim8=origami/6@gpu*2:slo=20ms:rps=500:inflight=64:shed=128")
+            .unwrap();
+        assert_eq!(s.model, "sim8");
+        assert_eq!(s.strategy.as_deref(), Some("origami/6"));
+        assert_eq!(s.device.as_deref(), Some("gpu"));
+        assert_eq!(s.weight, 2.0);
+        assert_eq!(s.slo_ms, Some(20.0));
+        assert_eq!(s.rps, Some(500.0));
+        assert_eq!(s.inflight, Some(64));
+        assert_eq!(s.shed_depth, Some(128));
+
+        // suffix order is free; unspecified limits stay None
+        let s = ModelSpec::parse("sim16:rps=10.5").unwrap();
+        assert_eq!(s.rps, Some(10.5));
+        assert_eq!(s.inflight, None);
+        assert_eq!(s.shed_depth, None);
+        assert_eq!(s.slo_ms, None);
+
+        assert!(ModelSpec::parse("sim8:rps=0").is_err());
+        assert!(ModelSpec::parse("sim8:rps=fast").is_err());
+        assert!(ModelSpec::parse("sim8:inflight=0").is_err());
+        assert!(ModelSpec::parse("sim8:inflight=-2").is_err());
+        assert!(ModelSpec::parse("sim8:shed=0").is_err());
+        assert!(ModelSpec::parse("sim8:quota=3").is_err(), "unknown key");
+        assert!(ModelSpec::parse("sim8:rps").is_err(), "missing value");
+
+        // the limits flow into the per-model config
+        let base = Config::default();
+        let cfg = ModelSpec::parse("sim8:rps=100:inflight=8:shed=32")
+            .unwrap()
+            .apply(&base);
+        assert_eq!(cfg.rps, 100.0);
+        assert_eq!(cfg.inflight, 8);
+        assert_eq!(cfg.shed_depth, 32);
+        let cfg = ModelSpec::parse("sim8").unwrap().apply(&base);
+        assert_eq!(cfg.rps, base.rps, "no limits in the spec inherits");
+    }
+
+    #[test]
+    fn admission_args_parse_and_roundtrip() {
+        let args = Args::parse(
+            "serve --models sim8 --rps 250 --admission-burst 16 --inflight 32 \
+             --shed-depth 64 --shed-policy degrade --degrade-strategy slalom"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = Config::from_args(&args).unwrap();
+        assert_eq!(c.rps, 250.0);
+        assert_eq!(c.admission_burst, 16.0);
+        assert_eq!(c.inflight, 32);
+        assert_eq!(c.shed_depth, 64);
+        assert_eq!(c.shed_policy, "degrade");
+        assert_eq!(c.degrade_strategy, "slalom");
+        // round-trips through JSON
+        let v = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&v);
+        assert_eq!(c2.rps, 250.0);
+        assert_eq!(c2.admission_burst, 16.0);
+        assert_eq!(c2.inflight, 32);
+        assert_eq!(c2.shed_depth, 64);
+        assert_eq!(c2.shed_policy, "degrade");
+        assert_eq!(c2.degrade_strategy, "slalom");
+
+        // a bad shed policy is rejected on both config paths
+        let bad = Args::parse(
+            "serve --shed-policy drop"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        let dir = std::env::temp_dir().join("origami-test-admission-config");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, r#"{"shed_policy": "DROP"}"#).unwrap();
+        assert!(Config::from_file(&path).is_err());
     }
 
     #[test]

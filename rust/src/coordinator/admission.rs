@@ -1,0 +1,359 @@
+//! Per-tenant admission control: token-bucket rate limits, in-flight
+//! concurrency quotas and queue-depth shedding.
+//!
+//! The fabric's weighted-fair queue (PR 2) and tail-batch splitting
+//! (PR 3) meter *service* fairly — but they admit unbounded *demand*: a
+//! rogue tenant bursting 10x its share still parks task-sized quanta of
+//! work in front of every other tenant's tails and grows its backlog
+//! without limit.  This module bounds demand at the deployment door,
+//! per tenant, with three independent mechanisms:
+//!
+//! 1. **Token-bucket rate limit** ([`TokenBucket`]).  Sustained
+//!    admitted throughput is capped at `rps` with a configurable burst
+//!    allowance; over-rate requests are rejected synchronously with a
+//!    retry-after hint computed from the bucket's refill deficit.
+//! 2. **In-flight quota** ([`InflightPermit`]).  At most `inflight`
+//!    requests of a tenant may be inside the serving stack at once.
+//!    The permit is a drop guard carried *by the request itself*, so
+//!    the slot is released exactly when the request leaves the system —
+//!    reply sent, error path, or failed submit — and can never leak.
+//! 3. **Queue-depth shedding.**  Once a tenant's tier-1 backlog reaches
+//!    `shed_depth`, further requests are shed: rejected, or — under
+//!    [`ShedPolicy::Degrade`] — rerouted to a cheaper strategy tier
+//!    (e.g. an enclave-only `baseline2` pool that stays off the shared
+//!    tier-2 lanes entirely).
+//!
+//! The bucket is parameterized on an external clock (`now_ms`), not
+//! `Instant::now()`: the live deployment feeds it wall time from its
+//! epoch, while the deterministic serving simulator
+//! ([`crate::harness::sim`]) feeds it the *same* `SimClock` that drives
+//! autoscaler ticks — so replayed traces make identical admission and
+//! scaling decisions on every run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Per-tenant admission limits.  A zero disables that mechanism, so
+/// `AdmissionLimits::default()` admits everything.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct AdmissionLimits {
+    /// Sustained admitted request rate (requests/second); 0 = unlimited.
+    pub rps: f64,
+    /// Token-bucket capacity (requests of burst allowance); 0 derives
+    /// `max(1, rps / 10)` — a tenth of a second of rate.
+    pub burst: f64,
+    /// Maximum in-flight requests; 0 = unlimited.
+    pub inflight: usize,
+    /// Tier-1 queue depth at which further requests are shed; 0 = off.
+    pub shed_depth: usize,
+}
+
+/// What to do with a request the shed threshold rejects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// Reject with a typed error (the client retries later).
+    #[default]
+    Reject,
+    /// Fall back to the model's cheaper strategy tier (when one is
+    /// deployed); otherwise behaves like [`ShedPolicy::Reject`].
+    Degrade,
+}
+
+/// Token bucket over an external millisecond clock.
+///
+/// Refill is continuous: `take` first credits `rate × elapsed` tokens
+/// (clamped to the burst capacity), so refill works identically across
+/// any window rotation or tick cadence — the bucket has no windows of
+/// its own, only the caller's clock.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    rate_per_ms: f64,
+    burst: f64,
+    tokens: f64,
+    last_ms: f64,
+}
+
+impl TokenBucket {
+    /// A bucket admitting `rps` sustained with `burst` capacity
+    /// (`burst <= 0` derives `max(1, rps / 10)`).  Starts full.  The
+    /// capacity floor is one token: a fractional capacity could never
+    /// reach the one-token cost of a request, bricking the tenant.
+    pub fn new(rps: f64, burst: f64) -> Self {
+        let rps = rps.max(0.0);
+        let burst = if burst > 0.0 {
+            burst.max(1.0)
+        } else {
+            (rps / 10.0).max(1.0)
+        };
+        Self {
+            rate_per_ms: rps / 1e3,
+            burst,
+            tokens: burst,
+            last_ms: 0.0,
+        }
+    }
+
+    /// Take one token at `now_ms`; on refusal returns the milliseconds
+    /// until a token will be available (the retry-after hint).  A
+    /// non-monotone clock sample never un-refills the bucket.
+    pub fn try_take(&mut self, now_ms: f64) -> Result<(), f64> {
+        if now_ms > self.last_ms {
+            self.tokens =
+                (self.tokens + (now_ms - self.last_ms) * self.rate_per_ms).min(self.burst);
+            self.last_ms = now_ms;
+        }
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else if self.rate_per_ms > 0.0 {
+            Err((1.0 - self.tokens) / self.rate_per_ms)
+        } else {
+            Err(f64::INFINITY)
+        }
+    }
+
+    /// Tokens currently available (diagnostics/tests).
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// Drop guard for one in-flight admission slot.  Carried by the
+/// [`InferRequest`](super::api::InferRequest) it admitted, so the slot
+/// frees exactly when the request is dropped — after its reply is sent,
+/// on any error path, or when a submit fails before enqueueing.
+#[derive(Debug)]
+pub struct InflightPermit {
+    gauge: Arc<AtomicU64>,
+}
+
+impl Drop for InflightPermit {
+    fn drop(&mut self) {
+        self.gauge.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Why a request was refused admission (policy-level; the deployment
+/// maps this onto [`AdmissionError`](super::AdmissionError) with the
+/// model name and telemetry-derived retry hints attached).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmissionDenial {
+    /// The token bucket is empty; a token arrives in `retry_after_ms`.
+    RateLimited { retry_after_ms: f64 },
+    /// The in-flight quota is saturated.
+    QuotaExceeded { limit: usize, inflight: usize },
+    /// The tenant's tier-1 backlog reached the shed threshold.
+    Shed { depth: usize, threshold: usize },
+}
+
+/// One tenant's admission state: bucket + in-flight gauge + shed
+/// threshold.  `admit` is the single gate the deployment calls per
+/// request.
+pub struct TenantAdmission {
+    bucket: Option<Mutex<TokenBucket>>,
+    inflight_limit: usize,
+    inflight: Arc<AtomicU64>,
+    shed_depth: usize,
+}
+
+impl TenantAdmission {
+    pub fn new(limits: AdmissionLimits) -> Self {
+        let bucket =
+            (limits.rps > 0.0).then(|| Mutex::new(TokenBucket::new(limits.rps, limits.burst)));
+        Self {
+            bucket,
+            inflight_limit: limits.inflight,
+            inflight: Arc::new(AtomicU64::new(0)),
+            shed_depth: limits.shed_depth,
+        }
+    }
+
+    /// Gate one request at `now_ms` with the tenant's current tier-1
+    /// queue depth.  Checks run cheapest/most-reversible first — shed,
+    /// then quota, then rate — so a denial never consumes rate budget,
+    /// and a rate denial releases the quota slot it briefly held (the
+    /// permit is a drop guard).  On admission, returns the in-flight
+    /// permit the request must carry (None when no quota is configured).
+    pub fn admit(
+        &self,
+        now_ms: f64,
+        queue_depth: usize,
+    ) -> Result<Option<InflightPermit>, AdmissionDenial> {
+        if self.shed_depth > 0 && queue_depth >= self.shed_depth {
+            return Err(AdmissionDenial::Shed {
+                depth: queue_depth,
+                threshold: self.shed_depth,
+            });
+        }
+        let permit = if self.inflight_limit > 0 {
+            let mut cur = self.inflight.load(Ordering::SeqCst);
+            loop {
+                if cur as usize >= self.inflight_limit {
+                    return Err(AdmissionDenial::QuotaExceeded {
+                        limit: self.inflight_limit,
+                        inflight: cur as usize,
+                    });
+                }
+                match self.inflight.compare_exchange(
+                    cur,
+                    cur + 1,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+            Some(InflightPermit {
+                gauge: self.inflight.clone(),
+            })
+        } else {
+            None
+        };
+        if let Some(bucket) = &self.bucket {
+            if let Err(retry_after_ms) = bucket.lock().unwrap().try_take(now_ms) {
+                // `permit` drops here, releasing the slot it just took
+                return Err(AdmissionDenial::RateLimited { retry_after_ms });
+            }
+        }
+        Ok(permit)
+    }
+
+    /// Requests currently holding an in-flight slot.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_refills_across_window_rotations() {
+        // 100 rps = 0.1 tokens/ms, burst 5.  Drain the burst at t=0,
+        // then advance the clock in uneven "window" steps: the credit
+        // must accrue continuously across every rotation boundary, not
+        // reset or double-count at them.
+        let mut b = TokenBucket::new(100.0, 5.0);
+        for _ in 0..5 {
+            assert!(b.try_take(0.0).is_ok());
+        }
+        let retry = b.try_take(0.0).unwrap_err();
+        assert!((retry - 10.0).abs() < 1e-9, "1 token / 0.1 per ms = 10 ms");
+
+        // 4 ms + 6 ms of refill across a rotation = exactly 1 token
+        assert!(b.try_take(4.0).is_err(), "0.4 tokens is not enough");
+        assert!(b.try_take(10.0).is_ok());
+        assert!(b.try_take(10.0).is_err(), "credit was spent, not doubled");
+
+        // a long idle period clamps at the burst capacity
+        assert!(b.try_take(1e6).is_ok());
+        for _ in 0..4 {
+            assert!(b.try_take(1e6).is_ok());
+        }
+        assert!(b.try_take(1e6).is_err(), "burst capped at 5");
+
+        // a non-monotone clock sample cannot mint credit
+        let before = b.tokens();
+        assert!(b.try_take(0.0).is_err());
+        assert!(b.tokens() <= before + 1e-12);
+    }
+
+    #[test]
+    fn bucket_derives_burst_and_hints_retry() {
+        let mut b = TokenBucket::new(5.0, 0.0);
+        assert!(b.try_take(0.0).is_ok(), "derived burst is at least 1");
+        let retry = b.try_take(0.0).unwrap_err();
+        assert!((retry - 200.0).abs() < 1e-9, "5 rps → 200 ms per token");
+        // a fractional configured burst is floored to one token — a
+        // sub-1.0 capacity could never afford a request and would brick
+        // the tenant with retry hints that can never come true
+        let mut b = TokenBucket::new(100.0, 0.5);
+        assert!(b.try_take(0.0).is_ok(), "fractional burst floored to 1");
+        assert!(b.try_take(1_000.0).is_ok(), "and still refills normally");
+    }
+
+    #[test]
+    fn quota_slots_release_on_drop_not_on_success_paths_only() {
+        // "failed submit" is modeled by dropping the permit without ever
+        // replying — the drop guard must return the slot either way.
+        let a = TenantAdmission::new(AdmissionLimits {
+            inflight: 2,
+            ..AdmissionLimits::default()
+        });
+        let p1 = a.admit(0.0, 0).unwrap();
+        let p2 = a.admit(0.0, 0).unwrap();
+        assert!(p1.is_some() && p2.is_some());
+        assert_eq!(a.in_flight(), 2);
+        let denial = a.admit(0.0, 0).unwrap_err();
+        assert_eq!(
+            denial,
+            AdmissionDenial::QuotaExceeded {
+                limit: 2,
+                inflight: 2
+            }
+        );
+        drop(p1); // the failed-submit path: request never entered a pool
+        assert_eq!(a.in_flight(), 1, "no leaked in-flight slot");
+        let p3 = a.admit(0.0, 0).expect("freed slot is reusable");
+        assert!(p3.is_some());
+        assert_eq!(a.in_flight(), 2);
+        drop(p2);
+        drop(p3);
+        assert_eq!(a.in_flight(), 0);
+    }
+
+    #[test]
+    fn rate_denial_releases_the_quota_slot_it_held() {
+        let a = TenantAdmission::new(AdmissionLimits {
+            rps: 1.0,
+            burst: 1.0,
+            inflight: 1,
+            ..AdmissionLimits::default()
+        });
+        let p = a.admit(0.0, 0).unwrap();
+        assert_eq!(a.in_flight(), 1);
+        drop(p);
+        // bucket is now empty; quota has a free slot.  The rate denial
+        // must not leave that slot acquired.
+        match a.admit(0.0, 0).unwrap_err() {
+            AdmissionDenial::RateLimited { retry_after_ms } => {
+                assert!(retry_after_ms > 0.0)
+            }
+            other => panic!("expected a rate denial, got {other:?}"),
+        }
+        assert_eq!(a.in_flight(), 0, "rate denial leaked an in-flight slot");
+    }
+
+    #[test]
+    fn shed_threshold_fires_before_rate_or_quota() {
+        let a = TenantAdmission::new(AdmissionLimits {
+            rps: 1000.0,
+            burst: 8.0,
+            inflight: 8,
+            shed_depth: 3,
+        });
+        let held = a.admit(0.0, 2).expect("under the threshold");
+        assert!(held.is_some(), "quota configured → a permit is issued");
+        assert_eq!(
+            a.admit(0.0, 3).unwrap_err(),
+            AdmissionDenial::Shed {
+                depth: 3,
+                threshold: 3
+            }
+        );
+        assert_eq!(a.in_flight(), 1, "shed consumed no quota slot");
+        drop(held);
+        assert_eq!(a.in_flight(), 0);
+    }
+
+    #[test]
+    fn default_limits_admit_everything_without_permits() {
+        let a = TenantAdmission::new(AdmissionLimits::default());
+        for i in 0..100 {
+            assert!(a.admit(i as f64, i).unwrap().is_none());
+        }
+        assert_eq!(a.in_flight(), 0);
+    }
+}

@@ -2,6 +2,7 @@
 
 use std::time::Instant;
 
+use super::admission::InflightPermit;
 use crate::enclave::cost::Ledger;
 use crate::util::threadpool::Channel;
 
@@ -18,6 +19,10 @@ pub struct InferRequest {
     pub submitted_at: Instant,
     /// Where the response goes.
     pub reply: Channel<InferResponse>,
+    /// In-flight admission slot the request occupies (deployment quota).
+    /// Released when the request is dropped — after its reply is sent or
+    /// an error path discards it — so slots can never leak.
+    pub permit: Option<InflightPermit>,
 }
 
 impl InferRequest {
@@ -36,6 +41,7 @@ impl InferRequest {
                 session,
                 submitted_at: Instant::now(),
                 reply: reply.clone(),
+                permit: None,
             },
             reply,
         )

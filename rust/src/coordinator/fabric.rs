@@ -49,6 +49,14 @@
 //!    task's fabric queue wait, tier-2 cost and per-request end-to-end
 //!    latency into the deployment's [`TelemetryHub`]; the SLO autoscaler
 //!    reads windowed p95s from it.
+//! 6. **Deadline-aware fair popping** (PR 4).  Within a tenant's
+//!    weighted-fair entitlement, the queue pops the task with the least
+//!    SLO slack (earliest rider submit instant + tenant SLO − now)
+//!    instead of FIFO — tier-1 shards complete out of order, so arrival
+//!    order is not urgency order.  Cross-tenant shares are untouched
+//!    (the fair clock never sees *which* of a tenant's tasks popped),
+//!    property-tested in `harness/prop.rs`; tenants without an SLO stay
+//!    FIFO.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -287,6 +295,17 @@ impl FabricMetrics {
     }
 }
 
+/// One queued tier-2 task plus its scheduling stamps.
+struct QueuedTask {
+    /// When the task entered the fair queue (queue-wait telemetry).
+    enqueued: Instant,
+    /// SLO deadline: the earliest rider request's submit instant plus
+    /// the tenant's SLO.  None when the tenant declares no SLO — those
+    /// tenants pop FIFO.
+    deadline: Option<Instant>,
+    task: Tier2Task,
+}
+
 struct FairQueueInner {
     /// Weighted-fair policy state (queue-wide virtual clock + per-tenant
     /// vtimes): tenants returning from idle are floored to the clock
@@ -294,8 +313,13 @@ struct FairQueueInner {
     /// oscillates through zero constantly while lanes are in flight),
     /// so idle time can never be banked as a burst credit.
     clock: FairClock,
-    /// Per-tenant deques of (enqueue instant, task).
-    tenants: BTreeMap<String, VecDeque<(Instant, Tier2Task)>>,
+    /// Per-tenant deques of queued tasks.
+    tenants: BTreeMap<String, VecDeque<QueuedTask>>,
+    /// Per-tenant latency objectives (ms): tasks of an SLO tenant pop
+    /// least-slack-first *within* that tenant's weighted-fair
+    /// entitlement, so deadline ordering never changes cross-tenant
+    /// shares (property-tested in `harness/prop.rs`).
+    slos: HashMap<String, f64>,
     len: usize,
     closed: bool,
 }
@@ -312,6 +336,13 @@ enum Pop {
 /// times the virtual service of a single-request tail — which is what
 /// makes tail-batch splitting fairness-neutral: the chunks of a split
 /// task cost exactly what the unsplit task would have.
+///
+/// Within one tenant's entitlement, pops are deadline-aware: the task
+/// with the least SLO slack (earliest rider submit instant + tenant SLO
+/// − now) goes first.  Tier-1 shards complete batches out of order, so
+/// fabric-arrival order is not urgency order — least-slack popping
+/// serves the oldest-started work first without touching the fair
+/// clock's cross-tenant arithmetic (no-SLO tenants stay FIFO).
 struct FairQueue {
     inner: Mutex<FairQueueInner>,
     not_empty: Condvar,
@@ -325,6 +356,7 @@ impl FairQueue {
             inner: Mutex::new(FairQueueInner {
                 clock: FairClock::new(),
                 tenants: BTreeMap::new(),
+                slos: HashMap::new(),
                 len: 0,
                 closed: false,
             }),
@@ -334,11 +366,19 @@ impl FairQueue {
         }
     }
 
-    /// Declare a tenant (idempotent; updates the weight).
-    fn register(&self, model: &str, weight: f64) {
+    /// Declare a tenant (idempotent; updates the weight and SLO).
+    fn register(&self, model: &str, weight: f64, slo_ms: Option<f64>) {
         let mut g = self.inner.lock().unwrap();
         g.clock.register(model, weight);
         g.tenants.entry(model.to_string()).or_default();
+        match slo_ms {
+            Some(slo) if slo > 0.0 => {
+                g.slos.insert(model.to_string(), slo);
+            }
+            _ => {
+                g.slos.remove(model);
+            }
+        }
     }
 
     /// Blocking push with per-tenant backpressure; Err(task) when closed.
@@ -362,8 +402,22 @@ impl FairQueue {
             g = self.not_full.wait(g).unwrap();
         }
         g.clock.on_enqueue(&task.model);
+        let deadline = g.slos.get(&task.model).map(|&slo| {
+            // slack anchors at the oldest rider's *submit* instant: that
+            // is the wall clock the tenant's SLO is written against
+            task.requests
+                .iter()
+                .map(|r| r.submitted_at)
+                .min()
+                .unwrap_or(task.started)
+                + Duration::from_secs_f64(slo / 1e3)
+        });
         let deque = g.tenants.entry(task.model.clone()).or_default();
-        deque.push_back((Instant::now(), task));
+        deque.push_back(QueuedTask {
+            enqueued: Instant::now(),
+            deadline,
+            task,
+        });
         g.len += 1;
         self.not_empty.notify_one();
         Ok(())
@@ -371,23 +425,36 @@ impl FairQueue {
 
     /// Weighted-fair pop: the non-empty tenant with the least weighted
     /// virtual service goes first (ties break lexicographically, so the
-    /// order is deterministic).
+    /// order is deterministic); within that tenant, the task with the
+    /// least SLO slack (FIFO for no-SLO tenants).
     fn pop_timeout(&self, timeout: Duration) -> Pop {
         let deadline = Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(name) = g.clock.pick() {
-                let (enqueued, task) = g
+                let deque = g
                     .tenants
                     .get_mut(&name)
-                    .and_then(|d| d.pop_front())
                     .expect("fair clock and deques agree on backlog");
-                let cost = task.requests.len().max(1) as f64;
+                // least SLO slack first; entries without deadlines (the
+                // tenant has no SLO) keep their FIFO position.  Ties
+                // break on queue position, so the order is stable.
+                let idx = deque
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, e)| e.deadline.map(|d| (d, i)))
+                    .min()
+                    .map(|(_, i)| i)
+                    .unwrap_or(0);
+                let entry = deque
+                    .remove(idx)
+                    .expect("fair clock and deques agree on backlog");
+                let cost = entry.task.requests.len().max(1) as f64;
                 g.clock.on_dequeue(&name, cost);
                 g.len -= 1;
                 self.not_full.notify_all();
-                let wait_ms = enqueued.elapsed().as_secs_f64() * 1e3;
-                return Pop::Task(task, wait_ms);
+                let wait_ms = entry.enqueued.elapsed().as_secs_f64() * 1e3;
+                return Pop::Task(entry.task, wait_ms);
             }
             if g.closed {
                 return Pop::Closed;
@@ -600,6 +667,23 @@ impl LaneFabric {
     where
         F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
     {
+        self.attach_with_slo(model, weight, None, factory)
+    }
+
+    /// [`LaneFabric::attach`] with a latency objective: the fair queue
+    /// pops this tenant's tasks least-SLO-slack-first within its
+    /// weighted entitlement (cross-tenant shares are unchanged; see
+    /// `harness/prop.rs`).  `None` (or a non-positive SLO) keeps FIFO.
+    pub fn attach_with_slo<F>(
+        &self,
+        model: &str,
+        weight: f64,
+        slo_ms: Option<f64>,
+        factory: F,
+    ) -> Result<FabricHandle>
+    where
+        F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
+    {
         {
             let mut g = self.shared.tenants.lock().unwrap();
             anyhow::ensure!(
@@ -613,7 +697,7 @@ impl LaneFabric {
                 },
             );
         }
-        self.shared.queue.register(model, weight);
+        self.shared.queue.register(model, weight, slo_ms);
         Ok(self.handle())
     }
 
@@ -899,8 +983,8 @@ mod tests {
     #[test]
     fn fair_queue_interleaves_equal_weights() {
         let q = FairQueue::new(16);
-        q.register("a", 1.0);
-        q.register("b", 1.0);
+        q.register("a", 1.0, None);
+        q.register("b", 1.0, None);
         let mut keep = Vec::new();
         for m in ["a", "a", "a", "a", "b", "b"] {
             let (t, r) = task(m);
@@ -914,8 +998,8 @@ mod tests {
     #[test]
     fn fair_queue_respects_weights() {
         let q = FairQueue::new(16);
-        q.register("a", 2.0);
-        q.register("b", 1.0);
+        q.register("a", 2.0, None);
+        q.register("b", 1.0, None);
         let mut keep = Vec::new();
         for _ in 0..4 {
             let (t, r) = task("a");
@@ -933,8 +1017,8 @@ mod tests {
     #[test]
     fn returning_tenant_is_floored_not_bursty() {
         let q = FairQueue::new(16);
-        q.register("a", 1.0);
-        q.register("b", 1.0);
+        q.register("a", 1.0, None);
+        q.register("b", 1.0, None);
         let mut keep = Vec::new();
         for _ in 0..4 {
             let (t, r) = task("b");
@@ -962,8 +1046,8 @@ mod tests {
         // (to the queue-wide virtual clock), or it would bank its idle
         // time and lock out the hot tenant for a long burst.
         let q = FairQueue::new(16);
-        q.register("hot", 1.0);
-        q.register("idle", 1.0);
+        q.register("hot", 1.0, None);
+        q.register("idle", 1.0, None);
         let mut keep = Vec::new();
         for _ in 0..4 {
             let (t, r) = task("hot");
@@ -984,10 +1068,99 @@ mod tests {
         assert_eq!(order, vec!["hot", "idle", "hot", "idle"]);
     }
 
+    /// Age a task's riders so its SLO deadline sits `ms` in the past
+    /// relative to a fresh task (tier-1 shards finish out of order, so
+    /// an older request can reach the fabric *after* a younger one).
+    fn age_task(task: &mut Tier2Task, ms: u64) {
+        for req in &mut task.requests {
+            req.submitted_at = req
+                .submitted_at
+                .checked_sub(Duration::from_millis(ms))
+                .expect("clock has been up longer than the test offset");
+        }
+    }
+
+    #[test]
+    fn slo_tenant_pops_least_slack_first_no_slo_stays_fifo() {
+        let q = FairQueue::new(16);
+        q.register("slo", 1.0, Some(50.0));
+        q.register("fifo", 1.0, None);
+        let mut keep = Vec::new();
+        // "slo": a fresh task enqueues BEFORE an older (more urgent) one
+        let (mut young, r) = task_sized("slo", 1);
+        keep.push(r);
+        let (mut old, r) = task_sized("slo", 1);
+        keep.push(r);
+        young.requests[0].id = 101;
+        old.requests[0].id = 102;
+        age_task(&mut old, 40); // 40 ms less slack than `young`
+        let young_id = young.requests[0].id;
+        let old_id = old.requests[0].id;
+        q.push(young).map_err(|_| ()).unwrap();
+        q.push(old).map_err(|_| ()).unwrap();
+        // "fifo": same arrival shape, but no SLO — enqueue order rules
+        let (mut f_young, r) = task_sized("fifo", 1);
+        keep.push(r);
+        let (mut f_old, r) = task_sized("fifo", 1);
+        keep.push(r);
+        f_young.requests[0].id = 201;
+        f_old.requests[0].id = 202;
+        age_task(&mut f_old, 40);
+        let f_young_id = f_young.requests[0].id;
+        q.push(f_young).map_err(|_| ()).unwrap();
+        q.push(f_old).map_err(|_| ()).unwrap();
+
+        let mut popped = Vec::new();
+        for _ in 0..4 {
+            match q.pop_timeout(Duration::from_millis(100)) {
+                Pop::Task(t, _) => popped.push((t.model.clone(), t.requests[0].id)),
+                _ => panic!("expected a task"),
+            }
+        }
+        // cross-tenant order is the fair clock's (lexicographic tie
+        // break), untouched by deadlines
+        assert_eq!(popped[0].0, "fifo");
+        assert_eq!(popped[1].0, "slo");
+        // within "slo", the aged task overtakes the fresh one…
+        let slo_ids: Vec<u64> = popped
+            .iter()
+            .filter(|(m, _)| m == "slo")
+            .map(|&(_, id)| id)
+            .collect();
+        assert_eq!(slo_ids, vec![old_id, young_id], "least slack first");
+        // …while "fifo" keeps enqueue order despite the same age skew
+        let fifo_first = popped
+            .iter()
+            .find(|(m, _)| m == "fifo")
+            .map(|&(_, id)| id)
+            .unwrap();
+        assert_eq!(fifo_first, f_young_id, "no-SLO tenants stay FIFO");
+    }
+
+    #[test]
+    fn deadline_popping_leaves_cross_tenant_interleave_unchanged() {
+        // Same workload through an SLO-bearing and a FIFO registration:
+        // the *tenant* pop sequence must be identical — deadlines only
+        // reorder within a tenant's own deque.
+        let run = |slo: Option<f64>| -> Vec<String> {
+            let q = FairQueue::new(16);
+            q.register("a", 1.0, slo);
+            q.register("b", 1.0, slo);
+            let mut keep = Vec::new();
+            for m in ["a", "a", "b", "a", "b", "a"] {
+                let (t, r) = task_sized(m, 1);
+                q.push(t).map_err(|_| ()).unwrap();
+                keep.push(r);
+            }
+            (0..6).map(|_| pop_model(&q)).collect()
+        };
+        assert_eq!(run(None), run(Some(10.0)));
+    }
+
     #[test]
     fn closed_queue_rejects_push_and_drains_pops() {
         let q = FairQueue::new(4);
-        q.register("a", 1.0);
+        q.register("a", 1.0, None);
         let (t, _r) = task("a");
         q.push(t).map_err(|_| ()).unwrap();
         q.close();
@@ -1026,8 +1199,8 @@ mod tests {
         // four 1-request batches from `b`: after a's big pop, all of
         // b's singles go first.
         let q = FairQueue::new(16);
-        q.register("a", 1.0);
-        q.register("b", 1.0);
+        q.register("a", 1.0, None);
+        q.register("b", 1.0, None);
         let mut keep = Vec::new();
         let (t, r) = task_sized("a", 4);
         q.push(t).map_err(|_| ()).unwrap();

@@ -22,8 +22,9 @@
 //! ```text
 //! client ─▶ Deployment ─▶ model A pool: tier-1 shards (enclaves) ─┐
 //!   (admission:           model B pool: tier-1 shards (enclaves) ─┼─▶ LaneFabric
-//!    model, size,                                                 │   fair queue →
-//!    session binding)          autoscaler (queue depth) ──────────┘   device lanes
+//!    model, size, session                                         │   deadline-fair
+//!    binding, rate/quota/       autoscaler (depth or p95) ────────┘   queue →
+//!    shed per tenant)                                                 device lanes
 //! ```
 //!
 //! Batches form under a (max-batch, max-delay) policy — optionally
@@ -35,6 +36,7 @@
 //! the fabric lets *different models* share that tier-2 device capacity,
 //! since tails carry no enclave state at all.
 
+pub mod admission;
 pub mod api;
 pub mod batcher;
 pub mod fabric;
@@ -44,6 +46,9 @@ pub mod scheduler;
 pub mod server;
 pub mod telemetry;
 
+pub use admission::{
+    AdmissionDenial, AdmissionLimits, InflightPermit, ShedPolicy, TenantAdmission, TokenBucket,
+};
 pub use api::{InferRequest, InferResponse};
 pub use batcher::DynamicBatcher;
 pub use fabric::{
@@ -56,5 +61,6 @@ pub use router::{
 };
 pub use server::ServingEngine;
 pub use telemetry::{
-    HistogramSnapshot, LatencyHistogram, Stage, TelemetryHub, TenantTelemetry, WindowedHistogram,
+    AdmissionCounters, AdmissionSnapshot, HistogramSnapshot, LatencyHistogram, Stage,
+    TelemetryHub, TenantTelemetry, WindowedHistogram,
 };

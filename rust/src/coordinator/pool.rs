@@ -47,6 +47,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use super::admission::InflightPermit;
 use super::api::{reply_error, BatchRecord, InferRequest, InferResponse};
 use super::batcher::{DynamicBatcher, SLO_WINDOW_FRACTION};
 use super::fabric::FabricHandle;
@@ -580,8 +581,24 @@ impl WorkerPool {
         ciphertext: Vec<u8>,
         session: u64,
     ) -> Result<Channel<InferResponse>> {
+        self.submit_with_permit(model, ciphertext, session, None)
+    }
+
+    /// Submit a request carrying its deployment admission permit.  The
+    /// permit rides inside the request for its whole life — through the
+    /// batcher, tier-1 and the tier-2 sink — and is released when the
+    /// request drops (reply sent, error path, or the failed send below),
+    /// so the deployment's in-flight quota can never leak a slot.
+    pub fn submit_with_permit(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+        permit: Option<InflightPermit>,
+    ) -> Result<Channel<InferResponse>> {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let (req, reply) = InferRequest::new(id, model, ciphertext, session);
+        let (mut req, reply) = InferRequest::new(id, model, ciphertext, session);
+        req.permit = permit;
         self.ingress
             .send(req)
             .map_err(|_| anyhow::anyhow!("worker pool is shut down"))?;

@@ -22,16 +22,17 @@ use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::admission::{AdmissionDenial, AdmissionLimits, ShedPolicy, TenantAdmission};
 use super::api::InferResponse;
 use super::fabric::{FabricMetrics, FabricOptions, LaneFabric};
 use super::pool::{PoolMetrics, PoolOptions, WorkerPool};
 use super::scheduler::{BatchScheduler, Tier2Finisher};
 use super::server::ServingEngine;
-use super::telemetry::{Stage, TelemetryHub};
+use super::telemetry::{AdmissionSnapshot, Stage, TelemetryHub, TenantTelemetry};
 use crate::util::threadpool::Channel;
 
 /// A registered serving backend: the classic shared-batcher engine or
@@ -215,6 +216,38 @@ pub enum AdmissionError {
     },
     /// The model's pool refused the request (shutting down).
     Unavailable { model: String },
+    /// The tenant's token-bucket rate limit is exhausted; retry after
+    /// the hinted delay (the bucket's refill deficit, rounded up).
+    RateLimited { model: String, retry_after_ms: u64 },
+    /// The tenant's in-flight concurrency quota is saturated.  The hint
+    /// is the tenant's windowed end-to-end p95 — the expected time for
+    /// an in-flight slot to free (0 when telemetry has no samples yet).
+    QuotaExceeded {
+        model: String,
+        limit: usize,
+        retry_after_ms: u64,
+    },
+    /// The tenant's tier-1 backlog reached its shed threshold (and no
+    /// degraded tier absorbed the request).  The hint is the tenant's
+    /// windowed queue-wait p95 (0 when telemetry has no samples yet).
+    Shed {
+        model: String,
+        depth: usize,
+        threshold: usize,
+        retry_after_ms: u64,
+    },
+}
+
+impl AdmissionError {
+    /// Client back-off hint, when the failure is load-dependent.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            AdmissionError::RateLimited { retry_after_ms, .. }
+            | AdmissionError::QuotaExceeded { retry_after_ms, .. }
+            | AdmissionError::Shed { retry_after_ms, .. } => Some(*retry_after_ms),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for AdmissionError {
@@ -242,6 +275,32 @@ impl fmt::Display for AdmissionError {
             AdmissionError::Unavailable { model } => {
                 write!(f, "deployment for model `{model}` is shutting down")
             }
+            AdmissionError::RateLimited {
+                model,
+                retry_after_ms,
+            } => write!(
+                f,
+                "model `{model}` is rate-limited; retry after {retry_after_ms} ms"
+            ),
+            AdmissionError::QuotaExceeded {
+                model,
+                limit,
+                retry_after_ms,
+            } => write!(
+                f,
+                "model `{model}` has {limit} requests in flight (quota); \
+                 retry after {retry_after_ms} ms"
+            ),
+            AdmissionError::Shed {
+                model,
+                depth,
+                threshold,
+                retry_after_ms,
+            } => write!(
+                f,
+                "model `{model}` shed the request (queue depth {depth} ≥ {threshold}); \
+                 retry after {retry_after_ms} ms"
+            ),
         }
     }
 }
@@ -368,6 +427,15 @@ struct ModelEntry {
     sample_bytes: usize,
     /// Latency objective (ms) the SLO autoscaler holds this model to.
     slo_ms: Option<f64>,
+    /// Per-tenant admission gate (rate limit / quota / shed threshold).
+    admission: Arc<TenantAdmission>,
+    /// What to do with shed requests.
+    shed_policy: ShedPolicy,
+    /// Tenant a shed request degrades to under [`ShedPolicy::Degrade`]
+    /// (a cheaper strategy tier deployed for the same model geometry).
+    degrade_to: Option<String>,
+    /// The tenant's telemetry (admission counters + retry hints).
+    telemetry: Arc<TenantTelemetry>,
 }
 
 /// Hysteresis bookkeeping: the autoscaler's tick counter plus each
@@ -391,6 +459,10 @@ struct DeploymentCore {
     /// Monotone tenant-band allocator (blinding keyspace): never reused,
     /// so concurrent deploys cannot end up sharing a band.
     next_band: AtomicU64,
+    /// Clock epoch the admission token buckets run on (wall time as
+    /// milliseconds since deployment start; the simulator drives the
+    /// same bucket code from its own clock instead).
+    epoch: Instant,
 }
 
 impl DeploymentCore {
@@ -520,6 +592,26 @@ pub struct Deployment {
 /// finished burst haunts scaling decisions) scale with the tick.
 const TELEMETRY_WINDOW_MS: u64 = 1_000;
 
+/// Cap retry-after hints at one minute: an empty bucket refilling at a
+/// tiny rate would otherwise hint absurd (or non-finite) delays.
+const MAX_RETRY_HINT_MS: f64 = 60_000.0;
+
+fn clamp_hint_ms(ms: f64) -> u64 {
+    ms.clamp(0.0, MAX_RETRY_HINT_MS).ceil() as u64
+}
+
+/// Expected time for an in-flight slot to free: the tenant's windowed
+/// end-to-end p95 (0 until telemetry has samples).
+fn drain_hint_ms(t: &TenantTelemetry) -> u64 {
+    clamp_hint_ms(t.percentile(Stage::EndToEnd, 95.0))
+}
+
+/// Expected backlog drain time: the tenant's windowed queue-wait p95
+/// (0 until telemetry has samples).
+fn queue_hint_ms(t: &TenantTelemetry) -> u64 {
+    clamp_hint_ms(t.percentile(Stage::QueueWait, 95.0))
+}
+
 impl Deployment {
     /// Create a deployment around a fresh lane fabric.
     pub fn new(fabric_opts: FabricOptions, policy: AutoscalePolicy) -> Self {
@@ -534,6 +626,7 @@ impl Deployment {
                 telemetry,
                 scale_state: Mutex::new(AutoscaleState::default()),
                 next_band: AtomicU64::new(0),
+                epoch: Instant::now(),
             }),
             pump: None,
             stop: Arc::new(AtomicBool::new(false)),
@@ -567,6 +660,41 @@ impl Deployment {
         S: Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static,
         F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
     {
+        self.deploy_with_admission(
+            model,
+            sample_bytes,
+            weight,
+            slo_ms,
+            AdmissionLimits::default(),
+            ShedPolicy::Reject,
+            pool_opts,
+            sched_factory,
+            finisher_factory,
+        )
+    }
+
+    /// [`Deployment::deploy`], plus per-tenant admission control: a
+    /// token-bucket rate limit, an in-flight quota and a queue-depth
+    /// shed threshold (see [`AdmissionLimits`]; zeros disable).
+    /// `shed_policy` picks what happens to shed requests — rejection, or
+    /// degradation to a cheaper tier registered with
+    /// [`Deployment::set_degrade`].
+    pub fn deploy_with_admission<S, F>(
+        &self,
+        model: &str,
+        sample_bytes: usize,
+        weight: f64,
+        slo_ms: Option<f64>,
+        limits: AdmissionLimits,
+        shed_policy: ShedPolicy,
+        pool_opts: PoolOptions,
+        sched_factory: S,
+        finisher_factory: F,
+    ) -> Result<()>
+    where
+        S: Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static,
+        F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
+    {
         // Fast duplicate check, then release: pool startup is slow
         // (factor precompute, artifact compilation) and must not stall
         // admission on a live deployment by pinning the registry lock.
@@ -580,7 +708,10 @@ impl Deployment {
         // The fabric's tenant table is the atomic claim on the model
         // name: a concurrent duplicate deploy fails here, before any
         // pool is started.
-        let handle = self.core.fabric.attach(model, weight, finisher_factory)?;
+        let handle = self
+            .core
+            .fabric
+            .attach_with_slo(model, weight, slo_ms, finisher_factory)?;
         let band = self.core.next_band.fetch_add(1, Ordering::SeqCst);
         let tenant_tel = self.core.telemetry.register(model);
         let mut pool_opts = pool_opts;
@@ -591,7 +722,7 @@ impl Deployment {
             pool_opts,
             move |domain| sched_factory(band, domain),
             handle,
-            Some(tenant_tel),
+            Some(tenant_tel.clone()),
         ));
         let mut g = self.core.models.lock().unwrap();
         g.insert(
@@ -600,8 +731,54 @@ impl Deployment {
                 pool,
                 sample_bytes,
                 slo_ms,
+                admission: Arc::new(TenantAdmission::new(limits)),
+                shed_policy,
+                degrade_to: None,
+                telemetry: tenant_tel,
             },
         );
+        Ok(())
+    }
+
+    /// Register `target` as `model`'s degraded tier: under
+    /// [`ShedPolicy::Degrade`], requests the shed threshold refuses are
+    /// rerouted to `target`'s pool (a cheaper strategy tier serving the
+    /// same model geometry) instead of being rejected.  Both tenants
+    /// must already be deployed with identical sample sizes.
+    pub fn set_degrade(&self, model: &str, target: &str) -> Result<()> {
+        anyhow::ensure!(
+            model != target,
+            "model `{model}` cannot degrade to itself"
+        );
+        let mut g = self.core.models.lock().unwrap();
+        let t = g
+            .get(target)
+            .ok_or_else(|| anyhow!("degrade target `{target}` is not deployed"))?;
+        anyhow::ensure!(
+            t.degrade_to.is_none(),
+            "degrade target `{target}` degrades further (chains are not allowed)"
+        );
+        let target_bytes = t.sample_bytes;
+        // the mirror-image chain: if `model` already serves as someone's
+        // degrade target, giving it a target of its own would chain too
+        if let Some((owner, _)) = g
+            .iter()
+            .find(|(_, e)| e.degrade_to.as_deref() == Some(model))
+        {
+            anyhow::bail!(
+                "model `{model}` is `{owner}`'s degrade target (chains are not allowed)"
+            );
+        }
+        let e = g
+            .get_mut(model)
+            .ok_or_else(|| anyhow!("model `{model}` is not deployed"))?;
+        anyhow::ensure!(
+            e.sample_bytes == target_bytes,
+            "degrade target `{target}` expects {target_bytes}-byte ciphertexts, \
+             model `{model}` expects {}",
+            e.sample_bytes
+        );
+        e.degrade_to = Some(target.to_string());
         Ok(())
     }
 
@@ -629,6 +806,12 @@ impl Deployment {
     }
 
     /// Admission-checked submit; typed rejections, never a hang.
+    ///
+    /// Gate order: route + size, session binding, then the tenant's
+    /// admission policy (shed threshold, in-flight quota, token-bucket
+    /// rate limit).  Any denial after this attempt created the session
+    /// binding releases it again, so a refused session can retry against
+    /// any model without a phantom collision (regression-pinned).
     pub fn submit(
         &self,
         model: &str,
@@ -638,7 +821,7 @@ impl Deployment {
         // snapshot the route, then drop the registry lock — a pool
         // submit can block on ingress backpressure and must not stall
         // other models' admission
-        let pool = {
+        let (pool, admission, shed_policy, degrade_to, telemetry) = {
             let g = self.core.models.lock().unwrap();
             let entry = g.get(model).ok_or_else(|| AdmissionError::UnknownModel {
                 model: model.to_string(),
@@ -655,7 +838,13 @@ impl Deployment {
                     got: ciphertext.len(),
                 });
             }
-            entry.pool.clone()
+            (
+                entry.pool.clone(),
+                entry.admission.clone(),
+                entry.shed_policy,
+                entry.degrade_to.clone(),
+                entry.telemetry.clone(),
+            )
         };
         // Session binding: first touch claims the id for this model.
         // The map grows with distinct session ids for the deployment's
@@ -678,19 +867,117 @@ impl Deployment {
                 }
             }
         };
-        match pool.submit(model, ciphertext, session) {
-            Ok(reply) => Ok(reply),
+        let unbind = |this: &Self| {
+            if newly_bound {
+                this.core.sessions.lock().unwrap().remove(&session);
+            }
+        };
+        // Admission gate: the bucket clock is wall milliseconds since
+        // the deployment epoch; depth is the tenant's tier-1 backlog.
+        let now_ms = self.core.epoch.elapsed().as_secs_f64() * 1e3;
+        let permit = match admission.admit(now_ms, pool.queue_depth()) {
+            Ok(permit) => permit,
+            Err(AdmissionDenial::Shed { depth, threshold })
+                if shed_policy == ShedPolicy::Degrade && degrade_to.is_some() =>
+            {
+                // Degrade: serve the request from the cheaper tier's
+                // pool — through that tenant's OWN admission gate, so a
+                // quota/rate/shed limit configured on the degraded tier
+                // still bounds the spillover.  The degraded tenant tags
+                // its own tasks, so fabric fairness and telemetry
+                // account it separately.
+                let target = degrade_to.unwrap();
+                let degraded = {
+                    let g = self.core.models.lock().unwrap();
+                    g.get(&target)
+                        .map(|e| (e.pool.clone(), e.admission.clone(), e.telemetry.clone()))
+                };
+                let shed = |this: &Self| {
+                    telemetry.admission().record_shed();
+                    unbind(this);
+                    AdmissionError::Shed {
+                        model: model.to_string(),
+                        depth,
+                        threshold,
+                        retry_after_ms: queue_hint_ms(&telemetry),
+                    }
+                };
+                let Some((dpool, dadm, dtel)) = degraded else {
+                    return Err(shed(self));
+                };
+                let Ok(dpermit) = dadm.admit(now_ms, dpool.queue_depth()) else {
+                    // the degraded tier is saturated too: a plain shed
+                    return Err(shed(self));
+                };
+                return match dpool.submit_with_permit(&target, ciphertext, session, dpermit) {
+                    Ok(reply) => {
+                        telemetry.admission().record_degraded();
+                        dtel.admission().record_admitted();
+                        Ok(reply)
+                    }
+                    Err(_) => {
+                        unbind(self);
+                        Err(AdmissionError::Unavailable {
+                            model: model.to_string(),
+                        })
+                    }
+                };
+            }
+            Err(denial) => {
+                unbind(self);
+                return Err(match denial {
+                    AdmissionDenial::RateLimited { retry_after_ms } => {
+                        telemetry.admission().record_rate_limited();
+                        AdmissionError::RateLimited {
+                            model: model.to_string(),
+                            retry_after_ms: clamp_hint_ms(retry_after_ms),
+                        }
+                    }
+                    AdmissionDenial::QuotaExceeded { limit, .. } => {
+                        telemetry.admission().record_quota_rejected();
+                        AdmissionError::QuotaExceeded {
+                            model: model.to_string(),
+                            limit,
+                            retry_after_ms: drain_hint_ms(&telemetry),
+                        }
+                    }
+                    AdmissionDenial::Shed { depth, threshold } => {
+                        telemetry.admission().record_shed();
+                        AdmissionError::Shed {
+                            model: model.to_string(),
+                            depth,
+                            threshold,
+                            retry_after_ms: queue_hint_ms(&telemetry),
+                        }
+                    }
+                });
+            }
+        };
+        match pool.submit_with_permit(model, ciphertext, session, permit) {
+            Ok(reply) => {
+                // counted only once the request actually entered the
+                // pool — a shutdown-time failure must not inflate the
+                // admitted audit trail
+                telemetry.admission().record_admitted();
+                Ok(reply)
+            }
             Err(_) => {
                 // the request never entered the pool: release a binding
                 // this attempt created so the session can retry anywhere
-                if newly_bound {
-                    self.core.sessions.lock().unwrap().remove(&session);
-                }
+                // (the in-flight permit was dropped with the request)
+                unbind(self);
                 Err(AdmissionError::Unavailable {
                     model: model.to_string(),
                 })
             }
         }
+    }
+
+    /// A tenant's admission counters (admitted / rate-limited / quota /
+    /// shed / degraded), when deployed.
+    pub fn admission_snapshot(&self, model: &str) -> Option<AdmissionSnapshot> {
+        let g = self.core.models.lock().unwrap();
+        g.get(model).map(|e| e.telemetry.admission().snapshot())
     }
 
     /// Blocking convenience (records client latency in the model's pool).
@@ -925,5 +1212,55 @@ mod tests {
         // typed errors flow into anyhow for callers that want that
         let any: anyhow::Error = e.into();
         assert!(format!("{any}").contains("bound to model `a`"));
+    }
+
+    #[test]
+    fn admission_denials_carry_retry_hints() {
+        let e = AdmissionError::RateLimited {
+            model: "m".into(),
+            retry_after_ms: 12,
+        };
+        assert_eq!(e.retry_after_ms(), Some(12));
+        assert!(e.to_string().contains("retry after 12 ms"));
+
+        let e = AdmissionError::QuotaExceeded {
+            model: "m".into(),
+            limit: 64,
+            retry_after_ms: 7,
+        };
+        assert_eq!(e.retry_after_ms(), Some(7));
+        assert!(e.to_string().contains("64 requests in flight"));
+
+        let e = AdmissionError::Shed {
+            model: "m".into(),
+            depth: 9,
+            threshold: 8,
+            retry_after_ms: 0,
+        };
+        assert_eq!(e.retry_after_ms(), Some(0));
+        assert!(e.to_string().contains("queue depth 9"));
+
+        let e = AdmissionError::Unavailable { model: "m".into() };
+        assert_eq!(e.retry_after_ms(), None, "shutdowns are not load hints");
+    }
+
+    #[test]
+    fn hint_clamping_is_finite_and_rounds_up() {
+        assert_eq!(clamp_hint_ms(0.0), 0);
+        assert_eq!(clamp_hint_ms(0.2), 1, "sub-ms deficits still hint 1 ms");
+        assert_eq!(clamp_hint_ms(12.0), 12);
+        assert_eq!(clamp_hint_ms(f64::INFINITY), MAX_RETRY_HINT_MS as u64);
+        assert_eq!(clamp_hint_ms(-5.0), 0);
+    }
+
+    #[test]
+    fn set_degrade_requires_deployed_tenants() {
+        let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
+        assert!(dep.set_degrade("a", "a").is_err(), "self-degrade refused");
+        assert!(
+            dep.set_degrade("a", "b").is_err(),
+            "unknown tenants refused"
+        );
+        dep.shutdown();
     }
 }

@@ -292,16 +292,91 @@ impl WindowedHistogram {
     }
 }
 
-/// One tenant's per-stage windowed histograms.
+/// Per-tenant admission outcome counters (lock-free, monotone).  The
+/// deployment's admission gate records every verdict here, so operators
+/// and tests can audit exactly how much of a tenant's demand was
+/// admitted, rate-limited, quota-rejected, shed or degraded.
+#[derive(Default)]
+pub struct AdmissionCounters {
+    admitted: AtomicU64,
+    rate_limited: AtomicU64,
+    quota_rejected: AtomicU64,
+    shed: AtomicU64,
+    degraded: AtomicU64,
+}
+
+/// An owned snapshot of one tenant's admission counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionSnapshot {
+    /// Requests admitted into the tenant's primary pool.
+    pub admitted: u64,
+    /// Requests rejected by the token-bucket rate limit.
+    pub rate_limited: u64,
+    /// Requests rejected by the in-flight concurrency quota.
+    pub quota_rejected: u64,
+    /// Requests rejected by the queue-depth shed threshold.
+    pub shed: u64,
+    /// Shed requests rerouted to the tenant's degraded tier instead of
+    /// being rejected.
+    pub degraded: u64,
+}
+
+impl AdmissionSnapshot {
+    /// Requests refused outright (every denial except degrades).
+    pub fn rejected(&self) -> u64 {
+        self.rate_limited + self.quota_rejected + self.shed
+    }
+}
+
+impl AdmissionCounters {
+    pub fn record_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rate_limited(&self) {
+        self.rate_limited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_quota_rejected(&self) {
+        self.quota_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> AdmissionSnapshot {
+        AdmissionSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rate_limited: self.rate_limited.load(Ordering::Relaxed),
+            quota_rejected: self.quota_rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One tenant's per-stage windowed histograms plus admission counters.
 pub struct TenantTelemetry {
     stages: [WindowedHistogram; 4],
+    admission: AdmissionCounters,
 }
 
 impl TenantTelemetry {
     fn new(keep: usize) -> Self {
         Self {
             stages: std::array::from_fn(|_| WindowedHistogram::new(keep)),
+            admission: AdmissionCounters::default(),
         }
+    }
+
+    /// The tenant's admission outcome counters.
+    pub fn admission(&self) -> &AdmissionCounters {
+        &self.admission
     }
 
     /// Record a latency sample for one stage.  Lock-free.
@@ -485,6 +560,30 @@ mod tests {
         assert_eq!(w.window_count(), 0, "old windows expired");
         w.record(5.0);
         assert_eq!(w.window_count(), 1);
+    }
+
+    #[test]
+    fn admission_counters_accumulate_and_snapshot() {
+        let hub = TelemetryHub::new(2);
+        let t = hub.register("sim8");
+        let a = t.admission();
+        assert_eq!(a.snapshot(), AdmissionSnapshot::default());
+        a.record_admitted();
+        a.record_admitted();
+        a.record_rate_limited();
+        a.record_quota_rejected();
+        a.record_shed();
+        a.record_degraded();
+        let s = a.snapshot();
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.rate_limited, 1);
+        assert_eq!(s.quota_rejected, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.degraded, 1);
+        assert_eq!(s.rejected(), 3, "degrades are served, not rejected");
+        // counters survive window rotation (monotone, not windowed)
+        hub.rotate_all();
+        assert_eq!(t.admission().snapshot(), s);
     }
 
     #[test]

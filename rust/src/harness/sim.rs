@@ -16,10 +16,20 @@
 //!   per-request latencies and a provisioned lane-seconds integral (the
 //!   over-provisioning metric `benches/fig16_slo_autoscale.rs` reports).
 //!
+//! Per-tenant admission control replays here too ([`SimAdmission`]):
+//! the production [`TokenBucket`] is driven by the *same* [`SimClock`]
+//! that schedules autoscaler ticks — one clock source, so a trace
+//! replays to identical admission and scaling decisions under any tick
+//! cadence (regression-pinned).  Shed requests are rejected, or — when
+//! the tenant configures a degrade latency — served off-lane by the
+//! modeled cheaper tier (production degrades to an enclave-only
+//! strategy pool whose pass-through tails add no tier-2 compute).
+//!
 //! Everything is a pure function of the trace and configuration, so
 //! tests assert exact latency distributions; the fixed seed used by CI
 //! comes from [`sim_seed`] (`ORIGAMI_SIM_SEED` overrides it).
 
+use crate::coordinator::admission::TokenBucket;
 use crate::coordinator::fabric::FairClock;
 use crate::coordinator::router::{AutoscalePolicy, ScaleSignals};
 use crate::util::rng::Rng;
@@ -148,7 +158,30 @@ impl Trace {
     }
 }
 
-/// Replay configuration: tenants, lanes, splitting, autoscaling.
+/// Per-tenant admission limits for a replay (the sim twin of
+/// `AdmissionLimits` + shed policy).  Admission runs per *request*
+/// within each batched arrival — exactly where the live deployment
+/// gates, before batching — so a partially admitted burst enqueues as a
+/// smaller, cheaper chunk.
+#[derive(Debug, Clone, Default)]
+pub struct SimAdmission {
+    /// Token-bucket rate limit (requests/s); 0 = unlimited.
+    pub rps: f64,
+    /// Bucket burst capacity; 0 derives `max(1, rps / 10)`.
+    pub burst: f64,
+    /// In-flight quota (queued + on-lane requests); 0 = unlimited.
+    pub inflight: usize,
+    /// Shed once the tenant's queued requests reach this; 0 = off.
+    pub shed_depth: usize,
+    /// Shed handling: 0 rejects; > 0 serves shed requests *off-lane* at
+    /// this fixed latency — the modeled cheaper tier.  (Production
+    /// degrades to an enclave-only pool whose pass-through tails add no
+    /// tier-2 compute; the model rounds that to zero lane cost.)
+    pub degrade_ms: f64,
+}
+
+/// Replay configuration: tenants, lanes, splitting, autoscaling,
+/// admission.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     /// (tenant, weighted-fair share) — tenants absent from the list
@@ -168,6 +201,12 @@ pub struct SimConfig {
     pub slo_ms: Option<f64>,
     /// Sliding telemetry window the simulated p95 is computed over (ms).
     pub window_ms: f64,
+    /// Per-tenant SLOs (ms): within a tenant's fair entitlement, queued
+    /// chunks pop least-SLO-slack-first, mirroring the live fabric's
+    /// deadline-aware popping (tenants absent here stay FIFO).
+    pub slos: Vec<(String, f64)>,
+    /// Per-tenant admission control (tenants absent here are unlimited).
+    pub admission: Vec<(String, SimAdmission)>,
 }
 
 impl Default for SimConfig {
@@ -180,6 +219,8 @@ impl Default for SimConfig {
             policy: None,
             slo_ms: None,
             window_ms: 100.0,
+            slos: Vec::new(),
+            admission: Vec::new(),
         }
     }
 }
@@ -191,6 +232,8 @@ pub struct SimSample {
     pub arrival_ms: f64,
     pub done_ms: f64,
     pub latency_ms: f64,
+    /// True when the cheaper degraded tier served this request.
+    pub degraded: bool,
 }
 
 /// Exact sample percentile (q in [0, 100]) — sorts in place and ranks
@@ -211,14 +254,19 @@ pub fn exact_percentile(values: &mut [f64], q: f64) -> f64 {
 pub struct SimResult {
     /// Per-*request* latency samples (a chunk of n requests yields n
     /// identical samples — every rider completes with its chunk).
+    /// Degraded requests appear with `degraded = true`.
     pub samples: Vec<SimSample>,
     /// ∫ provisioned-lanes dt over the replay, in lane-seconds — the
     /// capacity bill (over-provisioning metric).
     pub lane_seconds: f64,
     pub peak_lanes: usize,
     pub scale_events: u64,
-    /// When the last chunk finished (ms).
+    /// When the last request (lane-served or degraded) finished (ms).
     pub end_ms: f64,
+    /// Requests admission refused outright, per tenant.
+    pub rejected: BTreeMap<String, u64>,
+    /// Requests the degraded tier served, per tenant.
+    pub degraded: BTreeMap<String, u64>,
 }
 
 impl SimResult {
@@ -252,6 +300,25 @@ impl SimResult {
         }
         m
     }
+
+    /// Worst exact p95 over consecutive `window_ms` spans of completion
+    /// time — "every window met the objective", a stronger claim than
+    /// the full-run percentile (a quiet tail cannot wash out a bad
+    /// burst).  0.0 when no samples match.
+    pub fn windowed_p95(&self, tenant: Option<&str>, window_ms: f64) -> f64 {
+        let window_ms = window_ms.max(1e-9);
+        let mut windows: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+        for s in &self.samples {
+            if tenant.map(|t| s.tenant == t).unwrap_or(true) {
+                let w = (s.done_ms / window_ms).floor() as u64;
+                windows.entry(w).or_default().push(s.latency_ms);
+            }
+        }
+        windows
+            .into_values()
+            .map(|mut lat| exact_percentile(&mut lat, 95.0))
+            .fold(0.0f64, f64::max)
+    }
 }
 
 /// A queued chunk (post-split unit of lane work).
@@ -260,6 +327,17 @@ struct Chunk {
     arrival_ms: f64,
     requests: usize,
     cost_ms: f64,
+}
+
+/// One tenant's live admission state during a replay.
+struct AdmState {
+    bucket: Option<TokenBucket>,
+    inflight: usize,
+    shed_depth: usize,
+    degrade_ms: f64,
+    /// Completion times of this tenant's on-lane requests (pruned
+    /// lazily; `queued + running` is the in-flight count).
+    running: Vec<f64>,
 }
 
 /// Discrete-event replay of a trace through fair lanes (see module
@@ -278,6 +356,29 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
     for (tenant, w) in &cfg.weights {
         fair.register(tenant, *w);
     }
+    let slo_of: BTreeMap<String, f64> = cfg.slos.iter().cloned().collect();
+    // admission state runs off `clock` — the same clock that schedules
+    // autoscaler ticks below, so replays are deterministic under both
+    // policies and any tick cadence
+    let mut adm: BTreeMap<String, AdmState> = cfg
+        .admission
+        .iter()
+        .map(|(tenant, a)| {
+            (
+                tenant.clone(),
+                AdmState {
+                    bucket: (a.rps > 0.0).then(|| TokenBucket::new(a.rps, a.burst)),
+                    inflight: a.inflight,
+                    shed_depth: a.shed_depth,
+                    degrade_ms: a.degrade_ms,
+                    running: Vec::new(),
+                },
+            )
+        })
+        .collect();
+    let mut queued_reqs: BTreeMap<String, usize> = BTreeMap::new();
+    let mut rejected: BTreeMap<String, u64> = BTreeMap::new();
+    let mut degraded: BTreeMap<String, u64> = BTreeMap::new();
     let mut queues: BTreeMap<String, VecDeque<Chunk>> = BTreeMap::new();
     let mut queued_chunks = 0usize;
 
@@ -300,7 +401,10 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
 
     let mut idx = 0usize; // next arrival
     loop {
-        // 1. assign queued chunks to free lanes, fair order
+        // 1. assign queued chunks to free lanes, fair order across
+        //    tenants; least SLO slack (= earliest arrival, at one SLO
+        //    per tenant) within a tenant, FIFO for no-SLO tenants —
+        //    mirroring the live fabric's deadline-aware pop
         loop {
             let Some(tenant) = fair.pick() else { break };
             let lane = (0..desired)
@@ -312,13 +416,38 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
                         .then(a.cmp(&b))
                 });
             let Some(lane) = lane else { break };
-            let chunk = queues
-                .get_mut(&tenant)
-                .and_then(|q| q.pop_front())
-                .expect("fair clock and queues agree");
+            let chunk = {
+                let q = queues
+                    .get_mut(&tenant)
+                    .expect("fair clock and queues agree");
+                let at = if slo_of.contains_key(&tenant) {
+                    q.iter()
+                        .enumerate()
+                        .min_by(|(ia, a), (ib, b)| {
+                            a.arrival_ms
+                                .partial_cmp(&b.arrival_ms)
+                                .unwrap()
+                                .then(ia.cmp(ib))
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap()
+                } else {
+                    0
+                };
+                q.remove(at).expect("fair clock and queues agree")
+            };
             fair.on_dequeue(&tenant, chunk.requests as f64);
             queued_chunks -= 1;
+            if let Some(q) = queued_reqs.get_mut(&tenant) {
+                *q = q.saturating_sub(chunk.requests);
+            }
             let done = clock.now_ms() + chunk.cost_ms;
+            if let Some(st) = adm.get_mut(&tenant) {
+                if st.inflight > 0 {
+                    let len = st.running.len() + chunk.requests;
+                    st.running.resize(len, done);
+                }
+            }
             free_at[lane] = done;
             end_ms = end_ms.max(done);
             for _ in 0..chunk.requests {
@@ -327,6 +456,7 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
                     arrival_ms: chunk.arrival_ms,
                     done_ms: done,
                     latency_ms: done - chunk.arrival_ms,
+                    degraded: false,
                 });
             }
         }
@@ -357,18 +487,76 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
         let dt = clock.advance_to(next);
         lane_seconds += desired as f64 * dt / 1e3;
 
-        // 4. admit arrivals (splitting applied before the fair queue,
-        //    exactly like FabricHandle::submit)
+        // 4. admit arrivals.  Admission gates per *request* (like the
+        //    live deployment, before batching), on the same clock the
+        //    autoscaler ticks run on; splitting then applies to the
+        //    admitted sub-batch before the fair queue, exactly like
+        //    FabricHandle::submit.
         while idx < arrivals.len() && arrivals[idx].at_ms <= clock.now_ms() {
             let a = &arrivals[idx];
             idx += 1;
-            let chunk_req = if cfg.split_chunk > 0 && a.requests > cfg.split_chunk {
+            let per_req_cost = a.cost_ms / a.requests as f64;
+            let now = clock.now_ms();
+            let mut admit = a.requests;
+            let mut degrade = 0usize;
+            let mut reject = 0usize;
+            let mut degrade_ms = 0.0;
+            if let Some(st) = adm.get_mut(&a.tenant) {
+                st.running.retain(|&d| d > now);
+                degrade_ms = st.degrade_ms;
+                let queued = queued_reqs.get(&a.tenant).copied().unwrap_or(0);
+                admit = 0;
+                for _ in 0..a.requests {
+                    let depth = queued + admit;
+                    if st.shed_depth > 0 && depth >= st.shed_depth {
+                        if st.degrade_ms > 0.0 {
+                            degrade += 1;
+                        } else {
+                            reject += 1;
+                        }
+                        continue;
+                    }
+                    if st.inflight > 0 && depth + st.running.len() >= st.inflight {
+                        reject += 1;
+                        continue;
+                    }
+                    if let Some(b) = st.bucket.as_mut() {
+                        if b.try_take(now).is_err() {
+                            reject += 1;
+                            continue;
+                        }
+                    }
+                    admit += 1;
+                }
+            }
+            if reject > 0 {
+                *rejected.entry(a.tenant.clone()).or_insert(0) += reject as u64;
+            }
+            if degrade > 0 {
+                // the modeled cheaper tier serves off-lane at a fixed
+                // per-request cost (production: an enclave-only pool)
+                *degraded.entry(a.tenant.clone()).or_insert(0) += degrade as u64;
+                let done = now + degrade_ms;
+                end_ms = end_ms.max(done);
+                for _ in 0..degrade {
+                    samples.push(SimSample {
+                        tenant: a.tenant.clone(),
+                        arrival_ms: a.at_ms,
+                        done_ms: done,
+                        latency_ms: degrade_ms,
+                        degraded: true,
+                    });
+                }
+            }
+            if admit == 0 {
+                continue;
+            }
+            let chunk_req = if cfg.split_chunk > 0 && admit > cfg.split_chunk {
                 cfg.split_chunk
             } else {
-                a.requests
+                admit
             };
-            let per_req_cost = a.cost_ms / a.requests as f64;
-            let mut left = a.requests;
+            let mut left = admit;
             while left > 0 {
                 let take = left.min(chunk_req);
                 left -= take;
@@ -380,6 +568,7 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
                 });
                 queued_chunks += 1;
             }
+            *queued_reqs.entry(a.tenant.clone()).or_insert(0) += admit;
         }
 
         // 5. autoscaler tick (same signals + decision rule as the
@@ -389,9 +578,12 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
                 tick_no += 1;
                 let now = clock.now_ms();
                 let window_lo = now - cfg.window_ms;
+                // degraded requests are served by a separate tier (a
+                // distinct tenant in production), so they never feed
+                // this pool's p95 signal
                 let mut lat: Vec<f64> = samples
                     .iter()
-                    .filter(|s| s.done_ms <= now && s.done_ms > window_lo)
+                    .filter(|s| !s.degraded && s.done_ms <= now && s.done_ms > window_lo)
                     .map(|s| s.latency_ms)
                     .collect();
                 let p95 = if lat.is_empty() {
@@ -432,6 +624,8 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
         peak_lanes,
         scale_events,
         end_ms,
+        rejected,
+        degraded,
     }
 }
 
@@ -538,6 +732,192 @@ mod tests {
         assert!(r.peak_lanes > 1, "overload must grow lanes");
         assert!(r.scale_events >= 1);
         assert_eq!(r.count(None), 160);
+    }
+
+    #[test]
+    fn admission_rate_limit_rejects_deterministically() {
+        // 100 rps, burst 1 → 1 token per 10 ms.  Arrivals at 0, 5, 10,
+        // 15 ms: the 0 and 10 ms ones are admitted, 5 and 15 rejected.
+        let mut t = Trace::new();
+        for at in [0.0, 5.0, 10.0, 15.0] {
+            t.push(at, "a", 1, 1.0);
+        }
+        let cfg = SimConfig {
+            admission: vec![(
+                "a".into(),
+                SimAdmission {
+                    rps: 100.0,
+                    burst: 1.0,
+                    ..SimAdmission::default()
+                },
+            )],
+            ..SimConfig::default()
+        };
+        let r = replay(&cfg, &t);
+        assert_eq!(r.count(Some("a")), 2);
+        assert_eq!(r.rejected.get("a"), Some(&2));
+        assert!(r.degraded.is_empty());
+    }
+
+    #[test]
+    fn admission_and_autoscaler_share_one_clock() {
+        // The regression this pins: admission decisions must be a
+        // function of arrival times on the simulated clock, never of
+        // the autoscaler's tick cadence.  Replaying the same trace with
+        // no policy and with ticking (but never-scaling) policies at
+        // different cadences must admit/reject identically.
+        let mut t = Trace::new();
+        for i in 0..40 {
+            t.push(i as f64 * 2.5, "a", 2, 1.0);
+        }
+        let admission = vec![(
+            "a".to_string(),
+            SimAdmission {
+                rps: 400.0,
+                burst: 2.0,
+                ..SimAdmission::default()
+            },
+        )];
+        let base = SimConfig {
+            admission: admission.clone(),
+            ..SimConfig::default()
+        };
+        let never_scaling = |tick_ms: u64| SimConfig {
+            policy: Some(AutoscalePolicy {
+                high_depth_per_worker: usize::MAX,
+                low_depth_per_worker: 0,
+                tick_ms,
+                ..AutoscalePolicy::default()
+            }),
+            admission: admission.clone(),
+            ..SimConfig::default()
+        };
+        let r0 = replay(&base, &t);
+        let r1 = replay(&never_scaling(1), &t);
+        let r7 = replay(&never_scaling(7), &t);
+        assert!(r0.rejected.get("a").copied().unwrap_or(0) > 0, "limit binds");
+        for r in [&r1, &r7] {
+            assert_eq!(r.rejected, r0.rejected);
+            assert_eq!(r.degraded, r0.degraded);
+            assert_eq!(r.count(None), r0.count(None));
+            assert_eq!(r.p95(None), r0.p95(None));
+        }
+    }
+
+    #[test]
+    fn shed_requests_degrade_off_lane() {
+        // One 8-request 8 ms burst against shed_depth 2 with a 2 ms
+        // degraded tier: 2 requests are admitted (a 2 ms lane chunk),
+        // 6 degrade off-lane at 2 ms each.
+        let mut t = Trace::new();
+        t.push(0.0, "hot", 8, 8.0);
+        let cfg = SimConfig {
+            admission: vec![(
+                "hot".into(),
+                SimAdmission {
+                    shed_depth: 2,
+                    degrade_ms: 2.0,
+                    ..SimAdmission::default()
+                },
+            )],
+            ..SimConfig::default()
+        };
+        let r = replay(&cfg, &t);
+        assert_eq!(r.count(Some("hot")), 8, "every request completes");
+        assert_eq!(r.degraded.get("hot"), Some(&6));
+        assert!(r.rejected.is_empty(), "degrade mode rejects nothing");
+        let lane_served: Vec<&SimSample> =
+            r.samples.iter().filter(|s| !s.degraded).collect();
+        assert_eq!(lane_served.len(), 2);
+        for s in lane_served {
+            assert_eq!(s.latency_ms, 2.0, "2 admitted requests, 1 ms each");
+        }
+        for s in r.samples.iter().filter(|s| s.degraded) {
+            assert_eq!(s.latency_ms, 2.0);
+        }
+        assert_eq!(r.end_ms, 2.0);
+        // one provisioned lane for 2 ms — degraded work is off-lane
+        assert!((r.lane_seconds - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inflight_quota_caps_concurrent_requests() {
+        // Quota 2: at t=0, two 5 ms singles are admitted; a third at
+        // t=1 (both still queued/running) is rejected, but by t=20 the
+        // system drained and a fourth is admitted.
+        let mut t = Trace::new();
+        t.push(0.0, "a", 1, 5.0);
+        t.push(0.0, "a", 1, 5.0);
+        t.push(1.0, "a", 1, 5.0);
+        t.push(20.0, "a", 1, 5.0);
+        let cfg = SimConfig {
+            admission: vec![(
+                "a".into(),
+                SimAdmission {
+                    inflight: 2,
+                    ..SimAdmission::default()
+                },
+            )],
+            ..SimConfig::default()
+        };
+        let r = replay(&cfg, &t);
+        assert_eq!(r.count(Some("a")), 3);
+        assert_eq!(r.rejected.get("a"), Some(&1));
+    }
+
+    #[test]
+    fn tenant_slos_reorder_within_tenant_only() {
+        // Sorted traces enqueue per-tenant in arrival order, so at one
+        // SLO per tenant deadline popping is observationally FIFO — the
+        // whole replay must be unchanged (cross-tenant shares pinned).
+        let mut t = Trace::new();
+        t.push_periodic("a", 0.0, 3.0, 20, 2, 2.0);
+        t.push_periodic("b", 1.0, 4.0, 15, 1, 1.5);
+        let plain = replay(&SimConfig::default(), &t);
+        let with_slos = replay(
+            &SimConfig {
+                slos: vec![("a".into(), 10.0), ("b".into(), 5.0)],
+                ..SimConfig::default()
+            },
+            &t,
+        );
+        assert_eq!(plain.count(None), with_slos.count(None));
+        assert_eq!(plain.p95(None), with_slos.p95(None));
+        assert_eq!(plain.end_ms, with_slos.end_ms);
+        assert_eq!(
+            plain.served_by_tenant(),
+            with_slos.served_by_tenant(),
+            "deadline ordering must not move cross-tenant shares"
+        );
+    }
+
+    #[test]
+    fn windowed_p95_catches_a_bad_window() {
+        let mk = |done_ms: f64, latency_ms: f64| SimSample {
+            tenant: "a".into(),
+            arrival_ms: 0.0,
+            done_ms,
+            latency_ms,
+            degraded: false,
+        };
+        let r = SimResult {
+            // window [0,100): twenty fast samples; window [100,200):
+            // twenty slow ones.  The full-run p95 averages the two
+            // regimes away; the windowed readout must not.
+            samples: (0..20)
+                .map(|i| mk(i as f64, 1.0))
+                .chain((0..20).map(|i| mk(100.0 + i as f64, 50.0)))
+                .collect(),
+            lane_seconds: 0.0,
+            peak_lanes: 1,
+            scale_events: 0,
+            end_ms: 120.0,
+            rejected: BTreeMap::new(),
+            degraded: BTreeMap::new(),
+        };
+        assert_eq!(r.windowed_p95(Some("a"), 100.0), 50.0);
+        assert_eq!(r.windowed_p95(Some("missing"), 100.0), 0.0);
+        assert_eq!(r.windowed_p95(None, 1e9), r.p95(None), "one big window");
     }
 
     #[test]

@@ -15,8 +15,8 @@ use anyhow::{Context, Result};
 use crate::config::{Config, ModelSpec};
 use crate::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
 use crate::coordinator::{
-    AutoscalePolicy, Deployment, FabricOptions, PoolOptions, ScaleMode, ServingEngine,
-    SplitPolicy, WorkerPool,
+    AdmissionLimits, AutoscalePolicy, Deployment, FabricOptions, PoolOptions, ScaleMode,
+    ServingEngine, ShedPolicy, SplitPolicy, WorkerPool,
 };
 use crate::enclave::cost::CostModel;
 use crate::model::{Manifest, Model};
@@ -227,6 +227,26 @@ pub fn autoscale_policy_from_config(config: &Config) -> AutoscalePolicy {
     }
 }
 
+/// Per-tenant admission limits from a config (`:rps=`/`:inflight=`/
+/// `:shed=` spec suffixes land in the per-model config first).
+pub fn admission_limits_from_config(config: &Config) -> AdmissionLimits {
+    AdmissionLimits {
+        rps: config.rps.max(0.0),
+        burst: config.admission_burst.max(0.0),
+        inflight: config.inflight,
+        shed_depth: config.shed_depth,
+    }
+}
+
+/// Shed policy from a config (`--shed-policy reject|degrade`).
+pub fn shed_policy_from_config(config: &Config) -> ShedPolicy {
+    if config.shed_policy == "degrade" {
+        ShedPolicy::Degrade
+    } else {
+        ShedPolicy::Reject
+    }
+}
+
 /// Keyspace stride between tenants' blinding domains: tenant *t*'s pool
 /// draws its workers' domains from `t·STRIDE + incarnation`, where the
 /// incarnation index is the pool's monotone spawn counter (never reused,
@@ -259,23 +279,48 @@ pub fn start_pool_from_config(config: Config) -> Result<WorkerPool> {
     ))
 }
 
+/// Name suffix of a model's degraded-tier tenant (internal routing key;
+/// clients keep submitting under the primary model name).
+pub const DEGRADE_TENANT_SUFFIX: &str = "~degraded";
+
+/// Weighted-fair share of the shared lanes a model's degraded tier gets,
+/// as a fraction of the primary's weight.  Spillover is best-effort: it
+/// must not let an overloaded model double its cross-tenant share by
+/// fielding two tenants (the default `baseline2` tier adds no tier-2
+/// compute, but any other `--degrade-strategy` would).
+pub const DEGRADE_WEIGHT_FRACTION: f64 = 0.25;
+
 /// Register `config.model` in a deployment: probes the model geometry,
 /// attaches the model to the shared lane fabric with `weight`, and
-/// starts its tier-1 pool.  The deployment assigns the tenant's keyspace
-/// band under its registry lock; each worker incarnation then blinds
-/// under `band · BLIND_DOMAIN_STRIDE + domain` — disjoint across models,
+/// starts its tier-1 pool with the config's admission limits.  The
+/// deployment assigns the tenant's keyspace band under its registry
+/// lock; each worker incarnation then blinds under
+/// `band · BLIND_DOMAIN_STRIDE + domain` — disjoint across models,
 /// workers, and respawns.
+///
+/// Under `--shed-policy degrade` (with a shed threshold configured), a
+/// second tenant named `{model}~degraded` is deployed running
+/// `config.degrade_strategy` over the same model geometry, and shed
+/// requests reroute to it instead of being rejected.  The default
+/// degrade tier, `baseline2`, keeps the whole network inside the
+/// enclave: its tails are pass-through `Final` tasks that add no tier-2
+/// compute, so an overloaded tenant's spillover cannot crowd the shared
+/// lanes either.
 pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Result<()> {
     let (_, model) = executor_for(config)?;
     let sample_bytes = 4 * model.image * model.image * model.in_channels;
     let sched_cfg = config.clone();
     let fin_cfg = config.clone();
     let slo_ms = (config.slo_ms > 0.0).then_some(config.slo_ms);
-    dep.deploy(
+    let limits = admission_limits_from_config(config);
+    let shed_policy = shed_policy_from_config(config);
+    dep.deploy_with_admission(
         &config.model,
         sample_bytes,
         weight,
         slo_ms,
+        limits,
+        shed_policy,
         pool_options_from_config(config),
         move |band, domain| {
             let mut c = sched_cfg.clone();
@@ -283,7 +328,33 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
             scheduler_for(&c)
         },
         move |_lane| finisher_for(&fin_cfg),
-    )
+    )?;
+    if shed_policy == ShedPolicy::Degrade && limits.shed_depth > 0 {
+        let degraded = format!("{}{}", config.model, DEGRADE_TENANT_SUFFIX);
+        let mut dcfg = config.clone();
+        dcfg.strategy = config.degrade_strategy.clone();
+        // the degraded tier is best-effort spillover: no SLO, no limits
+        dcfg.slo_ms = 0.0;
+        let dsched_cfg = dcfg.clone();
+        let dfin_cfg = dcfg.clone();
+        dep.deploy(
+            &degraded,
+            sample_bytes,
+            weight * DEGRADE_WEIGHT_FRACTION,
+            None,
+            pool_options_from_config(&dcfg),
+            move |band, domain| {
+                let mut c = dsched_cfg.clone();
+                c.blind_domain = band * BLIND_DOMAIN_STRIDE + domain as u64;
+                // tier-1 still tags tasks by the request's model string,
+                // which is the degraded tenant name on this path
+                scheduler_for(&c)
+            },
+            move |_lane| finisher_for(&dfin_cfg),
+        )?;
+        dep.set_degrade(&config.model, &degraded)?;
+    }
+    Ok(())
 }
 
 /// Assemble a full multi-model deployment: one shared lane fabric, one

@@ -45,7 +45,12 @@
 //!   split into chunked sub-tasks ([`coordinator::SplitPolicy`]) that
 //!   interleave under the weighted-fair clock, bounding the tail
 //!   latency one tenant's burst can inflict on another — with outputs
-//!   still bit-identical to the unsplit path.
+//!   still bit-identical to the unsplit path.  Per-tenant *admission
+//!   control* ([`coordinator::admission`]) bounds demand before
+//!   batching — token-bucket rate limits, leak-proof in-flight quotas
+//!   and queue-depth shedding with an optional degrade tier — while
+//!   the fair queue pops least-SLO-slack-first within each tenant's
+//!   entitlement (cross-tenant shares unchanged).
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! model once; everything here is self-contained afterwards.  Offline

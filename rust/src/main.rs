@@ -81,8 +81,9 @@ fn print_help() {
            --no-pipeline      pool only: serialize tier-1/tier-2 again\n\
          Multi-model serve (shared tier-2 lane fabric):\n\
            --models <spec>    comma list of\n\
-                              model[=strategy[@device][*weight]][:slo=Nms]\n\
-                              e.g. sim16=origami/2*2:slo=20ms,sim8=slalom\n\
+                              model[=strategy[@device][*weight]][:key=value…]\n\
+                              keys: slo=Nms | rps=N | inflight=N | shed=N\n\
+                              e.g. sim16=origami/2*2:slo=20ms:rps=500,sim8=slalom\n\
            --lanes <n>        fabric lane count [workers]\n\
            --lane-devices <l> per-lane device cycle, e.g. cpu,gpu [device]\n\
            --min-lanes/--max-lanes, --min-workers/--max-workers\n\
@@ -95,7 +96,15 @@ fn print_help() {
            --split-tail-ms <f>  split tier-2 tails over this simulated\n\
                               cost into chunks (0 = off)\n\
            --split-tail-chunk <n>  hard per-tail request ceiling (0 = off)\n\
-           --occupancy-flush  flush partial batches while tier-2 is idle"
+           --occupancy-flush  flush partial batches while tier-2 is idle\n\
+         Admission control (per tenant; 0 = unlimited):\n\
+           --rps <f>          token-bucket rate limit (requests/s)\n\
+           --admission-burst <f>  bucket burst capacity [max(1, rps/10)]\n\
+           --inflight <n>     in-flight concurrency quota\n\
+           --shed-depth <n>   shed once the tier-1 backlog hits this\n\
+           --shed-policy <p>  reject | degrade (serve shed requests from\n\
+                              a cheaper strategy tier) [reject]\n\
+           --degrade-strategy <s>  the cheaper tier [baseline2]"
     );
 }
 
@@ -349,6 +358,16 @@ fn cmd_serve_multi(args: &Args, config: Config) -> Result<()> {
                 fmt_ms(p95),
                 fmt_ms(t.percentile(Stage::QueueWait, 95.0)),
                 slo.map(fmt_ms).unwrap_or_else(|| "-".into()),
+            );
+        }
+        println!("admission (per tenant):");
+        for name in hub.tenants() {
+            let Some(t) = hub.get(&name) else { continue };
+            let a = t.admission().snapshot();
+            println!(
+                "  {name:<8} admitted {:<5} rate-limited {:<4} quota {:<4} \
+                 shed {:<4} degraded {}",
+                a.admitted, a.rate_limited, a.quota_rejected, a.shed, a.degraded,
             );
         }
     }

@@ -1,0 +1,410 @@
+//! Admission-control acceptance: per-tenant rate limits, in-flight
+//! quotas, queue-depth shedding and the degrade tier, end to end on a
+//! live [`Deployment`].
+//!
+//! Strategy doubles with an explicit gate pin queue states
+//! deterministically (a blocked worker makes backlog growth monotone),
+//! so the shed/quota paths are exercised without wall-clock races; the
+//! launcher-path test drives real `sim8` inference and re-asserts
+//! bit-equality with the serial reference under admission.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use common::sim::{drive_deployment, tenant_load};
+use origami::config::Config;
+use origami::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
+use origami::coordinator::{
+    AdmissionError, AdmissionLimits, AutoscalePolicy, Deployment, FabricOptions, PoolOptions,
+    ShedPolicy,
+};
+use origami::enclave::cost::{Cat, CostModel, Ledger};
+use origami::launcher::{deploy_from_config, fabric_options_from_config, DEGRADE_TENANT_SUFFIX};
+use origami::runtime::{Device, ReferenceBackend, StageExecutor};
+use origami::strategies::Strategy;
+
+/// Deterministic strategy double: "probability" = session + marker.
+/// While the gate is closed, `infer` blocks — queued work behind it can
+/// only grow, which makes shed/quota states reproducible.
+struct Gate {
+    open: Arc<AtomicBool>,
+    marker: f32,
+}
+
+impl Strategy for Gate {
+    fn name(&self) -> String {
+        "gate".into()
+    }
+
+    fn setup(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn infer(
+        &mut self,
+        _ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        while !self.open.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        ledger.add_measured(Cat::DeviceCompute, 100_000);
+        Ok((0..batch)
+            .map(|i| sessions.get(i).copied().unwrap_or(0) as f32 + self.marker)
+            .collect())
+    }
+
+    fn enclave_requirement_bytes(&self) -> u64 {
+        0
+    }
+}
+
+fn open_gate() -> Arc<AtomicBool> {
+    Arc::new(AtomicBool::new(true))
+}
+
+fn gate_sched(
+    open: Arc<AtomicBool>,
+    marker: f32,
+) -> impl Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static {
+    move |_band, _domain| {
+        Ok(BatchScheduler::new(
+            Box::new(Gate {
+                open: open.clone(),
+                marker,
+            }),
+            8,
+            vec![1],
+        ))
+    }
+}
+
+fn ref_finisher() -> impl Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static {
+    |_lane| {
+        let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 1)?);
+        Ok(Tier2Finisher::new(
+            Arc::new(StageExecutor::reference(rb, CostModel::default())),
+            "sim8",
+            Device::UntrustedCpu,
+        ))
+    }
+}
+
+/// One slow shard, batch-1, no pipelining: tier-1 is the whole request.
+fn tiny_pool() -> PoolOptions {
+    PoolOptions {
+        workers: 1,
+        max_batch: 1,
+        max_delay_ms: 0.0,
+        pipeline: false,
+        ..PoolOptions::default()
+    }
+}
+
+#[test]
+fn shed_request_unbinds_its_session() {
+    let open = Arc::new(AtomicBool::new(false));
+    let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
+    dep.deploy_with_admission(
+        "gated",
+        8,
+        1.0,
+        None,
+        AdmissionLimits {
+            shed_depth: 1,
+            ..AdmissionLimits::default()
+        },
+        ShedPolicy::Reject,
+        tiny_pool(),
+        gate_sched(open.clone(), 0.0),
+        ref_finisher(),
+    )
+    .unwrap();
+    dep.deploy(
+        "other",
+        8,
+        1.0,
+        None,
+        tiny_pool(),
+        gate_sched(open_gate(), 0.5),
+        ref_finisher(),
+    )
+    .unwrap();
+
+    // with the gate closed, backlog only grows: a shed must appear
+    let mut admitted = Vec::new();
+    let mut shed_session = None;
+    for i in 0..32u64 {
+        let session = 100 + i;
+        match dep.submit("gated", vec![0u8; 8], session) {
+            Ok(reply) => admitted.push((session, reply)),
+            Err(AdmissionError::Shed {
+                model, threshold, ..
+            }) => {
+                assert_eq!(model, "gated");
+                assert_eq!(threshold, 1);
+                shed_session = Some(session);
+                break;
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    let shed_session = shed_session.expect("a blocked pool must eventually shed");
+    assert!(!admitted.is_empty(), "something was admitted before the shed");
+
+    // the shed session must not stay bound to `gated` (regression:
+    // shedding after first-touch binding used to leak the binding)…
+    let reply = dep
+        .submit("other", vec![0u8; 8], shed_session)
+        .expect("a shed session must be free to bind elsewhere");
+    let resp = reply.recv().expect("other reply");
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.probs[0], shed_session as f32 + 0.5);
+
+    // …while an *admitted* session stays bound as usual
+    let bound = admitted[0].0;
+    match dep.submit("other", vec![0u8; 8], bound) {
+        Err(AdmissionError::SessionCollision { session, .. }) => assert_eq!(session, bound),
+        Err(e) => panic!("expected a session collision, got {e}"),
+        Ok(_) => panic!("expected a session collision, got an admitted request"),
+    }
+
+    // release the gate: every admitted request completes correctly
+    open.store(true, Ordering::SeqCst);
+    for (session, reply) in admitted {
+        let resp = reply.recv().expect("gated reply");
+        assert!(resp.error.is_none(), "session {session}: {:?}", resp.error);
+        assert_eq!(resp.probs[0], session as f32);
+    }
+    let snap = dep.admission_snapshot("gated").unwrap();
+    assert!(snap.shed >= 1);
+    assert!(snap.admitted >= 1);
+    assert_eq!(snap.degraded, 0);
+    assert_eq!(snap.rate_limited, 0);
+    dep.shutdown();
+}
+
+#[test]
+fn quota_rejects_then_slots_release_on_completion() {
+    let open = Arc::new(AtomicBool::new(false));
+    let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
+    dep.deploy_with_admission(
+        "quota",
+        8,
+        1.0,
+        None,
+        AdmissionLimits {
+            inflight: 2,
+            ..AdmissionLimits::default()
+        },
+        ShedPolicy::Reject,
+        tiny_pool(),
+        gate_sched(open.clone(), 0.0),
+        ref_finisher(),
+    )
+    .unwrap();
+
+    let r1 = dep.submit("quota", vec![0u8; 8], 1).unwrap();
+    let r2 = dep.submit("quota", vec![0u8; 8], 2).unwrap();
+    match dep.submit("quota", vec![0u8; 8], 3) {
+        Err(AdmissionError::QuotaExceeded { model, limit, .. }) => {
+            assert_eq!(model, "quota");
+            assert_eq!(limit, 2);
+        }
+        Err(e) => panic!("expected a quota rejection, got {e}"),
+        Ok(_) => panic!("expected a quota rejection, got an admitted request"),
+    }
+
+    open.store(true, Ordering::SeqCst);
+    assert_eq!(r1.recv().expect("reply 1").probs[0], 1.0);
+    assert_eq!(r2.recv().expect("reply 2").probs[0], 2.0);
+
+    // permits release when the served requests drop (a hair after the
+    // reply lands) — the quota-rejected session can then be admitted
+    let mut reply3 = None;
+    for _ in 0..2000 {
+        match dep.submit("quota", vec![0u8; 8], 3) {
+            Ok(r) => {
+                reply3 = Some(r);
+                break;
+            }
+            Err(AdmissionError::QuotaExceeded { .. }) => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    let resp = reply3.expect("in-flight slots never released").recv().unwrap();
+    assert_eq!(resp.probs[0], 3.0);
+    let snap = dep.admission_snapshot("quota").unwrap();
+    assert_eq!(snap.admitted, 3);
+    assert!(snap.quota_rejected >= 1);
+    dep.shutdown();
+}
+
+#[test]
+fn rate_limited_session_is_unbound_with_a_retry_hint() {
+    let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
+    dep.deploy_with_admission(
+        "limited",
+        8,
+        1.0,
+        None,
+        AdmissionLimits {
+            rps: 1.0,
+            burst: 1.0,
+            ..AdmissionLimits::default()
+        },
+        ShedPolicy::Reject,
+        tiny_pool(),
+        gate_sched(open_gate(), 0.0),
+        ref_finisher(),
+    )
+    .unwrap();
+    dep.deploy(
+        "other",
+        8,
+        1.0,
+        None,
+        tiny_pool(),
+        gate_sched(open_gate(), 0.5),
+        ref_finisher(),
+    )
+    .unwrap();
+
+    let reply = dep.submit("limited", vec![0u8; 8], 10).unwrap();
+    assert_eq!(reply.recv().expect("first reply").probs[0], 10.0);
+
+    // the burst of 1 is spent; at 1 rps the next token is ~1 s away
+    match dep.submit("limited", vec![0u8; 8], 20) {
+        Err(e @ AdmissionError::RateLimited { .. }) => {
+            let hint = e.retry_after_ms().unwrap();
+            assert!(hint >= 1, "hint must point at the refill, got {hint}");
+        }
+        Err(e) => panic!("expected a rate limit, got {e}"),
+        Ok(_) => panic!("expected a rate limit, got an admitted request"),
+    }
+
+    // the refused session binds cleanly elsewhere (no phantom binding)
+    let reply = dep.submit("other", vec![0u8; 8], 20).unwrap();
+    assert_eq!(reply.recv().expect("other reply").probs[0], 20.5);
+
+    let snap = dep.admission_snapshot("limited").unwrap();
+    assert_eq!(snap.admitted, 1);
+    assert_eq!(snap.rate_limited, 1);
+    dep.shutdown();
+}
+
+#[test]
+fn degrade_routes_shed_requests_to_the_cheaper_tier() {
+    let open = Arc::new(AtomicBool::new(false));
+    let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
+    dep.deploy_with_admission(
+        "svc",
+        8,
+        1.0,
+        None,
+        AdmissionLimits {
+            shed_depth: 1,
+            ..AdmissionLimits::default()
+        },
+        ShedPolicy::Degrade,
+        tiny_pool(),
+        gate_sched(open.clone(), 0.0),
+        ref_finisher(),
+    )
+    .unwrap();
+    // the cheaper tier: instant service, marker 0.25
+    dep.deploy(
+        "svc~cheap",
+        8,
+        1.0,
+        None,
+        tiny_pool(),
+        gate_sched(open_gate(), 0.25),
+        ref_finisher(),
+    )
+    .unwrap();
+    dep.set_degrade("svc", "svc~cheap").unwrap();
+    // degrade chains are refused ("svc" already degrades)
+    assert!(dep.set_degrade("svc~cheap", "svc").is_err());
+
+    let mut replies = Vec::new();
+    for i in 0..8u64 {
+        let session = 500 + i;
+        let reply = dep.submit("svc", vec![0u8; 8], session).unwrap();
+        replies.push((session, reply));
+    }
+    let snap = dep.admission_snapshot("svc").unwrap();
+    assert!(snap.degraded >= 1, "the blocked pool must degrade overflow");
+    assert_eq!(snap.shed, 0, "degrades are not counted as shed rejections");
+    assert_eq!(snap.admitted + snap.degraded, 8, "every request was served");
+
+    // every request gets exactly one reply: primary marker 0.0 once the
+    // gate opens, degraded marker 0.25 straight from the cheap tier
+    open.store(true, Ordering::SeqCst);
+    let mut degraded_seen = 0u64;
+    for (session, reply) in replies {
+        let resp = reply.recv().expect("reply");
+        assert!(resp.error.is_none(), "session {session}: {:?}", resp.error);
+        let p = resp.probs[0];
+        if p == session as f32 + 0.25 {
+            degraded_seen += 1;
+        } else {
+            assert_eq!(p, session as f32, "session {session}: unexpected output");
+        }
+    }
+    assert_eq!(degraded_seen, snap.degraded);
+    dep.shutdown();
+}
+
+/// The launcher path: admission limits + degrade tier from a `Config`,
+/// serving real `sim8` private inference — admitted requests stay
+/// bit-identical to the serial reference.
+#[test]
+fn launcher_wires_admission_and_degrade_tier_from_config() {
+    let cfg = Config {
+        model: "sim8".into(),
+        strategy: "origami/6".into(),
+        workers: 1,
+        max_batch: 2,
+        max_delay_ms: 0.2,
+        pool_epochs: 16,
+        pipeline: true,
+        rps: 1e6,
+        admission_burst: 64.0,
+        inflight: 256,
+        shed_depth: 1000,
+        shed_policy: "degrade".into(),
+        degrade_strategy: "baseline2".into(),
+        ..Config::default()
+    };
+    let dep = Deployment::new(
+        fabric_options_from_config(&cfg).unwrap(),
+        AutoscalePolicy::default(),
+    );
+    deploy_from_config(&dep, &cfg, 1.0).unwrap();
+    assert_eq!(
+        dep.models(),
+        vec![
+            "sim8".to_string(),
+            format!("sim8{}", DEGRADE_TENANT_SUFFIX),
+        ],
+        "degrade policy deploys the cheaper tier alongside the primary"
+    );
+
+    // generous limits: everything is admitted, outputs bit-identical
+    let load = tenant_load(cfg.clone(), 10, 0, 1);
+    drive_deployment(&dep, &[&load]);
+    let snap = dep.admission_snapshot("sim8").unwrap();
+    assert_eq!(snap.admitted, 10);
+    assert_eq!(snap.rejected(), 0);
+    assert_eq!(snap.degraded, 0);
+    dep.shutdown();
+}
