@@ -6,10 +6,11 @@
 # only needed for the artifact-gated integration tests/benches; the
 # hermetic `sim*` reference-backend paths run everywhere.
 
-.PHONY: ci build test test-sim clippy fmt-check bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission pool-demo fabric-demo clean
+.PHONY: ci build test test-sim clippy fmt-check doc bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission bench-smoke-epc pool-demo fabric-demo clean
 
-## The CI gate: release build, full test suite, clippy as errors, rustfmt.
-ci: build test clippy fmt-check
+## The CI gate: release build, full test suite, clippy as errors, rustfmt,
+## and warning-free rustdoc.
+ci: build test clippy fmt-check doc
 
 build:
 	cargo build --release
@@ -32,6 +33,11 @@ clippy:
 fmt-check:
 	cargo fmt --check
 
+## API docs must build clean: broken intra-doc links and malformed
+## rustdoc fail the build (CI's docs leg).
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p origami
+
 ## Fast smoke of the pool-scaling bench (reference backend, no artifacts).
 bench-smoke:
 	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig14_pool_scaling
@@ -49,6 +55,12 @@ bench-smoke-slo:
 ## their SLO under a 10x rogue overload, with only the rogue shed).
 bench-smoke-admission:
 	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig17_admission
+
+## Fast smoke of the EPC packing bench (asserts packed co-scheduling
+## sustains ≥1 more concurrent sim224 tenant within usable EPC with
+## zero paging-storm ticks, at bit-identical outputs).
+bench-smoke-epc:
+	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig18_epc_packing
 
 ## The worker-pool demo: 4 pipelined workers vs the serial path.
 pool-demo:

@@ -1,0 +1,273 @@
+//! Fig 18 (extension) — EPC-aware co-scheduling of tier-1 enclave
+//! pools at paper scale.
+//!
+//! Enclave memory is the scarce resource: a `sim224` Origami worker
+//! pins ~tens of MB of resident enclave state (base runtime + blinding
+//! buffers + peak feature maps — the Table-I decomposition, evaluated
+//! on the real `sim224` geometry), and the paper-scale 128 MB EPC
+//! leaves only ~93 MB usable.  The depth/p95 autoscalers are blind to
+//! residency: under equal overload, every tenant's pool grows to its
+//! ceiling, and with two or more `sim224` tenants the summed footprint
+//! blows through usable EPC — the mutual paging-storm regime where
+//! 40 µs/page swapping erases the tier split's speedup (paper §I).
+//!
+//! The EPC co-scheduler packs instead: a global `EpcLedger` charges
+//! every worker its model's footprint, grows that would overcommit are
+//! denied (or funded by reclaiming idle workers from over-provisioned
+//! tenants), and residency never exceeds the budget.
+//!
+//! Both policies replay the *identical* traffic through the
+//! deterministic packing simulator (`harness::sim::replay_epc_packing`
+//! — production `AutoscalePolicy::decide`, `EpcLedger` and `EpcPacker`
+//! code), with per-worker footprints taken from the real `sim224`
+//! memory analytics.  A live leg then serves encrypted requests through
+//! an EPC-scheduled `Deployment` (a paper-scale `sim224` tenant beside
+//! a `sim16` tenant) and checks every reply bit-identical to the serial
+//! path: packing changes *when workers exist*, never what is computed.
+//!
+//! Acceptance (asserted, CI smoke):
+//! - with the packer ON, at least one more concurrent `sim224` tenant
+//!   sustains the overload with **zero paging-storm ticks** than naive
+//!   depth scaling sustains at equal traffic;
+//! - at the first tenant count where naive scaling storms, the packed
+//!   run has zero storm ticks, serves every admitted request, and
+//!   records typed grow denials;
+//! - the live EPC-scheduled deployment's outputs are bit-identical to
+//!   the serial path, with the ledger actually charged.
+//!
+//! Run: `cargo bench --bench fig18_epc_packing`
+//! (ORIGAMI_BENCH_FAST=1 shrinks the trace for CI smoke runs.)
+
+use origami::config::Config;
+use origami::coordinator::AutoscalePolicy;
+use origami::enclave::cost::Ledger;
+use origami::harness::sim::{replay_epc_packing, EpcSimConfig, EpcSimTenant, Trace};
+use origami::harness::Bench;
+use origami::launcher::{
+    build_strategy_with, encrypt_request, executor_for, synth_images,
+    worker_epc_bytes_from_config,
+};
+
+/// The paper-scale `sim224` serving profile whose footprint the ledger
+/// charges (batch 4 = the worst residency a worker can reach).
+fn sim224_config() -> Config {
+    Config {
+        model: "sim224".into(),
+        strategy: "origami/6".into(),
+        max_batch: 4,
+        ..Config::paper_scale()
+    }
+}
+
+/// Overload every tenant equally: more demand than one worker serves,
+/// for long enough that depth scaling pushes each pool to its ceiling.
+fn overload_trace(tenants: usize, periods: usize) -> Trace {
+    let mut t = Trace::new();
+    for i in 0..tenants {
+        t.push_periodic(&format!("sim224/{i}"), 0.0, 2.0, periods, 2, 10.0);
+    }
+    t
+}
+
+fn packing_cfg(
+    packing: bool,
+    tenants: usize,
+    usable: u64,
+    worker_bytes: u64,
+    ceiling: usize,
+) -> EpcSimConfig {
+    EpcSimConfig {
+        usable_bytes: usable,
+        overcommit: 1.0,
+        packing,
+        tenants: (0..tenants)
+            .map(|i| EpcSimTenant {
+                name: format!("sim224/{i}"),
+                worker_bytes,
+                min_workers: 1,
+                max_workers: ceiling,
+                weight: 1.0,
+            })
+            .collect(),
+        policy: AutoscalePolicy {
+            high_depth_per_worker: 2,
+            low_depth_per_worker: 0,
+            tick_ms: 1,
+            cooldown_ticks: 1,
+            ..AutoscalePolicy::default()
+        },
+    }
+}
+
+/// Live leg: an EPC-scheduled deployment (paper-scale budget, exact
+/// packing) serving a `sim224` tenant beside a `sim16` tenant; every
+/// reply must be bit-identical to the serial single-worker path.
+fn live_bit_identity(requests: usize) -> anyhow::Result<u64> {
+    let mk = |model: &str, strategy: &str| Config {
+        model: model.into(),
+        strategy: strategy.into(),
+        workers: 1,
+        max_batch: 1,
+        max_delay_ms: 0.0,
+        pool_epochs: 1,
+        epc_overcommit: 1.0,
+        lanes: 2,
+        ..Config::paper_scale()
+    };
+    let tenants = [mk("sim224", "origami/6"), mk("sim16", "origami/2")];
+
+    let dep = origami::launcher::start_deployment_from_config(
+        &tenants[0],
+        &origami::config::ModelSpec::parse_list("sim224=origami/6,sim16=origami/2")?,
+    )?;
+    let ledger = dep
+        .epc_ledger()
+        .ok_or_else(|| anyhow::anyhow!("--epc-overcommit 1.0 must create a ledger"))?;
+    let charged = ledger.charged_bytes();
+    anyhow::ensure!(
+        charged > 0 && charged <= ledger.capacity_bytes(),
+        "live fleet must be charged within the usable budget \
+         ({charged} of {} B)",
+        ledger.capacity_bytes()
+    );
+
+    // serial references, then the deployment, same per-tenant order
+    let mut replies = Vec::new();
+    for (ti, cfg) in tenants.iter().enumerate() {
+        let (executor, model) = executor_for(cfg)?;
+        let images = synth_images(requests, model.image, model.in_channels, cfg.seed);
+        let mut serial = build_strategy_with(executor, model, cfg)?;
+        for (i, img) in images.iter().enumerate() {
+            let session = (ti * 1000 + i) as u64;
+            let ct = encrypt_request(cfg, session, img);
+            let expected = serial.infer(&ct, 1, &[session], &mut Ledger::new())?;
+            let reply = dep
+                .submit(&cfg.model, ct, session)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            replies.push((cfg.model.clone(), i, expected, reply));
+        }
+    }
+    for (model, i, expected, reply) in replies {
+        let resp = reply
+            .recv()
+            .ok_or_else(|| anyhow::anyhow!("{model} req {i}: reply channel closed"))?;
+        anyhow::ensure!(resp.error.is_none(), "{model} req {i}: {:?}", resp.error);
+        anyhow::ensure!(
+            resp.probs == expected,
+            "{model} request {i} diverged from the serial path"
+        );
+    }
+    let final_charge = ledger.charged_bytes();
+    dep.shutdown();
+    anyhow::ensure!(
+        ledger.charged_bytes() == 0,
+        "shutdown must credit every worker back to the ledger \
+         (still charged: {} B)",
+        ledger.charged_bytes()
+    );
+    Ok(final_charge)
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("ORIGAMI_BENCH_FAST").ok().as_deref() == Some("1");
+    let periods = if fast { 40 } else { 120 };
+    let live_requests = if fast { 2 } else { 4 };
+    let mut bench = Bench::new("Fig 18: EPC-aware co-scheduling of sim224 tier-1 pools");
+
+    // footprint from the real sim224 geometry via the Table-I analytics
+    let cfg = sim224_config();
+    let worker_bytes = worker_epc_bytes_from_config(&cfg)?;
+    let usable = cfg.usable_epc_bytes();
+    let fit = (usable / worker_bytes) as usize;
+    bench.metric("sim224 per-worker footprint", "mb", mb(worker_bytes));
+    bench.metric("paper-scale usable EPC", "mb", mb(usable));
+    bench.metric("workers that fit", "n", fit as f64);
+    anyhow::ensure!(
+        fit >= 2,
+        "the sweep needs at least two sim224 workers in usable EPC \
+         (footprint {worker_bytes} B, usable {usable} B)"
+    );
+
+    // sweep concurrent tenants at equal traffic, both policies
+    let ceiling = fit;
+    let mut naive_max = 0usize;
+    let mut packed_max = 0usize;
+    let mut first_storm: Option<(usize, u64, u64)> = None;
+    for tenants in 1..=fit {
+        let trace = overload_trace(tenants, periods);
+        let naive = replay_epc_packing(
+            &packing_cfg(false, tenants, usable, worker_bytes, ceiling),
+            &trace,
+        );
+        let packed = replay_epc_packing(
+            &packing_cfg(true, tenants, usable, worker_bytes, ceiling),
+            &trace,
+        );
+        for (name, r) in [("naive", &naive), ("packed", &packed)] {
+            let row = bench.push_samples(
+                &format!("{tenants} tenant(s), {name}: p95"),
+                &[r.percentile(None, 95.0)],
+            );
+            row.extra.push(("storm_ticks".into(), r.storm_ticks as f64));
+            row.extra
+                .push(("peak_resident_mb".into(), mb(r.peak_resident_bytes)));
+            row.extra.push(("denied".into(), r.denied_grows as f64));
+            row.extra
+                .push(("served".into(), r.served.values().sum::<usize>() as f64));
+        }
+        if naive.storm_ticks == 0 {
+            naive_max = naive_max.max(tenants);
+        } else if first_storm.is_none() {
+            first_storm = Some((tenants, naive.storm_ticks, packed.storm_ticks));
+            // at the tenant count where naive storms, packing must not —
+            // and must still serve everything it admitted
+            anyhow::ensure!(
+                packed.storm_ticks == 0,
+                "packed run stormed at {tenants} tenants"
+            );
+            anyhow::ensure!(
+                packed.denied_grows > 0,
+                "packing at {tenants} tenants must deny overcommitting grows"
+            );
+            anyhow::ensure!(
+                packed.served == naive.served,
+                "packing must serve the same requests as naive scaling"
+            );
+        }
+        if packed.storm_ticks == 0 {
+            packed_max = packed_max.max(tenants);
+        }
+        anyhow::ensure!(
+            packed.peak_resident_bytes <= usable,
+            "packed residency exceeded usable EPC at {tenants} tenants"
+        );
+    }
+    bench.metric("max tenants, zero storms (naive)", "n", naive_max as f64);
+    bench.metric("max tenants, zero storms (packed)", "n", packed_max as f64);
+
+    anyhow::ensure!(
+        packed_max >= naive_max + 1,
+        "packing must sustain ≥1 more concurrent sim224 tenant within \
+         usable EPC (packed {packed_max}, naive {naive_max})"
+    );
+    let (storm_t, naive_storms, packed_storms) =
+        first_storm.ok_or_else(|| anyhow::anyhow!("naive scaling never stormed in the sweep"))?;
+
+    // live leg: EPC-scheduled deployment, bit-identical outputs
+    let live_charged = live_bit_identity(live_requests)?;
+    bench.metric("live fleet charged", "mb", mb(live_charged));
+    bench.finish();
+
+    println!(
+        "\nacceptance: packed co-scheduling sustained {packed_max} concurrent \
+         sim224 tenant(s) with zero paging-storm ticks vs {naive_max} for naive \
+         depth scaling at equal traffic (at {storm_t} tenants: naive {naive_storms} \
+         storm ticks, packed {packed_storms}); live EPC-scheduled deployment \
+         served bit-identically to the serial path"
+    );
+    Ok(())
+}
+
+fn mb(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}

@@ -111,6 +111,13 @@ pub struct Config {
     /// degrade`.  `baseline2` keeps the whole network in the enclave, so
     /// degraded traffic stays off the shared tier-2 lanes entirely.
     pub degrade_strategy: String,
+    /// EPC-aware co-scheduling of tier-1 pools: 0 = off (the default);
+    /// > 0 packs every pool's per-worker enclave footprint (Table-I
+    /// memory analytics) into `usable_epc_bytes() × epc_overcommit` —
+    /// 1.0 packs exactly, above 1.0 tolerates that much overcommit.
+    /// Grows beyond the budget reclaim idle workers from
+    /// over-provisioned tenants or are denied (typed, in telemetry).
+    pub epc_overcommit: f64,
 }
 
 impl Default for Config {
@@ -156,6 +163,7 @@ impl Default for Config {
             shed_depth: 0,
             shed_policy: "reject".into(),
             degrade_strategy: "baseline2".into(),
+            epc_overcommit: 0.0,
         }
     }
 }
@@ -261,6 +269,9 @@ impl Config {
         if let Some(n) = v.get("admission_burst").and_then(|x| x.as_f64()) {
             self.admission_burst = n;
         }
+        if let Some(n) = v.get("epc_overcommit").and_then(|x| x.as_f64()) {
+            self.epc_overcommit = n;
+        }
         if let Some(b) = v.get("allow_factor_reuse").and_then(|x| x.as_bool()) {
             self.allow_factor_reuse = b;
         }
@@ -348,6 +359,12 @@ impl Config {
         if let Some(v) = args.get("degrade-strategy") {
             c.degrade_strategy = v.into();
         }
+        c.epc_overcommit = args.f64_or("epc-overcommit", c.epc_overcommit)?;
+        anyhow::ensure!(
+            c.epc_overcommit >= 0.0,
+            "--epc-overcommit must be ≥ 0 (0 disables EPC-aware scheduling), got {}",
+            c.epc_overcommit
+        );
         c.lazy_dense_bytes = args.u64_or("lazy-dense-bytes", c.lazy_dense_bytes)?;
         if args.has("strict-otp") {
             c.allow_factor_reuse = false;
@@ -420,7 +437,126 @@ impl Config {
             ("shed_depth", json::num(self.shed_depth as f64)),
             ("shed_policy", json::s(&self.shed_policy)),
             ("degrade_strategy", json::s(&self.degrade_strategy)),
+            ("epc_overcommit", json::num(self.epc_overcommit)),
         ])
+    }
+
+    /// The config-file keys and values where `self` differs from the
+    /// defaults — what the `serve` startup banner prints, so the banner
+    /// reflects *every* knob (autoscale, admission, EPC, …) and can
+    /// never drift from the config surface: both sides come from
+    /// [`Config::to_json`].
+    pub fn non_default_settings(&self) -> Vec<(String, String)> {
+        let mine = self.to_json();
+        let base = Config::default().to_json();
+        let mut out = Vec::new();
+        if let (Value::Obj(fields), Value::Obj(_)) = (&mine, &base) {
+            for (key, value) in fields {
+                if base.get(key) != Some(value) {
+                    out.push((key.clone(), render_value(value)));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn render_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => s.clone(),
+        other => other.to_json(),
+    }
+}
+
+/// One CLI flag's documentation row — the single source the `--help`
+/// text, the `serve` startup banner and the `docs/CONFIG.md` drift
+/// tests render from, so none of them can omit a knob the parser
+/// accepts (the PR-3/4 help text drifted exactly that way).
+#[derive(Debug, Clone)]
+pub struct FlagDoc {
+    /// Section in the help output (`common`, `serve`, `fabric`,
+    /// `autoscale`, `admission`, `epc`).
+    pub group: &'static str,
+    /// The CLI flag (empty for config-file-only fields like
+    /// `blind_domain`, which serving infrastructure sets internally).
+    pub flag: &'static str,
+    /// Value placeholder in the help text (empty for boolean switches).
+    pub value: &'static str,
+    /// Config-file JSON key (empty for CLI-only flags like `--config`).
+    pub json_key: &'static str,
+    /// One-line description.
+    pub help: &'static str,
+}
+
+/// The suffix keys [`ModelSpec::parse`] accepts after a model spec
+/// (`model:key=value`).  Kept as data so the CONFIG.md drift test can
+/// assert each is documented.
+pub const SPEC_SUFFIX_KEYS: [&str; 4] = ["slo", "rps", "inflight", "shed"];
+
+impl Config {
+    /// Every CLI flag and config-file field, grouped for help output.
+    /// A unit test pins this table against [`Config::to_json`]'s keys,
+    /// so adding a config field without documenting it fails CI.
+    pub fn flag_docs() -> Vec<FlagDoc> {
+        let d = |group, flag, value, json_key, help| FlagDoc {
+            group,
+            flag,
+            value,
+            json_key,
+            help,
+        };
+        vec![
+            // common
+            d("common", "--config", "<file>", "", "JSON config file (CLI overrides after)"),
+            d("common", "--paper-scale", "", "", "paper geometry preset (224, 128 MB EPC)"),
+            d("common", "--artifacts", "<dir>", "artifacts", "artifacts root (manifest + HLO)"),
+            d("common", "--model", "<name>", "model", "vgg16-32 | vgg19-32 | sim8/sim224"),
+            d("common", "--strategy", "<s>", "strategy", "baseline2|split/N|slalom|origami|open"),
+            d("common", "--device", "<d>", "device", "offload device: cpu | gpu"),
+            d("common", "--partition", "<p>", "partition", "Origami partition layer"),
+            d("common", "--seed", "<n>", "seed", "deployment master seed (determinism)"),
+            d("common", "--epc-bytes", "<n>", "epc_bytes", "enclave protected memory (bytes)"),
+            d("common", "--pool-epochs", "<n>", "pool_epochs", "precomputed unblind-factor epochs"),
+            d("common", "--strict-otp", "", "allow_factor_reuse", "forbid factor-pool cycling"),
+            d("common", "--lazy-dense-bytes", "<n>", "lazy_dense_bytes", "lazy-load dense bound"),
+            // serve
+            d("serve", "--requests", "<n>", "", "total synthetic workload requests [64]"),
+            d("serve", "--rate", "<rps>", "", "Poisson open-loop arrival rate [50]"),
+            d("serve", "--workers", "<n>", "workers", "tier-1 strategy workers per pool"),
+            d("serve", "--max-batch", "<n>", "max_batch", "dynamic batcher: max batch size"),
+            d("serve", "--max-delay-ms", "<f>", "max_delay_ms", "batcher max queueing delay (ms)"),
+            d("serve", "--pool", "", "", "sharded worker pool, not the shared-batcher engine"),
+            d("serve", "--no-pipeline", "", "pipeline", "pool only: serialize tier-1/tier-2"),
+            d("serve", "--occupancy-flush", "", "occupancy_flush", "flush while tier-2 starves"),
+            d("serve", "", "", "blind_domain", "pad keyspace (set per worker by the pool)"),
+            // fabric (multi-model)
+            d("fabric", "--models", "<spec>", "models", "model[=strat[@dev][*w]][:key=val…],…"),
+            d("fabric", "--lanes", "<n>", "lanes", "shared tier-2 lane count (0 = workers)"),
+            d("fabric", "--min-lanes", "<n>", "min_lanes", "lane autoscale floor (0 = pinned)"),
+            d("fabric", "--max-lanes", "<n>", "max_lanes", "lane autoscale ceiling (0 = pinned)"),
+            d("fabric", "--lane-devices", "<l>", "lane_devices", "device cycle, e.g. cpu,gpu"),
+            d("fabric", "--min-workers", "<n>", "min_workers", "worker floor (0 = pinned)"),
+            d("fabric", "--max-workers", "<n>", "max_workers", "worker ceiling (0 = pinned)"),
+            d("fabric", "--split-tail-ms", "<f>", "split_tail_ms", "split tails over this cost"),
+            d("fabric", "--split-tail-chunk", "<n>", "split_tail_chunk", "per-tail req ceiling"),
+            // autoscale
+            d("autoscale", "--autoscale", "", "autoscale", "run the background autoscaler"),
+            d("autoscale", "--autoscale-policy", "<p>", "autoscale_policy", "depth | p95"),
+            d("autoscale", "--autoscale-tick-ms", "<t>", "autoscale_tick_ms", "cadence (ms)"),
+            d("autoscale", "--autoscale-high-depth", "<n>", "autoscale_high_depth", "grow bar"),
+            d("autoscale", "--autoscale-low-depth", "<n>", "autoscale_low_depth", "shrink bar"),
+            d("autoscale", "--autoscale-cooldown", "<t>", "autoscale_cooldown", "hold ticks"),
+            d("autoscale", "--slo-ms", "<f>", "slo_ms", "default latency objective (0 = none)"),
+            // admission
+            d("admission", "--rps", "<f>", "rps", "token-bucket rate limit (req/s; 0 = off)"),
+            d("admission", "--admission-burst", "<f>", "admission_burst", "bucket burst cap"),
+            d("admission", "--inflight", "<n>", "inflight", "in-flight quota (0 = off)"),
+            d("admission", "--shed-depth", "<n>", "shed_depth", "shed backlog bar (0 = off)"),
+            d("admission", "--shed-policy", "<p>", "shed_policy", "reject | degrade"),
+            d("admission", "--degrade-strategy", "<s>", "degrade_strategy", "the cheaper tier"),
+            // epc
+            d("epc", "--epc-overcommit", "<f>", "epc_overcommit", "usable EPC × this (0 = off)"),
+        ]
     }
 }
 
@@ -850,6 +986,95 @@ mod tests {
         )
         .unwrap();
         assert!(Config::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn epc_overcommit_parses_and_validates() {
+        let args = Args::parse(
+            "serve --models sim8 --epc-overcommit 1.25"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = Config::from_args(&args).unwrap();
+        assert_eq!(c.epc_overcommit, 1.25);
+        // round-trips through JSON
+        let v = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&v);
+        assert_eq!(c2.epc_overcommit, 1.25);
+        // defaults off
+        assert_eq!(Config::default().epc_overcommit, 0.0);
+        // negative is rejected
+        let bad = Args::parse(
+            "serve --epc-overcommit -1"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn flag_docs_cover_every_config_field() {
+        // The drift gate behind the regenerated `--help`: every key the
+        // config serializes must be documented in the flag table, every
+        // documented json key must exist, and flags must be unique.
+        let docs = Config::flag_docs();
+        let Value::Obj(fields) = Config::default().to_json() else {
+            panic!("config serializes to an object");
+        };
+        for (key, _) in &fields {
+            assert!(
+                docs.iter().any(|d| d.json_key == *key),
+                "config field `{key}` missing from Config::flag_docs()"
+            );
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for doc in &docs {
+            if !doc.json_key.is_empty() {
+                assert!(
+                    fields.iter().any(|(k, _)| k == doc.json_key),
+                    "flag doc references unknown config field `{}`",
+                    doc.json_key
+                );
+            }
+            if !doc.flag.is_empty() {
+                assert!(seen.insert(doc.flag), "duplicate flag `{}`", doc.flag);
+                assert!(doc.flag.starts_with("--"));
+            }
+            assert!(!doc.help.is_empty(), "`{}` has no help text", doc.flag);
+        }
+    }
+
+    #[test]
+    fn spec_suffix_keys_match_the_parser() {
+        // each declared key parses…
+        for key in SPEC_SUFFIX_KEYS {
+            let spec = format!("sim8:{key}=5");
+            assert!(
+                ModelSpec::parse(&spec).is_ok(),
+                "declared suffix `{key}` must parse"
+            );
+        }
+        // …and undeclared keys are rejected, so the const stays honest
+        assert!(ModelSpec::parse("sim8:nope=5").is_err());
+    }
+
+    #[test]
+    fn non_default_settings_reflect_overrides_only() {
+        let base = Config::default();
+        assert!(base.non_default_settings().is_empty());
+        let c = Config {
+            rps: 250.0,
+            autoscale: true,
+            epc_overcommit: 1.0,
+            ..Config::default()
+        };
+        let diffs = c.non_default_settings();
+        let keys: Vec<&str> = diffs.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["autoscale", "rps", "epc_overcommit"]);
+        assert!(diffs.iter().any(|(k, v)| k == "rps" && v == "250"));
     }
 
     #[test]

@@ -1,0 +1,526 @@
+//! EPC-aware co-scheduling of tier-1 enclave pools: a global residency
+//! ledger plus a packing policy the deployment autoscaler consults
+//! before growing any pool.
+//!
+//! Enclave memory — not FLOPs — is the resource that decides how many
+//! models an SGX server can host: every tier-1 worker pins its model's
+//! resident footprint (base runtime + resident params + peak feature
+//! maps + blinding buffers, the Table-I decomposition in
+//! [`crate::strategies::memory`]) inside a ~93 MB usable EPC, and
+//! overcommitting that budget triggers per-page encrypted paging that
+//! erases the speedup the tier split buys (paper §I).  The queue-depth
+//! and p95 autoscalers are blind to this: two paper-scale tenants
+//! scaling on backlog alone will happily grow into a mutual paging
+//! storm.
+//!
+//! Three pieces make residency a first-class scheduling input:
+//!
+//! - [`EpcLedger`] — the global accountant.  Every tier-1 worker is
+//!   charged its model's per-worker footprint on spawn and credited on
+//!   retire; charges are transactional ([`EpcLedger::try_charge`] is
+//!   all-or-nothing), so the ledger can never drift from the worker
+//!   fleet it describes.  Capacity is `usable EPC × overcommit`
+//!   (`--epc-overcommit`; 1.0 packs exactly, above 1.0 tolerates
+//!   bounded paging).
+//! - [`EpcPacker`] — the reclaim policy.  When a grow would overcommit,
+//!   the packer looks for *idle* workers parked above their pool's
+//!   floor on other tenants and frees just enough of them, taking first
+//!   from the tenant most over-provisioned relative to its weighted
+//!   fabric share.  If no reclaim covers the deficit the grow is denied
+//!   — never partially applied.
+//! - [`ScaleDenied`] — the typed denial.  Denials land in per-tenant
+//!   telemetry ([`ScaleCounters`](super::telemetry::ScaleCounters)),
+//!   and a tenant whose growth is EPC-limited says so in its shed
+//!   hints, so a client seeing `AdmissionError::Shed` can tell "the
+//!   autoscaler is behind" from "the box is full".
+//!
+//! The ledger is pure bookkeeping over an external clock-free state, so
+//! the deterministic serving simulator
+//! ([`crate::harness::sim::replay_epc_packing`]) replays the exact
+//! production charge/reclaim/deny decisions over scripted traces — what
+//! `benches/fig18_epc_packing.rs` measures.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// EPC scheduling geometry: the usable budget and the overcommit factor.
+#[derive(Debug, Clone, Copy)]
+pub struct EpcOptions {
+    /// Usable EPC bytes (after SGX metadata overhead; see
+    /// [`Config::usable_epc_bytes`](crate::config::Config::usable_epc_bytes)).
+    pub usable_bytes: u64,
+    /// Capacity multiplier: 1.0 packs workers exactly into the usable
+    /// budget; above 1.0 tolerates that much overcommit (bounded
+    /// paging); must be > 0.
+    pub overcommit: f64,
+}
+
+impl EpcOptions {
+    /// The ledger capacity these options describe.
+    pub fn capacity_bytes(&self) -> u64 {
+        (self.usable_bytes as f64 * self.overcommit.max(0.0)) as u64
+    }
+}
+
+/// A grow the EPC co-scheduler refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScaleDenied {
+    /// Charging the requested workers would overcommit the usable EPC
+    /// (after any reclaim the packer could find).
+    EpcExhausted {
+        /// Tenant whose grow was refused.
+        tenant: String,
+        /// Bytes the refused charge needed.
+        needed_bytes: u64,
+        /// Ledger capacity (usable EPC × overcommit).
+        capacity_bytes: u64,
+        /// Bytes already charged across all tenants.
+        charged_bytes: u64,
+    },
+}
+
+impl fmt::Display for ScaleDenied {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScaleDenied::EpcExhausted {
+                tenant,
+                needed_bytes,
+                capacity_bytes,
+                charged_bytes,
+            } => write!(
+                f,
+                "tenant `{tenant}` grow denied: {needed_bytes} B needed, \
+                 {charged_bytes}/{capacity_bytes} B of usable EPC charged"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScaleDenied {}
+
+#[derive(Default)]
+struct LedgerInner {
+    charged: u64,
+    tenants: HashMap<String, TenantCharge>,
+}
+
+struct TenantCharge {
+    worker_bytes: u64,
+    workers: usize,
+}
+
+/// The global EPC residency accountant (see module docs).  Shared by a
+/// deployment and every pool it starts; all operations are
+/// transactional under one lock.
+pub struct EpcLedger {
+    capacity: u64,
+    inner: Mutex<LedgerInner>,
+}
+
+impl EpcLedger {
+    pub fn new(opts: EpcOptions) -> Self {
+        Self {
+            capacity: opts.capacity_bytes().max(1),
+            inner: Mutex::new(LedgerInner::default()),
+        }
+    }
+
+    /// Ledger capacity (usable EPC × overcommit).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Bytes currently charged across all tenants.
+    pub fn charged_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().charged
+    }
+
+    /// Uncharged capacity.
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity.saturating_sub(self.charged_bytes())
+    }
+
+    /// Declare a tenant's per-worker resident footprint.  Idempotent;
+    /// re-registering updates the footprint only while the tenant has
+    /// **no charged workers** — a live tenant's rate is immutable, so
+    /// [`EpcLedger::release`] always credits exactly what was charged
+    /// and the ledger can never leak or mint capacity through a
+    /// mid-flight rate change.
+    pub fn register(&self, tenant: &str, worker_bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.tenants
+            .entry(tenant.to_string())
+            .and_modify(|t| {
+                if t.workers == 0 {
+                    t.worker_bytes = worker_bytes;
+                }
+            })
+            .or_insert(TenantCharge {
+                worker_bytes,
+                workers: 0,
+            });
+    }
+
+    /// Charge `n` more workers of `tenant`'s footprint — all or nothing.
+    pub fn try_charge(&self, tenant: &str, n: usize) -> Result<(), ScaleDenied> {
+        if n == 0 {
+            return Ok(());
+        }
+        let mut g = self.inner.lock().unwrap();
+        let Some(t) = g.tenants.get(tenant) else {
+            return Ok(()); // unregistered tenants are not EPC-accounted
+        };
+        let needed = t.worker_bytes.saturating_mul(n as u64);
+        if g.charged.saturating_add(needed) > self.capacity {
+            return Err(ScaleDenied::EpcExhausted {
+                tenant: tenant.to_string(),
+                needed_bytes: needed,
+                capacity_bytes: self.capacity,
+                charged_bytes: g.charged,
+            });
+        }
+        g.charged += needed;
+        g.tenants.get_mut(tenant).unwrap().workers += n;
+        Ok(())
+    }
+
+    /// Credit `n` retired workers of `tenant` back to the ledger.
+    /// Releasing more workers than are charged is a no-op beyond zero —
+    /// the ledger can never go negative or double-credit.
+    pub fn release(&self, tenant: &str, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let Some(t) = g.tenants.get_mut(tenant) else {
+            return;
+        };
+        let freed = n.min(t.workers);
+        t.workers -= freed;
+        let bytes = t.worker_bytes.saturating_mul(freed as u64);
+        g.charged = g.charged.saturating_sub(bytes);
+    }
+
+    /// Workers currently charged for a tenant.
+    pub fn workers(&self, tenant: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .tenants
+            .get(tenant)
+            .map(|t| t.workers)
+            .unwrap_or(0)
+    }
+
+    /// How many *more* workers of `tenant`'s footprint the free capacity
+    /// funds right now (`usize::MAX` for unregistered or zero-footprint
+    /// tenants — they are not EPC-bound).
+    pub fn headroom_workers(&self, tenant: &str) -> usize {
+        let g = self.inner.lock().unwrap();
+        let Some(t) = g.tenants.get(tenant) else {
+            return usize::MAX;
+        };
+        if t.worker_bytes == 0 {
+            return usize::MAX;
+        }
+        (self.capacity.saturating_sub(g.charged) / t.worker_bytes) as usize
+    }
+}
+
+/// One tenant's state offered to the packer as a reclaim candidate.
+#[derive(Debug, Clone)]
+pub struct ReclaimCandidate {
+    pub tenant: String,
+    /// Workers currently running.
+    pub active: usize,
+    /// Autoscale floor — reclaim never shrinks below it.
+    pub floor: usize,
+    /// The tenant's queued tier-1 requests; only idle (depth 0) tenants
+    /// donate workers.
+    pub queue_depth: usize,
+    /// Weighted-fair fabric share (reclaim order: most over-provisioned
+    /// per unit of share donates first).
+    pub weight: f64,
+    /// Per-worker resident footprint.
+    pub worker_bytes: u64,
+}
+
+/// The packing policy: given a byte deficit and the other tenants'
+/// states, pick which idle workers to reclaim (see module docs).  Pure —
+/// the deployment tick applies the plan, and the simulator replays it.
+pub struct EpcPacker;
+
+impl EpcPacker {
+    /// Plan reclaims freeing at least `needed_bytes`: per-tenant retire
+    /// counts, or `None` when even taking every eligible worker falls
+    /// short (then the grow is denied instead of half-dismantling idle
+    /// pools for nothing).
+    ///
+    /// Eligible donors are idle (`queue_depth == 0`) with `active >
+    /// floor`; donors give one worker at a time, always taking next from
+    /// the tenant with the highest `active / weight` (ties: lexicographic
+    /// tenant order, so plans are deterministic).
+    pub fn plan_reclaim(
+        candidates: &[ReclaimCandidate],
+        needed_bytes: u64,
+    ) -> Option<Vec<(String, usize)>> {
+        if needed_bytes == 0 {
+            return Some(Vec::new());
+        }
+        // (remaining donatable, active, weight, bytes, tenant)
+        let mut donors: Vec<(usize, usize, f64, u64, &str)> = candidates
+            .iter()
+            .filter(|c| {
+                c.queue_depth == 0 && c.active > c.floor && c.worker_bytes > 0 && c.weight > 0.0
+            })
+            .map(|c| {
+                (
+                    c.active - c.floor,
+                    c.active,
+                    c.weight,
+                    c.worker_bytes,
+                    c.tenant.as_str(),
+                )
+            })
+            .collect();
+        // no pre-sort needed: the pick below tie-breaks on tenant name,
+        // so donor selection is independent of candidate order
+        let mut freed = 0u64;
+        let mut taken: HashMap<&str, usize> = HashMap::new();
+        while freed < needed_bytes {
+            // next donor: highest active-per-share among those with
+            // workers left to give
+            let pick = donors
+                .iter_mut()
+                .filter(|d| d.0 > 0)
+                .max_by(|a, b| {
+                    let ra = a.1 as f64 / a.2;
+                    let rb = b.1 as f64 / b.2;
+                    ra.partial_cmp(&rb).unwrap().then(b.4.cmp(a.4))
+                })?;
+            pick.0 -= 1;
+            pick.1 -= 1;
+            freed += pick.3;
+            *taken.entry(pick.4).or_insert(0) += 1;
+        }
+        let mut plan: Vec<(String, usize)> = taken
+            .into_iter()
+            .map(|(t, n)| (t.to_string(), n))
+            .collect();
+        plan.sort();
+        Some(plan)
+    }
+}
+
+/// A pool's handle on the shared ledger: the tenant name it charges
+/// under.  The pool's `scale_to` charges grows and credits retires
+/// through this, making worker spawn/retire and EPC accounting one
+/// transaction.
+#[derive(Clone)]
+pub struct EpcAccount {
+    ledger: Arc<EpcLedger>,
+    tenant: String,
+}
+
+impl EpcAccount {
+    pub fn new(ledger: Arc<EpcLedger>, tenant: &str) -> Self {
+        Self {
+            ledger,
+            tenant: tenant.to_string(),
+        }
+    }
+
+    pub fn try_charge(&self, n: usize) -> Result<(), ScaleDenied> {
+        self.ledger.try_charge(&self.tenant, n)
+    }
+
+    pub fn release(&self, n: usize) {
+        self.ledger.release(&self.tenant, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger(capacity: u64) -> EpcLedger {
+        EpcLedger::new(EpcOptions {
+            usable_bytes: capacity,
+            overcommit: 1.0,
+        })
+    }
+
+    #[test]
+    fn charges_are_transactional_and_bounded() {
+        let l = ledger(100);
+        l.register("a", 40);
+        l.register("b", 30);
+        assert!(l.try_charge("a", 2).is_ok(), "80 of 100 fits");
+        assert_eq!(l.charged_bytes(), 80);
+        // all-or-nothing: b×1 (30 B) does not fit, and nothing sticks
+        let denied = l.try_charge("b", 1).unwrap_err();
+        match &denied {
+            ScaleDenied::EpcExhausted {
+                tenant,
+                needed_bytes,
+                capacity_bytes,
+                charged_bytes,
+            } => {
+                assert_eq!(tenant, "b");
+                assert_eq!(*needed_bytes, 30);
+                assert_eq!(*capacity_bytes, 100);
+                assert_eq!(*charged_bytes, 80);
+            }
+        }
+        assert!(denied.to_string().contains("80/100"));
+        assert_eq!(l.charged_bytes(), 80, "denied charge left no residue");
+        assert_eq!(l.workers("b"), 0);
+        // freeing one `a` worker funds the `b` grow
+        l.release("a", 1);
+        assert_eq!(l.charged_bytes(), 40);
+        assert!(l.try_charge("b", 1).is_ok());
+        assert_eq!(l.charged_bytes(), 70);
+        assert_eq!(l.workers("a"), 1);
+        assert_eq!(l.workers("b"), 1);
+    }
+
+    #[test]
+    fn release_never_leaks_or_double_credits() {
+        // the retire-path regression: releasing more than charged (a
+        // double release, mirroring a drop-guard misfire) must clamp
+        let l = ledger(100);
+        l.register("a", 25);
+        l.try_charge("a", 3).unwrap();
+        l.release("a", 2);
+        l.release("a", 2); // one over — clamps at zero workers
+        assert_eq!(l.workers("a"), 0);
+        assert_eq!(l.charged_bytes(), 0, "no negative/underflowed charge");
+        l.release("a", 1); // fully idle: still a no-op
+        assert_eq!(l.charged_bytes(), 0);
+        // and a charge/release cycle returns to the exact baseline
+        l.try_charge("a", 4).unwrap();
+        l.release("a", 4);
+        assert_eq!(l.charged_bytes(), 0);
+        assert_eq!(l.free_bytes(), 100);
+    }
+
+    #[test]
+    fn live_tenants_keep_their_registered_rate() {
+        // a re-register while workers are charged must not change the
+        // rate: release always credits exactly what charge debited
+        let l = ledger(100);
+        l.register("a", 40);
+        l.try_charge("a", 2).unwrap();
+        l.register("a", 10); // ignored: 2 workers are live at 40 B
+        l.release("a", 2);
+        assert_eq!(l.charged_bytes(), 0, "credits match the charges");
+        // idle again: the new rate now takes
+        l.register("a", 10);
+        l.try_charge("a", 3).unwrap();
+        assert_eq!(l.charged_bytes(), 30);
+        l.release("a", 3);
+        assert_eq!(l.charged_bytes(), 0);
+    }
+
+    #[test]
+    fn unregistered_tenants_are_not_accounted() {
+        let l = ledger(10);
+        assert!(l.try_charge("ghost", 100).is_ok());
+        assert_eq!(l.charged_bytes(), 0);
+        assert_eq!(l.headroom_workers("ghost"), usize::MAX);
+        l.register("zero", 0);
+        assert_eq!(l.headroom_workers("zero"), usize::MAX);
+    }
+
+    #[test]
+    fn headroom_counts_whole_workers() {
+        let l = ledger(100);
+        l.register("a", 30);
+        assert_eq!(l.headroom_workers("a"), 3);
+        l.try_charge("a", 2).unwrap();
+        assert_eq!(l.headroom_workers("a"), 1, "40 B free funds one worker");
+        l.try_charge("a", 1).unwrap();
+        assert_eq!(l.headroom_workers("a"), 0);
+    }
+
+    #[test]
+    fn overcommit_scales_the_capacity() {
+        let l = EpcLedger::new(EpcOptions {
+            usable_bytes: 100,
+            overcommit: 1.5,
+        });
+        assert_eq!(l.capacity_bytes(), 150);
+        l.register("a", 50);
+        assert!(l.try_charge("a", 3).is_ok(), "overcommit admits 150 B");
+        assert!(l.try_charge("a", 1).is_err());
+    }
+
+    fn cand(
+        tenant: &str,
+        active: usize,
+        floor: usize,
+        depth: usize,
+        weight: f64,
+        bytes: u64,
+    ) -> ReclaimCandidate {
+        ReclaimCandidate {
+            tenant: tenant.into(),
+            active,
+            floor,
+            queue_depth: depth,
+            weight,
+            worker_bytes: bytes,
+        }
+    }
+
+    #[test]
+    fn packer_takes_idle_workers_most_overprovisioned_first() {
+        // `a` runs 3 workers on weight 1 (3 per share); `b` runs 2 on
+        // weight 2 (1 per share).  Both idle.  Freeing 20 B takes both
+        // from `a`.
+        let cands = vec![cand("a", 3, 1, 0, 1.0, 10), cand("b", 2, 1, 0, 2.0, 10)];
+        let plan = EpcPacker::plan_reclaim(&cands, 20).unwrap();
+        assert_eq!(plan, vec![("a".to_string(), 2)]);
+        // a third worker must come from `b`
+        let plan = EpcPacker::plan_reclaim(&cands, 30).unwrap();
+        assert_eq!(plan, vec![("a".to_string(), 2), ("b".to_string(), 1)]);
+    }
+
+    #[test]
+    fn packer_never_touches_busy_or_floored_tenants() {
+        let cands = vec![
+            cand("busy", 4, 1, 7, 1.0, 10), // has a backlog: ineligible
+            cand("floored", 1, 1, 0, 1.0, 10), // at its floor: ineligible
+            cand("idle", 2, 1, 0, 1.0, 10),
+        ];
+        let plan = EpcPacker::plan_reclaim(&cands, 10).unwrap();
+        assert_eq!(plan, vec![("idle".to_string(), 1)]);
+        // deficit beyond the one eligible worker: deny, reclaim nothing
+        assert_eq!(EpcPacker::plan_reclaim(&cands, 20), None);
+        // zero deficit: trivially satisfiable without touching anyone
+        assert_eq!(EpcPacker::plan_reclaim(&cands, 0), Some(Vec::new()));
+    }
+
+    #[test]
+    fn packer_is_deterministic_under_ties() {
+        let cands = vec![cand("b", 2, 1, 0, 1.0, 10), cand("a", 2, 1, 0, 1.0, 10)];
+        let p1 = EpcPacker::plan_reclaim(&cands, 10).unwrap();
+        let rev: Vec<ReclaimCandidate> = cands.iter().rev().cloned().collect();
+        let p2 = EpcPacker::plan_reclaim(&rev, 10).unwrap();
+        assert_eq!(p1, p2, "candidate order must not change the plan");
+        assert_eq!(p1, vec![("a".to_string(), 1)], "ties break lexicographic");
+    }
+
+    #[test]
+    fn account_charges_under_its_tenant() {
+        let l = Arc::new(ledger(50));
+        l.register("m", 20);
+        let acc = EpcAccount::new(l.clone(), "m");
+        acc.try_charge(2).unwrap();
+        assert_eq!(l.workers("m"), 2);
+        assert!(acc.try_charge(1).is_err());
+        acc.release(1);
+        assert_eq!(l.charged_bytes(), 20);
+    }
+}

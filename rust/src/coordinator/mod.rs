@@ -24,7 +24,8 @@
 //!   (admission:           model B pool: tier-1 shards (enclaves) ─┼─▶ LaneFabric
 //!    model, size, session                                         │   deadline-fair
 //!    binding, rate/quota/       autoscaler (depth or p95) ────────┘   queue →
-//!    shed per tenant)                                                 device lanes
+//!    shed per tenant)           EPC ledger (worker residency ≤        device lanes
+//!                               usable EPC: reclaim or deny grows)
 //! ```
 //!
 //! Batches form under a (max-batch, max-delay) policy — optionally
@@ -39,6 +40,7 @@
 pub mod admission;
 pub mod api;
 pub mod batcher;
+pub mod epc_sched;
 pub mod fabric;
 pub mod pool;
 pub mod router;
@@ -51,6 +53,9 @@ pub use admission::{
 };
 pub use api::{InferRequest, InferResponse};
 pub use batcher::DynamicBatcher;
+pub use epc_sched::{
+    EpcAccount, EpcLedger, EpcOptions, EpcPacker, ReclaimCandidate, ScaleDenied,
+};
 pub use fabric::{
     FabricHandle, FabricMetrics, FabricOptions, FairClock, LaneFabric, SplitPolicy, TenantStats,
 };
@@ -61,6 +66,6 @@ pub use router::{
 };
 pub use server::ServingEngine;
 pub use telemetry::{
-    AdmissionCounters, AdmissionSnapshot, HistogramSnapshot, LatencyHistogram, Stage,
-    TelemetryHub, TenantTelemetry, WindowedHistogram,
+    AdmissionCounters, AdmissionSnapshot, HistogramSnapshot, LatencyHistogram, ScaleCounters,
+    ScaleSnapshot, Stage, TelemetryHub, TenantTelemetry, WindowedHistogram,
 };

@@ -50,6 +50,7 @@ use anyhow::Result;
 use super::admission::InflightPermit;
 use super::api::{reply_error, BatchRecord, InferRequest, InferResponse};
 use super::batcher::{DynamicBatcher, SLO_WINDOW_FRACTION};
+use super::epc_sched::EpcAccount;
 use super::fabric::FabricHandle;
 use super::scheduler::{BatchScheduler, Tier2Finisher, Tier2Task};
 use super::telemetry::{Stage, TenantTelemetry};
@@ -82,6 +83,11 @@ pub struct PoolOptions {
     /// window at [`SLO_WINDOW_FRACTION`] of it, so batch coalescing can
     /// never eat the whole latency budget.  0 = no SLO.
     pub slo_ms: f64,
+    /// Per-worker resident enclave footprint (bytes) charged against the
+    /// deployment's EPC ledger on spawn and credited on retire.  0 = the
+    /// model is not EPC-accounted (the default; the launcher fills this
+    /// from the Table-I memory analytics when `--epc-overcommit` is on).
+    pub worker_epc_bytes: u64,
 }
 
 impl Default for PoolOptions {
@@ -97,6 +103,7 @@ impl Default for PoolOptions {
             ingress_cap: 256,
             worker_queue_cap: 64,
             slo_ms: 0.0,
+            worker_epc_bytes: 0,
         }
     }
 }
@@ -128,6 +135,12 @@ pub struct PoolMetrics {
     /// Autoscale events.
     pub grow_events: u64,
     pub shrink_events: u64,
+    /// Grow requests whose EPC charge was refused *inside* `scale_to` —
+    /// direct pool drivers, or a deployment grow whose funding check
+    /// lost a race to a concurrent charge.  Deployment-tick denials are
+    /// decided before `scale_to` runs and land in the tenant's
+    /// [`ScaleCounters`](super::telemetry::ScaleCounters) instead.
+    pub epc_denied_grows: u64,
     /// Highest concurrent tier-1 worker count reached.
     pub peak_workers: usize,
 }
@@ -149,6 +162,7 @@ impl PoolMetrics {
             stolen_batches: 0,
             grow_events: 0,
             shrink_events: 0,
+            epc_denied_grows: 0,
             peak_workers: workers,
         }
     }
@@ -270,6 +284,11 @@ pub struct WorkerPool {
     /// Tenant latency sink (tier-1 stage recording; deployment-attached
     /// pools only).
     telemetry: Option<Arc<TenantTelemetry>>,
+    /// EPC ledger account: grows charge through it, retires credit it
+    /// (deployment-attached pools under EPC-aware scheduling only).  The
+    /// initial fleet's charge is taken by the deployment *before* the
+    /// pool starts; `stop` credits whatever is still active.
+    epc: Option<EpcAccount>,
     pub metrics: Arc<Mutex<PoolMetrics>>,
     next_id: AtomicU64,
     configured_workers: usize,
@@ -315,6 +334,7 @@ impl WorkerPool {
             },
             Some((t2q, Arc::new(finisher_factory) as FinisherFactory)),
             None,
+            None,
         )
     }
 
@@ -334,12 +354,36 @@ impl WorkerPool {
     where
         S: Fn(usize) -> Result<BatchScheduler> + Send + Sync + 'static,
     {
+        Self::start_attached_with_epc(opts, sched_factory, fabric, telemetry, None)
+    }
+
+    /// [`WorkerPool::start_attached`], charging worker residency against
+    /// a shared EPC ledger: `epc` is the pool's ledger account, under
+    /// which the *initial* fleet must already be charged (the deployment
+    /// charges before starting the pool, so a deploy that cannot fit
+    /// fails before any enclave spawns).  From then on [`scale_to`] is
+    /// ledger-transactional — grows charge first and are refused when
+    /// the charge is denied; retires credit after the drain — and `stop`
+    /// credits whatever is still active.
+    ///
+    /// [`scale_to`]: WorkerPool::scale_to
+    pub fn start_attached_with_epc<S>(
+        opts: PoolOptions,
+        sched_factory: S,
+        fabric: FabricHandle,
+        telemetry: Option<Arc<TenantTelemetry>>,
+        epc: Option<EpcAccount>,
+    ) -> Self
+    where
+        S: Fn(usize) -> Result<BatchScheduler> + Send + Sync + 'static,
+    {
         Self::start_inner(
             opts,
             Arc::new(sched_factory),
             Tier2Sink::Fabric(fabric),
             None,
             telemetry,
+            epc,
         )
     }
 
@@ -349,6 +393,7 @@ impl WorkerPool {
         sink: Tier2Sink,
         owned: Option<(Channel<Tier2Task>, FinisherFactory)>,
         telemetry: Option<Arc<TenantTelemetry>>,
+        epc: Option<EpcAccount>,
     ) -> Self {
         let mut opts = opts;
         let workers = opts.workers.max(1);
@@ -488,6 +533,7 @@ impl WorkerPool {
             scale_lock: Mutex::new(()),
             next_domain,
             telemetry,
+            epc,
             metrics,
             next_id: AtomicU64::new(1),
             configured_workers: workers,
@@ -497,6 +543,22 @@ impl WorkerPool {
     /// The worker count the pool was configured with.
     pub fn worker_count(&self) -> usize {
         self.configured_workers
+    }
+
+    /// The pool's autoscale floor (reclaim never shrinks below it).
+    pub fn min_workers(&self) -> usize {
+        self.opts.min_workers
+    }
+
+    /// The pool's autoscale ceiling (`scale_to` clamps to it).
+    pub fn max_workers(&self) -> usize {
+        self.opts.max_workers
+    }
+
+    /// The per-worker enclave footprint the pool charges to the EPC
+    /// ledger (0 = not EPC-accounted).
+    pub fn worker_epc_bytes(&self) -> u64 {
+        self.opts.worker_epc_bytes
     }
 
     /// Tier-1 workers currently running.
@@ -509,6 +571,14 @@ impl WorkerPool {
     /// shards drain their queued requests first — nothing is dropped —
     /// and their residue classes re-home to the surviving shards (safe:
     /// see the module docs).
+    ///
+    /// Under EPC-aware scheduling the transition is ledger-transactional:
+    /// a grow charges `worker_epc_bytes` per new shard *before* any
+    /// enclave spawns (a denied charge leaves the pool unchanged and
+    /// counts in [`PoolMetrics::epc_denied_grows`]), and a shrink
+    /// credits the ledger only after the retired shards have drained —
+    /// the ledger always bounds *live* enclave residency, never a
+    /// hoped-for future state.
     pub fn scale_to(&self, n: usize) -> usize {
         let _guard = self.scale_lock.lock().unwrap();
         let n = n
@@ -519,6 +589,12 @@ impl WorkerPool {
             return cur;
         }
         if n > cur {
+            if let Some(acc) = &self.epc {
+                if acc.try_charge(n - cur).is_err() {
+                    self.metrics.lock().unwrap().epc_denied_grows += 1;
+                    return cur;
+                }
+            }
             {
                 let mut g = self.slots.lock().unwrap();
                 for w in cur..n {
@@ -568,6 +644,9 @@ impl WorkerPool {
             };
             for h in handles {
                 let _ = h.join();
+            }
+            if let Some(acc) = &self.epc {
+                acc.release(cur - n);
             }
             self.metrics.lock().unwrap().shrink_events += 1;
         }
@@ -662,6 +741,12 @@ impl WorkerPool {
         }
         for h in self.lane_threads.drain(..) {
             let _ = h.join();
+        }
+        // credit every still-active worker back to the EPC ledger —
+        // taking the account makes the (shutdown + Drop) double-stop
+        // path release exactly once
+        if let Some(acc) = self.epc.take() {
+            acc.release(self.active.load(Ordering::SeqCst));
         }
     }
 

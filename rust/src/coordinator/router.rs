@@ -17,7 +17,7 @@
 //! grows and shrinks each pool's tier-1 workers and the fabric's lane
 //! count between their configured bounds.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -28,11 +28,12 @@ use anyhow::{anyhow, Result};
 
 use super::admission::{AdmissionDenial, AdmissionLimits, ShedPolicy, TenantAdmission};
 use super::api::InferResponse;
+use super::epc_sched::{EpcAccount, EpcLedger, EpcOptions, EpcPacker, ReclaimCandidate};
 use super::fabric::{FabricMetrics, FabricOptions, LaneFabric};
 use super::pool::{PoolMetrics, PoolOptions, WorkerPool};
 use super::scheduler::{BatchScheduler, Tier2Finisher};
 use super::server::ServingEngine;
-use super::telemetry::{AdmissionSnapshot, Stage, TelemetryHub, TenantTelemetry};
+use super::telemetry::{AdmissionSnapshot, ScaleSnapshot, Stage, TelemetryHub, TenantTelemetry};
 use crate::util::threadpool::Channel;
 
 /// A registered serving backend: the classic shared-batcher engine or
@@ -230,11 +231,16 @@ pub enum AdmissionError {
     /// The tenant's tier-1 backlog reached its shed threshold (and no
     /// degraded tier absorbed the request).  The hint is the tenant's
     /// windowed queue-wait p95 (0 when telemetry has no samples yet).
+    /// `epc_limited` is true when the pool's most recent grow attempt
+    /// was refused by the EPC co-scheduler — the backlog is not going to
+    /// scale away, because enclave memory (not capacity policy) is the
+    /// binding constraint.
     Shed {
         model: String,
         depth: usize,
         threshold: usize,
         retry_after_ms: u64,
+        epc_limited: bool,
     },
 }
 
@@ -296,10 +302,16 @@ impl fmt::Display for AdmissionError {
                 depth,
                 threshold,
                 retry_after_ms,
+                epc_limited,
             } => write!(
                 f,
-                "model `{model}` shed the request (queue depth {depth} ≥ {threshold}); \
-                 retry after {retry_after_ms} ms"
+                "model `{model}` shed the request (queue depth {depth} ≥ {threshold}{}); \
+                 retry after {retry_after_ms} ms",
+                if *epc_limited {
+                    "; tier-1 growth is EPC-limited"
+                } else {
+                    ""
+                }
             ),
         }
     }
@@ -375,6 +387,13 @@ pub struct ScaleSignals {
     pub slo_ms: Option<f64>,
     /// Ticks since this target's last scale event (None = never scaled).
     pub ticks_since_scale: Option<u64>,
+    /// EPC ceiling: how many *more* workers of this target's enclave
+    /// footprint the EPC ledger can fund (None = not EPC-accounted,
+    /// e.g. fabric lanes — tier-2 tails hold no enclave state).  A grow
+    /// is capped at `active + headroom`; at zero headroom the grow is
+    /// suppressed entirely (the deployment tick then tries to reclaim
+    /// idle workers from over-provisioned tenants before giving up).
+    pub epc_headroom_workers: Option<usize>,
 }
 
 impl AutoscalePolicy {
@@ -382,6 +401,12 @@ impl AutoscalePolicy {
     /// step from `active`), or None to hold.  Pure so the flap
     /// regression tests and the serving simulator can drive the exact
     /// production decision rule over scripted traces.
+    ///
+    /// Grows are additionally capped by the EPC ceiling signal
+    /// ([`ScaleSignals::epc_headroom_workers`]): however loud the depth
+    /// or p95 signal, a target whose ledger headroom is zero holds
+    /// instead of growing into a paging storm.  Shrinks are never
+    /// EPC-capped — they only return memory.
     pub fn decide(&self, s: &ScaleSignals) -> Option<usize> {
         if let Some(t) = s.ticks_since_scale {
             if t < self.cooldown_ticks {
@@ -394,7 +419,7 @@ impl AutoscalePolicy {
             <= self
                 .low_depth_per_worker
                 .saturating_mul(active.saturating_sub(1));
-        match (self.mode, s.slo_ms) {
+        let want = match (self.mode, s.slo_ms) {
             (ScaleMode::SloP95, Some(slo))
                 if slo > 0.0 && s.window_samples >= self.min_window_samples =>
             {
@@ -416,6 +441,14 @@ impl AutoscalePolicy {
                     None
                 }
             }
+        };
+        match (want, s.epc_headroom_workers) {
+            (Some(n), Some(headroom)) if n > active => {
+                // saturating: usize::MAX headroom means "not EPC-bound"
+                let capped = n.min(active.saturating_add(headroom));
+                (capped > active).then_some(capped)
+            }
+            _ => want,
         }
     }
 }
@@ -425,6 +458,9 @@ struct ModelEntry {
     /// without holding the registry lock across the operation.
     pool: Arc<WorkerPool>,
     sample_bytes: usize,
+    /// Weighted-fair fabric share (also the EPC packer's reclaim
+    /// priority: workers parked above a tenant's share donate first).
+    weight: f64,
     /// Latency objective (ms) the SLO autoscaler holds this model to.
     slo_ms: Option<f64>,
     /// Per-tenant admission gate (rate limit / quota / shed threshold).
@@ -450,8 +486,17 @@ struct AutoscaleState {
 struct DeploymentCore {
     fabric: LaneFabric,
     models: Mutex<HashMap<String, ModelEntry>>,
+    /// Model names with a deploy in flight: makes the whole deploy —
+    /// EPC register + charge, fabric attach, pool start — exclusive per
+    /// name, so a concurrent duplicate deploy can never overwrite the
+    /// winner's ledger footprint between its register and its charge.
+    deploying: Mutex<HashSet<String>>,
     sessions: Mutex<HashMap<u64, String>>,
     policy: AutoscalePolicy,
+    /// EPC residency ledger (None = EPC-aware co-scheduling off).  Pools
+    /// whose `worker_epc_bytes > 0` charge every worker here; the tick
+    /// consults it (and the packer) before any grow.
+    epc: Option<Arc<EpcLedger>>,
     /// Per-tenant latency telemetry (shared with the fabric's lanes and
     /// every pool's tier-1 workers).
     telemetry: Arc<TelemetryHub>,
@@ -479,21 +524,33 @@ impl DeploymentCore {
     /// Pools are snapshotted out of the registry first: a shrink blocks
     /// until the retired shard drains, and holding the registry lock
     /// through that would stall every submit.
+    ///
+    /// Under EPC-aware co-scheduling (a deployment built with
+    /// [`Deployment::new_with_epc`]), every grow is checked against the
+    /// [`EpcLedger`] first: a grow the free budget cannot fund asks the
+    /// [`EpcPacker`] to reclaim idle workers parked above other tenants'
+    /// floors (most over-provisioned per fabric share first); if no
+    /// reclaim covers the deficit, the grow is *denied* and recorded in
+    /// the tenant's [`ScaleCounters`](super::telemetry::ScaleCounters)
+    /// — the pool never grows into a paging storm.
     fn tick(&self) {
         let p = &self.policy;
-        let entries: Vec<(String, Arc<WorkerPool>, Option<f64>)> = {
+        let mut entries: Vec<(String, Arc<WorkerPool>, Option<f64>, f64)> = {
             let g = self.models.lock().unwrap();
             g.iter()
-                .map(|(name, e)| (name.clone(), e.pool.clone(), e.slo_ms))
+                .map(|(name, e)| (name.clone(), e.pool.clone(), e.slo_ms, e.weight))
                 .collect()
         };
+        // fixed evaluation order: scaling (and EPC reclaim) decisions
+        // must not depend on registry hash order
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
         // close the live telemetry window; readouts below cover the
         // retained ring (the last `keep` ticks)
         self.telemetry.rotate_all();
-        let (tick_no, last_pool, last_fabric) = {
+        let (tick_no, last_fabric) = {
             let mut st = self.scale_state.lock().unwrap();
             st.tick += 1;
-            (st.tick, st.last_pool_scale.clone(), st.last_fabric_scale)
+            (st.tick, st.last_fabric_scale)
         };
         let mut t1_backlog = 0usize;
         // worst p95-vs-SLO pressure across tenants (drives the fabric)
@@ -506,7 +563,7 @@ impl DeploymentCore {
         // the depth rule for the shared lanes.
         let mut all_have_slo = !entries.is_empty();
         let slo_mode = p.mode == ScaleMode::SloP95;
-        for (name, pool, slo_ms) in &entries {
+        for (name, pool, slo_ms, _) in &entries {
             let depth = pool.queue_depth();
             t1_backlog += depth;
             // one windowed-snapshot merge per tenant, and only for
@@ -529,22 +586,82 @@ impl DeploymentCore {
                     fabric_samples += window_samples;
                 }
             }
-            let signals = ScaleSignals {
+            let prev = pool.active_workers();
+            // the EPC ceiling signal: how many more workers the ledger
+            // can fund for this tenant right now (None when the pool is
+            // not EPC-accounted)
+            let headroom = match (&self.epc, pool.worker_epc_bytes()) {
+                (Some(ledger), wb) if wb > 0 => Some(ledger.headroom_workers(name)),
+                _ => None,
+            };
+            // headroom returned (another tenant shrank or shut down):
+            // the tenant is no longer EPC-limited, even before it next
+            // attempts a grow — shed hints must not keep claiming the
+            // box is full
+            if headroom.is_some_and(|h| h > 0) {
+                if let Some(t) = self.telemetry.get(name) {
+                    t.scale().clear_epc_limited();
+                }
+            }
+            // read the live map, not a tick-start snapshot: a victim the
+            // packer just reclaimed from must see its fresh cooldown
+            // stamp when its own turn comes this same tick.  Saturating:
+            // a concurrent tick (pump + manual autoscale_tick) can stamp
+            // a *later* tick number than this pass captured.
+            let ticks_since_scale = {
+                let st = self.scale_state.lock().unwrap();
+                st.last_pool_scale
+                    .get(name)
+                    .map(|&l| tick_no.saturating_sub(l))
+            };
+            let mut signals = ScaleSignals {
                 depth,
-                active: pool.active_workers(),
+                active: prev,
                 p95_ms,
                 window_samples,
                 slo_ms: *slo_ms,
-                ticks_since_scale: last_pool.get(name).map(|&l| tick_no - l),
+                ticks_since_scale,
+                epc_headroom_workers: headroom,
             };
-            if let Some(n) = p.decide(&signals) {
-                let prev = pool.active_workers();
-                if pool.scale_to(n) != prev {
+            let mut decision = p.decide(&signals);
+            if decision.is_none() && headroom.is_some() {
+                // the ceiling may have suppressed a needed grow: re-read
+                // the raw intent and try to fund it by packer reclaim.
+                // A grow the pool's own max_workers bound would clamp
+                // away is a plain hold — never an EPC denial, and never
+                // worth dismantling another tenant's idle workers for.
+                signals.epc_headroom_workers = None;
+                if let Some(n) = p.decide(&signals) {
+                    let n = n.clamp(pool.min_workers(), pool.max_workers());
+                    let fund =
+                        n > prev && self.fund_epc_grow(name, pool, n - prev, &entries, tick_no);
+                    if fund {
+                        decision = Some(n);
+                    }
+                    // on failure the denial was recorded in fund_epc_grow
+                }
+            }
+            if let Some(n) = decision {
+                let n = n.clamp(pool.min_workers(), pool.max_workers());
+                if n == prev {
+                    continue; // clamped to a hold (e.g. already at max)
+                }
+                let now = pool.scale_to(n);
+                if now != prev {
+                    if n > prev {
+                        if let Some(t) = self.telemetry.get(name) {
+                            t.scale().clear_epc_limited();
+                        }
+                    }
                     self.scale_state
                         .lock()
                         .unwrap()
                         .last_pool_scale
                         .insert(name.clone(), tick_no);
+                } else if n > prev && pool.worker_epc_bytes() > 0 && self.epc.is_some() {
+                    // the ledger refused inside scale_to (a concurrent
+                    // charge raced the funding/headroom check above)
+                    self.record_epc_denied(name);
                 }
             }
         }
@@ -561,12 +678,113 @@ impl DeploymentCore {
             window_samples: fabric_samples,
             slo_ms: (all_have_slo && worst_ratio.is_some()).then_some(1.0),
             ticks_since_scale: last_fabric.map(|l| tick_no - l),
+            // tier-2 lanes hold no enclave state: never EPC-capped
+            epc_headroom_workers: None,
         };
         if let Some(n) = p.decide(&signals) {
             if self.fabric.scale_to(n) != lanes {
                 self.scale_state.lock().unwrap().last_fabric_scale = Some(tick_no);
             }
         }
+    }
+
+    /// Make room in the EPC ledger for `grow_by` more workers of
+    /// `model`: free budget first, then packer-planned reclaim of idle
+    /// workers from over-provisioned tenants.  Returns false (and
+    /// records the denial) when the grow cannot be funded.  The actual
+    /// charge stays inside the pool's `scale_to` — this only frees
+    /// capacity, so a race can at worst re-deny there, never overcommit.
+    ///
+    /// The deterministic replay mirrors this step
+    /// ([`crate::harness::sim::replay_epc_packing`]) — keep the two in
+    /// lockstep.
+    fn fund_epc_grow(
+        &self,
+        model: &str,
+        pool: &Arc<WorkerPool>,
+        grow_by: usize,
+        entries: &[(String, Arc<WorkerPool>, Option<f64>, f64)],
+        tick_no: u64,
+    ) -> bool {
+        let Some(ledger) = &self.epc else {
+            return true;
+        };
+        let wb = pool.worker_epc_bytes();
+        if wb == 0 {
+            return true;
+        }
+        let needed = wb.saturating_mul(grow_by as u64);
+        let free = ledger.free_bytes();
+        if free >= needed {
+            return true;
+        }
+        let candidates: Vec<ReclaimCandidate> = entries
+            .iter()
+            .filter(|(name, ..)| name != model)
+            .map(|(name, vpool, _, weight)| ReclaimCandidate {
+                tenant: name.clone(),
+                active: vpool.active_workers(),
+                floor: vpool.min_workers(),
+                queue_depth: vpool.queue_depth(),
+                weight: *weight,
+                worker_bytes: vpool.worker_epc_bytes(),
+            })
+            .collect();
+        let Some(plan) = EpcPacker::plan_reclaim(&candidates, needed - free) else {
+            self.record_epc_denied(model);
+            return false;
+        };
+        for (victim, retire) in plan {
+            let Some(vpool) = entries
+                .iter()
+                .find(|(name, ..)| *name == victim)
+                .map(|(_, p, ..)| p)
+            else {
+                continue;
+            };
+            let active = vpool.active_workers();
+            let reclaimed = active.saturating_sub(vpool.scale_to(active.saturating_sub(retire)));
+            if reclaimed > 0 {
+                if let Some(t) = self.telemetry.get(&victim) {
+                    t.scale().record_epc_reclaimed(reclaimed as u64);
+                }
+                // a donor holds its cooldown like any other scale event,
+                // so reclaim cannot ping-pong workers between tenants
+                self.scale_state
+                    .lock()
+                    .unwrap()
+                    .last_pool_scale
+                    .insert(victim, tick_no);
+            }
+        }
+        // a parallel charge may still have raced the freed budget away;
+        // scale_to's transactional charge is the final arbiter
+        if ledger.free_bytes() >= needed {
+            true
+        } else {
+            self.record_epc_denied(model);
+            false
+        }
+    }
+
+    fn record_epc_denied(&self, model: &str) {
+        if let Some(t) = self.telemetry.get(model) {
+            t.scale().record_epc_denied();
+        }
+    }
+}
+
+/// Releases a name's in-flight deploy claim on drop, so every exit
+/// path of [`Deployment::deploy_with_admission`] — success or error —
+/// frees the name for later deploy attempts.
+struct DeployClaim<'a> {
+    core: &'a DeploymentCore,
+    model: &'a str,
+}
+
+impl Drop for DeployClaim<'_> {
+    fn drop(&mut self) {
+        self.core.deploying.lock().unwrap().remove(self.model);
     }
 }
 
@@ -615,14 +833,32 @@ fn queue_hint_ms(t: &TenantTelemetry) -> u64 {
 impl Deployment {
     /// Create a deployment around a fresh lane fabric.
     pub fn new(fabric_opts: FabricOptions, policy: AutoscalePolicy) -> Self {
+        Self::new_with_epc(fabric_opts, policy, None)
+    }
+
+    /// [`Deployment::new`], plus EPC-aware co-scheduling: `epc` gives
+    /// the usable enclave budget (and overcommit factor) a global
+    /// [`EpcLedger`] enforces across every pool whose
+    /// [`PoolOptions::worker_epc_bytes`] is set.  Deploys that cannot
+    /// fit their initial fleet fail up front; autoscaler grows charge
+    /// transactionally, reclaim idle workers from over-provisioned
+    /// tenants when the budget is short, and are denied (typed,
+    /// telemetry-recorded) rather than overcommitting.
+    pub fn new_with_epc(
+        fabric_opts: FabricOptions,
+        policy: AutoscalePolicy,
+        epc: Option<EpcOptions>,
+    ) -> Self {
         let keep = (TELEMETRY_WINDOW_MS / policy.tick_ms.max(1)).clamp(5, 200) as usize;
         let telemetry = Arc::new(TelemetryHub::new(keep));
         Self {
             core: Arc::new(DeploymentCore {
                 fabric: LaneFabric::start_with_telemetry(fabric_opts, Some(telemetry.clone())),
                 models: Mutex::new(HashMap::new()),
+                deploying: Mutex::new(HashSet::new()),
                 sessions: Mutex::new(HashMap::new()),
                 policy,
+                epc: epc.map(|o| Arc::new(EpcLedger::new(o))),
                 telemetry,
                 scale_state: Mutex::new(AutoscaleState::default()),
                 next_band: AtomicU64::new(0),
@@ -631,6 +867,12 @@ impl Deployment {
             pump: None,
             stop: Arc::new(AtomicBool::new(false)),
         }
+    }
+
+    /// The deployment's EPC residency ledger, when EPC-aware
+    /// co-scheduling is on.
+    pub fn epc_ledger(&self) -> Option<Arc<EpcLedger>> {
+        self.core.epc.clone()
     }
 
     /// Register `model`: attach it to the fabric as a tenant with
@@ -695,6 +937,23 @@ impl Deployment {
         S: Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static,
         F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
     {
+        // Exclusive per-name deploy claim: a concurrent duplicate deploy
+        // is refused here, BEFORE the EPC ledger is touched — the
+        // register/charge pair below must never interleave with another
+        // deploy of the same name, or the loser's `register` could
+        // overwrite the winner's per-worker footprint mid-charge.
+        // Released on every exit path by the drop guard.
+        {
+            let mut pending = self.core.deploying.lock().unwrap();
+            anyhow::ensure!(
+                pending.insert(model.to_string()),
+                "model `{model}` deploy already in progress"
+            );
+        }
+        let _claim = DeployClaim {
+            core: self.core.as_ref(),
+            model,
+        };
         // Fast duplicate check, then release: pool startup is slow
         // (factor precompute, artifact compilation) and must not stall
         // admission on a live deployment by pinning the registry lock.
@@ -705,24 +964,50 @@ impl Deployment {
                 "model `{model}` is already deployed"
             );
         }
+        // EPC admission happens before any other side effect: register
+        // the tenant's per-worker footprint and charge the initial
+        // fleet.  A deploy that cannot fit fails here, with nothing to
+        // roll back — no fabric tenant, no enclave spawned.
+        let epc_account = match (&self.core.epc, pool_opts.worker_epc_bytes) {
+            (Some(ledger), wb) if wb > 0 => {
+                ledger.register(model, wb);
+                let initial = pool_opts.workers.max(1);
+                ledger.try_charge(model, initial).map_err(|d| {
+                    anyhow!("deploying `{model}` would overcommit usable EPC: {d}")
+                })?;
+                Some(EpcAccount::new(ledger.clone(), model))
+            }
+            _ => None,
+        };
         // The fabric's tenant table is the atomic claim on the model
         // name: a concurrent duplicate deploy fails here, before any
         // pool is started.
-        let handle = self
+        let handle = match self
             .core
             .fabric
-            .attach_with_slo(model, weight, slo_ms, finisher_factory)?;
+            .attach_with_slo(model, weight, slo_ms, finisher_factory)
+        {
+            Ok(h) => h,
+            Err(e) => {
+                // release the EPC charge the failed deploy took
+                if let Some(acc) = &epc_account {
+                    acc.release(pool_opts.workers.max(1));
+                }
+                return Err(e);
+            }
+        };
         let band = self.core.next_band.fetch_add(1, Ordering::SeqCst);
         let tenant_tel = self.core.telemetry.register(model);
         let mut pool_opts = pool_opts;
         if pool_opts.slo_ms <= 0.0 {
             pool_opts.slo_ms = slo_ms.unwrap_or(0.0);
         }
-        let pool = Arc::new(WorkerPool::start_attached(
+        let pool = Arc::new(WorkerPool::start_attached_with_epc(
             pool_opts,
             move |domain| sched_factory(band, domain),
             handle,
             Some(tenant_tel.clone()),
+            epc_account,
         ));
         let mut g = self.core.models.lock().unwrap();
         g.insert(
@@ -730,6 +1015,7 @@ impl Deployment {
             ModelEntry {
                 pool,
                 sample_bytes,
+                weight,
                 slo_ms,
                 admission: Arc::new(TenantAdmission::new(limits)),
                 shed_policy,
@@ -900,6 +1186,7 @@ impl Deployment {
                         depth,
                         threshold,
                         retry_after_ms: queue_hint_ms(&telemetry),
+                        epc_limited: telemetry.scale().epc_limited(),
                     }
                 };
                 let Some((dpool, dadm, dtel)) = degraded else {
@@ -948,6 +1235,7 @@ impl Deployment {
                             depth,
                             threshold,
                             retry_after_ms: queue_hint_ms(&telemetry),
+                            epc_limited: telemetry.scale().epc_limited(),
                         }
                     }
                 });
@@ -978,6 +1266,13 @@ impl Deployment {
     pub fn admission_snapshot(&self, model: &str) -> Option<AdmissionSnapshot> {
         let g = self.core.models.lock().unwrap();
         g.get(model).map(|e| e.telemetry.admission().snapshot())
+    }
+
+    /// A tenant's autoscale counters (EPC-denied grows, workers
+    /// reclaimed from it, the live EPC-limited flag), when deployed.
+    pub fn scale_snapshot(&self, model: &str) -> Option<ScaleSnapshot> {
+        let g = self.core.models.lock().unwrap();
+        g.get(model).map(|e| e.telemetry.scale().snapshot())
     }
 
     /// Blocking convenience (records client latency in the model's pool).
@@ -1131,6 +1426,7 @@ mod tests {
             window_samples: 0,
             slo_ms: None,
             ticks_since_scale: None,
+            epc_headroom_workers: None,
         }
     }
 
@@ -1173,6 +1469,39 @@ mod tests {
         s2.window_samples = 100;
         s2.p95_ms = Some(1.0);
         assert_eq!(p.decide(&s2), Some(3));
+    }
+
+    #[test]
+    fn epc_headroom_caps_grows_but_never_shrinks() {
+        let p = AutoscalePolicy::default(); // high 4, low 1
+        // a loud depth signal grows freely with headroom…
+        let mut s = signals(100, 2);
+        s.epc_headroom_workers = Some(3);
+        assert_eq!(p.decide(&s), Some(3));
+        // …and is suppressed entirely at zero headroom
+        s.epc_headroom_workers = Some(0);
+        assert_eq!(p.decide(&s), None, "no grow into a paging storm");
+        // None = not EPC-accounted (fabric lanes): unchanged behavior
+        s.epc_headroom_workers = None;
+        assert_eq!(p.decide(&s), Some(3));
+        // shrinks are never EPC-capped — they only return memory
+        let mut s = signals(0, 3);
+        s.epc_headroom_workers = Some(0);
+        assert_eq!(p.decide(&s), Some(2));
+        // p95 mode honors the cap too
+        let p95 = AutoscalePolicy {
+            mode: ScaleMode::SloP95,
+            min_window_samples: 1,
+            ..AutoscalePolicy::default()
+        };
+        let mut s = signals(0, 2);
+        s.slo_ms = Some(10.0);
+        s.window_samples = 8;
+        s.p95_ms = Some(50.0);
+        s.epc_headroom_workers = Some(0);
+        assert_eq!(p95.decide(&s), None, "SLO breach cannot override EPC");
+        s.epc_headroom_workers = Some(1);
+        assert_eq!(p95.decide(&s), Some(3));
     }
 
     #[test]
@@ -1236,9 +1565,22 @@ mod tests {
             depth: 9,
             threshold: 8,
             retry_after_ms: 0,
+            epc_limited: false,
         };
         assert_eq!(e.retry_after_ms(), Some(0));
         assert!(e.to_string().contains("queue depth 9"));
+        assert!(!e.to_string().contains("EPC"));
+
+        // an EPC-limited tenant says so in its shed hint: the backlog
+        // will not scale away, enclave memory is the binding constraint
+        let e = AdmissionError::Shed {
+            model: "m".into(),
+            depth: 9,
+            threshold: 8,
+            retry_after_ms: 4,
+            epc_limited: true,
+        };
+        assert!(e.to_string().contains("tier-1 growth is EPC-limited"));
 
         let e = AdmissionError::Unavailable { model: "m".into() };
         assert_eq!(e.retry_after_ms(), None, "shutdowns are not load hints");

@@ -31,9 +31,15 @@
 //! [`MIN_MS`], so any quantile estimate is within one bucket (a factor
 //! of 2^(1/SUB_BUCKETS)) of the exact sample quantile — also pinned by a
 //! test against a known synthetic distribution.
+//!
+//! Besides latency, every tenant carries two monotone counter sets that
+//! survive window rotation: [`AdmissionCounters`] (every admission
+//! verdict — admitted / rate-limited / quota / shed / degraded) and
+//! [`ScaleCounters`] (EPC-denied grows, workers reclaimed by the
+//! packer, and the live EPC-limited flag the shed hints read).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Histogram bucket count (covers ~1 µs .. ~50 min at 2 buckets/octave).
@@ -360,10 +366,70 @@ impl AdmissionCounters {
     }
 }
 
-/// One tenant's per-stage windowed histograms plus admission counters.
+/// Per-tenant autoscale outcome counters (lock-free, monotone), plus
+/// the live EPC-limited flag.  The deployment's autoscaler tick records
+/// every EPC-denied grow and every reclaimed worker here; the admission
+/// gate reads [`ScaleCounters::epc_limited`] to tell clients *why* a
+/// shed tenant is not simply scaling out of its backlog.
+#[derive(Default)]
+pub struct ScaleCounters {
+    epc_denied: AtomicU64,
+    epc_reclaimed: AtomicU64,
+    /// True while the tenant's most recent grow attempt was refused by
+    /// the EPC ledger (cleared by the next successful grow).
+    epc_limited: AtomicBool,
+}
+
+/// An owned snapshot of one tenant's autoscale counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScaleSnapshot {
+    /// Grow attempts the EPC co-scheduler denied
+    /// ([`ScaleDenied::EpcExhausted`](super::epc_sched::ScaleDenied)).
+    pub epc_denied: u64,
+    /// Idle workers reclaimed *from* this tenant to fund another
+    /// tenant's grow.
+    pub epc_reclaimed: u64,
+    /// Whether the tenant's growth is currently EPC-limited.
+    pub epc_limited: bool,
+}
+
+impl ScaleCounters {
+    /// Record an EPC-denied grow (sets the limited flag).
+    pub fn record_epc_denied(&self) {
+        self.epc_denied.fetch_add(1, Ordering::Relaxed);
+        self.epc_limited.store(true, Ordering::Relaxed);
+    }
+
+    /// Record `n` workers reclaimed from this tenant by the packer.
+    pub fn record_epc_reclaimed(&self, n: u64) {
+        self.epc_reclaimed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A grow succeeded (or headroom returned): clear the limited flag.
+    pub fn clear_epc_limited(&self) {
+        self.epc_limited.store(false, Ordering::Relaxed);
+    }
+
+    /// Whether the tenant's most recent grow attempt was EPC-denied.
+    pub fn epc_limited(&self) -> bool {
+        self.epc_limited.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> ScaleSnapshot {
+        ScaleSnapshot {
+            epc_denied: self.epc_denied.load(Ordering::Relaxed),
+            epc_reclaimed: self.epc_reclaimed.load(Ordering::Relaxed),
+            epc_limited: self.epc_limited(),
+        }
+    }
+}
+
+/// One tenant's per-stage windowed histograms plus admission and
+/// autoscale counters.
 pub struct TenantTelemetry {
     stages: [WindowedHistogram; 4],
     admission: AdmissionCounters,
+    scale: ScaleCounters,
 }
 
 impl TenantTelemetry {
@@ -371,12 +437,18 @@ impl TenantTelemetry {
         Self {
             stages: std::array::from_fn(|_| WindowedHistogram::new(keep)),
             admission: AdmissionCounters::default(),
+            scale: ScaleCounters::default(),
         }
     }
 
     /// The tenant's admission outcome counters.
     pub fn admission(&self) -> &AdmissionCounters {
         &self.admission
+    }
+
+    /// The tenant's autoscale outcome counters (EPC denials/reclaims).
+    pub fn scale(&self) -> &ScaleCounters {
+        &self.scale
     }
 
     /// Record a latency sample for one stage.  Lock-free.
@@ -584,6 +656,31 @@ mod tests {
         // counters survive window rotation (monotone, not windowed)
         hub.rotate_all();
         assert_eq!(t.admission().snapshot(), s);
+    }
+
+    #[test]
+    fn scale_counters_track_denials_and_the_limited_flag() {
+        let hub = TelemetryHub::new(2);
+        let t = hub.register("sim224");
+        let s = t.scale();
+        assert_eq!(s.snapshot(), ScaleSnapshot::default());
+        assert!(!s.epc_limited());
+        // a denial counts and raises the live flag…
+        s.record_epc_denied();
+        s.record_epc_denied();
+        s.record_epc_reclaimed(3);
+        let snap = s.snapshot();
+        assert_eq!(snap.epc_denied, 2);
+        assert_eq!(snap.epc_reclaimed, 3);
+        assert!(snap.epc_limited);
+        // …a successful grow clears the flag but never the history
+        s.clear_epc_limited();
+        let snap = s.snapshot();
+        assert!(!snap.epc_limited);
+        assert_eq!(snap.epc_denied, 2);
+        // counters are monotone across window rotations
+        hub.rotate_all();
+        assert_eq!(t.scale().snapshot(), snap);
     }
 
     #[test]

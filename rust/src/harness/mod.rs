@@ -7,4 +7,7 @@ pub mod sim;
 
 pub use bench::{Bench, BenchResult};
 pub use prop::forall;
-pub use sim::{exact_percentile, replay, sim_seed, SimClock, SimConfig, SimResult, Trace};
+pub use sim::{
+    exact_percentile, replay, replay_epc_packing, sim_seed, EpcSimConfig, EpcSimResult,
+    EpcSimTenant, SimClock, SimConfig, SimResult, Trace,
+};

@@ -30,6 +30,7 @@
 //! comes from [`sim_seed`] (`ORIGAMI_SIM_SEED` overrides it).
 
 use crate::coordinator::admission::TokenBucket;
+use crate::coordinator::epc_sched::{EpcLedger, EpcOptions, EpcPacker, ReclaimCandidate};
 use crate::coordinator::fabric::FairClock;
 use crate::coordinator::router::{AutoscalePolicy, ScaleSignals};
 use crate::util::rng::Rng;
@@ -598,6 +599,8 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
                     window_samples: lat.len() as u64,
                     slo_ms: cfg.slo_ms,
                     ticks_since_scale: last_scale_tick.map(|l| tick_no - l),
+                    // lanes are tier-2 capacity: never EPC-accounted
+                    epc_headroom_workers: None,
                 };
                 if let Some(n) = policy.decide(&signals) {
                     let n = n.clamp(min_lanes, max_lanes);
@@ -626,6 +629,357 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
         end_ms,
         rejected,
         degraded,
+    }
+}
+
+// ----------------------------------------------------------------------
+// EPC-aware tier-1 pool packing replay
+// ----------------------------------------------------------------------
+
+/// One tenant's tier-1 pool in an EPC packing replay (the sim twin of a
+/// deployment pool under the [`EpcLedger`]).
+#[derive(Debug, Clone)]
+pub struct EpcSimTenant {
+    pub name: String,
+    /// Per-worker resident enclave footprint (bytes) — production feeds
+    /// the Table-I memory-analytics estimate here.
+    pub worker_bytes: u64,
+    /// Autoscale floor / initial worker count.
+    pub min_workers: usize,
+    /// Autoscale ceiling.
+    pub max_workers: usize,
+    /// Weighted-fair fabric share (the packer's reclaim priority).
+    pub weight: f64,
+}
+
+/// Replay configuration for [`replay_epc_packing`].
+#[derive(Debug, Clone)]
+pub struct EpcSimConfig {
+    /// Usable EPC bytes the ledger packs against.
+    pub usable_bytes: u64,
+    /// Overcommit factor (ledger capacity = usable × overcommit).
+    pub overcommit: f64,
+    /// EPC-aware packing on?  Off replays the PR-2/3 behavior: pools
+    /// scale on their own signals with no residency accounting — the
+    /// "naive" side of `benches/fig18_epc_packing.rs`.
+    pub packing: bool,
+    pub tenants: Vec<EpcSimTenant>,
+    /// Per-pool scaling policy (depth mode is the typical driver here).
+    pub policy: AutoscalePolicy,
+}
+
+/// What an EPC packing replay produced.
+#[derive(Debug, Clone)]
+pub struct EpcSimResult {
+    /// Per-request latency samples (tenant, latency ms).
+    pub samples: Vec<(String, f64)>,
+    /// Requests served per tenant (every admitted request completes —
+    /// packing throttles *capacity*, it never drops work).
+    pub served: BTreeMap<String, usize>,
+    /// Autoscaler ticks during which the summed resident footprint of
+    /// all live workers exceeded the usable EPC — the paging-storm
+    /// condition (each worker's enclave fits alone; overcommit across
+    /// pools is what pages).
+    pub storm_ticks: u64,
+    /// High-water mark of summed resident footprint (bytes).
+    pub peak_resident_bytes: u64,
+    /// Grow decisions the ledger/packer denied.
+    pub denied_grows: u64,
+    /// Idle workers the packer reclaimed to fund other tenants' grows.
+    pub reclaimed_workers: u64,
+    /// Peak concurrent workers per tenant.
+    pub peak_workers: BTreeMap<String, usize>,
+    /// When the last request finished (ms).
+    pub end_ms: f64,
+}
+
+impl EpcSimResult {
+    /// Exact latency percentile over (optionally one tenant's) samples.
+    pub fn percentile(&self, tenant: Option<&str>, q: f64) -> f64 {
+        let mut lat: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|(t, _)| tenant.map(|n| t == n).unwrap_or(true))
+            .map(|(_, l)| *l)
+            .collect();
+        exact_percentile(&mut lat, q)
+    }
+}
+
+struct EpcSimPool {
+    name: String,
+    queue: VecDeque<(f64, f64)>, // (arrival_ms, cost_ms) per request
+    /// Busy-until instants of the provisioned worker slots (idle slots
+    /// carry a past instant).
+    free_at: Vec<f64>,
+    active: usize,
+    floor: usize,
+    ceiling: usize,
+    worker_bytes: u64,
+    weight: f64,
+    last_scale_tick: Option<u64>,
+}
+
+/// Deterministic replay of per-tenant tier-1 pools scaling under (or
+/// without) the EPC co-scheduler — the exact production decision code:
+/// [`AutoscalePolicy::decide`] per pool per tick, charges through the
+/// production [`EpcLedger`], reclaim plans from [`EpcPacker`].  Each
+/// tenant's requests are served FIFO by its own workers at the trace's
+/// per-request cost; packing changes *when* workers exist, never what
+/// is computed — which is why `benches/fig18_epc_packing.rs` can pin
+/// bit-identical outputs on the live stack while measuring packing
+/// here.
+pub fn replay_epc_packing(cfg: &EpcSimConfig, trace: &Trace) -> EpcSimResult {
+    let arrivals = trace.sorted();
+    let ledger = cfg.packing.then(|| {
+        EpcLedger::new(EpcOptions {
+            usable_bytes: cfg.usable_bytes,
+            overcommit: cfg.overcommit,
+        })
+    });
+    let mut pools: Vec<EpcSimPool> = cfg
+        .tenants
+        .iter()
+        .map(|t| {
+            let floor = t.min_workers.max(1);
+            let ceiling = t.max_workers.max(floor);
+            if let Some(l) = &ledger {
+                l.register(&t.name, t.worker_bytes);
+                // the initial fleet is charged like a deploy — and like
+                // a deploy, a floor that cannot fit is a hard error
+                // (silently running uncharged workers would let packing
+                // mode overcommit while reporting zero storms)
+                assert!(
+                    l.try_charge(&t.name, floor).is_ok(),
+                    "EpcSimConfig: tenant `{}` floor ({floor} × {} B) does \
+                     not fit usable EPC",
+                    t.name,
+                    t.worker_bytes,
+                );
+            }
+            EpcSimPool {
+                name: t.name.clone(),
+                queue: VecDeque::new(),
+                free_at: vec![0.0; ceiling],
+                active: floor,
+                floor,
+                ceiling,
+                worker_bytes: t.worker_bytes,
+                weight: t.weight,
+                last_scale_tick: None,
+            }
+        })
+        .collect();
+    // the production tick evaluates tenants in sorted name order — the
+    // replay must make the same funding decisions under contention
+    pools.sort_by(|a, b| a.name.cmp(&b.name));
+
+    let tick_ms = cfg.policy.tick_ms.max(1) as f64;
+    let mut clock = SimClock::new();
+    let mut next_tick = tick_ms;
+    let mut tick_no = 0u64;
+    let mut idx = 0usize;
+    let mut samples = Vec::with_capacity(trace.total_requests());
+    let mut served: BTreeMap<String, usize> = BTreeMap::new();
+    let mut peak_workers: BTreeMap<String, usize> = BTreeMap::new();
+    let mut storm_ticks = 0u64;
+    let mut peak_resident = 0u64;
+    let mut denied = 0u64;
+    let mut reclaimed = 0u64;
+    let mut end_ms = 0.0f64;
+
+    for p in &pools {
+        peak_workers.insert(p.name.clone(), p.active);
+    }
+
+    loop {
+        // 1. assign queued requests to idle workers, FIFO per tenant
+        for p in pools.iter_mut() {
+            while !p.queue.is_empty() {
+                let lane = (0..p.active)
+                    .filter(|&w| p.free_at[w] <= clock.now_ms())
+                    .min_by(|&a, &b| p.free_at[a].partial_cmp(&p.free_at[b]).unwrap());
+                let Some(lane) = lane else { break };
+                let (arrival, cost) = p.queue.pop_front().unwrap();
+                let done = clock.now_ms() + cost;
+                p.free_at[lane] = done;
+                end_ms = end_ms.max(done);
+                samples.push((p.name.clone(), done - arrival));
+                *served.entry(p.name.clone()).or_insert(0) += 1;
+            }
+        }
+
+        // 2. next event: arrival, worker freeing with work queued, tick
+        let mut next = f64::INFINITY;
+        if idx < arrivals.len() {
+            next = next.min(arrivals[idx].at_ms);
+        }
+        let mut work_pending = idx < arrivals.len();
+        for p in &pools {
+            let busy = p.free_at[..p.active]
+                .iter()
+                .any(|&f| f > clock.now_ms());
+            work_pending |= busy || !p.queue.is_empty();
+            if !p.queue.is_empty() {
+                for &f in &p.free_at[..p.active] {
+                    if f > clock.now_ms() {
+                        next = next.min(f);
+                    }
+                }
+            }
+        }
+        if work_pending {
+            next = next.min(next_tick);
+        }
+        if !next.is_finite() {
+            break;
+        }
+        clock.advance_to(next);
+
+        // 3. enqueue arrivals (per-request, FIFO)
+        while idx < arrivals.len() && arrivals[idx].at_ms <= clock.now_ms() {
+            let a = &arrivals[idx];
+            idx += 1;
+            let per_req = a.cost_ms / a.requests as f64;
+            if let Some(p) = pools.iter_mut().find(|p| p.name == a.tenant) {
+                for _ in 0..a.requests {
+                    p.queue.push_back((a.at_ms, per_req));
+                }
+            }
+        }
+
+        // 4. autoscaler ticks: per-pool decide + ledger/packer funding,
+        //    then the storm audit over the resulting fleet
+        while next_tick <= clock.now_ms() {
+            tick_no += 1;
+            for i in 0..pools.len() {
+                let (depth, active, ticks_since) = {
+                    let p = &pools[i];
+                    (
+                        p.queue.len(),
+                        p.active,
+                        p.last_scale_tick.map(|l| tick_no - l),
+                    )
+                };
+                // the production wiring: decide under the EPC ceiling;
+                // a grow the ceiling suppressed retries via the packer
+                let headroom = ledger
+                    .as_ref()
+                    .map(|l| l.headroom_workers(&pools[i].name));
+                let mut signals = ScaleSignals {
+                    depth,
+                    active,
+                    p95_ms: None,
+                    window_samples: 0,
+                    slo_ms: None,
+                    ticks_since_scale: ticks_since,
+                    epc_headroom_workers: headroom,
+                };
+                let mut decision = cfg.policy.decide(&signals);
+                if decision.is_none() && headroom.is_some() {
+                    signals.epc_headroom_workers = None;
+                    if let Some(n) = cfg.policy.decide(&signals) {
+                        let n = n.clamp(pools[i].floor, pools[i].ceiling);
+                        if n > active {
+                            let l = ledger.as_ref().unwrap();
+                            let needed =
+                                pools[i].worker_bytes * (n - active) as u64;
+                            let cands: Vec<ReclaimCandidate> = pools
+                                .iter()
+                                .enumerate()
+                                .filter(|(j, _)| *j != i)
+                                .map(|(_, p)| ReclaimCandidate {
+                                    tenant: p.name.clone(),
+                                    active: p.active,
+                                    floor: p.floor,
+                                    queue_depth: p.queue.len(),
+                                    weight: p.weight,
+                                    worker_bytes: p.worker_bytes,
+                                })
+                                .collect();
+                            let deficit =
+                                needed.saturating_sub(l.free_bytes());
+                            // NOTE: this mirrors DeploymentCore::
+                            // fund_epc_grow — keep the two in lockstep
+                            match EpcPacker::plan_reclaim(&cands, deficit) {
+                                Some(plan) => {
+                                    for (victim, k) in plan {
+                                        let v = pools
+                                            .iter_mut()
+                                            .find(|p| p.name == victim)
+                                            .unwrap();
+                                        let take = k.min(v.active - v.floor);
+                                        v.active -= take;
+                                        v.last_scale_tick = Some(tick_no);
+                                        l.release(&victim, take);
+                                        reclaimed += take as u64;
+                                    }
+                                    // production re-checks the freed
+                                    // budget after applying the plan
+                                    if l.free_bytes() >= needed {
+                                        decision = Some(n);
+                                    } else {
+                                        denied += 1;
+                                    }
+                                }
+                                None => {
+                                    denied += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                let Some(n) = decision else { continue };
+                let n = n.clamp(pools[i].floor, pools[i].ceiling);
+                if n == active {
+                    continue;
+                }
+                if n > active {
+                    if let Some(l) = &ledger {
+                        if l.try_charge(&pools[i].name, n - active).is_err() {
+                            denied += 1;
+                            continue;
+                        }
+                    }
+                } else if let Some(l) = &ledger {
+                    l.release(&pools[i].name, active - n);
+                }
+                let p = &mut pools[i];
+                if n > p.active {
+                    // slots re-entering service are fresh workers: they
+                    // must not inherit a busy-until instant left over
+                    // from a retired incarnation
+                    for w in p.active..n {
+                        p.free_at[w] = clock.now_ms();
+                    }
+                }
+                p.active = n;
+                p.last_scale_tick = Some(tick_no);
+                let peak = peak_workers.entry(p.name.clone()).or_insert(0);
+                *peak = (*peak).max(n);
+            }
+            // the paging-storm audit: summed live residency vs budget
+            let resident: u64 = pools
+                .iter()
+                .map(|p| p.worker_bytes * p.active as u64)
+                .sum();
+            peak_resident = peak_resident.max(resident);
+            if resident > cfg.usable_bytes {
+                storm_ticks += 1;
+            }
+            next_tick += tick_ms;
+        }
+    }
+
+    EpcSimResult {
+        samples,
+        served,
+        storm_ticks,
+        peak_resident_bytes: peak_resident,
+        denied_grows: denied,
+        reclaimed_workers: reclaimed,
+        peak_workers,
+        end_ms,
     }
 }
 
@@ -918,6 +1272,110 @@ mod tests {
         assert_eq!(r.windowed_p95(Some("a"), 100.0), 50.0);
         assert_eq!(r.windowed_p95(Some("missing"), 100.0), 0.0);
         assert_eq!(r.windowed_p95(None, 1e9), r.p95(None), "one big window");
+    }
+
+    fn epc_tenants(n: usize, worker_bytes: u64) -> Vec<EpcSimTenant> {
+        (0..n)
+            .map(|i| EpcSimTenant {
+                name: format!("t{i}"),
+                worker_bytes,
+                min_workers: 1,
+                max_workers: 3,
+                weight: 1.0,
+            })
+            .collect()
+    }
+
+    fn epc_cfg(packing: bool, tenants: Vec<EpcSimTenant>) -> EpcSimConfig {
+        EpcSimConfig {
+            usable_bytes: 100,
+            overcommit: 1.0,
+            packing,
+            tenants,
+            policy: AutoscalePolicy {
+                high_depth_per_worker: 2,
+                low_depth_per_worker: 0,
+                tick_ms: 1,
+                cooldown_ticks: 1,
+                ..AutoscalePolicy::default()
+            },
+        }
+    }
+
+    fn overload_trace(tenants: usize) -> Trace {
+        let mut t = Trace::new();
+        for i in 0..tenants {
+            // enough backlog to push every pool toward its ceiling
+            t.push_periodic(&format!("t{i}"), 0.0, 2.0, 30, 4, 8.0);
+        }
+        t
+    }
+
+    #[test]
+    fn naive_scaling_overcommits_where_packing_does_not() {
+        // two tenants, 40 B/worker, 100 B usable: both growing to 2+
+        // workers overcommits (160 > 100); the ledger caps the fleet
+        let naive = replay_epc_packing(&epc_cfg(false, epc_tenants(2, 40)), &overload_trace(2));
+        assert!(naive.storm_ticks > 0, "naive scaling must paging-storm");
+        assert!(naive.peak_resident_bytes > 100);
+        assert_eq!(naive.denied_grows, 0, "nothing denies a naive grow");
+
+        let packed = replay_epc_packing(&epc_cfg(true, epc_tenants(2, 40)), &overload_trace(2));
+        assert_eq!(packed.storm_ticks, 0, "the ledger must prevent storms");
+        assert!(packed.peak_resident_bytes <= 100);
+        assert!(packed.denied_grows > 0, "grows beyond budget are denied");
+        // packing throttles capacity, never drops work: equal service
+        assert_eq!(packed.served, naive.served);
+        assert!(packed.end_ms > 0.0);
+    }
+
+    #[test]
+    fn packer_reclaims_idle_workers_in_the_replay() {
+        // t0 bursts early, grows to 2 workers (exhausting the budget)
+        // and then drains — but its cooldown holds it at 2, parked idle
+        // above its floor.  When t1's load arrives, its grow can only
+        // be funded by the packer reclaiming t0's idle worker.
+        let mut cfg = epc_cfg(
+            true,
+            (0..2)
+                .map(|i| EpcSimTenant {
+                    name: format!("t{i}"),
+                    worker_bytes: 40,
+                    min_workers: 1,
+                    max_workers: 2,
+                    weight: 1.0,
+                })
+                .collect(),
+        );
+        cfg.usable_bytes = 120;
+        cfg.policy.cooldown_ticks = 50;
+        let mut t = Trace::new();
+        t.push_periodic("t0", 0.0, 1.0, 8, 2, 2.0);
+        t.push_periodic("t1", 30.0, 1.0, 20, 2, 2.0);
+        let r = replay_epc_packing(&cfg, &t);
+        assert!(r.reclaimed_workers > 0, "idle t0 worker funds t1's grow");
+        assert_eq!(r.storm_ticks, 0);
+        assert!(r.peak_resident_bytes <= 120);
+        assert_eq!(
+            r.served.values().sum::<usize>(),
+            t.total_requests(),
+            "reclaim drops no requests"
+        );
+        assert!(r.peak_workers["t1"] > 1, "t1 grew on reclaimed budget");
+    }
+
+    #[test]
+    fn epc_replay_is_deterministic() {
+        let cfg = epc_cfg(true, epc_tenants(3, 30));
+        let t = overload_trace(3);
+        let a = replay_epc_packing(&cfg, &t);
+        let b = replay_epc_packing(&cfg, &t);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.storm_ticks, b.storm_ticks);
+        assert_eq!(a.denied_grows, b.denied_grows);
+        assert_eq!(a.reclaimed_workers, b.reclaimed_workers);
+        assert_eq!(a.percentile(None, 95.0), b.percentile(None, 95.0));
+        assert_eq!(a.end_ms, b.end_ms);
     }
 
     #[test]

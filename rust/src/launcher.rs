@@ -15,8 +15,8 @@ use anyhow::{Context, Result};
 use crate::config::{Config, ModelSpec};
 use crate::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
 use crate::coordinator::{
-    AdmissionLimits, AutoscalePolicy, Deployment, FabricOptions, PoolOptions, ScaleMode,
-    ServingEngine, ShedPolicy, SplitPolicy, WorkerPool,
+    AdmissionLimits, AutoscalePolicy, Deployment, EpcOptions, FabricOptions, PoolOptions,
+    ScaleMode, ServingEngine, ShedPolicy, SplitPolicy, WorkerPool,
 };
 use crate::enclave::cost::CostModel;
 use crate::model::{Manifest, Model};
@@ -247,6 +247,47 @@ pub fn shed_policy_from_config(config: &Config) -> ShedPolicy {
     }
 }
 
+/// EPC co-scheduling geometry from a config: `--epc-overcommit 0`
+/// disables the ledger entirely; anything above packs tier-1 pools into
+/// `usable_epc_bytes() × overcommit`.
+pub fn epc_options_from_config(config: &Config) -> Option<EpcOptions> {
+    (config.epc_overcommit > 0.0).then(|| EpcOptions {
+        usable_bytes: config.usable_epc_bytes(),
+        overcommit: config.epc_overcommit,
+    })
+}
+
+/// Estimate one tier-1 worker's resident enclave footprint — what the
+/// EPC ledger charges per worker.  This is the Table-I decomposition
+/// ([`crate::strategies::memory::enclave_requirement`]) over the plan
+/// the strategy name describes
+/// ([`strategies::partition_plan_for`](crate::strategies::partition_plan_for)):
+/// base runtime + plan-resident parameters + lazy-dense chunk + peak
+/// feature-map working set + blinding buffers, evaluated at the
+/// batcher's `max_batch` (the worst residency a worker can reach).
+/// Strategies without an enclave (`open`) cost 0.
+pub fn worker_epc_bytes_for(model: &Model, config: &Config) -> Result<u64> {
+    let Some(plan) =
+        strategies::partition_plan_for(model, &config.strategy, config.partition)?
+    else {
+        return Ok(0);
+    };
+    let req = crate::strategies::memory::enclave_requirement(
+        model,
+        &plan,
+        config.lazy_dense_bytes,
+        config.max_batch.max(1),
+    );
+    Ok(req.total())
+}
+
+/// [`worker_epc_bytes_for`] for callers without a loaded model (tests,
+/// benches): resolves the model geometry from the config first.
+pub fn worker_epc_bytes_from_config(config: &Config) -> Result<u64> {
+    let (_, model) = executor_for(config)?;
+    worker_epc_bytes_for(&model, config)
+}
+
 /// Keyspace stride between tenants' blinding domains: tenant *t*'s pool
 /// draws its workers' domains from `t·STRIDE + incarnation`, where the
 /// incarnation index is the pool's monotone spawn counter (never reused,
@@ -314,6 +355,10 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
     let slo_ms = (config.slo_ms > 0.0).then_some(config.slo_ms);
     let limits = admission_limits_from_config(config);
     let shed_policy = shed_policy_from_config(config);
+    let mut pool_opts = pool_options_from_config(config);
+    if dep.epc_ledger().is_some() {
+        pool_opts.worker_epc_bytes = worker_epc_bytes_for(&model, config)?;
+    }
     dep.deploy_with_admission(
         &config.model,
         sample_bytes,
@@ -321,7 +366,7 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
         slo_ms,
         limits,
         shed_policy,
-        pool_options_from_config(config),
+        pool_opts,
         move |band, domain| {
             let mut c = sched_cfg.clone();
             c.blind_domain = band * BLIND_DOMAIN_STRIDE + domain as u64;
@@ -337,12 +382,18 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
         dcfg.slo_ms = 0.0;
         let dsched_cfg = dcfg.clone();
         let dfin_cfg = dcfg.clone();
+        let mut dpool_opts = pool_options_from_config(&dcfg);
+        if dep.epc_ledger().is_some() {
+            // the degraded tier's enclaves live in the same EPC (same
+            // model geometry, different strategy → different plan)
+            dpool_opts.worker_epc_bytes = worker_epc_bytes_for(&model, &dcfg)?;
+        }
         dep.deploy(
             &degraded,
             sample_bytes,
             weight * DEGRADE_WEIGHT_FRACTION,
             None,
-            pool_options_from_config(&dcfg),
+            dpool_opts,
             move |band, domain| {
                 let mut c = dsched_cfg.clone();
                 c.blind_domain = band * BLIND_DOMAIN_STRIDE + domain as u64;
@@ -361,9 +412,10 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
 /// attached tier-1 pool per spec, and (when `base.autoscale`) the
 /// background queue-depth autoscaler.
 pub fn start_deployment_from_config(base: &Config, specs: &[ModelSpec]) -> Result<Deployment> {
-    let mut dep = Deployment::new(
+    let mut dep = Deployment::new_with_epc(
         fabric_options_from_config(base)?,
         autoscale_policy_from_config(base),
+        epc_options_from_config(base),
     );
     for spec in specs {
         let cfg = spec.apply(base);

@@ -50,7 +50,21 @@
 //!   batching — token-bucket rate limits, leak-proof in-flight quotas
 //!   and queue-depth shedding with an optional degrade tier — while
 //!   the fair queue pops least-SLO-slack-first within each tenant's
-//!   entitlement (cross-tenant shares unchanged).
+//!   entitlement (cross-tenant shares unchanged).  With EPC-aware
+//!   co-scheduling on ([`coordinator::epc_sched`]), a global
+//!   [`coordinator::EpcLedger`] makes enclave residency a first-class
+//!   scheduling input: every tier-1 worker is charged its model's
+//!   resident footprint (the Table-I analytics,
+//!   [`strategies::memory`]), grows that would overcommit usable EPC
+//!   reclaim idle workers from over-provisioned tenants or are denied
+//!   (typed, telemetry-recorded) — pools can no longer autoscale into
+//!   a mutual paging storm.
+//!
+//! The full request lifecycle (admission gate → batcher → tier-1 pool
+//! → blinding boundary → fair-queue fabric → tier-2 lanes →
+//! unblind/reply) is walked through in `docs/ARCHITECTURE.md`, with a
+//! module map; `docs/CONFIG.md` is the drift-tested CLI/config
+//! reference.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! model once; everything here is self-contained afterwards.  Offline

@@ -53,7 +53,11 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
+/// Help text is *generated* from [`Config::flag_docs`] (one row per
+/// flag, defaults read from `Config::default()`), so a new config knob
+/// cannot ship without appearing here — the drift the PR-3/4 knobs hit.
 fn print_help() {
+    use origami::util::json::Value;
     println!(
         "origami — privacy-preserving DNN inference (paper reproduction)\n\n\
          Usage: origami <command> [options]\n\n\
@@ -61,51 +65,60 @@ fn print_help() {
            infer              run one private inference\n\
            serve              serve a synthetic request stream\n\
            partition-search   run Algorithm 1 (partition point selection)\n\
-           inspect            show manifest / config / memory analytics\n\n\
-         Common options:\n\
-           --artifacts <dir>  artifacts root [./artifacts]\n\
-           --model <name>     vgg16-32 | vgg19-32 | sim8 (no artifacts) [vgg16-32]\n\
-           --strategy <s>     baseline2|split/N|slalom|origami[/N]|open\n\
-           --device <d>       cpu | gpu [cpu]\n\
-           --partition <p>    Origami partition layer [6]\n\
-           --seed <n>         deployment seed [2019]\n\
-         Serve options:\n\
-           --requests <n>     total requests [64]\n\
-           --rate <rps>       Poisson arrival rate [50]\n\
-           --workers <n>      strategy workers [2]\n\
-           --max-batch <n>    batcher limit [8]\n\
-           --max-delay-ms <f> batcher delay [2.0]\n\
-           --pool             sharded worker pool (session affinity +\n\
-                              pipelined Origami tiers) instead of the\n\
-                              shared-batcher engine\n\
-           --no-pipeline      pool only: serialize tier-1/tier-2 again\n\
-         Multi-model serve (shared tier-2 lane fabric):\n\
-           --models <spec>    comma list of\n\
-                              model[=strategy[@device][*weight]][:key=value…]\n\
-                              keys: slo=Nms | rps=N | inflight=N | shed=N\n\
-                              e.g. sim16=origami/2*2:slo=20ms:rps=500,sim8=slalom\n\
-           --lanes <n>        fabric lane count [workers]\n\
-           --lane-devices <l> per-lane device cycle, e.g. cpu,gpu [device]\n\
-           --min-lanes/--max-lanes, --min-workers/--max-workers\n\
-                              autoscale bounds (0 = pinned)\n\
-           --autoscale        enable the background autoscaler\n\
-           --autoscale-policy depth | p95 (scale on windowed p95 vs SLO,\n\
-                              depth as cold-start fallback) [depth]\n\
-           --autoscale-cooldown <t>  hold ticks after any scale event [2]\n\
-           --slo-ms <f>       default per-model latency objective [0=off]\n\
-           --split-tail-ms <f>  split tier-2 tails over this simulated\n\
-                              cost into chunks (0 = off)\n\
-           --split-tail-chunk <n>  hard per-tail request ceiling (0 = off)\n\
-           --occupancy-flush  flush partial batches while tier-2 is idle\n\
-         Admission control (per tenant; 0 = unlimited):\n\
-           --rps <f>          token-bucket rate limit (requests/s)\n\
-           --admission-burst <f>  bucket burst capacity [max(1, rps/10)]\n\
-           --inflight <n>     in-flight concurrency quota\n\
-           --shed-depth <n>   shed once the tier-1 backlog hits this\n\
-           --shed-policy <p>  reject | degrade (serve shed requests from\n\
-                              a cheaper strategy tier) [reject]\n\
-           --degrade-strategy <s>  the cheaper tier [baseline2]"
+           inspect            show manifest / config / memory analytics"
     );
+    let defaults = Config::default().to_json();
+    let render_default = |key: &str| -> Option<String> {
+        match defaults.get(key)? {
+            Value::Str(s) if s.is_empty() => None,
+            Value::Bool(_) => None,
+            Value::Str(s) => Some(s.clone()),
+            other => Some(other.to_json()),
+        }
+    };
+    let groups: [(&str, &str); 6] = [
+        ("common", "Common options"),
+        ("serve", "Serve options"),
+        ("fabric", "Multi-model serve (shared tier-2 lane fabric)"),
+        ("autoscale", "Autoscaling"),
+        ("admission", "Admission control (per tenant; 0 = unlimited)"),
+        ("epc", "EPC-aware co-scheduling of tier-1 pools"),
+    ];
+    for (group, title) in groups {
+        println!("\n{title}:");
+        for doc in Config::flag_docs() {
+            if doc.group != group || doc.flag.is_empty() {
+                continue;
+            }
+            let head = format!("{} {}", doc.flag, doc.value);
+            let default = render_default(doc.json_key)
+                .map(|d| format!(" [{d}]"))
+                .unwrap_or_default();
+            println!("  {head:<26} {}{default}", doc.help);
+        }
+        if group == "fabric" {
+            println!(
+                "  {:<26} spec suffix keys: {} (e.g. \
+                 sim16=origami/2*2:slo=20ms:rps=500,sim8=slalom)",
+                "",
+                origami::config::SPEC_SUFFIX_KEYS
+                    .map(|k| format!(":{k}="))
+                    .join(" ")
+            );
+        }
+    }
+}
+
+/// The startup banner's settings line: every config knob that differs
+/// from the defaults, straight from [`Config::non_default_settings`] —
+/// autoscale, admission and EPC knobs included, by construction.
+fn print_setting_overrides(config: &Config) {
+    let diffs = config.non_default_settings();
+    if diffs.is_empty() {
+        return;
+    }
+    let rendered: Vec<String> = diffs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    println!("settings: {}", rendered.join(" "));
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {
@@ -174,6 +187,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         config.max_delay_ms,
         config.pipeline,
     );
+    print_setting_overrides(&config);
     let handle: origami::coordinator::EngineHandle = if use_pool {
         origami::launcher::start_pool_from_config(config.clone())?.into()
     } else {
@@ -289,6 +303,7 @@ fn cmd_serve_multi(args: &Args, config: Config) -> Result<()> {
         },
         config.autoscale,
     );
+    print_setting_overrides(&config);
     // per-model configs + synthetic inputs (one pool of images each)
     let mut tenants = Vec::new();
     for spec in &specs {

@@ -25,6 +25,7 @@ pub mod split;
 use anyhow::Result;
 
 use crate::enclave::cost::Ledger;
+use crate::model::partition::PartitionPlan;
 pub use ctx::StrategyCtx;
 
 /// What tier-1 of a request produced.
@@ -110,7 +111,10 @@ pub trait Strategy {
     }
 }
 
-/// Instantiate a strategy by config name.
+/// Instantiate a strategy by config name.  [`partition_plan_for`] below
+/// is the same dispatch table mapped onto [`PartitionPlan`]s — the two
+/// matches live side by side so a new strategy cannot be added to one
+/// without the other.
 pub fn build(ctx: StrategyCtx, strategy: &str, partition: usize) -> Result<Box<dyn Strategy>> {
     let s = strategy.to_ascii_lowercase();
     if let Some(x) = s.strip_prefix("split/") {
@@ -124,6 +128,34 @@ pub fn build(ctx: StrategyCtx, strategy: &str, partition: usize) -> Result<Box<d
         "slalom" => Box::new(slalom::Slalom::new(ctx)),
         "origami" => Box::new(origami::Origami::new(ctx, partition)),
         "open" | "none" => Box::new(open::OpenInference::new(ctx)),
+        other => anyhow::bail!(
+            "unknown strategy `{other}` (baseline2|split/N|slalom|origami[/N]|open)"
+        ),
+    })
+}
+
+/// The partition plan a strategy name describes — what the memory
+/// analytics ([`memory::enclave_requirement`]) and the EPC ledger's
+/// per-worker footprint estimate evaluate.  `open` runs no enclave →
+/// `None`.  Mirrors [`build`]'s dispatch exactly (kept adjacent so the
+/// tables cannot drift; pinned by a test).
+pub fn partition_plan_for(
+    model: &crate::model::Model,
+    strategy: &str,
+    partition: usize,
+) -> Result<Option<PartitionPlan>> {
+    let s = strategy.to_ascii_lowercase();
+    if let Some(x) = s.strip_prefix("split/") {
+        return Ok(Some(PartitionPlan::split(model, x.parse()?)));
+    }
+    if let Some(p) = s.strip_prefix("origami/") {
+        return Ok(Some(PartitionPlan::origami(model, p.parse()?)));
+    }
+    Ok(match s.as_str() {
+        "baseline2" | "baseline" => Some(PartitionPlan::baseline(model)),
+        "slalom" => Some(PartitionPlan::slalom(model)),
+        "origami" => Some(PartitionPlan::origami(model, partition)),
+        "open" | "none" => None,
         other => anyhow::bail!(
             "unknown strategy `{other}` (baseline2|split/N|slalom|origami[/N]|open)"
         ),

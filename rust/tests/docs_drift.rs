@@ -1,0 +1,96 @@
+//! Documentation drift gates: docs/CONFIG.md must cover every config
+//! field and flag the parser accepts, docs/ARCHITECTURE.md and the
+//! README must stay wired together.  Pure text assertions — they run
+//! in the ordinary test leg, so a new knob cannot ship undocumented.
+
+use origami::config::{Config, SPEC_SUFFIX_KEYS};
+use origami::util::json::Value;
+
+fn repo_file(rel: &str) -> String {
+    let path = format!("{}/../{rel}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+#[test]
+fn config_md_documents_every_field_flag_and_spec_suffix() {
+    let doc = repo_file("docs/CONFIG.md");
+
+    // every serialized Config field appears as a `key` in the doc
+    let Value::Obj(fields) = Config::default().to_json() else {
+        panic!("config serializes to an object");
+    };
+    for (key, _) in &fields {
+        assert!(
+            doc.contains(&format!("`{key}`")),
+            "docs/CONFIG.md is missing config field `{key}`"
+        );
+    }
+
+    // every CLI flag in the generated help table appears — at a word
+    // boundary, so `--lanes` is not satisfied by `--min-lanes` and
+    // `--autoscale` is not satisfied by `--autoscale-policy`
+    let has_flag = |flag: &str| {
+        doc.match_indices(flag).any(|(i, _)| {
+            doc[i + flag.len()..]
+                .chars()
+                .next()
+                .map(|c| !(c.is_ascii_alphanumeric() || c == '-'))
+                .unwrap_or(true)
+        })
+    };
+    for flag_doc in Config::flag_docs() {
+        if !flag_doc.flag.is_empty() {
+            assert!(
+                has_flag(flag_doc.flag),
+                "docs/CONFIG.md is missing flag `{}`",
+                flag_doc.flag
+            );
+        }
+    }
+
+    // every ModelSpec suffix key appears in its `:key=` form
+    for key in SPEC_SUFFIX_KEYS {
+        assert!(
+            doc.contains(&format!(":{key}=")),
+            "docs/CONFIG.md is missing ModelSpec suffix `:{key}=`"
+        );
+    }
+}
+
+#[test]
+fn architecture_md_maps_every_coordinator_module() {
+    let doc = repo_file("docs/ARCHITECTURE.md");
+    let dir = format!("{}/src/coordinator", env!("CARGO_MANIFEST_DIR"));
+    for entry in std::fs::read_dir(&dir).expect("coordinator dir") {
+        let name = entry.unwrap().file_name().into_string().unwrap();
+        if name == "mod.rs" || !name.ends_with(".rs") {
+            continue;
+        }
+        assert!(
+            doc.contains(&name),
+            "docs/ARCHITECTURE.md module map is missing `{name}`"
+        );
+    }
+    for anchor in ["EPC ledger", "request lifecycle", "blinding boundary"] {
+        assert!(
+            doc.to_lowercase().contains(&anchor.to_lowercase()),
+            "docs/ARCHITECTURE.md lost its `{anchor}` section"
+        );
+    }
+}
+
+#[test]
+fn readme_links_docs_and_renders_every_figure() {
+    let readme = repo_file("README.md");
+    for link in ["docs/ARCHITECTURE.md", "docs/CONFIG.md"] {
+        assert!(readme.contains(link), "README is missing a link to {link}");
+    }
+    // the Results section covers every serving figure
+    assert!(readme.contains("## Results"), "README lost its Results section");
+    for fig in ["fig14", "fig15", "fig16", "fig17", "fig18"] {
+        assert!(
+            readme.contains(fig),
+            "README Results must interpret {fig}"
+        );
+    }
+}

@@ -1,0 +1,352 @@
+//! EPC-aware co-scheduling acceptance: the residency ledger, the
+//! packer's reclaim, typed grow denials and leak-free release, end to
+//! end on a live [`Deployment`].
+//!
+//! Strategy doubles with an explicit gate pin queue states
+//! deterministically (a blocked worker makes backlog growth monotone),
+//! so grow/deny/reclaim decisions are exercised without wall-clock
+//! races; the footprint tests pin the `sim224` memory analytics the
+//! launcher charges the ledger with.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use origami::config::Config;
+use origami::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
+use origami::coordinator::{
+    AdmissionError, AdmissionLimits, AutoscalePolicy, Deployment, EpcOptions, FabricOptions,
+    PoolOptions, ShedPolicy,
+};
+use origami::enclave::cost::{Cat, CostModel, Ledger};
+use origami::launcher::worker_epc_bytes_from_config;
+use origami::model::partition::PartitionPlan;
+use origami::runtime::{Device, ReferenceBackend, StageExecutor};
+use origami::strategies::memory::enclave_requirement;
+use origami::strategies::Strategy;
+
+/// Deterministic strategy double: while the gate is closed, `infer`
+/// blocks, so backlog behind it only grows.
+struct Gate {
+    open: Arc<AtomicBool>,
+}
+
+impl Strategy for Gate {
+    fn name(&self) -> String {
+        "gate".into()
+    }
+
+    fn setup(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn infer(
+        &mut self,
+        _ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        while !self.open.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        ledger.add_measured(Cat::DeviceCompute, 100_000);
+        Ok((0..batch)
+            .map(|i| sessions.get(i).copied().unwrap_or(0) as f32)
+            .collect())
+    }
+
+    fn enclave_requirement_bytes(&self) -> u64 {
+        0
+    }
+}
+
+fn gate_sched(
+    open: Arc<AtomicBool>,
+) -> impl Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static {
+    move |_band, _domain| {
+        Ok(BatchScheduler::new(
+            Box::new(Gate { open: open.clone() }),
+            8,
+            vec![1],
+        ))
+    }
+}
+
+fn ref_finisher() -> impl Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static {
+    |_lane| {
+        let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 1)?);
+        Ok(Tier2Finisher::new(
+            Arc::new(StageExecutor::reference(rb, CostModel::default())),
+            "sim8",
+            Device::UntrustedCpu,
+        ))
+    }
+}
+
+/// One shard, batch-1, no pipelining, with an explicit EPC footprint.
+fn epc_pool(workers: usize, max_workers: usize, worker_epc_bytes: u64) -> PoolOptions {
+    PoolOptions {
+        workers,
+        min_workers: 1,
+        max_workers,
+        max_batch: 1,
+        max_delay_ms: 0.0,
+        pipeline: false,
+        worker_epc_bytes,
+        ..PoolOptions::default()
+    }
+}
+
+fn epc_deployment(usable: u64) -> Deployment {
+    Deployment::new_with_epc(
+        FabricOptions::default(),
+        AutoscalePolicy {
+            high_depth_per_worker: 1,
+            low_depth_per_worker: 0,
+            cooldown_ticks: 0,
+            ..AutoscalePolicy::default()
+        },
+        Some(EpcOptions {
+            usable_bytes: usable,
+            overcommit: 1.0,
+        }),
+    )
+}
+
+#[test]
+fn deploy_fails_up_front_when_the_initial_fleet_cannot_fit() {
+    let dep = epc_deployment(100);
+    dep.deploy_with_admission(
+        "a",
+        8,
+        1.0,
+        None,
+        AdmissionLimits::default(),
+        ShedPolicy::Reject,
+        epc_pool(1, 1, 60),
+        gate_sched(Arc::new(AtomicBool::new(true))),
+        ref_finisher(),
+    )
+    .unwrap();
+    let ledger = dep.epc_ledger().unwrap();
+    assert_eq!(ledger.charged_bytes(), 60);
+
+    // a second 60 B tenant cannot fit its initial worker: the deploy
+    // fails with the EPC reason and leaves no residue — no fabric
+    // tenant, no charge, and the first tenant keeps serving
+    let err = dep
+        .deploy_with_admission(
+            "b",
+            8,
+            1.0,
+            None,
+            AdmissionLimits::default(),
+            ShedPolicy::Reject,
+            epc_pool(1, 1, 60),
+            gate_sched(Arc::new(AtomicBool::new(true))),
+            ref_finisher(),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("overcommit usable EPC"), "{err}");
+    assert_eq!(ledger.charged_bytes(), 60, "failed deploy left a charge");
+    assert_eq!(dep.models(), vec!["a".to_string()]);
+
+    let reply = dep.submit("a", vec![0u8; 8], 7).expect("tenant a serves");
+    assert_eq!(reply.recv().unwrap().probs[0], 7.0);
+    dep.shutdown();
+    assert_eq!(ledger.charged_bytes(), 0, "shutdown released the fleet");
+}
+
+#[test]
+fn overcommitting_grows_are_denied_and_surfaced_in_shed_hints() {
+    // 100 B budget, 40 B/worker, ceiling 4: worker 2 fits (80 B), the
+    // third (120 B) must be denied — and a shed after that denial tells
+    // the client the tenant is EPC-limited.
+    let open = Arc::new(AtomicBool::new(false));
+    let dep = epc_deployment(100);
+    dep.deploy_with_admission(
+        "hot",
+        8,
+        1.0,
+        None,
+        AdmissionLimits {
+            shed_depth: 6,
+            ..AdmissionLimits::default()
+        },
+        ShedPolicy::Reject,
+        epc_pool(1, 4, 40),
+        gate_sched(open.clone()),
+        ref_finisher(),
+    )
+    .unwrap();
+    let ledger = dep.epc_ledger().unwrap();
+    assert_eq!(ledger.charged_bytes(), 40);
+
+    // gate closed: 6 submits build a monotone backlog
+    let mut replies = Vec::new();
+    for s in 0..6u64 {
+        replies.push(dep.submit("hot", vec![0u8; 8], s).expect("admitted"));
+    }
+    // tick 1: depth > 1×1 → grow to 2 (charged).  tick 2+: grow to 3
+    // needs 40 B with only 20 B free and nobody to reclaim from →
+    // denied, recorded, pool unchanged.
+    for _ in 0..3 {
+        dep.autoscale_tick();
+    }
+    assert_eq!(dep.active_workers("hot"), 2, "EPC caps the pool at 2");
+    assert_eq!(ledger.charged_bytes(), 80);
+    let snap = dep.scale_snapshot("hot").unwrap();
+    assert!(snap.epc_denied >= 1, "denials must be recorded: {snap:?}");
+    assert!(snap.epc_limited, "the tenant is EPC-limited right now");
+
+    // a shed while EPC-limited says so — the client can tell "scale-out
+    // is coming" apart from "the box is full"
+    let mut shed = None;
+    for s in 100..110u64 {
+        match dep.submit("hot", vec![0u8; 8], s) {
+            Ok(r) => replies.push(r),
+            Err(e @ AdmissionError::Shed { .. }) => {
+                shed = Some(e);
+                break;
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    let shed = shed.expect("backlog past the threshold must shed");
+    match &shed {
+        AdmissionError::Shed { epc_limited, .. } => assert!(epc_limited),
+        other => panic!("expected Shed, got {other:?}"),
+    }
+    assert!(
+        shed.to_string().contains("EPC-limited"),
+        "shed hint must mention EPC exhaustion: {shed}"
+    );
+
+    // drain and shut down: every admitted request completes, and the
+    // ledger releases every worker (the leak regression)
+    open.store(true, Ordering::SeqCst);
+    for r in replies {
+        let resp = r.recv().expect("reply");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    let metrics = dep.shutdown();
+    assert_eq!(ledger.charged_bytes(), 0, "retire/shutdown leaked a charge");
+    assert!(metrics.models["hot"].grow_events >= 1);
+}
+
+#[test]
+fn packer_reclaims_idle_workers_to_fund_a_hot_grow() {
+    // 100 B budget.  `b-idle` parks 2×30 B with no traffic; `a-hot`
+    // (30 B, backlogged) wants a second worker: 30 B needed, 10 B free
+    // → the packer reclaims one idle worker, then the grow charges.
+    // (Tenant names are chosen so the deterministic sorted tick order
+    // evaluates the hot pool first — the reclaim path, not the idle
+    // pool's own shrink, must fund the grow.)
+    let hot_gate = Arc::new(AtomicBool::new(false));
+    let dep = epc_deployment(100);
+    dep.deploy_with_admission(
+        "a-hot",
+        8,
+        1.0,
+        None,
+        AdmissionLimits::default(),
+        ShedPolicy::Reject,
+        epc_pool(1, 2, 30),
+        gate_sched(hot_gate.clone()),
+        ref_finisher(),
+    )
+    .unwrap();
+    dep.deploy_with_admission(
+        "b-idle",
+        8,
+        2.0,
+        None,
+        AdmissionLimits::default(),
+        ShedPolicy::Reject,
+        epc_pool(2, 2, 30),
+        gate_sched(Arc::new(AtomicBool::new(true))),
+        ref_finisher(),
+    )
+    .unwrap();
+    let ledger = dep.epc_ledger().unwrap();
+    assert_eq!(ledger.charged_bytes(), 90);
+
+    let mut replies = Vec::new();
+    for s in 0..6u64 {
+        replies.push(dep.submit("a-hot", vec![0u8; 8], s).expect("admitted"));
+    }
+    dep.autoscale_tick();
+
+    assert_eq!(dep.active_workers("a-hot"), 2, "grow funded by reclaim");
+    assert_eq!(dep.active_workers("b-idle"), 1, "one idle worker donated");
+    assert_eq!(ledger.charged_bytes(), 90, "2×30 hot + 1×30 idle");
+    let idle_snap = dep.scale_snapshot("b-idle").unwrap();
+    assert_eq!(idle_snap.epc_reclaimed, 1);
+    let hot_snap = dep.scale_snapshot("a-hot").unwrap();
+    assert_eq!(hot_snap.epc_denied, 0, "the grow was funded, not denied");
+    assert!(!hot_snap.epc_limited);
+
+    hot_gate.store(true, Ordering::SeqCst);
+    for r in replies {
+        assert!(r.recv().expect("reply").error.is_none());
+    }
+    dep.shutdown();
+    assert_eq!(ledger.charged_bytes(), 0, "no charge survives shutdown");
+}
+
+#[test]
+fn usable_epc_math_and_sim224_footprint_are_pinned() {
+    // usable EPC: the paper's ~93 of 128 MB, same ratio at every scale
+    let paper = Config::paper_scale();
+    assert_eq!(paper.epc_bytes, 128 * 1024 * 1024);
+    assert_eq!(
+        paper.usable_epc_bytes(),
+        (paper.epc_bytes as f64 * 0.727) as u64
+    );
+    let usable_mb = paper.usable_epc_bytes() as f64 / (1024.0 * 1024.0);
+    assert!((92.0..94.0).contains(&usable_mb), "{usable_mb}");
+
+    // the launcher's per-worker footprint is exactly the Table-I
+    // analytics on the real sim224 geometry (origami/6, batch 4)
+    let cfg = Config {
+        model: "sim224".into(),
+        strategy: "origami/6".into(),
+        max_batch: 4,
+        ..Config::paper_scale()
+    };
+    let footprint = worker_epc_bytes_from_config(&cfg).unwrap();
+    let (_, model) = origami::launcher::executor_for(&cfg).unwrap();
+    let plan = PartitionPlan::origami(&model, 6);
+    let req = enclave_requirement(&model, &plan, cfg.lazy_dense_bytes, 4);
+    assert_eq!(footprint, req.total());
+    // base 15 MB + ~6.1 MB blinding + ~6.1 MB features (+ biases)
+    let mb = footprint as f64 / (1024.0 * 1024.0);
+    assert!((26.0..30.0).contains(&mb), "sim224 footprint {mb} MB");
+    // exactly three sim224 workers pack into paper-scale usable EPC —
+    // the geometry Fig 18's packing claim rests on
+    assert_eq!(paper.usable_epc_bytes() / footprint, 3);
+
+    // no enclave, no charge
+    let open = Config {
+        strategy: "open".into(),
+        ..cfg.clone()
+    };
+    assert_eq!(worker_epc_bytes_from_config(&open).unwrap(), 0);
+    // unknown strategies fail loudly rather than charging nothing
+    let bad = Config {
+        strategy: "quantum".into(),
+        ..cfg
+    };
+    assert!(worker_epc_bytes_from_config(&bad).is_err());
+
+    // the plan dispatch accepts exactly the names strategies::build
+    // accepts (the two tables live side by side; this pins the sync)
+    for s in ["baseline2", "split/6", "slalom", "origami/6", "origami", "open"] {
+        assert!(
+            origami::strategies::partition_plan_for(&model, s, 6).is_ok(),
+            "servable strategy `{s}` must have a partition plan"
+        );
+    }
+}

@@ -214,6 +214,7 @@ fn base_signals() -> ScaleSignals {
         window_samples: 0,
         slo_ms: None,
         ticks_since_scale: None,
+        epc_headroom_workers: None,
     }
 }
 
