@@ -6,7 +6,7 @@
 # only needed for the artifact-gated integration tests/benches; the
 # hermetic `sim*` reference-backend paths run everywhere.
 
-.PHONY: ci build test test-sim clippy fmt-check doc bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission bench-smoke-epc pool-demo fabric-demo clean
+.PHONY: ci build test test-sim clippy fmt-check doc bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission bench-smoke-epc bench-smoke-blinding pool-demo fabric-demo clean
 
 ## The CI gate: release build, full test suite, clippy as errors, rustfmt,
 ## and warning-free rustdoc.
@@ -61,6 +61,12 @@ bench-smoke-admission:
 ## zero paging-storm ticks, at bit-identical outputs).
 bench-smoke-epc:
 	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig18_epc_packing
+
+## Fast smoke of the blinding-pipeline bench (asserts zero
+## factor_pool_miss on a warm pool, blocked kernels bit-identical to
+## naive, and ≥1.3x tier-1 p95 gain over inline blinding).
+bench-smoke-blinding:
+	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig19_blinding_pipeline
 
 ## The worker-pool demo: 4 pipelined workers vs the serial path.
 pool-demo:

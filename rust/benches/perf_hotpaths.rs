@@ -12,6 +12,9 @@ use origami::blinding::blind::{blind_into, fill_factors, unblind_into};
 use origami::enclave::cost::{CostModel, Ledger};
 use origami::enclave::epc::{Epc, PAGE_SIZE};
 use origami::harness::Bench;
+use origami::runtime::reference::{
+    conv2d_f32, conv2d_f32_naive, dense_f32, dense_f32_naive,
+};
 use origami::util::rng::{ChaCha20, Rng};
 
 fn main() {
@@ -79,6 +82,58 @@ fn main() {
         / (row.mean_ms / 1e3)
         / 1024.0;
     row.extra.push(("GBps".into(), rate));
+
+    // Reference-kernel throughput: naive quadruple loops vs the
+    // blocked/parallel kernels (bit-identical by construction; pinned
+    // by the reference backend's unit tests).  Sized above the parallel
+    // threshold so the blocked path fans out.
+    let (kn, kh, kw, cin, cout) = (2, 32, 32, 8, 16);
+    let wq: Vec<i32> = (0..9 * cin * cout)
+        .map(|i| ((i * 37) % 511) as i32 - 255)
+        .collect();
+    let cx: Vec<f32> = (0..kn * kh * kw * cin)
+        .map(|i| ((i * 13) % 97) as f32 / 97.0 - 0.5)
+        .collect();
+    let conv_madds = (kn * kh * kw * cout * 9 * cin) as f64;
+    for (name, blocked) in [("conv2d naive", false), ("conv2d blocked", true)] {
+        let mut samples = Vec::new();
+        for _ in 0..reps {
+            let t = std::time::Instant::now();
+            if blocked {
+                std::hint::black_box(conv2d_f32(&cx, kn, kh, kw, cin, cout, &wq));
+            } else {
+                std::hint::black_box(conv2d_f32_naive(&cx, kn, kh, kw, cin, cout, &wq));
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let row = bench.push_samples(name, &samples);
+        let gmadds = conv_madds / (row.mean_ms / 1e3) / 1e9;
+        row.extra.push(("Gmadds".into(), gmadds));
+    }
+
+    let (d_in, d_out) = (16_384, 64);
+    let dw: Vec<i32> = (0..d_in * d_out)
+        .map(|i| ((i * 23) % 511) as i32 - 255)
+        .collect();
+    let dx: Vec<f32> = (0..kn * d_in)
+        .map(|i| ((i * 29) % 83) as f32 / 83.0 - 0.5)
+        .collect();
+    let dense_madds = (kn * d_in * d_out) as f64;
+    for (name, blocked) in [("dense naive", false), ("dense blocked", true)] {
+        let mut samples = Vec::new();
+        for _ in 0..reps {
+            let t = std::time::Instant::now();
+            if blocked {
+                std::hint::black_box(dense_f32(&dx, kn, d_in, d_out, &dw));
+            } else {
+                std::hint::black_box(dense_f32_naive(&dx, kn, d_in, d_out, &dw));
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let row = bench.push_samples(name, &samples);
+        let gmadds = dense_madds / (row.mean_ms / 1e3) / 1e9;
+        row.extra.push(("Gmadds".into(), gmadds));
+    }
 
     bench.finish();
     println!(

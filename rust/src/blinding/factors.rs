@@ -20,7 +20,10 @@ use super::blind::fill_factors;
 use crate::enclave::sealing::SealedStore;
 use crate::util::rng::ChaCha20;
 
-/// Counter-addressable blinding-factor generator.
+/// Counter-addressable blinding-factor generator.  Cloneable so the
+/// prefill service can regenerate the same streams on worker threads —
+/// output depends only on (key, layer, epoch), never on call order.
+#[derive(Clone)]
 pub struct FactorStream {
     key: [u8; 32],
 }

@@ -13,11 +13,15 @@
 //! - [`blind`]   — the hot loops: fused quantize+blind / unblind+dequant.
 //! - [`factors`] — blinding-factor streams (counter-addressable ChaCha20)
 //!                 and the sealed precomputed-unblinding-factor store.
+//! - [`pool`]    — the blinding-factor precompute service: background
+//!                 workers stage (pad, unsealed-R) pairs ahead of demand.
 
 pub mod blind;
 pub mod factors;
+pub mod pool;
 pub mod quant;
 
 pub use blind::{blind_into, quantize_blind, unblind_dequantize};
 pub use factors::{FactorStream, UnblindStore};
+pub use pool::{FactorEntry, FactorPool, FactorPoolStats, PrefillShape};
 pub use quant::{MOD_P, SCALE_W, SCALE_X, SCALE_XW};

@@ -1,0 +1,440 @@
+//! Blinding-factor precompute service: background workers stage both the
+//! blinding pads `r` (regenerated from the enclave-keyed
+//! [`FactorStream`]) and the matching *unsealed* unblinding factors
+//! `R = W_q·r` (fetched out of the sealed [`UnblindStore`]) ahead of
+//! demand, so the tier-1 hot path becomes a pure fetch+add/mask pass.
+//!
+//! The paper assumes blinding factors are "precomputed offline" (§VI-C);
+//! until this service existed the hot path still paid a ChaCha20
+//! keystream generation plus an AES unseal per linear layer per request.
+//! Staging is *bit-identical* to inline generation by construction: the
+//! factor stream is deterministic per (layer, epoch, n), and the store
+//! unseals the same sealed blob either way — so a cold pool can always
+//! fall back inline without changing a single output bit (pinned by the
+//! tests below and `benches/fig19_blinding_pipeline.rs`).
+//!
+//! Mechanics:
+//! - The pool stages `depth` epochs (clamped to the store's
+//!   `pool_epochs`) per *shape* — a (layer, pad-length, R-length) triple.
+//!   Shapes are seeded at construction (batch 1 of every tier-1 linear
+//!   layer) and batched shapes join the staging set on first use, so
+//!   memory follows actual demand instead of the full batch cross
+//!   product.
+//! - [`FactorPool::take`] consumes a staged entry (a pad is used once);
+//!   the prefill workers regenerate consumed slots in registration order,
+//!   layers first, epochs ascending.  A miss falls back to inline
+//!   generation and increments the `misses` counter — the
+//!   `factor_pool_miss` telemetry event.
+//! - A shape whose unblinding factors were never precomputed (e.g. a
+//!   batched stage the model does not export) is marked dead after one
+//!   attempt and never retried, so workers cannot spin on it.
+//! - Staged bytes are charged against the EPC ledger by the launcher
+//!   (see `launcher::worker_epc_bytes_for`), so pool depth trades
+//!   transparently against tier-1 worker count.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::factors::{FactorStream, UnblindStore};
+
+/// One (layer, batch-shape) the pool stages factors for.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefillShape {
+    /// Model layer index.
+    pub layer: usize,
+    /// Blinding-pad length (`batch * in_elems`).
+    pub n_in: usize,
+    /// Unblinding-factor length (`batch * out_elems`).
+    pub n_out: usize,
+}
+
+/// One staged entry: the pad and the matching unsealed unblinding factors.
+pub struct FactorEntry {
+    /// Blinding pad `r` for the layer input (mod-2^24 residues).
+    pub r: Vec<u32>,
+    /// Unsealed `R = W_q·r mod 2^24` for the layer output (f32-exact).
+    pub ru: Vec<f32>,
+}
+
+/// Monotone pool counters plus a staging snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FactorPoolStats {
+    /// Requests served from staged factors.
+    pub hits: u64,
+    /// Requests that fell back to inline generation (`factor_pool_miss`).
+    pub misses: u64,
+    /// Entries the prefill workers have staged (cumulative).
+    pub prefilled: u64,
+    /// Entries currently staged.
+    pub staged: u64,
+    /// Entries the pool would hold fully warm (live shapes × depth).
+    pub capacity: u64,
+}
+
+type SlotKey = (usize, u64, usize); // (layer, epoch, n_in)
+
+struct PoolState {
+    /// Staged entries, keyed (layer, epoch, pad length).
+    slots: HashMap<SlotKey, FactorEntry>,
+    /// Slots a worker is generating right now (claim marker).
+    filling: HashSet<SlotKey>,
+    /// Shapes to keep staged (seeded + demand-registered).
+    shapes: Vec<PrefillShape>,
+    /// Shapes whose R was never precomputed — never retried.
+    dead: HashSet<(usize, usize)>, // (layer, n_in)
+}
+
+struct PoolInner {
+    stream: FactorStream,
+    unblind: Arc<UnblindStore>,
+    /// Epochs staged per shape (≤ the store's `pool_epochs`).
+    depth: u64,
+    state: Mutex<PoolState>,
+    /// Signaled when a slot is consumed or a shape registers.
+    work: Condvar,
+    closed: AtomicBool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    prefilled: AtomicU64,
+}
+
+/// The precompute service handle; dropping it stops the workers.
+pub struct FactorPool {
+    inner: Arc<PoolInner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl FactorPool {
+    /// Start the service: stage `depth` epochs (clamped to the store's
+    /// pool) for each seeded shape on `workers` background threads.
+    /// With `workers == 0` nothing fills in the background — callers
+    /// drive staging synchronously via [`FactorPool::prefill_now`]
+    /// (deterministic tests) or every take misses.
+    pub fn start(
+        stream: FactorStream,
+        unblind: Arc<UnblindStore>,
+        shapes: Vec<PrefillShape>,
+        depth: u64,
+        workers: usize,
+    ) -> Self {
+        let depth = depth.min(unblind.pool_epochs).max(1);
+        let inner = Arc::new(PoolInner {
+            stream,
+            unblind,
+            depth,
+            state: Mutex::new(PoolState {
+                slots: HashMap::new(),
+                filling: HashSet::new(),
+                shapes,
+                dead: HashSet::new(),
+            }),
+            work: Condvar::new(),
+            closed: AtomicBool::new(false),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            prefilled: AtomicU64::new(0),
+        });
+        let workers = (0..workers)
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("origami-prefill-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn prefill worker")
+            })
+            .collect();
+        Self { inner, workers }
+    }
+
+    /// Consume the staged entry for (layer, epoch, shape), or register
+    /// the shape for staging and report a miss (caller generates inline
+    /// — bit-identical, the stream is deterministic per (layer, epoch)).
+    pub fn take(&self, layer: usize, epoch: u64, n_in: usize, n_out: usize) -> Option<FactorEntry> {
+        let hit = {
+            let mut st = self.inner.state.lock().unwrap();
+            let hit = st.slots.remove(&(layer, epoch, n_in));
+            if !st.shapes.iter().any(|s| s.layer == layer && s.n_in == n_in) {
+                st.shapes.push(PrefillShape { layer, n_in, n_out });
+            }
+            hit
+        };
+        self.inner.work.notify_all();
+        match hit {
+            Some(entry) => {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry)
+            }
+            None => {
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Fill every stageable slot synchronously on the calling thread
+    /// (warm start; also how `workers == 0` pools are driven in tests).
+    pub fn prefill_now(&self) {
+        while let Some((shape, epoch)) = claim(&self.inner) {
+            fill_slot(&self.inner, shape, epoch);
+        }
+    }
+
+    /// Whether every stageable slot is currently staged.
+    pub fn warm(&self) -> bool {
+        let st = self.inner.state.lock().unwrap();
+        let live = st
+            .shapes
+            .iter()
+            .filter(|s| !st.dead.contains(&(s.layer, s.n_in)))
+            .count() as u64;
+        st.filling.is_empty() && st.slots.len() as u64 >= live * self.inner.depth
+    }
+
+    /// Block until the pool is warm or the timeout passes.
+    pub fn wait_warm(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if self.warm() {
+                return true;
+            }
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Counters + staging snapshot.
+    pub fn stats(&self) -> FactorPoolStats {
+        let st = self.inner.state.lock().unwrap();
+        let live = st
+            .shapes
+            .iter()
+            .filter(|s| !st.dead.contains(&(s.layer, s.n_in)))
+            .count() as u64;
+        FactorPoolStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            prefilled: self.inner.prefilled.load(Ordering::Relaxed),
+            staged: st.slots.len() as u64,
+            capacity: live * self.inner.depth,
+        }
+    }
+
+    /// Epochs staged per shape.
+    pub fn depth(&self) -> u64 {
+        self.inner.depth
+    }
+}
+
+impl Drop for FactorPool {
+    fn drop(&mut self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        self.inner.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Bytes one staged epoch of a shape occupies (u32 pad + f32 R).
+pub fn shape_bytes(n_in: usize, n_out: usize) -> u64 {
+    (n_in as u64 + n_out as u64) * 4
+}
+
+/// Pick the next missing slot and mark it claimed: shapes in
+/// registration order, epochs ascending — the refill ordering the
+/// regression tests pin.
+fn claim(inner: &PoolInner) -> Option<(PrefillShape, u64)> {
+    let mut st = inner.state.lock().unwrap();
+    if inner.closed.load(Ordering::SeqCst) {
+        return None;
+    }
+    let mut found: Option<(PrefillShape, u64)> = None;
+    'outer: for shape in &st.shapes {
+        if st.dead.contains(&(shape.layer, shape.n_in)) {
+            continue;
+        }
+        for epoch in 0..inner.depth {
+            let key = (shape.layer, epoch, shape.n_in);
+            if !st.slots.contains_key(&key) && !st.filling.contains(&key) {
+                found = Some((shape.clone(), epoch));
+                break 'outer;
+            }
+        }
+    }
+    let (shape, epoch) = found?;
+    st.filling.insert((shape.layer, epoch, shape.n_in));
+    Some((shape, epoch))
+}
+
+/// Generate one slot outside the lock and publish it (or mark the shape
+/// dead when its unblinding factors were never precomputed).
+fn fill_slot(inner: &PoolInner, shape: PrefillShape, epoch: u64) {
+    let r = inner.stream.factors(shape.layer, epoch, shape.n_in);
+    let ru = inner.unblind.fetch(shape.layer, epoch, shape.n_out);
+    let key = (shape.layer, epoch, shape.n_in);
+    let mut st = inner.state.lock().unwrap();
+    st.filling.remove(&key);
+    match ru {
+        Ok(ru) => {
+            st.slots.insert(key, FactorEntry { r, ru });
+            inner.prefilled.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(_) => {
+            st.dead.insert((shape.layer, shape.n_in));
+        }
+    }
+}
+
+fn worker_loop(inner: &Arc<PoolInner>) {
+    loop {
+        if inner.closed.load(Ordering::SeqCst) {
+            return;
+        }
+        match claim(inner) {
+            Some((shape, epoch)) => fill_slot(inner, shape, epoch),
+            None => {
+                // Nothing stageable: sleep until a take consumes a slot
+                // or registers a shape (or the pool shuts down).
+                let st = inner.state.lock().unwrap();
+                if inner.closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                let _unused = inner
+                    .work
+                    .wait_timeout(st, std::time::Duration::from_millis(50))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream() -> FactorStream {
+        FactorStream::new([9u8; 32])
+    }
+
+    /// A store with R precomputed for `layer` at every epoch < pool.
+    fn store(layer: usize, n_out: usize, pool_epochs: u64) -> Arc<UnblindStore> {
+        let mut s = UnblindStore::new(b"master", [1u8; 32], pool_epochs, true);
+        for e in 0..pool_epochs {
+            let ru: Vec<f32> = (0..n_out).map(|i| (e * 100 + i as u64) as f32).collect();
+            s.put(layer, e, &ru).unwrap();
+        }
+        Arc::new(s)
+    }
+
+    fn shape(layer: usize) -> PrefillShape {
+        PrefillShape {
+            layer,
+            n_in: 16,
+            n_out: 8,
+        }
+    }
+
+    #[test]
+    fn staged_entries_are_bit_identical_to_inline_generation() {
+        let st = store(1, 8, 4);
+        let pool = FactorPool::start(stream(), st.clone(), vec![shape(1)], 4, 0);
+        pool.prefill_now();
+        assert!(pool.warm());
+        for epoch in 0..4u64 {
+            let e = pool.take(1, epoch, 16, 8).expect("staged");
+            assert_eq!(e.r, stream().factors(1, epoch, 16), "pad bit-identical");
+            assert_eq!(e.ru, st.fetch(1, epoch, 8).unwrap(), "R bit-identical");
+        }
+        let s = pool.stats();
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.misses, 0);
+        assert_eq!(s.prefilled, 4);
+    }
+
+    #[test]
+    fn drained_pool_misses_then_refills_in_order() {
+        let st = store(1, 8, 4);
+        // workers == 0: nothing refills until prefill_now — deterministic
+        let pool = FactorPool::start(stream(), st, vec![shape(1)], 2, 0);
+        pool.prefill_now();
+        let first = pool.take(1, 0, 16, 8).expect("staged");
+        // drained mid-request: the same slot misses until refilled, and
+        // the caller's inline fallback is bit-identical to the hit
+        assert!(pool.take(1, 0, 16, 8).is_none(), "slot consumed");
+        assert_eq!(first.r, stream().factors(1, 0, 16), "inline fallback == hit");
+        let s = pool.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        // refill restores the identical bytes (deterministic stream)
+        pool.prefill_now();
+        let again = pool.take(1, 0, 16, 8).expect("refilled");
+        assert_eq!(again.r, first.r);
+        assert_eq!(again.ru, first.ru);
+    }
+
+    #[test]
+    fn unknown_shapes_register_on_demand() {
+        let st = store(2, 8, 4);
+        let pool = FactorPool::start(stream(), st, Vec::new(), 4, 0);
+        assert_eq!(pool.stats().capacity, 0);
+        assert!(pool.take(2, 0, 16, 8).is_none(), "cold shape misses");
+        assert_eq!(pool.stats().capacity, 4, "miss registered the shape");
+        pool.prefill_now();
+        assert!(pool.take(2, 0, 16, 8).is_some(), "staged after registration");
+    }
+
+    #[test]
+    fn missing_unblind_factors_mark_shape_dead() {
+        // store holds R for layer 1 only; layer 3 can never stage
+        let st = store(1, 8, 4);
+        let pool = FactorPool::start(
+            stream(),
+            st,
+            vec![shape(1), shape(3)],
+            4,
+            0,
+        );
+        pool.prefill_now(); // must terminate despite the dead shape
+        let s = pool.stats();
+        assert_eq!(s.staged, 4, "live shape fully staged");
+        assert_eq!(s.capacity, 4, "dead shape excluded from capacity");
+        assert!(pool.take(3, 0, 16, 8).is_none());
+        assert!(pool.warm());
+    }
+
+    #[test]
+    fn background_workers_keep_the_pool_warm() {
+        let st = store(1, 8, 4);
+        let pool = FactorPool::start(stream(), st, vec![shape(1)], 4, 2);
+        assert!(
+            pool.wait_warm(std::time::Duration::from_secs(10)),
+            "prefill workers fill the seeded shapes"
+        );
+        let e = pool.take(1, 0, 16, 8).expect("warm pool hits");
+        assert_eq!(e.r, stream().factors(1, 0, 16));
+        // the consumed slot refills in the background with identical bytes
+        assert!(pool.wait_warm(std::time::Duration::from_secs(10)));
+        let again = pool.take(1, 0, 16, 8).expect("refilled");
+        assert_eq!(again.r, e.r);
+        assert_eq!(again.ru, e.ru);
+        assert_eq!(pool.stats().misses, 0);
+    }
+
+    #[test]
+    fn depth_clamps_to_the_store_pool() {
+        let st = store(1, 8, 2);
+        let pool = FactorPool::start(stream(), st, vec![shape(1)], 64, 0);
+        assert_eq!(pool.depth(), 2);
+        pool.prefill_now();
+        assert_eq!(pool.stats().staged, 2);
+    }
+
+    #[test]
+    fn shape_bytes_counts_pad_and_factors() {
+        assert_eq!(shape_bytes(16, 8), (16 + 8) * 4);
+    }
+}

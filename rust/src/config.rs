@@ -33,6 +33,13 @@ pub struct Config {
     pub pool_epochs: u64,
     /// Allow factor-pool cycling (bench mode only).
     pub allow_factor_reuse: bool,
+    /// Blinding-factor precompute service: epochs of (pad, unsealed-R)
+    /// pairs staged ahead of demand per tier-1 linear layer (clamped to
+    /// `pool_epochs`).  0 disables the pool — blinding runs inline.
+    pub factor_pool_depth: u64,
+    /// Background prefill worker threads per strategy instance (0 =
+    /// stage only at setup; consumed slots then refill inline as misses).
+    pub factor_prefill_workers: usize,
     /// Dynamic batcher: max batch size (must be an exported batch).
     pub max_batch: usize,
     /// Dynamic batcher: max queueing delay in ms.
@@ -134,6 +141,8 @@ impl Default for Config {
             partition: 6,
             pool_epochs: 64,
             allow_factor_reuse: true,
+            factor_pool_depth: 0,
+            factor_prefill_workers: 2,
             max_batch: 8,
             max_delay_ms: 2.0,
             workers: 2,
@@ -227,6 +236,7 @@ impl Config {
             ("epc_bytes", &mut self.epc_bytes),
             ("seed", &mut self.seed),
             ("pool_epochs", &mut self.pool_epochs),
+            ("factor_pool_depth", &mut self.factor_pool_depth),
             ("lazy_dense_bytes", &mut self.lazy_dense_bytes),
             ("autoscale_tick_ms", &mut self.autoscale_tick_ms),
         ] {
@@ -236,6 +246,7 @@ impl Config {
         }
         for (field, slot) in [
             ("partition", &mut self.partition),
+            ("factor_prefill_workers", &mut self.factor_prefill_workers),
             ("max_batch", &mut self.max_batch),
             ("workers", &mut self.workers),
             ("lanes", &mut self.lanes),
@@ -323,6 +334,9 @@ impl Config {
         c.seed = args.u64_or("seed", c.seed)?;
         c.partition = args.usize_or("partition", c.partition)?;
         c.pool_epochs = args.u64_or("pool-epochs", c.pool_epochs)?;
+        c.factor_pool_depth = args.u64_or("factor-pool-depth", c.factor_pool_depth)?;
+        c.factor_prefill_workers =
+            args.usize_or("factor-prefill-workers", c.factor_prefill_workers)?;
         c.max_batch = args.usize_or("max-batch", c.max_batch)?;
         c.max_delay_ms = args.f64_or("max-delay-ms", c.max_delay_ms)?;
         c.workers = args.usize_or("workers", c.workers)?;
@@ -395,6 +409,14 @@ impl Config {
             (
                 "allow_factor_reuse",
                 Value::Bool(self.allow_factor_reuse),
+            ),
+            (
+                "factor_pool_depth",
+                json::num(self.factor_pool_depth as f64),
+            ),
+            (
+                "factor_prefill_workers",
+                json::num(self.factor_prefill_workers as f64),
             ),
             ("max_batch", json::num(self.max_batch as f64)),
             ("max_delay_ms", json::num(self.max_delay_ms)),
@@ -518,6 +540,8 @@ impl Config {
             d("common", "--epc-bytes", "<n>", "epc_bytes", "enclave protected memory (bytes)"),
             d("common", "--pool-epochs", "<n>", "pool_epochs", "precomputed unblind-factor epochs"),
             d("common", "--strict-otp", "", "allow_factor_reuse", "forbid factor-pool cycling"),
+            d("common", "--factor-pool-depth", "<n>", "factor_pool_depth", "staged epochs/layer (0 = inline)"),
+            d("common", "--factor-prefill-workers", "<n>", "factor_prefill_workers", "prefill threads"),
             d("common", "--lazy-dense-bytes", "<n>", "lazy_dense_bytes", "lazy-load dense bound"),
             // serve
             d("serve", "--requests", "<n>", "", "total synthetic workload requests [64]"),
@@ -1013,6 +1037,28 @@ mod tests {
         )
         .unwrap();
         assert!(Config::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn factor_pool_args_parse_and_roundtrip() {
+        // off by default: blinding runs inline unless opted in
+        assert_eq!(Config::default().factor_pool_depth, 0);
+        assert_eq!(Config::default().factor_prefill_workers, 2);
+        let args = Args::parse(
+            "serve --factor-pool-depth 16 --factor-prefill-workers 3"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = Config::from_args(&args).unwrap();
+        assert_eq!(c.factor_pool_depth, 16);
+        assert_eq!(c.factor_prefill_workers, 3);
+        // round-trips through JSON
+        let v = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&v);
+        assert_eq!(c2.factor_pool_depth, 16);
+        assert_eq!(c2.factor_prefill_workers, 3);
     }
 
     #[test]

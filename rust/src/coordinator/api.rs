@@ -98,6 +98,16 @@ pub struct LedgerSummary {
 }
 
 impl LedgerSummary {
+    /// Accumulate another summary (category-wise sum) — split executions
+    /// of one logical batch report as a single record.
+    pub fn merge(&mut self, other: &Self) {
+        self.measured_ms += other.measured_ms;
+        self.modeled_ms += other.modeled_ms;
+        self.blind_ms += other.blind_ms;
+        self.device_ms += other.device_ms;
+        self.paging_ms += other.paging_ms;
+    }
+
     pub fn from(l: &Ledger) -> Self {
         use crate::enclave::cost::Cat;
         Self {

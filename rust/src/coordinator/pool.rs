@@ -54,6 +54,7 @@ use super::epc_sched::EpcAccount;
 use super::fabric::FabricHandle;
 use super::scheduler::{BatchScheduler, Tier2Finisher, Tier2Task};
 use super::telemetry::{Stage, TenantTelemetry};
+use crate::blinding::FactorPoolStats;
 use crate::util::stats::Summary;
 use crate::util::threadpool::Channel;
 
@@ -874,6 +875,8 @@ fn worker_main(
             None
         }
     };
+    // last-seen cumulative factor-pool counters, for per-batch deltas
+    let mut last_pool = FactorPoolStats::default();
     while let Some(batch) = batcher.next_batch() {
         let Some(sched) = sched.as_mut() else {
             for req in &batch {
@@ -955,6 +958,19 @@ fn worker_main(
                     eprintln!("[pool] w{w} batch failed: {e:#}");
                     m.lock().unwrap().errors += 1;
                 }
+            }
+        }
+        // Fold the strategy's cumulative factor-pool counters into the
+        // tenant telemetry as deltas — hits, `factor_pool_miss`
+        // fallbacks, and prefilled slots since the previous batch.
+        if let Some(tel) = &telemetry {
+            if let Some(stats) = sched.factor_pool_stats() {
+                tel.factor_pool().record(
+                    stats.hits.saturating_sub(last_pool.hits),
+                    stats.misses.saturating_sub(last_pool.misses),
+                    stats.prefilled.saturating_sub(last_pool.prefilled),
+                );
+                last_pool = stats;
             }
         }
     }

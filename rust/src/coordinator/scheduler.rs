@@ -56,6 +56,12 @@ impl BatchScheduler {
         self.strategy.as_mut()
     }
 
+    /// The strategy's cumulative blinding-factor-pool counters (None for
+    /// strategies without a pool).
+    pub fn factor_pool_stats(&self) -> Option<crate::blinding::FactorPoolStats> {
+        self.strategy.factor_pool_stats()
+    }
+
     /// Smallest exported batch size ≥ n (or the largest available).
     pub fn pick_batch(&self, n: usize) -> usize {
         for &b in &self.artifact_batches {
@@ -70,11 +76,18 @@ impl BatchScheduler {
     pub fn execute(&mut self, mut requests: Vec<InferRequest>) -> Result<BatchRecord> {
         let n = requests.len();
         let exec_batch = self.pick_batch(n);
-        // If the queue outran the largest artifact, split recursively.
+        // If the queue outran the largest artifact, split recursively and
+        // merge the chunks' records — otherwise the tail chunks vanish
+        // from queue-wait/latency accounting entirely.
         if n > exec_batch {
             let rest = requests.split_off(exec_batch);
-            let rec = self.execute(requests)?;
-            let _ = self.execute(rest)?;
+            let mut rec = self.execute(requests)?;
+            let tail = self.execute(rest)?;
+            rec.batch += tail.batch;
+            rec.queue_ms = rec.queue_ms.max(tail.queue_ms);
+            rec.exec_wall_ms += tail.exec_wall_ms;
+            rec.sim_ms += tail.sim_ms;
+            rec.ledger.merge(&tail.ledger);
             return Ok(rec);
         }
         let queue_ms = requests
@@ -585,6 +598,112 @@ mod tests {
             chans.push(c);
         }
         s.execute(reqs).unwrap();
+        for c in chans {
+            assert!(c.recv().unwrap().error.is_none());
+        }
+    }
+
+    #[test]
+    fn oversized_queue_merges_tail_records() {
+        let mut s = sched(false);
+        let mut reqs = Vec::new();
+        let mut chans = Vec::new();
+        for i in 0..11 {
+            let (r, c) = req(i);
+            reqs.push(r);
+            chans.push(c);
+        }
+        let rec = s.execute(reqs).unwrap();
+        // 11 requests over [1, 8] artifacts run as 8 + 3: the record must
+        // cover both chunks (the tail used to be dropped on the floor).
+        assert_eq!(rec.batch, 11);
+        assert!(
+            rec.sim_ms > 1.5,
+            "both chunks' ledgers summed (1 ms each), got {}",
+            rec.sim_ms
+        );
+        assert!(rec.ledger.measured_ms > 1.5, "ledger summary summed");
+        assert!(rec.queue_ms >= 0.0);
+        assert!(rec.exec_wall_ms >= 0.0);
+        for c in chans {
+            assert!(c.recv().unwrap().error.is_none());
+        }
+    }
+
+    /// Strategy double recording exactly what the scheduler hands it.
+    struct RecordingStrategy {
+        classes: usize,
+        #[allow(clippy::type_complexity)]
+        seen: std::rc::Rc<std::cell::RefCell<Vec<(usize, usize, Vec<u8>)>>>,
+    }
+
+    impl Strategy for RecordingStrategy {
+        fn name(&self) -> String {
+            "recording".into()
+        }
+
+        fn setup(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn infer(
+            &mut self,
+            ciphertext: &[u8],
+            batch: usize,
+            sessions: &[u64],
+            _ledger: &mut Ledger,
+        ) -> Result<Vec<f32>> {
+            self.seen
+                .borrow_mut()
+                .push((batch, sessions.len(), ciphertext.to_vec()));
+            Ok(vec![0.0; batch * self.classes])
+        }
+
+        fn enclave_requirement_bytes(&self) -> u64 {
+            0
+        }
+    }
+
+    #[test]
+    fn padded_tail_never_extends_sessions_or_keystream() {
+        let seen = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let mut s = BatchScheduler::new(
+            Box::new(RecordingStrategy {
+                classes: 10,
+                seen: seen.clone(),
+            }),
+            16,
+            vec![1, 8],
+        );
+        let mut reqs = Vec::new();
+        let mut chans = Vec::new();
+        for i in 1..=3u64 {
+            let (mut r, c) = req(i);
+            r.session = 100 + i;
+            r.ciphertext = vec![i as u8; 16];
+            reqs.push(r);
+            chans.push(c);
+        }
+        s.execute(reqs).unwrap();
+        let calls = seen.borrow();
+        assert_eq!(calls.len(), 1);
+        let (batch, n_sessions, cipher) = &calls[0];
+        assert_eq!(*batch, 8, "3 requests pad up to the batch-8 artifact");
+        assert_eq!(
+            *n_sessions, 3,
+            "sessions cover only real samples — padding slots have no session entry"
+        );
+        assert_eq!(cipher.len(), 8 * 16);
+        // The padded tail is zero bytes: it must never be filled by
+        // advancing (and thus consuming) any session's keystream.
+        assert!(
+            cipher[3 * 16..].iter().all(|&b| b == 0),
+            "padding must be zeroed, not keystream-derived"
+        );
+        assert_eq!(&cipher[..16], &[1u8; 16][..], "real samples pass through");
+        assert_eq!(&cipher[16..32], &[2u8; 16][..]);
+        assert_eq!(&cipher[32..48], &[3u8; 16][..]);
+        drop(calls);
         for c in chans {
             assert!(c.recv().unwrap().error.is_none());
         }

@@ -366,6 +366,53 @@ impl AdmissionCounters {
     }
 }
 
+/// Per-tenant blinding-factor-pool counters (lock-free, monotone).  The
+/// serving pool's workers fold their strategies' cumulative pool stats
+/// in after every batch, so operators can see whether the steady state
+/// runs off staged factors (hits) or keeps falling back to inline
+/// generation (`factor_pool_miss` events).
+#[derive(Default)]
+pub struct FactorPoolCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    prefilled: AtomicU64,
+}
+
+/// An owned snapshot of one tenant's factor-pool counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FactorPoolSnapshot {
+    /// Layer passes served from staged (pad, unsealed-R) pairs.
+    pub hits: u64,
+    /// `factor_pool_miss`: layer passes that generated factors inline
+    /// because the pool was cold or drained.
+    pub misses: u64,
+    /// Entries the prefill workers staged (cumulative).
+    pub prefilled: u64,
+}
+
+impl FactorPoolCounters {
+    /// Fold in counter *deltas* (callers diff cumulative strategy stats).
+    pub fn record(&self, hits: u64, misses: u64, prefilled: u64) {
+        if hits > 0 {
+            self.hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        if misses > 0 {
+            self.misses.fetch_add(misses, Ordering::Relaxed);
+        }
+        if prefilled > 0 {
+            self.prefilled.fetch_add(prefilled, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> FactorPoolSnapshot {
+        FactorPoolSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            prefilled: self.prefilled.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Per-tenant autoscale outcome counters (lock-free, monotone), plus
 /// the live EPC-limited flag.  The deployment's autoscaler tick records
 /// every EPC-denied grow and every reclaimed worker here; the admission
@@ -430,6 +477,7 @@ pub struct TenantTelemetry {
     stages: [WindowedHistogram; 4],
     admission: AdmissionCounters,
     scale: ScaleCounters,
+    factor_pool: FactorPoolCounters,
 }
 
 impl TenantTelemetry {
@@ -438,6 +486,7 @@ impl TenantTelemetry {
             stages: std::array::from_fn(|_| WindowedHistogram::new(keep)),
             admission: AdmissionCounters::default(),
             scale: ScaleCounters::default(),
+            factor_pool: FactorPoolCounters::default(),
         }
     }
 
@@ -449,6 +498,11 @@ impl TenantTelemetry {
     /// The tenant's autoscale outcome counters (EPC denials/reclaims).
     pub fn scale(&self) -> &ScaleCounters {
         &self.scale
+    }
+
+    /// The tenant's blinding-factor-pool counters.
+    pub fn factor_pool(&self) -> &FactorPoolCounters {
+        &self.factor_pool
     }
 
     /// Record a latency sample for one stage.  Lock-free.
@@ -681,6 +735,24 @@ mod tests {
         // counters are monotone across window rotations
         hub.rotate_all();
         assert_eq!(t.scale().snapshot(), snap);
+    }
+
+    #[test]
+    fn factor_pool_counters_accumulate_deltas_monotonically() {
+        let hub = TelemetryHub::new(2);
+        let t = hub.register("sim8");
+        let f = t.factor_pool();
+        assert_eq!(f.snapshot(), FactorPoolSnapshot::default());
+        f.record(5, 1, 6);
+        f.record(0, 0, 0); // zero deltas are free no-ops
+        f.record(3, 0, 2);
+        let s = f.snapshot();
+        assert_eq!(s.hits, 8);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.prefilled, 8);
+        // monotone across window rotation, like the other counter sets
+        hub.rotate_all();
+        assert_eq!(t.factor_pool().snapshot(), s);
     }
 
     #[test]

@@ -266,6 +266,12 @@ pub fn epc_options_from_config(config: &Config) -> Option<EpcOptions> {
 /// feature-map working set + blinding buffers, evaluated at the
 /// batcher's `max_batch` (the worst residency a worker can reach).
 /// Strategies without an enclave (`open`) cost 0.
+///
+/// When the blinding-factor precompute pipeline is on
+/// (`--factor-pool-depth > 0`), each blinded layer additionally stages
+/// `depth` epochs of pads + unblinding factors in enclave memory
+/// ([`crate::blinding::pool::shape_bytes`]), so pool depth trades
+/// transparently against how many tier-1 workers the EPC ledger admits.
 pub fn worker_epc_bytes_for(model: &Model, config: &Config) -> Result<u64> {
     let Some(plan) =
         strategies::partition_plan_for(model, &config.strategy, config.partition)?
@@ -278,7 +284,16 @@ pub fn worker_epc_bytes_for(model: &Model, config: &Config) -> Result<u64> {
         config.lazy_dense_bytes,
         config.max_batch.max(1),
     );
-    Ok(req.total())
+    let mut total = req.total();
+    if config.factor_pool_depth > 0 {
+        let depth = config.factor_pool_depth.min(config.pool_epochs).max(1);
+        for idx in plan.blinded_layers() {
+            let layer = model.layer(idx)?;
+            total += depth
+                * crate::blinding::pool::shape_bytes(layer.in_elems(), layer.out_elems());
+        }
+    }
+    Ok(total)
 }
 
 /// [`worker_epc_bytes_for`] for callers without a loaded model (tests,
@@ -541,6 +556,53 @@ mod tests {
             // blinded tiers quantize activations to 2^-8 per layer
             assert!(diff < 0.05, "{strategy}: max diff {diff}");
         }
+    }
+
+    #[test]
+    fn factor_pool_depth_raises_worker_epc_charge() {
+        let base = Config {
+            model: "sim8".into(),
+            strategy: "origami/6".into(),
+            pool_epochs: 8,
+            ..Config::default()
+        };
+        let (_, model) = executor_for(&base).unwrap();
+        let inline = worker_epc_bytes_for(&model, &base).unwrap();
+
+        let mut pooled = base.clone();
+        pooled.factor_pool_depth = 4;
+        let charged = worker_epc_bytes_for(&model, &pooled).unwrap();
+        let plan = strategies::partition_plan_for(&model, &pooled.strategy, pooled.partition)
+            .unwrap()
+            .unwrap();
+        let staged: u64 = plan
+            .blinded_layers()
+            .iter()
+            .map(|&i| {
+                let l = model.layer(i).unwrap();
+                crate::blinding::pool::shape_bytes(l.in_elems(), l.out_elems())
+            })
+            .sum();
+        assert_eq!(charged, inline + 4 * staged);
+        assert!(staged > 0, "origami plan stages at least one blinded layer");
+
+        // depth clamps to the unblinding store's epoch count
+        let mut deep = pooled.clone();
+        deep.factor_pool_depth = 1_000;
+        assert_eq!(
+            worker_epc_bytes_for(&model, &deep).unwrap(),
+            inline + base.pool_epochs * staged
+        );
+
+        // strategies with no blinded layers never pay the charge
+        let mut split = pooled.clone();
+        split.strategy = "split/6".into();
+        let mut split_inline = split.clone();
+        split_inline.factor_pool_depth = 0;
+        assert_eq!(
+            worker_epc_bytes_for(&model, &split).unwrap(),
+            worker_epc_bytes_for(&model, &split_inline).unwrap()
+        );
     }
 
     #[test]

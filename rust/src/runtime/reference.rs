@@ -386,8 +386,38 @@ fn softmax(x: &mut [f32], row: usize) {
     }
 }
 
-/// 3x3 same-padding NHWC convolution, float.
-fn conv2d_f32(
+// ---------------------------------------------------------------------
+// Linear kernels.
+//
+// Each kernel ships in two forms: a `*_naive` reference (the textbook
+// quadruple loop, kept public for the perf harness and the bitwise
+// agreement tests) and the default blocked/parallel entry point the
+// backend actually runs.  The fast paths (a) hoist the per-element
+// `wq as f32 / 256.0` requantization into a weight table built once per
+// call, and (b) split the output across `par_map` threads — by image
+// row for conv, by output element for dense.  Bit-exactness argument:
+// every output element still accumulates the *same* f32/u32 terms in
+// the *same* ky → kx → ic (conv) or ascending-i (dense) order, and
+// `par_map` preserves item order, so the blocked results are identical
+// down to the last bit (the property `blocked_kernels_match_naive`
+// pins).  Mod-2^24 kernels are order-insensitive anyway (wrapping adds
+// commute), but they keep the same reduction order for symmetry.
+
+/// Threads to use for a kernel of `madds` multiply-adds: stay serial
+/// below ~1M madds (thread spawn outweighs the work), else one thread
+/// per core, capped at 8 (the kernels saturate memory bandwidth first).
+fn kernel_threads(madds: usize) -> usize {
+    if madds < (1 << 20) {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// 3x3 same-padding NHWC convolution, float — naive reference.
+pub fn conv2d_f32_naive(
     x: &[f32],
     n: usize,
     h: usize,
@@ -428,10 +458,69 @@ fn conv2d_f32(
     out
 }
 
-/// 3x3 same-padding NHWC convolution over mod-2^24 residues.  Wrapping
-/// u32 arithmetic is exact: 2^24 | 2^32, so the final mask recovers the
-/// residue even through two's-complement weights and overflowing sums.
-fn conv2d_mod(
+/// 3x3 same-padding NHWC convolution, float — blocked/parallel.
+pub fn conv2d_f32(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    wq: &[i32],
+) -> Vec<f32> {
+    let threads = kernel_threads(n * h * w * cout * 9 * cin);
+    conv2d_f32_blocked(x, n, h, w, cin, cout, wq, threads)
+}
+
+fn conv2d_f32_blocked(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    wq: &[i32],
+    threads: usize,
+) -> Vec<f32> {
+    let wf: Vec<f32> = wq.iter().map(|&q| q as f32 / 256.0).collect();
+    let rows: Vec<usize> = (0..n * h).collect();
+    let rows = crate::util::threadpool::par_map(rows, threads, |row| {
+        let (b, y) = (row / h, row % h);
+        let mut out = vec![0f32; w * cout];
+        for xx in 0..w {
+            let dst = xx * cout;
+            for ky in 0..3 {
+                let sy = y as isize + ky as isize - 1;
+                if sy < 0 || sy >= h as isize {
+                    continue;
+                }
+                for kx in 0..3 {
+                    let sx = xx as isize + kx as isize - 1;
+                    if sx < 0 || sx >= w as isize {
+                        continue;
+                    }
+                    let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                    let wbase = (ky * 3 + kx) * cin * cout;
+                    for ic in 0..cin {
+                        let xv = x[src + ic];
+                        let wrow = wbase + ic * cout;
+                        for oc in 0..cout {
+                            out[dst + oc] += xv * wf[wrow + oc];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    });
+    rows.concat()
+}
+
+/// 3x3 same-padding NHWC convolution over mod-2^24 residues — naive
+/// reference.  Wrapping u32 arithmetic is exact: 2^24 | 2^32, so the
+/// final mask recovers the residue even through two's-complement
+/// weights and overflowing sums.
+pub fn conv2d_mod_naive(
     x: &[u32],
     n: usize,
     h: usize,
@@ -476,7 +565,71 @@ fn conv2d_mod(
     out
 }
 
-fn dense_f32(x: &[f32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<f32> {
+/// Mod-2^24 convolution — blocked/parallel (see [`conv2d_mod_naive`]
+/// for the arithmetic argument).
+pub fn conv2d_mod(
+    x: &[u32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    wq: &[i32],
+) -> Vec<u32> {
+    let threads = kernel_threads(n * h * w * cout * 9 * cin);
+    conv2d_mod_blocked(x, n, h, w, cin, cout, wq, threads)
+}
+
+fn conv2d_mod_blocked(
+    x: &[u32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    wq: &[i32],
+    threads: usize,
+) -> Vec<u32> {
+    let wu: Vec<u32> = wq.iter().map(|&q| q as u32).collect();
+    let rows: Vec<usize> = (0..n * h).collect();
+    let rows = crate::util::threadpool::par_map(rows, threads, |row| {
+        let (b, y) = (row / h, row % h);
+        let mut out = vec![0u32; w * cout];
+        for xx in 0..w {
+            let dst = xx * cout;
+            for ky in 0..3 {
+                let sy = y as isize + ky as isize - 1;
+                if sy < 0 || sy >= h as isize {
+                    continue;
+                }
+                for kx in 0..3 {
+                    let sx = xx as isize + kx as isize - 1;
+                    if sx < 0 || sx >= w as isize {
+                        continue;
+                    }
+                    let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                    let wbase = (ky * 3 + kx) * cin * cout;
+                    for ic in 0..cin {
+                        let xv = x[src + ic];
+                        let wrow = wbase + ic * cout;
+                        for oc in 0..cout {
+                            let prod = wu[wrow + oc].wrapping_mul(xv);
+                            out[dst + oc] = out[dst + oc].wrapping_add(prod);
+                        }
+                    }
+                }
+            }
+        }
+        for v in out.iter_mut() {
+            *v &= MASK;
+        }
+        out
+    });
+    rows.concat()
+}
+
+/// Dense (fully-connected) layer, float — naive reference.
+pub fn dense_f32_naive(x: &[f32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<f32> {
     let mut out = vec![0f32; n * d_out];
     for b in 0..n {
         for i in 0..d_in {
@@ -491,7 +644,44 @@ fn dense_f32(x: &[f32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<
     out
 }
 
-fn dense_mod(x: &[u32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<u32> {
+/// Dense layer, float — blocked/parallel.  Transposes the weights once
+/// so each output element reduces over a contiguous column, and splits
+/// output elements across threads; per-element the terms still sum in
+/// ascending-i order, so the result is bit-identical to the naive loop.
+pub fn dense_f32(x: &[f32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<f32> {
+    let threads = kernel_threads(n * d_in * d_out);
+    dense_f32_blocked(x, n, d_in, d_out, wq, threads)
+}
+
+fn dense_f32_blocked(
+    x: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    wq: &[i32],
+    threads: usize,
+) -> Vec<f32> {
+    let mut wt = vec![0f32; d_in * d_out];
+    for i in 0..d_in {
+        for o in 0..d_out {
+            wt[o * d_in + i] = wq[i * d_out + o] as f32 / 256.0;
+        }
+    }
+    let cells: Vec<usize> = (0..n * d_out).collect();
+    crate::util::threadpool::par_map(cells, threads, |cell| {
+        let (b, o) = (cell / d_out, cell % d_out);
+        let xrow = &x[b * d_in..(b + 1) * d_in];
+        let wcol = &wt[o * d_in..(o + 1) * d_in];
+        let mut acc = 0f32;
+        for i in 0..d_in {
+            acc += xrow[i] * wcol[i];
+        }
+        acc
+    })
+}
+
+/// Dense layer over mod-2^24 residues — naive reference.
+pub fn dense_mod_naive(x: &[u32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<u32> {
     let mut out = vec![0u32; n * d_out];
     for b in 0..n {
         for i in 0..d_in {
@@ -508,6 +698,41 @@ fn dense_mod(x: &[u32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<
         *v &= MASK;
     }
     out
+}
+
+/// Mod-2^24 dense layer — blocked/parallel (same layout as
+/// [`dense_f32`]; wrapping adds make the order moot, the layout is for
+/// cache behavior).
+pub fn dense_mod(x: &[u32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<u32> {
+    let threads = kernel_threads(n * d_in * d_out);
+    dense_mod_blocked(x, n, d_in, d_out, wq, threads)
+}
+
+fn dense_mod_blocked(
+    x: &[u32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    wq: &[i32],
+    threads: usize,
+) -> Vec<u32> {
+    let mut wt = vec![0u32; d_in * d_out];
+    for i in 0..d_in {
+        for o in 0..d_out {
+            wt[o * d_in + i] = wq[i * d_out + o] as u32;
+        }
+    }
+    let cells: Vec<usize> = (0..n * d_out).collect();
+    crate::util::threadpool::par_map(cells, threads, |cell| {
+        let (b, o) = (cell / d_out, cell % d_out);
+        let xrow = &x[b * d_in..(b + 1) * d_in];
+        let wcol = &wt[o * d_in..(o + 1) * d_in];
+        let mut acc = 0u32;
+        for i in 0..d_in {
+            acc = acc.wrapping_add(wcol[i].wrapping_mul(xrow[i]));
+        }
+        acc & MASK
+    })
 }
 
 #[cfg(test)]
@@ -687,6 +912,54 @@ mod tests {
         assert_eq!(ya.len(), 10);
         let sum: f32 = ya.iter().sum();
         assert!((sum - 1.0).abs() < 1e-3, "softmax sums to 1: {sum}");
+    }
+
+    /// The blocked/parallel kernels must agree with the naive quadruple
+    /// loops *bitwise* — they are the arithmetic the bit-identity tests
+    /// and the blinded mod-2^24 path pin.  Exercised with the thread
+    /// count forced >1 so the parallel split itself is covered (the
+    /// public entry points would stay serial at these sizes).
+    #[test]
+    fn blocked_kernels_match_naive() {
+        let (n, h, w, cin, cout) = (2, 7, 5, 3, 4);
+        let wq: Vec<i32> = (0..9 * cin * cout).map(|i| ((i * 37) % 511) as i32 - 255).collect();
+        let xf: Vec<f32> = (0..n * h * w * cin)
+            .map(|i| ((i * 13) % 97) as f32 / 97.0 - 0.5)
+            .collect();
+        let xu: Vec<u32> = (0..n * h * w * cin)
+            .map(|i| ((i as u32).wrapping_mul(2_654_435_761)) & MASK)
+            .collect();
+        for threads in [1, 4] {
+            assert_eq!(
+                conv2d_f32_blocked(&xf, n, h, w, cin, cout, &wq, threads),
+                conv2d_f32_naive(&xf, n, h, w, cin, cout, &wq),
+                "conv2d_f32 threads={threads}"
+            );
+            assert_eq!(
+                conv2d_mod_blocked(&xu, n, h, w, cin, cout, &wq, threads),
+                conv2d_mod_naive(&xu, n, h, w, cin, cout, &wq),
+                "conv2d_mod threads={threads}"
+            );
+        }
+
+        let (d_in, d_out) = (31, 6);
+        let wq: Vec<i32> = (0..d_in * d_out).map(|i| ((i * 23) % 511) as i32 - 255).collect();
+        let xf: Vec<f32> = (0..n * d_in).map(|i| ((i * 29) % 83) as f32 / 83.0 - 0.5).collect();
+        let xu: Vec<u32> = (0..n * d_in)
+            .map(|i| ((i as u32).wrapping_mul(2_246_822_519)) & MASK)
+            .collect();
+        for threads in [1, 4] {
+            assert_eq!(
+                dense_f32_blocked(&xf, n, d_in, d_out, &wq, threads),
+                dense_f32_naive(&xf, n, d_in, d_out, &wq),
+                "dense_f32 threads={threads}"
+            );
+            assert_eq!(
+                dense_mod_blocked(&xu, n, d_in, d_out, &wq, threads),
+                dense_mod_naive(&xu, n, d_in, d_out, &wq),
+                "dense_mod threads={threads}"
+            );
+        }
     }
 
     #[test]

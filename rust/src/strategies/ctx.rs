@@ -5,6 +5,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::blinding::pool::{FactorPool, FactorPoolStats, PrefillShape};
 use crate::blinding::{self, FactorStream, UnblindStore};
 use crate::config::Config;
 use crate::enclave::cost::{Cat, CostModel, Ledger};
@@ -23,7 +24,11 @@ pub struct StrategyCtx {
     /// The simulated enclave (None for the open strategy).
     pub enclave: Option<Enclave>,
     pub factors: Option<FactorStream>,
-    pub unblind: Option<UnblindStore>,
+    /// Shared with the factor-pool prefill workers once the pool starts;
+    /// setup-time writes go through `Arc::get_mut` (sole owner until then).
+    pub unblind: Option<Arc<UnblindStore>>,
+    /// Blinding-factor precompute service (None = inline generation).
+    pub factor_pool: Option<FactorPool>,
     /// Param-blob residency handles (EPC accounting), by layer index.
     pub(crate) resident_params: Vec<(usize, AllocId)>,
     /// Enclave-internal blinding-epoch counter (one per inference).
@@ -43,6 +48,7 @@ impl StrategyCtx {
             enclave: None,
             factors: None,
             unblind: None,
+            factor_pool: None,
             resident_params: Vec::new(),
             epoch_ctr: 0,
         })
@@ -71,12 +77,12 @@ impl StrategyCtx {
         ))?;
         let measurement = crate::crypto::sha256(&[&seed[..], self.model.name.as_bytes()].concat());
         self.factors = Some(FactorStream::new(key));
-        self.unblind = Some(UnblindStore::new(
+        self.unblind = Some(Arc::new(UnblindStore::new(
             &seed,
             measurement,
             self.config.pool_epochs,
             self.config.allow_factor_reuse,
-        ));
+        )));
         self.enclave = Some(enclave);
         Ok(())
     }
@@ -226,17 +232,32 @@ impl StrategyCtx {
             match layer.kind {
                 LayerKind::Conv | LayerKind::Dense => {
                     let n = batch * layer.in_elems();
+                    let n_out = batch * layer.out_elems();
                     let epoch = self
                         .unblind
                         .as_ref()
                         .ok_or_else(|| anyhow!("no unblind store"))?
                         .resolve_epoch(epoch)?;
-                    // 1. blind inside the enclave
-                    let r = self
-                        .factors
+                    // 1. blind inside the enclave.  A warm factor pool
+                    //    hands us both the pad and the already-unsealed
+                    //    unblinding factors; a cold pool falls back to
+                    //    inline generation — bit-identically, since the
+                    //    stream is deterministic per (layer, epoch) —
+                    //    and counts a `factor_pool_miss`.
+                    let staged = self
+                        .factor_pool
                         .as_ref()
-                        .ok_or_else(|| anyhow!("no factor stream"))?
-                        .factors(idx, epoch, n);
+                        .and_then(|p| p.take(idx, epoch, n, n_out));
+                    let (r, staged_ru) = match staged {
+                        Some(entry) => (entry.r, Some(entry.ru)),
+                        None => (
+                            self.factors
+                                .as_ref()
+                                .ok_or_else(|| anyhow!("no factor stream"))?
+                                .factors(idx, epoch, n),
+                            None,
+                        ),
+                    };
                     let mut blinded = vec![0f32; n];
                     blinding::quantize_blind(&x, &r, &mut blinded, ledger);
                     // 2. offload the linear op (OCALL out, OCALL back)
@@ -249,14 +270,18 @@ impl StrategyCtx {
                         device,
                         ledger,
                     )?;
-                    // 3. fetch this layer's unblinding factors (sealed,
-                    //    outside the EPC) and decode
+                    // 3. this layer's unblinding factors: staged by the
+                    //    prefill service, or fetched + unsealed inline
+                    //    (sealed, outside the EPC) — then decode
                     let t = Timer::start();
-                    let ru = self
-                        .unblind
-                        .as_ref()
-                        .unwrap()
-                        .fetch(idx, epoch, out.data.len())?;
+                    let ru = match staged_ru {
+                        Some(ru) if ru.len() == out.data.len() => ru,
+                        _ => self
+                            .unblind
+                            .as_ref()
+                            .unwrap()
+                            .fetch(idx, epoch, out.data.len())?,
+                    };
                     ledger.add_measured(Cat::DataMove, t.elapsed().as_nanos() as u64);
                     let mut y = vec![0f32; out.data.len()];
                     blinding::unblind_dequantize(&out.data, &ru, &mut y, ledger);
@@ -265,10 +290,7 @@ impl StrategyCtx {
                     if layer.has_relu {
                         self.enclave_mut()?.relu(&mut y, ledger);
                     }
-                    debug_assert!(
-                        y.iter().all(|v| v.abs() < blinding::quant::DECODE_RANGE),
-                        "decodability range violated at layer {idx}"
-                    );
+                    Self::check_decodable(idx, &y)?;
                     x = y;
                 }
                 LayerKind::Pool => {
@@ -336,13 +358,83 @@ impl StrategyCtx {
                     self.device,
                     &mut scratch,
                 )?;
-                self.unblind
+                let store = self
+                    .unblind
                     .as_mut()
-                    .ok_or_else(|| anyhow!("no unblind store"))?
+                    .ok_or_else(|| anyhow!("no unblind store"))?;
+                Arc::get_mut(store)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "unblind store is shared — precompute factors \
+                             before starting the factor pool"
+                        )
+                    })?
                     .put(idx, epoch, &out.data)?;
             }
         }
         Ok(())
+    }
+
+    /// Start the blinding-factor precompute service for the given linear
+    /// layers: `config.factor_prefill_workers` background threads stage
+    /// `config.factor_pool_depth` epochs of (pad, unsealed-R) pairs per
+    /// layer at batch 1 (batched shapes join the staging set on first
+    /// use).  No-op when the configured depth is 0 (inline blinding).
+    pub fn start_factor_pool(&mut self, layers: &[usize]) -> Result<()> {
+        let depth = self.config.factor_pool_depth;
+        if depth == 0 {
+            return Ok(());
+        }
+        let stream = self
+            .factors
+            .as_ref()
+            .ok_or_else(|| anyhow!("no factor stream"))?
+            .clone();
+        let store = self
+            .unblind
+            .as_ref()
+            .ok_or_else(|| anyhow!("no unblind store"))?
+            .clone();
+        let mut shapes = Vec::with_capacity(layers.len());
+        for &idx in layers {
+            let layer = self.model.layer(idx)?;
+            shapes.push(PrefillShape {
+                layer: idx,
+                n_in: layer.in_elems(),
+                n_out: layer.out_elems(),
+            });
+        }
+        let pool = FactorPool::start(
+            stream,
+            store,
+            shapes,
+            depth,
+            self.config.factor_prefill_workers,
+        );
+        // deterministic warm start: stage the seeded shapes before the
+        // first request regardless of worker count
+        pool.prefill_now();
+        self.factor_pool = Some(pool);
+        Ok(())
+    }
+
+    /// Cumulative factor-pool counters (None when no pool runs).
+    pub fn factor_pool_stats(&self) -> Option<FactorPoolStats> {
+        self.factor_pool.as_ref().map(|p| p.stats())
+    }
+
+    /// Decodability gate: a layer output outside the centered mod-2^24
+    /// decode window would dequantize to garbage, silently — so it is a
+    /// hard checked error in release builds too (was debug_assert-only).
+    pub fn check_decodable(idx: usize, y: &[f32]) -> Result<()> {
+        match y.iter().find(|v| !(v.abs() < blinding::quant::DECODE_RANGE)) {
+            None => Ok(()),
+            Some(v) => Err(anyhow!(
+                "decodability range violated at layer {idx}: |{v}| >= {} \
+                 (quantized output left the mod-2^24 decode window)",
+                blinding::quant::DECODE_RANGE
+            )),
+        }
     }
 
     /// Decrypt a client request batch inside the enclave (per-sample
@@ -386,5 +478,27 @@ pub fn spatial(shape: &[usize]) -> Result<(usize, usize, usize)> {
     match shape {
         [h, w, c] => Ok((*h, *w, *c)),
         other => Err(anyhow!("expected HWC shape, got {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decodability_gate_accepts_in_range_outputs() {
+        let limit = blinding::quant::DECODE_RANGE;
+        assert!(StrategyCtx::check_decodable(3, &[0.0, limit - 1.0, 1.0 - limit]).is_ok());
+        assert!(StrategyCtx::check_decodable(0, &[]).is_ok());
+    }
+
+    #[test]
+    fn decodability_gate_rejects_out_of_range_outputs() {
+        let limit = blinding::quant::DECODE_RANGE;
+        let err = StrategyCtx::check_decodable(3, &[0.0, limit]).unwrap_err();
+        assert!(err.to_string().contains("layer 3"), "{err}");
+        assert!(StrategyCtx::check_decodable(1, &[-limit - 1.0]).is_err());
+        // NaN is not decodable either — must error, not pass silently
+        assert!(StrategyCtx::check_decodable(2, &[f32::NAN]).is_err());
     }
 }

@@ -109,6 +109,14 @@ pub trait Strategy {
     fn power_cycle(&mut self) -> Result<f64> {
         Ok(0.0)
     }
+
+    /// Cumulative blinding-factor-pool counters (hits, `factor_pool_miss`
+    /// fallbacks, staging state).  Default: strategies without a pool —
+    /// or with `factor_pool_depth = 0` — return None, and the serving
+    /// pool records no factor-pool telemetry for them.
+    fn factor_pool_stats(&self) -> Option<crate::blinding::FactorPoolStats> {
+        None
+    }
 }
 
 /// Instantiate a strategy by config name.  [`partition_plan_for`] below

@@ -22,6 +22,7 @@ pub struct Origami {
     ctx: StrategyCtx,
     p: usize,
     requirement: u64,
+    skipped_batches: Vec<usize>,
 }
 
 impl Origami {
@@ -30,12 +31,22 @@ impl Origami {
             ctx,
             p,
             requirement: 0,
+            skipped_batches: Vec::new(),
         }
     }
 
     /// The partition point in use.
     pub fn partition(&self) -> usize {
         self.p
+    }
+
+    /// Serving batch sizes whose unblinding factors were *not*
+    /// precomputed at setup because the model does not export the
+    /// batched `lin_blind` stage (requests at these sizes fetch-miss
+    /// and run inline).  Genuine precompute failures propagate from
+    /// `setup` instead of landing here.
+    pub fn skipped_batches(&self) -> &[usize] {
+        &self.skipped_batches
     }
 }
 
@@ -66,14 +77,29 @@ impl Strategy for Origami {
             .collect();
         let epochs = self.ctx.config.pool_epochs;
         // Precompute for every batch size the scheduler can pick (the
-        // exported serving set), batch 1 mandatory, the rest best-effort
-        // (batched stages may not be exported for every model).
+        // exported serving set), batch 1 mandatory.  A batched stage the
+        // model does not export is a *skip* (recorded below); anything
+        // else — seal failures, artifact shape mismatches — is a genuine
+        // error and propagates instead of resurfacing at serve time as a
+        // hot-path fetch miss.
         self.ctx.precompute_unblind_factors(&layers, epochs, 1)?;
+        self.skipped_batches.clear();
         for b in model.serving_batches() {
-            if b > 1 {
-                self.ctx.precompute_unblind_factors(&layers, epochs, b).ok();
+            if b <= 1 {
+                continue;
+            }
+            let exported = layers
+                .iter()
+                .all(|&i| model.stage(&StrategyCtx::lin_blind(i), b).is_ok());
+            if exported {
+                self.ctx.precompute_unblind_factors(&layers, epochs, b)?;
+            } else {
+                self.skipped_batches.push(b);
             }
         }
+        // With all R sealed, start the blinding-factor prefill service
+        // (no-op at factor_pool_depth = 0).
+        self.ctx.start_factor_pool(&layers)?;
         Ok(())
     }
 
@@ -131,6 +157,10 @@ impl Strategy for Origami {
 
     fn enclave_requirement_bytes(&self) -> u64 {
         self.requirement
+    }
+
+    fn factor_pool_stats(&self) -> Option<crate::blinding::FactorPoolStats> {
+        self.ctx.factor_pool_stats()
     }
 
     fn power_cycle(&mut self) -> Result<f64> {

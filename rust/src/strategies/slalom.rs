@@ -20,6 +20,7 @@ use crate::model::partition::PartitionPlan;
 pub struct Slalom {
     ctx: StrategyCtx,
     requirement: u64,
+    skipped_batches: Vec<usize>,
 }
 
 impl Slalom {
@@ -27,7 +28,14 @@ impl Slalom {
         Self {
             ctx,
             requirement: 0,
+            skipped_batches: Vec::new(),
         }
+    }
+
+    /// Serving batch sizes skipped at setup because the batched
+    /// `lin_blind` stage is not exported (see `Origami::skipped_batches`).
+    pub fn skipped_batches(&self) -> &[usize] {
+        &self.skipped_batches
     }
 }
 
@@ -50,13 +58,24 @@ impl Strategy for Slalom {
         self.ctx.precompute_unblind_factors(&layers, epochs, 1)?;
         // batched artifacts share the per-sample factors? No — each
         // batch size has its own artifact; precompute every size the
-        // scheduler can pick (best-effort: batched stages may not be
-        // exported for all models).
+        // scheduler can pick.  A size whose stage is not exported is
+        // recorded and skipped; real precompute failures propagate
+        // rather than degrading into serve-time fetch misses.
+        self.skipped_batches.clear();
         for b in model.serving_batches() {
-            if b > 1 {
-                self.ctx.precompute_unblind_factors(&layers, epochs, b).ok();
+            if b <= 1 {
+                continue;
+            }
+            let exported = layers
+                .iter()
+                .all(|&i| model.stage(&StrategyCtx::lin_blind(i), b).is_ok());
+            if exported {
+                self.ctx.precompute_unblind_factors(&layers, epochs, b)?;
+            } else {
+                self.skipped_batches.push(b);
             }
         }
+        self.ctx.start_factor_pool(&layers)?;
         Ok(())
     }
 
@@ -75,6 +94,10 @@ impl Strategy for Slalom {
 
     fn enclave_requirement_bytes(&self) -> u64 {
         self.requirement
+    }
+
+    fn factor_pool_stats(&self) -> Option<crate::blinding::FactorPoolStats> {
+        self.ctx.factor_pool_stats()
     }
 
     fn power_cycle(&mut self) -> Result<f64> {
