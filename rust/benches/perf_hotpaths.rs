@@ -11,11 +11,13 @@
 use origami::blinding::blind::{blind_into, fill_factors, unblind_into};
 use origami::enclave::cost::{CostModel, Ledger};
 use origami::enclave::epc::{Epc, PAGE_SIZE};
-use origami::harness::Bench;
+use origami::harness::{append_kernel_rows, Bench, KernelRow};
 use origami::runtime::reference::{
-    conv2d_f32, conv2d_f32_naive, dense_f32, dense_f32_naive,
+    conv2d_f32_blocked, conv2d_f32_naive, conv2d_f32_simd, dense_f32_blocked, dense_f32_naive,
+    dense_f32_simd,
 };
 use origami::util::rng::{ChaCha20, Rng};
+use origami::util::threadpool::kernel_thread_cap;
 
 fn main() {
     let mut bench = Bench::new("Perf: hot-path throughput");
@@ -83,10 +85,16 @@ fn main() {
         / 1024.0;
     row.extra.push(("GBps".into(), rate));
 
-    // Reference-kernel throughput: naive quadruple loops vs the
-    // blocked/parallel kernels (bit-identical by construction; pinned
-    // by the reference backend's unit tests).  Sized above the parallel
-    // threshold so the blocked path fans out.
+    // Reference-kernel throughput: naive quadruple loops vs the blocked
+    // kernels vs the 8-wide lane-unrolled simd kernels (all bit-identical
+    // by construction; pinned by the reference backend's unit tests).
+    // Sized above the parallel threshold so the threaded paths fan out.
+    // Every measurement also lands in bench_results/kernels.json (the
+    // BENCH_kernels.json artifact CI's bench leg uploads).
+    let mut kernel_rows: Vec<KernelRow> = Vec::new();
+    let tmax = kernel_thread_cap().min(8).max(1);
+    let thread_points: Vec<usize> = if tmax > 1 { vec![1, tmax] } else { vec![1] };
+
     let (kn, kh, kw, cin, cout) = (2, 32, 32, 8, 16);
     let wq: Vec<i32> = (0..9 * cin * cout)
         .map(|i| ((i * 37) % 511) as i32 - 255)
@@ -95,20 +103,49 @@ fn main() {
         .map(|i| ((i * 13) % 97) as f32 / 97.0 - 0.5)
         .collect();
     let conv_madds = (kn * kh * kw * cout * 9 * cin) as f64;
-    for (name, blocked) in [("conv2d naive", false), ("conv2d blocked", true)] {
+    {
         let mut samples = Vec::new();
         for _ in 0..reps {
             let t = std::time::Instant::now();
-            if blocked {
-                std::hint::black_box(conv2d_f32(&cx, kn, kh, kw, cin, cout, &wq));
-            } else {
-                std::hint::black_box(conv2d_f32_naive(&cx, kn, kh, kw, cin, cout, &wq));
-            }
+            std::hint::black_box(conv2d_f32_naive(&cx, kn, kh, kw, cin, cout, &wq));
             samples.push(t.elapsed().as_secs_f64() * 1e3);
         }
-        let row = bench.push_samples(name, &samples);
+        let row = bench.push_samples("conv2d naive", &samples);
         let gmadds = conv_madds / (row.mean_ms / 1e3) / 1e9;
         row.extra.push(("Gmadds".into(), gmadds));
+        kernel_rows.push(KernelRow {
+            kernel: "conv2d_f32".into(),
+            variant: "naive".into(),
+            threads: 1,
+            gmadds,
+        });
+    }
+    for &threads in &thread_points {
+        for (variant, simd) in [("blocked", false), ("simd", true)] {
+            let mut samples = Vec::new();
+            for _ in 0..reps {
+                let t = std::time::Instant::now();
+                if simd {
+                    std::hint::black_box(conv2d_f32_simd(
+                        &cx, kn, kh, kw, cin, cout, &wq, threads,
+                    ));
+                } else {
+                    std::hint::black_box(conv2d_f32_blocked(
+                        &cx, kn, kh, kw, cin, cout, &wq, threads,
+                    ));
+                }
+                samples.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            let row = bench.push_samples(&format!("conv2d {variant} t{threads}"), &samples);
+            let gmadds = conv_madds / (row.mean_ms / 1e3) / 1e9;
+            row.extra.push(("Gmadds".into(), gmadds));
+            kernel_rows.push(KernelRow {
+                kernel: "conv2d_f32".into(),
+                variant: variant.into(),
+                threads,
+                gmadds,
+            });
+        }
     }
 
     let (d_in, d_out) = (16_384, 64);
@@ -119,23 +156,52 @@ fn main() {
         .map(|i| ((i * 29) % 83) as f32 / 83.0 - 0.5)
         .collect();
     let dense_madds = (kn * d_in * d_out) as f64;
-    for (name, blocked) in [("dense naive", false), ("dense blocked", true)] {
+    {
         let mut samples = Vec::new();
         for _ in 0..reps {
             let t = std::time::Instant::now();
-            if blocked {
-                std::hint::black_box(dense_f32(&dx, kn, d_in, d_out, &dw));
-            } else {
-                std::hint::black_box(dense_f32_naive(&dx, kn, d_in, d_out, &dw));
-            }
+            std::hint::black_box(dense_f32_naive(&dx, kn, d_in, d_out, &dw));
             samples.push(t.elapsed().as_secs_f64() * 1e3);
         }
-        let row = bench.push_samples(name, &samples);
+        let row = bench.push_samples("dense naive", &samples);
         let gmadds = dense_madds / (row.mean_ms / 1e3) / 1e9;
         row.extra.push(("Gmadds".into(), gmadds));
+        kernel_rows.push(KernelRow {
+            kernel: "dense_f32".into(),
+            variant: "naive".into(),
+            threads: 1,
+            gmadds,
+        });
+    }
+    for &threads in &thread_points {
+        for (variant, simd) in [("blocked", false), ("simd", true)] {
+            let mut samples = Vec::new();
+            for _ in 0..reps {
+                let t = std::time::Instant::now();
+                if simd {
+                    std::hint::black_box(dense_f32_simd(&dx, kn, d_in, d_out, &dw, threads));
+                } else {
+                    std::hint::black_box(dense_f32_blocked(&dx, kn, d_in, d_out, &dw, threads));
+                }
+                samples.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            let row = bench.push_samples(&format!("dense {variant} t{threads}"), &samples);
+            let gmadds = dense_madds / (row.mean_ms / 1e3) / 1e9;
+            row.extra.push(("Gmadds".into(), gmadds));
+            kernel_rows.push(KernelRow {
+                kernel: "dense_f32".into(),
+                variant: variant.into(),
+                threads,
+                gmadds,
+            });
+        }
     }
 
     bench.finish();
+    match append_kernel_rows(&kernel_rows) {
+        Ok(p) => println!("[bench] kernel rows merged into {}", p.display()),
+        Err(e) => eprintln!("[bench] kernel rows dump failed: {e}"),
+    }
     println!(
         "\npaper reference: blind/unblind ≈ 6MB per 4ms ≈ 1.46 GB/s on a Xeon E-2174G"
     );

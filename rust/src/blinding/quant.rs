@@ -55,6 +55,59 @@ pub fn decodable(y: f32) -> bool {
     y.abs() < DECODE_RANGE
 }
 
+// ---------------------------------------------------------------------
+// Int8 tail quantization (`:tail=int8`).
+//
+// Tier-2 tail stages run in the open, so they are free to trade the
+// fixed-point 2^8 domain for a per-tensor symmetric int8 scheme:
+// weights get a static per-layer scale (max|w| / 127, computed once at
+// build time), activations a dynamic per-tensor scale, and the
+// contraction accumulates in widening i32.  Symmetric max-abs scaling
+// never clamps (the extreme value maps exactly to ±127), so the only
+// error source is rounding — bounded by half a quantization step per
+// operand, which `i8_matmul_error_bound` turns into a per-output bound
+// the property tests pin.
+
+/// Largest magnitude an int8 lane can carry.
+pub const I8_QMAX: f32 = 127.0;
+
+/// Symmetric per-tensor scale: `max|v| / 127` (0 for empty/all-zero
+/// tensors — quantization then maps everything to 0, exactly).
+pub fn i8_scale(v: &[f32]) -> f32 {
+    let amax = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    amax / I8_QMAX
+}
+
+/// Quantize one value: `round(v / scale)` clamped to ±127.
+#[inline]
+pub fn quantize_i8(v: f32, scale: f32) -> i8 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    (v / scale).round().clamp(-I8_QMAX, I8_QMAX) as i8
+}
+
+/// Quantize a tensor with one symmetric scale.
+pub fn quantize_i8_slice(v: &[f32], scale: f32) -> Vec<i8> {
+    v.iter().map(|&x| quantize_i8(x, scale)).collect()
+}
+
+/// Worst-case |error| of one output of an int8 quantize → matmul →
+/// dequantize round trip over a length-`k` reduction.  With
+/// `x = x_q·s_x + e_x`, `w = w_q·s_w + e_w` and |e| ≤ step/2 per
+/// operand, each term's error is ≤ |x|·(s_w/2) + |w|·(s_x/2) +
+/// s_x·s_w/4; summing over the reduction gives the bound below (no
+/// clamp term — symmetric max-abs scaling is exact at the extremes).
+pub fn i8_matmul_error_bound(
+    x_abs_sum: f32,
+    w_abs_sum: f32,
+    x_scale: f32,
+    w_scale: f32,
+    k: usize,
+) -> f32 {
+    0.5 * w_scale * x_abs_sum + 0.5 * x_scale * w_abs_sum + k as f32 * 0.25 * x_scale * w_scale
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +143,48 @@ mod tests {
         assert_eq!(DECODE_RANGE, 128.0);
         assert!(decodable(127.9));
         assert!(!decodable(128.0));
+    }
+
+    #[test]
+    fn i8_symmetric_scale_never_clamps() {
+        let v = [0.3f32, -2.5, 1.1, 0.0, 2.5];
+        let s = i8_scale(&v);
+        assert!((s - 2.5 / 127.0).abs() < 1e-9);
+        let q = quantize_i8_slice(&v, s);
+        assert_eq!(q[1], -127, "max-abs maps exactly to -127");
+        assert_eq!(q[4], 127, "max-abs maps exactly to +127");
+        assert_eq!(q[3], 0);
+        for (&x, &qv) in v.iter().zip(&q) {
+            assert!((qv as f32 * s - x).abs() <= s / 2.0 + 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn i8_zero_and_degenerate_scales() {
+        assert_eq!(i8_scale(&[]), 0.0);
+        assert_eq!(i8_scale(&[0.0, 0.0]), 0.0);
+        assert_eq!(quantize_i8(1.0, 0.0), 0);
+        assert_eq!(quantize_i8(1.0, -1.0), 0);
+    }
+
+    #[test]
+    fn i8_error_bound_holds_on_a_small_dot() {
+        let x = [0.9f32, -0.4, 0.25, 0.7];
+        let w = [-1.2f32, 0.5, 0.33, -0.8];
+        let xs = i8_scale(&x);
+        let ws = i8_scale(&w);
+        let xq = quantize_i8_slice(&x, xs);
+        let wq = quantize_i8_slice(&w, ws);
+        let exact: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+        let acc: i32 = xq.iter().zip(&wq).map(|(&a, &b)| a as i32 * b as i32).sum();
+        let got = acc as f32 * xs * ws;
+        let x_abs: f32 = x.iter().map(|v| v.abs()).sum();
+        let w_abs: f32 = w.iter().map(|v| v.abs()).sum();
+        let bound = i8_matmul_error_bound(x_abs, w_abs, xs, ws, x.len());
+        assert!(
+            (got - exact).abs() <= bound + 1e-6,
+            "err {} > bound {bound}",
+            (got - exact).abs()
+        );
     }
 }

@@ -125,6 +125,15 @@ pub struct Config {
     /// Grows beyond the budget reclaim idle workers from
     /// over-provisioned tenants or are denied (typed, in telemetry).
     pub epc_overcommit: f64,
+    /// Process-wide cap on kernel worker threads: all blocked/simd
+    /// reference kernels draw from one shared governor sized by this,
+    /// so N tier-1 workers × M kernel threads can never oversubscribe
+    /// the host.  0 = `available_parallelism`.
+    pub kernel_threads: usize,
+    /// Default tier-2 tail numeric precision: `f32` or `int8`
+    /// (symmetric i8 weights/activations, i32 accumulation).  Per-model
+    /// overrides via `:tail=` in the deployment spec.
+    pub tail_precision: String,
 }
 
 impl Default for Config {
@@ -173,6 +182,8 @@ impl Default for Config {
             shed_policy: "reject".into(),
             degrade_strategy: "baseline2".into(),
             epc_overcommit: 0.0,
+            kernel_threads: 0,
+            tail_precision: "f32".into(),
         }
     }
 }
@@ -211,6 +222,12 @@ impl Config {
             path.display(),
             c.shed_policy
         );
+        anyhow::ensure!(
+            c.tail_precision == "f32" || c.tail_precision == "int8",
+            "config {}: tail_precision must be `f32` or `int8`, got `{}`",
+            path.display(),
+            c.tail_precision
+        );
         Ok(c)
     }
 
@@ -227,6 +244,7 @@ impl Config {
             ("autoscale_policy", &mut self.autoscale_policy),
             ("shed_policy", &mut self.shed_policy),
             ("degrade_strategy", &mut self.degrade_strategy),
+            ("tail_precision", &mut self.tail_precision),
         ] {
             if let Some(s) = v.get(field).and_then(|x| x.as_str()) {
                 *slot = s.to_string();
@@ -260,6 +278,7 @@ impl Config {
             ("split_tail_chunk", &mut self.split_tail_chunk),
             ("inflight", &mut self.inflight),
             ("shed_depth", &mut self.shed_depth),
+            ("kernel_threads", &mut self.kernel_threads),
         ] {
             if let Some(n) = v.get(field).and_then(|x| x.as_usize()) {
                 *slot = n;
@@ -380,6 +399,14 @@ impl Config {
             c.epc_overcommit
         );
         c.lazy_dense_bytes = args.u64_or("lazy-dense-bytes", c.lazy_dense_bytes)?;
+        c.kernel_threads = args.usize_or("kernel-threads", c.kernel_threads)?;
+        if let Some(v) = args.get("tail-precision") {
+            anyhow::ensure!(
+                v == "f32" || v == "int8",
+                "--tail-precision must be `f32` or `int8`, got `{v}`"
+            );
+            c.tail_precision = v.into();
+        }
         if args.has("strict-otp") {
             c.allow_factor_reuse = false;
         }
@@ -460,6 +487,8 @@ impl Config {
             ("shed_policy", json::s(&self.shed_policy)),
             ("degrade_strategy", json::s(&self.degrade_strategy)),
             ("epc_overcommit", json::num(self.epc_overcommit)),
+            ("kernel_threads", json::num(self.kernel_threads as f64)),
+            ("tail_precision", json::s(&self.tail_precision)),
         ])
     }
 
@@ -513,7 +542,7 @@ pub struct FlagDoc {
 /// The suffix keys [`ModelSpec::parse`] accepts after a model spec
 /// (`model:key=value`).  Kept as data so the CONFIG.md drift test can
 /// assert each is documented.
-pub const SPEC_SUFFIX_KEYS: [&str; 4] = ["slo", "rps", "inflight", "shed"];
+pub const SPEC_SUFFIX_KEYS: [&str; 5] = ["slo", "rps", "inflight", "shed", "tail"];
 
 impl Config {
     /// Every CLI flag and config-file field, grouped for help output.
@@ -543,6 +572,8 @@ impl Config {
             d("common", "--factor-pool-depth", "<n>", "factor_pool_depth", "staged epochs/layer (0 = inline)"),
             d("common", "--factor-prefill-workers", "<n>", "factor_prefill_workers", "prefill threads"),
             d("common", "--lazy-dense-bytes", "<n>", "lazy_dense_bytes", "lazy-load dense bound"),
+            d("common", "--kernel-threads", "<n>", "kernel_threads", "kernel thread cap (0 = cores)"),
+            d("common", "--tail-precision", "<p>", "tail_precision", "tier-2 tails: f32 | int8"),
             // serve
             d("serve", "--requests", "<n>", "", "total synthetic workload requests [64]"),
             d("serve", "--rate", "<rps>", "", "Poisson open-loop arrival rate [50]"),
@@ -597,6 +628,7 @@ impl Config {
 /// - `rps` — admission token-bucket rate limit (requests/s).
 /// - `inflight` — admission in-flight concurrency quota.
 /// - `shed` — admission queue-depth shed threshold.
+/// - `tail` — tier-2 tail precision: `f32` or `int8`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
     pub model: String,
@@ -612,6 +644,8 @@ pub struct ModelSpec {
     pub inflight: Option<usize>,
     /// Admission: tier-1 queue depth at which requests are shed.
     pub shed_depth: Option<usize>,
+    /// Tier-2 tail precision override (`f32` | `int8`).
+    pub tail: Option<String>,
 }
 
 impl ModelSpec {
@@ -626,6 +660,7 @@ impl ModelSpec {
         let mut rps = None;
         let mut inflight = None;
         let mut shed_depth = None;
+        let mut tail = None;
         for part in suffixes {
             let (key, value) = part
                 .trim()
@@ -674,6 +709,13 @@ impl ModelSpec {
                     );
                     shed_depth = Some(n);
                 }
+                "tail" => {
+                    anyhow::ensure!(
+                        value == "f32" || value == "int8",
+                        "model spec `{spec}`: tail must be `f32` or `int8`, got `{value}`"
+                    );
+                    tail = Some(value.to_string());
+                }
                 other => anyhow::bail!("model spec `{spec}`: unknown option `{other}`"),
             }
         }
@@ -720,6 +762,7 @@ impl ModelSpec {
             rps,
             inflight,
             shed_depth,
+            tail,
         })
     }
 
@@ -757,6 +800,9 @@ impl ModelSpec {
         }
         if let Some(shed) = self.shed_depth {
             c.shed_depth = shed;
+        }
+        if let Some(tail) = &self.tail {
+            c.tail_precision = tail.clone();
         }
         c
     }
@@ -1095,9 +1141,10 @@ mod tests {
 
     #[test]
     fn spec_suffix_keys_match_the_parser() {
-        // each declared key parses…
+        // each declared key parses with a key-appropriate sample value…
         for key in SPEC_SUFFIX_KEYS {
-            let spec = format!("sim8:{key}=5");
+            let value = if key == "tail" { "int8" } else { "5" };
+            let spec = format!("sim8:{key}={value}");
             assert!(
                 ModelSpec::parse(&spec).is_ok(),
                 "declared suffix `{key}` must parse"
@@ -1105,6 +1152,57 @@ mod tests {
         }
         // …and undeclared keys are rejected, so the const stays honest
         assert!(ModelSpec::parse("sim8:nope=5").is_err());
+    }
+
+    #[test]
+    fn model_spec_parses_tail_suffix() {
+        let s = ModelSpec::parse("sim8=origami/6:tail=int8").unwrap();
+        assert_eq!(s.tail.as_deref(), Some("int8"));
+        let s = ModelSpec::parse("sim8:tail=f32").unwrap();
+        assert_eq!(s.tail.as_deref(), Some("f32"));
+        assert!(ModelSpec::parse("sim8:tail=fp16").is_err());
+        assert!(ModelSpec::parse("sim8:tail=").is_err());
+
+        // flows into the per-model config; absent inherits the base
+        let base = Config::default();
+        let cfg = ModelSpec::parse("sim8:tail=int8").unwrap().apply(&base);
+        assert_eq!(cfg.tail_precision, "int8");
+        let cfg = ModelSpec::parse("sim8").unwrap().apply(&base);
+        assert_eq!(cfg.tail_precision, base.tail_precision);
+    }
+
+    #[test]
+    fn kernel_and_tail_args_parse_and_roundtrip() {
+        assert_eq!(Config::default().kernel_threads, 0, "0 = auto");
+        assert_eq!(Config::default().tail_precision, "f32");
+        let args = Args::parse(
+            "serve --kernel-threads 6 --tail-precision int8"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = Config::from_args(&args).unwrap();
+        assert_eq!(c.kernel_threads, 6);
+        assert_eq!(c.tail_precision, "int8");
+        // round-trips through JSON
+        let v = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&v);
+        assert_eq!(c2.kernel_threads, 6);
+        assert_eq!(c2.tail_precision, "int8");
+        // bad precision rejected on both config paths
+        let bad = Args::parse(
+            "serve --tail-precision fp16"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        let dir = std::env::temp_dir().join("origami-test-tail-config");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, r#"{"tail_precision": "FP16"}"#).unwrap();
+        assert!(Config::from_file(&path).is_err());
     }
 
     #[test]

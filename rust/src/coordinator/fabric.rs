@@ -70,6 +70,7 @@ use super::api::reply_error;
 use super::scheduler::{Tier2Finisher, Tier2Task};
 use super::telemetry::{Stage, TelemetryHub};
 use crate::runtime::Device;
+use crate::util::arena::{ArenaStats, TensorArena};
 
 /// Weighted-fair virtual-clock bookkeeping, extracted so the live
 /// fabric queue, the fairness property tests (`harness/prop.rs`) and
@@ -502,6 +503,11 @@ struct FabricShared {
     cost_est: Mutex<HashMap<String, f64>>,
     /// Latency telemetry sink (None outside a deployment).
     telemetry: Option<Arc<TelemetryHub>>,
+    /// Feature-map buffer pool: submit-side tail splitting draws chunk
+    /// buffers from it, lanes return spent feature maps after each tail
+    /// — steady-state chunking allocates nothing.  Off the lane compute
+    /// path, so one mutex-guarded pool serves the whole fabric.
+    arena: Mutex<TensorArena>,
 }
 
 impl FabricShared {
@@ -555,7 +561,10 @@ impl FabricHandle {
         if chunk == 0 {
             return self.shared.queue.push(task);
         }
-        let parts = task.split(chunk);
+        let parts = {
+            let mut arena = self.shared.arena.lock().unwrap();
+            task.split_into(chunk, &mut arena)
+        };
         let total = parts.len();
         let mut parts = parts.into_iter();
         while let Some(part) = parts.next() {
@@ -648,6 +657,7 @@ impl LaneFabric {
             split: opts.split.clone(),
             cost_est: Mutex::new(HashMap::new()),
             telemetry,
+            arena: Mutex::new(TensorArena::new()),
         });
         let fabric = Self {
             shared,
@@ -706,6 +716,12 @@ impl LaneFabric {
         FabricHandle {
             shared: self.shared.clone(),
         }
+    }
+
+    /// Cumulative feature-map arena counters: how many chunk buffers the
+    /// split path took, how many were pool hits vs fresh allocations.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.shared.arena.lock().unwrap().stats()
     }
 
     /// Current (desired) lane count.
@@ -880,6 +896,10 @@ fn lane_main(shared: Arc<FabricShared>, lane: usize, device: Device) {
         match finishers.get(&model).and_then(|f| f.as_ref()) {
             Some(fin) => {
                 let out = fin.finish(task);
+                // recycle the spent feature map into the fabric pool
+                if let Some(spent) = out.spent_features {
+                    shared.arena.lock().unwrap().give(spent);
+                }
                 if let Some(tel) = &tenant_tel {
                     tel.record(Stage::Tier2, out.tier2_sim_ms);
                     for &lat in &out.latencies_ms {

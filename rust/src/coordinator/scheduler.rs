@@ -23,6 +23,7 @@ use super::api::{BatchRecord, InferRequest, InferResponse, LedgerSummary};
 use crate::enclave::cost::Ledger;
 use crate::runtime::{Device, StageExecutor};
 use crate::strategies::{Strategy, Tier1Output};
+use crate::util::arena::{Arena, ArenaStats, TensorArena};
 
 /// Executes batches against one strategy instance.
 pub struct BatchScheduler {
@@ -31,6 +32,9 @@ pub struct BatchScheduler {
     pub sample_bytes: usize,
     /// Artifact batch sizes available, ascending (e.g. [1, 8]).
     pub artifact_batches: Vec<usize>,
+    /// Recycles the concatenated-ciphertext batch buffer: steady-state
+    /// batch assembly reuses one size-classed allocation per shape.
+    cipher_arena: Arena<u8>,
 }
 
 impl BatchScheduler {
@@ -45,7 +49,13 @@ impl BatchScheduler {
             strategy,
             sample_bytes,
             artifact_batches,
+            cipher_arena: Arena::new(),
         }
+    }
+
+    /// Cumulative cipher-batch arena counters (allocation telemetry).
+    pub fn cipher_arena_stats(&self) -> ArenaStats {
+        self.cipher_arena.stats()
     }
 
     pub fn strategy_name(&self) -> String {
@@ -98,15 +108,14 @@ impl BatchScheduler {
         // Concatenate ciphertexts (each independently encrypted under
         // its own session keystream); pad the batch tail with zeros.
         let sessions: Vec<u64> = requests.iter().map(|r| r.session).collect();
-        let mut cipher = Vec::with_capacity(exec_batch * self.sample_bytes);
+        let mut cipher = self.cipher_arena.take_empty(exec_batch * self.sample_bytes);
         for r in &requests {
-            anyhow::ensure!(
-                r.ciphertext.len() == self.sample_bytes,
-                "request {}: ciphertext {} bytes, expected {}",
-                r.id,
-                r.ciphertext.len(),
-                self.sample_bytes
-            );
+            if r.ciphertext.len() != self.sample_bytes {
+                let (got, want) = (r.ciphertext.len(), self.sample_bytes);
+                let id = r.id;
+                self.cipher_arena.give(cipher);
+                anyhow::bail!("request {id}: ciphertext {got} bytes, expected {want}");
+            }
             cipher.extend_from_slice(&r.ciphertext);
         }
         cipher.resize(exec_batch * self.sample_bytes, 0);
@@ -116,6 +125,7 @@ impl BatchScheduler {
         let result = self
             .strategy
             .infer(&cipher, exec_batch, &sessions, &mut ledger);
+        self.cipher_arena.give(cipher);
         let exec_wall_ms = t.elapsed().as_secs_f64() * 1e3;
         let sim_ms = ledger.grand_total_ms();
 
@@ -187,25 +197,25 @@ impl BatchScheduler {
             .map(|r| r.model.clone())
             .unwrap_or_default();
         let sessions: Vec<u64> = requests.iter().map(|r| r.session).collect();
-        let mut cipher = Vec::with_capacity(exec_batch * self.sample_bytes);
+        let mut cipher = self.cipher_arena.take_empty(exec_batch * self.sample_bytes);
         for r in &requests {
-            anyhow::ensure!(
-                r.ciphertext.len() == self.sample_bytes,
-                "request {}: ciphertext {} bytes, expected {}",
-                r.id,
-                r.ciphertext.len(),
-                self.sample_bytes
-            );
+            if r.ciphertext.len() != self.sample_bytes {
+                let (got, want) = (r.ciphertext.len(), self.sample_bytes);
+                let id = r.id;
+                self.cipher_arena.give(cipher);
+                anyhow::bail!("request {id}: ciphertext {got} bytes, expected {want}");
+            }
             cipher.extend_from_slice(&r.ciphertext);
         }
         cipher.resize(exec_batch * self.sample_bytes, 0);
 
         let mut ledger = Ledger::new();
         let started = Instant::now();
-        let task = match self
+        let tier1 = self
             .strategy
-            .infer_tier1(&cipher, exec_batch, &sessions, &mut ledger)
-        {
+            .infer_tier1(&cipher, exec_batch, &sessions, &mut ledger);
+        self.cipher_arena.give(cipher);
+        let task = match tier1 {
             Ok(Tier1Output::Final(probs)) => Tier2Task {
                 model,
                 requests,
@@ -301,6 +311,15 @@ impl Tier2Task {
     /// first chunk only, so merged records never double-count enclave
     /// time.
     pub fn split(self, max_requests: usize) -> Vec<Tier2Task> {
+        // pass-through arena: identical allocation behaviour to the
+        // pre-arena code for callers without a buffer pool
+        self.split_into(max_requests, &mut TensorArena::with_retention(0))
+    }
+
+    /// [`Tier2Task::split`] drawing chunk feature buffers from `arena`
+    /// and recycling the parent feature map into it — the fabric's
+    /// steady-state submit path allocates nothing for chunked tails.
+    pub fn split_into(self, max_requests: usize, arena: &mut TensorArena) -> Vec<Tier2Task> {
         let n = self.requests.len();
         if max_requests == 0 || n <= max_requests || self.stage.is_none() || self.error.is_some()
         {
@@ -342,7 +361,8 @@ impl Tier2Task {
             let rest = requests.split_off(take);
             let chunk = std::mem::replace(&mut requests, rest);
             let sub_exec = pick_exported_batch(&artifact_batches, take);
-            let mut feats = features[offset * per..(offset + take) * per].to_vec();
+            let mut feats = arena.take_empty(sub_exec * per);
+            feats.extend_from_slice(&features[offset * per..(offset + take) * per]);
             feats.resize(sub_exec * per, 0.0);
             offset += take;
             out.push(Tier2Task {
@@ -363,6 +383,8 @@ impl Tier2Task {
                 artifact_batches: artifact_batches.clone(),
             });
         }
+        // the parent feature map is fully copied out — recycle it
+        arena.give(features);
         out
     }
 }
@@ -434,6 +456,7 @@ impl Tier2Finisher {
         } = task;
         let n = requests.len();
         let mut tier2_ms = 0.0;
+        let mut spent_features = None;
         let outcome: Result<Vec<f32>> = match (error, stage) {
             (Some(msg), _) => Err(anyhow::anyhow!(msg)),
             (None, None) => Ok(features),
@@ -445,6 +468,9 @@ impl Tier2Finisher {
                     .map(|out| out.data);
                 tier2_ms = t2.grand_total_ms();
                 total.merge(&t2);
+                // tail ran: the input feature map is spent — hand it back
+                // so the caller can recycle it into its arena
+                spent_features = Some(features);
                 r
             }
         };
@@ -494,6 +520,7 @@ impl Tier2Finisher {
             tier2_sim_ms: tier2_ms,
             ok,
             latencies_ms,
+            spent_features,
         }
     }
 }
@@ -508,6 +535,9 @@ pub struct FinishOutcome {
     /// Client-visible latency of each request in the batch at reply
     /// time (wall ms) — the samples SLO telemetry records.
     pub latencies_ms: Vec<f64>,
+    /// The task's feature-map buffer when a tail stage consumed it —
+    /// Some only on that path; callers `give` it back to their arena.
+    pub spent_features: Option<Vec<f32>>,
 }
 
 #[cfg(test)]
@@ -837,6 +867,84 @@ mod tests {
             assert_eq!(p.home_worker, 4);
             assert_eq!(p.queue_ms, 1.5);
         }
+    }
+
+    fn two_wide_task(reqs: Vec<InferRequest>) -> Tier2Task {
+        let n = reqs.len();
+        Tier2Task {
+            model: "m".into(),
+            requests: reqs,
+            exec_batch: n,
+            stage: Some("tail_p02".into()),
+            features: (0..2 * n).map(|v| v as f32).collect(),
+            ledger: Ledger::new(),
+            queue_ms: 0.0,
+            started: Instant::now(),
+            home_worker: 0,
+            error: None,
+            artifact_batches: vec![1, 2, 4, 8],
+        }
+    }
+
+    #[test]
+    fn split_into_recycles_buffers_across_batches() {
+        let mut arena = TensorArena::new();
+        let mk = || {
+            let mut reqs = Vec::new();
+            for i in 0..8 {
+                // replies are never sent here — tasks are only split
+                let (r, _c) = req(i);
+                reqs.push(r);
+            }
+            two_wide_task(reqs)
+        };
+        // warmup: split once and recycle the chunks, as the fabric does
+        // after each tail finishes
+        let parts = mk().split_into(3, &mut arena);
+        assert_eq!(parts.len(), 3);
+        for p in parts {
+            arena.give(p.features);
+        }
+        // parent feature map + 3 chunk buffers all came back
+        assert!(arena.pooled() >= 4, "pooled {}", arena.pooled());
+        let fresh_after_warmup = arena.stats().fresh;
+        // a second identical batch draws every chunk from the pool
+        let parts2 = mk().split_into(3, &mut arena);
+        let s = arena.stats();
+        assert!(s.hits >= 3, "chunks served from the pool (hits {})", s.hits);
+        assert_eq!(
+            s.fresh, fresh_after_warmup,
+            "steady-state splitting allocates nothing"
+        );
+        // chunk contents are unchanged by pooling
+        assert_eq!(&parts2[0].features[..6], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(&parts2[0].features[6..8], &[0.0, 0.0], "padding re-zeroed");
+    }
+
+    #[test]
+    fn cipher_batch_buffer_is_reused_across_executions() {
+        let mut s = sched(false);
+        for round in 0..4 {
+            let (r, c) = req(round);
+            s.execute(vec![r]).unwrap();
+            assert!(c.recv().unwrap().error.is_none());
+        }
+        let stats = s.cipher_arena_stats();
+        assert_eq!(stats.takes, 4);
+        assert_eq!(stats.fresh, 1, "one allocation serves every batch");
+        assert_eq!(stats.hits, 3);
+    }
+
+    #[test]
+    fn finish_returns_spent_features_only_when_a_tail_ran() {
+        let fin = finisher();
+        // Final task (no stage): features ARE the result — never spent
+        let mut s = sched(false);
+        let (r1, c1) = req(1);
+        let tasks = s.execute_tier1(vec![r1], 0).unwrap();
+        let out = fin.finish(tasks.into_iter().next().unwrap());
+        assert!(out.spent_features.is_none());
+        assert!(c1.recv().unwrap().error.is_none());
     }
 
     #[test]

@@ -185,6 +185,54 @@ impl Bench {
     }
 }
 
+/// One kernel throughput measurement destined for `BENCH_kernels.json`
+/// (the artifact CI's bench leg uploads): which kernel, which variant
+/// (naive / blocked / simd / int8), at how many threads, and the
+/// achieved throughput in Gmadds (10^9 multiply-adds per second).
+#[derive(Debug, Clone)]
+pub struct KernelRow {
+    pub kernel: String,
+    pub variant: String,
+    pub threads: usize,
+    pub gmadds: f64,
+}
+
+/// Merge kernel rows into `bench_results/kernels.json`.
+///
+/// Read-modify-write: `perf_hotpaths` and `fig20_kernel_speed` both
+/// report into the one file, so each caller's rows *replace* its prior
+/// rows (matched on kernel+variant+threads) and everything else is kept.
+pub fn append_kernel_rows(rows: &[KernelRow]) -> anyhow::Result<PathBuf> {
+    let path = PathBuf::from("bench_results").join("kernels.json");
+    let mut kept: Vec<Value> = Vec::new();
+    if let Ok(doc) = json::from_file(&path) {
+        if let Some(existing) = doc.get("rows").and_then(|r| r.as_arr()) {
+            let replaced = |v: &Value| -> bool {
+                rows.iter().any(|r| {
+                    v.get("kernel").and_then(Value::as_str) == Some(&r.kernel)
+                        && v.get("variant").and_then(Value::as_str) == Some(&r.variant)
+                        && v.get("threads").and_then(Value::as_usize) == Some(r.threads)
+                })
+            };
+            kept.extend(existing.iter().filter(|v| !replaced(v)).cloned());
+        }
+    }
+    for r in rows {
+        kept.push(json::obj(vec![
+            ("kernel", json::s(&r.kernel)),
+            ("variant", json::s(&r.variant)),
+            ("threads", json::num(r.threads as f64)),
+            ("gmadds", json::num(r.gmadds)),
+        ]));
+    }
+    let doc = json::obj(vec![
+        ("title", json::s("kernel throughput (Gmadds)")),
+        ("rows", Value::Arr(kept)),
+    ]);
+    json::to_file(&path, &doc)?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

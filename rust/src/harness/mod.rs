@@ -5,7 +5,7 @@ pub mod bench;
 pub mod prop;
 pub mod sim;
 
-pub use bench::{Bench, BenchResult};
+pub use bench::{append_kernel_rows, Bench, BenchResult, KernelRow};
 pub use prop::forall;
 pub use sim::{
     exact_percentile, replay, replay_epc_packing, sim_seed, EpcSimConfig, EpcSimResult,

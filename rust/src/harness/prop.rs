@@ -216,6 +216,174 @@ mod tests {
         );
     }
 
+    /// Int8 tail arithmetic honours its declared error bound: for random
+    /// shapes, magnitudes and (implied) scales, quantize → `dense_i8`
+    /// (widening i32 accumulation) → dequantize lands within
+    /// `i8_matmul_error_bound` of the exact real-valued product for
+    /// *every* output element.  This is the contract `:tail=int8`
+    /// advertises — the bound is computed from the same max-abs scales
+    /// the tail executor derives at run time.
+    #[test]
+    fn i8_matmul_roundtrip_stays_within_declared_error_bound() {
+        use crate::blinding::quant::{i8_matmul_error_bound, i8_scale, quantize_i8_slice};
+        use crate::runtime::reference::dense_i8;
+
+        struct Case {
+            n: usize,
+            d_in: usize,
+            d_out: usize,
+            x: Vec<f32>,
+            w: Vec<f32>,
+        }
+        impl std::fmt::Debug for Case {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(
+                    f,
+                    "Case(n={}, d_in={}, d_out={})",
+                    self.n, self.d_in, self.d_out
+                )
+            }
+        }
+
+        forall(
+            48,
+            2028,
+            |rng: &mut Rng, s: Size| {
+                let n = 1 + rng.below(3) as usize;
+                let d_in = 1 + rng.below(1 + (s.0 as u32 * 4).min(127)) as usize;
+                let d_out = 1 + rng.below(24) as usize;
+                // random per-tensor magnitudes → random symmetric scales
+                let amp_x = rng.range_f32(0.05, 8.0);
+                let amp_w = rng.range_f32(0.05, 2.0);
+                let x: Vec<f32> = (0..n * d_in)
+                    .map(|_| rng.range_f32(-amp_x, amp_x))
+                    .collect();
+                let w: Vec<f32> = (0..d_in * d_out)
+                    .map(|_| rng.range_f32(-amp_w, amp_w))
+                    .collect();
+                Case { n, d_in, d_out, x, w }
+            },
+            |c: &Case| {
+                let xs = i8_scale(&c.x);
+                let ws = i8_scale(&c.w);
+                let xq = quantize_i8_slice(&c.x, xs);
+                let wq = quantize_i8_slice(&c.w, ws);
+                let acc = dense_i8(&xq, c.n, c.d_in, c.d_out, &wq, 1);
+                for b in 0..c.n {
+                    let x_abs: f32 = c.x[b * c.d_in..(b + 1) * c.d_in]
+                        .iter()
+                        .map(|v| v.abs())
+                        .sum();
+                    for o in 0..c.d_out {
+                        let mut exact = 0f64;
+                        let mut w_abs = 0f32;
+                        for i in 0..c.d_in {
+                            let wv = c.w[i * c.d_out + o];
+                            exact += c.x[b * c.d_in + i] as f64 * wv as f64;
+                            w_abs += wv.abs();
+                        }
+                        let got = acc[b * c.d_out + o] as f32 * xs * ws;
+                        let bound = i8_matmul_error_bound(x_abs, w_abs, xs, ws, c.d_in);
+                        let err = (got as f64 - exact).abs() as f32;
+                        // small slack for the f32 rounding of `got` itself
+                        if err > bound + 1e-4 {
+                            return Err(format!(
+                                "b={b} o={o}: err {err} > bound {bound} \
+                                 (got {got}, exact {exact})"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// `:tail=int8` must not perturb the blinded tier-1 path: for random
+    /// inputs and blinding factors, the `lin_blind` residues an
+    /// int8-tail executor produces are bit-identical to the f32
+    /// executor's, the unblinded outputs still decode (centered residue
+    /// within the ±128 decode range), and only the open tail drifts —
+    /// and then only within the int8 tolerance the executor test pins.
+    #[test]
+    fn int8_tail_keeps_blinded_offload_bit_identical_and_decodable() {
+        use crate::blinding::blind::{blind_into, unblind_into};
+        use crate::blinding::quant::{decodable, MOD_P};
+        use crate::enclave::cost::{CostModel, Ledger};
+        use crate::runtime::reference::ReferenceBackend;
+        use crate::runtime::{Device, StageExecutor, TailPrecision};
+        use std::sync::Arc;
+
+        let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 7).unwrap());
+        let f32_ex = StageExecutor::reference(rb.clone(), CostModel::default());
+        let i8_ex = StageExecutor::reference(rb, CostModel::default())
+            .with_tail_precision(TailPrecision::Int8);
+        let n_in = 8 * 8 * 3; // sim8 layer-1 input
+
+        struct Case {
+            x: Vec<f32>,
+            r: Vec<u32>,
+        }
+        impl std::fmt::Debug for Case {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "Case(len={})", self.x.len())
+            }
+        }
+
+        forall(
+            16,
+            2029,
+            |rng: &mut Rng, _s: Size| {
+                let x: Vec<f32> = (0..n_in).map(|_| rng.range_f32(0.0, 1.0)).collect();
+                let r: Vec<u32> = (0..n_in).map(|_| rng.below(MOD_P)).collect();
+                Case { x, r }
+            },
+            |c: &Case| {
+                let mut ledger = Ledger::new();
+                // enclave side: fused quantize+blind
+                let mut blinded = vec![0f32; c.x.len()];
+                blind_into(&c.x, &c.r, &mut blinded);
+                // device side: blinded linear op on both executors
+                let ya = f32_ex
+                    .run("sim8", "layer01_lin_blind", 1, &[&blinded], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                let yb = i8_ex
+                    .run("sim8", "layer01_lin_blind", 1, &[&blinded], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                if ya.data != yb.data {
+                    return Err("int8 executor perturbed lin_blind residues".into());
+                }
+                // unblinding factors R = W_q·r mod P via the same stage
+                let rf: Vec<f32> = c.r.iter().map(|&v| v as f32).collect();
+                let ru = f32_ex
+                    .run("sim8", "layer01_lin_blind", 1, &[&rf], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                let mut out = vec![0f32; yb.data.len()];
+                unblind_into(&yb.data, &ru.data, &mut out);
+                if let Some(v) = out.iter().find(|v| !decodable(**v)) {
+                    return Err(format!("unblinded output {v} outside decode range"));
+                }
+                // the open tail is where int8 may (boundedly) drift
+                let pa = f32_ex
+                    .run("sim8", "full_open", 1, &[&c.x], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                let pb = i8_ex
+                    .run("sim8", "full_open", 1, &[&c.x], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                let max_diff = pa
+                    .data
+                    .iter()
+                    .zip(&pb.data)
+                    .map(|(p, q)| (p - q).abs())
+                    .fold(0f32, f32::max);
+                if max_diff > 0.05 {
+                    return Err(format!("int8 tail drifted {max_diff} (> 0.05)"));
+                }
+                Ok(())
+            },
+        );
+    }
+
     /// Weighted-fair service bound, with and without tail splitting:
     /// while every tenant stays backlogged, no tenant's served request
     /// share may drift below its weight-proportional entitlement minus

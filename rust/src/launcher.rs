@@ -21,7 +21,9 @@ use crate::coordinator::{
 use crate::enclave::cost::CostModel;
 use crate::model::{Manifest, Model};
 use crate::runtime::reference::is_sim_model;
-use crate::runtime::{ArtifactRegistry, Device, PjrtClient, ReferenceBackend, StageExecutor};
+use crate::runtime::{
+    ArtifactRegistry, Device, PjrtClient, ReferenceBackend, StageExecutor, TailPrecision,
+};
 use crate::strategies::{self, Strategy, StrategyCtx};
 
 /// The assembled, strategy-agnostic lower stack.
@@ -89,13 +91,26 @@ impl Stack {
 
 /// Build the executor + model for a config, on whichever backend the
 /// model name selects (`sim*` → reference interpreter, else artifacts).
+/// Also publishes the config's `--kernel-threads` cap to the shared
+/// kernel-thread governor, so every kernel the executor runs draws from
+/// the same process-wide budget.
 pub fn executor_for(config: &Config) -> Result<(Arc<StageExecutor>, Arc<Model>)> {
+    crate::util::threadpool::set_kernel_thread_cap(config.kernel_threads);
     if is_sim_model(&config.model) {
         let rb = Arc::new(ReferenceBackend::vgg_lite(&config.model, config.seed)?);
         let model = Arc::new(rb.model().clone());
-        let executor = Arc::new(StageExecutor::reference(rb, CostModel::default()));
-        Ok((executor, model))
+        let mut executor = StageExecutor::reference(rb, CostModel::default());
+        if config.tail_precision == "int8" {
+            executor = executor.with_tail_precision(TailPrecision::Int8);
+        }
+        Ok((Arc::new(executor), model))
     } else {
+        anyhow::ensure!(
+            config.tail_precision != "int8",
+            "model {}: `--tail-precision int8` needs a sim* model \
+             (no int8 HLO artifacts are exported)",
+            config.model
+        );
         let stack = Stack::load(config)?;
         let model = stack.model(&config.model)?;
         Ok((stack.executor, model))
@@ -301,6 +316,36 @@ pub fn worker_epc_bytes_for(model: &Model, config: &Config) -> Result<u64> {
 pub fn worker_epc_bytes_from_config(config: &Config) -> Result<u64> {
     let (_, model) = executor_for(config)?;
     worker_epc_bytes_for(&model, config)
+}
+
+/// Device-side resident footprint of a model's tier-2 tail weights —
+/// the parameters of every `OpenOffload` layer in the strategy's
+/// partition plan (every layer when the strategy runs fully open).
+/// These live *outside* the enclave, so they never enter the EPC
+/// ledger, but they are exactly the bytes the `:tail=int8` opt-in
+/// shrinks: int8 weights are a quarter of the f32 footprint (biases
+/// stay f32 and are counted at full width).
+pub fn tail_resident_bytes_for(model: &Model, config: &Config) -> Result<u64> {
+    use crate::model::partition::Placement;
+    let plan = strategies::partition_plan_for(model, &config.strategy, config.partition)?;
+    let mut weights = 0u64;
+    let mut biases = 0u64;
+    for l in &model.layers {
+        let open = match &plan {
+            Some(p) => p.placement(l.index) == Placement::OpenOffload,
+            None => true,
+        };
+        if open {
+            let bias_bytes = 4 * l.bias.len() as u64;
+            weights += l.params_bytes.saturating_sub(bias_bytes);
+            biases += bias_bytes;
+        }
+    }
+    Ok(if config.tail_precision == "int8" {
+        weights / 4 + biases
+    } else {
+        weights + biases
+    })
 }
 
 /// Keyspace stride between tenants' blinding domains: tenant *t*'s pool
@@ -603,6 +648,56 @@ mod tests {
             worker_epc_bytes_for(&model, &split).unwrap(),
             worker_epc_bytes_for(&model, &split_inline).unwrap()
         );
+    }
+
+    #[test]
+    fn int8_tails_shrink_the_device_resident_footprint() {
+        use crate::model::partition::Placement;
+        let base = Config {
+            model: "sim8".into(),
+            strategy: "origami/6".into(),
+            ..Config::default()
+        };
+        let (_, model) = executor_for(&base).unwrap();
+        let f32_bytes = tail_resident_bytes_for(&model, &base).unwrap();
+        let mut quant = base.clone();
+        quant.tail_precision = "int8".into();
+        let i8_bytes = tail_resident_bytes_for(&model, &quant).unwrap();
+
+        // recompute the exact expectation from the plan: int8 quarters
+        // the weight bytes of every OpenOffload layer, biases stay f32
+        let plan = strategies::partition_plan_for(&model, &base.strategy, base.partition)
+            .unwrap()
+            .unwrap();
+        let (mut weights, mut biases) = (0u64, 0u64);
+        for l in &model.layers {
+            if plan.placement(l.index) == Placement::OpenOffload {
+                let bias = 4 * l.bias.len() as u64;
+                weights += l.params_bytes - bias;
+                biases += bias;
+            }
+        }
+        assert!(weights > 0, "origami/6 offloads at least one tail layer");
+        assert_eq!(f32_bytes, weights + biases);
+        assert_eq!(i8_bytes, weights / 4 + biases);
+        assert!(i8_bytes < f32_bytes);
+
+        // the enclave-side EPC charge is untouched: tails live off-EPC
+        assert_eq!(
+            worker_epc_bytes_for(&model, &base).unwrap(),
+            worker_epc_bytes_for(&model, &quant).unwrap()
+        );
+
+        // fully-open strategies count every layer's parameters
+        let mut open = base.clone();
+        open.strategy = "open".into();
+        let all = tail_resident_bytes_for(&model, &open).unwrap();
+        assert!(all > f32_bytes);
+
+        // int8 tails are sim-only: the artifact path is rejected early
+        let mut arti = quant.clone();
+        arti.model = "vgg16-32".into();
+        assert!(executor_for(&arti).is_err());
     }
 
     #[test]

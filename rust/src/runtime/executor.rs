@@ -68,9 +68,24 @@ pub enum StageBackend {
     Reference(Arc<ReferenceBackend>),
 }
 
+/// Numeric precision of tier-2 tail stages (`tail_pNN` / `full_open`).
+/// Head stages (`lin_open` / `lin_blind`) always run in the fixed-point
+/// f32 / mod-2^24 domain regardless — the blinded arithmetic must stay
+/// bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TailPrecision {
+    /// Full-precision float tails (the default).
+    #[default]
+    F32,
+    /// Symmetric int8 weights/activations with i32 accumulation,
+    /// selected per model via the `:tail=int8` spec suffix.
+    Int8,
+}
+
 /// Executes stages through a backend on a given device profile.
 pub struct StageExecutor {
     backend: StageBackend,
+    tail_precision: TailPrecision,
     pub cost: CostModel,
 }
 
@@ -79,6 +94,7 @@ impl StageExecutor {
     pub fn new(registry: Arc<ArtifactRegistry>, cost: CostModel) -> Self {
         Self {
             backend: StageBackend::Pjrt(registry),
+            tail_precision: TailPrecision::F32,
             cost,
         }
     }
@@ -87,8 +103,20 @@ impl StageExecutor {
     pub fn reference(backend: Arc<ReferenceBackend>, cost: CostModel) -> Self {
         Self {
             backend: StageBackend::Reference(backend),
+            tail_precision: TailPrecision::F32,
             cost,
         }
+    }
+
+    /// Select the tail-stage precision (builder style).
+    pub fn with_tail_precision(mut self, precision: TailPrecision) -> Self {
+        self.tail_precision = precision;
+        self
+    }
+
+    /// The configured tail-stage precision.
+    pub fn tail_precision(&self) -> TailPrecision {
+        self.tail_precision
     }
 
     /// Pre-compile/warm a set of stages (setup phase). No-op for the
@@ -144,9 +172,16 @@ impl StageExecutor {
             );
         }
 
+        let int8_tail = self.tail_precision == TailPrecision::Int8
+            && (stage.starts_with("tail_p") || stage == "full_open");
         let t = Timer::start();
         let data = match &self.backend {
             StageBackend::Pjrt(reg) => {
+                anyhow::ensure!(
+                    !int8_tail,
+                    "stage {stage}: int8 tails need the reference backend \
+                     (no int8 HLO artifacts are exported)"
+                );
                 let exe = reg.get(model, stage, batch)?;
                 let shaped: Vec<(&[f32], &[usize])> = inputs
                     .iter()
@@ -154,6 +189,9 @@ impl StageExecutor {
                     .map(|(d, s)| (*d, s.as_slice()))
                     .collect();
                 reg.client().run_f32(&exe, &shaped)?
+            }
+            StageBackend::Reference(rb) if int8_tail => {
+                rb.execute_tail_int8(model, stage, batch, inputs)?
             }
             StageBackend::Reference(rb) => rb.execute(model, stage, batch, inputs)?,
         };
@@ -230,5 +268,43 @@ mod tests {
             .run("sim8", "full_open", 1, &[&x[..10]], Device::UntrustedCpu, &mut l)
             .is_err());
         assert!(ex.registry().is_none());
+    }
+
+    #[test]
+    fn int8_tail_precision_dispatches_on_tail_stages_only() {
+        use crate::runtime::reference::ReferenceBackend;
+        let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 7).unwrap());
+        let f32_ex = StageExecutor::reference(rb.clone(), CostModel::default());
+        let i8_ex = StageExecutor::reference(rb, CostModel::default())
+            .with_tail_precision(TailPrecision::Int8);
+        assert_eq!(f32_ex.tail_precision(), TailPrecision::F32);
+        assert_eq!(i8_ex.tail_precision(), TailPrecision::Int8);
+
+        let x: Vec<f32> = (0..8 * 8 * 3).map(|i| (i % 7) as f32 / 7.0).collect();
+        let mut l = Ledger::new();
+        let a = f32_ex
+            .run("sim8", "full_open", 1, &[&x], Device::UntrustedCpu, &mut l)
+            .unwrap();
+        let b = i8_ex
+            .run("sim8", "full_open", 1, &[&x], Device::UntrustedCpu, &mut l)
+            .unwrap();
+        assert_eq!(a.shape, b.shape);
+        let max_diff = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff <= 0.05, "int8 tail drifted {max_diff}");
+
+        // head stages are untouched: blinded residues stay bit-identical
+        let xq: Vec<f32> = (0..8 * 8 * 3).map(|i| ((i * 131) % 9973) as f32).collect();
+        let ya = f32_ex
+            .run("sim8", "layer01_lin_blind", 1, &[&xq], Device::UntrustedCpu, &mut l)
+            .unwrap();
+        let yb = i8_ex
+            .run("sim8", "layer01_lin_blind", 1, &[&xq], Device::UntrustedCpu, &mut l)
+            .unwrap();
+        assert_eq!(ya.data, yb.data, "lin_blind must not quantize");
     }
 }

@@ -23,5 +23,5 @@ pub mod reference;
 pub use artifact::ArtifactRegistry;
 pub use client::PjrtClient;
 pub use device::Device;
-pub use executor::{StageBackend, StageExecutor};
+pub use executor::{StageBackend, StageExecutor, TailPrecision};
 pub use reference::ReferenceBackend;

@@ -48,10 +48,28 @@ enum Params {
     None,
 }
 
+/// Per-layer symmetric int8 weights for the quantized tail path,
+/// derived from the quantized master copy: `w_scale = max|w| / 127`,
+/// `w8 = round(w / w_scale)` clamped to ±127.
+struct Int8Weights {
+    w8: Vec<i8>,
+    w_scale: f32,
+}
+
+impl Int8Weights {
+    fn from_wq(wq: &[i32]) -> Self {
+        let wf: Vec<f32> = wq.iter().map(|&q| q as f32 / 256.0).collect();
+        let w_scale = crate::blinding::quant::i8_scale(&wf);
+        let w8 = crate::blinding::quant::quantize_i8_slice(&wf, w_scale);
+        Self { w8, w_scale }
+    }
+}
+
 /// The reference stage interpreter for one synthetic model.
 pub struct ReferenceBackend {
     model: Model,
     params: Vec<Params>, // params[i] belongs to layer index i+1
+    params_i8: Vec<Option<Int8Weights>>, // int8 tail weights, same indexing
 }
 
 /// Parse a `sim*` model name: `sim` or `sim<image>` (e.g. `sim8`,
@@ -185,7 +203,16 @@ impl ReferenceBackend {
             partitions: vec![3, 4, 6],
             stages,
         };
-        Ok(Self { model, params })
+        let params_i8 = params
+            .iter()
+            .map(|p| match p {
+                Params::Conv { wq, .. } | Params::Dense { wq, .. } => {
+                    Some(Int8Weights::from_wq(wq))
+                }
+                Params::None => None,
+            })
+            .collect();
+        Ok(Self { model, params, params_i8 })
     }
 
     /// The synthesized model IR (layer metadata + stage catalog).
@@ -310,6 +337,91 @@ impl ReferenceBackend {
         }
         Ok(x)
     }
+
+    /// Execute a tail stage (`tail_pNN` / `full_open`) on the
+    /// int8-quantized path: every linear layer quantizes its
+    /// activations symmetrically (dynamic per-tensor scale), contracts
+    /// in i8×i8 with widening i32 accumulation, and dequantizes before
+    /// bias/ReLU.  `StageExecutor` selects this path when a model opts
+    /// in via the `:tail=int8` spec suffix; head stages (`lin_open`,
+    /// `lin_blind`) are untouched, so the blinded mod-2^24 arithmetic
+    /// stays bit-identical.
+    pub fn execute_tail_int8(
+        &self,
+        model: &str,
+        stage: &str,
+        batch: usize,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<f32>> {
+        self.check_model(model)?;
+        let x = *inputs
+            .first()
+            .ok_or_else(|| anyhow!("stage {stage}: no input"))?;
+        if let Some(p) = stage
+            .strip_prefix("tail_p")
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            return self.int8_walk(p + 1, batch, x.to_vec());
+        }
+        if stage == "full_open" {
+            return self.int8_walk(1, batch, x.to_vec());
+        }
+        bail!("int8 tail path: `{stage}` is not a tail stage")
+    }
+
+    /// Open execution of layers [from..=n] with int8 linear layers.
+    fn int8_walk(&self, from: usize, batch: usize, mut x: Vec<f32>) -> Result<Vec<f32>> {
+        use crate::blinding::quant::{i8_scale, quantize_i8_slice};
+        for idx in from..=self.model.num_layers() {
+            let layer = self.model.layer(idx)?.clone();
+            match layer.kind {
+                LayerKind::Conv | LayerKind::Dense => {
+                    let wi = self.params_i8[idx - 1]
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("layer {idx} has no int8 weights"))?;
+                    let x_scale = i8_scale(&x);
+                    let x8 = quantize_i8_slice(&x, x_scale);
+                    let acc = match &self.params[idx - 1] {
+                        Params::Conv { cin, cout, .. } => {
+                            let (h, w) = (layer.in_shape[0], layer.in_shape[1]);
+                            let threads = kernel_threads(batch * h * w * cout * 9 * cin);
+                            conv2d_i8(&x8, batch, h, w, *cin, *cout, &wi.w8, threads)
+                        }
+                        Params::Dense { d_in, d_out, .. } => {
+                            let threads = kernel_threads(batch * d_in * d_out);
+                            dense_i8(&x8, batch, *d_in, *d_out, &wi.w8, threads)
+                        }
+                        Params::None => bail!("layer {idx} has no linear part"),
+                    };
+                    let scale = x_scale * wi.w_scale;
+                    let mut y: Vec<f32> = acc.iter().map(|&a| a as f32 * scale).collect();
+                    bias_add(&mut y, &layer.bias);
+                    if layer.has_relu {
+                        for v in y.iter_mut() {
+                            if *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                    x = y;
+                }
+                LayerKind::Pool => {
+                    let (h, w, c) = (
+                        layer.in_shape[0],
+                        layer.in_shape[1],
+                        layer.in_shape[2],
+                    );
+                    x = maxpool2x2(&x, batch, h, w, c);
+                }
+                LayerKind::Flatten => {}
+                LayerKind::Softmax => {
+                    let classes = *layer.out_shape.last().unwrap_or(&1);
+                    softmax(&mut x, classes);
+                }
+            }
+        }
+        Ok(x)
+    }
 }
 
 fn with_batch(batch: usize, shape: &[usize]) -> Vec<usize> {
@@ -389,31 +501,48 @@ fn softmax(x: &mut [f32], row: usize) {
 // ---------------------------------------------------------------------
 // Linear kernels.
 //
-// Each kernel ships in two forms: a `*_naive` reference (the textbook
+// Each kernel ships in three forms: a `*_naive` reference (the textbook
 // quadruple loop, kept public for the perf harness and the bitwise
-// agreement tests) and the default blocked/parallel entry point the
-// backend actually runs.  The fast paths (a) hoist the per-element
-// `wq as f32 / 256.0` requantization into a weight table built once per
-// call, and (b) split the output across `par_map` threads — by image
-// row for conv, by output element for dense.  Bit-exactness argument:
-// every output element still accumulates the *same* f32/u32 terms in
-// the *same* ky → kx → ic (conv) or ascending-i (dense) order, and
-// `par_map` preserves item order, so the blocked results are identical
-// down to the last bit (the property `blocked_kernels_match_naive`
-// pins).  Mod-2^24 kernels are order-insensitive anyway (wrapping adds
+// agreement tests), the cache-blocked/parallel `*_blocked` form (kept
+// public as the fig20 speedup baseline), and the default `*_simd` entry
+// point the backend actually runs.  All fast paths (a) hoist the
+// per-element `wq as f32 / 256.0` requantization into a weight table
+// built once per call, and (b) split the output across `par_map`
+// threads — by image row for conv, by output element (blocked) or
+// 8-element output block (simd) for dense.  The simd kernels add
+// 8-wide unrolled register lanes — `[f32; 8]` / `[u32; 8]` accumulator
+// blocks over the output-channel dimension that the autovectorizer
+// reliably lowers to SSE/AVX on stable Rust — so partial sums live in
+// registers instead of round-tripping through the output buffer per
+// tap, and the f32 dense reduction runs 8 independent chains instead
+// of one latency-bound dot product.  Bit-exactness argument: every
+// output element still accumulates the *same* f32/u32 terms in the
+// *same* ky → kx → ic (conv) or ascending-i (dense) order — lanes only
+// batch *different* output elements together — and `par_map` preserves
+// item order, so the blocked and simd results are both identical to
+// naive down to the last bit (the properties
+// `blocked_kernels_match_naive` and `simd_kernels_match_naive_bitwise`
+// pin).  Mod-2^24 kernels are order-insensitive anyway (wrapping adds
 // commute), but they keep the same reduction order for symmetry.
+//
+// The int8 kernels (`conv2d_i8`, `dense_i8`) are the quantized tail
+// variants: i8 activations × i8 weights with widening i32 accumulation
+// (|acc| ≤ 127·127·K < 2^31 for every sim shape), same lane structure.
+
+/// Number of unrolled accumulator lanes in the `*_simd` kernels.
+const LANES: usize = 8;
 
 /// Threads to use for a kernel of `madds` multiply-adds: stay serial
-/// below ~1M madds (thread spawn outweighs the work), else one thread
-/// per core, capped at 8 (the kernels saturate memory bandwidth first).
+/// below ~1M madds (thread spawn outweighs the work), else fan out to
+/// the process-wide `--kernel-threads` cap, clamped to 8 (the kernels
+/// saturate memory bandwidth first).  The shared
+/// [`crate::util::threadpool::KERNEL_GOVERNOR`] then meters actual
+/// spawns, so concurrent kernels never oversubscribe the host.
 fn kernel_threads(madds: usize) -> usize {
     if madds < (1 << 20) {
         return 1;
     }
-    std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(8)
+    crate::util::threadpool::kernel_thread_cap().min(8)
 }
 
 /// 3x3 same-padding NHWC convolution, float — naive reference.
@@ -469,10 +598,12 @@ pub fn conv2d_f32(
     wq: &[i32],
 ) -> Vec<f32> {
     let threads = kernel_threads(n * h * w * cout * 9 * cin);
-    conv2d_f32_blocked(x, n, h, w, cin, cout, wq, threads)
+    conv2d_f32_simd(x, n, h, w, cin, cout, wq, threads)
 }
 
-fn conv2d_f32_blocked(
+/// Cache-blocked/parallel float convolution — the pre-simd fast path,
+/// kept public as the fig20 speedup baseline.
+pub fn conv2d_f32_blocked(
     x: &[f32],
     n: usize,
     h: usize,
@@ -577,10 +708,12 @@ pub fn conv2d_mod(
     wq: &[i32],
 ) -> Vec<u32> {
     let threads = kernel_threads(n * h * w * cout * 9 * cin);
-    conv2d_mod_blocked(x, n, h, w, cin, cout, wq, threads)
+    conv2d_mod_simd(x, n, h, w, cin, cout, wq, threads)
 }
 
-fn conv2d_mod_blocked(
+/// Cache-blocked/parallel mod-2^24 convolution — the pre-simd fast
+/// path, kept public as the fig20 speedup baseline.
+pub fn conv2d_mod_blocked(
     x: &[u32],
     n: usize,
     h: usize,
@@ -650,10 +783,12 @@ pub fn dense_f32_naive(x: &[f32], n: usize, d_in: usize, d_out: usize, wq: &[i32
 /// ascending-i order, so the result is bit-identical to the naive loop.
 pub fn dense_f32(x: &[f32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<f32> {
     let threads = kernel_threads(n * d_in * d_out);
-    dense_f32_blocked(x, n, d_in, d_out, wq, threads)
+    dense_f32_simd(x, n, d_in, d_out, wq, threads)
 }
 
-fn dense_f32_blocked(
+/// Cache-blocked/parallel float dense layer — the pre-simd fast path,
+/// kept public as the fig20 speedup baseline.
+pub fn dense_f32_blocked(
     x: &[f32],
     n: usize,
     d_in: usize,
@@ -705,10 +840,12 @@ pub fn dense_mod_naive(x: &[u32], n: usize, d_in: usize, d_out: usize, wq: &[i32
 /// cache behavior).
 pub fn dense_mod(x: &[u32], n: usize, d_in: usize, d_out: usize, wq: &[i32]) -> Vec<u32> {
     let threads = kernel_threads(n * d_in * d_out);
-    dense_mod_blocked(x, n, d_in, d_out, wq, threads)
+    dense_mod_simd(x, n, d_in, d_out, wq, threads)
 }
 
-fn dense_mod_blocked(
+/// Cache-blocked/parallel mod-2^24 dense layer — the pre-simd fast
+/// path, kept public as the fig20 speedup baseline.
+pub fn dense_mod_blocked(
     x: &[u32],
     n: usize,
     d_in: usize,
@@ -733,6 +870,368 @@ fn dense_mod_blocked(
         }
         acc & MASK
     })
+}
+
+/// 3x3 same-padding NHWC convolution, float — 8-wide unrolled lanes
+/// over the output channels.  Per-element term order is the naive
+/// ky → kx → ic, so the result is bit-identical to [`conv2d_f32_naive`]
+/// (lanes batch *different* output elements, never reorder one
+/// element's sum).
+#[deny(clippy::needless_range_loop, clippy::large_stack_arrays)]
+pub fn conv2d_f32_simd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    wq: &[i32],
+    threads: usize,
+) -> Vec<f32> {
+    let wf: Vec<f32> = wq.iter().map(|&q| q as f32 / 256.0).collect();
+    let rows: Vec<usize> = (0..n * h).collect();
+    let rows = crate::util::threadpool::par_map(rows, threads, |row| {
+        let (b, y) = (row / h, row % h);
+        let mut out = vec![0f32; w * cout];
+        for xx in 0..w {
+            let dst = xx * cout;
+            let mut oc0 = 0;
+            while oc0 + LANES <= cout {
+                let mut acc = [0f32; LANES];
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                        let wbase = (ky * 3 + kx) * cin * cout + oc0;
+                        for ic in 0..cin {
+                            let xv = x[src + ic];
+                            let wlane = &wf[wbase + ic * cout..wbase + ic * cout + LANES];
+                            for (a, &wv) in acc.iter_mut().zip(wlane) {
+                                *a += xv * wv;
+                            }
+                        }
+                    }
+                }
+                out[dst + oc0..dst + oc0 + LANES].copy_from_slice(&acc);
+                oc0 += LANES;
+            }
+            for oc in oc0..cout {
+                let mut acc = 0f32;
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                        let wbase = (ky * 3 + kx) * cin * cout + oc;
+                        for ic in 0..cin {
+                            acc += x[src + ic] * wf[wbase + ic * cout];
+                        }
+                    }
+                }
+                out[dst + oc] = acc;
+            }
+        }
+        out
+    });
+    rows.concat()
+}
+
+/// Mod-2^24 convolution — 8-wide unrolled lanes, wrapping u32 lane
+/// arithmetic, bit-identical to [`conv2d_mod_naive`].
+#[deny(clippy::needless_range_loop, clippy::large_stack_arrays)]
+pub fn conv2d_mod_simd(
+    x: &[u32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    wq: &[i32],
+    threads: usize,
+) -> Vec<u32> {
+    let wu: Vec<u32> = wq.iter().map(|&q| q as u32).collect();
+    let rows: Vec<usize> = (0..n * h).collect();
+    let rows = crate::util::threadpool::par_map(rows, threads, |row| {
+        let (b, y) = (row / h, row % h);
+        let mut out = vec![0u32; w * cout];
+        for xx in 0..w {
+            let dst = xx * cout;
+            let mut oc0 = 0;
+            while oc0 + LANES <= cout {
+                let mut acc = [0u32; LANES];
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                        let wbase = (ky * 3 + kx) * cin * cout + oc0;
+                        for ic in 0..cin {
+                            let xv = x[src + ic];
+                            let wlane = &wu[wbase + ic * cout..wbase + ic * cout + LANES];
+                            for (a, &wv) in acc.iter_mut().zip(wlane) {
+                                *a = a.wrapping_add(wv.wrapping_mul(xv));
+                            }
+                        }
+                    }
+                }
+                for (o, a) in out[dst + oc0..dst + oc0 + LANES].iter_mut().zip(&acc) {
+                    *o = a & MASK;
+                }
+                oc0 += LANES;
+            }
+            for oc in oc0..cout {
+                let mut acc = 0u32;
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                        let wbase = (ky * 3 + kx) * cin * cout + oc;
+                        for ic in 0..cin {
+                            acc = acc.wrapping_add(wu[wbase + ic * cout].wrapping_mul(x[src + ic]));
+                        }
+                    }
+                }
+                out[dst + oc] = acc & MASK;
+            }
+        }
+        out
+    });
+    rows.concat()
+}
+
+/// Dense layer, float — 8-wide unrolled lanes.  Each `par_map` item is
+/// an 8-element output block: the row activation `x[i]` broadcasts
+/// against 8 contiguous row-major weights per step, so the reduction
+/// runs 8 independent chains (ascending-i per element, bit-identical
+/// to [`dense_f32_naive`]) with unit-stride weight loads and no
+/// transpose.
+#[deny(clippy::needless_range_loop, clippy::large_stack_arrays)]
+pub fn dense_f32_simd(
+    x: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    wq: &[i32],
+    threads: usize,
+) -> Vec<f32> {
+    let wf: Vec<f32> = wq.iter().map(|&q| q as f32 / 256.0).collect();
+    let nblocks = (d_out + LANES - 1) / LANES;
+    let cells: Vec<usize> = (0..n * nblocks).collect();
+    let blocks = crate::util::threadpool::par_map(cells, threads, |cell| {
+        let (b, blk) = (cell / nblocks, cell % nblocks);
+        let o0 = blk * LANES;
+        let xrow = &x[b * d_in..(b + 1) * d_in];
+        if o0 + LANES <= d_out {
+            let mut acc = [0f32; LANES];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wlane = &wf[i * d_out + o0..i * d_out + o0 + LANES];
+                for (a, &wv) in acc.iter_mut().zip(wlane) {
+                    *a += xv * wv;
+                }
+            }
+            acc.to_vec()
+        } else {
+            let lanes = d_out - o0;
+            let mut acc = vec![0f32; lanes];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wlane = &wf[i * d_out + o0..i * d_out + o0 + lanes];
+                for (a, &wv) in acc.iter_mut().zip(wlane) {
+                    *a += xv * wv;
+                }
+            }
+            acc
+        }
+    });
+    blocks.concat()
+}
+
+/// Mod-2^24 dense layer — 8-wide unrolled lanes, wrapping u32 lane
+/// arithmetic, bit-identical to [`dense_mod_naive`].
+#[deny(clippy::needless_range_loop, clippy::large_stack_arrays)]
+pub fn dense_mod_simd(
+    x: &[u32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    wq: &[i32],
+    threads: usize,
+) -> Vec<u32> {
+    let wu: Vec<u32> = wq.iter().map(|&q| q as u32).collect();
+    let nblocks = (d_out + LANES - 1) / LANES;
+    let cells: Vec<usize> = (0..n * nblocks).collect();
+    let blocks = crate::util::threadpool::par_map(cells, threads, |cell| {
+        let (b, blk) = (cell / nblocks, cell % nblocks);
+        let o0 = blk * LANES;
+        let xrow = &x[b * d_in..(b + 1) * d_in];
+        if o0 + LANES <= d_out {
+            let mut acc = [0u32; LANES];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wlane = &wu[i * d_out + o0..i * d_out + o0 + LANES];
+                for (a, &wv) in acc.iter_mut().zip(wlane) {
+                    *a = a.wrapping_add(wv.wrapping_mul(xv));
+                }
+            }
+            acc.iter().map(|&a| a & MASK).collect::<Vec<u32>>()
+        } else {
+            let lanes = d_out - o0;
+            let mut acc = vec![0u32; lanes];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wlane = &wu[i * d_out + o0..i * d_out + o0 + lanes];
+                for (a, &wv) in acc.iter_mut().zip(wlane) {
+                    *a = a.wrapping_add(wv.wrapping_mul(xv));
+                }
+            }
+            for a in acc.iter_mut() {
+                *a &= MASK;
+            }
+            acc
+        }
+    });
+    blocks.concat()
+}
+
+/// Quantized-tail 3x3 convolution: i8 activations × i8 weights with
+/// widening i32 accumulation, same lane structure as the simd kernels.
+/// Safe without saturation: |acc| ≤ 127·127·9·cin < 2^31 for every
+/// shape the sim catalog exports.
+#[deny(clippy::needless_range_loop, clippy::large_stack_arrays)]
+pub fn conv2d_i8(
+    x: &[i8],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    w8: &[i8],
+    threads: usize,
+) -> Vec<i32> {
+    let rows: Vec<usize> = (0..n * h).collect();
+    let rows = crate::util::threadpool::par_map(rows, threads, |row| {
+        let (b, y) = (row / h, row % h);
+        let mut out = vec![0i32; w * cout];
+        for xx in 0..w {
+            let dst = xx * cout;
+            let mut oc0 = 0;
+            while oc0 + LANES <= cout {
+                let mut acc = [0i32; LANES];
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                        let wbase = (ky * 3 + kx) * cin * cout + oc0;
+                        for ic in 0..cin {
+                            let xv = x[src + ic] as i32;
+                            let wlane = &w8[wbase + ic * cout..wbase + ic * cout + LANES];
+                            for (a, &wv) in acc.iter_mut().zip(wlane) {
+                                *a += xv * wv as i32;
+                            }
+                        }
+                    }
+                }
+                out[dst + oc0..dst + oc0 + LANES].copy_from_slice(&acc);
+                oc0 += LANES;
+            }
+            for oc in oc0..cout {
+                let mut acc = 0i32;
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                        let wbase = (ky * 3 + kx) * cin * cout + oc;
+                        for ic in 0..cin {
+                            acc += x[src + ic] as i32 * w8[wbase + ic * cout] as i32;
+                        }
+                    }
+                }
+                out[dst + oc] = acc;
+            }
+        }
+        out
+    });
+    rows.concat()
+}
+
+/// Quantized-tail dense layer: i8 × i8 with widening i32 accumulation,
+/// same block structure as [`dense_f32_simd`].  Safe without
+/// saturation: |acc| ≤ 127·127·d_in < 2^31 up to d_in ≈ 133k (the
+/// largest sim dense is 56·56·16 ≈ 50k).
+#[deny(clippy::needless_range_loop, clippy::large_stack_arrays)]
+pub fn dense_i8(
+    x: &[i8],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    w8: &[i8],
+    threads: usize,
+) -> Vec<i32> {
+    let nblocks = (d_out + LANES - 1) / LANES;
+    let cells: Vec<usize> = (0..n * nblocks).collect();
+    let blocks = crate::util::threadpool::par_map(cells, threads, |cell| {
+        let (b, blk) = (cell / nblocks, cell % nblocks);
+        let o0 = blk * LANES;
+        let xrow = &x[b * d_in..(b + 1) * d_in];
+        if o0 + LANES <= d_out {
+            let mut acc = [0i32; LANES];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wlane = &w8[i * d_out + o0..i * d_out + o0 + LANES];
+                for (a, &wv) in acc.iter_mut().zip(wlane) {
+                    *a += xv as i32 * wv as i32;
+                }
+            }
+            acc.to_vec()
+        } else {
+            let lanes = d_out - o0;
+            let mut acc = vec![0i32; lanes];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wlane = &w8[i * d_out + o0..i * d_out + o0 + lanes];
+                for (a, &wv) in acc.iter_mut().zip(wlane) {
+                    *a += xv as i32 * wv as i32;
+                }
+            }
+            acc
+        }
+    });
+    blocks.concat()
 }
 
 #[cfg(test)]
@@ -967,5 +1466,139 @@ mod tests {
         let b = backend();
         assert!(b.execute("sim8", "layer99_lin_open", 1, &[&[]]).is_err());
         assert!(b.execute("other", "full_open", 1, &[&[]]).is_err());
+    }
+
+    /// The 8-wide simd kernels must agree with the naive loops bitwise,
+    /// including at channel counts that exercise both the full 8-lane
+    /// blocks and the scalar remainder (11 = 8 + 3, 13 = 8 + 5), and
+    /// with the parallel split forced on.
+    #[test]
+    fn simd_kernels_match_naive_bitwise() {
+        let (n, h, w, cin, cout) = (2, 7, 5, 3, 11);
+        let wq: Vec<i32> = (0..9 * cin * cout).map(|i| ((i * 37) % 511) as i32 - 255).collect();
+        let xf: Vec<f32> = (0..n * h * w * cin)
+            .map(|i| ((i * 13) % 97) as f32 / 97.0 - 0.5)
+            .collect();
+        let xu: Vec<u32> = (0..n * h * w * cin)
+            .map(|i| ((i as u32).wrapping_mul(2_654_435_761)) & MASK)
+            .collect();
+        for threads in [1, 4] {
+            assert_eq!(
+                conv2d_f32_simd(&xf, n, h, w, cin, cout, &wq, threads),
+                conv2d_f32_naive(&xf, n, h, w, cin, cout, &wq),
+                "conv2d_f32_simd threads={threads}"
+            );
+            assert_eq!(
+                conv2d_mod_simd(&xu, n, h, w, cin, cout, &wq, threads),
+                conv2d_mod_naive(&xu, n, h, w, cin, cout, &wq),
+                "conv2d_mod_simd threads={threads}"
+            );
+        }
+
+        let (d_in, d_out) = (31, 13);
+        let wq: Vec<i32> = (0..d_in * d_out).map(|i| ((i * 23) % 511) as i32 - 255).collect();
+        let xf: Vec<f32> = (0..n * d_in).map(|i| ((i * 29) % 83) as f32 / 83.0 - 0.5).collect();
+        let xu: Vec<u32> = (0..n * d_in)
+            .map(|i| ((i as u32).wrapping_mul(2_246_822_519)) & MASK)
+            .collect();
+        for threads in [1, 4] {
+            assert_eq!(
+                dense_f32_simd(&xf, n, d_in, d_out, &wq, threads),
+                dense_f32_naive(&xf, n, d_in, d_out, &wq),
+                "dense_f32_simd threads={threads}"
+            );
+            assert_eq!(
+                dense_mod_simd(&xu, n, d_in, d_out, &wq, threads),
+                dense_mod_naive(&xu, n, d_in, d_out, &wq),
+                "dense_mod_simd threads={threads}"
+            );
+        }
+        // lane-exact shapes too (cout divisible by 8: no remainder path)
+        let wq8: Vec<i32> = (0..9 * cin * 8).map(|i| ((i * 41) % 511) as i32 - 255).collect();
+        assert_eq!(
+            conv2d_f32_simd(&xf[..n * h * w * cin], n, h, w, cin, 8, &wq8, 1),
+            conv2d_f32_naive(&xf[..n * h * w * cin], n, h, w, cin, 8, &wq8),
+        );
+    }
+
+    /// The i8 kernels against a direct widening reference contraction.
+    #[test]
+    fn i8_kernels_match_scalar_reference() {
+        let (n, d_in, d_out) = (3, 17, 11);
+        let x8: Vec<i8> = (0..n * d_in).map(|i| (((i * 67) % 255) as i32 - 127) as i8).collect();
+        let w8: Vec<i8> = (0..d_in * d_out).map(|i| (((i * 31) % 255) as i32 - 127) as i8).collect();
+        let mut want = vec![0i32; n * d_out];
+        for b in 0..n {
+            for i in 0..d_in {
+                for o in 0..d_out {
+                    want[b * d_out + o] += x8[b * d_in + i] as i32 * w8[i * d_out + o] as i32;
+                }
+            }
+        }
+        for threads in [1, 4] {
+            assert_eq!(dense_i8(&x8, n, d_in, d_out, &w8, threads), want);
+        }
+
+        let (h, w, cin, cout) = (4, 5, 2, 9);
+        let x8: Vec<i8> = (0..n * h * w * cin).map(|i| (((i * 29) % 255) as i32 - 127) as i8).collect();
+        let w8: Vec<i8> = (0..9 * cin * cout).map(|i| (((i * 53) % 255) as i32 - 127) as i8).collect();
+        let mut want = vec![0i32; n * h * w * cout];
+        for b in 0..n {
+            for y in 0..h {
+                for xx in 0..w {
+                    let dst = ((b * h + y) * w + xx) * cout;
+                    for ky in 0..3usize {
+                        let sy = y as isize + ky as isize - 1;
+                        if sy < 0 || sy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let sx = xx as isize + kx as isize - 1;
+                            if sx < 0 || sx >= w as isize {
+                                continue;
+                            }
+                            let src = ((b * h + sy as usize) * w + sx as usize) * cin;
+                            let wbase = (ky * 3 + kx) * cin * cout;
+                            for ic in 0..cin {
+                                for oc in 0..cout {
+                                    want[dst + oc] +=
+                                        x8[src + ic] as i32 * w8[wbase + ic * cout + oc] as i32;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for threads in [1, 4] {
+            assert_eq!(conv2d_i8(&x8, n, h, w, cin, cout, &w8, threads), want);
+        }
+    }
+
+    /// The int8 tail path tracks the f32 tail within the pinned
+    /// tolerance and leaves the head stages untouched.
+    #[test]
+    fn int8_tail_tracks_the_f32_tail() {
+        let b = backend();
+        let x: Vec<f32> = (0..2 * 8 * 8 * 3).map(|i| (i % 11) as f32 / 11.0).collect();
+        let head = b.open_walk_prefix(1, 6, 2, x);
+        let f32_tail = b.execute("sim8", "tail_p06", 2, &[&head]).unwrap();
+        let i8_tail = b.execute_tail_int8("sim8", "tail_p06", 2, &[&head]).unwrap();
+        assert_eq!(f32_tail.len(), i8_tail.len());
+        let max_diff = f32_tail
+            .iter()
+            .zip(&i8_tail)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(
+            max_diff <= 0.05,
+            "int8 tail drifted {max_diff} from the f32 tail (tolerance 0.05)"
+        );
+        for chunk in i8_tail.chunks(10) {
+            let sum: f32 = chunk.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "int8 softmax sums to 1: {sum}");
+        }
+        // non-tail stages are rejected: the blinded head never quantizes
+        assert!(b.execute_tail_int8("sim8", "layer01_lin_blind", 2, &[&head]).is_err());
     }
 }

@@ -13,6 +13,7 @@ use crate::enclave::epc::AllocId;
 use crate::enclave::Enclave;
 use crate::model::{LayerKind, Model};
 use crate::runtime::{Device, StageExecutor};
+use crate::util::arena::{ArenaStats, TensorArena};
 use crate::util::stats::Timer;
 
 /// Everything a strategy needs to run one model privately.
@@ -31,6 +32,10 @@ pub struct StrategyCtx {
     pub factor_pool: Option<FactorPool>,
     /// Param-blob residency handles (EPC accounting), by layer index.
     pub(crate) resident_params: Vec<(usize, AllocId)>,
+    /// Size-classed activation-buffer pool: blinded pads, unblinded
+    /// outputs and pooled feature maps are recycled through it so the
+    /// steady-state walk allocates nothing (fig20 arena leg).
+    pub(crate) arena: TensorArena,
     /// Enclave-internal blinding-epoch counter (one per inference).
     epoch_ctr: u64,
 }
@@ -50,6 +55,7 @@ impl StrategyCtx {
             unblind: None,
             factor_pool: None,
             resident_params: Vec::new(),
+            arena: TensorArena::new(),
             epoch_ctr: 0,
         })
     }
@@ -258,7 +264,7 @@ impl StrategyCtx {
                             None,
                         ),
                     };
-                    let mut blinded = vec![0f32; n];
+                    let mut blinded = self.arena.take(n);
                     blinding::quantize_blind(&x, &r, &mut blinded, ledger);
                     // 2. offload the linear op (OCALL out, OCALL back)
                     self.enclave_mut()?.round_trip(ledger);
@@ -270,6 +276,7 @@ impl StrategyCtx {
                         device,
                         ledger,
                     )?;
+                    self.arena.give(blinded);
                     // 3. this layer's unblinding factors: staged by the
                     //    prefill service, or fetched + unsealed inline
                     //    (sealed, outside the EPC) — then decode
@@ -283,21 +290,24 @@ impl StrategyCtx {
                             .fetch(idx, epoch, out.data.len())?,
                     };
                     ledger.add_measured(Cat::DataMove, t.elapsed().as_nanos() as u64);
-                    let mut y = vec![0f32; out.data.len()];
+                    let mut y = self.arena.take(out.data.len());
                     blinding::unblind_dequantize(&out.data, &ru, &mut y, ledger);
+                    self.arena.give(out.data);
                     // 4. bias + ReLU in the enclave
                     self.enclave_mut()?.bias_add(&mut y, &layer.bias, ledger);
                     if layer.has_relu {
                         self.enclave_mut()?.relu(&mut y, ledger);
                     }
                     Self::check_decodable(idx, &y)?;
-                    x = y;
+                    // recycle the spent input; the output becomes next x
+                    self.arena.give(std::mem::replace(&mut x, y));
                 }
                 LayerKind::Pool => {
                     let (h, w, c) = spatial(&layer.in_shape)?;
-                    x = self
+                    let pooled = self
                         .enclave_mut()?
                         .maxpool2x2(&x, batch, h, w, c, ledger);
+                    self.arena.give(std::mem::replace(&mut x, pooled));
                 }
                 LayerKind::Flatten => {}
                 LayerKind::Softmax => {
@@ -421,6 +431,11 @@ impl StrategyCtx {
     /// Cumulative factor-pool counters (None when no pool runs).
     pub fn factor_pool_stats(&self) -> Option<FactorPoolStats> {
         self.factor_pool.as_ref().map(|p| p.stats())
+    }
+
+    /// Cumulative feature-map arena counters.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
     }
 
     /// Decodability gate: a layer output outside the centered mod-2^24

@@ -117,6 +117,14 @@ pub trait Strategy {
     fn factor_pool_stats(&self) -> Option<crate::blinding::FactorPoolStats> {
         None
     }
+
+    /// Cumulative feature-map arena counters (takes/hits/fresh).  The
+    /// fig20 arena leg asserts `fresh` stays flat in steady state — zero
+    /// activation allocations once the size classes are warm.  Default:
+    /// strategies that do not thread an arena return None.
+    fn arena_stats(&self) -> Option<crate::util::arena::ArenaStats> {
+        None
+    }
 }
 
 /// Instantiate a strategy by config name.  [`partition_plan_for`] below

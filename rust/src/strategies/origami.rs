@@ -124,6 +124,9 @@ impl Strategy for Origami {
                     self.ctx.device,
                     ledger,
                 )?;
+                // The tail consumed the feature map; recycle it so the
+                // steady-state serve loop allocates nothing per request.
+                self.ctx.arena.give(features);
                 Ok(out.data)
             }
         }
@@ -161,6 +164,10 @@ impl Strategy for Origami {
 
     fn factor_pool_stats(&self) -> Option<crate::blinding::FactorPoolStats> {
         self.ctx.factor_pool_stats()
+    }
+
+    fn arena_stats(&self) -> Option<crate::util::arena::ArenaStats> {
+        Some(self.ctx.arena_stats())
     }
 
     fn power_cycle(&mut self) -> Result<f64> {

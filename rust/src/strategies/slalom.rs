@@ -100,6 +100,10 @@ impl Strategy for Slalom {
         self.ctx.factor_pool_stats()
     }
 
+    fn arena_stats(&self) -> Option<crate::util::arena::ArenaStats> {
+        Some(self.ctx.arena_stats())
+    }
+
     fn power_cycle(&mut self) -> Result<f64> {
         // Slalom keeps only biases + factor buffers in the enclave; the
         // sealed unblinding factors survive outside and only the enclave

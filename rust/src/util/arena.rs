@@ -1,0 +1,242 @@
+//! Size-classed buffer arena for hot-path tensor reuse.
+//!
+//! Steady-state inference allocates the same few activation shapes over
+//! and over: blinded residues and unblinded outputs per linear layer in
+//! `blinded_walk`, the cipher batch in the scheduler's batch assembly,
+//! and chunked feature maps in the fabric's tier-2 split path.  An
+//! [`Arena`] recycles those buffers through power-of-two size classes,
+//! so once the working set is warm every `take` is served from the free
+//! list — zero heap allocations on the request path (the property
+//! fig20's arena leg asserts via [`ArenaStats::fresh`]).
+//!
+//! Not a thread-safe type by design: each worker / lane owns its own
+//! arena (the same ownership structure the strategies already have), so
+//! there is no cross-thread synchronization on the hot path.
+
+/// Counters describing how an arena has served its callers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers handed out (`take` + `take_empty`).
+    pub takes: u64,
+    /// Takes served from the free list (no allocation).
+    pub hits: u64,
+    /// Takes that had to allocate a fresh buffer.
+    pub fresh: u64,
+    /// Buffers returned via `give` and retained for reuse.
+    pub returned: u64,
+}
+
+/// A size-classed stack of reusable buffers.  Class `k` holds buffers
+/// whose capacity is at least `1 << k`; `take(len)` pops from the
+/// smallest class that guarantees `capacity ≥ len`, so a recycled
+/// buffer never reallocates when resized to the requested length.
+pub struct Arena<T: Copy + Default> {
+    classes: Vec<Vec<Vec<T>>>,
+    /// Max buffers retained per class (0 = pass-through: nothing pooled).
+    retain: usize,
+    stats: ArenaStats,
+}
+
+/// Smallest `k` with `1 << k ≥ len` (0 for len ≤ 1).
+fn class_of(len: usize) -> usize {
+    if len <= 1 {
+        return 0;
+    }
+    (usize::BITS - (len - 1).leading_zeros()) as usize
+}
+
+impl<T: Copy + Default> Default for Arena<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy + Default> Arena<T> {
+    /// An arena with the default retention (8 buffers per size class —
+    /// enough for double-buffered walks plus split fan-out).
+    pub fn new() -> Self {
+        Self::with_retention(8)
+    }
+
+    /// An arena retaining at most `retain` buffers per size class.
+    /// `with_retention(0)` never pools — every take allocates, every
+    /// give drops — which turns arena-threaded code into plain
+    /// allocation without branching at the call sites.
+    pub fn with_retention(retain: usize) -> Self {
+        Self {
+            classes: Vec::new(),
+            retain,
+            stats: ArenaStats::default(),
+        }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<T> {
+        let mut buf = self.take_empty(len);
+        buf.resize(len, T::default());
+        buf
+    }
+
+    /// An empty buffer with capacity for at least `cap` elements (for
+    /// callers that build content with `extend_from_slice`).
+    pub fn take_empty(&mut self, cap: usize) -> Vec<T> {
+        self.stats.takes += 1;
+        let k = class_of(cap);
+        if let Some(class) = self.classes.get_mut(k) {
+            if let Some(mut buf) = class.pop() {
+                debug_assert!(buf.capacity() >= cap);
+                buf.clear();
+                self.stats.hits += 1;
+                return buf;
+            }
+        }
+        self.stats.fresh += 1;
+        // allocate the full class size so the buffer re-files under the
+        // same class it was taken from
+        Vec::with_capacity((1usize << k).max(cap))
+    }
+
+    /// Return a buffer for reuse.  Filed under the largest class its
+    /// capacity covers; dropped if that class is already full (or the
+    /// arena is pass-through).
+    pub fn give(&mut self, buf: Vec<T>) {
+        if self.retain == 0 || buf.capacity() == 0 {
+            return;
+        }
+        // largest k with 1 << k ≤ capacity: every take from class k
+        // asks for at most 1 << k elements, which this buffer holds
+        let k = (usize::BITS - 1 - buf.capacity().leading_zeros()) as usize;
+        if self.classes.len() <= k {
+            self.classes.resize_with(k + 1, Vec::new);
+        }
+        if self.classes[k].len() < self.retain {
+            self.classes[k].push(buf);
+            self.stats.returned += 1;
+        }
+    }
+
+    /// Counters since construction.
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Buffers currently pooled across all classes.
+    pub fn pooled(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).sum()
+    }
+}
+
+/// The activation-buffer arena the strategies and the fabric thread
+/// through their hot paths.
+pub type TensorArena = Arena<f32>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_of_is_ceil_log2() {
+        assert_eq!(class_of(0), 0);
+        assert_eq!(class_of(1), 0);
+        assert_eq!(class_of(2), 1);
+        assert_eq!(class_of(3), 2);
+        assert_eq!(class_of(4), 2);
+        assert_eq!(class_of(5), 3);
+        assert_eq!(class_of(1024), 10);
+        assert_eq!(class_of(1025), 11);
+    }
+
+    #[test]
+    fn recycled_buffers_never_reallocate() {
+        let mut a: TensorArena = Arena::new();
+        let buf = a.take(100);
+        assert_eq!(buf.len(), 100);
+        assert!(buf.iter().all(|&v| v == 0.0));
+        a.give(buf);
+        // any length in the same class (65..=128) reuses the buffer
+        for len in [128, 65, 100, 70] {
+            let b = a.take(len);
+            assert_eq!(b.len(), len);
+            assert!(b.iter().all(|&v| v == 0.0), "recycled buffers are zeroed");
+            a.give(b);
+        }
+        let s = a.stats();
+        assert_eq!(s.takes, 5);
+        assert_eq!(s.fresh, 1, "only the first take allocates");
+        assert_eq!(s.hits, 4);
+    }
+
+    #[test]
+    fn take_empty_supports_extend_workloads() {
+        let mut a: Arena<u8> = Arena::new();
+        let mut buf = a.take_empty(1000);
+        assert!(buf.is_empty());
+        assert!(buf.capacity() >= 1000);
+        buf.extend_from_slice(&[7u8; 1000]);
+        let cap = buf.capacity();
+        a.give(buf);
+        let again = a.take_empty(900);
+        assert!(again.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(again.capacity(), cap, "no reallocation on reuse");
+    }
+
+    #[test]
+    fn retention_bounds_the_pool() {
+        let mut a: TensorArena = Arena::with_retention(2);
+        for _ in 0..5 {
+            let buf = a.take(64);
+            a.give(buf);
+        }
+        // serial take/give: one buffer cycles, pool holds at most 1 here
+        assert!(a.pooled() <= 2);
+        let b1 = a.take(64);
+        let b2 = a.take(64);
+        let b3 = a.take(64);
+        a.give(b1);
+        a.give(b2);
+        a.give(b3);
+        assert_eq!(a.pooled(), 2, "third concurrent give is dropped");
+        assert_eq!(a.stats().returned, 5 + 2);
+    }
+
+    #[test]
+    fn zero_retention_is_pass_through() {
+        let mut a: TensorArena = Arena::with_retention(0);
+        let buf = a.take(32);
+        a.give(buf);
+        assert_eq!(a.pooled(), 0);
+        let s = a.stats();
+        assert_eq!(s.fresh, 1);
+        assert_eq!(s.returned, 0);
+        let b = a.take(32);
+        assert_eq!(a.stats().fresh, 2, "pass-through always allocates");
+        drop(b);
+    }
+
+    #[test]
+    fn steady_state_stops_allocating() {
+        let mut a: TensorArena = Arena::new();
+        // warm up with the layer shapes of a small walk
+        let shapes = [192usize, 512, 512, 128, 32, 10];
+        for _ in 0..3 {
+            for &s in &shapes {
+                let buf = a.take(s);
+                a.give(buf);
+            }
+        }
+        let warm = a.stats();
+        for _ in 0..50 {
+            for &s in &shapes {
+                let buf = a.take(s);
+                a.give(buf);
+            }
+        }
+        let after = a.stats();
+        assert_eq!(after.fresh, warm.fresh, "steady state allocates nothing");
+        assert_eq!(
+            after.hits - warm.hits,
+            50 * shapes.len() as u64,
+            "every steady-state take is a pool hit"
+        );
+    }
+}

@@ -4,6 +4,7 @@
 //! these are implemented here (DESIGN.md §3, "Substrate note") — each is a
 //! small, tested, purpose-built replacement.
 
+pub mod arena;
 pub mod cli;
 pub mod json;
 pub mod rng;

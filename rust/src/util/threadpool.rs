@@ -214,9 +214,129 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Scoped parallel map: runs `f` over items on `n` threads, preserving
-/// order. Used by the blinding hot loop and workload generators.
+/// Process-wide governor for kernel worker threads.
+///
+/// Every blocked/vectorized reference kernel sizes its own `par_map`
+/// fan-out, so N tier-1 workers × M kernel threads used to oversubscribe
+/// the host.  The governor meters *concurrent* kernel worker threads
+/// against one shared cap (`--kernel-threads`, default
+/// `available_parallelism`): `par_map` reserves up to its requested
+/// width, spawns only what was granted, and releases the slots when the
+/// scoped workers join.  A fully contended call degrades gracefully to
+/// running serially on the caller — kernels never block waiting for
+/// slots, they just stop multiplying threads.
+pub struct KernelGovernor {
+    /// Configured cap; 0 means "auto" (`available_parallelism`).
+    cap: AtomicUsize,
+    /// Worker slots currently reserved.
+    active: AtomicUsize,
+    /// High-water mark of reserved slots (regression-tested ≤ cap).
+    peak: AtomicUsize,
+}
+
+impl KernelGovernor {
+    pub const fn new(cap: usize) -> Self {
+        Self {
+            cap: AtomicUsize::new(cap),
+            active: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// The effective cap (0 stored → `available_parallelism`).
+    pub fn cap(&self) -> usize {
+        let raw = self.cap.load(Ordering::SeqCst);
+        if raw == 0 {
+            default_kernel_threads()
+        } else {
+            raw
+        }
+    }
+
+    /// Re-cap the governor; 0 restores the auto default.
+    pub fn set_cap(&self, cap: usize) {
+        self.cap.store(cap, Ordering::SeqCst);
+    }
+
+    /// Reserve up to `want` worker slots; returns how many were granted
+    /// (possibly 0 when the cap is fully reserved).  Never blocks.
+    pub fn acquire(&self, want: usize) -> usize {
+        if want == 0 {
+            return 0;
+        }
+        let cap = self.cap();
+        loop {
+            let cur = self.active.load(Ordering::SeqCst);
+            let take = want.min(cap.saturating_sub(cur));
+            if take == 0 {
+                return 0;
+            }
+            if self
+                .active
+                .compare_exchange(cur, cur + take, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.peak.fetch_max(cur + take, Ordering::SeqCst);
+                return take;
+            }
+        }
+    }
+
+    /// Return `n` previously acquired slots.
+    pub fn release(&self, n: usize) {
+        self.active.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Worker slots currently reserved.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Highest concurrent reservation ever granted.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+/// The shared process-wide governor every `par_map` call routes through.
+pub static KERNEL_GOVERNOR: KernelGovernor = KernelGovernor::new(0);
+
+fn default_kernel_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
+/// Set the process-wide kernel-thread cap (`--kernel-threads`; 0 = auto
+/// = `available_parallelism`).
+pub fn set_kernel_thread_cap(n: usize) {
+    KERNEL_GOVERNOR.set_cap(n);
+}
+
+/// The effective process-wide kernel-thread cap.
+pub fn kernel_thread_cap() -> usize {
+    KERNEL_GOVERNOR.cap()
+}
+
+/// Scoped parallel map: runs `f` over items on up to `n` threads,
+/// preserving order. Used by the blinding hot loop, the reference
+/// kernels and workload generators.  Thread fan-out is metered by the
+/// process-wide [`KERNEL_GOVERNOR`], so concurrent callers (N tier-1
+/// workers each running blocked kernels) can never oversubscribe the
+/// host past `--kernel-threads`.
 pub fn par_map<T, R, F>(items: Vec<T>, n: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    par_map_governed(items, n, &KERNEL_GOVERNOR, f)
+}
+
+/// [`par_map`] against an explicit governor (the process-wide one in
+/// production; a local instance in the oversubscription regression
+/// test, so the test cannot race other tests' kernel launches).
+pub fn par_map_governed<T, R, F>(items: Vec<T>, n: usize, gov: &KernelGovernor, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
@@ -225,12 +345,20 @@ where
     if n <= 1 || items.len() <= 1 {
         return items.into_iter().map(f).collect();
     }
+    let granted = gov.acquire(n.min(items.len()));
+    if granted <= 1 {
+        // one slot buys no parallelism over the caller itself
+        if granted == 1 {
+            gov.release(1);
+        }
+        return items.into_iter().map(f).collect();
+    }
     let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
     let items: Vec<(usize, T)> = items.into_iter().enumerate().collect();
     let queue = Mutex::new(items);
     let results = Mutex::new(&mut out);
     std::thread::scope(|s| {
-        for _ in 0..n {
+        for _ in 0..granted {
             s.spawn(|| loop {
                 let item = queue.lock().unwrap().pop();
                 match item {
@@ -243,6 +371,7 @@ where
             });
         }
     });
+    gov.release(granted);
     out.into_iter().map(|r| r.unwrap()).collect()
 }
 
@@ -324,5 +453,54 @@ mod tests {
         let v: Vec<u64> = (0..200).collect();
         let out = par_map(v, 8, |x| x * 2);
         assert_eq!(out, (0..200).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn governor_grants_within_cap_and_tracks_peak() {
+        let gov = KernelGovernor::new(4);
+        assert_eq!(gov.cap(), 4);
+        assert_eq!(gov.acquire(3), 3);
+        assert_eq!(gov.acquire(3), 1, "only one slot left under the cap");
+        assert_eq!(gov.acquire(1), 0, "cap fully reserved");
+        assert_eq!(gov.active(), 4);
+        gov.release(4);
+        assert_eq!(gov.active(), 0);
+        assert_eq!(gov.peak(), 4);
+        // auto cap (0) resolves to available_parallelism
+        gov.set_cap(0);
+        assert!(gov.cap() >= 1);
+    }
+
+    #[test]
+    fn concurrent_par_maps_never_exceed_the_kernel_thread_cap() {
+        // Four callers each ask for 4 kernel threads against a cap of 3:
+        // ungoverned that is 16 concurrent workers; the governor must
+        // keep the granted total at ≤ 3 at every instant.  The peak
+        // counter is maintained by the same CAS that grants slots, so
+        // this bound is exact, not a sampling artifact.
+        let gov = KernelGovernor::new(3);
+        let correct = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let gov = &gov;
+                    s.spawn(move || {
+                        let v: Vec<u64> = (0..64).collect();
+                        let out = par_map_governed(v, 4, gov, |x| {
+                            std::thread::sleep(Duration::from_micros(200));
+                            x * 3
+                        });
+                        out == (0..64).map(|x| x * 3).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().all(|h| h.join().unwrap())
+        });
+        assert!(correct, "governed maps still produce ordered results");
+        assert!(
+            gov.peak() <= 3,
+            "concurrent kernel workers exceeded the cap: peak {}",
+            gov.peak()
+        );
+        assert_eq!(gov.active(), 0, "all slots released");
     }
 }
