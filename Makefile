@@ -6,7 +6,7 @@
 # only needed for the artifact-gated integration tests/benches; the
 # hermetic `sim*` reference-backend paths run everywhere.
 
-.PHONY: ci build test test-sim clippy fmt-check doc bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission bench-smoke-epc bench-smoke-blinding bench-smoke-kernels pool-demo fabric-demo clean
+.PHONY: ci build test test-sim clippy fmt-check doc bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission bench-smoke-epc bench-smoke-blinding bench-smoke-kernels bench-smoke-net pool-demo fabric-demo net-demo clean
 
 ## The CI gate: release build, full test suite, clippy as errors, rustfmt,
 ## and warning-free rustdoc.
@@ -75,6 +75,12 @@ bench-smoke-blinding:
 bench-smoke-kernels:
 	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig20_kernel_speed
 
+## Fast smoke of the session-table bench (asserts the sharded table
+## sustains ≥1M live sessions with bounded sweep p95 and beats the
+## single-mutex map ≥1.2x on the 8-thread bind path).
+bench-smoke-net:
+	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig21_net_sessions
+
 ## The worker-pool demo: 4 pipelined workers vs the serial path.
 pool-demo:
 	cargo run --release -p origami --example pool_serving
@@ -82,6 +88,11 @@ pool-demo:
 ## The multi-tenant demo: two models sharing a lane fabric + autoscaler.
 fabric-demo:
 	cargo run --release -p origami --example multi_model_serving
+
+## The front-door demo: attested TCP handshake, session-keyed inference,
+## epoch refresh and revocation over loopback.
+net-demo:
+	cargo run --release -p origami --example net_client
 
 clean:
 	cargo clean

@@ -1,0 +1,95 @@
+//! Attested network client: the full front-door session lifecycle over
+//! a loopback TCP socket, against the hermetic `sim16` model.
+//!
+//! ```bash
+//! cargo run --release --example net_client
+//! ```
+//!
+//! What happens, end to end:
+//! 1. a server thread deploys `sim16` behind the attested front door
+//!    (`NetServer` on an ephemeral loopback port);
+//! 2. the client connects, sends an attestation challenge, verifies the
+//!    enclave's MACed report (measurement + challenge + freshness) and
+//!    the session grant riding under the derived session key;
+//! 3. it encrypts an image under the granted session word (AES-CTR
+//!    keystream keyed by session id + epoch) and runs an inference;
+//! 4. it refreshes the session — the keystream epoch bumps, so the same
+//!    image encrypts to a *different* ciphertext — and infers again;
+//! 5. both answers must be bit-identical: the epoch changes the wire
+//!    bytes, never the math.
+
+use std::sync::Arc;
+
+use origami::config::{Config, ModelSpec};
+use origami::coordinator::NetClient;
+use origami::launcher::{
+    encrypt_request, net_options_from_config, start_deployment_from_config, synth_images,
+};
+
+fn main() -> anyhow::Result<()> {
+    let config = Config {
+        model: "sim16".into(),
+        strategy: "origami/6".into(),
+        workers: 2,
+        listen: "127.0.0.1:0".into(),
+        ..Config::default()
+    };
+    let spec = ModelSpec::parse(&config.model)?;
+    let dep = Arc::new(start_deployment_from_config(&config, &[spec])?);
+    let opts = net_options_from_config(&config);
+    let server = origami::coordinator::NetServer::start(dep.clone(), opts.clone())?;
+    let addr = server.local_addr();
+    println!("front door on {addr} (session ttl {} ms)", dep.sessions().ttl_ms());
+
+    // --- attested handshake -----------------------------------------
+    let mut client = NetClient::connect(
+        &addr,
+        &config.model,
+        &opts.measurement,
+        &opts.platform_key,
+        0xC4A11E46E, // fresh challenge
+    )?;
+    println!(
+        "attested: session {} epoch {} (report ttl {} ms)",
+        client.session(),
+        client.epoch(),
+        client.report().ttl_ms
+    );
+
+    // --- inference under the session keystream ----------------------
+    let image = &synth_images(1, 16, 3, config.seed)[0];
+    let ct0 = encrypt_request(&config, client.session_word(), image);
+    let first = client.infer(&ct0).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let top = first
+        .probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, p)| (i, *p))
+        .unwrap_or((0, 0.0));
+    println!(
+        "inference: class {} (p={:.4}) in {:.2} ms",
+        top.0, top.1, first.latency_ms
+    );
+
+    // --- refresh: new keystream epoch, identical math ---------------
+    let epoch = client.refresh().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ct1 = encrypt_request(&config, client.session_word(), image);
+    anyhow::ensure!(ct0 != ct1, "epoch bump must change the ciphertext");
+    let second = client.infer(&ct1).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        first.probs == second.probs,
+        "outputs must be bit-identical across epochs"
+    );
+    println!("refreshed to epoch {epoch}: new keystream, bit-identical answer");
+
+    // --- revoke and shut down ---------------------------------------
+    let existed = client.revoke().map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(existed, "revocation should find the live session");
+    println!("session revoked; shutting down");
+    server.shutdown();
+    Arc::try_unwrap(dep)
+        .map_err(|_| anyhow::anyhow!("deployment still referenced"))?
+        .shutdown();
+    Ok(())
+}

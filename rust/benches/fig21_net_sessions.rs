@@ -1,0 +1,185 @@
+//! Fig 21 (extension) — the front door's session table at scale.
+//!
+//! The network front door binds every request to a session.  Pre-refactor
+//! the registry kept those bindings in a single `Mutex<HashMap<u64,
+//! String>>`: every submit from every tenant serialized on one lock, and
+//! nothing ever expired (the session-leak bug).  The sharded
+//! `SessionTable` stripes the lock, stamps each binding with a TTL
+//! deadline, and retires the backlog with per-shard sweeps.
+//!
+//! Measured here, asserted in CI smoke:
+//! - **capacity**: the table sustains ≥1M live sessions, and one TTL
+//!   sweep retires the entire backlog (the leak regression, at scale);
+//! - **sweep latency**: p95 across idle and clearing sweeps of the
+//!   1M-entry table stays bounded;
+//! - **throughput**: 8 threads of bind/touch traffic (the submit
+//!   admission path) through the sharded table vs the single-mutex
+//!   map — the shards must win ≥1.2x.
+//!
+//! Run: `cargo bench --bench fig21_net_sessions`
+//! (ORIGAMI_BENCH_FAST=1 shrinks the throughput rounds for CI smoke.)
+
+use std::collections::HashMap;
+use std::sync::{Barrier, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use origami::coordinator::{SessionTable, SESSION_TTL_FOREVER};
+use origami::harness::Bench;
+
+const THREADS: usize = 8;
+const SHARDS: usize = 64;
+/// Distinct sessions per thread in the throughput legs: the first pass
+/// inserts, later passes ride the hot touch path (a bound resubmit).
+const KEYS_PER_THREAD: usize = 4096;
+const LIVE_TARGET: usize = 1_000_000;
+const SWEEP_P95_BOUND_MS: f64 = 500.0;
+const REQUIRED_SPEEDUP: f64 = 1.2;
+
+fn p95(samples: &mut [f64]) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() as f64) * 0.95).ceil() as usize;
+    samples[idx.saturating_sub(1).min(samples.len() - 1)]
+}
+
+fn mean(samples: &[f64]) -> f64 {
+    samples.iter().sum::<f64>() / samples.len().max(1) as f64
+}
+
+/// One timed round: `THREADS` workers released by a barrier, wall time
+/// from release to last join (ms).
+fn timed_round<F: Fn(usize) + Sync>(work: &F) -> f64 {
+    let barrier = Barrier::new(THREADS + 1);
+    let mut t0 = Instant::now();
+    thread::scope(|s| {
+        for t in 0..THREADS {
+            let b = &barrier;
+            s.spawn(move || {
+                b.wait();
+                work(t);
+            });
+        }
+        barrier.wait();
+        t0 = Instant::now();
+    });
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("ORIGAMI_BENCH_FAST").ok().as_deref() == Some("1");
+    let ops_per_thread: usize = if fast { 40_000 } else { 200_000 };
+    let rounds = if fast { 3 } else { 6 };
+    let mut bench = Bench::new("Fig 21: sharded session table vs single-mutex map");
+
+    // --- capacity: 1M live sessions, then one clearing sweep ---------
+    // A 1 ms TTL lets the table clock (passed explicitly) flip the
+    // entire population from live to expired without wall-clock sleeps.
+    let big = SessionTable::new(SHARDS, 1);
+    let t0 = Instant::now();
+    for id in 0..LIVE_TARGET as u64 {
+        big.bind(id, "tenant", 0)
+            .map_err(|e| anyhow::anyhow!("bind {id}: {e:?}"))?;
+    }
+    let fill_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(
+        big.len() >= LIVE_TARGET,
+        "table must sustain {LIVE_TARGET} live sessions, holds {}",
+        big.len()
+    );
+    let row = bench.push_samples("fill 1M bindings", &[fill_ms]);
+    row.extra.push(("live".into(), big.len() as f64));
+
+    let mut sweep_samples = Vec::new();
+    for _ in 0..5 {
+        let t = Instant::now();
+        let removed = big.sweep(0); // nothing has expired at now=0
+        sweep_samples.push(t.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(removed == 0, "idle sweep must retire nothing");
+    }
+    let t = Instant::now();
+    let removed = big.sweep(10); // every deadline (established+1ms) passed
+    sweep_samples.push(t.elapsed().as_secs_f64() * 1e3);
+    anyhow::ensure!(
+        removed == LIVE_TARGET && big.is_empty(),
+        "clearing sweep must retire all {LIVE_TARGET} sessions (got {removed}, {} left)",
+        big.len()
+    );
+    let sweep_p95 = p95(&mut sweep_samples);
+    let row = bench.push_samples("ttl sweep (1M entries)", &sweep_samples);
+    row.extra.push(("p95_ms".into(), sweep_p95));
+    row.extra.push(("retired".into(), removed as f64));
+
+    // --- throughput at 8 threads: shards vs the old single mutex -----
+    let total_ops = (THREADS * ops_per_thread) as f64;
+
+    let sharded = SessionTable::new(SHARDS, SESSION_TTL_FOREVER);
+    let sharded_work = |t: usize| {
+        let base = (t as u64) << 32;
+        for i in 0..ops_per_thread {
+            let id = base + (i % KEYS_PER_THREAD) as u64;
+            sharded.bind(id, "tenant", 0).expect("sharded bind");
+        }
+    };
+    timed_round(&sharded_work); // warmup round also populates the keys
+    let mut sharded_samples = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        sharded_samples.push(timed_round(&sharded_work));
+    }
+    let sharded_mean = mean(&sharded_samples);
+    let row = bench.push_samples("bind x8 threads: sharded table", &sharded_samples);
+    row.extra.push(("ops".into(), total_ops));
+    row.extra
+        .push(("ops_per_s".into(), total_ops * 1e3 / sharded_mean.max(1e-9)));
+
+    // The pre-refactor baseline, verbatim in spirit: one mutex over one
+    // map, get-then-insert on every submit.
+    let flat: Mutex<HashMap<u64, String>> = Mutex::new(HashMap::new());
+    let flat_work = |t: usize| {
+        let base = (t as u64) << 32;
+        for i in 0..ops_per_thread {
+            let id = base + (i % KEYS_PER_THREAD) as u64;
+            let mut g = flat.lock().unwrap();
+            match g.get(&id) {
+                Some(bound) => assert_eq!(bound, "tenant"),
+                None => {
+                    g.insert(id, "tenant".to_string());
+                }
+            }
+        }
+    };
+    timed_round(&flat_work);
+    let mut flat_samples = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        flat_samples.push(timed_round(&flat_work));
+    }
+    let flat_mean = mean(&flat_samples);
+    let row = bench.push_samples("bind x8 threads: single mutex", &flat_samples);
+    row.extra.push(("ops".into(), total_ops));
+    row.extra
+        .push(("ops_per_s".into(), total_ops * 1e3 / flat_mean.max(1e-9)));
+
+    let speedup = flat_mean / sharded_mean.max(1e-9);
+    bench.metric("sharded speedup @8 threads", "x", speedup);
+    bench.metric("sweep p95", "ms", sweep_p95);
+    bench.finish();
+
+    anyhow::ensure!(
+        sweep_p95 <= SWEEP_P95_BOUND_MS,
+        "sweep p95 {sweep_p95:.2} ms over the {SWEEP_P95_BOUND_MS} ms bound"
+    );
+    anyhow::ensure!(
+        speedup >= REQUIRED_SPEEDUP,
+        "sharded table {speedup:.2}x vs single mutex at {THREADS} threads \
+         (need ≥{REQUIRED_SPEEDUP}x: sharded {sharded_mean:.2} ms, mutex {flat_mean:.2} ms)"
+    );
+    println!(
+        "\nacceptance: {} live sessions sustained and retired in one sweep \
+         (p95 {sweep_p95:.2} ms ≤ {SWEEP_P95_BOUND_MS} ms); sharded bind path \
+         {speedup:.2}x the single-mutex map at {THREADS} threads \
+         ({:.0} vs {:.0} kops/s)",
+        LIVE_TARGET,
+        total_ops / sharded_mean.max(1e-9),
+        total_ops / flat_mean.max(1e-9),
+    );
+    Ok(())
+}

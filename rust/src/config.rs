@@ -134,6 +134,18 @@ pub struct Config {
     /// (symmetric i8 weights/activations, i32 accumulation).  Per-model
     /// overrides via `:tail=` in the deployment spec.
     pub tail_precision: String,
+    /// Network front door bind address (`host:port`; port 0 picks an
+    /// ephemeral port).  Empty = no listener: the deployment serves
+    /// in-process submissions only.
+    pub listen: String,
+    /// Session TTL for the deployment's session table (ms): sessions
+    /// expire this long after they are established (or last refreshed);
+    /// 0 expires immediately (useful in tests).
+    pub session_ttl_ms: u64,
+    /// Session-table shard count (striped locks; rounded up to a power
+    /// of two).  Size for the live-session population — the default
+    /// comfortably absorbs millions of entries.
+    pub session_shards: usize,
 }
 
 impl Default for Config {
@@ -184,6 +196,9 @@ impl Default for Config {
             epc_overcommit: 0.0,
             kernel_threads: 0,
             tail_precision: "f32".into(),
+            listen: String::new(),
+            session_ttl_ms: crate::coordinator::router::DEFAULT_SESSION_TTL_MS,
+            session_shards: crate::coordinator::router::DEFAULT_SESSION_SHARDS,
         }
     }
 }
@@ -245,6 +260,7 @@ impl Config {
             ("shed_policy", &mut self.shed_policy),
             ("degrade_strategy", &mut self.degrade_strategy),
             ("tail_precision", &mut self.tail_precision),
+            ("listen", &mut self.listen),
         ] {
             if let Some(s) = v.get(field).and_then(|x| x.as_str()) {
                 *slot = s.to_string();
@@ -257,6 +273,7 @@ impl Config {
             ("factor_pool_depth", &mut self.factor_pool_depth),
             ("lazy_dense_bytes", &mut self.lazy_dense_bytes),
             ("autoscale_tick_ms", &mut self.autoscale_tick_ms),
+            ("session_ttl_ms", &mut self.session_ttl_ms),
         ] {
             if let Some(n) = v.get(field).and_then(|x| x.as_i64()) {
                 *slot = n as u64;
@@ -279,6 +296,7 @@ impl Config {
             ("inflight", &mut self.inflight),
             ("shed_depth", &mut self.shed_depth),
             ("kernel_threads", &mut self.kernel_threads),
+            ("session_shards", &mut self.session_shards),
         ] {
             if let Some(n) = v.get(field).and_then(|x| x.as_usize()) {
                 *slot = n;
@@ -407,6 +425,16 @@ impl Config {
             );
             c.tail_precision = v.into();
         }
+        if let Some(v) = args.get("listen") {
+            c.listen = v.into();
+        }
+        c.session_ttl_ms = args.u64_or("session-ttl", c.session_ttl_ms)?;
+        c.session_shards = args.usize_or("session-shards", c.session_shards)?;
+        anyhow::ensure!(
+            c.session_shards > 0,
+            "--session-shards must be ≥ 1, got {}",
+            c.session_shards
+        );
         if args.has("strict-otp") {
             c.allow_factor_reuse = false;
         }
@@ -489,6 +517,9 @@ impl Config {
             ("epc_overcommit", json::num(self.epc_overcommit)),
             ("kernel_threads", json::num(self.kernel_threads as f64)),
             ("tail_precision", json::s(&self.tail_precision)),
+            ("listen", json::s(&self.listen)),
+            ("session_ttl_ms", json::num(self.session_ttl_ms as f64)),
+            ("session_shards", json::num(self.session_shards as f64)),
         ])
     }
 
@@ -611,6 +642,10 @@ impl Config {
             d("admission", "--degrade-strategy", "<s>", "degrade_strategy", "the cheaper tier"),
             // epc
             d("epc", "--epc-overcommit", "<f>", "epc_overcommit", "usable EPC × this (0 = off)"),
+            // net (attested front door)
+            d("net", "--listen", "<addr>", "listen", "TCP front door bind addr (empty = off)"),
+            d("net", "--session-ttl", "<ms>", "session_ttl_ms", "session table TTL (ms)"),
+            d("net", "--session-shards", "<n>", "session_shards", "session table lock stripes"),
         ]
     }
 }
@@ -1203,6 +1238,39 @@ mod tests {
         let path = dir.join("bad.json");
         std::fs::write(&path, r#"{"tail_precision": "FP16"}"#).unwrap();
         assert!(Config::from_file(&path).is_err());
+    }
+
+    #[test]
+    fn net_args_parse_and_roundtrip() {
+        let d = Config::default();
+        assert!(d.listen.is_empty(), "no listener by default");
+        assert_eq!(d.session_ttl_ms, 600_000);
+        assert_eq!(d.session_shards, 64);
+        let args = Args::parse(
+            "serve --listen 127.0.0.1:7070 --session-ttl 30000 --session-shards 128"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = Config::from_args(&args).unwrap();
+        assert_eq!(c.listen, "127.0.0.1:7070");
+        assert_eq!(c.session_ttl_ms, 30_000);
+        assert_eq!(c.session_shards, 128);
+        // round-trips through JSON
+        let v = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&v);
+        assert_eq!(c2.listen, "127.0.0.1:7070");
+        assert_eq!(c2.session_ttl_ms, 30_000);
+        assert_eq!(c2.session_shards, 128);
+        // zero shards is rejected — the table needs at least one stripe
+        let bad = Args::parse(
+            "serve --session-shards 0"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
     }
 
     #[test]

@@ -369,7 +369,7 @@ impl FairQueue {
 
     /// Declare a tenant (idempotent; updates the weight and SLO).
     fn register(&self, model: &str, weight: f64, slo_ms: Option<f64>) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         g.clock.register(model, weight);
         g.tenants.entry(model.to_string()).or_default();
         match slo_ms {
@@ -384,7 +384,7 @@ impl FairQueue {
 
     /// Blocking push with per-tenant backpressure; Err(task) when closed.
     fn push(&self, task: Tier2Task) -> std::result::Result<(), Tier2Task> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if g.closed {
                 return Err(task);
@@ -400,7 +400,7 @@ impl FairQueue {
             if depth < self.cap {
                 break;
             }
-            g = self.not_full.wait(g).unwrap();
+            g = self.not_full.wait(g).unwrap_or_else(|e| e.into_inner());
         }
         g.clock.on_enqueue(&task.model);
         let deadline = g.slos.get(&task.model).map(|&slo| {
@@ -430,7 +430,7 @@ impl FairQueue {
     /// least SLO slack (FIFO for no-SLO tenants).
     fn pop_timeout(&self, timeout: Duration) -> Pop {
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(name) = g.clock.pick() {
                 let deque = g
@@ -464,17 +464,20 @@ impl FairQueue {
             if now >= deadline {
                 return Pop::TimedOut;
             }
-            let (guard, _) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
             g = guard;
         }
     }
 
     fn depth(&self) -> usize {
-        self.inner.lock().unwrap().len
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).len
     }
 
     fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
@@ -525,7 +528,7 @@ impl FabricShared {
         }
         let mut chunk = if p.max_chunk > 0 { p.max_chunk } else { usize::MAX };
         if p.max_task_ms > 0.0 {
-            if let Some(&per_req) = self.cost_est.lock().unwrap().get(&task.model) {
+            if let Some(&per_req) = self.cost_est.lock().unwrap_or_else(|e| e.into_inner()).get(&task.model) {
                 if per_req > 0.0 {
                     let by_cost = (p.max_task_ms / per_req).floor() as usize;
                     chunk = chunk.min(by_cost.max(1));
@@ -562,7 +565,7 @@ impl FabricHandle {
             return self.shared.queue.push(task);
         }
         let parts = {
-            let mut arena = self.shared.arena.lock().unwrap();
+            let mut arena = self.shared.arena.lock().unwrap_or_else(|e| e.into_inner());
             task.split_into(chunk, &mut arena)
         };
         let total = parts.len();
@@ -580,7 +583,7 @@ impl FabricHandle {
         // count the split only once every chunk is actually queued —
         // shutdown-time rejections must not inflate the accounting
         if total > 1 {
-            let mut m = self.shared.metrics.lock().unwrap();
+            let mut m = self.shared.metrics.lock().unwrap_or_else(|e| e.into_inner());
             m.split_tasks += 1;
             m.split_subtasks += total as u64;
         }
@@ -695,7 +698,7 @@ impl LaneFabric {
         F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
     {
         {
-            let mut g = self.shared.tenants.lock().unwrap();
+            let mut g = self.shared.tenants.lock().unwrap_or_else(|e| e.into_inner());
             anyhow::ensure!(
                 !g.contains_key(model),
                 "model `{model}` is already attached to the fabric"
@@ -721,7 +724,7 @@ impl LaneFabric {
     /// Cumulative feature-map arena counters: how many chunk buffers the
     /// split path took, how many were pool hits vs fresh allocations.
     pub fn arena_stats(&self) -> ArenaStats {
-        self.shared.arena.lock().unwrap().stats()
+        self.shared.arena.lock().unwrap_or_else(|e| e.into_inner()).stats()
     }
 
     /// Current (desired) lane count.
@@ -739,7 +742,7 @@ impl LaneFabric {
     /// in-flight task and are joined before this returns; queued tasks
     /// stay queued for the surviving lanes.
     pub fn scale_to(&self, n: usize) -> usize {
-        let _guard = self.scale_lock.lock().unwrap();
+        let _guard = self.scale_lock.lock().unwrap_or_else(|e| e.into_inner());
         let n = n.clamp(self.min_lanes, self.max_lanes).max(1);
         let cur = self.shared.desired.load(Ordering::SeqCst);
         if n == cur {
@@ -747,7 +750,7 @@ impl LaneFabric {
         }
         self.shared.desired.store(n, Ordering::SeqCst);
         {
-            let mut m = self.shared.metrics.lock().unwrap();
+            let mut m = self.shared.metrics.lock().unwrap_or_else(|e| e.into_inner());
             if n > cur {
                 m.grow_events += 1;
                 m.peak_lanes = m.peak_lanes.max(n);
@@ -759,7 +762,7 @@ impl LaneFabric {
             self.ensure_lanes(n);
         } else {
             let handles: Vec<JoinHandle<()>> = {
-                let mut g = self.slots.lock().unwrap();
+                let mut g = self.slots.lock().unwrap_or_else(|e| e.into_inner());
                 (n..g.len()).filter_map(|i| g[i].take()).collect()
             };
             for h in handles {
@@ -772,7 +775,7 @@ impl LaneFabric {
     /// Make sure lanes `0..n` are running (spawning any that are missing
     /// or previously retired).
     fn ensure_lanes(&self, n: usize) {
-        let mut g = self.slots.lock().unwrap();
+        let mut g = self.slots.lock().unwrap_or_else(|e| e.into_inner());
         while g.len() < n {
             g.push(None);
         }
@@ -789,7 +792,7 @@ impl LaneFabric {
             }
             let device = self.shared.devices[i % self.shared.devices.len()];
             {
-                let mut m = self.shared.metrics.lock().unwrap();
+                let mut m = self.shared.metrics.lock().unwrap_or_else(|e| e.into_inner());
                 if m.lane_sim_ms.len() <= i {
                     m.lane_sim_ms.resize(i + 1, 0.0);
                     m.lane_batches.resize(i + 1, 0);
@@ -810,7 +813,7 @@ impl LaneFabric {
     fn stop(&self) {
         self.shared.queue.close();
         let handles: Vec<JoinHandle<()>> = {
-            let mut g = self.slots.lock().unwrap();
+            let mut g = self.slots.lock().unwrap_or_else(|e| e.into_inner());
             g.iter_mut().filter_map(|s| s.take()).collect()
         };
         for h in handles {
@@ -821,7 +824,7 @@ impl LaneFabric {
     /// Drain the queue, stop every lane, return the final metrics.
     pub fn shutdown(self) -> FabricMetrics {
         self.stop();
-        let m = self.shared.metrics.lock().unwrap();
+        let m = self.shared.metrics.lock().unwrap_or_else(|e| e.into_inner());
         m.clone()
     }
 }
@@ -870,7 +873,7 @@ fn lane_main(shared: Arc<FabricShared>, lane: usize, device: Device) {
             let factory = shared
                 .tenants
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .get(&model)
                 .map(|e| e.factory.clone());
             // an unknown tenant is not cached: it may attach later
@@ -898,7 +901,7 @@ fn lane_main(shared: Arc<FabricShared>, lane: usize, device: Device) {
                 let out = fin.finish(task);
                 // recycle the spent feature map into the fabric pool
                 if let Some(spent) = out.spent_features {
-                    shared.arena.lock().unwrap().give(spent);
+                    shared.arena.lock().unwrap_or_else(|e| e.into_inner()).give(spent);
                 }
                 if let Some(tel) = &tenant_tel {
                     tel.record(Stage::Tier2, out.tier2_sim_ms);
@@ -910,11 +913,11 @@ fn lane_main(shared: Arc<FabricShared>, lane: usize, device: Device) {
                 // split policy's ms → chunk-size conversion)
                 if out.tier2_sim_ms > 0.0 && out.record.batch > 0 {
                     let per_req = out.tier2_sim_ms / out.record.batch as f64;
-                    let mut est = shared.cost_est.lock().unwrap();
+                    let mut est = shared.cost_est.lock().unwrap_or_else(|e| e.into_inner());
                     let e = est.entry(model.clone()).or_insert(per_req);
                     *e = 0.8 * *e + 0.2 * per_req;
                 }
-                let mut g = shared.metrics.lock().unwrap();
+                let mut g = shared.metrics.lock().unwrap_or_else(|e| e.into_inner());
                 g.lane_sim_ms[lane] += out.tier2_sim_ms;
                 g.lane_batches[lane] += 1;
                 let t = g.tenants.entry(model).or_default();
@@ -931,7 +934,7 @@ fn lane_main(shared: Arc<FabricShared>, lane: usize, device: Device) {
                 for req in &task.requests {
                     reply_error(req, "no tier-2 finisher available for this model");
                 }
-                let mut g = shared.metrics.lock().unwrap();
+                let mut g = shared.metrics.lock().unwrap_or_else(|e| e.into_inner());
                 g.errors += 1;
                 let t = g.tenants.entry(model).or_default();
                 t.errors += task.requests.len() as u64;
@@ -1257,7 +1260,7 @@ mod tests {
         assert_eq!(fabric.shared.chunk_for(&tiered(2)), 0, "already small enough");
         // a learned 3 ms/request estimate tightens the chunk: 4.5 ms
         // ceiling / 3 ms per request → 1-request chunks
-        fabric.shared.cost_est.lock().unwrap().insert("m".into(), 3.0);
+        fabric.shared.cost_est.lock().unwrap_or_else(|e| e.into_inner()).insert("m".into(), 3.0);
         assert_eq!(fabric.shared.chunk_for(&tiered(4)), 1);
         // Final and failed tasks never split
         let (final_task, _r) = task_sized("m", 4);

@@ -42,10 +42,12 @@ pub mod api;
 pub mod batcher;
 pub mod epc_sched;
 pub mod fabric;
+pub mod net;
 pub mod pool;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod session;
 pub mod telemetry;
 
 pub use admission::{
@@ -59,12 +61,16 @@ pub use epc_sched::{
 pub use fabric::{
     FabricHandle, FabricMetrics, FabricOptions, FairClock, LaneFabric, SplitPolicy, TenantStats,
 };
+pub use net::{Deny, DenyCode, NetClient, NetError, NetOptions, NetServer, WireInference};
 pub use pool::{PoolMetrics, PoolOptions, WorkerPool};
 pub use router::{
     AdmissionError, AutoscalePolicy, Deployment, DeploymentMetrics, EngineHandle, Router,
-    ScaleMode, ScaleSignals,
+    ScaleMode, ScaleSignals, DEFAULT_SESSION_SHARDS, DEFAULT_SESSION_TTL_MS,
 };
 pub use server::ServingEngine;
+pub use session::{
+    Binding, SessionError, SessionGrant, SessionTable, SESSION_TTL_FOREVER,
+};
 pub use telemetry::{
     AdmissionCounters, AdmissionSnapshot, HistogramSnapshot, LatencyHistogram, ScaleCounters,
     ScaleSnapshot, Stage, TelemetryHub, TenantTelemetry, WindowedHistogram,

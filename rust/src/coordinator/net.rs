@@ -1,0 +1,932 @@
+//! The network front door: a length-prefixed binary protocol over TCP
+//! in front of the [`Deployment`](super::router::Deployment) registry,
+//! with an attested session lifecycle.
+//!
+//! The paper's deployment model is a *service*: clients encrypt inputs
+//! to a remote enclave and the per-session keystream keeps the
+//! offloaded computation blind.  This module puts an actual wire on
+//! that story — std `TcpListener` + thread-per-connection, no external
+//! runtime — and routes every byte through the existing admission gate
+//! and telemetry:
+//!
+//! ```text
+//! client                               server
+//!   │ ── HELLO {challenge, model} ──────▶ │  quote(measurement,
+//!   │                                     │        challenge, ttl)
+//!   │ ◀── ATTEST_GRANT {report, session,  │  session = table.establish
+//!   │        epoch, ttl, grant MAC} ───── │
+//!   │  verify(report): measurement,       │
+//!   │  challenge, freshness, MAC;         │
+//!   │  derive session key; check grant    │
+//!   │ ── INFER {session, epoch, ct} ────▶ │  epoch check → admission
+//!   │ ◀── INFER_OK {probs…} ───────────── │  gate → pool → reply
+//!   │ ── REFRESH {session} ─────────────▶ │  epoch += 1, TTL extends
+//!   │ ◀── REFRESHED {epoch, ttl} ──────── │
+//! ```
+//!
+//! Every frame is `u32 LE length ‖ u8 type ‖ payload`.  Denials are
+//! *typed* on the wire ([`Deny`]): the admission gate's `retry_after_ms`
+//! hints and the session lifecycle's "expired — refresh to resume"
+//! signal survive serialization, so a remote client can implement the
+//! same backoff/refresh logic an in-process caller can.
+//!
+//! Data-plane encryption is the enclave session keystream keyed by the
+//! epoch-folded session word ([`crypto::session_word`]); the attested
+//! session key MACs the *grant* (session id, epoch, TTL), so a client
+//! knows the lifecycle parameters came from the enclave it verified.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::router::{AdmissionError, Deployment};
+use super::session::SessionError;
+use crate::crypto;
+use crate::enclave::attestation::{self, Report};
+use crate::util::sync::lock_recover;
+
+/// Frames larger than this are a protocol violation (16 MiB).
+const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Poll interval for the stop flag while a connection idles.
+const IDLE_POLL: Duration = Duration::from_millis(100);
+
+// Client → server frame types.
+const MSG_HELLO: u8 = 0x01;
+const MSG_INFER: u8 = 0x02;
+const MSG_REFRESH: u8 = 0x03;
+const MSG_REVOKE: u8 = 0x04;
+
+// Server → client frame types.
+const MSG_ATTEST_GRANT: u8 = 0x81;
+const MSG_INFER_OK: u8 = 0x82;
+const MSG_DENIED: u8 = 0x83;
+const MSG_REFRESHED: u8 = 0x84;
+const MSG_REVOKED: u8 = 0x85;
+
+/// Typed denial codes carried on the wire (mirrors [`AdmissionError`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum DenyCode {
+    UnknownModel = 1,
+    WrongSize = 2,
+    SessionCollision = 3,
+    Unavailable = 4,
+    RateLimited = 5,
+    QuotaExceeded = 6,
+    Shed = 7,
+    SessionExpired = 8,
+    Protocol = 9,
+}
+
+impl DenyCode {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            1 => DenyCode::UnknownModel,
+            2 => DenyCode::WrongSize,
+            3 => DenyCode::SessionCollision,
+            4 => DenyCode::Unavailable,
+            5 => DenyCode::RateLimited,
+            6 => DenyCode::QuotaExceeded,
+            7 => DenyCode::Shed,
+            8 => DenyCode::SessionExpired,
+            _ => DenyCode::Protocol,
+        }
+    }
+}
+
+/// A typed wire denial: the admission gate's backoff hint and the
+/// session lifecycle's refresh hint survive the socket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Deny {
+    pub code: DenyCode,
+    /// Client back-off hint, when the denial is load-dependent.
+    pub retry_after_ms: Option<u64>,
+    /// True when a session refresh (epoch bump) is enough to resume;
+    /// false means re-attest (or the denial is not session-related).
+    pub refreshable: bool,
+    /// Human-readable rendering of the server-side error.
+    pub message: String,
+}
+
+impl Deny {
+    fn of_admission(err: &AdmissionError) -> Self {
+        let code = match err {
+            AdmissionError::UnknownModel { .. } => DenyCode::UnknownModel,
+            AdmissionError::WrongSize { .. } => DenyCode::WrongSize,
+            AdmissionError::SessionCollision { .. } => DenyCode::SessionCollision,
+            AdmissionError::Unavailable { .. } => DenyCode::Unavailable,
+            AdmissionError::RateLimited { .. } => DenyCode::RateLimited,
+            AdmissionError::QuotaExceeded { .. } => DenyCode::QuotaExceeded,
+            AdmissionError::Shed { .. } => DenyCode::Shed,
+            AdmissionError::SessionExpired { .. } => DenyCode::SessionExpired,
+        };
+        Deny {
+            code,
+            retry_after_ms: err.retry_after_ms(),
+            refreshable: matches!(
+                err,
+                AdmissionError::SessionExpired {
+                    refreshable: true,
+                    ..
+                }
+            ),
+            message: err.to_string(),
+        }
+    }
+
+    fn of_session(err: &SessionError) -> Self {
+        match err {
+            SessionError::Collision { bound } => Deny {
+                code: DenyCode::SessionCollision,
+                retry_after_ms: None,
+                refreshable: false,
+                message: format!("session is bound to model `{bound}`"),
+            },
+            SessionError::Expired {
+                session,
+                refreshable,
+            } => Deny {
+                code: DenyCode::SessionExpired,
+                retry_after_ms: None,
+                refreshable: *refreshable,
+                message: format!("session {session} expired"),
+            },
+            SessionError::Unknown { session } => Deny {
+                code: DenyCode::SessionExpired,
+                retry_after_ms: None,
+                refreshable: false,
+                message: format!("unknown session {session}; re-attest"),
+            },
+        }
+    }
+
+    fn protocol(msg: &str) -> Self {
+        Deny {
+            code: DenyCode::Protocol,
+            retry_after_ms: None,
+            refreshable: false,
+            message: msg.to_string(),
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(16 + self.message.len());
+        p.push(self.code as u8);
+        match self.retry_after_ms {
+            Some(ms) => {
+                p.push(1);
+                p.extend_from_slice(&ms.to_le_bytes());
+            }
+            None => {
+                p.push(0);
+                p.extend_from_slice(&0u64.to_le_bytes());
+            }
+        }
+        p.push(self.refreshable as u8);
+        put_str(&mut p, &self.message);
+        p
+    }
+
+    fn decode(c: &mut Cursor<'_>) -> io::Result<Self> {
+        let code = DenyCode::from_u8(c.u8()?);
+        let has_retry = c.u8()? != 0;
+        let retry = c.u64()?;
+        let refreshable = c.u8()? != 0;
+        let message = c.str()?;
+        Ok(Deny {
+            code,
+            retry_after_ms: has_retry.then_some(retry),
+            refreshable,
+            message,
+        })
+    }
+}
+
+/// A successful wire inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireInference {
+    pub probs: Vec<f32>,
+    pub latency_ms: f64,
+    pub sim_ms: f64,
+    pub batch: u32,
+}
+
+/// Client-side failure modes.
+#[derive(Debug)]
+pub enum NetError {
+    /// Transport failure (connect, read, write, framing).
+    Io(io::Error),
+    /// The attestation evidence failed verification: wrong measurement,
+    /// wrong challenge, stale report, or a bad MAC.
+    Attestation(String),
+    /// The server denied the request with a typed reason.
+    Denied(Deny),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "transport error: {e}"),
+            NetError::Attestation(m) => write!(f, "attestation rejected: {m}"),
+            NetError::Denied(d) => write!(f, "denied ({:?}): {}", d.code, d.message),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<io::Error> for NetError {
+    fn from(e: io::Error) -> Self {
+        NetError::Io(e)
+    }
+}
+
+/// Server-side knobs.
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Bind address, e.g. `127.0.0.1:0` (port 0 = ephemeral).
+    pub listen: String,
+    /// Validity window of issued attestation reports (ms).
+    pub attest_ttl_ms: u64,
+    /// The enclave measurement the server quotes (MRENCLAVE analogue).
+    pub measurement: [u8; 32],
+    /// Shared platform MAC key (the quoting-enclave key stand-in).
+    pub platform_key: Vec<u8>,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".into(),
+            attest_ttl_ms: 60_000,
+            measurement: crypto::sha256(b"origami-enclave-v1"),
+            platform_key: b"origami-platform-key".to_vec(),
+        }
+    }
+}
+
+/// The listening front door: accept loop + one thread per connection.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind and start serving `deployment` on `opts.listen`.
+    pub fn start(deployment: Arc<Deployment>, opts: NetOptions) -> Result<Self> {
+        let listener = TcpListener::bind(&opts.listen)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let opts = opts.clone();
+            std::thread::Builder::new()
+                .name("origami-net-accept".into())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = incoming else { continue };
+                        let dep = deployment.clone();
+                        let stop_c = stop.clone();
+                        let opts_c = opts.clone();
+                        let handle = std::thread::Builder::new()
+                            .name("origami-net-conn".into())
+                            .spawn(move || {
+                                let _ = serve_connection(stream, &dep, &opts_c, &stop_c);
+                            })
+                            .expect("spawn connection thread");
+                        lock_recover(&conns).push(handle);
+                    }
+                })
+                .expect("spawn accept thread")
+        };
+        Ok(Self {
+            local_addr,
+            stop,
+            accept: Some(accept),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, wake idle connections, join every thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the blocking accept() awake
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = lock_recover(&self.conns).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// One connection: handshake-optional frame loop.  A session issued on
+/// one connection is valid on any other (the table is the authority),
+/// which is what lets a client resume after a refresh or reconnect.
+fn serve_connection(
+    mut stream: TcpStream,
+    dep: &Deployment,
+    opts: &NetOptions,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(IDLE_POLL))?;
+    loop {
+        let Some((ty, payload)) = read_frame_stoppable(&mut stream, stop)? else {
+            return Ok(()); // clean EOF or shutdown
+        };
+        let mut c = Cursor::new(&payload);
+        let reply: io::Result<()> = match ty {
+            MSG_HELLO => {
+                let challenge = c.u64()?;
+                let model = c.str()?;
+                handle_hello(&mut stream, dep, opts, challenge, &model)
+            }
+            MSG_INFER => {
+                let session = c.u64()?;
+                let epoch = c.u32()?;
+                let ciphertext = c.bytes_u32()?;
+                handle_infer(&mut stream, dep, session, epoch, ciphertext)
+            }
+            MSG_REFRESH => {
+                let session = c.u64()?;
+                match dep.refresh_session(session) {
+                    Ok(grant) => {
+                        let mut p = Vec::with_capacity(24);
+                        p.extend_from_slice(&grant.session.to_le_bytes());
+                        p.extend_from_slice(&grant.epoch.to_le_bytes());
+                        p.extend_from_slice(&dep.sessions().ttl_ms().to_le_bytes());
+                        write_frame(&mut stream, MSG_REFRESHED, &p)
+                    }
+                    Err(e) => {
+                        write_frame(&mut stream, MSG_DENIED, &Deny::of_session(&e).encode())
+                    }
+                }
+            }
+            MSG_REVOKE => {
+                let session = c.u64()?;
+                let existed = dep.revoke_session(session);
+                write_frame(&mut stream, MSG_REVOKED, &[existed as u8])
+            }
+            other => write_frame(
+                &mut stream,
+                MSG_DENIED,
+                &Deny::protocol(&format!("unknown frame type {other:#x}")).encode(),
+            ),
+        };
+        reply?;
+    }
+}
+
+fn handle_hello(
+    stream: &mut TcpStream,
+    dep: &Deployment,
+    opts: &NetOptions,
+    challenge: u64,
+    model: &str,
+) -> io::Result<()> {
+    let now_ms = dep.now_ms();
+    let report = attestation::quote(
+        &opts.platform_key,
+        opts.measurement,
+        challenge,
+        now_ms,
+        opts.attest_ttl_ms,
+    );
+    let grant = dep.establish_session(model);
+    let ttl_ms = dep.sessions().ttl_ms();
+    // The grant rides under the attested session key: a client that
+    // verified the report can check the lifecycle parameters were not
+    // rewritten in flight.
+    let sk = attestation::session_key(&opts.platform_key, &report);
+    let grant_tag = grant_mac(&sk, grant.session, grant.epoch, ttl_ms);
+    let mut p = Vec::with_capacity(32 + 8 + 8 + 8 + 32 + 8 + 4 + 8 + 32);
+    p.extend_from_slice(&report.measurement);
+    p.extend_from_slice(&report.challenge.to_le_bytes());
+    p.extend_from_slice(&report.issued_at_ms.to_le_bytes());
+    p.extend_from_slice(&report.ttl_ms.to_le_bytes());
+    p.extend_from_slice(&report.tag);
+    p.extend_from_slice(&grant.session.to_le_bytes());
+    p.extend_from_slice(&grant.epoch.to_le_bytes());
+    p.extend_from_slice(&ttl_ms.to_le_bytes());
+    p.extend_from_slice(&grant_tag);
+    write_frame(stream, MSG_ATTEST_GRANT, &p)
+}
+
+fn handle_infer(
+    stream: &mut TcpStream,
+    dep: &Deployment,
+    session: u64,
+    epoch: u32,
+    ciphertext: Vec<u8>,
+) -> io::Result<()> {
+    // Lifecycle gate first: the table is the authority on whether this
+    // session may serve and under which keystream epoch.
+    let live_epoch = match dep.session_epoch(session) {
+        Ok(e) => e,
+        Err(e) => {
+            return write_frame(stream, MSG_DENIED, &Deny::of_session(&e).encode());
+        }
+    };
+    if epoch != live_epoch {
+        let deny = Deny {
+            code: DenyCode::SessionExpired,
+            retry_after_ms: None,
+            refreshable: true,
+            message: format!(
+                "keystream epoch {epoch} is stale (session is at {live_epoch}); refresh"
+            ),
+        };
+        return write_frame(stream, MSG_DENIED, &deny.encode());
+    }
+    let Some(model) = dep.sessions().bound_model(session, dep.now_ms()) else {
+        let deny = Deny::of_session(&SessionError::Unknown { session });
+        return write_frame(stream, MSG_DENIED, &deny.encode());
+    };
+    match dep.submit(&model, ciphertext, session) {
+        Ok(reply) => match reply.recv() {
+            Some(resp) => {
+                if let Some(err) = resp.error {
+                    return write_frame(
+                        stream,
+                        MSG_DENIED,
+                        &Deny {
+                            code: DenyCode::Unavailable,
+                            retry_after_ms: None,
+                            refreshable: false,
+                            message: err,
+                        }
+                        .encode(),
+                    );
+                }
+                let mut p = Vec::with_capacity(4 + resp.probs.len() * 4 + 20);
+                p.extend_from_slice(&(resp.probs.len() as u32).to_le_bytes());
+                for v in &resp.probs {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+                p.extend_from_slice(&resp.latency_ms.to_le_bytes());
+                p.extend_from_slice(&resp.sim_ms.to_le_bytes());
+                p.extend_from_slice(&(resp.batch as u32).to_le_bytes());
+                write_frame(stream, MSG_INFER_OK, &p)
+            }
+            None => write_frame(
+                stream,
+                MSG_DENIED,
+                &Deny::protocol("reply channel closed").encode(),
+            ),
+        },
+        Err(adm) => write_frame(stream, MSG_DENIED, &Deny::of_admission(&adm).encode()),
+    }
+}
+
+fn grant_mac(session_key: &[u8; 32], session: u64, epoch: u32, ttl_ms: u64) -> [u8; 32] {
+    let mut data = b"origami-session-grant".to_vec();
+    data.extend_from_slice(&session.to_le_bytes());
+    data.extend_from_slice(&epoch.to_le_bytes());
+    data.extend_from_slice(&ttl_ms.to_le_bytes());
+    crypto::hmac_sha256(session_key, &data)
+}
+
+/// Attested client for the wire protocol.
+///
+/// `connect` runs the full handshake: challenge → report → verify
+/// (measurement, challenge, freshness, MAC) → derive the session key →
+/// check the grant MAC.  Transport only — the caller encrypts payloads
+/// under [`NetClient::session_word`] (the enclave session keystream).
+pub struct NetClient {
+    stream: TcpStream,
+    session: u64,
+    epoch: u32,
+    session_ttl_ms: u64,
+    report: Report,
+}
+
+impl NetClient {
+    /// Handshake against `addr`, binding the new session to `model`.
+    /// `expected_measurement` is the enclave the client is willing to
+    /// talk to; `challenge` should be fresh per connection.
+    pub fn connect(
+        addr: &SocketAddr,
+        model: &str,
+        expected_measurement: &[u8; 32],
+        platform_key: &[u8],
+        challenge: u64,
+    ) -> std::result::Result<Self, NetError> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let mut hello = Vec::with_capacity(8 + 2 + model.len());
+        hello.extend_from_slice(&challenge.to_le_bytes());
+        put_str(&mut hello, model);
+        write_frame(&mut stream, MSG_HELLO, &hello)?;
+        let (ty, payload) = read_frame(&mut stream)?;
+        if ty == MSG_DENIED {
+            let mut c = Cursor::new(&payload);
+            return Err(NetError::Denied(Deny::decode(&mut c)?));
+        }
+        if ty != MSG_ATTEST_GRANT {
+            return Err(NetError::Io(protocol_err("expected ATTEST_GRANT")));
+        }
+        let mut c = Cursor::new(&payload);
+        let report = Report {
+            measurement: c.arr32()?,
+            challenge: c.u64()?,
+            issued_at_ms: c.u64()?,
+            ttl_ms: c.u64()?,
+            tag: c.arr32()?,
+        };
+        let session = c.u64()?;
+        let epoch = c.u32()?;
+        let session_ttl_ms = c.u64()?;
+        let grant_tag = c.arr32()?;
+        // Verify at the report's own issue instant: the loopback harness
+        // shares the server clock, and a zero/short TTL still registers
+        // as stale — which is the property the stale-report test pins.
+        if !attestation::verify(
+            platform_key,
+            &report,
+            expected_measurement,
+            challenge,
+            report.issued_at_ms,
+        ) {
+            return Err(NetError::Attestation(if !attestation::is_fresh(&report, report.issued_at_ms) {
+                format!("stale report (ttl {} ms)", report.ttl_ms)
+            } else if &report.measurement != expected_measurement {
+                "measurement mismatch (wrong enclave)".to_string()
+            } else {
+                "bad challenge or MAC".to_string()
+            }));
+        }
+        let sk = attestation::session_key(platform_key, &report);
+        if grant_mac(&sk, session, epoch, session_ttl_ms) != grant_tag {
+            return Err(NetError::Attestation("grant MAC mismatch".into()));
+        }
+        Ok(Self {
+            stream,
+            session,
+            epoch,
+            session_ttl_ms,
+            report,
+        })
+    }
+
+    /// The attested session id.
+    pub fn session(&self) -> u64 {
+        self.session
+    }
+
+    /// The current keystream epoch (bumped by [`NetClient::refresh`]).
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Session TTL the server granted (ms).
+    pub fn session_ttl_ms(&self) -> u64 {
+        self.session_ttl_ms
+    }
+
+    /// The verified attestation report.
+    pub fn report(&self) -> &Report {
+        &self.report
+    }
+
+    /// The word payloads must be encrypted under (feeds the enclave's
+    /// session-key derivation and AES-CTR nonce).
+    pub fn session_word(&self) -> u64 {
+        crypto::session_word(self.session, self.epoch)
+    }
+
+    /// One inference round trip.  `ciphertext` must already be
+    /// encrypted under [`NetClient::session_word`].
+    pub fn infer(&mut self, ciphertext: &[u8]) -> std::result::Result<WireInference, NetError> {
+        let mut p = Vec::with_capacity(16 + ciphertext.len());
+        p.extend_from_slice(&self.session.to_le_bytes());
+        p.extend_from_slice(&self.epoch.to_le_bytes());
+        p.extend_from_slice(&(ciphertext.len() as u32).to_le_bytes());
+        p.extend_from_slice(ciphertext);
+        write_frame(&mut self.stream, MSG_INFER, &p)?;
+        let (ty, payload) = read_frame(&mut self.stream)?;
+        let mut c = Cursor::new(&payload);
+        match ty {
+            MSG_INFER_OK => {
+                let n = c.u32()? as usize;
+                let mut probs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    probs.push(c.f32()?);
+                }
+                Ok(WireInference {
+                    probs,
+                    latency_ms: c.f64()?,
+                    sim_ms: c.f64()?,
+                    batch: c.u32()?,
+                })
+            }
+            MSG_DENIED => Err(NetError::Denied(Deny::decode(&mut c)?)),
+            _ => Err(NetError::Io(protocol_err("expected INFER_OK or DENIED"))),
+        }
+    }
+
+    /// Refresh the session: bumps the keystream epoch and extends the
+    /// TTL.  Subsequent payloads must re-encrypt under the new
+    /// [`NetClient::session_word`].
+    pub fn refresh(&mut self) -> std::result::Result<u32, NetError> {
+        let mut p = Vec::with_capacity(8);
+        p.extend_from_slice(&self.session.to_le_bytes());
+        write_frame(&mut self.stream, MSG_REFRESH, &p)?;
+        let (ty, payload) = read_frame(&mut self.stream)?;
+        let mut c = Cursor::new(&payload);
+        match ty {
+            MSG_REFRESHED => {
+                let session = c.u64()?;
+                let epoch = c.u32()?;
+                let ttl = c.u64()?;
+                if session != self.session {
+                    return Err(NetError::Io(protocol_err("refresh for wrong session")));
+                }
+                self.epoch = epoch;
+                self.session_ttl_ms = ttl;
+                Ok(epoch)
+            }
+            MSG_DENIED => Err(NetError::Denied(Deny::decode(&mut c)?)),
+            _ => Err(NetError::Io(protocol_err("expected REFRESHED or DENIED"))),
+        }
+    }
+
+    /// Revoke the session server-side; returns whether it existed.
+    pub fn revoke(&mut self) -> std::result::Result<bool, NetError> {
+        let mut p = Vec::with_capacity(8);
+        p.extend_from_slice(&self.session.to_le_bytes());
+        write_frame(&mut self.stream, MSG_REVOKE, &p)?;
+        let (ty, payload) = read_frame(&mut self.stream)?;
+        let mut c = Cursor::new(&payload);
+        match ty {
+            MSG_REVOKED => Ok(c.u8()? != 0),
+            MSG_DENIED => Err(NetError::Denied(Deny::decode(&mut c)?)),
+            _ => Err(NetError::Io(protocol_err("expected REVOKED or DENIED"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------
+
+fn protocol_err(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+fn write_frame(w: &mut impl Write, ty: u8, payload: &[u8]) -> io::Result<()> {
+    let len = payload.len() + 1;
+    if len > MAX_FRAME_BYTES {
+        return Err(protocol_err("frame too large"));
+    }
+    let mut head = [0u8; 5];
+    head[..4].copy_from_slice(&(len as u32).to_le_bytes());
+    head[4] = ty;
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Blocking frame read (client side).
+fn read_frame(r: &mut impl Read) -> io::Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    decode_head(&head).and_then(|(ty, len)| {
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload)?;
+        Ok((ty, payload))
+    })
+}
+
+fn decode_head(head: &[u8; 5]) -> io::Result<(u8, usize)> {
+    let len = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(protocol_err("bad frame length"));
+    }
+    Ok((head[4], len - 1))
+}
+
+/// Server-side frame read under a read timeout: between frames the
+/// loop wakes every [`IDLE_POLL`] to check the stop flag; once a frame
+/// has started, timeouts keep accumulating bytes.  `Ok(None)` on clean
+/// EOF or shutdown.
+fn read_frame_stoppable(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> io::Result<Option<(u8, Vec<u8>)>> {
+    let mut head = [0u8; 5];
+    if !read_exact_stoppable(stream, &mut head, stop, true)? {
+        return Ok(None);
+    }
+    let (ty, len) = decode_head(&head)?;
+    let mut payload = vec![0u8; len];
+    if !read_exact_stoppable(stream, &mut payload, stop, false)? {
+        return Err(protocol_err("connection closed mid-frame"));
+    }
+    Ok(Some((ty, payload)))
+}
+
+/// `read_exact` that tolerates timeouts.  `Ok(false)` when the peer
+/// closed (or shutdown was requested) before the first byte;
+/// `interruptible` guards whether a zero-byte state may end cleanly.
+fn read_exact_stoppable(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    interruptible: bool,
+) -> io::Result<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 && interruptible {
+                    return Ok(false);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "peer closed mid-frame",
+                ));
+            }
+            Ok(n) => off += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::SeqCst) && off == 0 && interruptible {
+                    return Ok(false);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+// ---------------------------------------------------------------------
+// Payload cursor
+// ---------------------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            return Err(protocol_err("truncated payload"));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> io::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn arr32(&mut self) -> io::Result<[u8; 32]> {
+        Ok(self.take(32)?.try_into().unwrap())
+    }
+
+    fn str(&mut self) -> io::Result<String> {
+        let len = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        String::from_utf8(self.take(len)?.to_vec())
+            .map_err(|_| protocol_err("invalid utf-8 string"))
+    }
+
+    fn bytes_u32(&mut self) -> io::Result<Vec<u8>> {
+        let len = self.u32()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    out.extend_from_slice(&(bytes.len().min(u16::MAX as usize) as u16).to_le_bytes());
+    out.extend_from_slice(&bytes[..bytes.len().min(u16::MAX as usize)]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deny_roundtrips_with_and_without_hints() {
+        let with_hint = Deny {
+            code: DenyCode::RateLimited,
+            retry_after_ms: Some(42),
+            refreshable: false,
+            message: "slow down".into(),
+        };
+        let expired = Deny {
+            code: DenyCode::SessionExpired,
+            retry_after_ms: None,
+            refreshable: true,
+            message: "session 9 expired".into(),
+        };
+        for d in [with_hint, expired] {
+            let bytes = d.encode();
+            let back = Deny::decode(&mut Cursor::new(&bytes)).unwrap();
+            assert_eq!(back, d);
+        }
+    }
+
+    #[test]
+    fn admission_errors_map_to_wire_codes() {
+        let rl = AdmissionError::RateLimited {
+            model: "m".into(),
+            retry_after_ms: 7,
+        };
+        let d = Deny::of_admission(&rl);
+        assert_eq!(d.code, DenyCode::RateLimited);
+        assert_eq!(d.retry_after_ms, Some(7));
+        let exp = AdmissionError::SessionExpired {
+            session: 3,
+            refreshable: true,
+        };
+        let d = Deny::of_admission(&exp);
+        assert_eq!(d.code, DenyCode::SessionExpired);
+        assert!(d.refreshable);
+        assert_eq!(d.retry_after_ms, None);
+    }
+
+    #[test]
+    fn frame_head_rejects_oversize_and_zero() {
+        let mut head = [0u8; 5];
+        head[..4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_head(&head).is_err(), "zero length");
+        head[..4].copy_from_slice(&(MAX_FRAME_BYTES as u32 + 1).to_le_bytes());
+        assert!(decode_head(&head).is_err(), "oversize");
+        head[..4].copy_from_slice(&5u32.to_le_bytes());
+        head[4] = MSG_HELLO;
+        assert_eq!(decode_head(&head).unwrap(), (MSG_HELLO, 4));
+    }
+
+    #[test]
+    fn frame_roundtrip_over_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, MSG_INFER, b"payload").unwrap();
+        let (ty, payload) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(ty, MSG_INFER);
+        assert_eq!(payload, b"payload");
+    }
+
+    #[test]
+    fn cursor_guards_truncation() {
+        let mut c = Cursor::new(&[1, 2, 3]);
+        assert_eq!(c.u8().unwrap(), 1);
+        assert!(c.u64().is_err(), "only 2 bytes left");
+    }
+}

@@ -33,7 +33,9 @@ use super::fabric::{FabricMetrics, FabricOptions, LaneFabric};
 use super::pool::{PoolMetrics, PoolOptions, WorkerPool};
 use super::scheduler::{BatchScheduler, Tier2Finisher};
 use super::server::ServingEngine;
+use super::session::{SessionError, SessionGrant, SessionTable};
 use super::telemetry::{AdmissionSnapshot, ScaleSnapshot, Stage, TelemetryHub, TenantTelemetry};
+use crate::crypto;
 use crate::util::threadpool::Channel;
 
 /// A registered serving backend: the classic shared-batcher engine or
@@ -215,6 +217,10 @@ pub enum AdmissionError {
         bound: String,
         requested: String,
     },
+    /// The attested session's TTL lapsed.  `refreshable` hints whether
+    /// a session refresh (keystream-epoch bump) is enough to resume, or
+    /// the session is gone and the client must re-attest from scratch.
+    SessionExpired { session: u64, refreshable: bool },
     /// The model's pool refused the request (shutting down).
     Unavailable { model: String },
     /// The tenant's token-bucket rate limit is exhausted; retry after
@@ -277,6 +283,18 @@ impl fmt::Display for AdmissionError {
             } => write!(
                 f,
                 "session {session} is bound to model `{bound}`; cannot serve `{requested}`"
+            ),
+            AdmissionError::SessionExpired {
+                session,
+                refreshable,
+            } => write!(
+                f,
+                "session {session} expired; {}",
+                if *refreshable {
+                    "refresh the session (epoch bump) to resume"
+                } else {
+                    "re-attest to establish a new session"
+                }
             ),
             AdmissionError::Unavailable { model } => {
                 write!(f, "deployment for model `{model}` is shutting down")
@@ -491,7 +509,13 @@ struct DeploymentCore {
     /// name, so a concurrent duplicate deploy can never overwrite the
     /// winner's ledger footprint between its register and its charge.
     deploying: Mutex<HashSet<String>>,
-    sessions: Mutex<HashMap<u64, String>>,
+    /// Session lifecycle state (binding, keystream epoch, expiry): a
+    /// sharded table with TTL/LRU eviction, so long-lived deployments
+    /// no longer leak memory linearly in distinct session ids (the old
+    /// flat `Mutex<HashMap<u64, String>>` retained every binding
+    /// forever) and submits from different sessions stripe across
+    /// independent locks.  The autoscaler tick doubles as its sweeper.
+    sessions: SessionTable,
     policy: AutoscalePolicy,
     /// EPC residency ledger (None = EPC-aware co-scheduling off).  Pools
     /// whose `worker_epc_bytes > 0` charge every worker here; the tick
@@ -533,7 +557,16 @@ impl DeploymentCore {
     /// reclaim covers the deficit, the grow is *denied* and recorded in
     /// the tenant's [`ScaleCounters`](super::telemetry::ScaleCounters)
     /// — the pool never grows into a paging storm.
+    /// Milliseconds since the deployment epoch: the clock the admission
+    /// buckets and the session table both run on.
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
     fn tick(&self) {
+        // retire expired sessions first — the tick is the table's sweep
+        // cadence, so session memory is bounded by (arrival rate × TTL)
+        self.sessions.sweep(self.now_ms());
         let p = &self.policy;
         let mut entries: Vec<(String, Arc<WorkerPool>, Option<f64>, f64)> = {
             let g = self.models.lock().unwrap();
@@ -814,6 +847,14 @@ const TELEMETRY_WINDOW_MS: u64 = 1_000;
 /// tiny rate would otherwise hint absurd (or non-finite) delays.
 const MAX_RETRY_HINT_MS: f64 = 60_000.0;
 
+/// Default session-table stripe count: enough that concurrent submit
+/// threads rarely contend on one lock, cheap enough to sweep.
+pub const DEFAULT_SESSION_SHARDS: usize = 64;
+
+/// Default session TTL (10 minutes): idle sessions are retired by the
+/// autoscaler-tick sweep instead of accumulating forever.
+pub const DEFAULT_SESSION_TTL_MS: u64 = 600_000;
+
 fn clamp_hint_ms(ms: f64) -> u64 {
     ms.clamp(0.0, MAX_RETRY_HINT_MS).ceil() as u64
 }
@@ -849,6 +890,24 @@ impl Deployment {
         policy: AutoscalePolicy,
         epc: Option<EpcOptions>,
     ) -> Self {
+        Self::new_with_sessions(
+            fabric_opts,
+            policy,
+            epc,
+            SessionTable::new(DEFAULT_SESSION_SHARDS, DEFAULT_SESSION_TTL_MS),
+        )
+    }
+
+    /// [`Deployment::new_with_epc`], plus an explicitly configured
+    /// session table (shard count, TTL, optional LRU capacity) — the
+    /// network front door sizes this from `--session-shards` /
+    /// `--session-ttl`.
+    pub fn new_with_sessions(
+        fabric_opts: FabricOptions,
+        policy: AutoscalePolicy,
+        epc: Option<EpcOptions>,
+        sessions: SessionTable,
+    ) -> Self {
         let keep = (TELEMETRY_WINDOW_MS / policy.tick_ms.max(1)).clamp(5, 200) as usize;
         let telemetry = Arc::new(TelemetryHub::new(keep));
         Self {
@@ -856,7 +915,7 @@ impl Deployment {
                 fabric: LaneFabric::start_with_telemetry(fabric_opts, Some(telemetry.clone())),
                 models: Mutex::new(HashMap::new()),
                 deploying: Mutex::new(HashSet::new()),
-                sessions: Mutex::new(HashMap::new()),
+                sessions,
                 policy,
                 epc: epc.map(|o| Arc::new(EpcLedger::new(o))),
                 telemetry,
@@ -1133,29 +1192,44 @@ impl Deployment {
             )
         };
         // Session binding: first touch claims the id for this model.
-        // The map grows with distinct session ids for the deployment's
-        // lifetime — sessions are the attested client channels, so that
-        // is the intended bookkeeping, not a cache.
-        let newly_bound = {
-            let mut s = self.core.sessions.lock().unwrap();
-            match s.get(&session) {
-                Some(bound) if bound != model => {
-                    return Err(AdmissionError::SessionCollision {
-                        session,
-                        bound: bound.clone(),
-                        requested: model.to_string(),
-                    });
-                }
-                Some(_) => false,
-                None => {
-                    s.insert(session, model.to_string());
-                    true
-                }
+        // The table owns the full lifecycle — an expired implicit
+        // binding recycles in place, an expired *attested* session is
+        // rejected with a typed error until the client refreshes, and
+        // the sweep keeps the table bounded by (arrival rate × TTL).
+        let table_now_ms = self.core.now_ms();
+        let binding = match self.core.sessions.bind(session, model, table_now_ms) {
+            Ok(b) => b,
+            Err(SessionError::Collision { bound }) => {
+                return Err(AdmissionError::SessionCollision {
+                    session,
+                    bound,
+                    requested: model.to_string(),
+                });
+            }
+            Err(SessionError::Expired {
+                session,
+                refreshable,
+            }) => {
+                return Err(AdmissionError::SessionExpired {
+                    session,
+                    refreshable,
+                });
+            }
+            Err(SessionError::Unknown { session }) => {
+                return Err(AdmissionError::SessionExpired {
+                    session,
+                    refreshable: false,
+                });
             }
         };
+        let newly_bound = binding.newly_bound;
+        // The keystream nonce the enclave derives is the epoch-folded
+        // session word, so a refreshed session never replays a retired
+        // keystream (epoch 0 is bit-identical to the bare id).
+        let session_word = crypto::session_word(session, binding.epoch);
         let unbind = |this: &Self| {
             if newly_bound {
-                this.core.sessions.lock().unwrap().remove(&session);
+                this.core.sessions.unbind(session);
             }
         };
         // Admission gate: the bucket clock is wall milliseconds since
@@ -1196,7 +1270,8 @@ impl Deployment {
                     // the degraded tier is saturated too: a plain shed
                     return Err(shed(self));
                 };
-                return match dpool.submit_with_permit(&target, ciphertext, session, dpermit) {
+                return match dpool.submit_with_permit(&target, ciphertext, session_word, dpermit)
+                {
                     Ok(reply) => {
                         telemetry.admission().record_degraded();
                         dtel.admission().record_admitted();
@@ -1241,7 +1316,7 @@ impl Deployment {
                 });
             }
         };
-        match pool.submit_with_permit(model, ciphertext, session, permit) {
+        match pool.submit_with_permit(model, ciphertext, session_word, permit) {
             Ok(reply) => {
                 // counted only once the request actually entered the
                 // pool — a shutdown-time failure must not inflate the
@@ -1259,6 +1334,42 @@ impl Deployment {
                 })
             }
         }
+    }
+
+    /// The deployment's session table (binding, epoch, expiry state).
+    pub fn sessions(&self) -> &SessionTable {
+        &self.core.sessions
+    }
+
+    /// Milliseconds on the deployment clock — the session table's and
+    /// the admission buckets' shared time base.
+    pub fn now_ms(&self) -> u64 {
+        self.core.now_ms()
+    }
+
+    /// Issue a fresh attested session bound to `model` (the network
+    /// front door calls this after a successful attestation handshake).
+    pub fn establish_session(&self, model: &str) -> SessionGrant {
+        self.core.sessions.establish(model, self.core.now_ms())
+    }
+
+    /// Bump the session's keystream epoch and extend its TTL.
+    pub fn refresh_session(
+        &self,
+        session: u64,
+    ) -> std::result::Result<SessionGrant, SessionError> {
+        self.core.sessions.refresh(session, self.core.now_ms())
+    }
+
+    /// Drop a session outright; returns whether it existed.
+    pub fn revoke_session(&self, session: u64) -> bool {
+        self.core.sessions.revoke(session)
+    }
+
+    /// The session's live keystream epoch (the client must encrypt
+    /// under the matching session word), or why it cannot serve.
+    pub fn session_epoch(&self, session: u64) -> std::result::Result<u32, SessionError> {
+        self.core.sessions.epoch_of(session, self.core.now_ms())
     }
 
     /// A tenant's admission counters (admitted / rate-limited / quota /

@@ -14,6 +14,7 @@ use super::api::{BatchRecord, InferRequest, InferResponse};
 use super::batcher::DynamicBatcher;
 use super::scheduler::BatchScheduler;
 use crate::util::stats::Summary;
+use crate::util::sync::lock_recover;
 use crate::util::threadpool::Channel;
 
 /// Aggregated serving metrics.
@@ -87,17 +88,53 @@ impl ServingEngine {
                             }
                             Err(e) => {
                                 eprintln!("[serve] worker {i} failed to start: {e:#}");
-                                m.lock().unwrap().errors += 1;
+                                lock_recover(&m).errors += 1;
                                 r.wait();
                                 return;
                             }
                         };
                         while let Some(batch) = b.next_batch() {
-                            match sched.execute(batch) {
-                                Ok(rec) => m.lock().unwrap().record(&rec),
-                                Err(e) => {
+                            // A panicking batch must not take the worker
+                            // (or, via a poisoned metrics mutex, the
+                            // whole pool) down with it: catch it, reply
+                            // a typed error to every rider, and rebuild
+                            // the scheduler — its internal state is
+                            // suspect after an unwind.
+                            let replies: Vec<_> = batch
+                                .iter()
+                                .map(|q| (q.id, q.reply.clone(), q.submitted_at))
+                                .collect();
+                            let run = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| sched.execute(batch)),
+                            );
+                            match run {
+                                Ok(Ok(rec)) => lock_recover(&m).record(&rec),
+                                Ok(Err(e)) => {
                                     eprintln!("[serve] batch failed: {e:#}");
-                                    m.lock().unwrap().errors += 1;
+                                    lock_recover(&m).errors += 1;
+                                }
+                                Err(_) => {
+                                    eprintln!("[serve] worker {i}: batch panicked");
+                                    for (id, reply, t0) in replies {
+                                        let _ = reply.send(InferResponse {
+                                            id,
+                                            probs: vec![],
+                                            latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                                            sim_ms: 0.0,
+                                            batch: 0,
+                                            error: Some("worker panicked".into()),
+                                        });
+                                    }
+                                    lock_recover(&m).errors += 1;
+                                    match f(i) {
+                                        Ok(s) => sched = s,
+                                        Err(e) => {
+                                            eprintln!(
+                                                "[serve] worker {i} failed to rebuild: {e:#}"
+                                            );
+                                            return;
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -144,11 +181,7 @@ impl ServingEngine {
         let resp = reply
             .recv()
             .ok_or_else(|| anyhow::anyhow!("reply channel closed"))?;
-        self.metrics
-            .lock()
-            .unwrap()
-            .latency_ms
-            .record(resp.latency_ms);
+        lock_recover(&self.metrics).latency_ms.record(resp.latency_ms);
         Ok(resp)
     }
 
@@ -163,7 +196,7 @@ impl ServingEngine {
             let _ = w.join();
         }
         Arc::try_unwrap(std::mem::take(&mut self.metrics))
-            .map(|m| m.into_inner().unwrap())
+            .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()))
             .unwrap_or_default()
     }
 }
@@ -174,5 +207,60 @@ impl Drop for ServingEngine {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::enclave::cost::Ledger;
+    use crate::strategies::Strategy;
+
+    /// Detonates on session 666; healthy otherwise.
+    struct Grenade;
+
+    impl Strategy for Grenade {
+        fn name(&self) -> String {
+            "grenade".into()
+        }
+
+        fn setup(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn infer(
+            &mut self,
+            _ciphertext: &[u8],
+            batch: usize,
+            sessions: &[u64],
+            _ledger: &mut Ledger,
+        ) -> Result<Vec<f32>> {
+            if sessions.contains(&666) {
+                panic!("injected batch panic");
+            }
+            Ok(vec![0.5; batch])
+        }
+
+        fn enclave_requirement_bytes(&self) -> u64 {
+            0
+        }
+    }
+
+    #[test]
+    fn panicking_batch_replies_and_pool_keeps_draining() {
+        let engine = ServingEngine::start(1, 1, 0.0, |_| {
+            Ok(BatchScheduler::new(Box::new(Grenade), 16, vec![1]))
+        });
+        // the grenade batch: the client gets a typed error, not a hang
+        // on a dropped reply channel
+        let resp = engine.infer_blocking("m", vec![0u8; 16], 666).unwrap();
+        assert_eq!(resp.error.as_deref(), Some("worker panicked"));
+        // the worker rebuilt its scheduler and the pool keeps serving —
+        // the metrics mutex was not poisoned into a panic cascade
+        let ok = engine.infer_blocking("m", vec![0u8; 16], 7).unwrap();
+        assert!(ok.error.is_none(), "pool must drain after a panic");
+        let metrics = engine.shutdown();
+        assert_eq!(metrics.errors, 1);
+        assert!(metrics.requests >= 1);
     }
 }

@@ -1,0 +1,516 @@
+//! Sharded session table: binding, keystream epoch and expiry state for
+//! every live client session.
+//!
+//! The paper's deployment model is "millions of users" — session state
+//! must be (a) bounded, so long-lived deployments do not leak memory
+//! linearly in distinct session ids, and (b) concurrent, so the submit
+//! hot path does not serialize every tenant behind one mutex.  The table
+//! is N-way striped: a session id selects a shard by hash, each shard is
+//! an independent `Mutex<HashMap>` with its own lazy-LRU queue, and a
+//! TTL sweep walks the shards one lock at a time.
+//!
+//! Each entry owns the full lifecycle of one session:
+//!
+//! * **binding** — the model the session is pinned to (first touch claims
+//!   it; a live conflicting bind is a collision),
+//! * **epoch** — the AES-CTR keystream epoch.  The nonce the enclave
+//!   derives is `crypto::session_word(session, epoch)`, so bumping the
+//!   epoch on refresh retires the old keystream instead of replaying it,
+//! * **expiry** — an absolute deadline (`established/refreshed + ttl`).
+//!   Attested sessions past their deadline are rejected with a typed
+//!   [`SessionExpired`](super::router::AdmissionError::SessionExpired)
+//!   until refreshed; implicit (in-process, unattested) bindings simply
+//!   re-bind cleanly, which is also what makes an expired-then-reused id
+//!   safe instead of a phantom collision.
+//!
+//! All methods take `now_ms` explicitly (milliseconds on the caller's
+//! monotone clock) so expiry is deterministic under test.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::crypto;
+
+/// TTL that never expires (saturating deadline arithmetic).
+pub const SESSION_TTL_FOREVER: u64 = u64::MAX;
+
+/// First session id the table issues for attested (network) sessions:
+/// high enough that hand-picked in-process ids (tests, benches use small
+/// integers) never collide with the monotone allocator, low enough that
+/// every issued id stays inside [`crypto::SESSION_ID_MASK`] so the
+/// epoch-folded session word remains injective.
+const NET_SESSION_BASE: u64 = 1 << 32;
+
+/// How a `bind` call resolved.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Binding {
+    /// Keystream epoch the submit must encrypt/decrypt under.
+    pub epoch: u32,
+    /// True when this call created (or re-created) the binding — the
+    /// caller must release it again on any denial path.
+    pub newly_bound: bool,
+}
+
+/// Typed session-table failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionError {
+    /// The id is live and pinned to a different model.
+    Collision { bound: String },
+    /// The session's TTL lapsed.  `refreshable` distinguishes an entry
+    /// that is still present (a `refresh` — epoch bump — resumes it)
+    /// from one the sweep already retired (the client must re-attest).
+    Expired { session: u64, refreshable: bool },
+    /// No such session (never established, or revoked).
+    Unknown { session: u64 },
+}
+
+/// What `establish`/`refresh` hand back to the client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionGrant {
+    pub session: u64,
+    pub epoch: u32,
+    /// Absolute expiry deadline on the table clock.
+    pub expires_at_ms: u64,
+}
+
+struct Entry {
+    model: String,
+    epoch: u32,
+    expires_at_ms: u64,
+    /// Established through the attested handshake (expiry is enforced)
+    /// vs. implicitly bound by an in-process submit (expiry recycles).
+    attested: bool,
+    /// Stamp of this entry's newest LRU-queue record; older queue
+    /// records for the same id are skipped when they surface.
+    stamp: u64,
+}
+
+struct Shard {
+    map: HashMap<u64, Entry>,
+    /// Lazy LRU order: (session, stamp) pushed on every touch.  Stale
+    /// records (stamp no longer current) are discarded on pop, so the
+    /// queue needs no mid-queue removal.
+    lru: VecDeque<(u64, u64)>,
+    next_stamp: u64,
+}
+
+impl Shard {
+    fn touch(&mut self, session: u64) {
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        if let Some(e) = self.map.get_mut(&session) {
+            e.stamp = stamp;
+        }
+        self.lru.push_back((session, stamp));
+        // Bound queue garbage: if lazy records pile up far past the live
+        // set, compact by dropping stale heads.
+        if self.lru.len() > self.map.len().saturating_mul(4).max(64) {
+            while let Some(&(s, st)) = self.lru.front() {
+                if self.map.get(&s).map(|e| e.stamp) == Some(st) {
+                    break;
+                }
+                self.lru.pop_front();
+            }
+        }
+    }
+
+    /// Evict the least-recently-touched entry; returns false if empty.
+    fn evict_lru(&mut self) -> bool {
+        while let Some((s, st)) = self.lru.pop_front() {
+            if self.map.get(&s).map(|e| e.stamp) == Some(st) {
+                self.map.remove(&s);
+                return true;
+            }
+        }
+        // queue exhausted (all records stale) — drop an arbitrary entry
+        if let Some(&s) = self.map.keys().next() {
+            self.map.remove(&s);
+            return true;
+        }
+        false
+    }
+}
+
+/// The sharded session table (see module docs).
+pub struct SessionTable {
+    shards: Vec<Mutex<Shard>>,
+    ttl_ms: u64,
+    /// Per-shard live-entry ceiling (LRU backstop above TTL); 0 = none.
+    shard_cap: usize,
+    next_id: AtomicU64,
+}
+
+impl SessionTable {
+    /// `shards` is rounded up to a power of two; `ttl_ms` is the
+    /// lifetime granted at establish/bind/refresh time (0 = immediate
+    /// expiry, [`SESSION_TTL_FOREVER`] = never).
+    pub fn new(shards: usize, ttl_ms: u64) -> Self {
+        Self::with_capacity(shards, ttl_ms, 0)
+    }
+
+    /// [`SessionTable::new`] plus a total live-session ceiling: inserts
+    /// past `max_sessions` evict the shard's least-recently-used entry,
+    /// so the table stays bounded even if nothing ever expires.
+    pub fn with_capacity(shards: usize, ttl_ms: u64, max_sessions: usize) -> Self {
+        let n = shards.clamp(1, 1 << 16).next_power_of_two();
+        Self {
+            shards: (0..n)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        lru: VecDeque::new(),
+                        next_stamp: 0,
+                    })
+                })
+                .collect(),
+            ttl_ms,
+            shard_cap: if max_sessions == 0 {
+                0
+            } else {
+                max_sessions.div_ceil(n)
+            },
+            next_id: AtomicU64::new(NET_SESSION_BASE),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn ttl_ms(&self) -> u64 {
+        self.ttl_ms
+    }
+
+    fn shard(&self, session: u64) -> MutexGuard<'_, Shard> {
+        // Fibonacci-hash the id so sequential ids spread across shards.
+        let h = session.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let idx = (h >> 32) as usize & (self.shards.len() - 1);
+        self.shards[idx]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn deadline(&self, now_ms: u64) -> u64 {
+        now_ms.saturating_add(self.ttl_ms)
+    }
+
+    fn insert(&self, sh: &mut Shard, session: u64, entry: Entry) {
+        if self.shard_cap > 0 && sh.map.len() >= self.shard_cap {
+            sh.evict_lru();
+        }
+        sh.map.insert(session, entry);
+        sh.touch(session);
+    }
+
+    /// Issue a fresh attested session bound to `model`.  Ids are
+    /// allocated monotonically and never reused, so an expired id can
+    /// never resurrect another client's keystream.
+    pub fn establish(&self, model: &str, now_ms: u64) -> SessionGrant {
+        loop {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed) & crypto::SESSION_ID_MASK;
+            let mut sh = self.shard(id);
+            if sh.map.contains_key(&id) {
+                continue; // wrapped into a live hand-picked id; skip it
+            }
+            let expires_at_ms = self.deadline(now_ms);
+            self.insert(
+                &mut sh,
+                id,
+                Entry {
+                    model: model.to_string(),
+                    epoch: 0,
+                    expires_at_ms,
+                    attested: true,
+                    stamp: 0,
+                },
+            );
+            return SessionGrant {
+                session: id,
+                epoch: 0,
+                expires_at_ms,
+            };
+        }
+    }
+
+    /// Resolve the binding for a submit: first touch claims the id for
+    /// `model`; a live conflicting binding is a collision; an expired
+    /// attested session is rejected (refresh required); an expired
+    /// implicit binding is recycled in place.
+    pub fn bind(
+        &self,
+        session: u64,
+        model: &str,
+        now_ms: u64,
+    ) -> Result<Binding, SessionError> {
+        let mut sh = self.shard(session);
+        if let Some(e) = sh.map.get_mut(&session) {
+            if now_ms >= e.expires_at_ms {
+                if e.attested {
+                    return Err(SessionError::Expired {
+                        session,
+                        refreshable: true,
+                    });
+                }
+                // implicit binding past its TTL: recycle in place (the
+                // expired-then-reused regression) — same epoch space is
+                // safe because in-process callers always encrypt epoch 0
+                // and the keystream is theirs alone.
+                e.model = model.to_string();
+                e.expires_at_ms = self.deadline(now_ms);
+                let epoch = e.epoch;
+                sh.touch(session);
+                return Ok(Binding {
+                    epoch,
+                    newly_bound: true,
+                });
+            }
+            if e.model != model {
+                return Err(SessionError::Collision {
+                    bound: e.model.clone(),
+                });
+            }
+            let epoch = e.epoch;
+            sh.touch(session);
+            return Ok(Binding {
+                epoch,
+                newly_bound: false,
+            });
+        }
+        let expires_at_ms = self.deadline(now_ms);
+        self.insert(
+            &mut sh,
+            session,
+            Entry {
+                model: model.to_string(),
+                epoch: 0,
+                expires_at_ms,
+                attested: false,
+                stamp: 0,
+            },
+        );
+        Ok(Binding {
+            epoch: 0,
+            newly_bound: true,
+        })
+    }
+
+    /// Release a binding this submit attempt created (denial path).
+    pub fn unbind(&self, session: u64) {
+        self.shard(session).map.remove(&session);
+    }
+
+    /// The live epoch of `session`, or why it cannot serve.
+    pub fn epoch_of(&self, session: u64, now_ms: u64) -> Result<u32, SessionError> {
+        let sh = self.shard(session);
+        match sh.map.get(&session) {
+            None => Err(SessionError::Unknown { session }),
+            Some(e) if now_ms >= e.expires_at_ms => Err(SessionError::Expired {
+                session,
+                refreshable: true,
+            }),
+            Some(e) => Ok(e.epoch),
+        }
+    }
+
+    /// Bump the keystream epoch and extend the deadline.  Works on an
+    /// expired-but-present entry (that is the point of refresh); a swept
+    /// or revoked session returns `Unknown` — the client re-attests.
+    pub fn refresh(&self, session: u64, now_ms: u64) -> Result<SessionGrant, SessionError> {
+        let mut sh = self.shard(session);
+        let Some(e) = sh.map.get_mut(&session) else {
+            return Err(SessionError::Unknown { session });
+        };
+        e.epoch = e.epoch.wrapping_add(1);
+        e.expires_at_ms = self.deadline(now_ms);
+        let grant = SessionGrant {
+            session,
+            epoch: e.epoch,
+            expires_at_ms: e.expires_at_ms,
+        };
+        sh.touch(session);
+        Ok(grant)
+    }
+
+    /// Drop the session outright; returns whether it existed.
+    pub fn revoke(&self, session: u64) -> bool {
+        self.shard(session).map.remove(&session).is_some()
+    }
+
+    /// Retire every expired entry; returns how many were removed.  One
+    /// shard lock at a time, so concurrent submits only ever contend on
+    /// the shard currently under the broom.
+    pub fn sweep(&self, now_ms: u64) -> usize {
+        let mut removed = 0;
+        for shard in &self.shards {
+            let mut sh = shard.lock().unwrap_or_else(|e| e.into_inner());
+            let Shard { map, lru, .. } = &mut *sh;
+            let before = map.len();
+            map.retain(|_, e| now_ms < e.expires_at_ms);
+            removed += before - map.len();
+            lru.retain(|(s, st)| map.get(s).map(|e| e.stamp) == Some(*st));
+        }
+        removed
+    }
+
+    /// Live entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).map.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, session: u64) -> bool {
+        self.shard(session).map.contains_key(&session)
+    }
+
+    /// The model `session` is bound to, if live.
+    pub fn bound_model(&self, session: u64, now_ms: u64) -> Option<String> {
+        let sh = self.shard(session);
+        sh.map
+            .get(&session)
+            .filter(|e| now_ms < e.expires_at_ms)
+            .map(|e| e.model.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_claims_then_collides_then_unbinds() {
+        let t = SessionTable::new(8, SESSION_TTL_FOREVER);
+        let b = t.bind(7, "a", 0).unwrap();
+        assert!(b.newly_bound);
+        assert_eq!(b.epoch, 0);
+        // same model: not newly bound
+        assert!(!t.bind(7, "a", 0).unwrap().newly_bound);
+        // different model: collision
+        assert_eq!(
+            t.bind(7, "b", 0),
+            Err(SessionError::Collision { bound: "a".into() })
+        );
+        t.unbind(7);
+        assert!(t.bind(7, "b", 0).unwrap().newly_bound);
+    }
+
+    #[test]
+    fn ttl_zero_sweep_empties_ten_thousand_bindings() {
+        // the session-leak regression: the old flat map retained every
+        // distinct id forever
+        let t = SessionTable::new(16, 0);
+        for s in 0..10_000u64 {
+            t.bind(s, "m", 0).unwrap();
+        }
+        assert_eq!(t.len(), 10_000);
+        t.sweep(1);
+        assert_eq!(t.len(), 0, "ttl=0 sessions must all sweep away");
+    }
+
+    #[test]
+    fn expired_then_reused_id_rebinds_cleanly() {
+        let t = SessionTable::new(4, 100);
+        t.bind(42, "a", 0).unwrap();
+        // past the deadline the id re-binds — to a different model —
+        // instead of raising a phantom collision
+        let b = t.bind(42, "b", 100).unwrap();
+        assert!(b.newly_bound);
+        assert_eq!(t.bound_model(42, 150), Some("b".into()));
+    }
+
+    #[test]
+    fn attested_expiry_is_typed_and_refresh_resumes() {
+        let t = SessionTable::new(4, 50);
+        let g = t.establish("m", 0);
+        assert_eq!(g.epoch, 0);
+        assert!(t.bind(g.session, "m", 10).is_ok());
+        // past the deadline: typed expiry, not a silent rebind
+        assert_eq!(
+            t.bind(g.session, "m", 60),
+            Err(SessionError::Expired {
+                session: g.session,
+                refreshable: true
+            })
+        );
+        let r = t.refresh(g.session, 60).unwrap();
+        assert_eq!(r.epoch, 1, "refresh bumps the keystream epoch");
+        assert!(t.bind(g.session, "m", 70).is_ok());
+        // a swept session cannot refresh — the client must re-attest
+        t.revoke(g.session);
+        assert_eq!(
+            t.refresh(g.session, 70),
+            Err(SessionError::Unknown { session: g.session })
+        );
+    }
+
+    #[test]
+    fn establish_issues_distinct_in_mask_ids() {
+        let t = SessionTable::new(4, SESSION_TTL_FOREVER);
+        let a = t.establish("m", 0);
+        let b = t.establish("m", 0);
+        assert_ne!(a.session, b.session);
+        assert_eq!(a.session & !crypto::SESSION_ID_MASK, 0);
+        assert_eq!(b.session & !crypto::SESSION_ID_MASK, 0);
+    }
+
+    #[test]
+    fn lru_capacity_bounds_the_table() {
+        let t = SessionTable::with_capacity(4, SESSION_TTL_FOREVER, 64);
+        for s in 0..10_000u64 {
+            t.bind(s, "m", 0).unwrap();
+        }
+        assert!(
+            t.len() <= 64,
+            "LRU backstop must hold the table at capacity, got {}",
+            t.len()
+        );
+    }
+
+    #[test]
+    fn epoch_of_reports_lifecycle() {
+        let t = SessionTable::new(4, 100);
+        let g = t.establish("m", 0);
+        assert_eq!(t.epoch_of(g.session, 50), Ok(0));
+        assert_eq!(
+            t.epoch_of(g.session, 100),
+            Err(SessionError::Expired {
+                session: g.session,
+                refreshable: true
+            })
+        );
+        assert_eq!(
+            t.epoch_of(999_999, 0),
+            Err(SessionError::Unknown { session: 999_999 })
+        );
+    }
+
+    #[test]
+    fn sweep_under_concurrent_binds_stays_consistent() {
+        use std::sync::Arc;
+        let t = Arc::new(SessionTable::new(8, 10));
+        let mut handles = vec![];
+        for w in 0..4u64 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2_000u64 {
+                    let s = w * 1_000_000 + i;
+                    t.bind(s, "m", i / 100).unwrap();
+                }
+            }));
+        }
+        for _ in 0..20 {
+            t.sweep(25);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        t.sweep(u64::MAX - 1);
+        assert_eq!(t.len(), 0);
+    }
+}

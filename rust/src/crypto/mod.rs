@@ -51,6 +51,26 @@ impl AesCtr {
     }
 }
 
+/// Low 48 bits of a session word: the session id proper.  The high 16
+/// bits carry the keystream epoch (see [`session_word`]).
+pub const SESSION_ID_MASK: u64 = 0x0000_FFFF_FFFF_FFFF;
+
+/// Fold a keystream epoch into a session id.
+///
+/// The per-session AES-CTR nonce (and the per-session key derivation
+/// purpose string) are built from this word, NOT the bare id: a bare-id
+/// nonce replays the identical keystream whenever an id is reused after
+/// expiry or kept across a refresh — XORing two ciphertexts under the
+/// same keystream leaks their plaintext difference.  Mixing the epoch
+/// into the high 16 bits gives every (session, epoch) pair a distinct
+/// nonce while keeping epoch 0 bit-identical to the legacy bare id for
+/// every id below 2^48 (which is why the session table only issues ids
+/// inside [`SESSION_ID_MASK`]).  The epoch wraps at 2^16 refreshes; the
+/// session TTL retires ids long before that.
+pub fn session_word(session: u64, epoch: u32) -> u64 {
+    ((epoch as u64 & 0xFFFF) << 48) | (session & SESSION_ID_MASK)
+}
+
 /// HMAC-SHA256 tag.
 pub fn hmac_sha256(key: &[u8], data: &[u8]) -> [u8; 32] {
     let mut mac = <HmacSha256 as Mac>::new_from_slice(key).expect("hmac key");
@@ -151,6 +171,34 @@ mod tests {
         AesCtr::new(&key, 1).apply(0, &mut a);
         AesCtr::new(&key, 2).apply(0, &mut b);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn session_word_epoch_zero_is_the_bare_id() {
+        assert_eq!(session_word(12345, 0), 12345);
+        assert_eq!(session_word(SESSION_ID_MASK, 0), SESSION_ID_MASK);
+    }
+
+    #[test]
+    fn session_word_epochs_yield_distinct_keystreams() {
+        let key = [9u8; 16];
+        let mut e0 = vec![0u8; 32];
+        let mut e1 = vec![0u8; 32];
+        AesCtr::new(&key, session_word(77, 0)).apply(0, &mut e0);
+        AesCtr::new(&key, session_word(77, 1)).apply(0, &mut e1);
+        assert_ne!(e0, e1, "epoch bump must retire the old keystream");
+        // distinct sessions stay distinct within an epoch too
+        let mut other = vec![0u8; 32];
+        AesCtr::new(&key, session_word(78, 1)).apply(0, &mut other);
+        assert_ne!(e1, other);
+    }
+
+    #[test]
+    fn session_word_is_injective_over_masked_ids() {
+        assert_ne!(session_word(1, 0), session_word(1, 1));
+        assert_eq!(session_word(1, 0x1_0000), session_word(1, 0), "epoch wraps at 2^16");
+        // id bits above the mask are dropped — the table never issues them
+        assert_eq!(session_word(1 | (1 << 48), 0), session_word(1, 0));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Remote attestation (simulated): measurement-bound, MACed reports.
+//! Remote attestation (simulated): measurement-bound, MACed reports
+//! with an explicit validity window.
 //!
 //! SGX attestation proves to a remote party that a specific enclave
 //! (identified by its code/data measurement, MRENCLAVE) is running on
@@ -6,8 +7,16 @@
 //! MAC standing in for the quoting enclave's signature: the *protocol
 //! shape* (challenge → measurement-bound quote → verify + session key)
 //! is preserved, which is what the serving handshake exercises.
+//!
+//! Reports carry an issue timestamp and TTL, both MAC-covered: evidence
+//! is only valid for a bounded window, so a captured quote cannot be
+//! replayed to establish sessions indefinitely, and "attestation expires
+//! mid-session" is an expressible (and tested) scenario.
 
 use crate::crypto;
+
+/// TTL that never expires (saturating window arithmetic).
+pub const REPORT_TTL_FOREVER: u64 = u64::MAX;
 
 /// An attestation report ("quote").
 #[derive(Debug, Clone, PartialEq)]
@@ -16,48 +25,84 @@ pub struct Report {
     pub measurement: [u8; 32],
     /// Verifier-supplied challenge (anti-replay).
     pub challenge: u64,
-    /// MAC over measurement||challenge (QE signature stand-in).
+    /// Issue time, milliseconds on the attesting platform's clock.
+    pub issued_at_ms: u64,
+    /// Validity window from `issued_at_ms` (0 = already stale;
+    /// [`REPORT_TTL_FOREVER`] = never expires).
+    pub ttl_ms: u64,
+    /// MAC over measurement||challenge||issued_at||ttl (QE signature
+    /// stand-in) — the lifetime fields cannot be stripped or extended.
     pub tag: [u8; 32],
 }
 
-/// Produce a report for `measurement` answering `challenge`.
-pub fn quote(platform_key: &[u8], measurement: [u8; 32], challenge: u64) -> Report {
-    let tag = crypto::hmac_sha256(platform_key, &report_bytes(&measurement, challenge));
+/// Produce a report for `measurement` answering `challenge`, valid for
+/// `ttl_ms` from `issued_at_ms`.
+pub fn quote(
+    platform_key: &[u8],
+    measurement: [u8; 32],
+    challenge: u64,
+    issued_at_ms: u64,
+    ttl_ms: u64,
+) -> Report {
+    let tag = crypto::hmac_sha256(
+        platform_key,
+        &report_bytes(&measurement, challenge, issued_at_ms, ttl_ms),
+    );
     Report {
         measurement,
         challenge,
+        issued_at_ms,
+        ttl_ms,
         tag,
     }
 }
 
+/// Is the report's validity window still open at `now_ms`?
+pub fn is_fresh(report: &Report, now_ms: u64) -> bool {
+    report.ttl_ms > 0 && now_ms.saturating_sub(report.issued_at_ms) <= report.ttl_ms
+}
+
 /// Remote-verifier check: does the report bind the expected measurement
-/// to our challenge under the platform key?
+/// to our challenge under the platform key — and is the evidence still
+/// inside its validity window at `now_ms`?
 pub fn verify(
     platform_key: &[u8],
     report: &Report,
     expected_measurement: &[u8; 32],
     challenge: u64,
+    now_ms: u64,
 ) -> bool {
     report.challenge == challenge
         && &report.measurement == expected_measurement
+        && is_fresh(report, now_ms)
         && crypto::verify_hmac(
             platform_key,
-            &report_bytes(&report.measurement, report.challenge),
+            &report_bytes(
+                &report.measurement,
+                report.challenge,
+                report.issued_at_ms,
+                report.ttl_ms,
+            ),
             &report.tag,
         )
 }
 
 /// Post-attestation session key (both sides derive it from the report).
+/// Includes the issue timestamp, so re-attesting yields a fresh key even
+/// under a repeated challenge.
 pub fn session_key(platform_key: &[u8], report: &Report) -> [u8; 32] {
     let mut material = report.measurement.to_vec();
     material.extend_from_slice(&report.challenge.to_le_bytes());
+    material.extend_from_slice(&report.issued_at_ms.to_le_bytes());
     material.extend_from_slice(platform_key);
     crypto::sha256(&material)
 }
 
-fn report_bytes(measurement: &[u8; 32], challenge: u64) -> Vec<u8> {
+fn report_bytes(measurement: &[u8; 32], challenge: u64, issued_at_ms: u64, ttl_ms: u64) -> Vec<u8> {
     let mut v = measurement.to_vec();
     v.extend_from_slice(&challenge.to_le_bytes());
+    v.extend_from_slice(&issued_at_ms.to_le_bytes());
+    v.extend_from_slice(&ttl_ms.to_le_bytes());
     v
 }
 
@@ -66,37 +111,73 @@ mod tests {
     use super::*;
 
     #[test]
-    fn quote_verifies() {
+    fn quote_verifies_inside_window() {
         let m = crypto::sha256(b"enclave code");
-        let r = quote(b"platform", m, 99);
-        assert!(verify(b"platform", &r, &m, 99));
+        let r = quote(b"platform", m, 99, 1_000, 500);
+        assert!(verify(b"platform", &r, &m, 99, 1_000));
+        assert!(verify(b"platform", &r, &m, 99, 1_500));
     }
 
     #[test]
     fn verify_rejects_wrong_measurement() {
         let m = crypto::sha256(b"enclave code");
-        let r = quote(b"platform", m, 99);
+        let r = quote(b"platform", m, 99, 0, REPORT_TTL_FOREVER);
         let other = crypto::sha256(b"evil code");
-        assert!(!verify(b"platform", &r, &other, 99));
+        assert!(!verify(b"platform", &r, &other, 99, 0));
+    }
+
+    #[test]
+    fn verify_rejects_stale_evidence() {
+        let m = crypto::sha256(b"x");
+        let r = quote(b"platform", m, 1, 1_000, 500);
+        assert!(!verify(b"platform", &r, &m, 1, 1_501), "past the window");
+        assert!(!is_fresh(&r, 1_501));
+        // a zero-TTL report is stale from birth
+        let dead = quote(b"platform", m, 1, 1_000, 0);
+        assert!(!verify(b"platform", &dead, &m, 1, 1_000));
+        // forever-TTL evidence never lapses
+        let eternal = quote(b"platform", m, 1, 0, REPORT_TTL_FOREVER);
+        assert!(verify(b"platform", &eternal, &m, 1, u64::MAX));
+    }
+
+    #[test]
+    fn lifetime_fields_are_mac_covered() {
+        let m = crypto::sha256(b"x");
+        let r = quote(b"platform", m, 1, 1_000, 500);
+        let mut extended = r.clone();
+        extended.ttl_ms = REPORT_TTL_FOREVER;
+        assert!(
+            !verify(b"platform", &extended, &m, 1, 10_000),
+            "stretching the TTL must break the MAC"
+        );
+        let mut backdated = r.clone();
+        backdated.issued_at_ms = 9_000;
+        assert!(
+            !verify(b"platform", &backdated, &m, 1, 9_100),
+            "re-stamping the issue time must break the MAC"
+        );
     }
 
     #[test]
     fn verify_rejects_replay_and_forgery() {
         let m = crypto::sha256(b"x");
-        let r = quote(b"platform", m, 1);
-        assert!(!verify(b"platform", &r, &m, 2), "challenge replay");
-        assert!(!verify(b"other-platform", &r, &m, 1), "wrong platform key");
+        let r = quote(b"platform", m, 1, 0, REPORT_TTL_FOREVER);
+        assert!(!verify(b"platform", &r, &m, 2, 0), "challenge replay");
+        assert!(!verify(b"other-platform", &r, &m, 1, 0), "wrong platform key");
         let mut forged = r.clone();
         forged.tag[0] ^= 1;
-        assert!(!verify(b"platform", &forged, &m, 1), "forged tag");
+        assert!(!verify(b"platform", &forged, &m, 1, 0), "forged tag");
     }
 
     #[test]
-    fn session_keys_agree_and_differ_per_challenge() {
+    fn session_keys_agree_and_differ_per_challenge_and_issue() {
         let m = crypto::sha256(b"x");
-        let r1 = quote(b"p", m, 1);
-        let r2 = quote(b"p", m, 2);
+        let r1 = quote(b"p", m, 1, 0, 100);
+        let r2 = quote(b"p", m, 2, 0, 100);
         assert_eq!(session_key(b"p", &r1), session_key(b"p", &r1));
         assert_ne!(session_key(b"p", &r1), session_key(b"p", &r2));
+        // same challenge, fresh quote ⇒ fresh key
+        let r3 = quote(b"p", m, 1, 50, 100);
+        assert_ne!(session_key(b"p", &r1), session_key(b"p", &r3));
     }
 }

@@ -15,8 +15,9 @@ use anyhow::{Context, Result};
 use crate::config::{Config, ModelSpec};
 use crate::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
 use crate::coordinator::{
-    AdmissionLimits, AutoscalePolicy, Deployment, EpcOptions, FabricOptions, PoolOptions,
-    ScaleMode, ServingEngine, ShedPolicy, SplitPolicy, WorkerPool,
+    AdmissionLimits, AutoscalePolicy, Deployment, EpcOptions, FabricOptions, NetOptions,
+    NetServer, PoolOptions, ScaleMode, ServingEngine, SessionTable, ShedPolicy, SplitPolicy,
+    WorkerPool,
 };
 use crate::enclave::cost::CostModel;
 use crate::model::{Manifest, Model};
@@ -472,10 +473,11 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
 /// attached tier-1 pool per spec, and (when `base.autoscale`) the
 /// background queue-depth autoscaler.
 pub fn start_deployment_from_config(base: &Config, specs: &[ModelSpec]) -> Result<Deployment> {
-    let mut dep = Deployment::new_with_epc(
+    let mut dep = Deployment::new_with_sessions(
         fabric_options_from_config(base)?,
         autoscale_policy_from_config(base),
         epc_options_from_config(base),
+        SessionTable::new(base.session_shards, base.session_ttl_ms),
     );
     for spec in specs {
         let cfg = spec.apply(base);
@@ -485,6 +487,31 @@ pub fn start_deployment_from_config(base: &Config, specs: &[ModelSpec]) -> Resul
         dep.enable_autoscaler();
     }
     Ok(dep)
+}
+
+/// Network front-door options from a config.  The measurement and
+/// platform key are the simulator's well-known constants
+/// ([`NetOptions::default`]) — in a real SGX deployment these would
+/// come from the quoting enclave; here both ends of the loopback agree
+/// on them so the handshake exercises the full verify path.
+pub fn net_options_from_config(config: &Config) -> NetOptions {
+    NetOptions {
+        listen: config.listen.clone(),
+        ..NetOptions::default()
+    }
+}
+
+/// Start the attested TCP front door over a deployment, when the config
+/// asks for one (`--listen`).  Returns `None` when `listen` is empty.
+pub fn start_net_server(
+    dep: &Arc<Deployment>,
+    config: &Config,
+) -> Result<Option<NetServer>> {
+    if config.listen.trim().is_empty() {
+        return Ok(None);
+    }
+    let server = NetServer::start(dep.clone(), net_options_from_config(config))?;
+    Ok(Some(server))
 }
 
 /// Encrypt a plaintext image for `session` under the deployment seed —

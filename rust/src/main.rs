@@ -76,13 +76,14 @@ fn print_help() {
             other => Some(other.to_json()),
         }
     };
-    let groups: [(&str, &str); 6] = [
+    let groups: [(&str, &str); 7] = [
         ("common", "Common options"),
         ("serve", "Serve options"),
         ("fabric", "Multi-model serve (shared tier-2 lane fabric)"),
         ("autoscale", "Autoscaling"),
         ("admission", "Admission control (per tenant; 0 = unlimited)"),
         ("epc", "EPC-aware co-scheduling of tier-1 pools"),
+        ("net", "Network front door (attested TCP sessions)"),
     ];
     for (group, title) in groups {
         println!("\n{title}:");
@@ -167,7 +168,9 @@ fn cmd_infer(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let config = Config::from_args(args)?;
-    if !config.models.trim().is_empty() {
+    // `--listen` needs a session-table-backed Deployment, so it routes
+    // through the multi-model path even for a single model.
+    if !config.models.trim().is_empty() || !config.listen.trim().is_empty() {
         return cmd_serve_multi(args, config);
     }
     let requests = args.usize_or("requests", 64)?;
@@ -286,7 +289,11 @@ fn cmd_serve_multi(args: &Args, config: Config) -> Result<()> {
     use origami::config::ModelSpec;
     let requests = args.usize_or("requests", 64)?;
     let rate = args.f64_or("rate", 50.0)?;
-    let specs = ModelSpec::parse_list(&config.models)?;
+    let specs = if config.models.trim().is_empty() {
+        vec![ModelSpec::parse(&config.model)?]
+    } else {
+        ModelSpec::parse_list(&config.models)?
+    };
     println!(
         "starting deployment: {} models over a shared lane fabric \
          (lanes={} devices=[{}] autoscale={})",
@@ -318,6 +325,22 @@ fn cmd_serve_multi(args: &Args, config: Config) -> Result<()> {
     }
     let dep = origami::launcher::start_deployment_from_config(&config, &specs)?;
     let dep = std::sync::Arc::new(dep);
+    let net = origami::launcher::start_net_server(&dep, &config)?;
+    if let Some(server) = &net {
+        println!(
+            "front door listening on {} (session ttl {} ms, {} shards)",
+            server.local_addr(),
+            dep.sessions().ttl_ms(),
+            dep.sessions().shard_count(),
+        );
+        if requests == 0 {
+            // pure server mode: no synthetic workload, serve until killed
+            println!("serving network clients; press Ctrl-C to stop");
+            loop {
+                std::thread::park();
+            }
+        }
+    }
 
     let mut rng = origami::util::rng::Rng::new(config.seed ^ 0xC11E17);
     let t0 = std::time::Instant::now();
@@ -351,6 +374,9 @@ fn cmd_serve_multi(args: &Args, config: Config) -> Result<()> {
         ok as f64 / elapsed
     );
 
+    if let Some(server) = net {
+        server.shutdown();
+    }
     let dep = std::sync::Arc::try_unwrap(dep)
         .map_err(|_| anyhow::anyhow!("deployment still referenced"))?;
     // windowed telemetry readout before shutdown consumes the deployment

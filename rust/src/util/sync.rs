@@ -1,0 +1,36 @@
+//! Small synchronization helpers.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering from poisoning.
+///
+/// A worker that panics while holding a shared lock poisons it; every
+/// healthy thread that later calls `lock().unwrap()` on the same mutex
+/// then panics too, cascading one bad batch into a dead pool and a
+/// panicking shutdown join.  The serving stack guards *metrics and
+/// queue bookkeeping* with these mutexes — state where a torn update is
+/// a tolerable accounting blip — so the right response to poison is to
+/// take the guard and keep serving, not to die.
+pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(0u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 1);
+    }
+}

@@ -87,7 +87,9 @@ fn readme_links_docs_and_renders_every_figure() {
     }
     // the Results section covers every serving figure
     assert!(readme.contains("## Results"), "README lost its Results section");
-    for fig in ["fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20"] {
+    for fig in [
+        "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21",
+    ] {
         assert!(
             readme.contains(fig),
             "README Results must interpret {fig}"

@@ -1,0 +1,286 @@
+//! Loopback end-to-end tests for the attested network front door.
+//!
+//! Everything runs over real TCP sockets on 127.0.0.1 with ephemeral
+//! ports: the attested handshake, the session-keyed inference path, the
+//! expiry → refresh → resume lifecycle, and the typed wire denials the
+//! admission gate produces under per-tenant rate limits.  The hermetic
+//! `simN` models keep the suite artifact-free and deterministic.
+
+use std::sync::Arc;
+
+use origami::config::{Config, ModelSpec};
+use origami::coordinator::{Deny, DenyCode, NetClient, NetError, NetOptions, NetServer};
+use origami::launcher::{
+    encrypt_request, net_options_from_config, start_deployment_from_config, synth_images,
+};
+
+/// A sim-model serving config with the front door enabled on an
+/// ephemeral loopback port.
+fn net_config(model: &str, session_ttl_ms: u64) -> Config {
+    Config {
+        model: model.into(),
+        strategy: "origami/6".into(),
+        workers: 1,
+        listen: "127.0.0.1:0".into(),
+        session_ttl_ms,
+        ..Config::default()
+    }
+}
+
+fn start(config: &Config) -> (Arc<origami::coordinator::Deployment>, NetServer, NetOptions) {
+    let specs = if config.models.trim().is_empty() {
+        vec![ModelSpec::parse(&config.model).expect("model spec")]
+    } else {
+        ModelSpec::parse_list(&config.models).expect("model specs")
+    };
+    let dep = Arc::new(start_deployment_from_config(config, &specs).expect("deployment"));
+    let opts = net_options_from_config(config);
+    let server = NetServer::start(dep.clone(), opts.clone()).expect("net server");
+    (dep, server, opts)
+}
+
+fn teardown(dep: Arc<origami::coordinator::Deployment>, server: NetServer) {
+    server.shutdown();
+    match Arc::try_unwrap(dep) {
+        Ok(d) => {
+            d.shutdown();
+        }
+        Err(_) => panic!("deployment still referenced after server shutdown"),
+    }
+}
+
+fn image_for(config: &Config) -> Vec<f32> {
+    let size: usize = config.model.trim_start_matches("sim").parse().expect("sim model");
+    synth_images(1, size.clamp(4, 224), 3, config.seed)[0].clone()
+}
+
+fn expect_denied(r: Result<origami::coordinator::WireInference, NetError>) -> Deny {
+    match r {
+        Err(NetError::Denied(d)) => d,
+        other => panic!("expected a wire denial, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// handshake + bit-identity vs the in-process path
+// ---------------------------------------------------------------------
+
+#[test]
+fn attested_loopback_matches_in_process_inference() {
+    let config = net_config("sim16", 600_000);
+    let (dep, server, opts) = start(&config);
+    let addr = server.local_addr();
+
+    let mut client = NetClient::connect(
+        &addr,
+        "sim16",
+        &opts.measurement,
+        &opts.platform_key,
+        0xDEC0DE,
+    )
+    .expect("attested handshake");
+    assert_eq!(client.epoch(), 0, "fresh sessions start at epoch 0");
+    assert_eq!(client.session_ttl_ms(), 600_000);
+    assert!(client.report().ttl_ms > 0, "report carries a lifetime");
+
+    let image = image_for(&config);
+    let ct = encrypt_request(&config, client.session_word(), &image);
+    let over_wire = client.infer(&ct).expect("wire inference");
+    assert_eq!(over_wire.probs.len(), 10);
+    assert!(over_wire.latency_ms >= 0.0);
+    assert!(over_wire.batch >= 1);
+
+    // Same plaintext through the in-process API, under a different
+    // (implicit) session: the session changes only the keystream, so
+    // the probabilities must match bit for bit.
+    let in_proc_session = 7u64;
+    let ct2 = encrypt_request(&config, in_proc_session, &image);
+    let in_proc = dep
+        .infer_blocking("sim16", ct2, in_proc_session)
+        .expect("in-process inference");
+    assert!(in_proc.error.is_none(), "in-process path errored: {:?}", in_proc.error);
+    assert_eq!(
+        over_wire.probs, in_proc.probs,
+        "network path must be bit-identical to the in-process path"
+    );
+
+    // Refresh bumps the keystream epoch: same image, different bytes on
+    // the wire, identical answer.
+    let old_word = client.session_word();
+    let epoch = client.refresh().expect("refresh");
+    assert_eq!(epoch, 1);
+    assert_ne!(client.session_word(), old_word);
+    let ct3 = encrypt_request(&config, client.session_word(), &image);
+    assert_ne!(ct, ct3, "epoch bump must change the ciphertext");
+    let again = client.infer(&ct3).expect("post-refresh inference");
+    assert_eq!(again.probs, over_wire.probs);
+
+    // Revocation tears the session down; the next request is told to
+    // re-attest (not refresh).
+    assert!(client.revoke().expect("revoke"), "live session should exist");
+    let deny = expect_denied(client.infer(&ct3));
+    assert_eq!(deny.code, DenyCode::SessionExpired);
+    assert!(!deny.refreshable, "revoked sessions must not be refreshable");
+    assert!(deny.message.contains("re-attest"), "got: {}", deny.message);
+
+    teardown(dep, server);
+}
+
+// ---------------------------------------------------------------------
+// attestation rejections: wrong enclave, stale evidence
+// ---------------------------------------------------------------------
+
+#[test]
+fn handshake_rejects_wrong_measurement_and_stale_reports() {
+    let config = net_config("sim8", 600_000);
+    let (dep, server, opts) = start(&config);
+    let addr = server.local_addr();
+
+    // A client expecting a different enclave must refuse the report.
+    let wrong = [0xABu8; 32];
+    match NetClient::connect(&addr, "sim8", &wrong, &opts.platform_key, 1) {
+        Err(NetError::Attestation(msg)) => {
+            assert!(msg.contains("measurement"), "got: {msg}")
+        }
+        other => panic!("wrong measurement must fail attestation, got {other:?}"),
+    }
+
+    // A tampered platform key breaks the report MAC.
+    match NetClient::connect(&addr, "sim8", &opts.measurement, b"not-the-platform-key", 2) {
+        Err(NetError::Attestation(msg)) => {
+            assert!(msg.contains("MAC") || msg.contains("challenge"), "got: {msg}")
+        }
+        other => panic!("wrong platform key must fail attestation, got {other:?}"),
+    }
+
+    // A server issuing zero-lifetime reports produces evidence that is
+    // stale the instant it is signed; the client must reject it.
+    let stale_opts = NetOptions {
+        listen: "127.0.0.1:0".into(),
+        attest_ttl_ms: 0,
+        ..NetOptions::default()
+    };
+    let stale_server = NetServer::start(dep.clone(), stale_opts.clone()).expect("stale server");
+    match NetClient::connect(
+        &stale_server.local_addr(),
+        "sim8",
+        &stale_opts.measurement,
+        &stale_opts.platform_key,
+        3,
+    ) {
+        Err(NetError::Attestation(msg)) => {
+            assert!(msg.contains("stale"), "got: {msg}")
+        }
+        other => panic!("stale report must fail attestation, got {other:?}"),
+    }
+    stale_server.shutdown();
+
+    // The healthy front door still admits a correct client afterwards.
+    let mut ok = NetClient::connect(&addr, "sim8", &opts.measurement, &opts.platform_key, 4)
+        .expect("honest client");
+    let image = image_for(&config);
+    let ct = encrypt_request(&config, ok.session_word(), &image);
+    assert_eq!(ok.infer(&ct).expect("inference").probs.len(), 10);
+
+    teardown(dep, server);
+}
+
+// ---------------------------------------------------------------------
+// expiry mid-stream → typed denial with a refresh hint → resume
+// ---------------------------------------------------------------------
+
+#[test]
+fn expiry_mid_stream_then_refresh_resumes_with_identical_output() {
+    let config = net_config("sim8", 250);
+    let (dep, server, opts) = start(&config);
+    let addr = server.local_addr();
+
+    let mut client =
+        NetClient::connect(&addr, "sim8", &opts.measurement, &opts.platform_key, 0xFEED)
+            .expect("attested handshake");
+    assert_eq!(client.session_ttl_ms(), 250);
+
+    let image = image_for(&config);
+    let ct0 = encrypt_request(&config, client.session_word(), &image);
+    let first = client.infer(&ct0).expect("inference before expiry");
+
+    // Outlive the session TTL on the same connection.  Attested
+    // sessions expire in place (they are never silently recycled), so
+    // the denial carries the refresh hint over the wire.
+    std::thread::sleep(std::time::Duration::from_millis(600));
+    let deny = expect_denied(client.infer(&ct0));
+    assert_eq!(deny.code, DenyCode::SessionExpired);
+    assert!(
+        deny.refreshable,
+        "expired attested session must advertise refreshability: {deny:?}"
+    );
+
+    // Refresh bumps the epoch and re-arms the deadline; the request
+    // must be re-encrypted under the new session word to decrypt
+    // correctly, and the answer is bit-identical.
+    let epoch = client.refresh().expect("refresh after expiry");
+    assert_eq!(epoch, 1);
+    let ct1 = encrypt_request(&config, client.session_word(), &image);
+    assert_ne!(ct0, ct1);
+    let resumed = client.infer(&ct1).expect("inference after refresh");
+    assert_eq!(
+        resumed.probs, first.probs,
+        "resume after refresh must not perturb the math"
+    );
+
+    teardown(dep, server);
+}
+
+// ---------------------------------------------------------------------
+// per-tenant rate limits: typed wire denials with backoff hints
+// ---------------------------------------------------------------------
+
+#[test]
+fn rate_limited_tenants_receive_retry_hints_over_the_wire() {
+    // Three tenants, each with a one-token bucket refilling at 0.2 rps
+    // (one token per five seconds, so wall-clock jitter cannot refill
+    // it mid-test): the first request per tenant is admitted, the
+    // second is denied with a backoff hint — independently per tenant.
+    let config = Config {
+        models: "sim8:rps=0.2,sim9:rps=0.2,sim10:rps=0.2".into(),
+        strategy: "origami/6".into(),
+        workers: 1,
+        admission_burst: 1.0,
+        listen: "127.0.0.1:0".into(),
+        session_ttl_ms: 600_000,
+        ..Config::default()
+    };
+    let (dep, server, opts) = start(&config);
+    let addr = server.local_addr();
+
+    for (i, model) in ["sim8", "sim9", "sim10"].iter().enumerate() {
+        let mut client = NetClient::connect(
+            &addr,
+            model,
+            &opts.measurement,
+            &opts.platform_key,
+            100 + i as u64,
+        )
+        .expect("attested handshake");
+
+        let size: usize = model.trim_start_matches("sim").parse().unwrap();
+        let image = synth_images(1, size, 3, config.seed)[0].clone();
+        let ct = encrypt_request(&config, client.session_word(), &image);
+        let ok = client.infer(&ct).expect("first request within budget");
+        assert_eq!(ok.probs.len(), 10);
+
+        let deny = expect_denied(client.infer(&ct));
+        assert_eq!(deny.code, DenyCode::RateLimited, "tenant {model}: {deny:?}");
+        let hint = deny
+            .retry_after_ms
+            .unwrap_or_else(|| panic!("tenant {model}: rate denial must carry a hint"));
+        assert!(hint >= 1, "tenant {model}: hint should be meaningful, got {hint}");
+        assert!(!deny.refreshable, "rate denials are not session problems");
+    }
+
+    // The loop above already proves isolation: each tenant's first
+    // request was admitted even after its neighbours exhausted theirs.
+    assert_eq!(dep.models().len(), 3, "three tenants deployed");
+
+    teardown(dep, server);
+}
