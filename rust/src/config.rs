@@ -146,6 +146,11 @@ pub struct Config {
     /// of two).  Size for the live-session population — the default
     /// comfortably absorbs millions of entries.
     pub session_shards: usize,
+    /// Live-session ceiling: past it the table evicts its
+    /// least-recently-used entries, so session state stays bounded even
+    /// under a HELLO flood arriving faster than the TTL retires it.
+    /// 0 = unbounded (trusted in-process deployments only).
+    pub session_cap: usize,
 }
 
 impl Default for Config {
@@ -199,6 +204,7 @@ impl Default for Config {
             listen: String::new(),
             session_ttl_ms: crate::coordinator::router::DEFAULT_SESSION_TTL_MS,
             session_shards: crate::coordinator::router::DEFAULT_SESSION_SHARDS,
+            session_cap: crate::coordinator::router::DEFAULT_SESSION_CAP,
         }
     }
 }
@@ -297,6 +303,7 @@ impl Config {
             ("shed_depth", &mut self.shed_depth),
             ("kernel_threads", &mut self.kernel_threads),
             ("session_shards", &mut self.session_shards),
+            ("session_cap", &mut self.session_cap),
         ] {
             if let Some(n) = v.get(field).and_then(|x| x.as_usize()) {
                 *slot = n;
@@ -430,6 +437,7 @@ impl Config {
         }
         c.session_ttl_ms = args.u64_or("session-ttl", c.session_ttl_ms)?;
         c.session_shards = args.usize_or("session-shards", c.session_shards)?;
+        c.session_cap = args.usize_or("session-cap", c.session_cap)?;
         anyhow::ensure!(
             c.session_shards > 0,
             "--session-shards must be ≥ 1, got {}",
@@ -520,6 +528,7 @@ impl Config {
             ("listen", json::s(&self.listen)),
             ("session_ttl_ms", json::num(self.session_ttl_ms as f64)),
             ("session_shards", json::num(self.session_shards as f64)),
+            ("session_cap", json::num(self.session_cap as f64)),
         ])
     }
 
@@ -646,6 +655,7 @@ impl Config {
             d("net", "--listen", "<addr>", "listen", "TCP front door bind addr (empty = off)"),
             d("net", "--session-ttl", "<ms>", "session_ttl_ms", "session table TTL (ms)"),
             d("net", "--session-shards", "<n>", "session_shards", "session table lock stripes"),
+            d("net", "--session-cap", "<n>", "session_cap", "live-session LRU ceiling (0 = off)"),
         ]
     }
 }

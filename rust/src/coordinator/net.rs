@@ -20,9 +20,17 @@
 //!   │  derive session key; check grant    │
 //!   │ ── INFER {session, epoch, ct} ────▶ │  epoch check → admission
 //!   │ ◀── INFER_OK {probs…} ───────────── │  gate → pool → reply
-//!   │ ── REFRESH {session} ─────────────▶ │  epoch += 1, TTL extends
-//!   │ ◀── REFRESHED {epoch, ttl} ──────── │
+//!   │ ── REFRESH {session, MAC} ────────▶ │  MAC check → epoch += 1,
+//!   │ ◀── REFRESHED {epoch, ttl} ──────── │  TTL extends
 //! ```
+//!
+//! Session ids are random draws from the 48-bit attested range (never
+//! sequential), and the control frames that steer a session's lifecycle
+//! — REFRESH and REVOKE — must carry an HMAC over (frame kind, session,
+//! current epoch) under a key derived from the attested session key.
+//! Knowing (or guessing) a bare session id therefore lets a remote peer
+//! neither revoke another tenant's session nor bump its keystream epoch
+//! out from under it.
 //!
 //! Every frame is `u32 LE length ‖ u8 type ‖ payload`.  Denials are
 //! *typed* on the wire ([`Deny`]): the admission gate's `retry_after_ms`
@@ -45,7 +53,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::router::{AdmissionError, Deployment};
-use super::session::SessionError;
+use super::session::{control_mac, SessionError, CONTROL_REFRESH, CONTROL_REVOKE};
 use crate::crypto;
 use crate::enclave::attestation::{self, Report};
 use crate::util::sync::lock_recover;
@@ -55,6 +63,12 @@ const MAX_FRAME_BYTES: usize = 16 << 20;
 
 /// Poll interval for the stop flag while a connection idles.
 const IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// Once a frame has started arriving, the rest of it must land within
+/// this window — a peer that sends half a head and stalls is cut off
+/// instead of pinning its connection thread (and server shutdown) on a
+/// read that never completes.
+const MID_FRAME_DEADLINE: Duration = Duration::from_secs(30);
 
 // Client → server frame types.
 const MSG_HELLO: u8 = 0x01;
@@ -82,6 +96,9 @@ pub enum DenyCode {
     Shed = 7,
     SessionExpired = 8,
     Protocol = 9,
+    /// A control frame (REFRESH/REVOKE) failed its MAC check: the peer
+    /// did not prove possession of the attested session key.
+    Unauthorized = 10,
 }
 
 impl DenyCode {
@@ -95,6 +112,7 @@ impl DenyCode {
             6 => DenyCode::QuotaExceeded,
             7 => DenyCode::Shed,
             8 => DenyCode::SessionExpired,
+            10 => DenyCode::Unauthorized,
             _ => DenyCode::Protocol,
         }
     }
@@ -162,6 +180,12 @@ impl Deny {
                 retry_after_ms: None,
                 refreshable: false,
                 message: format!("unknown session {session}; re-attest"),
+            },
+            SessionError::Unauthorized { session } => Deny {
+                code: DenyCode::Unauthorized,
+                retry_after_ms: None,
+                refreshable: false,
+                message: format!("session {session}: control frame MAC rejected"),
             },
         }
     }
@@ -307,7 +331,19 @@ impl NetServer {
                                 let _ = serve_connection(stream, &dep, &opts_c, &stop_c);
                             })
                             .expect("spawn connection thread");
-                        lock_recover(&conns).push(handle);
+                        let mut held = lock_recover(&conns);
+                        // Reap connections that already ended, so a
+                        // long-running server does not accumulate one
+                        // dead JoinHandle per past connection.
+                        let mut i = 0;
+                        while i < held.len() {
+                            if held[i].is_finished() {
+                                let _ = held.swap_remove(i).join();
+                            } else {
+                                i += 1;
+                            }
+                        }
+                        held.push(handle);
                     }
                 })
                 .expect("spawn accept thread")
@@ -380,7 +416,8 @@ fn serve_connection(
             }
             MSG_REFRESH => {
                 let session = c.u64()?;
-                match dep.refresh_session(session) {
+                let tag = c.arr32()?;
+                match dep.refresh_session_authed(session, &tag) {
                     Ok(grant) => {
                         let mut p = Vec::with_capacity(24);
                         p.extend_from_slice(&grant.session.to_le_bytes());
@@ -395,8 +432,13 @@ fn serve_connection(
             }
             MSG_REVOKE => {
                 let session = c.u64()?;
-                let existed = dep.revoke_session(session);
-                write_frame(&mut stream, MSG_REVOKED, &[existed as u8])
+                let tag = c.arr32()?;
+                match dep.revoke_session_authed(session, &tag) {
+                    Ok(existed) => write_frame(&mut stream, MSG_REVOKED, &[existed as u8]),
+                    Err(e) => {
+                        write_frame(&mut stream, MSG_DENIED, &Deny::of_session(&e).encode())
+                    }
+                }
             }
             other => write_frame(
                 &mut stream,
@@ -415,6 +457,18 @@ fn handle_hello(
     challenge: u64,
     model: &str,
 ) -> io::Result<()> {
+    // No evidence, no session state for models this deployment does not
+    // serve — an unauthenticated HELLO flood may not grow the table with
+    // bindings to arbitrary names.
+    if !dep.has_model(model) {
+        let deny = Deny {
+            code: DenyCode::UnknownModel,
+            retry_after_ms: None,
+            refreshable: false,
+            message: format!("unknown model `{model}`; deployed: {:?}", dep.models()),
+        };
+        return write_frame(stream, MSG_DENIED, &deny.encode());
+    }
     let now_ms = dep.now_ms();
     let report = attestation::quote(
         &opts.platform_key,
@@ -423,12 +477,13 @@ fn handle_hello(
         now_ms,
         opts.attest_ttl_ms,
     );
-    let grant = dep.establish_session(model);
-    let ttl_ms = dep.sessions().ttl_ms();
     // The grant rides under the attested session key: a client that
     // verified the report can check the lifecycle parameters were not
-    // rewritten in flight.
+    // rewritten in flight.  The same key (via a derived control key)
+    // later gates REFRESH/REVOKE frames for this session.
     let sk = attestation::session_key(&opts.platform_key, &report);
+    let grant = dep.establish_session(model, control_key(&sk));
+    let ttl_ms = dep.sessions().ttl_ms();
     let grant_tag = grant_mac(&sk, grant.session, grant.epoch, ttl_ms);
     let mut p = Vec::with_capacity(32 + 8 + 8 + 8 + 32 + 8 + 4 + 8 + 32);
     p.extend_from_slice(&report.measurement);
@@ -517,6 +572,13 @@ fn grant_mac(session_key: &[u8; 32], session: u64, epoch: u32, ttl_ms: u64) -> [
     crypto::hmac_sha256(session_key, &data)
 }
 
+/// The control-frame MAC key both ends derive from the attested session
+/// key.  A derived key (not the session key itself) is what the table
+/// stores, so session-key material never sits in the session registry.
+fn control_key(session_key: &[u8; 32]) -> [u8; 32] {
+    crypto::hmac_sha256(session_key, b"origami-session-control")
+}
+
 /// Attested client for the wire protocol.
 ///
 /// `connect` runs the full handshake: challenge → report → verify
@@ -528,6 +590,9 @@ pub struct NetClient {
     session: u64,
     epoch: u32,
     session_ttl_ms: u64,
+    /// Control-frame MAC key derived from the attested session key;
+    /// proves possession on REFRESH/REVOKE.
+    control_key: [u8; 32],
     report: Report,
 }
 
@@ -542,8 +607,27 @@ impl NetClient {
         platform_key: &[u8],
         challenge: u64,
     ) -> std::result::Result<Self, NetError> {
+        Self::connect_assuming_age(addr, model, expected_measurement, platform_key, challenge, 0)
+    }
+
+    /// [`NetClient::connect`] with a floor on how old the client assumes
+    /// the returned evidence is.  Freshness is judged on the *client's*
+    /// clock: the report cannot predate the HELLO (it echoes our fresh
+    /// challenge), so its age is at most the handshake round-trip — the
+    /// server-stamped `issued_at_ms` is never trusted as "now".
+    /// `min_age_ms` lets tests (and cautious callers) model a report
+    /// that sat captured for that long before being presented.
+    pub fn connect_assuming_age(
+        addr: &SocketAddr,
+        model: &str,
+        expected_measurement: &[u8; 32],
+        platform_key: &[u8],
+        challenge: u64,
+        min_age_ms: u64,
+    ) -> std::result::Result<Self, NetError> {
         let mut stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
+        let sent_at = std::time::Instant::now();
         let mut hello = Vec::with_capacity(8 + 2 + model.len());
         hello.extend_from_slice(&challenge.to_le_bytes());
         put_str(&mut hello, model);
@@ -568,23 +652,24 @@ impl NetClient {
         let epoch = c.u32()?;
         let session_ttl_ms = c.u64()?;
         let grant_tag = c.arr32()?;
-        // Verify at the report's own issue instant: the loopback harness
-        // shares the server clock, and a zero/short TTL still registers
-        // as stale — which is the property the stale-report test pins.
-        if !attestation::verify(
-            platform_key,
-            &report,
-            expected_measurement,
-            challenge,
-            report.issued_at_ms,
-        ) {
-            return Err(NetError::Attestation(if !attestation::is_fresh(&report, report.issued_at_ms) {
-                format!("stale report (ttl {} ms)", report.ttl_ms)
-            } else if &report.measurement != expected_measurement {
-                "measurement mismatch (wrong enclave)".to_string()
-            } else {
-                "bad challenge or MAC".to_string()
-            }));
+        // The report's age on our clock: it was issued no earlier than
+        // the HELLO left, so elapsed-since-HELLO bounds it from above.
+        // Folding that into `now` keeps the validity window meaningful
+        // even though the server stamps `issued_at_ms` on its own clock
+        // — a self-referential check (now = issued_at) would declare any
+        // ttl > 0 report fresh forever.
+        let age_ms = (sent_at.elapsed().as_millis() as u64).max(min_age_ms);
+        let now_ms = report.issued_at_ms.saturating_add(age_ms);
+        if !attestation::verify(platform_key, &report, expected_measurement, challenge, now_ms) {
+            return Err(NetError::Attestation(
+                if !attestation::is_fresh(&report, now_ms) {
+                    format!("stale report (ttl {} ms, age ≥ {age_ms} ms)", report.ttl_ms)
+                } else if &report.measurement != expected_measurement {
+                    "measurement mismatch (wrong enclave)".to_string()
+                } else {
+                    "bad challenge or MAC".to_string()
+                },
+            ));
         }
         let sk = attestation::session_key(platform_key, &report);
         if grant_mac(&sk, session, epoch, session_ttl_ms) != grant_tag {
@@ -595,6 +680,7 @@ impl NetClient {
             session,
             epoch,
             session_ttl_ms,
+            control_key: control_key(&sk),
             report,
         })
     }
@@ -659,8 +745,14 @@ impl NetClient {
     /// TTL.  Subsequent payloads must re-encrypt under the new
     /// [`NetClient::session_word`].
     pub fn refresh(&mut self) -> std::result::Result<u32, NetError> {
-        let mut p = Vec::with_capacity(8);
+        let mut p = Vec::with_capacity(40);
         p.extend_from_slice(&self.session.to_le_bytes());
+        p.extend_from_slice(&control_mac(
+            &self.control_key,
+            CONTROL_REFRESH,
+            self.session,
+            self.epoch,
+        ));
         write_frame(&mut self.stream, MSG_REFRESH, &p)?;
         let (ty, payload) = read_frame(&mut self.stream)?;
         let mut c = Cursor::new(&payload);
@@ -683,8 +775,14 @@ impl NetClient {
 
     /// Revoke the session server-side; returns whether it existed.
     pub fn revoke(&mut self) -> std::result::Result<bool, NetError> {
-        let mut p = Vec::with_capacity(8);
+        let mut p = Vec::with_capacity(40);
         p.extend_from_slice(&self.session.to_le_bytes());
+        p.extend_from_slice(&control_mac(
+            &self.control_key,
+            CONTROL_REVOKE,
+            self.session,
+            self.epoch,
+        ));
         write_frame(&mut self.stream, MSG_REVOKE, &p)?;
         let (ty, payload) = read_frame(&mut self.stream)?;
         let mut c = Cursor::new(&payload);
@@ -757,8 +855,14 @@ fn read_frame_stoppable(
 }
 
 /// `read_exact` that tolerates timeouts.  `Ok(false)` when the peer
-/// closed (or shutdown was requested) before the first byte;
-/// `interruptible` guards whether a zero-byte state may end cleanly.
+/// closed (or shutdown was requested) before the first byte of a frame;
+/// `interruptible` marks the between-frames idle state where that is a
+/// clean exit.  The stop flag is honored at *any* offset — a raised
+/// flag mid-frame errors the connection out instead of leaving its
+/// thread (and the shutdown join) looping on timeouts — and once a
+/// frame has started arriving it must complete within
+/// [`MID_FRAME_DEADLINE`], so a peer that stalls after a partial frame
+/// is cut off rather than holding the thread forever.
 fn read_exact_stoppable(
     stream: &mut TcpStream,
     buf: &mut [u8],
@@ -766,7 +870,31 @@ fn read_exact_stoppable(
     interruptible: bool,
 ) -> io::Result<bool> {
     let mut off = 0;
+    // Payload reads are mid-frame from their first byte; head reads
+    // only start the clock once a byte arrives.
+    let mut started: Option<std::time::Instant> = if interruptible {
+        None
+    } else {
+        Some(std::time::Instant::now())
+    };
     while off < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            if off == 0 && interruptible {
+                return Ok(false);
+            }
+            return Err(io::Error::new(
+                io::ErrorKind::TimedOut,
+                "shutdown requested mid-frame",
+            ));
+        }
+        if let Some(t0) = started {
+            if t0.elapsed() >= MID_FRAME_DEADLINE {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "peer stalled mid-frame",
+                ));
+            }
+        }
         match stream.read(&mut buf[off..]) {
             Ok(0) => {
                 if off == 0 && interruptible {
@@ -777,15 +905,13 @@ fn read_exact_stoppable(
                     "peer closed mid-frame",
                 ));
             }
-            Ok(n) => off += n,
+            Ok(n) => {
+                off += n;
+                started.get_or_insert_with(std::time::Instant::now);
+            }
             Err(e)
                 if e.kind() == io::ErrorKind::WouldBlock
-                    || e.kind() == io::ErrorKind::TimedOut =>
-            {
-                if stop.load(Ordering::SeqCst) && off == 0 && interruptible {
-                    return Ok(false);
-                }
-            }
+                    || e.kind() == io::ErrorKind::TimedOut => {}
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
             Err(e) => return Err(e),
         }
@@ -876,7 +1002,13 @@ mod tests {
             refreshable: true,
             message: "session 9 expired".into(),
         };
-        for d in [with_hint, expired] {
+        let unauthorized = Deny {
+            code: DenyCode::Unauthorized,
+            retry_after_ms: None,
+            refreshable: false,
+            message: "session 9: control frame MAC rejected".into(),
+        };
+        for d in [with_hint, expired, unauthorized] {
             let bytes = d.encode();
             let back = Deny::decode(&mut Cursor::new(&bytes)).unwrap();
             assert_eq!(back, d);
@@ -928,5 +1060,13 @@ mod tests {
         let mut c = Cursor::new(&[1, 2, 3]);
         assert_eq!(c.u8().unwrap(), 1);
         assert!(c.u64().is_err(), "only 2 bytes left");
+    }
+
+    #[test]
+    fn control_key_is_derived_not_the_session_key() {
+        let sk = crypto::sha256(b"some session key");
+        let ck = control_key(&sk);
+        assert_ne!(ck, sk, "the table must never hold raw session-key material");
+        assert_eq!(ck, control_key(&sk), "both ends derive the same control key");
     }
 }

@@ -855,6 +855,11 @@ pub const DEFAULT_SESSION_SHARDS: usize = 64;
 /// autoscaler-tick sweep instead of accumulating forever.
 pub const DEFAULT_SESSION_TTL_MS: u64 = 600_000;
 
+/// Default live-session ceiling (per deployment): above it the table
+/// LRU-evicts, so an unauthenticated HELLO flood cannot grow session
+/// state past this bound even inside one TTL window.
+pub const DEFAULT_SESSION_CAP: usize = 1 << 20;
+
 fn clamp_hint_ms(ms: f64) -> u64 {
     ms.clamp(0.0, MAX_RETRY_HINT_MS).ceil() as u64
 }
@@ -1215,7 +1220,10 @@ impl Deployment {
                     refreshable,
                 });
             }
-            Err(SessionError::Unknown { session }) => {
+            // `bind` never performs control-MAC auth, so `Unauthorized`
+            // cannot surface here; keep the mapping total regardless.
+            Err(SessionError::Unknown { session })
+            | Err(SessionError::Unauthorized { session }) => {
                 return Err(AdmissionError::SessionExpired {
                     session,
                     refreshable: false,
@@ -1347,13 +1355,21 @@ impl Deployment {
         self.core.now_ms()
     }
 
-    /// Issue a fresh attested session bound to `model` (the network
-    /// front door calls this after a successful attestation handshake).
-    pub fn establish_session(&self, model: &str) -> SessionGrant {
-        self.core.sessions.establish(model, self.core.now_ms())
+    /// Is `model` deployed?  The front door checks this before minting
+    /// attestation evidence or session state for a HELLO.
+    pub fn has_model(&self, model: &str) -> bool {
+        self.core.models.lock().unwrap().contains_key(model)
     }
 
-    /// Bump the session's keystream epoch and extend its TTL.
+    /// Issue a fresh attested session bound to `model`, holding `auth`
+    /// as its control-frame MAC key (the network front door calls this
+    /// after a successful attestation handshake).
+    pub fn establish_session(&self, model: &str, auth: [u8; 32]) -> SessionGrant {
+        self.core.sessions.establish(model, auth, self.core.now_ms())
+    }
+
+    /// Bump the session's keystream epoch and extend its TTL (trusted
+    /// in-process path; the wire uses the MAC-gated variant).
     pub fn refresh_session(
         &self,
         session: u64,
@@ -1361,9 +1377,30 @@ impl Deployment {
         self.core.sessions.refresh(session, self.core.now_ms())
     }
 
-    /// Drop a session outright; returns whether it existed.
+    /// [`Deployment::refresh_session`] gated on the session's control
+    /// MAC — the only refresh path the network front door exposes.
+    pub fn refresh_session_authed(
+        &self,
+        session: u64,
+        tag: &[u8; 32],
+    ) -> std::result::Result<SessionGrant, SessionError> {
+        self.core.sessions.refresh_authed(session, tag, self.core.now_ms())
+    }
+
+    /// Drop a session outright; returns whether it existed (trusted
+    /// in-process path; the wire uses the MAC-gated variant).
     pub fn revoke_session(&self, session: u64) -> bool {
         self.core.sessions.revoke(session)
+    }
+
+    /// [`Deployment::revoke_session`] gated on the session's control
+    /// MAC — the only revoke path the network front door exposes.
+    pub fn revoke_session_authed(
+        &self,
+        session: u64,
+        tag: &[u8; 32],
+    ) -> std::result::Result<bool, SessionError> {
+        self.core.sessions.revoke_authed(session, tag)
     }
 
     /// The session's live keystream epoch (the client must encrypt

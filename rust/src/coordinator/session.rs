@@ -35,12 +35,54 @@ use crate::crypto;
 /// TTL that never expires (saturating deadline arithmetic).
 pub const SESSION_TTL_FOREVER: u64 = u64::MAX;
 
-/// First session id the table issues for attested (network) sessions:
-/// high enough that hand-picked in-process ids (tests, benches use small
-/// integers) never collide with the monotone allocator, low enough that
-/// every issued id stays inside [`crypto::SESSION_ID_MASK`] so the
-/// epoch-folded session word remains injective.
-const NET_SESSION_BASE: u64 = 1 << 32;
+/// Floor of the attested (network) session-id range: high enough that
+/// hand-picked in-process ids (tests, benches use small integers) never
+/// collide with issued ids, low enough that every issued id stays inside
+/// [`crypto::SESSION_ID_MASK`] so the epoch-folded session word remains
+/// injective.  Ids inside the range are *drawn at random* (a keyed hash
+/// of a per-table secret and a nonce), never allocated sequentially —
+/// a remote peer must not be able to enumerate other tenants' sessions.
+pub const NET_SESSION_BASE: u64 = 1 << 32;
+
+/// Domain-separation label for the REFRESH control MAC.
+pub const CONTROL_REFRESH: &[u8] = b"origami-net-refresh";
+
+/// Domain-separation label for the REVOKE control MAC.
+pub const CONTROL_REVOKE: &[u8] = b"origami-net-revoke";
+
+/// The MAC a control frame (REFRESH/REVOKE) must carry: keyed by the
+/// session's auth key (derived from the attested session key on both
+/// ends), bound to the frame kind, the session id and the *current*
+/// epoch — so a captured REFRESH frame cannot be replayed once the
+/// epoch has moved on.
+pub fn control_mac(auth: &[u8; 32], label: &[u8], session: u64, epoch: u32) -> [u8; 32] {
+    crypto::hmac_sha256(auth, &control_bytes(label, session, epoch))
+}
+
+fn control_bytes(label: &[u8], session: u64, epoch: u32) -> Vec<u8> {
+    let mut data = label.to_vec();
+    data.extend_from_slice(&session.to_le_bytes());
+    data.extend_from_slice(&epoch.to_le_bytes());
+    data
+}
+
+/// Per-table secret behind session-id derivation.  Entropy comes from
+/// the OS-seeded `RandomState` hasher plus the wall clock — the
+/// simulator's stand-in for the enclave's hardware RNG (no external
+/// crates in this build).
+fn id_seed() -> [u8; 32] {
+    use std::hash::{BuildHasher, Hasher};
+    let mut material = Vec::with_capacity(40);
+    for i in 0..3u64 {
+        let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+        h.write_u64(i);
+        material.extend_from_slice(&h.finish().to_le_bytes());
+    }
+    if let Ok(t) = std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+        material.extend_from_slice(&t.as_nanos().to_le_bytes());
+    }
+    crypto::sha256(&material)
+}
 
 /// How a `bind` call resolved.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -63,6 +105,10 @@ pub enum SessionError {
     Expired { session: u64, refreshable: bool },
     /// No such session (never established, or revoked).
     Unknown { session: u64 },
+    /// A control operation did not prove possession of the session's
+    /// auth key (bad MAC, stale-epoch MAC, or an implicit session that
+    /// has no wire-controllable auth key at all).
+    Unauthorized { session: u64 },
 }
 
 /// What `establish`/`refresh` hand back to the client.
@@ -81,9 +127,25 @@ struct Entry {
     /// Established through the attested handshake (expiry is enforced)
     /// vs. implicitly bound by an in-process submit (expiry recycles).
     attested: bool,
+    /// Control-frame MAC key, derived from the attested session key at
+    /// establish time.  `None` for implicit (in-process) bindings: the
+    /// wire can never refresh or revoke a session it did not establish.
+    auth: Option<[u8; 32]>,
     /// Stamp of this entry's newest LRU-queue record; older queue
     /// records for the same id are skipped when they surface.
     stamp: u64,
+}
+
+impl Entry {
+    fn check_control(&self, label: &[u8], session: u64, tag: &[u8; 32]) -> Result<(), SessionError> {
+        let Some(auth) = self.auth.as_ref() else {
+            return Err(SessionError::Unauthorized { session });
+        };
+        if !crypto::verify_hmac(auth, &control_bytes(label, session, self.epoch), tag) {
+            return Err(SessionError::Unauthorized { session });
+        }
+        Ok(())
+    }
 }
 
 struct Shard {
@@ -138,7 +200,10 @@ pub struct SessionTable {
     ttl_ms: u64,
     /// Per-shard live-entry ceiling (LRU backstop above TTL); 0 = none.
     shard_cap: usize,
-    next_id: AtomicU64,
+    /// Nonce behind attested-id derivation (not the id itself).
+    id_nonce: AtomicU64,
+    /// Per-table secret keying attested-id derivation.
+    id_seed: [u8; 32],
 }
 
 impl SessionTable {
@@ -170,7 +235,8 @@ impl SessionTable {
             } else {
                 max_sessions.div_ceil(n)
             },
-            next_id: AtomicU64::new(NET_SESSION_BASE),
+            id_nonce: AtomicU64::new(0),
+            id_seed: id_seed(),
         }
     }
 
@@ -203,15 +269,25 @@ impl SessionTable {
         sh.touch(session);
     }
 
-    /// Issue a fresh attested session bound to `model`.  Ids are
-    /// allocated monotonically and never reused, so an expired id can
-    /// never resurrect another client's keystream.
-    pub fn establish(&self, model: &str, now_ms: u64) -> SessionGrant {
+    /// Issue a fresh attested session bound to `model`, holding `auth`
+    /// as its control-frame MAC key.  Ids are drawn at random from the
+    /// attested range `[NET_SESSION_BASE, SESSION_ID_MASK]` — a keyed
+    /// hash of a per-table secret and a nonce, never sequential — so a
+    /// remote peer cannot enumerate other tenants' sessions, and a live
+    /// id is never reissued.
+    pub fn establish(&self, model: &str, auth: [u8; 32], now_ms: u64) -> SessionGrant {
         loop {
-            let id = self.next_id.fetch_add(1, Ordering::Relaxed) & crypto::SESSION_ID_MASK;
+            let nonce = self.id_nonce.fetch_add(1, Ordering::Relaxed);
+            let mut material = self.id_seed.to_vec();
+            material.extend_from_slice(&nonce.to_le_bytes());
+            let digest = crypto::sha256(&material);
+            let id = u64::from_le_bytes(digest[..8].try_into().unwrap()) & crypto::SESSION_ID_MASK;
+            if id < NET_SESSION_BASE {
+                continue; // keep clear of the hand-picked in-process range
+            }
             let mut sh = self.shard(id);
             if sh.map.contains_key(&id) {
-                continue; // wrapped into a live hand-picked id; skip it
+                continue; // drew a live id; redraw
             }
             let expires_at_ms = self.deadline(now_ms);
             self.insert(
@@ -222,6 +298,7 @@ impl SessionTable {
                     epoch: 0,
                     expires_at_ms,
                     attested: true,
+                    auth: Some(auth),
                     stamp: 0,
                 },
             );
@@ -257,6 +334,7 @@ impl SessionTable {
                 // safe because in-process callers always encrypt epoch 0
                 // and the keystream is theirs alone.
                 e.model = model.to_string();
+                e.auth = None;
                 e.expires_at_ms = self.deadline(now_ms);
                 let epoch = e.epoch;
                 sh.touch(session);
@@ -286,6 +364,7 @@ impl SessionTable {
                 epoch: 0,
                 expires_at_ms,
                 attested: false,
+                auth: None,
                 stamp: 0,
             },
         );
@@ -332,9 +411,50 @@ impl SessionTable {
         Ok(grant)
     }
 
+    /// [`SessionTable::refresh`], gated on proof of possession of the
+    /// attested session key: `tag` must be
+    /// `control_mac(auth, CONTROL_REFRESH, session, current_epoch)`.
+    /// Implicit sessions hold no auth key and always refuse — the wire
+    /// cannot steer sessions it did not establish.
+    pub fn refresh_authed(
+        &self,
+        session: u64,
+        tag: &[u8; 32],
+        now_ms: u64,
+    ) -> Result<SessionGrant, SessionError> {
+        let mut sh = self.shard(session);
+        let Some(e) = sh.map.get_mut(&session) else {
+            return Err(SessionError::Unknown { session });
+        };
+        e.check_control(CONTROL_REFRESH, session, tag)?;
+        e.epoch = e.epoch.wrapping_add(1);
+        e.expires_at_ms = self.deadline(now_ms);
+        let grant = SessionGrant {
+            session,
+            epoch: e.epoch,
+            expires_at_ms: e.expires_at_ms,
+        };
+        sh.touch(session);
+        Ok(grant)
+    }
+
     /// Drop the session outright; returns whether it existed.
     pub fn revoke(&self, session: u64) -> bool {
         self.shard(session).map.remove(&session).is_some()
+    }
+
+    /// [`SessionTable::revoke`] gated on the session's control MAC
+    /// (label [`CONTROL_REVOKE`]).  An absent session is `Ok(false)` —
+    /// there is nothing to protect and nothing to reveal; a present one
+    /// is only dropped when `tag` proves key possession.
+    pub fn revoke_authed(&self, session: u64, tag: &[u8; 32]) -> Result<bool, SessionError> {
+        let mut sh = self.shard(session);
+        let Some(e) = sh.map.get(&session) else {
+            return Ok(false);
+        };
+        e.check_control(CONTROL_REVOKE, session, tag)?;
+        sh.map.remove(&session);
+        Ok(true)
     }
 
     /// Retire every expired entry; returns how many were removed.  One
@@ -427,7 +547,7 @@ mod tests {
     #[test]
     fn attested_expiry_is_typed_and_refresh_resumes() {
         let t = SessionTable::new(4, 50);
-        let g = t.establish("m", 0);
+        let g = t.establish("m", [7u8; 32], 0);
         assert_eq!(g.epoch, 0);
         assert!(t.bind(g.session, "m", 10).is_ok());
         // past the deadline: typed expiry, not a silent rebind
@@ -450,13 +570,82 @@ mod tests {
     }
 
     #[test]
-    fn establish_issues_distinct_in_mask_ids() {
+    fn establish_issues_distinct_unguessable_in_mask_ids() {
         let t = SessionTable::new(4, SESSION_TTL_FOREVER);
-        let a = t.establish("m", 0);
-        let b = t.establish("m", 0);
+        let a = t.establish("m", [1u8; 32], 0);
+        let b = t.establish("m", [1u8; 32], 0);
+        let c = t.establish("m", [1u8; 32], 0);
         assert_ne!(a.session, b.session);
-        assert_eq!(a.session & !crypto::SESSION_ID_MASK, 0);
-        assert_eq!(b.session & !crypto::SESSION_ID_MASK, 0);
+        assert_ne!(b.session, c.session);
+        for g in [&a, &b, &c] {
+            assert_eq!(g.session & !crypto::SESSION_ID_MASK, 0, "inside the mask");
+            assert!(
+                g.session >= NET_SESSION_BASE,
+                "attested ids stay above the in-process range"
+            );
+        }
+        // Sequential allocation let a remote peer enumerate and revoke
+        // other tenants' sessions; three consecutive random 48-bit draws
+        // forming a run is a ~2^-95 event.
+        assert!(
+            !(b.session == a.session + 1 && c.session == b.session + 1),
+            "attested ids must not be sequential"
+        );
+    }
+
+    #[test]
+    fn control_frames_require_the_session_auth_key() {
+        let t = SessionTable::new(4, SESSION_TTL_FOREVER);
+        let auth = [9u8; 32];
+        let g = t.establish("m", auth, 0);
+        // wrong key, and right key over the wrong epoch, both refuse
+        let forged = control_mac(&[0u8; 32], CONTROL_REFRESH, g.session, 0);
+        assert_eq!(
+            t.refresh_authed(g.session, &forged, 0),
+            Err(SessionError::Unauthorized { session: g.session })
+        );
+        let stale_epoch = control_mac(&auth, CONTROL_REFRESH, g.session, 5);
+        assert_eq!(
+            t.refresh_authed(g.session, &stale_epoch, 0),
+            Err(SessionError::Unauthorized { session: g.session })
+        );
+        // the real key over the live epoch succeeds and bumps it
+        let tag = control_mac(&auth, CONTROL_REFRESH, g.session, 0);
+        let r = t.refresh_authed(g.session, &tag, 0).unwrap();
+        assert_eq!(r.epoch, 1);
+        // the epoch moved, so replaying the captured REFRESH MAC fails
+        assert_eq!(
+            t.refresh_authed(g.session, &tag, 0),
+            Err(SessionError::Unauthorized { session: g.session })
+        );
+        // revoke: forged tag refused (session survives), real tag drops it
+        let bad = control_mac(&auth, CONTROL_REVOKE, g.session, 0);
+        assert_eq!(
+            t.revoke_authed(g.session, &bad),
+            Err(SessionError::Unauthorized { session: g.session })
+        );
+        assert!(t.contains(g.session));
+        let good = control_mac(&auth, CONTROL_REVOKE, g.session, 1);
+        assert_eq!(t.revoke_authed(g.session, &good), Ok(true));
+        // absent session: nothing to protect, nothing to reveal
+        assert_eq!(t.revoke_authed(g.session, &good), Ok(false));
+    }
+
+    #[test]
+    fn implicit_sessions_are_not_wire_controllable() {
+        let t = SessionTable::new(4, SESSION_TTL_FOREVER);
+        t.bind(7, "m", 0).unwrap();
+        let tag = control_mac(&[0u8; 32], CONTROL_REFRESH, 7, 0);
+        assert_eq!(
+            t.refresh_authed(7, &tag, 0),
+            Err(SessionError::Unauthorized { session: 7 }),
+            "implicit bindings hold no auth key; the wire cannot refresh them"
+        );
+        assert_eq!(
+            t.revoke_authed(7, &tag),
+            Err(SessionError::Unauthorized { session: 7 })
+        );
+        assert!(t.contains(7), "the implicit session must survive the attempt");
     }
 
     #[test]
@@ -475,7 +664,7 @@ mod tests {
     #[test]
     fn epoch_of_reports_lifecycle() {
         let t = SessionTable::new(4, 100);
-        let g = t.establish("m", 0);
+        let g = t.establish("m", [7u8; 32], 0);
         assert_eq!(t.epoch_of(g.session, 50), Ok(0));
         assert_eq!(
             t.epoch_of(g.session, 100),

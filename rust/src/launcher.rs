@@ -477,7 +477,7 @@ pub fn start_deployment_from_config(base: &Config, specs: &[ModelSpec]) -> Resul
         fabric_options_from_config(base)?,
         autoscale_policy_from_config(base),
         epc_options_from_config(base),
-        SessionTable::new(base.session_shards, base.session_ttl_ms),
+        SessionTable::with_capacity(base.session_shards, base.session_ttl_ms, base.session_cap),
     );
     for spec in specs {
         let cfg = spec.apply(base);

@@ -232,6 +232,190 @@ fn expiry_mid_stream_then_refresh_resumes_with_identical_output() {
 }
 
 // ---------------------------------------------------------------------
+// control-frame authentication: a bare session id steers nothing
+// ---------------------------------------------------------------------
+
+/// Raw client → server frame types and the denied reply, hardcoded to
+/// pin the wire format byte-for-byte (`u32 LE length ‖ type ‖ payload`).
+const RAW_REFRESH: u8 = 0x03;
+const RAW_REVOKE: u8 = 0x04;
+const RAW_DENIED: u8 = 0x83;
+const RAW_REVOKED: u8 = 0x85;
+
+fn raw_roundtrip(addr: &std::net::SocketAddr, ty: u8, payload: &[u8]) -> (u8, Vec<u8>) {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).expect("raw connect");
+    let mut frame = ((payload.len() + 1) as u32).to_le_bytes().to_vec();
+    frame.push(ty);
+    frame.extend_from_slice(payload);
+    s.write_all(&frame).expect("raw frame write");
+    let mut head = [0u8; 5];
+    s.read_exact(&mut head).expect("reply head");
+    let len = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+    let mut body = vec![0u8; len - 1];
+    s.read_exact(&mut body).expect("reply body");
+    (head[4], body)
+}
+
+#[test]
+fn forged_control_frames_cannot_steer_another_tenants_session() {
+    let config = net_config("sim8", 600_000);
+    let (dep, server, opts) = start(&config);
+    let addr = server.local_addr();
+
+    let mut victim =
+        NetClient::connect(&addr, "sim8", &opts.measurement, &opts.platform_key, 0xA11CE)
+            .expect("victim handshake");
+    let image = image_for(&config);
+    let ct = encrypt_request(&config, victim.session_word(), &image);
+    let first = victim.infer(&ct).expect("victim inference");
+
+    // An attacker who learned the victim's bare session id — but holds
+    // no attested session key — sends REFRESH and REVOKE from a fresh,
+    // never-attested connection.  Both must be refused: an accepted
+    // REVOKE is a cross-tenant DoS, and an accepted REFRESH bumps the
+    // victim's keystream epoch so its next submit silently decrypts
+    // under the wrong session word.
+    let mut forged = victim.session().to_le_bytes().to_vec();
+    forged.extend_from_slice(&[0u8; 32]);
+    let (ty, body) = raw_roundtrip(&addr, RAW_REFRESH, &forged);
+    assert_eq!(ty, RAW_DENIED, "forged REFRESH must be denied");
+    assert_eq!(body[0], DenyCode::Unauthorized as u8, "typed Unauthorized");
+    let (ty, body) = raw_roundtrip(&addr, RAW_REVOKE, &forged);
+    assert_eq!(ty, RAW_DENIED, "forged REVOKE must be denied");
+    assert_eq!(body[0], DenyCode::Unauthorized as u8, "typed Unauthorized");
+
+    // The victim's epoch never moved and its session still serves: the
+    // same ciphertext (old session word) still decrypts to the same
+    // answer.
+    let again = victim.infer(&ct).expect("victim unaffected by forgeries");
+    assert_eq!(again.probs, first.probs);
+
+    // Probing an id that was never established reveals nothing — and
+    // with random 48-bit ids there is no sequence to walk anyway.
+    let mut probe = (victim.session() ^ 0x0000_1234_5678_9ABC)
+        .to_le_bytes()
+        .to_vec();
+    probe.extend_from_slice(&[0u8; 32]);
+    let (ty, body) = raw_roundtrip(&addr, RAW_REVOKE, &probe);
+    assert_eq!(ty, RAW_REVOKED);
+    assert_eq!(body, vec![0u8], "absent sessions report not-found, nothing more");
+
+    // The real holder of the session key can still do both.
+    assert_eq!(victim.refresh().expect("authentic refresh"), 1);
+    let ct1 = encrypt_request(&config, victim.session_word(), &image);
+    assert_eq!(victim.infer(&ct1).expect("post-refresh").probs, first.probs);
+    assert!(victim.revoke().expect("authentic revoke"));
+
+    teardown(dep, server);
+}
+
+// ---------------------------------------------------------------------
+// HELLO hygiene: no session state for unknown models
+// ---------------------------------------------------------------------
+
+#[test]
+fn hello_for_unknown_model_mints_no_session_state() {
+    let config = net_config("sim8", 600_000);
+    let (dep, server, opts) = start(&config);
+    let addr = server.local_addr();
+
+    match NetClient::connect(&addr, "sim99", &opts.measurement, &opts.platform_key, 5) {
+        Err(NetError::Denied(d)) => {
+            assert_eq!(d.code, DenyCode::UnknownModel);
+            assert!(d.message.contains("sim99"), "got: {}", d.message);
+        }
+        other => panic!("unknown-model HELLO must be denied, got {other:?}"),
+    }
+    assert_eq!(
+        dep.sessions().len(),
+        0,
+        "a refused HELLO must not grow the session table"
+    );
+
+    teardown(dep, server);
+}
+
+// ---------------------------------------------------------------------
+// evidence freshness is judged on the client's clock
+// ---------------------------------------------------------------------
+
+#[test]
+fn client_clock_rejects_aged_evidence() {
+    let config = net_config("sim8", 600_000);
+    let (dep, server, _opts) = start(&config);
+
+    // A door issuing short-lived evidence: fresh handshakes pass...
+    let short = NetOptions {
+        listen: "127.0.0.1:0".into(),
+        attest_ttl_ms: 5_000,
+        ..NetOptions::default()
+    };
+    let door = NetServer::start(dep.clone(), short.clone()).expect("short-ttl server");
+    NetClient::connect(
+        &door.local_addr(),
+        "sim8",
+        &short.measurement,
+        &short.platform_key,
+        8,
+    )
+    .expect("immediate evidence is fresh");
+
+    // ...but the same evidence aged past its TTL must read as stale on
+    // the client's own clock, even though the server stamped it with
+    // its own (self-consistent) issue time.  The old self-referential
+    // check (now = issued_at) called every ttl > 0 report fresh forever.
+    match NetClient::connect_assuming_age(
+        &door.local_addr(),
+        "sim8",
+        &short.measurement,
+        &short.platform_key,
+        9,
+        6_000,
+    ) {
+        Err(NetError::Attestation(msg)) => assert!(msg.contains("stale"), "got: {msg}"),
+        other => panic!("aged evidence must fail freshness, got {other:?}"),
+    }
+    door.shutdown();
+
+    teardown(dep, server);
+}
+
+// ---------------------------------------------------------------------
+// a stalled half-frame cannot wedge server shutdown
+// ---------------------------------------------------------------------
+
+#[test]
+fn half_sent_frame_does_not_wedge_shutdown() {
+    use std::io::Write;
+    let config = net_config("sim8", 600_000);
+    let (dep, server, _opts) = start(&config);
+    let addr = server.local_addr();
+
+    // A peer sends 3 bytes of the 5-byte frame head, then stalls with
+    // the socket held open.  Its connection thread is now mid-frame;
+    // shutdown must still complete (the stop flag interrupts the read).
+    let mut stall = std::net::TcpStream::connect(addr).expect("stall connect");
+    stall.write_all(&[9, 0, 0]).expect("partial head");
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    let t0 = std::time::Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(5),
+        "shutdown blocked on a stalled mid-frame peer for {:?}",
+        t0.elapsed()
+    );
+    drop(stall);
+    match Arc::try_unwrap(dep) {
+        Ok(d) => {
+            d.shutdown();
+        }
+        Err(_) => panic!("deployment still referenced after server shutdown"),
+    }
+}
+
+// ---------------------------------------------------------------------
 // per-tenant rate limits: typed wire denials with backoff hints
 // ---------------------------------------------------------------------
 
