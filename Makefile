@@ -6,7 +6,7 @@
 # only needed for the artifact-gated integration tests/benches; the
 # hermetic `sim*` reference-backend paths run everywhere.
 
-.PHONY: ci build test test-sim clippy fmt-check doc bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission bench-smoke-epc bench-smoke-blinding bench-smoke-kernels bench-smoke-net pool-demo fabric-demo net-demo clean
+.PHONY: ci build test test-sim clippy fmt-check doc bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission bench-smoke-epc bench-smoke-blinding bench-smoke-kernels bench-smoke-net bench-smoke-tracks pool-demo fabric-demo net-demo clean
 
 ## The CI gate: release build, full test suite, clippy as errors, rustfmt,
 ## and warning-free rustdoc.
@@ -24,7 +24,7 @@ test:
 ## assertions: `make test-sim ORIGAMI_SIM_SEED=1` (CI runs both).
 ORIGAMI_SIM_SEED ?= 2019
 test-sim:
-	ORIGAMI_SIM_SEED=$(ORIGAMI_SIM_SEED) cargo test -q --test slo_integration --test fabric_integration --test pool_integration --test admission_integration
+	ORIGAMI_SIM_SEED=$(ORIGAMI_SIM_SEED) cargo test -q --test slo_integration --test fabric_integration --test pool_integration --test admission_integration --test cluster_integration
 
 clippy:
 	cargo clippy -p origami -- -D warnings -D clippy::large_stack_arrays
@@ -80,6 +80,13 @@ bench-smoke-kernels:
 ## single-mutex map ≥1.2x on the 8-thread bind path).
 bench-smoke-net:
 	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig21_net_sessions
+
+## Fast smoke of the track-routing bench (asserts a 3-node track is
+## bit-identical to a single node, a mid-stream node kill migrates every
+## pinned session with zero losses inside the post-kill p95 SLO, and the
+## partition/heal replay is deterministic across seeds and cadences).
+bench-smoke-tracks:
+	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig22_track_routing
 
 ## The worker-pool demo: 4 pipelined workers vs the serial path.
 pool-demo:

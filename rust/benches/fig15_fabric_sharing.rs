@@ -27,7 +27,7 @@
 //! (ORIGAMI_BENCH_FAST=1 shrinks the request counts for CI smoke runs.)
 
 use origami::config::Config;
-use origami::coordinator::{AutoscalePolicy, Deployment, DeploymentMetrics};
+use origami::coordinator::{Deployment, DeploymentMetrics};
 use origami::enclave::cost::Ledger;
 use origami::harness::Bench;
 use origami::launcher::{
@@ -165,10 +165,7 @@ fn new_deployment(base: &Config, lanes: usize) -> anyhow::Result<Deployment> {
     let mut cfg = base.clone();
     cfg.lanes = lanes;
     cfg.lane_devices = "cpu".into();
-    Ok(Deployment::new(
-        fabric_options_from_config(&cfg)?,
-        AutoscalePolicy::default(),
-    ))
+    Ok(Deployment::builder(fabric_options_from_config(&cfg)?).build())
 }
 
 fn main() -> anyhow::Result<()> {

@@ -151,6 +151,25 @@ pub struct Config {
     /// under a HELLO flood arriving faster than the TTL retires it.
     /// 0 = unbounded (trusted in-process deployments only).
     pub session_cap: usize,
+    /// Session-sweep cadence (ms) of the deployment's background
+    /// sweeper thread: expired sessions are reaped on this cadence even
+    /// with autoscaling off.  0 disables the sweeper (trusted
+    /// deployments that drive [`autoscale_tick`] themselves).
+    ///
+    /// [`autoscale_tick`]: crate::coordinator::Deployment::autoscale_tick
+    pub session_sweep_ms: u64,
+    /// Enclave track this node serves in (empty = single-node, no track
+    /// membership).  All members of a track share one blinding-domain
+    /// seed and session-key root, handed off over the attested join
+    /// channel, so any member can pick up any of the track's sessions.
+    pub track: String,
+    /// Comma-separated `host:port` list of existing track members to
+    /// join through (empty = this node is the track's genesis member
+    /// and mints the track keys itself).
+    pub track_peers: String,
+    /// Grace period (ms) a draining node's sessions get before the
+    /// cluster router force-migrates them onto same-track siblings.
+    pub drain_grace_ms: u64,
 }
 
 impl Default for Config {
@@ -205,6 +224,10 @@ impl Default for Config {
             session_ttl_ms: crate::coordinator::router::DEFAULT_SESSION_TTL_MS,
             session_shards: crate::coordinator::router::DEFAULT_SESSION_SHARDS,
             session_cap: crate::coordinator::router::DEFAULT_SESSION_CAP,
+            session_sweep_ms: crate::coordinator::router::DEFAULT_SESSION_SWEEP_MS,
+            track: String::new(),
+            track_peers: String::new(),
+            drain_grace_ms: crate::coordinator::cluster::DEFAULT_DRAIN_GRACE_MS,
         }
     }
 }
@@ -267,6 +290,8 @@ impl Config {
             ("degrade_strategy", &mut self.degrade_strategy),
             ("tail_precision", &mut self.tail_precision),
             ("listen", &mut self.listen),
+            ("track", &mut self.track),
+            ("track_peers", &mut self.track_peers),
         ] {
             if let Some(s) = v.get(field).and_then(|x| x.as_str()) {
                 *slot = s.to_string();
@@ -280,6 +305,8 @@ impl Config {
             ("lazy_dense_bytes", &mut self.lazy_dense_bytes),
             ("autoscale_tick_ms", &mut self.autoscale_tick_ms),
             ("session_ttl_ms", &mut self.session_ttl_ms),
+            ("session_sweep_ms", &mut self.session_sweep_ms),
+            ("drain_grace_ms", &mut self.drain_grace_ms),
         ] {
             if let Some(n) = v.get(field).and_then(|x| x.as_i64()) {
                 *slot = n as u64;
@@ -438,11 +465,19 @@ impl Config {
         c.session_ttl_ms = args.u64_or("session-ttl", c.session_ttl_ms)?;
         c.session_shards = args.usize_or("session-shards", c.session_shards)?;
         c.session_cap = args.usize_or("session-cap", c.session_cap)?;
+        c.session_sweep_ms = args.u64_or("session-sweep-ms", c.session_sweep_ms)?;
         anyhow::ensure!(
             c.session_shards > 0,
             "--session-shards must be ≥ 1, got {}",
             c.session_shards
         );
+        if let Some(v) = args.get("track") {
+            c.track = v.into();
+        }
+        if let Some(v) = args.get("track-peers") {
+            c.track_peers = v.into();
+        }
+        c.drain_grace_ms = args.u64_or("drain-grace-ms", c.drain_grace_ms)?;
         if args.has("strict-otp") {
             c.allow_factor_reuse = false;
         }
@@ -529,6 +564,10 @@ impl Config {
             ("session_ttl_ms", json::num(self.session_ttl_ms as f64)),
             ("session_shards", json::num(self.session_shards as f64)),
             ("session_cap", json::num(self.session_cap as f64)),
+            ("session_sweep_ms", json::num(self.session_sweep_ms as f64)),
+            ("track", json::s(&self.track)),
+            ("track_peers", json::s(&self.track_peers)),
+            ("drain_grace_ms", json::num(self.drain_grace_ms as f64)),
         ])
     }
 
@@ -656,6 +695,11 @@ impl Config {
             d("net", "--session-ttl", "<ms>", "session_ttl_ms", "session table TTL (ms)"),
             d("net", "--session-shards", "<n>", "session_shards", "session table lock stripes"),
             d("net", "--session-cap", "<n>", "session_cap", "live-session LRU ceiling (0 = off)"),
+            d("net", "--session-sweep-ms", "<ms>", "session_sweep_ms", "expiry sweep cadence (0 = off)"),
+            // track (enclave tracks + cluster routing)
+            d("track", "--track", "<name>", "track", "enclave track to serve in (empty = solo)"),
+            d("track", "--track-peers", "<l>", "track_peers", "host:port,… members to join through"),
+            d("track", "--drain-grace-ms", "<ms>", "drain_grace_ms", "drain grace before force-migrate"),
         ]
     }
 }

@@ -1,0 +1,941 @@
+//! The cluster router tier: consistent-hash routing of attested
+//! sessions across track members, drain of failing nodes, and typed
+//! partition isolation.
+//!
+//! Two layers, deliberately split:
+//!
+//! * [`RoutePlan`] is the *pure* routing state machine — nodes, health,
+//!   the consistent-hash ring, and the session→node pin table.  It
+//!   performs no I/O and reads no clock of its own, so the multi-node
+//!   simulator ([`harness::sim`](crate::harness::sim)) replays the
+//!   exact production code deterministically, the same way it already
+//!   replays admission and autoscaling.
+//! * [`ClusterRouter`] wraps a plan around live member [`Deployment`]s
+//!   and implements [`Frontend`], so the wire front door serves a
+//!   cluster exactly as it serves one node.
+//!
+//! Routing rules:
+//!
+//! * a session is **pinned** to the node that first served it (session
+//!   affinity: the node holds the session's table entry and its pads);
+//! * a node marked failing **drains**: every `route` that touches one
+//!   of its sessions re-pins the session to a sibling *in the same
+//!   track* right then — lazy, so outcomes never depend on how often a
+//!   background tick runs — and [`RoutePlan::tick`] batch-migrates
+//!   whatever is left once the drain grace expires, then marks the
+//!   node down.  Same track ⇒ same key material ⇒ the client's epoch
+//!   and keystream survive the move untouched;
+//! * a **partition** assigns nodes to components; only the majority
+//!   component serves.  A session pinned to a minority-side node gets
+//!   a typed [`RouteError::Isolated`] — it is *never* re-pinned across
+//!   the cut, because the minority side may still be serving it, and
+//!   two nodes advancing one session's keystream would corrupt it
+//!   irrecoverably.  Isolation is an availability loss; re-routing
+//!   would be an integrity loss.  Heal re-joins the components and the
+//!   pins come back as they were.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::crypto;
+use crate::util::threadpool::Channel;
+
+use super::api::InferResponse;
+use super::router::{AdmissionError, Deployment, Frontend};
+use super::session::{SessionError, SessionGrant};
+
+/// Default drain grace: how long a failing node keeps unreached pinned
+/// sessions before the tick force-migrates them (`--drain-grace-ms`).
+pub const DEFAULT_DRAIN_GRACE_MS: u64 = 500;
+
+/// Cluster routing knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// How long a draining node keeps its remaining pinned sessions
+    /// before [`RoutePlan::tick`] force-migrates them and marks it
+    /// down.  Routes touching a draining node's session move it
+    /// immediately regardless.
+    pub drain_grace_ms: u64,
+    /// Virtual ring points per node: more vnodes spread load more
+    /// evenly at the cost of a bigger ring.
+    pub vnodes: usize,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        Self {
+            drain_grace_ms: DEFAULT_DRAIN_GRACE_MS,
+            vnodes: 32,
+        }
+    }
+}
+
+/// One node's serving state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeHealth {
+    Healthy,
+    /// Marked failing at `since_ms`; sessions drain off it lazily, and
+    /// past the grace the tick finishes the job and marks it down.
+    Draining { since_ms: u64 },
+    Down,
+}
+
+/// Why a route could not be served.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    /// The session is pinned to a node on the minority side of a
+    /// partition.  Typed and refused — never silently re-pinned, which
+    /// could let two nodes advance one keystream.
+    Isolated { session: u64, node: String },
+    /// The session's node needs to hand off, but no healthy sibling in
+    /// the same track is reachable (siblings share key material; a
+    /// foreign track could not serve the session's keystream).
+    NoSibling { session: u64, track: String },
+    /// No usable node at all (everything down or cut off).
+    NoCapacity,
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::Isolated { session, node } => write!(
+                f,
+                "session {session} is pinned to `{node}`, isolated by a partition"
+            ),
+            RouteError::NoSibling { session, track } => write!(
+                f,
+                "session {session} has no reachable sibling in track `{track}`"
+            ),
+            RouteError::NoCapacity => write!(f, "no usable node"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// One session re-pinned from a draining/down node to a sibling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionMove {
+    pub session: u64,
+    pub from: String,
+    pub to: String,
+}
+
+#[derive(Debug, Clone)]
+struct RingNode {
+    name: String,
+    track: String,
+    health: NodeHealth,
+    /// Partition component (0 when whole); only the majority component
+    /// serves.
+    component: u32,
+}
+
+/// Deterministic consistent-hash routing state (see module docs).
+#[derive(Debug)]
+pub struct RoutePlan {
+    opts: ClusterOptions,
+    nodes: Vec<RingNode>,
+    /// Sorted (point, node index) — usable nodes only; rebuilt on any
+    /// membership/health/partition change.
+    ring: Vec<(u64, usize)>,
+    /// Session affinity: session → node index.
+    pinned: HashMap<u64, usize>,
+}
+
+impl RoutePlan {
+    pub fn new(opts: ClusterOptions) -> Self {
+        Self {
+            opts,
+            nodes: Vec::new(),
+            ring: Vec::new(),
+            pinned: HashMap::new(),
+        }
+    }
+
+    pub fn options(&self) -> &ClusterOptions {
+        &self.opts
+    }
+
+    /// Register a node.  Existing pins are sticky — consistent hashing
+    /// only changes where *new* sessions land, so a membership change
+    /// rebalances without moving live keystreams.
+    pub fn add_node(&mut self, name: &str, track: &str) {
+        if self.index_of(name).is_some() {
+            return;
+        }
+        self.nodes.push(RingNode {
+            name: name.to_string(),
+            track: track.to_string(),
+            health: NodeHealth::Healthy,
+            component: 0,
+        });
+        self.rebuild_ring();
+    }
+
+    pub fn node_names(&self) -> Vec<String> {
+        self.nodes.iter().map(|n| n.name.clone()).collect()
+    }
+
+    pub fn health(&self, name: &str) -> Option<NodeHealth> {
+        self.index_of(name).map(|i| self.nodes[i].health)
+    }
+
+    pub fn track_of(&self, name: &str) -> Option<&str> {
+        self.index_of(name).map(|i| self.nodes[i].track.as_str())
+    }
+
+    /// Sessions currently pinned to `name`.
+    pub fn pinned_to(&self, name: &str) -> Vec<u64> {
+        let Some(idx) = self.index_of(name) else {
+            return Vec::new();
+        };
+        let mut v: Vec<u64> = self
+            .pinned
+            .iter()
+            .filter(|&(_, &i)| i == idx)
+            .map(|(&s, _)| s)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The node a session is pinned to, if any.
+    pub fn pin_of(&self, session: u64) -> Option<&str> {
+        self.pinned
+            .get(&session)
+            .map(|&i| self.nodes[i].name.as_str())
+    }
+
+    /// Explicitly pin a session (the router records where an establish
+    /// landed).
+    pub fn pin(&mut self, session: u64, name: &str) {
+        if let Some(idx) = self.index_of(name) {
+            self.pinned.insert(session, idx);
+        }
+    }
+
+    pub fn unpin(&mut self, session: u64) {
+        self.pinned.remove(&session);
+    }
+
+    /// Mark a node failing: it serves no *new* sessions from here on,
+    /// existing sessions drain off it (lazily on touch, in bulk by the
+    /// tick once `drain_grace_ms` passes).  Idempotent; a down node
+    /// stays down.
+    pub fn mark_failing(&mut self, name: &str, now_ms: u64) {
+        if let Some(i) = self.index_of(name) {
+            if self.nodes[i].health == NodeHealth::Healthy {
+                self.nodes[i].health = NodeHealth::Draining { since_ms: now_ms };
+                self.rebuild_ring();
+            }
+        }
+    }
+
+    /// Split the cluster: `groups[i]` becomes component `i`; nodes not
+    /// named stay in component 0.  Only the majority component (most
+    /// usable nodes; ties to the lowest id) serves.
+    pub fn partition(&mut self, groups: &[Vec<String>]) {
+        for n in &mut self.nodes {
+            n.component = 0;
+        }
+        for (cid, group) in groups.iter().enumerate() {
+            for name in group {
+                if let Some(i) = self.index_of(name) {
+                    self.nodes[i].component = cid as u32;
+                }
+            }
+        }
+        self.rebuild_ring();
+    }
+
+    /// Rejoin all components.  Pins on the (former) minority side come
+    /// back exactly as they were — isolation never rewrote them.
+    pub fn heal(&mut self) {
+        for n in &mut self.nodes {
+            n.component = 0;
+        }
+        self.rebuild_ring();
+    }
+
+    /// Route `session` to a node name.  A new session lands on the ring
+    /// (usable nodes only); a pinned session sticks to its node unless
+    /// that node is draining or down, in which case it is re-pinned to
+    /// a same-track sibling *now* — drain is lazy on touch, so serving
+    /// outcomes are independent of any background tick cadence.  The
+    /// second return is the move performed, if any.
+    pub fn route(
+        &mut self,
+        session: u64,
+        _now_ms: u64,
+    ) -> std::result::Result<(String, Option<SessionMove>), RouteError> {
+        let majority = self.majority_component();
+        if let Some(&idx) = self.pinned.get(&session) {
+            let node = &self.nodes[idx];
+            if node.component != majority {
+                // the minority side may still be serving this session:
+                // re-pinning would double-drive its keystream
+                return Err(RouteError::Isolated {
+                    session,
+                    node: node.name.clone(),
+                });
+            }
+            if node.health == NodeHealth::Healthy {
+                return Ok((node.name.clone(), None));
+            }
+            // draining or down: hand off to a same-track sibling
+            let track = node.track.clone();
+            let from = node.name.clone();
+            let Some(to_idx) = self.sibling_for(session, &track, idx) else {
+                return Err(RouteError::NoSibling { session, track });
+            };
+            self.pinned.insert(session, to_idx);
+            let to = self.nodes[to_idx].name.clone();
+            return Ok((
+                to.clone(),
+                Some(SessionMove { session, from, to }),
+            ));
+        }
+        let Some(idx) = self.ring_walk(point_of_session(session), None) else {
+            return Err(RouteError::NoCapacity);
+        };
+        self.pinned.insert(session, idx);
+        Ok((self.nodes[idx].name.clone(), None))
+    }
+
+    /// Drain pass: nodes draining past the grace get their remaining
+    /// pinned sessions migrated to same-track siblings and are marked
+    /// down.  Returns the moves (the caller migrates the session state
+    /// alongside).  Deterministic: sessions are processed in sorted
+    /// order and targets come from the ring, not the clock — so the
+    /// final pinning is identical whatever cadence calls this.
+    pub fn tick(&mut self, now_ms: u64) -> Vec<SessionMove> {
+        let expired: Vec<usize> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n.health {
+                NodeHealth::Draining { since_ms }
+                    if now_ms.saturating_sub(since_ms) >= self.opts.drain_grace_ms =>
+                {
+                    Some(i)
+                }
+                _ => None,
+            })
+            .collect();
+        let mut moves = Vec::new();
+        for idx in expired {
+            let from = self.nodes[idx].name.clone();
+            let track = self.nodes[idx].track.clone();
+            let mut sessions: Vec<u64> = self
+                .pinned
+                .iter()
+                .filter(|&(_, &i)| i == idx)
+                .map(|(&s, _)| s)
+                .collect();
+            sessions.sort_unstable();
+            for session in sessions {
+                if let Some(to_idx) = self.sibling_for(session, &track, idx) {
+                    self.pinned.insert(session, to_idx);
+                    moves.push(SessionMove {
+                        session,
+                        from: from.clone(),
+                        to: self.nodes[to_idx].name.clone(),
+                    });
+                }
+                // no sibling: leave the pin — the session surfaces as a
+                // typed NoSibling on its next touch, never silently lost
+            }
+            self.nodes[idx].health = NodeHealth::Down;
+        }
+        if !moves.is_empty() {
+            self.rebuild_ring();
+        }
+        moves
+    }
+
+    /// Order-independent digest of the full routing state (nodes,
+    /// health, components, pins) — what the simulator's determinism
+    /// regressions compare across seeds, runs, and tick cadences.
+    pub fn digest(&self) -> u64 {
+        let mut acc: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut fold = |bytes: &[u8]| {
+            for &b in bytes {
+                acc ^= b as u64;
+                acc = acc.wrapping_mul(0x1000_0000_01b3);
+            }
+        };
+        let mut nodes: Vec<&RingNode> = self.nodes.iter().collect();
+        nodes.sort_by(|a, b| a.name.cmp(&b.name));
+        for n in nodes {
+            fold(n.name.as_bytes());
+            fold(n.track.as_bytes());
+            fold(&n.component.to_le_bytes());
+            fold(&match n.health {
+                NodeHealth::Healthy => [0u8; 9],
+                NodeHealth::Draining { since_ms } => {
+                    let mut b = [1u8; 9];
+                    b[1..].copy_from_slice(&since_ms.to_le_bytes());
+                    b
+                }
+                NodeHealth::Down => [2u8; 9],
+            });
+        }
+        let mut pins: Vec<(u64, &str)> = self
+            .pinned
+            .iter()
+            .map(|(&s, &i)| (s, self.nodes[i].name.as_str()))
+            .collect();
+        pins.sort_unstable();
+        for (s, name) in pins {
+            fold(&s.to_le_bytes());
+            fold(name.as_bytes());
+        }
+        acc
+    }
+
+    fn index_of(&self, name: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+
+    fn usable(&self, idx: usize, majority: u32) -> bool {
+        let n = &self.nodes[idx];
+        n.health == NodeHealth::Healthy && n.component == majority
+    }
+
+    /// The serving component: most usable nodes, ties to the lowest id.
+    fn majority_component(&self) -> u32 {
+        let mut counts: HashMap<u32, usize> = HashMap::new();
+        for n in &self.nodes {
+            if n.health == NodeHealth::Healthy {
+                *counts.entry(n.component).or_insert(0) += 1;
+            }
+        }
+        let mut best = (0u32, 0usize);
+        let mut ids: Vec<u32> = counts.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let c = counts[&id];
+            if c > best.1 {
+                best = (id, c);
+            }
+        }
+        best.0
+    }
+
+    fn rebuild_ring(&mut self) {
+        let majority = self.majority_component();
+        self.ring.clear();
+        for (idx, n) in self.nodes.iter().enumerate() {
+            if n.health != NodeHealth::Healthy || n.component != majority {
+                continue;
+            }
+            for v in 0..self.opts.vnodes.max(1) {
+                self.ring.push((point_of_node(&n.name, v), idx));
+            }
+        }
+        self.ring.sort_unstable();
+    }
+
+    /// First usable node at or clockwise of `point`, optionally
+    /// restricted to `track` — the ring only carries usable nodes.
+    fn ring_walk(&self, point: u64, track: Option<&str>) -> Option<usize> {
+        if self.ring.is_empty() {
+            return None;
+        }
+        let start = self.ring.partition_point(|&(p, _)| p < point);
+        for off in 0..self.ring.len() {
+            let (_, idx) = self.ring[(start + off) % self.ring.len()];
+            match track {
+                Some(t) if self.nodes[idx].track != t => continue,
+                _ => return Some(idx),
+            }
+        }
+        None
+    }
+
+    fn sibling_for(&self, session: u64, track: &str, exclude: usize) -> Option<usize> {
+        if self.ring.is_empty() {
+            return None;
+        }
+        let point = point_of_session(session);
+        let start = self.ring.partition_point(|&(p, _)| p < point);
+        for off in 0..self.ring.len() {
+            let (_, idx) = self.ring[(start + off) % self.ring.len()];
+            if idx != exclude && self.nodes[idx].track == track {
+                return Some(idx);
+            }
+        }
+        None
+    }
+}
+
+fn point_of_node(name: &str, vnode: usize) -> u64 {
+    let mut material = b"origami-ring-node:".to_vec();
+    material.extend_from_slice(name.as_bytes());
+    material.extend_from_slice(&(vnode as u64).to_le_bytes());
+    let d = crypto::sha256(&material);
+    u64::from_le_bytes(d[..8].try_into().unwrap())
+}
+
+fn point_of_session(session: u64) -> u64 {
+    let mut material = b"origami-ring-session:".to_vec();
+    material.extend_from_slice(&session.to_le_bytes());
+    let d = crypto::sha256(&material);
+    u64::from_le_bytes(d[..8].try_into().unwrap())
+}
+
+struct ClusterInner {
+    plan: RoutePlan,
+    members: HashMap<String, Arc<Deployment>>,
+    /// Completed drain/route migrations (audit trail; tests read it).
+    moves: Vec<SessionMove>,
+}
+
+/// A [`Frontend`] over many track members: routes every session-scoped
+/// call through the [`RoutePlan`] and migrates session state alongside
+/// every drain move (same-track siblings share key material, so the
+/// moved session's epoch and control key stay valid verbatim).
+pub struct ClusterRouter {
+    inner: Mutex<ClusterInner>,
+    /// Round-robin establish spreading (deterministic).
+    next_establish: AtomicU64,
+    epoch: Instant,
+}
+
+impl ClusterRouter {
+    pub fn new(opts: ClusterOptions) -> Self {
+        Self {
+            inner: Mutex::new(ClusterInner {
+                plan: RoutePlan::new(opts),
+                members: HashMap::new(),
+                moves: Vec::new(),
+            }),
+            next_establish: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Register a member node serving under `track`.
+    pub fn add_node(&self, name: &str, track: &str, deployment: Arc<Deployment>) {
+        let mut g = self.lock();
+        g.plan.add_node(name, track);
+        g.members.insert(name.to_string(), deployment);
+    }
+
+    /// Mark `name` failing and drain it: every session still pinned to
+    /// it is re-pinned to a same-track sibling with its table entry
+    /// migrated (epoch, control key, and remaining TTL intact), then
+    /// the node is marked down and its deployment handle dropped.
+    /// Returns how many sessions moved.
+    pub fn kill(&self, name: &str) -> usize {
+        let now = self.now_ms();
+        let mut g = self.lock();
+        g.plan.mark_failing(name, now);
+        // force the grace over: a kill is immediate (mark_failing alone
+        // models the graceful variant)
+        let moves = g.plan.tick(now.saturating_add(g.plan.options().drain_grace_ms));
+        let n = moves.len();
+        for mv in moves {
+            Self::migrate(&mut g, &mv);
+            g.moves.push(mv);
+        }
+        g.members.remove(name);
+        n
+    }
+
+    /// Graceful variant: mark failing now; routes and later
+    /// [`ClusterRouter::drain_tick`] calls do the moving.
+    pub fn mark_failing(&self, name: &str) {
+        let now = self.now_ms();
+        self.lock().plan.mark_failing(name, now);
+    }
+
+    /// Background drain pass (the cluster analogue of the session
+    /// sweeper): migrate sessions off any node whose drain grace has
+    /// expired.  Returns how many moved.
+    pub fn drain_tick(&self) -> usize {
+        let now = self.now_ms();
+        let mut g = self.lock();
+        let moves = g.plan.tick(now);
+        let n = moves.len();
+        for mv in moves {
+            Self::migrate(&mut g, &mv);
+            g.moves.push(mv);
+        }
+        n
+    }
+
+    /// Completed session migrations so far.
+    pub fn moves(&self) -> Vec<SessionMove> {
+        self.lock().moves.clone()
+    }
+
+    /// The routing digest (see [`RoutePlan::digest`]).
+    pub fn digest(&self) -> u64 {
+        self.lock().plan.digest()
+    }
+
+    /// The node currently pinned for `session`, if any.
+    pub fn pin_of(&self, session: u64) -> Option<String> {
+        self.lock().plan.pin_of(session).map(str::to_string)
+    }
+
+    /// Shut down every member, returning their names in drop order.
+    pub fn shutdown(self) -> Vec<String> {
+        let inner = self.inner.into_inner().unwrap_or_else(|e| e.into_inner());
+        let mut names: Vec<String> = inner.members.keys().cloned().collect();
+        names.sort();
+        for (_, dep) in inner.members {
+            if let Ok(dep) = Arc::try_unwrap(dep) {
+                dep.shutdown();
+            }
+        }
+        names
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ClusterInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Move one session's table entry from `mv.from` to `mv.to`.  TTL
+    /// travels as remaining lifetime (each deployment runs its own
+    /// clock); epoch and control key are copied verbatim — same-track
+    /// siblings share the key root, so the client notices nothing.
+    fn migrate(g: &mut ClusterInner, mv: &SessionMove) {
+        let (Some(from), Some(to)) = (g.members.get(&mv.from), g.members.get(&mv.to)) else {
+            return;
+        };
+        if let Some(snap) = from.sessions().export(mv.session, from.now_ms()) {
+            to.sessions().adopt(snap, to.now_ms());
+            from.sessions().unbind(mv.session);
+        }
+    }
+
+    /// Route a session-scoped call to its member, migrating state if
+    /// the route performed a drain move.
+    fn member_for(
+        &self,
+        session: u64,
+    ) -> std::result::Result<Arc<Deployment>, RouteError> {
+        let now = self.now_ms();
+        let mut g = self.lock();
+        let (name, mv) = g.plan.route(session, now)?;
+        if let Some(mv) = mv {
+            Self::migrate(&mut g, &mv);
+            g.moves.push(mv);
+        }
+        g.members.get(&name).cloned().ok_or(RouteError::NoCapacity)
+    }
+
+    /// The member already holding `session`, bypassing routing (for
+    /// read-only session lookups on unpinned ids).
+    fn member_holding(&self, session: u64) -> Option<Arc<Deployment>> {
+        let g = self.lock();
+        if let Some(name) = g.plan.pin_of(session) {
+            return g.members.get(name).cloned();
+        }
+        let mut names: Vec<&String> = g.members.keys().collect();
+        names.sort();
+        for name in names {
+            let dep = &g.members[name];
+            if dep.sessions().contains(session) {
+                return Some(dep.clone());
+            }
+        }
+        None
+    }
+}
+
+impl Frontend for ClusterRouter {
+    fn submit(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> std::result::Result<Channel<InferResponse>, AdmissionError> {
+        let dep = self.member_for(session).map_err(|e| match e {
+            // typed isolation/capacity loss surfaces as unavailability —
+            // retryable, never a corrupt answer
+            RouteError::Isolated { .. } | RouteError::NoSibling { .. } | RouteError::NoCapacity => {
+                AdmissionError::Unavailable {
+                    model: model.to_string(),
+                }
+            }
+        })?;
+        dep.submit(model, ciphertext, session)
+    }
+
+    fn infer_blocking(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<InferResponse> {
+        let dep = self
+            .member_for(session)
+            .map_err(|e| anyhow!("cluster route failed: {e}"))?;
+        dep.infer_blocking(model, ciphertext, session)
+    }
+
+    fn has_model(&self, model: &str) -> bool {
+        let g = self.lock();
+        g.members.values().any(|d| d.has_model(model))
+    }
+
+    fn models(&self) -> Vec<String> {
+        let g = self.lock();
+        let mut v: Vec<String> = g
+            .members
+            .values()
+            .flat_map(|d| d.models())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn session_ttl_ms(&self) -> u64 {
+        let g = self.lock();
+        let mut names: Vec<&String> = g.members.keys().collect();
+        names.sort();
+        names
+            .first()
+            .map(|n| g.members[*n].sessions().ttl_ms())
+            .unwrap_or(0)
+    }
+
+    fn establish_session(&self, model: &str, auth: [u8; 32]) -> SessionGrant {
+        // spread establishes round-robin over nodes serving the model,
+        // then pin the minted id where it landed
+        let nth = self.next_establish.fetch_add(1, Ordering::Relaxed);
+        let (name, dep) = {
+            let g = self.lock();
+            let mut serving: Vec<(&String, &Arc<Deployment>)> = g
+                .members
+                .iter()
+                .filter(|(name, d)| {
+                    d.has_model(model)
+                        && g.plan.health(name) == Some(NodeHealth::Healthy)
+                })
+                .collect();
+            serving.sort_by(|a, b| a.0.cmp(b.0));
+            if serving.is_empty() {
+                // degenerate: no healthy server — fall back to any
+                // member so the grant is at least well-formed
+                let mut all: Vec<(&String, &Arc<Deployment>)> = g.members.iter().collect();
+                all.sort_by(|a, b| a.0.cmp(b.0));
+                let (name, dep) = all[(nth as usize) % all.len().max(1)];
+                (name.clone(), dep.clone())
+            } else {
+                let (name, dep) = serving[(nth as usize) % serving.len()];
+                (name.clone(), dep.clone())
+            }
+        };
+        let grant = dep.establish_session(model, auth);
+        self.lock().plan.pin(grant.session, &name);
+        grant
+    }
+
+    fn refresh_session_authed(
+        &self,
+        session: u64,
+        tag: &[u8; 32],
+    ) -> std::result::Result<SessionGrant, SessionError> {
+        let dep = self
+            .member_holding(session)
+            .ok_or(SessionError::Unknown { session })?;
+        dep.refresh_session_authed(session, tag)
+    }
+
+    fn revoke_session_authed(
+        &self,
+        session: u64,
+        tag: &[u8; 32],
+    ) -> std::result::Result<bool, SessionError> {
+        let dep = self
+            .member_holding(session)
+            .ok_or(SessionError::Unknown { session })?;
+        let revoked = dep.revoke_session_authed(session, tag)?;
+        if revoked {
+            self.lock().plan.unpin(session);
+        }
+        Ok(revoked)
+    }
+
+    fn session_epoch(&self, session: u64) -> std::result::Result<u32, SessionError> {
+        let dep = self
+            .member_holding(session)
+            .ok_or(SessionError::Unknown { session })?;
+        dep.session_epoch(session)
+    }
+
+    fn bound_model(&self, session: u64) -> Option<String> {
+        let dep = self.member_holding(session)?;
+        dep.sessions().bound_model(session, dep.now_ms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan3() -> RoutePlan {
+        let mut p = RoutePlan::new(ClusterOptions::default());
+        p.add_node("a", "prod");
+        p.add_node("b", "prod");
+        p.add_node("c", "prod");
+        p
+    }
+
+    #[test]
+    fn new_sessions_spread_and_stick() {
+        let mut p = plan3();
+        let mut seen = std::collections::HashSet::new();
+        for s in 0..64u64 {
+            let (node, mv) = p.route(s, 0).unwrap();
+            assert!(mv.is_none());
+            seen.insert(node.clone());
+            // sticky: the same session routes to the same node forever
+            assert_eq!(p.route(s, 1_000).unwrap().0, node);
+        }
+        assert_eq!(seen.len(), 3, "64 sessions should touch all 3 nodes");
+    }
+
+    #[test]
+    fn draining_node_hands_off_on_touch_same_track() {
+        let mut p = plan3();
+        let (home, _) = p.route(7, 0).unwrap();
+        p.mark_failing(&home, 100);
+        let (node, mv) = p.route(7, 101).unwrap();
+        assert_ne!(node, home);
+        let mv = mv.expect("a drain move");
+        assert_eq!(mv.from, home);
+        assert_eq!(mv.to, node);
+        assert_eq!(p.track_of(&node), Some("prod"));
+        // moved once — the new pin is sticky
+        assert!(p.route(7, 102).unwrap().1.is_none());
+    }
+
+    #[test]
+    fn tick_migrates_leftovers_after_grace_then_downs_the_node() {
+        let mut p = plan3();
+        for s in 0..32u64 {
+            p.route(s, 0).unwrap();
+        }
+        let victim = p.pin_of(3).unwrap().to_string();
+        let before = p.pinned_to(&victim).len();
+        assert!(before > 0);
+        p.mark_failing(&victim, 100);
+        assert!(p.tick(100).is_empty(), "inside the grace, nothing moves");
+        let moves = p.tick(100 + p.options().drain_grace_ms);
+        assert_eq!(moves.len(), before);
+        assert_eq!(p.health(&victim), Some(NodeHealth::Down));
+        assert!(p.pinned_to(&victim).is_empty());
+    }
+
+    #[test]
+    fn drain_outcome_is_tick_cadence_invariant() {
+        // same scenario, three cadences: route-touch drains vs tick
+        // drains must land every session on the same final node
+        let run = |tick_every: u64| {
+            let mut p = plan3();
+            for s in 0..24u64 {
+                p.route(s, 0).unwrap();
+            }
+            let victim = p.pin_of(5).unwrap().to_string();
+            p.mark_failing(&victim, 10);
+            for now in 11..1200 {
+                if tick_every > 0 && now % tick_every == 0 {
+                    p.tick(now);
+                }
+                if now % 7 == 0 {
+                    let _ = p.route(now % 24, now);
+                }
+            }
+            p.tick(1_200);
+            p.digest()
+        };
+        let d1 = run(1);
+        let d50 = run(50);
+        let d_never = run(0);
+        assert_eq!(d1, d50);
+        assert_eq!(d1, d_never);
+    }
+
+    #[test]
+    fn partition_isolates_never_repins() {
+        let mut p = plan3();
+        let (home, _) = p.route(9, 0).unwrap();
+        // cut `home` off alone: it becomes the minority component
+        let others: Vec<String> = p
+            .node_names()
+            .into_iter()
+            .filter(|n| *n != home)
+            .collect();
+        p.partition(&[others.clone(), vec![home.clone()]]);
+        let err = p.route(9, 10).unwrap_err();
+        assert_eq!(
+            err,
+            RouteError::Isolated {
+                session: 9,
+                node: home.clone()
+            }
+        );
+        // new sessions keep landing on the majority side
+        for s in 100..110u64 {
+            let (n, _) = p.route(s, 10).unwrap();
+            assert!(others.contains(&n));
+        }
+        // heal: the pin is exactly where it was
+        p.heal();
+        assert_eq!(p.route(9, 20).unwrap(), (home, None));
+    }
+
+    #[test]
+    fn no_same_track_sibling_is_a_typed_loss() {
+        let mut p = RoutePlan::new(ClusterOptions::default());
+        p.add_node("a", "prod");
+        p.add_node("x", "canary");
+        let mut on_a = None;
+        for s in 0..64u64 {
+            let (n, _) = p.route(s, 0).unwrap();
+            if n == "a" {
+                on_a = Some(s);
+                break;
+            }
+        }
+        let s = on_a.expect("some session lands on a");
+        p.mark_failing("a", 0);
+        // the only other node is a different track: handing the session
+        // to it would put it under foreign key material
+        assert_eq!(
+            p.route(s, 1).unwrap_err(),
+            RouteError::NoSibling {
+                session: s,
+                track: "prod".into()
+            }
+        );
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_state_sensitive() {
+        let mut a = plan3();
+        let mut b = plan3();
+        for s in 0..16u64 {
+            a.route(s, 0).unwrap();
+            b.route(s, 0).unwrap();
+        }
+        assert_eq!(a.digest(), b.digest());
+        a.mark_failing("b", 5);
+        assert_ne!(a.digest(), b.digest());
+    }
+}

@@ -40,6 +40,7 @@
 pub mod admission;
 pub mod api;
 pub mod batcher;
+pub mod cluster;
 pub mod epc_sched;
 pub mod fabric;
 pub mod net;
@@ -49,12 +50,17 @@ pub mod scheduler;
 pub mod server;
 pub mod session;
 pub mod telemetry;
+pub mod track;
 
 pub use admission::{
     AdmissionDenial, AdmissionLimits, InflightPermit, ShedPolicy, TenantAdmission, TokenBucket,
 };
 pub use api::{InferRequest, InferResponse};
 pub use batcher::DynamicBatcher;
+pub use cluster::{
+    ClusterOptions, ClusterRouter, NodeHealth, RouteError, RoutePlan, SessionMove,
+    DEFAULT_DRAIN_GRACE_MS,
+};
 pub use epc_sched::{
     EpcAccount, EpcLedger, EpcOptions, EpcPacker, ReclaimCandidate, ScaleDenied,
 };
@@ -64,12 +70,17 @@ pub use fabric::{
 pub use net::{Deny, DenyCode, NetClient, NetError, NetOptions, NetServer, WireInference};
 pub use pool::{PoolMetrics, PoolOptions, WorkerPool};
 pub use router::{
-    AdmissionError, AutoscalePolicy, Deployment, DeploymentMetrics, EngineHandle, Router,
-    ScaleMode, ScaleSignals, DEFAULT_SESSION_SHARDS, DEFAULT_SESSION_TTL_MS,
+    AdmissionError, AutoscalePolicy, DeploySpec, Deployment, DeploymentBuilder,
+    DeploymentMetrics, EngineHandle, Frontend, Router, ScaleMode, ScaleSignals,
+    DEFAULT_SESSION_SHARDS, DEFAULT_SESSION_SWEEP_MS, DEFAULT_SESSION_TTL_MS,
 };
 pub use server::ServingEngine;
 pub use session::{
-    Binding, SessionError, SessionGrant, SessionTable, SESSION_TTL_FOREVER,
+    Binding, SessionError, SessionGrant, SessionSnapshot, SessionTable, SESSION_TTL_FOREVER,
+};
+pub use track::{
+    TrackError, TrackKeys, TrackMembership, TrackOptions, TrackRegistry,
+    TRACK_DOMAIN_STRIDE,
 };
 pub use telemetry::{
     AdmissionCounters, AdmissionSnapshot, HistogramSnapshot, LatencyHistogram, ScaleCounters,

@@ -52,8 +52,9 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::router::{AdmissionError, Deployment};
+use super::router::{AdmissionError, Frontend};
 use super::session::{control_mac, SessionError, CONTROL_REFRESH, CONTROL_REVOKE};
+use super::track::TrackRegistry;
 use crate::crypto;
 use crate::enclave::attestation::{self, Report};
 use crate::util::sync::lock_recover;
@@ -304,8 +305,24 @@ pub struct NetServer {
 }
 
 impl NetServer {
-    /// Bind and start serving `deployment` on `opts.listen`.
-    pub fn start(deployment: Arc<Deployment>, opts: NetOptions) -> Result<Self> {
+    /// Bind and start serving `deployment` on `opts.listen`.  The
+    /// frontend may be a local [`Deployment`](super::router::Deployment)
+    /// or the multi-node [`ClusterRouter`](super::cluster::ClusterRouter)
+    /// — the wire cannot tell the difference (an `Arc<Deployment>`
+    /// coerces here unchanged).
+    pub fn start(deployment: Arc<dyn Frontend>, opts: NetOptions) -> Result<Self> {
+        Self::start_with_tracks(deployment, opts, None)
+    }
+
+    /// [`NetServer::start`], plus a track registry: the front door then
+    /// also answers [`MSG_TRACK_JOIN`](super::track::MSG_TRACK_JOIN)
+    /// frames, handing the track keys to attested joiners
+    /// (`--track-peers` points a joining node at a member's front door).
+    pub fn start_with_tracks(
+        deployment: Arc<dyn Frontend>,
+        opts: NetOptions,
+        tracks: Option<Arc<TrackRegistry>>,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(&opts.listen)?;
         let local_addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -325,10 +342,17 @@ impl NetServer {
                         let dep = deployment.clone();
                         let stop_c = stop.clone();
                         let opts_c = opts.clone();
+                        let tracks_c = tracks.clone();
                         let handle = std::thread::Builder::new()
                             .name("origami-net-conn".into())
                             .spawn(move || {
-                                let _ = serve_connection(stream, &dep, &opts_c, &stop_c);
+                                let _ = serve_connection(
+                                    stream,
+                                    &dep,
+                                    &opts_c,
+                                    tracks_c.as_deref(),
+                                    &stop_c,
+                                );
                             })
                             .expect("spawn connection thread");
                         let mut held = lock_recover(&conns);
@@ -391,8 +415,9 @@ impl Drop for NetServer {
 /// which is what lets a client resume after a refresh or reconnect.
 fn serve_connection(
     mut stream: TcpStream,
-    dep: &Deployment,
+    dep: &dyn Frontend,
     opts: &NetOptions,
+    tracks: Option<&TrackRegistry>,
     stop: &AtomicBool,
 ) -> io::Result<()> {
     stream.set_nodelay(true).ok();
@@ -422,7 +447,7 @@ fn serve_connection(
                         let mut p = Vec::with_capacity(24);
                         p.extend_from_slice(&grant.session.to_le_bytes());
                         p.extend_from_slice(&grant.epoch.to_le_bytes());
-                        p.extend_from_slice(&dep.sessions().ttl_ms().to_le_bytes());
+                        p.extend_from_slice(&dep.session_ttl_ms().to_le_bytes());
                         write_frame(&mut stream, MSG_REFRESHED, &p)
                     }
                     Err(e) => {
@@ -440,6 +465,23 @@ fn serve_connection(
                     }
                 }
             }
+            super::track::MSG_TRACK_JOIN => match tracks {
+                Some(reg) => {
+                    // the track handler consumes the framed request
+                    // verbatim (it is shared with the in-memory
+                    // simulator) — rebuild the frame it was read from
+                    let mut frame = Vec::with_capacity(payload.len() + 5);
+                    write_frame(&mut frame, ty, &payload)?;
+                    let reply = reg.handle_join(&frame, super::track::wall_now_ms());
+                    stream.write_all(&reply)?;
+                    stream.flush()
+                }
+                None => write_frame(
+                    &mut stream,
+                    MSG_DENIED,
+                    &Deny::protocol("this node serves no enclave track").encode(),
+                ),
+            },
             other => write_frame(
                 &mut stream,
                 MSG_DENIED,
@@ -452,7 +494,7 @@ fn serve_connection(
 
 fn handle_hello(
     stream: &mut TcpStream,
-    dep: &Deployment,
+    dep: &dyn Frontend,
     opts: &NetOptions,
     challenge: u64,
     model: &str,
@@ -483,7 +525,7 @@ fn handle_hello(
     // later gates REFRESH/REVOKE frames for this session.
     let sk = attestation::session_key(&opts.platform_key, &report);
     let grant = dep.establish_session(model, control_key(&sk));
-    let ttl_ms = dep.sessions().ttl_ms();
+    let ttl_ms = dep.session_ttl_ms();
     let grant_tag = grant_mac(&sk, grant.session, grant.epoch, ttl_ms);
     let mut p = Vec::with_capacity(32 + 8 + 8 + 8 + 32 + 8 + 4 + 8 + 32);
     p.extend_from_slice(&report.measurement);
@@ -500,7 +542,7 @@ fn handle_hello(
 
 fn handle_infer(
     stream: &mut TcpStream,
-    dep: &Deployment,
+    dep: &dyn Frontend,
     session: u64,
     epoch: u32,
     ciphertext: Vec<u8>,
@@ -524,7 +566,7 @@ fn handle_infer(
         };
         return write_frame(stream, MSG_DENIED, &deny.encode());
     }
-    let Some(model) = dep.sessions().bound_model(session, dep.now_ms()) else {
+    let Some(model) = dep.bound_model(session) else {
         let deny = Deny::of_session(&SessionError::Unknown { session });
         return write_frame(stream, MSG_DENIED, &deny.encode());
     };
@@ -798,11 +840,11 @@ impl NetClient {
 // Framing
 // ---------------------------------------------------------------------
 
-fn protocol_err(msg: &str) -> io::Error {
+pub(crate) fn protocol_err(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
 }
 
-fn write_frame(w: &mut impl Write, ty: u8, payload: &[u8]) -> io::Result<()> {
+pub(crate) fn write_frame(w: &mut impl Write, ty: u8, payload: &[u8]) -> io::Result<()> {
     let len = payload.len() + 1;
     if len > MAX_FRAME_BYTES {
         return Err(protocol_err("frame too large"));
@@ -816,7 +858,7 @@ fn write_frame(w: &mut impl Write, ty: u8, payload: &[u8]) -> io::Result<()> {
 }
 
 /// Blocking frame read (client side).
-fn read_frame(r: &mut impl Read) -> io::Result<(u8, Vec<u8>)> {
+pub(crate) fn read_frame(r: &mut impl Read) -> io::Result<(u8, Vec<u8>)> {
     let mut head = [0u8; 5];
     r.read_exact(&mut head)?;
     decode_head(&head).and_then(|(ty, len)| {
@@ -923,17 +965,17 @@ fn read_exact_stoppable(
 // Payload cursor
 // ---------------------------------------------------------------------
 
-struct Cursor<'a> {
+pub(crate) struct Cursor<'a> {
     buf: &'a [u8],
     off: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Self { buf, off: 0 }
     }
 
-    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
         if self.off + n > self.buf.len() {
             return Err(protocol_err("truncated payload"));
         }
@@ -942,43 +984,43 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> io::Result<u8> {
+    pub(crate) fn u8(&mut self) -> io::Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> io::Result<u32> {
+    pub(crate) fn u32(&mut self) -> io::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> io::Result<u64> {
+    pub(crate) fn u64(&mut self) -> io::Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> io::Result<f32> {
+    pub(crate) fn f32(&mut self) -> io::Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> io::Result<f64> {
+    pub(crate) fn f64(&mut self) -> io::Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn arr32(&mut self) -> io::Result<[u8; 32]> {
+    pub(crate) fn arr32(&mut self) -> io::Result<[u8; 32]> {
         Ok(self.take(32)?.try_into().unwrap())
     }
 
-    fn str(&mut self) -> io::Result<String> {
+    pub(crate) fn str(&mut self) -> io::Result<String> {
         let len = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
         String::from_utf8(self.take(len)?.to_vec())
             .map_err(|_| protocol_err("invalid utf-8 string"))
     }
 
-    fn bytes_u32(&mut self) -> io::Result<Vec<u8>> {
+    pub(crate) fn bytes_u32(&mut self) -> io::Result<Vec<u8>> {
         let len = self.u32()? as usize;
         Ok(self.take(len)?.to_vec())
     }
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
     let bytes = s.as_bytes();
     out.extend_from_slice(&(bytes.len().min(u16::MAX as usize) as u16).to_le_bytes());
     out.extend_from_slice(&bytes[..bytes.len().min(u16::MAX as usize)]);

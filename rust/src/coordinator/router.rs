@@ -528,6 +528,10 @@ struct DeploymentCore {
     /// Monotone tenant-band allocator (blinding keyspace): never reused,
     /// so concurrent deploys cannot end up sharing a band.
     next_band: AtomicU64,
+    /// Deployment-wide default admission limits (from
+    /// [`DeploymentBuilder::admission`]); a [`DeploySpec`] without its
+    /// own limits inherits these.
+    default_admission: AdmissionLimits,
     /// Clock epoch the admission token buckets run on (wall time as
     /// milliseconds since deployment start; the simulator drives the
     /// same bucket code from its own clock instead).
@@ -550,7 +554,7 @@ impl DeploymentCore {
     /// through that would stall every submit.
     ///
     /// Under EPC-aware co-scheduling (a deployment built with
-    /// [`Deployment::new_with_epc`]), every grow is checked against the
+    /// [`DeploymentBuilder::epc`]), every grow is checked against the
     /// [`EpcLedger`] first: a grow the free budget cannot fund asks the
     /// [`EpcPacker`] to reclaim idle workers parked above other tenants'
     /// floors (most over-provisioned per fabric share first); if no
@@ -833,6 +837,10 @@ pub struct DeploymentMetrics {
 pub struct Deployment {
     core: Arc<DeploymentCore>,
     pump: Option<JoinHandle<()>>,
+    /// Background session sweeper: retires expired sessions on its own
+    /// cadence, independent of the autoscaler pump (sessions must be
+    /// reaped even with autoscaling off).
+    sweeper: Option<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
 }
 
@@ -860,8 +868,196 @@ pub const DEFAULT_SESSION_TTL_MS: u64 = 600_000;
 /// state past this bound even inside one TTL window.
 pub const DEFAULT_SESSION_CAP: usize = 1 << 20;
 
+/// Default session-sweep cadence (ms).  The sweeper is its own thread,
+/// deliberately decoupled from the autoscaler tick: expired sessions
+/// must be reaped even when autoscaling is off.
+pub const DEFAULT_SESSION_SWEEP_MS: u64 = 1_000;
+
 fn clamp_hint_ms(ms: f64) -> u64 {
     ms.clamp(0.0, MAX_RETRY_HINT_MS).ceil() as u64
+}
+
+/// Builder for [`Deployment`] — the one construction path (the
+/// `new`/`new_with_epc`/`new_with_sessions` trio it replaces survives
+/// as deprecated shims).
+///
+/// ```ignore
+/// let dep = Deployment::builder(fabric_opts)
+///     .policy(autoscale_policy)
+///     .epc(epc_options)          // Option or value
+///     .sessions(SessionTable::with_capacity(64, 600_000, 1 << 20))
+///     .admission(default_limits) // deployment-wide default
+///     .build();
+/// ```
+pub struct DeploymentBuilder {
+    fabric: FabricOptions,
+    policy: AutoscalePolicy,
+    epc: Option<EpcOptions>,
+    sessions: Option<SessionTable>,
+    admission: AdmissionLimits,
+    sweep_ms: u64,
+}
+
+impl DeploymentBuilder {
+    /// Autoscale policy (default: [`AutoscalePolicy::default`]).
+    pub fn policy(mut self, policy: AutoscalePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// EPC-aware co-scheduling: the usable enclave budget (and
+    /// overcommit factor) a global [`EpcLedger`] enforces across every
+    /// pool whose [`PoolOptions::worker_epc_bytes`] is set.  Deploys
+    /// that cannot fit their initial fleet fail up front; autoscaler
+    /// grows charge transactionally, reclaim idle workers from
+    /// over-provisioned tenants when the budget is short, and are
+    /// denied (typed, telemetry-recorded) rather than overcommitting.
+    pub fn epc(mut self, epc: impl Into<Option<EpcOptions>>) -> Self {
+        self.epc = epc.into();
+        self
+    }
+
+    /// Explicitly configured session table (shard count, TTL, optional
+    /// LRU capacity) — the network front door sizes this from
+    /// `--session-shards` / `--session-ttl` / `--session-cap`.
+    pub fn sessions(mut self, sessions: SessionTable) -> Self {
+        self.sessions = Some(sessions);
+        self
+    }
+
+    /// Deployment-wide default admission limits: every
+    /// [`DeploySpec`] that does not carry its own limits inherits
+    /// these (default: unlimited).
+    pub fn admission(mut self, limits: AdmissionLimits) -> Self {
+        self.admission = limits;
+        self
+    }
+
+    /// Session-sweep cadence in milliseconds
+    /// ([`DEFAULT_SESSION_SWEEP_MS`] by default; `0` disables the
+    /// sweeper thread — trusted in-process deployments that drive
+    /// [`Deployment::autoscale_tick`] themselves).
+    pub fn sweep_every_ms(mut self, sweep_ms: u64) -> Self {
+        self.sweep_ms = sweep_ms;
+        self
+    }
+
+    pub fn build(self) -> Deployment {
+        let keep = (TELEMETRY_WINDOW_MS / self.policy.tick_ms.max(1)).clamp(5, 200) as usize;
+        let telemetry = Arc::new(TelemetryHub::new(keep));
+        let sessions = self.sessions.unwrap_or_else(|| {
+            SessionTable::new(DEFAULT_SESSION_SHARDS, DEFAULT_SESSION_TTL_MS)
+        });
+        let core = Arc::new(DeploymentCore {
+            fabric: LaneFabric::start_with_telemetry(self.fabric, Some(telemetry.clone())),
+            models: Mutex::new(HashMap::new()),
+            deploying: Mutex::new(HashSet::new()),
+            sessions,
+            policy: self.policy,
+            epc: self.epc.map(|o| Arc::new(EpcLedger::new(o))),
+            telemetry,
+            scale_state: Mutex::new(AutoscaleState::default()),
+            next_band: AtomicU64::new(0),
+            default_admission: self.admission,
+            epoch: Instant::now(),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        // The TTL sweeper runs on its own cadence — NOT the autoscaler
+        // tick — so expired sessions are reaped even with autoscaling
+        // off.  It sleeps in short quanta so shutdown never waits out a
+        // full sweep interval.
+        let sweeper = (self.sweep_ms > 0).then(|| {
+            let core = core.clone();
+            let stop = stop.clone();
+            let sweep_ms = self.sweep_ms;
+            std::thread::Builder::new()
+                .name("origami-session-sweep".into())
+                .spawn(move || {
+                    let quantum = Duration::from_millis(sweep_ms.clamp(1, 20));
+                    let mut since_sweep = Duration::ZERO;
+                    while !stop.load(Ordering::SeqCst) {
+                        std::thread::sleep(quantum);
+                        since_sweep += quantum;
+                        if since_sweep.as_millis() as u64 >= sweep_ms {
+                            core.sessions.sweep(core.now_ms());
+                            since_sweep = Duration::ZERO;
+                        }
+                    }
+                })
+                .expect("spawn session sweeper")
+        });
+        Deployment {
+            core,
+            pump: None,
+            sweeper,
+            stop,
+        }
+    }
+}
+
+/// Everything one model's registration needs, gathered into a spec so
+/// [`Deployment::deploy_model`] takes one argument instead of nine
+/// (replaces the `deploy`/`deploy_with_admission` positional pair).
+#[derive(Debug, Clone)]
+pub struct DeploySpec {
+    model: String,
+    sample_bytes: usize,
+    weight: f64,
+    slo_ms: Option<f64>,
+    limits: Option<AdmissionLimits>,
+    shed_policy: ShedPolicy,
+    pool: PoolOptions,
+}
+
+impl DeploySpec {
+    /// A spec for `model` whose requests carry ciphertexts of exactly
+    /// `sample_bytes`.  Defaults: weight 1.0, no SLO, the deployment's
+    /// default admission limits, [`ShedPolicy::Reject`], default pool.
+    pub fn new(model: &str, sample_bytes: usize) -> Self {
+        Self {
+            model: model.to_string(),
+            sample_bytes,
+            weight: 1.0,
+            slo_ms: None,
+            limits: None,
+            shed_policy: ShedPolicy::Reject,
+            pool: PoolOptions::default(),
+        }
+    }
+
+    /// Weighted-fair share of the shared fabric lanes (default 1.0).
+    pub fn weight(mut self, weight: f64) -> Self {
+        self.weight = weight;
+        self
+    }
+
+    /// End-to-end latency objective: the SLO autoscaler holds the
+    /// windowed p95 under it (None = depth-scaled only).
+    pub fn slo_ms(mut self, slo_ms: impl Into<Option<f64>>) -> Self {
+        self.slo_ms = slo_ms.into();
+        self
+    }
+
+    /// Per-tenant admission limits (token-bucket rate, in-flight quota,
+    /// shed threshold); unset inherits the deployment-wide default from
+    /// [`DeploymentBuilder::admission`].
+    pub fn admission(mut self, limits: AdmissionLimits) -> Self {
+        self.limits = Some(limits);
+        self
+    }
+
+    /// What happens to shed requests: rejection, or degradation to a
+    /// cheaper tier registered with [`Deployment::set_degrade`].
+    pub fn shed_policy(mut self, policy: ShedPolicy) -> Self {
+        self.shed_policy = policy;
+        self
+    }
+
+    /// Tier-1 pool geometry (workers, batching, EPC footprint, …).
+    pub fn pool(mut self, pool: PoolOptions) -> Self {
+        self.pool = pool;
+        self
+    }
 }
 
 /// Expected time for an in-flight slot to free: the tenant's windowed
@@ -877,60 +1073,55 @@ fn queue_hint_ms(t: &TenantTelemetry) -> u64 {
 }
 
 impl Deployment {
-    /// Create a deployment around a fresh lane fabric.
-    pub fn new(fabric_opts: FabricOptions, policy: AutoscalePolicy) -> Self {
-        Self::new_with_epc(fabric_opts, policy, None)
+    /// Start building a deployment around a fresh lane fabric — the one
+    /// construction path (see [`DeploymentBuilder`]).
+    pub fn builder(fabric_opts: FabricOptions) -> DeploymentBuilder {
+        DeploymentBuilder {
+            fabric: fabric_opts,
+            policy: AutoscalePolicy::default(),
+            epc: None,
+            sessions: None,
+            admission: AdmissionLimits::default(),
+            sweep_ms: DEFAULT_SESSION_SWEEP_MS,
+        }
     }
 
-    /// [`Deployment::new`], plus EPC-aware co-scheduling: `epc` gives
-    /// the usable enclave budget (and overcommit factor) a global
-    /// [`EpcLedger`] enforces across every pool whose
-    /// [`PoolOptions::worker_epc_bytes`] is set.  Deploys that cannot
-    /// fit their initial fleet fail up front; autoscaler grows charge
-    /// transactionally, reclaim idle workers from over-provisioned
-    /// tenants when the budget is short, and are denied (typed,
-    /// telemetry-recorded) rather than overcommitting.
+    /// Create a deployment around a fresh lane fabric.
+    #[deprecated(since = "0.9.0", note = "use `Deployment::builder(fabric).policy(p).build()`")]
+    pub fn new(fabric_opts: FabricOptions, policy: AutoscalePolicy) -> Self {
+        Self::builder(fabric_opts).policy(policy).build()
+    }
+
+    /// [`Deployment::new`], plus EPC-aware co-scheduling.
+    #[deprecated(
+        since = "0.9.0",
+        note = "use `Deployment::builder(fabric).policy(p).epc(epc).build()`"
+    )]
     pub fn new_with_epc(
         fabric_opts: FabricOptions,
         policy: AutoscalePolicy,
         epc: Option<EpcOptions>,
     ) -> Self {
-        Self::new_with_sessions(
-            fabric_opts,
-            policy,
-            epc,
-            SessionTable::new(DEFAULT_SESSION_SHARDS, DEFAULT_SESSION_TTL_MS),
-        )
+        Self::builder(fabric_opts).policy(policy).epc(epc).build()
     }
 
     /// [`Deployment::new_with_epc`], plus an explicitly configured
-    /// session table (shard count, TTL, optional LRU capacity) — the
-    /// network front door sizes this from `--session-shards` /
-    /// `--session-ttl`.
+    /// session table.
+    #[deprecated(
+        since = "0.9.0",
+        note = "use `Deployment::builder(fabric).policy(p).epc(epc).sessions(t).build()`"
+    )]
     pub fn new_with_sessions(
         fabric_opts: FabricOptions,
         policy: AutoscalePolicy,
         epc: Option<EpcOptions>,
         sessions: SessionTable,
     ) -> Self {
-        let keep = (TELEMETRY_WINDOW_MS / policy.tick_ms.max(1)).clamp(5, 200) as usize;
-        let telemetry = Arc::new(TelemetryHub::new(keep));
-        Self {
-            core: Arc::new(DeploymentCore {
-                fabric: LaneFabric::start_with_telemetry(fabric_opts, Some(telemetry.clone())),
-                models: Mutex::new(HashMap::new()),
-                deploying: Mutex::new(HashSet::new()),
-                sessions,
-                policy,
-                epc: epc.map(|o| Arc::new(EpcLedger::new(o))),
-                telemetry,
-                scale_state: Mutex::new(AutoscaleState::default()),
-                next_band: AtomicU64::new(0),
-                epoch: Instant::now(),
-            }),
-            pump: None,
-            stop: Arc::new(AtomicBool::new(false)),
-        }
+        Self::builder(fabric_opts)
+            .policy(policy)
+            .epc(epc)
+            .sessions(sessions)
+            .build()
     }
 
     /// The deployment's EPC residency ledger, when EPC-aware
@@ -939,12 +1130,12 @@ impl Deployment {
         self.core.epc.clone()
     }
 
-    /// Register `model`: attach it to the fabric as a tenant with
-    /// `weight` (weighted-fair share of lane capacity) and start its
-    /// tier-1 pool attached to the fabric.  Requests must carry
-    /// ciphertexts of exactly `sample_bytes`.  `slo_ms` is the model's
-    /// end-to-end latency objective: the SLO autoscaler holds the
-    /// windowed p95 under it (None = depth-scaled only).
+    /// Register the model a [`DeploySpec`] describes: attach it to the
+    /// fabric as a tenant with the spec's weighted-fair share and start
+    /// its tier-1 pool attached to the fabric.  Requests must carry
+    /// ciphertexts of exactly the spec's `sample_bytes`; a spec without
+    /// its own admission limits inherits the deployment-wide default
+    /// from [`DeploymentBuilder::admission`].
     ///
     /// `sched_factory(band, domain)` builds one worker's scheduler:
     /// `band` is the tenant index this deployment assigns from a
@@ -952,13 +1143,9 @@ impl Deployment {
     /// and `domain` is the pool-unique worker-incarnation index.
     /// Together they must select a globally disjoint blinding keyspace
     /// (the launcher uses `band · BLIND_DOMAIN_STRIDE + domain`).
-    pub fn deploy<S, F>(
+    pub fn deploy_model<S, F>(
         &self,
-        model: &str,
-        sample_bytes: usize,
-        weight: f64,
-        slo_ms: Option<f64>,
-        pool_opts: PoolOptions,
+        spec: DeploySpec,
         sched_factory: S,
         finisher_factory: F,
     ) -> Result<()>
@@ -966,41 +1153,17 @@ impl Deployment {
         S: Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static,
         F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
     {
-        self.deploy_with_admission(
+        let DeploySpec {
             model,
             sample_bytes,
             weight,
             slo_ms,
-            AdmissionLimits::default(),
-            ShedPolicy::Reject,
-            pool_opts,
-            sched_factory,
-            finisher_factory,
-        )
-    }
-
-    /// [`Deployment::deploy`], plus per-tenant admission control: a
-    /// token-bucket rate limit, an in-flight quota and a queue-depth
-    /// shed threshold (see [`AdmissionLimits`]; zeros disable).
-    /// `shed_policy` picks what happens to shed requests — rejection, or
-    /// degradation to a cheaper tier registered with
-    /// [`Deployment::set_degrade`].
-    pub fn deploy_with_admission<S, F>(
-        &self,
-        model: &str,
-        sample_bytes: usize,
-        weight: f64,
-        slo_ms: Option<f64>,
-        limits: AdmissionLimits,
-        shed_policy: ShedPolicy,
-        pool_opts: PoolOptions,
-        sched_factory: S,
-        finisher_factory: F,
-    ) -> Result<()>
-    where
-        S: Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static,
-        F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
-    {
+            limits,
+            shed_policy,
+            pool: pool_opts,
+        } = spec;
+        let model = model.as_str();
+        let limits = limits.unwrap_or(self.core.default_admission);
         // Exclusive per-name deploy claim: a concurrent duplicate deploy
         // is refused here, BEFORE the EPC ledger is touched — the
         // register/charge pair below must never interleave with another
@@ -1088,6 +1251,72 @@ impl Deployment {
             },
         );
         Ok(())
+    }
+
+    /// Register `model` (see [`Deployment::deploy_model`]).
+    #[deprecated(
+        since = "0.9.0",
+        note = "use `deploy_model(DeploySpec::new(model, bytes).weight(w).slo_ms(slo).pool(p), …)`"
+    )]
+    #[allow(clippy::too_many_arguments)]
+    pub fn deploy<S, F>(
+        &self,
+        model: &str,
+        sample_bytes: usize,
+        weight: f64,
+        slo_ms: Option<f64>,
+        pool_opts: PoolOptions,
+        sched_factory: S,
+        finisher_factory: F,
+    ) -> Result<()>
+    where
+        S: Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static,
+        F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
+    {
+        self.deploy_model(
+            DeploySpec::new(model, sample_bytes)
+                .weight(weight)
+                .slo_ms(slo_ms)
+                .admission(AdmissionLimits::default())
+                .pool(pool_opts),
+            sched_factory,
+            finisher_factory,
+        )
+    }
+
+    /// Register `model` with explicit admission limits (see
+    /// [`Deployment::deploy_model`]).
+    #[deprecated(
+        since = "0.9.0",
+        note = "use `deploy_model(DeploySpec::new(model, bytes).admission(l).shed_policy(s)…, …)`"
+    )]
+    #[allow(clippy::too_many_arguments)]
+    pub fn deploy_with_admission<S, F>(
+        &self,
+        model: &str,
+        sample_bytes: usize,
+        weight: f64,
+        slo_ms: Option<f64>,
+        limits: AdmissionLimits,
+        shed_policy: ShedPolicy,
+        pool_opts: PoolOptions,
+        sched_factory: S,
+        finisher_factory: F,
+    ) -> Result<()>
+    where
+        S: Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static,
+        F: Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static,
+    {
+        self.deploy_model(
+            DeploySpec::new(model, sample_bytes)
+                .weight(weight)
+                .slo_ms(slo_ms)
+                .admission(limits)
+                .shed_policy(shed_policy)
+                .pool(pool_opts),
+            sched_factory,
+            finisher_factory,
+        )
     }
 
     /// Register `target` as `model`'s degraded tier: under
@@ -1501,6 +1730,10 @@ impl Deployment {
         if let Some(p) = self.pump.take() {
             let _ = p.join();
         }
+        // the sweeper holds a core clone: join it before try_unwrap
+        if let Some(s) = self.sweeper.take() {
+            let _ = s.join();
+        }
         let core = self.core.clone();
         drop(self); // releases the struct's Arc (pump already stopped)
         match Arc::try_unwrap(core) {
@@ -1536,6 +1769,139 @@ impl Drop for Deployment {
         if let Some(p) = self.pump.take() {
             let _ = p.join();
         }
+        if let Some(s) = self.sweeper.take() {
+            let _ = s.join();
+        }
+    }
+}
+
+/// The client-facing submission surface, abstracted over *where* the
+/// serving happens: a local [`Deployment`] and the multi-node
+/// [`ClusterRouter`](super::cluster::ClusterRouter) both implement it,
+/// and the wire front door ([`NetServer`](super::net::NetServer)) and
+/// the simulator talk to the trait — single-node and clustered serving
+/// are interchangeable behind one interface.
+///
+/// Object-safe on purpose: servers hold an `Arc<dyn Frontend>`.
+pub trait Frontend: Send + Sync {
+    /// Admission-checked submit; typed rejections, never a hang (see
+    /// [`Deployment::submit`]).
+    fn submit(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> std::result::Result<Channel<InferResponse>, AdmissionError>;
+
+    /// Blocking convenience around [`Frontend::submit`].
+    fn infer_blocking(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<InferResponse>;
+
+    /// Is `model` served here?  The front door checks this before
+    /// minting attestation evidence or session state for a HELLO.
+    fn has_model(&self, model: &str) -> bool;
+
+    /// Every model served, sorted.
+    fn models(&self) -> Vec<String>;
+
+    /// Milliseconds on the serving clock (the session tables' and
+    /// admission buckets' shared time base).
+    fn now_ms(&self) -> u64;
+
+    /// The session TTL granted at establish/refresh time.
+    fn session_ttl_ms(&self) -> u64;
+
+    /// Issue a fresh attested session bound to `model`, holding `auth`
+    /// as its control-frame MAC key.
+    fn establish_session(&self, model: &str, auth: [u8; 32]) -> SessionGrant;
+
+    /// MAC-gated epoch bump + TTL extension (the only refresh path the
+    /// wire exposes).
+    fn refresh_session_authed(
+        &self,
+        session: u64,
+        tag: &[u8; 32],
+    ) -> std::result::Result<SessionGrant, SessionError>;
+
+    /// MAC-gated session drop (the only revoke path the wire exposes).
+    fn revoke_session_authed(
+        &self,
+        session: u64,
+        tag: &[u8; 32],
+    ) -> std::result::Result<bool, SessionError>;
+
+    /// The session's live keystream epoch, or why it cannot serve.
+    fn session_epoch(&self, session: u64) -> std::result::Result<u32, SessionError>;
+
+    /// The model a live session is bound to, if any.
+    fn bound_model(&self, session: u64) -> Option<String>;
+}
+
+impl Frontend for Deployment {
+    fn submit(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> std::result::Result<Channel<InferResponse>, AdmissionError> {
+        Deployment::submit(self, model, ciphertext, session)
+    }
+
+    fn infer_blocking(
+        &self,
+        model: &str,
+        ciphertext: Vec<u8>,
+        session: u64,
+    ) -> Result<InferResponse> {
+        Deployment::infer_blocking(self, model, ciphertext, session)
+    }
+
+    fn has_model(&self, model: &str) -> bool {
+        Deployment::has_model(self, model)
+    }
+
+    fn models(&self) -> Vec<String> {
+        Deployment::models(self)
+    }
+
+    fn now_ms(&self) -> u64 {
+        Deployment::now_ms(self)
+    }
+
+    fn session_ttl_ms(&self) -> u64 {
+        self.core.sessions.ttl_ms()
+    }
+
+    fn establish_session(&self, model: &str, auth: [u8; 32]) -> SessionGrant {
+        Deployment::establish_session(self, model, auth)
+    }
+
+    fn refresh_session_authed(
+        &self,
+        session: u64,
+        tag: &[u8; 32],
+    ) -> std::result::Result<SessionGrant, SessionError> {
+        Deployment::refresh_session_authed(self, session, tag)
+    }
+
+    fn revoke_session_authed(
+        &self,
+        session: u64,
+        tag: &[u8; 32],
+    ) -> std::result::Result<bool, SessionError> {
+        Deployment::revoke_session_authed(self, session, tag)
+    }
+
+    fn session_epoch(&self, session: u64) -> std::result::Result<u32, SessionError> {
+        Deployment::session_epoch(self, session)
+    }
+
+    fn bound_model(&self, session: u64) -> Option<String> {
+        self.core.sessions.bound_model(session, self.core.now_ms())
     }
 }
 
@@ -1552,7 +1918,7 @@ mod tests {
 
     #[test]
     fn empty_deployment_rejects_with_typed_error() {
-        let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
+        let dep = Deployment::builder(FabricOptions::default()).build();
         let err = dep.submit("nope", vec![], 0).unwrap_err();
         assert_eq!(
             err,
@@ -1745,7 +2111,7 @@ mod tests {
 
     #[test]
     fn set_degrade_requires_deployed_tenants() {
-        let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
+        let dep = Deployment::builder(FabricOptions::default()).build();
         assert!(dep.set_degrade("a", "a").is_err(), "self-degrade refused");
         assert!(
             dep.set_degrade("a", "b").is_err(),

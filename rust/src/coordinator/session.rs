@@ -497,6 +497,96 @@ impl SessionTable {
             .filter(|e| now_ms < e.expires_at_ms)
             .map(|e| e.model.clone())
     }
+
+    /// Export a live session for migration to a sibling node (cluster
+    /// drain).  Expiry travels as *remaining* lifetime, not an absolute
+    /// deadline — each table runs its own clock, so an absolute stamp
+    /// would silently stretch or clip the TTL across nodes.  `None` if
+    /// the session is unknown or already expired.
+    pub fn export(&self, session: u64, now_ms: u64) -> Option<SessionSnapshot> {
+        let sh = self.shard(session);
+        let e = sh.map.get(&session).filter(|e| now_ms < e.expires_at_ms)?;
+        Some(SessionSnapshot {
+            session,
+            model: e.model.clone(),
+            epoch: e.epoch,
+            remaining_ms: if e.expires_at_ms == SESSION_TTL_FOREVER {
+                SESSION_TTL_FOREVER
+            } else {
+                e.expires_at_ms - now_ms
+            },
+            attested: e.attested,
+            auth: e.auth,
+        })
+    }
+
+    /// Every live session, for whole-node drain.
+    pub fn export_all(&self, now_ms: u64) -> Vec<SessionSnapshot> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let sh = shard.lock().unwrap_or_else(|e| e.into_inner());
+            for (&session, e) in sh.map.iter() {
+                if now_ms < e.expires_at_ms {
+                    out.push(SessionSnapshot {
+                        session,
+                        model: e.model.clone(),
+                        epoch: e.epoch,
+                        remaining_ms: if e.expires_at_ms == SESSION_TTL_FOREVER {
+                            SESSION_TTL_FOREVER
+                        } else {
+                            e.expires_at_ms - now_ms
+                        },
+                        attested: e.attested,
+                        auth: e.auth,
+                    });
+                }
+            }
+        }
+        out.sort_by_key(|s| s.session);
+        out
+    }
+
+    /// Adopt a migrated session at this table's clock, preserving its
+    /// id, epoch, auth key, and remaining lifetime — the client's
+    /// keystream position survives the move because epoch and key
+    /// material are untouched (same-track siblings share the key root).
+    /// Capacity rules still apply: the insert can LRU-evict.
+    pub fn adopt(&self, snap: SessionSnapshot, now_ms: u64) {
+        let mut sh = self.shard(snap.session);
+        let expires_at_ms = if snap.remaining_ms == SESSION_TTL_FOREVER {
+            SESSION_TTL_FOREVER
+        } else {
+            now_ms.saturating_add(snap.remaining_ms)
+        };
+        self.insert(
+            &mut sh,
+            snap.session,
+            Entry {
+                model: snap.model,
+                epoch: snap.epoch,
+                expires_at_ms,
+                attested: snap.attested,
+                auth: snap.auth,
+                stamp: 0,
+            },
+        );
+    }
+}
+
+/// A live session frozen for migration between tables (cluster drain).
+/// Everything a sibling needs to keep serving the client mid-stream:
+/// the id, the bound model, the epoch (keystream position), the
+/// control-frame MAC key, and the lifetime it had left.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionSnapshot {
+    pub session: u64,
+    pub model: String,
+    pub epoch: u32,
+    /// Lifetime left at export time ([`SESSION_TTL_FOREVER`] = never
+    /// expires); the adopting table re-anchors it to its own clock.
+    pub remaining_ms: u64,
+    pub attested: bool,
+    pub auth: Option<[u8; 32]>,
 }
 
 #[cfg(test)]

@@ -1,0 +1,603 @@
+//! Enclave tracks: groups of enclaves sharing blinding/session key
+//! material, with a genesis/join key-handoff protocol.
+//!
+//! The paper's serving model assumes one enclave host; production-scale
+//! traffic needs many.  Replicas can only share a client's session
+//! keystream (and pick up each other's sessions on drain) if they hold
+//! the *same* key material — and handing that material to a replica is
+//! exactly the attestation problem the front door already solves for
+//! clients.  A **track** is the unit of key sharing:
+//!
+//! * the first enclave to claim a track name is the **genesis** member —
+//!   it generates the track's blinding-domain seed and session-key root
+//!   under the registry lock (one genesis per track, ever);
+//! * later members **join** over an attested channel: the joiner quotes
+//!   its measurement over a fresh challenge, the genesis verifies the
+//!   evidence and replies with its own quote plus the track keys sealed
+//!   under a key derived from the joiner's verified report.  A forged
+//!   join — wrong measurement, stale report, bad MAC — is denied before
+//!   any key material is sealed;
+//! * different tracks hold different keys, so compromising one track
+//!   never unblinds another's traffic (blast-radius isolation).
+//!
+//! Members carry a **monotone incarnation** per track: a crashed node
+//! that rejoins gets a strictly higher incarnation, and blinding domains
+//! fold the incarnation (`incarnation · BLIND_DOMAIN_STRIDE + worker`),
+//! so a respawn can never replay a pad stream its previous life already
+//! spent — the PR-2 single-node invariant, extended across nodes.
+//!
+//! The join exchange is expressed over the front door's framing
+//! (`u32 LE length ‖ u8 type ‖ payload`, the PR-8 machinery in
+//! [`net`](super::net)) as pure request/response byte frames, so the
+//! multi-node simulator and the tests replay the production protocol
+//! in-memory — CI never opens a socket.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::crypto;
+use crate::enclave::attestation::{self, Report};
+
+use super::net::{put_str, read_frame, write_frame, Cursor};
+
+/// Join request (joiner → genesis): track, node, challenge, joiner quote.
+pub const MSG_TRACK_JOIN: u8 = 0x11;
+/// Join grant (genesis → joiner): genesis quote, incarnation, sealed keys.
+pub const MSG_TRACK_GRANT: u8 = 0x91;
+/// Join denial (genesis → joiner): reason string; no key material.
+pub const MSG_TRACK_DENY: u8 = 0x93;
+
+/// Per-worker stride of the blinding keyspace (matches
+/// [`crate::launcher::BLIND_DOMAIN_STRIDE`]): each member incarnation
+/// owns one stride-wide band of domains.
+pub const TRACK_DOMAIN_STRIDE: u64 = 1 << 32;
+
+/// Attestation parameters a track runs under (same defaults as the
+/// front door: the handshake machinery is shared).
+#[derive(Debug, Clone)]
+pub struct TrackOptions {
+    /// The enclave measurement every member must prove.
+    pub measurement: [u8; 32],
+    /// Shared platform MAC key (the quoting-enclave key stand-in).
+    pub platform_key: Vec<u8>,
+    /// Validity window of join-handshake reports (ms).
+    pub attest_ttl_ms: u64,
+}
+
+impl Default for TrackOptions {
+    fn default() -> Self {
+        Self {
+            measurement: crypto::sha256(b"origami-enclave-v1"),
+            platform_key: b"origami-platform-key".to_vec(),
+            attest_ttl_ms: 60_000,
+        }
+    }
+}
+
+/// The key material every member of a track shares.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrackKeys {
+    /// The track name the keys were generated for.
+    pub track: String,
+    /// Seed of the track's blinding-domain keyspace: every member's
+    /// schedulers derive pads from this seed, so a session's blinded
+    /// traffic is servable by any sibling.
+    pub blind_seed: [u8; 32],
+    /// Root of the track's session-key derivation: attested session
+    /// control keys derive from it, so a sibling can authenticate
+    /// control frames for sessions it adopted on drain.
+    pub session_root: [u8; 32],
+}
+
+impl TrackKeys {
+    /// The blinding domain one worker of one member incarnation owns:
+    /// `incarnation · TRACK_DOMAIN_STRIDE + worker_domain`.  Incarnations
+    /// are monotone per track, so domains are disjoint across every
+    /// member and every respawn — pads are never reused inside a track,
+    /// and different tracks hold different `blind_seed`s entirely.
+    pub fn blind_domain(&self, incarnation: u64, worker_domain: usize) -> u64 {
+        incarnation
+            .saturating_mul(TRACK_DOMAIN_STRIDE)
+            .saturating_add(worker_domain as u64)
+    }
+}
+
+/// What a node holds after claiming or joining a track.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrackMembership {
+    pub keys: TrackKeys,
+    /// This member's monotone incarnation (0 = genesis).
+    pub incarnation: u64,
+    pub node: String,
+    /// True when this membership created the track.
+    pub genesis: bool,
+}
+
+/// Joiner-side join failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrackError {
+    /// The genesis refused the join (reason echoed from the wire).
+    Denied(String),
+    /// The frame was malformed.
+    Protocol(String),
+    /// The genesis' own evidence failed verification — the joiner will
+    /// not accept key material from an enclave it cannot identify.
+    Attestation(String),
+}
+
+impl std::fmt::Display for TrackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrackError::Denied(m) => write!(f, "join denied: {m}"),
+            TrackError::Protocol(m) => write!(f, "join protocol error: {m}"),
+            TrackError::Attestation(m) => write!(f, "join attestation rejected: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TrackError {}
+
+struct TrackState {
+    keys: TrackKeys,
+    /// Next incarnation to mint — strictly monotone, never reused, so a
+    /// respawned member can never collide with its previous life's
+    /// blinding band.
+    next_incarnation: u64,
+    /// Live members: node → incarnation (a rejoin replaces the entry
+    /// with the fresh incarnation).
+    members: HashMap<String, u64>,
+}
+
+/// The track registry one coordinator host runs: genesis claims under
+/// its lock, join requests verified and answered against its state.
+pub struct TrackRegistry {
+    opts: TrackOptions,
+    /// Master key material track keys derive from (the genesis
+    /// enclave's hardware-RNG stand-in; deterministic under test).
+    master: [u8; 32],
+    tracks: Mutex<HashMap<String, TrackState>>,
+}
+
+impl TrackRegistry {
+    pub fn new(master_seed: u64, opts: TrackOptions) -> Self {
+        let mut material = b"origami-track-master".to_vec();
+        material.extend_from_slice(&master_seed.to_le_bytes());
+        Self {
+            opts,
+            master: crypto::sha256(&material),
+            tracks: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn options(&self) -> &TrackOptions {
+        &self.opts
+    }
+
+    /// Claim `track` for `node`: the first claim generates the track's
+    /// key material under the registry lock (exactly one genesis per
+    /// track); later claims by the same host's registry are local joins
+    /// — they mint a fresh monotone incarnation without a wire
+    /// handshake, which is what a same-host respawn uses.
+    pub fn claim(&self, track: &str, node: &str) -> TrackMembership {
+        let mut g = self.tracks.lock().unwrap_or_else(|e| e.into_inner());
+        let fresh = !g.contains_key(track);
+        let st = g.entry(track.to_string()).or_insert_with(|| TrackState {
+            keys: derive_track_keys(&self.master, track),
+            next_incarnation: 0,
+            members: HashMap::new(),
+        });
+        let incarnation = st.next_incarnation;
+        st.next_incarnation += 1;
+        st.members.insert(node.to_string(), incarnation);
+        TrackMembership {
+            keys: st.keys.clone(),
+            incarnation,
+            node: node.to_string(),
+            genesis: fresh,
+        }
+    }
+
+    /// Live member count of `track` (0 if the track does not exist).
+    pub fn member_count(&self, track: &str) -> usize {
+        let g = self.tracks.lock().unwrap_or_else(|e| e.into_inner());
+        g.get(track).map(|s| s.members.len()).unwrap_or(0)
+    }
+
+    /// A member's live incarnation, if it is in the track.
+    pub fn incarnation_of(&self, track: &str, node: &str) -> Option<u64> {
+        let g = self.tracks.lock().unwrap_or_else(|e| e.into_inner());
+        g.get(track).and_then(|s| s.members.get(node).copied())
+    }
+
+    /// Retire a member (crash, drain-out).  The incarnation is *not*
+    /// returned to the pool — a future rejoin mints a fresh one.
+    pub fn retire(&self, track: &str, node: &str) -> bool {
+        let mut g = self.tracks.lock().unwrap_or_else(|e| e.into_inner());
+        g.get_mut(track)
+            .map(|s| s.members.remove(node).is_some())
+            .unwrap_or(false)
+    }
+
+    /// Genesis side of the wire join: decode a [`MSG_TRACK_JOIN`]
+    /// frame, verify the joiner's evidence (measurement, challenge
+    /// echo, freshness, MAC), and answer with a [`MSG_TRACK_GRANT`]
+    /// carrying this registry's own quote plus the track keys sealed
+    /// under the joiner's verified report — or a [`MSG_TRACK_DENY`]
+    /// that mints *zero* key material and *zero* membership state.
+    ///
+    /// The track must already exist on this registry (the genesis — or
+    /// any member that completed its own join — answers); a join for an
+    /// unknown track is denied, since a non-member holds nothing to
+    /// hand off.
+    pub fn handle_join(&self, frame: &[u8], now_ms: u64) -> Vec<u8> {
+        let decoded = (|| -> std::io::Result<(String, String, u64, Report)> {
+            let (ty, payload) = read_frame(&mut &frame[..])?;
+            if ty != MSG_TRACK_JOIN {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("expected TRACK_JOIN, got {ty:#x}"),
+                ));
+            }
+            let mut c = Cursor::new(&payload);
+            let track = c.str()?;
+            let node = c.str()?;
+            let challenge = c.u64()?;
+            let report = Report {
+                measurement: c.arr32()?,
+                challenge: c.u64()?,
+                issued_at_ms: c.u64()?,
+                ttl_ms: c.u64()?,
+                tag: c.arr32()?,
+            };
+            Ok((track, node, challenge, report))
+        })();
+        let (track, node, challenge, report) = match decoded {
+            Ok(d) => d,
+            Err(e) => return deny_frame(&format!("malformed join: {e}")),
+        };
+        // Verify the joiner's evidence BEFORE touching any track state:
+        // a forged join (wrong measurement, stale report, bad MAC) must
+        // mint no incarnation and see no key material.
+        if !attestation::verify(
+            &self.opts.platform_key,
+            &report,
+            &self.opts.measurement,
+            challenge,
+            now_ms,
+        ) {
+            return deny_frame(if report.measurement != self.opts.measurement {
+                "measurement mismatch (wrong enclave)"
+            } else if !attestation::is_fresh(&report, now_ms) {
+                "stale join evidence"
+            } else {
+                "bad challenge or MAC"
+            });
+        }
+        let (keys, incarnation) = {
+            let mut g = self.tracks.lock().unwrap_or_else(|e| e.into_inner());
+            let Some(st) = g.get_mut(&track) else {
+                return deny_frame(&format!("track `{track}` has no genesis here"));
+            };
+            let incarnation = st.next_incarnation;
+            st.next_incarnation += 1;
+            st.members.insert(node.clone(), incarnation);
+            (st.keys.clone(), incarnation)
+        };
+        // Our own evidence over the joiner's challenge: the joiner must
+        // be able to refuse keys from an enclave it cannot identify.
+        let genesis_report = attestation::quote(
+            &self.opts.platform_key,
+            self.opts.measurement,
+            challenge,
+            now_ms,
+            self.opts.attest_ttl_ms,
+        );
+        // The handoff key derives from the joiner's *verified* report:
+        // only an enclave holding the platform key (and the report it
+        // actually sent) can open the sealed track keys.
+        let (wrap_enc, wrap_mac) = wrap_keys(&self.opts.platform_key, &report);
+        let mut plain = Vec::with_capacity(72);
+        plain.extend_from_slice(&keys.blind_seed);
+        plain.extend_from_slice(&keys.session_root);
+        plain.extend_from_slice(&incarnation.to_le_bytes());
+        let sealed = crypto::seal(&wrap_enc, &wrap_mac, challenge, &plain);
+        let mut p = Vec::with_capacity(96 + 16 + sealed.len());
+        encode_report(&mut p, &genesis_report);
+        p.extend_from_slice(&(sealed.len() as u32).to_le_bytes());
+        p.extend_from_slice(&sealed);
+        let mut out = Vec::with_capacity(p.len() + 5);
+        write_frame(&mut out, MSG_TRACK_GRANT, &p).expect("grant frame");
+        out
+    }
+}
+
+/// Joiner side, step 1: build the [`MSG_TRACK_JOIN`] frame.  `challenge`
+/// must be fresh per attempt; the joiner quotes its own measurement over
+/// it (a node with the wrong measurement cannot mint valid evidence).
+pub fn join_request(
+    opts: &TrackOptions,
+    track: &str,
+    node: &str,
+    challenge: u64,
+    now_ms: u64,
+) -> Vec<u8> {
+    let report = attestation::quote(
+        &opts.platform_key,
+        opts.measurement,
+        challenge,
+        now_ms,
+        opts.attest_ttl_ms,
+    );
+    let mut p = Vec::with_capacity(8 + track.len() + node.len() + 96);
+    put_str(&mut p, track);
+    put_str(&mut p, node);
+    p.extend_from_slice(&challenge.to_le_bytes());
+    encode_report(&mut p, &report);
+    let mut out = Vec::with_capacity(p.len() + 5);
+    write_frame(&mut out, MSG_TRACK_JOIN, &p).expect("join frame");
+    out
+}
+
+/// Joiner side, step 2: verify the grant and open the sealed track
+/// keys.  The genesis' report must carry the expected measurement and
+/// echo our challenge; the sealed blob must open under the key derived
+/// from *our* report — so a grant replayed to a different joiner (or a
+/// tampered blob) is rejected.
+pub fn accept_grant(
+    opts: &TrackOptions,
+    track: &str,
+    node: &str,
+    challenge: u64,
+    frame: &[u8],
+    now_ms: u64,
+) -> Result<TrackMembership, TrackError> {
+    let (ty, payload) = read_frame(&mut &frame[..])
+        .map_err(|e| TrackError::Protocol(format!("bad frame: {e}")))?;
+    let mut c = Cursor::new(&payload);
+    match ty {
+        MSG_TRACK_DENY => {
+            let reason = c
+                .str()
+                .map_err(|e| TrackError::Protocol(format!("bad deny: {e}")))?;
+            Err(TrackError::Denied(reason))
+        }
+        MSG_TRACK_GRANT => {
+            let genesis_report = decode_report(&mut c)
+                .map_err(|e| TrackError::Protocol(format!("bad report: {e}")))?;
+            if !attestation::verify(
+                &opts.platform_key,
+                &genesis_report,
+                &opts.measurement,
+                challenge,
+                now_ms,
+            ) {
+                return Err(TrackError::Attestation(
+                    "genesis evidence failed verification".into(),
+                ));
+            }
+            let sealed = c
+                .bytes_u32()
+                .map_err(|e| TrackError::Protocol(format!("bad sealed blob: {e}")))?;
+            // Recompute our own report deterministically (quote is a MAC
+            // over fixed inputs) to derive the same wrap key the genesis
+            // sealed under.
+            let my_report = attestation::quote(
+                &opts.platform_key,
+                opts.measurement,
+                challenge,
+                now_ms,
+                opts.attest_ttl_ms,
+            );
+            let (wrap_enc, wrap_mac) = wrap_keys(&opts.platform_key, &my_report);
+            let plain = crypto::open(&wrap_enc, &wrap_mac, challenge, &sealed)
+                .ok_or_else(|| TrackError::Attestation("sealed keys failed to open".into()))?;
+            if plain.len() != 72 {
+                return Err(TrackError::Protocol(format!(
+                    "sealed payload is {} bytes, want 72",
+                    plain.len()
+                )));
+            }
+            let keys = TrackKeys {
+                track: track.to_string(),
+                blind_seed: plain[..32].try_into().unwrap(),
+                session_root: plain[32..64].try_into().unwrap(),
+            };
+            let incarnation = u64::from_le_bytes(plain[64..72].try_into().unwrap());
+            Ok(TrackMembership {
+                keys,
+                incarnation,
+                node: node.to_string(),
+                genesis: false,
+            })
+        }
+        other => Err(TrackError::Protocol(format!(
+            "expected TRACK_GRANT or TRACK_DENY, got {other:#x}"
+        ))),
+    }
+}
+
+/// The caveat the joiner's quote depends on: `accept_grant` re-quotes at
+/// its own `now_ms`, so the joiner must pass the same timestamp to
+/// `join_request` and `accept_grant` (the simulator's per-node clock
+/// does exactly that).  Changing the timestamp between the two calls
+/// changes the report — and the wrap key — and the open fails closed.
+fn wrap_keys(platform_key: &[u8], joiner_report: &Report) -> ([u8; 16], [u8; 32]) {
+    let sk = attestation::session_key(platform_key, joiner_report);
+    let enc = crypto::derive_aes_key(&sk, "origami-track-wrap-enc");
+    let mac = crypto::derive_key(&sk, "origami-track-wrap-mac");
+    (enc, mac)
+}
+
+/// Wall-clock milliseconds since the UNIX epoch — the shared clock base
+/// of the *real-socket* join path (two hosts need a common domain to
+/// judge report freshness; `attest_ttl_ms` bounds the tolerated skew).
+/// The simulator never calls this: it passes its own per-node clocks to
+/// [`TrackRegistry::handle_join`] / [`accept_grant`] directly.
+pub fn wall_now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+fn derive_track_keys(master: &[u8; 32], track: &str) -> TrackKeys {
+    TrackKeys {
+        track: track.to_string(),
+        blind_seed: crypto::derive_key(master, &format!("origami-track-blind:{track}")),
+        session_root: crypto::derive_key(master, &format!("origami-track-session:{track}")),
+    }
+}
+
+fn deny_frame(reason: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(2 + reason.len());
+    put_str(&mut p, reason);
+    let mut out = Vec::with_capacity(p.len() + 5);
+    write_frame(&mut out, MSG_TRACK_DENY, &p).expect("deny frame");
+    out
+}
+
+fn encode_report(out: &mut Vec<u8>, r: &Report) {
+    out.extend_from_slice(&r.measurement);
+    out.extend_from_slice(&r.challenge.to_le_bytes());
+    out.extend_from_slice(&r.issued_at_ms.to_le_bytes());
+    out.extend_from_slice(&r.ttl_ms.to_le_bytes());
+    out.extend_from_slice(&r.tag);
+}
+
+fn decode_report(c: &mut Cursor<'_>) -> std::io::Result<Report> {
+    Ok(Report {
+        measurement: c.arr32()?,
+        challenge: c.u64()?,
+        issued_at_ms: c.u64()?,
+        ttl_ms: c.u64()?,
+        tag: c.arr32()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> TrackRegistry {
+        TrackRegistry::new(2019, TrackOptions::default())
+    }
+
+    #[test]
+    fn genesis_claims_once_and_rejoins_mint_monotone_incarnations() {
+        let reg = registry();
+        let a = reg.claim("prod", "node-a");
+        assert!(a.genesis);
+        assert_eq!(a.incarnation, 0);
+        let b = reg.claim("prod", "node-b");
+        assert!(!b.genesis, "the track already has a genesis");
+        assert_eq!(b.incarnation, 1);
+        assert_eq!(a.keys, b.keys, "members of one track share keys");
+        // crash-and-respawn: node-a rejoins with a strictly higher
+        // incarnation — its old blinding band is never reissued
+        let a2 = reg.claim("prod", "node-a");
+        assert!(a2.incarnation > b.incarnation);
+        assert_eq!(reg.member_count("prod"), 2);
+    }
+
+    #[test]
+    fn tracks_isolate_key_material() {
+        let reg = registry();
+        let prod = reg.claim("prod", "n");
+        let canary = reg.claim("canary", "n");
+        assert_ne!(prod.keys.blind_seed, canary.keys.blind_seed);
+        assert_ne!(prod.keys.session_root, canary.keys.session_root);
+    }
+
+    #[test]
+    fn blind_domains_are_disjoint_across_incarnations() {
+        let keys = registry().claim("prod", "n").keys;
+        // incarnation 0's worker band and incarnation 1's never overlap
+        let hi0 = keys.blind_domain(0, (TRACK_DOMAIN_STRIDE - 1) as usize);
+        let lo1 = keys.blind_domain(1, 0);
+        assert!(hi0 < lo1, "bands must be disjoint: {hi0} vs {lo1}");
+    }
+
+    #[test]
+    fn wire_join_round_trip_hands_off_keys() {
+        let reg = registry();
+        let genesis = reg.claim("prod", "node-a");
+        let opts = TrackOptions::default();
+        let req = join_request(&opts, "prod", "node-b", 77, 1_000);
+        let reply = reg.handle_join(&req, 1_000);
+        let joined = accept_grant(&opts, "prod", "node-b", 77, &reply, 1_000).unwrap();
+        assert_eq!(joined.keys, genesis.keys, "joiner holds the track keys");
+        assert_eq!(joined.incarnation, 1);
+        assert!(!joined.genesis);
+        assert_eq!(reg.member_count("prod"), 2);
+    }
+
+    #[test]
+    fn forged_join_mints_zero_key_material() {
+        let reg = registry();
+        reg.claim("prod", "node-a");
+        // wrong measurement: the forger's enclave is not the track's
+        let forged = TrackOptions {
+            measurement: crypto::sha256(b"evil-enclave"),
+            ..TrackOptions::default()
+        };
+        let req = join_request(&forged, "prod", "mallory", 9, 500);
+        let reply = reg.handle_join(&req, 500);
+        let err = accept_grant(&forged, "prod", "mallory", 9, &reply, 500).unwrap_err();
+        assert!(matches!(err, TrackError::Denied(_)), "got {err:?}");
+        assert_eq!(
+            reg.member_count("prod"),
+            1,
+            "a denied join must mint no membership state"
+        );
+        assert_eq!(reg.incarnation_of("prod", "mallory"), None);
+
+        // stale evidence: a captured join replayed past the report TTL
+        let honest = TrackOptions::default();
+        let old = join_request(&honest, "prod", "node-b", 11, 0);
+        let reply = reg.handle_join(&old, honest.attest_ttl_ms + 1);
+        assert!(matches!(
+            accept_grant(&honest, "prod", "node-b", 11, &reply, 0),
+            Err(TrackError::Denied(_))
+        ));
+        assert_eq!(reg.member_count("prod"), 1);
+    }
+
+    #[test]
+    fn join_for_an_unknown_track_is_denied() {
+        let reg = registry();
+        let opts = TrackOptions::default();
+        let req = join_request(&opts, "ghost", "node-b", 3, 100);
+        let reply = reg.handle_join(&req, 100);
+        assert!(matches!(
+            accept_grant(&opts, "ghost", "node-b", 3, &reply, 100),
+            Err(TrackError::Denied(_))
+        ));
+        assert_eq!(reg.member_count("ghost"), 0);
+    }
+
+    #[test]
+    fn grant_for_another_joiner_fails_to_open() {
+        let reg = registry();
+        reg.claim("prod", "node-a");
+        let opts = TrackOptions::default();
+        let req = join_request(&opts, "prod", "node-b", 42, 1_000);
+        let reply = reg.handle_join(&req, 1_000);
+        // an eavesdropper (different challenge → different wrap key)
+        // cannot open the sealed keys
+        assert!(matches!(
+            accept_grant(&opts, "prod", "eve", 43, &reply, 1_000),
+            Err(TrackError::Attestation(_))
+        ));
+    }
+
+    #[test]
+    fn retire_keeps_incarnations_monotone() {
+        let reg = registry();
+        reg.claim("prod", "node-a");
+        let b1 = reg.claim("prod", "node-b");
+        assert!(reg.retire("prod", "node-b"));
+        assert_eq!(reg.member_count("prod"), 1);
+        let b2 = reg.claim("prod", "node-b");
+        assert!(b2.incarnation > b1.incarnation, "retired incarnations never recycle");
+    }
+}

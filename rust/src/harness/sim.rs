@@ -983,6 +983,341 @@ pub fn replay_epc_packing(cfg: &EpcSimConfig, trace: &Trace) -> EpcSimResult {
     }
 }
 
+// ---------------------------------------------------------------------
+// Multi-node cluster replay
+// ---------------------------------------------------------------------
+
+/// One simulated node: a member (or joiner) of an enclave track, with
+/// its own clock skew relative to the simulated wall clock.
+#[derive(Debug, Clone)]
+pub struct SimNode {
+    pub name: String,
+    pub track: String,
+    /// Per-node clock skew (ms): this node's local clock reads
+    /// `wall + skew_ms`.  Join evidence is quoted and verified on the
+    /// *local* clocks, so skew beyond the attestation TTL is a real
+    /// (and simulated) join failure.
+    pub skew_ms: f64,
+    /// A forged node quotes a wrong measurement: its joins must be
+    /// denied with zero key material minted.
+    pub forged: bool,
+}
+
+impl SimNode {
+    pub fn new(name: &str, track: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            track: track.to_string(),
+            skew_ms: 0.0,
+            forged: false,
+        }
+    }
+
+    pub fn skew(mut self, skew_ms: f64) -> Self {
+        self.skew_ms = skew_ms;
+        self
+    }
+
+    pub fn forged(mut self) -> Self {
+        self.forged = true;
+        self
+    }
+}
+
+/// Link-delay distribution between nodes: `base_ms + U[0, jitter_ms)`
+/// per hop, drawn from the replay's seeded [`Rng`].
+#[derive(Debug, Clone, Copy)]
+pub struct SimLink {
+    pub base_ms: f64,
+    pub jitter_ms: f64,
+}
+
+impl Default for SimLink {
+    fn default() -> Self {
+        Self {
+            base_ms: 0.2,
+            jitter_ms: 1.0,
+        }
+    }
+}
+
+/// A scripted cluster membership/failure event.
+#[derive(Debug, Clone)]
+pub enum ClusterEventKind {
+    /// `node` (index into [`ClusterSimConfig::nodes`]) runs the wire
+    /// join against the track's genesis.
+    Join { node: usize },
+    /// Mark a node failing: drain begins (lazy on touch, finished by
+    /// the drain tick once the grace passes).
+    MarkFailing { node: usize },
+    /// Split the cluster into components (lists of node names); only
+    /// the majority side serves.
+    Partition { groups: Vec<Vec<String>> },
+    /// Rejoin all components.
+    Heal,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterEvent {
+    pub at_ms: f64,
+    pub kind: ClusterEventKind,
+}
+
+/// Configuration of a multi-node replay.  Nodes join over the *wire*
+/// protocol (real `track.rs` frames, link delays, skewed clocks) and
+/// sessions route through the *production* [`RoutePlan`] — the sim owns
+/// only the clock and the event order, exactly like the admission and
+/// autoscale replays.
+#[derive(Debug, Clone)]
+pub struct ClusterSimConfig {
+    pub seed: u64,
+    /// `nodes[0]` is the genesis member (claims the track at t=0);
+    /// others join via scripted [`ClusterEventKind::Join`] events.
+    pub nodes: Vec<SimNode>,
+    pub link: SimLink,
+    pub events: Vec<ClusterEvent>,
+    /// Session population: ids `0..sessions` arrive round-robin.
+    pub sessions: u64,
+    /// Inference arrivals per session over the horizon.
+    pub arrivals_per_session: usize,
+    /// Gap between one session's consecutive arrivals (ms).
+    pub arrival_gap_ms: f64,
+    pub drain_grace_ms: u64,
+    /// Drain-tick cadence (ms); 0 = never (lazy routes still drain,
+    /// and the end-of-replay tick normalizes node health).
+    pub tick_ms: f64,
+    /// Replay horizon (ms).
+    pub horizon_ms: f64,
+}
+
+impl ClusterSimConfig {
+    /// A 3-node single-track baseline: genesis plus two wire joiners
+    /// at 5 ms and 10 ms, modest skew, no failures.
+    pub fn three_node(seed: u64) -> Self {
+        Self {
+            seed,
+            nodes: vec![
+                SimNode::new("node-a", "prod"),
+                SimNode::new("node-b", "prod").skew(3.0),
+                SimNode::new("node-c", "prod").skew(-2.0),
+            ],
+            link: SimLink::default(),
+            events: vec![
+                ClusterEvent {
+                    at_ms: 5.0,
+                    kind: ClusterEventKind::Join { node: 1 },
+                },
+                ClusterEvent {
+                    at_ms: 10.0,
+                    kind: ClusterEventKind::Join { node: 2 },
+                },
+            ],
+            sessions: 48,
+            arrivals_per_session: 4,
+            arrival_gap_ms: 40.0,
+            drain_grace_ms: 50,
+            tick_ms: 20.0,
+            horizon_ms: 400.0,
+        }
+    }
+}
+
+/// What a multi-node replay produced.  `digest` folds the final routing
+/// state and every per-arrival outcome — the determinism regressions
+/// compare it across runs and tick cadences.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterSimResult {
+    /// Arrivals routed to a live node.
+    pub served: u64,
+    /// Arrivals refused with a typed isolation error (partition
+    /// minority) — refused, never corrupted.
+    pub isolated: u64,
+    /// Arrivals refused because no same-track sibling was reachable.
+    pub lost: u64,
+    /// Session migrations performed (route-touch and tick drains).
+    pub moved: u64,
+    /// Wire joins that handed off key material.
+    pub joins_ok: u64,
+    /// Wire joins denied (forged measurement, stale evidence, …).
+    pub joins_denied: u64,
+    /// Member incarnations at end of replay, by node name.
+    pub incarnations: BTreeMap<String, u64>,
+    pub digest: u64,
+}
+
+/// Replay a scripted multi-node scenario through the production
+/// [`TrackRegistry`] join protocol and [`RoutePlan`] routing code.
+/// Pure function of the config: no sockets, no threads, no wall clock.
+pub fn replay_cluster(cfg: &ClusterSimConfig) -> ClusterSimResult {
+    use crate::coordinator::cluster::{ClusterOptions, RouteError, RoutePlan};
+    use crate::coordinator::track::{self, TrackOptions, TrackRegistry};
+    use crate::crypto;
+
+    assert!(!cfg.nodes.is_empty(), "a cluster needs a genesis node");
+    let mut rng = Rng::with_stream(cfg.seed, 0xC1_05_7E_12);
+    let opts = TrackOptions::default();
+    let registry = TrackRegistry::new(cfg.seed, opts.clone());
+    let mut plan = RoutePlan::new(ClusterOptions {
+        drain_grace_ms: cfg.drain_grace_ms,
+        vnodes: 16,
+    });
+    let mut incarnations: BTreeMap<String, u64> = BTreeMap::new();
+
+    // genesis claims the track at t=0 on its local clock
+    let genesis = &cfg.nodes[0];
+    let membership = registry.claim(&genesis.track, &genesis.name);
+    incarnations.insert(genesis.name.clone(), membership.incarnation);
+    plan.add_node(&genesis.name, &genesis.track);
+
+    // Event timeline: scripted cluster events, session arrivals, drain
+    // ticks — merged and processed in time order (ties: events first,
+    // then arrivals, then ticks, by construction order below).
+    #[derive(Clone)]
+    enum Ev {
+        Cluster(ClusterEventKind),
+        Arrival { session: u64 },
+        Tick,
+    }
+    let mut timeline: Vec<(f64, u32, Ev)> = Vec::new();
+    for e in &cfg.events {
+        timeline.push((e.at_ms, 0, Ev::Cluster(e.kind.clone())));
+    }
+    for k in 0..cfg.arrivals_per_session {
+        for s in 0..cfg.sessions {
+            // stagger sessions inside each round so arrivals interleave
+            let at = k as f64 * cfg.arrival_gap_ms
+                + (s as f64 / cfg.sessions.max(1) as f64) * cfg.arrival_gap_ms;
+            timeline.push((at, 1, Ev::Arrival { session: s }));
+        }
+    }
+    if cfg.tick_ms > 0.0 {
+        let mut t = cfg.tick_ms;
+        while t <= cfg.horizon_ms {
+            timeline.push((t, 2, Ev::Tick));
+            t += cfg.tick_ms;
+        }
+    }
+    timeline.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap()
+            .then_with(|| a.1.cmp(&b.1))
+    });
+
+    let mut served = 0u64;
+    let mut isolated = 0u64;
+    let mut lost = 0u64;
+    let mut moved = 0u64;
+    let mut joins_ok = 0u64;
+    let mut joins_denied = 0u64;
+    // Arrival outcomes fold into the digest: (session, outcome, node).
+    let mut acc: u64 = 0xcbf2_9ce4_8422_2325;
+    let fold = |acc: &mut u64, bytes: &[u8]| {
+        for &b in bytes {
+            *acc ^= b as u64;
+            *acc = acc.wrapping_mul(0x1000_0000_01b3);
+        }
+    };
+
+    let mut clock = SimClock::new();
+    for (at, _, ev) in timeline {
+        if at > cfg.horizon_ms {
+            break;
+        }
+        clock.advance_to(at);
+        let now = clock.now_ms();
+        match ev {
+            Ev::Cluster(kind) => match kind {
+                ClusterEventKind::Join { node } => {
+                    let joiner = &cfg.nodes[node];
+                    let joiner_opts = if joiner.forged {
+                        TrackOptions {
+                            measurement: crypto::sha256(b"forged-enclave"),
+                            ..opts.clone()
+                        }
+                    } else {
+                        opts.clone()
+                    };
+                    // the joiner quotes on its own (skewed) clock; the
+                    // genesis verifies on its clock after a link delay
+                    let t_joiner = (now + joiner.skew_ms).max(0.0) as u64;
+                    let challenge = rng.next_u64();
+                    let req = track::join_request(
+                        &joiner_opts,
+                        &joiner.track,
+                        &joiner.name,
+                        challenge,
+                        t_joiner,
+                    );
+                    let d1 = cfg.link.base_ms + rng.f64() * cfg.link.jitter_ms;
+                    let t_genesis = (now + d1 + genesis.skew_ms).max(0.0) as u64;
+                    let reply = registry.handle_join(&req, t_genesis);
+                    let _d2 = cfg.link.base_ms + rng.f64() * cfg.link.jitter_ms;
+                    match track::accept_grant(
+                        &joiner_opts,
+                        &joiner.track,
+                        &joiner.name,
+                        challenge,
+                        &reply,
+                        t_joiner,
+                    ) {
+                        Ok(m) => {
+                            joins_ok += 1;
+                            incarnations.insert(joiner.name.clone(), m.incarnation);
+                            plan.add_node(&joiner.name, &joiner.track);
+                        }
+                        Err(_) => joins_denied += 1,
+                    }
+                }
+                ClusterEventKind::MarkFailing { node } => {
+                    plan.mark_failing(&cfg.nodes[node].name, now as u64);
+                }
+                ClusterEventKind::Partition { groups } => plan.partition(&groups),
+                ClusterEventKind::Heal => plan.heal(),
+            },
+            Ev::Arrival { session } => match plan.route(session, now as u64) {
+                Ok((node, mv)) => {
+                    served += 1;
+                    if mv.is_some() {
+                        moved += 1;
+                    }
+                    fold(&mut acc, &session.to_le_bytes());
+                    fold(&mut acc, b"served");
+                    fold(&mut acc, node.as_bytes());
+                }
+                Err(RouteError::Isolated { .. }) => {
+                    isolated += 1;
+                    fold(&mut acc, &session.to_le_bytes());
+                    fold(&mut acc, b"isolated");
+                }
+                Err(_) => {
+                    lost += 1;
+                    fold(&mut acc, &session.to_le_bytes());
+                    fold(&mut acc, b"lost");
+                }
+            },
+            Ev::Tick => {
+                moved += plan.tick(now as u64).len() as u64;
+            }
+        }
+    }
+    // normalize terminal health (a draining node ends down under any
+    // tick cadence, including "never")
+    clock.advance_to(cfg.horizon_ms + cfg.drain_grace_ms as f64 + 1.0);
+    moved += plan.tick(clock.now_ms() as u64).len() as u64;
+    fold(&mut acc, &plan.digest().to_le_bytes());
+
+    ClusterSimResult {
+        served,
+        isolated,
+        lost,
+        moved,
+        joins_ok,
+        joins_denied,
+        incarnations,
+        digest: acc,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -15,9 +15,9 @@ use anyhow::{Context, Result};
 use crate::config::{Config, ModelSpec};
 use crate::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
 use crate::coordinator::{
-    AdmissionLimits, AutoscalePolicy, Deployment, EpcOptions, FabricOptions, NetOptions,
-    NetServer, PoolOptions, ScaleMode, ServingEngine, SessionTable, ShedPolicy, SplitPolicy,
-    WorkerPool,
+    AdmissionLimits, AutoscalePolicy, DeploySpec, Deployment, EpcOptions, FabricOptions,
+    NetOptions, NetServer, PoolOptions, ScaleMode, ServingEngine, SessionTable, ShedPolicy,
+    SplitPolicy, TrackMembership, TrackOptions, TrackRegistry, WorkerPool,
 };
 use crate::enclave::cost::CostModel;
 use crate::model::{Manifest, Model};
@@ -420,14 +420,13 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
     if dep.epc_ledger().is_some() {
         pool_opts.worker_epc_bytes = worker_epc_bytes_for(&model, config)?;
     }
-    dep.deploy_with_admission(
-        &config.model,
-        sample_bytes,
-        weight,
-        slo_ms,
-        limits,
-        shed_policy,
-        pool_opts,
+    dep.deploy_model(
+        DeploySpec::new(&config.model, sample_bytes)
+            .weight(weight)
+            .slo_ms(slo_ms)
+            .admission(limits)
+            .shed_policy(shed_policy)
+            .pool(pool_opts),
         move |band, domain| {
             let mut c = sched_cfg.clone();
             c.blind_domain = band * BLIND_DOMAIN_STRIDE + domain as u64;
@@ -449,12 +448,13 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
             // model geometry, different strategy → different plan)
             dpool_opts.worker_epc_bytes = worker_epc_bytes_for(&model, &dcfg)?;
         }
-        dep.deploy(
-            &degraded,
-            sample_bytes,
-            weight * DEGRADE_WEIGHT_FRACTION,
-            None,
-            dpool_opts,
+        dep.deploy_model(
+            DeploySpec::new(&degraded, sample_bytes)
+                .weight(weight * DEGRADE_WEIGHT_FRACTION)
+                // explicit: spillover must stay unthrottled even if the
+                // deployment carries a default admission policy
+                .admission(AdmissionLimits::default())
+                .pool(dpool_opts),
             move |band, domain| {
                 let mut c = dsched_cfg.clone();
                 c.blind_domain = band * BLIND_DOMAIN_STRIDE + domain as u64;
@@ -473,12 +473,16 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
 /// attached tier-1 pool per spec, and (when `base.autoscale`) the
 /// background queue-depth autoscaler.
 pub fn start_deployment_from_config(base: &Config, specs: &[ModelSpec]) -> Result<Deployment> {
-    let mut dep = Deployment::new_with_sessions(
-        fabric_options_from_config(base)?,
-        autoscale_policy_from_config(base),
-        epc_options_from_config(base),
-        SessionTable::with_capacity(base.session_shards, base.session_ttl_ms, base.session_cap),
-    );
+    let mut dep = Deployment::builder(fabric_options_from_config(base)?)
+        .policy(autoscale_policy_from_config(base))
+        .epc(epc_options_from_config(base))
+        .sessions(SessionTable::with_capacity(
+            base.session_shards,
+            base.session_ttl_ms,
+            base.session_cap,
+        ))
+        .sweep_every_ms(base.session_sweep_ms)
+        .build();
     for spec in specs {
         let cfg = spec.apply(base);
         deploy_from_config(&dep, &cfg, spec.weight)?;
@@ -503,15 +507,120 @@ pub fn net_options_from_config(config: &Config) -> NetOptions {
 
 /// Start the attested TCP front door over a deployment, when the config
 /// asks for one (`--listen`).  Returns `None` when `listen` is empty.
+/// With a track registry the front door also answers track-join frames
+/// (the transport `--track-peers` joins through).
 pub fn start_net_server(
     dep: &Arc<Deployment>,
     config: &Config,
+    tracks: Option<Arc<TrackRegistry>>,
 ) -> Result<Option<NetServer>> {
     if config.listen.trim().is_empty() {
         return Ok(None);
     }
-    let server = NetServer::start(dep.clone(), net_options_from_config(config))?;
+    let server =
+        NetServer::start_with_tracks(dep.clone(), net_options_from_config(config), tracks)?;
     Ok(Some(server))
+}
+
+/// Track attestation parameters from a config — the same well-known
+/// constants the front door uses ([`TrackOptions::default`]): joins and
+/// client HELLOs verify against one measurement.
+pub fn track_options_from_config(_config: &Config) -> TrackOptions {
+    TrackOptions::default()
+}
+
+/// What `--track` wires up on a serving node.
+pub struct TrackRuntime {
+    /// The node's local registry — the front door answers join frames
+    /// from it, so later nodes can join through this one.
+    pub registry: Arc<TrackRegistry>,
+    /// This node's membership (keys + monotone incarnation).
+    pub membership: TrackMembership,
+}
+
+/// Establish this node's track membership per the config: `--track`
+/// with no peers claims the track fresh (genesis — mints the key
+/// material); `--track-peers` joins over the wire through an existing
+/// member's front door, trying each peer in order.  Empty `--track` is
+/// single-node serving: returns `None`.
+///
+/// Peers listed but all unreachable is an **error**, not a genesis
+/// fallback — silently minting fresh keys would fork the track into two
+/// key domains that cannot serve each other's sessions.
+pub fn start_track_from_config(config: &Config) -> Result<Option<TrackRuntime>> {
+    let track = config.track.trim();
+    if track.is_empty() {
+        return Ok(None);
+    }
+    let opts = track_options_from_config(config);
+    let node = if config.listen.trim().is_empty() {
+        "local".to_string()
+    } else {
+        config.listen.clone()
+    };
+    let registry = Arc::new(TrackRegistry::new(config.seed, opts.clone()));
+    let peers: Vec<&str> = config
+        .track_peers
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if peers.is_empty() {
+        let membership = registry.claim(track, &node);
+        return Ok(Some(TrackRuntime {
+            registry,
+            membership,
+        }));
+    }
+    let mut last_err = None;
+    for peer in peers {
+        match join_track_via(peer, &opts, track, &node) {
+            Ok(membership) => {
+                return Ok(Some(TrackRuntime {
+                    registry,
+                    membership,
+                }))
+            }
+            Err(e) => last_err = Some(e.context(format!("joining via {peer}"))),
+        }
+    }
+    Err(last_err.unwrap().context(format!(
+        "no --track-peers member of track `{track}` was reachable"
+    )))
+}
+
+/// One wire join attempt against a member's front door: send the framed
+/// join request, verify the grant, open the sealed track keys.  Both
+/// ends judge report freshness on wall-clock UNIX time
+/// ([`wall_now_ms`](crate::coordinator::track::wall_now_ms)), so cross-
+/// host skew up to the attestation TTL is tolerated.
+fn join_track_via(
+    peer: &str,
+    opts: &TrackOptions,
+    track: &str,
+    node: &str,
+) -> Result<TrackMembership> {
+    use crate::coordinator::track;
+    use std::hash::{BuildHasher, Hasher};
+    use std::io::Write;
+    let mut stream = std::net::TcpStream::connect(peer)
+        .with_context(|| format!("connecting to track peer {peer}"))?;
+    stream.set_nodelay(true).ok();
+    let now_ms = track::wall_now_ms();
+    // fresh challenge per attempt (hashmap RandomState = per-process
+    // random seed; folding the clock decorrelates retries)
+    let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+    h.write_u64(now_ms);
+    let challenge = h.finish();
+    let frame = track::join_request(opts, track, node, challenge, now_ms);
+    stream.write_all(&frame)?;
+    let (ty, payload) = crate::coordinator::net::read_frame(&mut stream)?;
+    let mut reply = Vec::with_capacity(payload.len() + 5);
+    crate::coordinator::net::write_frame(&mut reply, ty, &payload)?;
+    // same now_ms as the request: the grant's wrap key derives from the
+    // joiner's quote, which is deterministic in (challenge, timestamp)
+    track::accept_grant(opts, track, node, challenge, &reply, now_ms)
+        .map_err(anyhow::Error::from)
 }
 
 /// Encrypt a plaintext image for `session` under the deployment seed —

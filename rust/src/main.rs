@@ -76,7 +76,7 @@ fn print_help() {
             other => Some(other.to_json()),
         }
     };
-    let groups: [(&str, &str); 7] = [
+    let groups: [(&str, &str); 8] = [
         ("common", "Common options"),
         ("serve", "Serve options"),
         ("fabric", "Multi-model serve (shared tier-2 lane fabric)"),
@@ -84,6 +84,7 @@ fn print_help() {
         ("admission", "Admission control (per tenant; 0 = unlimited)"),
         ("epc", "EPC-aware co-scheduling of tier-1 pools"),
         ("net", "Network front door (attested TCP sessions)"),
+        ("track", "Enclave tracks (multi-node session routing)"),
     ];
     for (group, title) in groups {
         println!("\n{title}:");
@@ -323,9 +324,27 @@ fn cmd_serve_multi(args: &Args, config: Config) -> Result<()> {
         );
         tenants.push((cfg, images));
     }
+    let track = origami::launcher::start_track_from_config(&config)?;
+    if let Some(rt) = &track {
+        println!(
+            "track `{}`: {} as `{}` (incarnation {})",
+            rt.membership.keys.track,
+            if rt.membership.genesis {
+                "genesis — minted track keys"
+            } else {
+                "joined — keys handed off over the attested channel"
+            },
+            rt.membership.node,
+            rt.membership.incarnation,
+        );
+    }
     let dep = origami::launcher::start_deployment_from_config(&config, &specs)?;
     let dep = std::sync::Arc::new(dep);
-    let net = origami::launcher::start_net_server(&dep, &config)?;
+    let net = origami::launcher::start_net_server(
+        &dep,
+        &config,
+        track.as_ref().map(|rt| rt.registry.clone()),
+    )?;
     if let Some(server) = &net {
         println!(
             "front door listening on {} (session ttl {} ms, {} shards)",

@@ -19,7 +19,7 @@ use common::sim::{drive_deployment, tenant_load};
 use origami::config::Config;
 use origami::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
 use origami::coordinator::{
-    AdmissionError, AdmissionLimits, AutoscalePolicy, Deployment, FabricOptions, PoolOptions,
+    AdmissionError, AdmissionLimits, DeploySpec, Deployment, FabricOptions, PoolOptions,
     ShedPolicy,
 };
 use origami::enclave::cost::{Cat, CostModel, Ledger};
@@ -110,28 +110,21 @@ fn tiny_pool() -> PoolOptions {
 #[test]
 fn shed_request_unbinds_its_session() {
     let open = Arc::new(AtomicBool::new(false));
-    let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
-    dep.deploy_with_admission(
-        "gated",
-        8,
-        1.0,
-        None,
-        AdmissionLimits {
-            shed_depth: 1,
-            ..AdmissionLimits::default()
-        },
-        ShedPolicy::Reject,
-        tiny_pool(),
+    let dep = Deployment::builder(FabricOptions::default()).build();
+    dep.deploy_model(
+        DeploySpec::new("gated", 8)
+            .admission(AdmissionLimits {
+                shed_depth: 1,
+                ..AdmissionLimits::default()
+            })
+            .shed_policy(ShedPolicy::Reject)
+            .pool(tiny_pool()),
         gate_sched(open.clone(), 0.0),
         ref_finisher(),
     )
     .unwrap();
-    dep.deploy(
-        "other",
-        8,
-        1.0,
-        None,
-        tiny_pool(),
+    dep.deploy_model(
+        DeploySpec::new("other", 8).pool(tiny_pool()),
         gate_sched(open_gate(), 0.5),
         ref_finisher(),
     )
@@ -193,18 +186,15 @@ fn shed_request_unbinds_its_session() {
 #[test]
 fn quota_rejects_then_slots_release_on_completion() {
     let open = Arc::new(AtomicBool::new(false));
-    let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
-    dep.deploy_with_admission(
-        "quota",
-        8,
-        1.0,
-        None,
-        AdmissionLimits {
-            inflight: 2,
-            ..AdmissionLimits::default()
-        },
-        ShedPolicy::Reject,
-        tiny_pool(),
+    let dep = Deployment::builder(FabricOptions::default()).build();
+    dep.deploy_model(
+        DeploySpec::new("quota", 8)
+            .admission(AdmissionLimits {
+                inflight: 2,
+                ..AdmissionLimits::default()
+            })
+            .shed_policy(ShedPolicy::Reject)
+            .pool(tiny_pool()),
         gate_sched(open.clone(), 0.0),
         ref_finisher(),
     )
@@ -250,29 +240,22 @@ fn quota_rejects_then_slots_release_on_completion() {
 
 #[test]
 fn rate_limited_session_is_unbound_with_a_retry_hint() {
-    let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
-    dep.deploy_with_admission(
-        "limited",
-        8,
-        1.0,
-        None,
-        AdmissionLimits {
-            rps: 1.0,
-            burst: 1.0,
-            ..AdmissionLimits::default()
-        },
-        ShedPolicy::Reject,
-        tiny_pool(),
+    let dep = Deployment::builder(FabricOptions::default()).build();
+    dep.deploy_model(
+        DeploySpec::new("limited", 8)
+            .admission(AdmissionLimits {
+                rps: 1.0,
+                burst: 1.0,
+                ..AdmissionLimits::default()
+            })
+            .shed_policy(ShedPolicy::Reject)
+            .pool(tiny_pool()),
         gate_sched(open_gate(), 0.0),
         ref_finisher(),
     )
     .unwrap();
-    dep.deploy(
-        "other",
-        8,
-        1.0,
-        None,
-        tiny_pool(),
+    dep.deploy_model(
+        DeploySpec::new("other", 8).pool(tiny_pool()),
         gate_sched(open_gate(), 0.5),
         ref_finisher(),
     )
@@ -304,29 +287,22 @@ fn rate_limited_session_is_unbound_with_a_retry_hint() {
 #[test]
 fn degrade_routes_shed_requests_to_the_cheaper_tier() {
     let open = Arc::new(AtomicBool::new(false));
-    let dep = Deployment::new(FabricOptions::default(), AutoscalePolicy::default());
-    dep.deploy_with_admission(
-        "svc",
-        8,
-        1.0,
-        None,
-        AdmissionLimits {
-            shed_depth: 1,
-            ..AdmissionLimits::default()
-        },
-        ShedPolicy::Degrade,
-        tiny_pool(),
+    let dep = Deployment::builder(FabricOptions::default()).build();
+    dep.deploy_model(
+        DeploySpec::new("svc", 8)
+            .admission(AdmissionLimits {
+                shed_depth: 1,
+                ..AdmissionLimits::default()
+            })
+            .shed_policy(ShedPolicy::Degrade)
+            .pool(tiny_pool()),
         gate_sched(open.clone(), 0.0),
         ref_finisher(),
     )
     .unwrap();
     // the cheaper tier: instant service, marker 0.25
-    dep.deploy(
-        "svc~cheap",
-        8,
-        1.0,
-        None,
-        tiny_pool(),
+    dep.deploy_model(
+        DeploySpec::new("svc~cheap", 8).pool(tiny_pool()),
         gate_sched(open_gate(), 0.25),
         ref_finisher(),
     )
@@ -385,10 +361,7 @@ fn launcher_wires_admission_and_degrade_tier_from_config() {
         degrade_strategy: "baseline2".into(),
         ..Config::default()
     };
-    let dep = Deployment::new(
-        fabric_options_from_config(&cfg).unwrap(),
-        AutoscalePolicy::default(),
-    );
+    let dep = Deployment::builder(fabric_options_from_config(&cfg).unwrap()).build();
     deploy_from_config(&dep, &cfg, 1.0).unwrap();
     assert_eq!(
         dep.models(),

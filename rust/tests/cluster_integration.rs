@@ -1,0 +1,320 @@
+//! Multi-node cluster acceptance: the track join protocol, the cluster
+//! router's drain migration, partition isolation, and the session-TTL
+//! sweeper — end to end on live [`Deployment`]s and on the multi-node
+//! discrete-event replay.
+//!
+//! The replay tests drive the *production* `TrackRegistry` frames and
+//! `RoutePlan` routing through `origami::harness::sim::replay_cluster`,
+//! so CI exercises clock skew, link delay and partitions without ever
+//! opening a socket.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use origami::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
+use origami::coordinator::track::{accept_grant, join_request};
+use origami::coordinator::{
+    ClusterOptions, ClusterRouter, DeploySpec, Deployment, FabricOptions, PoolOptions,
+    SessionTable, TrackError, TrackOptions, TrackRegistry, TRACK_DOMAIN_STRIDE,
+};
+use origami::enclave::cost::{Cat, CostModel, Ledger};
+use origami::harness::sim::{
+    replay_cluster, ClusterEvent, ClusterEventKind, ClusterSimConfig, SimNode,
+};
+use origami::runtime::{Device, ReferenceBackend, StageExecutor};
+use origami::strategies::Strategy;
+
+/// Deterministic strategy double: echoes each request's session id so
+/// replies are attributable without real model weights.
+struct Echo;
+
+impl Strategy for Echo {
+    fn name(&self) -> String {
+        "echo".into()
+    }
+
+    fn setup(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn infer(
+        &mut self,
+        _ciphertext: &[u8],
+        batch: usize,
+        sessions: &[u64],
+        ledger: &mut Ledger,
+    ) -> Result<Vec<f32>> {
+        ledger.add_measured(Cat::DeviceCompute, 1_000);
+        Ok((0..batch)
+            .map(|i| sessions.get(i).copied().unwrap_or(0) as f32)
+            .collect())
+    }
+
+    fn enclave_requirement_bytes(&self) -> u64 {
+        0
+    }
+}
+
+fn echo_sched() -> impl Fn(u64, usize) -> Result<BatchScheduler> + Send + Sync + 'static {
+    move |_band, _domain| Ok(BatchScheduler::new(Box::new(Echo), 8, vec![1]))
+}
+
+fn ref_finisher() -> impl Fn(usize) -> Result<Tier2Finisher> + Send + Sync + 'static {
+    |_lane| {
+        let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 1)?);
+        Ok(Tier2Finisher::new(
+            Arc::new(StageExecutor::reference(rb, CostModel::default())),
+            "sim8",
+            Device::UntrustedCpu,
+        ))
+    }
+}
+
+fn member_node() -> Arc<Deployment> {
+    let dep = Deployment::builder(FabricOptions::default())
+        .sweep_every_ms(0)
+        .build();
+    dep.deploy_model(
+        DeploySpec::new("m", 8).pool(PoolOptions {
+            workers: 1,
+            min_workers: 1,
+            max_workers: 1,
+            max_batch: 1,
+            max_delay_ms: 0.0,
+            pipeline: false,
+            ..PoolOptions::default()
+        }),
+        echo_sched(),
+        ref_finisher(),
+    )
+    .unwrap();
+    Arc::new(dep)
+}
+
+// ── crash-and-respawn: monotone incarnations, disjoint pad bands ────
+
+#[test]
+fn crash_and_respawn_rejoins_without_pad_reuse() {
+    let reg = TrackRegistry::new(2019, TrackOptions::default());
+    let genesis = reg.claim("prod", "node-a");
+    let opts = TrackOptions::default();
+
+    // first life: wire join
+    let req = join_request(&opts, "prod", "node-b", 101, 1_000);
+    let reply = reg.handle_join(&req, 1_000);
+    let life1 = accept_grant(&opts, "prod", "node-b", 101, &reply, 1_000).unwrap();
+    assert_eq!(life1.keys, genesis.keys);
+
+    // crash: the registry retires the member; its incarnation is spent
+    assert!(reg.retire("prod", "node-b"));
+
+    // respawn: the rejoin mints a strictly higher incarnation
+    let req = join_request(&opts, "prod", "node-b", 102, 2_000);
+    let reply = reg.handle_join(&req, 2_000);
+    let life2 = accept_grant(&opts, "prod", "node-b", 102, &reply, 2_000).unwrap();
+    assert!(
+        life2.incarnation > life1.incarnation,
+        "respawn must not recycle incarnation {} (got {})",
+        life1.incarnation,
+        life2.incarnation
+    );
+
+    // and therefore the blinding bands of the two lives are disjoint:
+    // the highest domain of life 1 sits strictly below the lowest of
+    // life 2 — no pad stream the first life spent can ever be re-keyed
+    let hi1 = life1
+        .keys
+        .blind_domain(life1.incarnation, (TRACK_DOMAIN_STRIDE - 1) as usize);
+    let lo2 = life2.keys.blind_domain(life2.incarnation, 0);
+    assert!(hi1 < lo2, "pad bands overlap: {hi1} vs {lo2}");
+}
+
+// ── partition/heal replay: deterministic across seeds and cadences ──
+
+fn partition_heal_config(seed: u64, tick_ms: f64) -> ClusterSimConfig {
+    let mut cfg = ClusterSimConfig::three_node(seed);
+    cfg.tick_ms = tick_ms;
+    // cut node-c off alone mid-stream, heal before the horizon
+    cfg.events.push(ClusterEvent {
+        at_ms: 150.0,
+        kind: ClusterEventKind::Partition {
+            groups: vec![
+                vec!["node-a".into(), "node-b".into()],
+                vec!["node-c".into()],
+            ],
+        },
+    });
+    cfg.events.push(ClusterEvent {
+        at_ms: 300.0,
+        kind: ClusterEventKind::Heal,
+    });
+    cfg
+}
+
+#[test]
+fn partition_heal_replay_is_identical_across_seeds() {
+    // The rng stream feeds challenges and link delays, never routing:
+    // the served/isolated ledger and the final routing state must be
+    // bit-identical under different seeds.
+    let a = replay_cluster(&partition_heal_config(2019, 20.0));
+    let b = replay_cluster(&partition_heal_config(1, 20.0));
+    assert!(a.served > 0, "the majority side keeps serving");
+    assert!(
+        a.isolated > 0,
+        "sessions pinned to the minority side must surface as isolated"
+    );
+    assert_eq!(a.lost, 0, "a healed partition loses no compliant session");
+    assert_eq!(a.joins_ok, 2);
+    assert_eq!(
+        (a.served, a.isolated, a.lost, a.digest),
+        (b.served, b.isolated, b.lost, b.digest),
+        "replay must not depend on the rng seed"
+    );
+}
+
+#[test]
+fn partition_heal_replay_is_identical_across_tick_cadences() {
+    // Drain-on-touch means serving outcomes never depend on how often
+    // the background tick runs: 20 ms, 7 ms and "never" must agree.
+    let base = replay_cluster(&partition_heal_config(2019, 20.0));
+    for tick_ms in [7.0, 0.0] {
+        let other = replay_cluster(&partition_heal_config(2019, tick_ms));
+        assert_eq!(
+            (base.served, base.isolated, base.lost, base.digest),
+            (other.served, other.isolated, other.lost, other.digest),
+            "tick cadence {tick_ms} ms changed the replay outcome"
+        );
+    }
+}
+
+// ── forged join: zero key material, in the sim and on the registry ──
+
+#[test]
+fn forged_join_mints_zero_key_material() {
+    let mut cfg = ClusterSimConfig::three_node(2019);
+    cfg.nodes.push(SimNode::new("mallory", "prod").forged());
+    cfg.events.push(ClusterEvent {
+        at_ms: 20.0,
+        kind: ClusterEventKind::Join { node: 3 },
+    });
+    let r = replay_cluster(&cfg);
+    assert_eq!(r.joins_ok, 2, "the honest joiners still join");
+    assert_eq!(r.joins_denied, 1, "the forged join is denied");
+    assert!(
+        !r.incarnations.contains_key("mallory"),
+        "a denied join must leave no membership state: {:?}",
+        r.incarnations
+    );
+
+    // same property straight on the registry: the deny frame carries a
+    // reason and no grant, and no incarnation was burned for mallory
+    let reg = TrackRegistry::new(7, TrackOptions::default());
+    reg.claim("prod", "node-a");
+    let forged = TrackOptions {
+        measurement: origami::crypto::sha256(b"not-the-enclave"),
+        ..TrackOptions::default()
+    };
+    let req = join_request(&forged, "prod", "mallory", 5, 100);
+    let reply = reg.handle_join(&req, 100);
+    match accept_grant(&forged, "prod", "mallory", 5, &reply, 100) {
+        Err(TrackError::Denied(reason)) => {
+            assert!(reason.contains("measurement"), "reason: {reason}")
+        }
+        other => panic!("expected a denial, got {other:?}"),
+    }
+    assert_eq!(reg.member_count("prod"), 1);
+    assert_eq!(reg.incarnation_of("prod", "mallory"), None);
+}
+
+// ── live cluster router: kill mid-stream keeps the session serving ──
+
+#[test]
+fn node_kill_mid_stream_migrates_sessions_with_epoch_intact() {
+    let router = ClusterRouter::new(ClusterOptions::default());
+    router.add_node("n1", "prod", member_node());
+    router.add_node("n2", "prod", member_node());
+    router.add_node("n3", "prod", member_node());
+
+    use origami::coordinator::Frontend;
+    let grant = router.establish_session("m", [9u8; 32]);
+    let home = router.pin_of(grant.session).expect("establish pins");
+
+    // first request serves on the home node
+    let r1 = router
+        .submit("m", vec![0u8; 8], grant.session)
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(r1.error.is_none(), "{:?}", r1.error);
+    assert_eq!(r1.probs[0], grant.session as f32);
+    let epoch_before = router.session_epoch(grant.session).unwrap();
+
+    // kill the home node mid-stream: the session must migrate to a
+    // same-track sibling with its state intact
+    let moved = router.kill(&home);
+    assert!(moved >= 1, "the pinned session must be migrated");
+    let sibling = router.pin_of(grant.session).expect("still pinned");
+    assert_ne!(sibling, home, "the pin left the dead node");
+
+    let r2 = router
+        .submit("m", vec![0u8; 8], grant.session)
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(r2.error.is_none(), "{:?}", r2.error);
+    assert_eq!(r2.probs[0], grant.session as f32, "the reply stream continues");
+    assert_eq!(
+        router.session_epoch(grant.session).unwrap(),
+        epoch_before,
+        "migration must not advance the client's keystream epoch"
+    );
+
+    let names = router.shutdown();
+    assert_eq!(names.len(), 2, "the killed member was dropped");
+}
+
+// ── sweeper regression: TTL reaping must not ride the autoscaler ────
+
+#[test]
+fn expired_sessions_are_reaped_with_autoscaling_off() {
+    // 30 ms TTL, 5 ms sweep cadence, and — critically — no autoscaler
+    // pump: the builder starts none, and this test never calls
+    // `autoscale_tick`.  Before the dedicated sweeper existed, expired
+    // sessions leaked forever in exactly this configuration.
+    let dep = Deployment::builder(FabricOptions::default())
+        .sessions(SessionTable::with_capacity(4, 30, 0))
+        .sweep_every_ms(5)
+        .build();
+    let grant = dep.establish_session("m", [7u8; 32]);
+    assert!(dep.sessions().contains(grant.session));
+
+    let mut reaped = false;
+    for _ in 0..400 {
+        if dep.sessions().is_empty() {
+            reaped = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(
+        reaped,
+        "the sweeper must reap expired sessions without autoscaler ticks"
+    );
+    dep.shutdown();
+
+    // control: with the sweeper disabled and no ticks, the expired
+    // entry sits in the table — the reaping above really was the
+    // sweeper's doing, not some other path
+    let dep = Deployment::builder(FabricOptions::default())
+        .sessions(SessionTable::with_capacity(4, 30, 0))
+        .sweep_every_ms(0)
+        .build();
+    dep.establish_session("m", [7u8; 32]);
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    assert_eq!(
+        dep.sessions().len(),
+        1,
+        "no sweeper, no ticks: nothing reaps (the control for the test above)"
+    );
+    dep.shutdown();
+}

@@ -16,8 +16,8 @@ use anyhow::Result;
 use origami::config::Config;
 use origami::coordinator::scheduler::{BatchScheduler, Tier2Finisher};
 use origami::coordinator::{
-    AdmissionError, AdmissionLimits, AutoscalePolicy, Deployment, EpcOptions, FabricOptions,
-    PoolOptions, ShedPolicy,
+    AdmissionError, AdmissionLimits, AutoscalePolicy, DeploySpec, Deployment, EpcOptions,
+    FabricOptions, PoolOptions,
 };
 use origami::enclave::cost::{Cat, CostModel, Ledger};
 use origami::launcher::worker_epc_bytes_from_config;
@@ -100,32 +100,25 @@ fn epc_pool(workers: usize, max_workers: usize, worker_epc_bytes: u64) -> PoolOp
 }
 
 fn epc_deployment(usable: u64) -> Deployment {
-    Deployment::new_with_epc(
-        FabricOptions::default(),
-        AutoscalePolicy {
+    Deployment::builder(FabricOptions::default())
+        .policy(AutoscalePolicy {
             high_depth_per_worker: 1,
             low_depth_per_worker: 0,
             cooldown_ticks: 0,
             ..AutoscalePolicy::default()
-        },
-        Some(EpcOptions {
+        })
+        .epc(Some(EpcOptions {
             usable_bytes: usable,
             overcommit: 1.0,
-        }),
-    )
+        }))
+        .build()
 }
 
 #[test]
 fn deploy_fails_up_front_when_the_initial_fleet_cannot_fit() {
     let dep = epc_deployment(100);
-    dep.deploy_with_admission(
-        "a",
-        8,
-        1.0,
-        None,
-        AdmissionLimits::default(),
-        ShedPolicy::Reject,
-        epc_pool(1, 1, 60),
+    dep.deploy_model(
+        DeploySpec::new("a", 8).pool(epc_pool(1, 1, 60)),
         gate_sched(Arc::new(AtomicBool::new(true))),
         ref_finisher(),
     )
@@ -137,14 +130,8 @@ fn deploy_fails_up_front_when_the_initial_fleet_cannot_fit() {
     // fails with the EPC reason and leaves no residue — no fabric
     // tenant, no charge, and the first tenant keeps serving
     let err = dep
-        .deploy_with_admission(
-            "b",
-            8,
-            1.0,
-            None,
-            AdmissionLimits::default(),
-            ShedPolicy::Reject,
-            epc_pool(1, 1, 60),
+        .deploy_model(
+            DeploySpec::new("b", 8).pool(epc_pool(1, 1, 60)),
             gate_sched(Arc::new(AtomicBool::new(true))),
             ref_finisher(),
         )
@@ -166,17 +153,13 @@ fn overcommitting_grows_are_denied_and_surfaced_in_shed_hints() {
     // the client the tenant is EPC-limited.
     let open = Arc::new(AtomicBool::new(false));
     let dep = epc_deployment(100);
-    dep.deploy_with_admission(
-        "hot",
-        8,
-        1.0,
-        None,
-        AdmissionLimits {
-            shed_depth: 6,
-            ..AdmissionLimits::default()
-        },
-        ShedPolicy::Reject,
-        epc_pool(1, 4, 40),
+    dep.deploy_model(
+        DeploySpec::new("hot", 8)
+            .admission(AdmissionLimits {
+                shed_depth: 6,
+                ..AdmissionLimits::default()
+            })
+            .pool(epc_pool(1, 4, 40)),
         gate_sched(open.clone()),
         ref_finisher(),
     )
@@ -246,26 +229,14 @@ fn packer_reclaims_idle_workers_to_fund_a_hot_grow() {
     // pool's own shrink, must fund the grow.)
     let hot_gate = Arc::new(AtomicBool::new(false));
     let dep = epc_deployment(100);
-    dep.deploy_with_admission(
-        "a-hot",
-        8,
-        1.0,
-        None,
-        AdmissionLimits::default(),
-        ShedPolicy::Reject,
-        epc_pool(1, 2, 30),
+    dep.deploy_model(
+        DeploySpec::new("a-hot", 8).pool(epc_pool(1, 2, 30)),
         gate_sched(hot_gate.clone()),
         ref_finisher(),
     )
     .unwrap();
-    dep.deploy_with_admission(
-        "b-idle",
-        8,
-        2.0,
-        None,
-        AdmissionLimits::default(),
-        ShedPolicy::Reject,
-        epc_pool(2, 2, 30),
+    dep.deploy_model(
+        DeploySpec::new("b-idle", 8).weight(2.0).pool(epc_pool(2, 2, 30)),
         gate_sched(Arc::new(AtomicBool::new(true))),
         ref_finisher(),
     )

@@ -15,7 +15,7 @@ mod common;
 
 use common::sim::{assert_replies, drive_deployment, submit_interleaved, tenant_load};
 use origami::config::Config;
-use origami::coordinator::{AdmissionError, AutoscalePolicy, Deployment};
+use origami::coordinator::{AdmissionError, Deployment};
 use origami::launcher::{
     autoscale_policy_from_config, deploy_from_config, fabric_options_from_config,
     start_deployment_from_config,
@@ -45,10 +45,7 @@ fn two_models_on_shared_fabric_bit_identical_to_serial() {
     let mut base = load_a.cfg.clone();
     base.lanes = 3;
     base.lane_devices = "cpu,gpu".into();
-    let dep = Deployment::new(
-        fabric_options_from_config(&base).unwrap(),
-        AutoscalePolicy::default(),
-    );
+    let dep = Deployment::builder(fabric_options_from_config(&base).unwrap()).build();
     deploy_from_config(&dep, &load_a.cfg, 2.0).unwrap();
     deploy_from_config(&dep, &load_b.cfg, 1.0).unwrap();
     assert_eq!(dep.models(), vec!["sim16".to_string(), "sim8".to_string()]);
@@ -85,10 +82,7 @@ fn two_models_on_shared_fabric_bit_identical_to_serial() {
 fn admission_failures_are_typed_and_synchronous() {
     let load_a = tenant_load(sim_config("sim8", 1), 1, 7, 1);
     let load_b = tenant_load(sim_config("sim16", 1), 1, 8, 1);
-    let dep = Deployment::new(
-        fabric_options_from_config(&load_a.cfg).unwrap(),
-        AutoscalePolicy::default(),
-    );
+    let dep = Deployment::builder(fabric_options_from_config(&load_a.cfg).unwrap()).build();
     deploy_from_config(&dep, &load_a.cfg, 1.0).unwrap();
     deploy_from_config(&dep, &load_b.cfg, 1.0).unwrap();
 
@@ -156,10 +150,9 @@ fn autoscaler_grows_and_shrinks_workers_and_lanes() {
     cfg.autoscale_high_depth = 2;
     cfg.autoscale_low_depth = 1;
 
-    let dep = Deployment::new(
-        fabric_options_from_config(&cfg).unwrap(),
-        autoscale_policy_from_config(&cfg),
-    );
+    let dep = Deployment::builder(fabric_options_from_config(&cfg).unwrap())
+        .policy(autoscale_policy_from_config(&cfg))
+        .build();
     deploy_from_config(&dep, &cfg, 1.0).unwrap();
     assert_eq!(dep.active_workers("sim8"), 1);
     assert_eq!(dep.lane_count(), 1);

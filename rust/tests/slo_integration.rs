@@ -63,10 +63,7 @@ fn run_shared_lane(split_chunk: usize) -> origami::coordinator::FabricMetrics {
     base.lanes = 1;
     base.lane_devices = "cpu".into();
     base.split_tail_chunk = split_chunk;
-    let dep = Deployment::new(
-        fabric_options_from_config(&base).unwrap(),
-        AutoscalePolicy::default(),
-    );
+    let dep = Deployment::builder(fabric_options_from_config(&base).unwrap()).build();
     deploy_from_config(&dep, &hot.cfg, 1.0).unwrap();
     deploy_from_config(&dep, &cold.cfg, 1.0).unwrap();
 
