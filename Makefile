@@ -6,7 +6,7 @@
 # only needed for the artifact-gated integration tests/benches; the
 # hermetic `sim*` reference-backend paths run everywhere.
 
-.PHONY: ci build test test-sim clippy fmt-check doc bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission bench-smoke-epc bench-smoke-blinding bench-smoke-kernels bench-smoke-net bench-smoke-tracks pool-demo fabric-demo net-demo clean
+.PHONY: ci build test test-sim clippy fmt-check doc bench-smoke bench-smoke-fabric bench-smoke-slo bench-smoke-admission bench-smoke-epc bench-smoke-blinding bench-smoke-kernels bench-smoke-net bench-smoke-tracks bench-smoke-oblivious pool-demo fabric-demo net-demo clean
 
 ## The CI gate: release build, full test suite, clippy as errors, rustfmt,
 ## and warning-free rustdoc.
@@ -24,7 +24,7 @@ test:
 ## assertions: `make test-sim ORIGAMI_SIM_SEED=1` (CI runs both).
 ORIGAMI_SIM_SEED ?= 2019
 test-sim:
-	ORIGAMI_SIM_SEED=$(ORIGAMI_SIM_SEED) cargo test -q --test slo_integration --test fabric_integration --test pool_integration --test admission_integration --test cluster_integration
+	ORIGAMI_SIM_SEED=$(ORIGAMI_SIM_SEED) cargo test -q --test slo_integration --test fabric_integration --test pool_integration --test admission_integration --test cluster_integration --test scenario_catalog
 
 clippy:
 	cargo clippy -p origami -- -D warnings -D clippy::large_stack_arrays
@@ -87,6 +87,13 @@ bench-smoke-net:
 ## partition/heal replay is deterministic across seeds and cadences).
 bench-smoke-tracks:
 	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig22_track_routing
+
+## Fast smoke of the data-oblivious bench (asserts oblivious serving
+## bit-identical to the branchy baseline, input-independent kernel
+## access traces, and the overhead multiplier consumed by the SLO
+## autoscaler and the EPC packer).
+bench-smoke-oblivious:
+	ORIGAMI_BENCH_FAST=1 cargo bench -p origami --bench fig23_oblivious
 
 ## The worker-pool demo: 4 pipelined workers vs the serial path.
 pool-demo:

@@ -134,6 +134,17 @@ pub struct Config {
     /// (symmetric i8 weights/activations, i32 accumulation).  Per-model
     /// overrides via `:tail=` in the deployment spec.
     pub tail_precision: String,
+    /// Data-oblivious tier-1 execution: the non-linear kernels (ReLU,
+    /// 2x2 maxpool, padding) run branchless fixed-iteration variants
+    /// whose memory-touch sequence depends only on tensor shapes —
+    /// Privado's access-pattern leak closed, at bit-identical outputs.
+    /// The planners scale the tenant's queue pressure by
+    /// [`OBLIVIOUS_COST_MULTIPLIER`] so autoscaling stays honest under
+    /// the slower kernels.  Per-model overrides via `:oblivious=` in
+    /// the deployment spec.
+    ///
+    /// [`OBLIVIOUS_COST_MULTIPLIER`]: crate::runtime::reference::OBLIVIOUS_COST_MULTIPLIER
+    pub oblivious: bool,
     /// Network front door bind address (`host:port`; port 0 picks an
     /// ephemeral port).  Empty = no listener: the deployment serves
     /// in-process submissions only.
@@ -220,6 +231,7 @@ impl Default for Config {
             epc_overcommit: 0.0,
             kernel_threads: 0,
             tail_precision: "f32".into(),
+            oblivious: false,
             listen: String::new(),
             session_ttl_ms: crate::coordinator::router::DEFAULT_SESSION_TTL_MS,
             session_shards: crate::coordinator::router::DEFAULT_SESSION_SHARDS,
@@ -366,6 +378,9 @@ impl Config {
         if let Some(b) = v.get("occupancy_flush").and_then(|x| x.as_bool()) {
             self.occupancy_flush = b;
         }
+        if let Some(b) = v.get("oblivious").and_then(|x| x.as_bool()) {
+            self.oblivious = b;
+        }
         if let Some(n) = v.get("blind_domain").and_then(|x| x.as_i64()) {
             self.blind_domain = n as u64;
         }
@@ -490,6 +505,9 @@ impl Config {
         if args.has("occupancy-flush") {
             c.occupancy_flush = true;
         }
+        if args.has("oblivious") {
+            c.oblivious = true;
+        }
         Ok(c)
     }
 
@@ -560,6 +578,7 @@ impl Config {
             ("epc_overcommit", json::num(self.epc_overcommit)),
             ("kernel_threads", json::num(self.kernel_threads as f64)),
             ("tail_precision", json::s(&self.tail_precision)),
+            ("oblivious", Value::Bool(self.oblivious)),
             ("listen", json::s(&self.listen)),
             ("session_ttl_ms", json::num(self.session_ttl_ms as f64)),
             ("session_shards", json::num(self.session_shards as f64)),
@@ -621,7 +640,7 @@ pub struct FlagDoc {
 /// The suffix keys [`ModelSpec::parse`] accepts after a model spec
 /// (`model:key=value`).  Kept as data so the CONFIG.md drift test can
 /// assert each is documented.
-pub const SPEC_SUFFIX_KEYS: [&str; 5] = ["slo", "rps", "inflight", "shed", "tail"];
+pub const SPEC_SUFFIX_KEYS: [&str; 6] = ["slo", "rps", "inflight", "shed", "tail", "oblivious"];
 
 impl Config {
     /// Every CLI flag and config-file field, grouped for help output.
@@ -653,6 +672,7 @@ impl Config {
             d("common", "--lazy-dense-bytes", "<n>", "lazy_dense_bytes", "lazy-load dense bound"),
             d("common", "--kernel-threads", "<n>", "kernel_threads", "kernel thread cap (0 = cores)"),
             d("common", "--tail-precision", "<p>", "tail_precision", "tier-2 tails: f32 | int8"),
+            d("common", "--oblivious", "", "oblivious", "data-oblivious tier-1 kernels (fixed access trace)"),
             // serve
             d("serve", "--requests", "<n>", "", "total synthetic workload requests [64]"),
             d("serve", "--rate", "<rps>", "", "Poisson open-loop arrival rate [50]"),
@@ -718,6 +738,7 @@ impl Config {
 /// - `inflight` — admission in-flight concurrency quota.
 /// - `shed` — admission queue-depth shed threshold.
 /// - `tail` — tier-2 tail precision: `f32` or `int8`.
+/// - `oblivious` — data-oblivious tier-1 kernels: `on` or `off`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
     pub model: String,
@@ -735,6 +756,8 @@ pub struct ModelSpec {
     pub shed_depth: Option<usize>,
     /// Tier-2 tail precision override (`f32` | `int8`).
     pub tail: Option<String>,
+    /// Data-oblivious tier-1 kernel override (`on` | `off`).
+    pub oblivious: Option<bool>,
 }
 
 impl ModelSpec {
@@ -750,6 +773,7 @@ impl ModelSpec {
         let mut inflight = None;
         let mut shed_depth = None;
         let mut tail = None;
+        let mut oblivious = None;
         for part in suffixes {
             let (key, value) = part
                 .trim()
@@ -805,6 +829,15 @@ impl ModelSpec {
                     );
                     tail = Some(value.to_string());
                 }
+                "oblivious" => {
+                    oblivious = Some(match value {
+                        "on" => true,
+                        "off" => false,
+                        _ => anyhow::bail!(
+                            "model spec `{spec}`: oblivious must be `on` or `off`, got `{value}`"
+                        ),
+                    });
+                }
                 other => anyhow::bail!("model spec `{spec}`: unknown option `{other}`"),
             }
         }
@@ -852,6 +885,7 @@ impl ModelSpec {
             inflight,
             shed_depth,
             tail,
+            oblivious,
         })
     }
 
@@ -892,6 +926,9 @@ impl ModelSpec {
         }
         if let Some(tail) = &self.tail {
             c.tail_precision = tail.clone();
+        }
+        if let Some(oblivious) = self.oblivious {
+            c.oblivious = oblivious;
         }
         c
     }
@@ -1258,6 +1295,28 @@ mod tests {
         assert_eq!(cfg.tail_precision, "int8");
         let cfg = ModelSpec::parse("sim8").unwrap().apply(&base);
         assert_eq!(cfg.tail_precision, base.tail_precision);
+    }
+
+    #[test]
+    fn model_spec_parses_oblivious_suffix() {
+        let s = ModelSpec::parse("sim8=origami/6:oblivious=on").unwrap();
+        assert_eq!(s.oblivious, Some(true));
+        let s = ModelSpec::parse("sim8:oblivious=off").unwrap();
+        assert_eq!(s.oblivious, Some(false));
+        assert!(ModelSpec::parse("sim8:oblivious=maybe").is_err());
+        assert!(ModelSpec::parse("sim8:oblivious=").is_err());
+
+        // flows into the per-model config; absent inherits the base
+        let base = Config::default();
+        let cfg = ModelSpec::parse("sim8:oblivious=on").unwrap().apply(&base);
+        assert!(cfg.oblivious);
+        let cfg = ModelSpec::parse("sim8:tail=int8:oblivious=on")
+            .unwrap()
+            .apply(&base);
+        assert!(cfg.oblivious, "composes with other suffixes");
+        assert_eq!(cfg.tail_precision, "int8");
+        let cfg = ModelSpec::parse("sim8").unwrap().apply(&base);
+        assert_eq!(cfg.oblivious, base.oblivious);
     }
 
     #[test]

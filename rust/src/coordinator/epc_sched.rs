@@ -244,6 +244,14 @@ pub struct ReclaimCandidate {
     pub weight: f64,
     /// Per-worker resident footprint.
     pub worker_bytes: u64,
+    /// Per-item kernel cost multiplier (1.0 = baseline; oblivious
+    /// tenants carry [`OBLIVIOUS_COST_MULTIPLIER`]).  A donor's
+    /// effective share is `weight × multiplier`: a tenant whose workers
+    /// clear their queue more slowly is proportionally less
+    /// over-provisioned at the same worker count, so it donates later.
+    ///
+    /// [`OBLIVIOUS_COST_MULTIPLIER`]: crate::runtime::reference::OBLIVIOUS_COST_MULTIPLIER
+    pub cost_multiplier: f64,
 }
 
 /// The packing policy: given a byte deficit and the other tenants'
@@ -259,8 +267,8 @@ impl EpcPacker {
     ///
     /// Eligible donors are idle (`queue_depth == 0`) with `active >
     /// floor`; donors give one worker at a time, always taking next from
-    /// the tenant with the highest `active / weight` (ties: lexicographic
-    /// tenant order, so plans are deterministic).
+    /// the tenant with the highest `active / (weight × cost_multiplier)`
+    /// (ties: lexicographic tenant order, so plans are deterministic).
     pub fn plan_reclaim(
         candidates: &[ReclaimCandidate],
         needed_bytes: u64,
@@ -268,7 +276,9 @@ impl EpcPacker {
         if needed_bytes == 0 {
             return Some(Vec::new());
         }
-        // (remaining donatable, active, weight, bytes, tenant)
+        // (remaining donatable, active, effective share, bytes, tenant);
+        // effective share = weight × cost multiplier (clamped ≥ 1.0),
+        // so slower-kernel tenants donate later among equals
         let mut donors: Vec<(usize, usize, f64, u64, &str)> = candidates
             .iter()
             .filter(|c| {
@@ -278,7 +288,7 @@ impl EpcPacker {
                 (
                     c.active - c.floor,
                     c.active,
-                    c.weight,
+                    c.weight * c.cost_multiplier.max(1.0),
                     c.worker_bytes,
                     c.tenant.as_str(),
                 )
@@ -471,6 +481,7 @@ mod tests {
             queue_depth: depth,
             weight,
             worker_bytes: bytes,
+            cost_multiplier: 1.0,
         }
     }
 
@@ -500,6 +511,30 @@ mod tests {
         assert_eq!(EpcPacker::plan_reclaim(&cands, 20), None);
         // zero deficit: trivially satisfiable without touching anyone
         assert_eq!(EpcPacker::plan_reclaim(&cands, 0), Some(Vec::new()));
+    }
+
+    #[test]
+    fn packer_reclaims_oblivious_tenants_last_among_equals() {
+        // Pinned: two tenants identical but for the cost multiplier.
+        // At 1.0 the tie breaks lexicographic and `a-oblv` donates;
+        // with OBLIVIOUS_COST_MULTIPLIER its effective share grows
+        // (weight × 1.5), its active-per-share drops below `z-cheap`'s,
+        // and the baseline tenant donates first.
+        let mut oblv = cand("a-oblv", 3, 1, 0, 1.0, 10);
+        oblv.cost_multiplier = crate::runtime::reference::OBLIVIOUS_COST_MULTIPLIER;
+        let cheap = cand("z-cheap", 3, 1, 0, 1.0, 10);
+        let plan = EpcPacker::plan_reclaim(&[oblv.clone(), cheap.clone()], 10).unwrap();
+        assert_eq!(
+            plan,
+            vec![("z-cheap".to_string(), 1)],
+            "baseline tenant donates before the oblivious one"
+        );
+        // control: at multiplier 1.0 the tie breaks lexicographic and
+        // the `a-*` tenant would have donated instead
+        let mut control = oblv;
+        control.cost_multiplier = 1.0;
+        let plan = EpcPacker::plan_reclaim(&[control, cheap], 10).unwrap();
+        assert_eq!(plan, vec![("a-oblv".to_string(), 1)]);
     }
 
     #[test]

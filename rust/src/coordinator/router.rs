@@ -412,6 +412,16 @@ pub struct ScaleSignals {
     /// suppressed entirely (the deployment tick then tries to reclaim
     /// idle workers from over-provisioned tenants before giving up).
     pub epc_headroom_workers: Option<usize>,
+    /// Per-item cost multiplier of this target relative to the baseline
+    /// kernels (e.g. [`OBLIVIOUS_COST_MULTIPLIER`] for tenants running
+    /// data-oblivious tier-1 stages).  The depth thresholds compare
+    /// against `depth × multiplier`: a queue of N oblivious items
+    /// represents N× the slowdown factor of work, so the autoscaler
+    /// grows earlier instead of discovering the deficit via p95.  `1.0`
+    /// is bit-exactly the pre-multiplier behavior.
+    ///
+    /// [`OBLIVIOUS_COST_MULTIPLIER`]: crate::runtime::reference::OBLIVIOUS_COST_MULTIPLIER
+    pub cost_multiplier: f64,
 }
 
 impl AutoscalePolicy {
@@ -432,11 +442,14 @@ impl AutoscalePolicy {
             }
         }
         let active = s.active.max(1);
-        let depth_high = s.depth > self.high_depth_per_worker.saturating_mul(active);
-        let depth_low = s.depth
+        // Effective depth: queued items weighted by the tenant's kernel
+        // cost multiplier (1.0 → bit-exactly the unweighted thresholds).
+        let eff_depth = s.depth as f64 * s.cost_multiplier.max(1.0);
+        let depth_high = eff_depth > self.high_depth_per_worker.saturating_mul(active) as f64;
+        let depth_low = eff_depth
             <= self
                 .low_depth_per_worker
-                .saturating_mul(active.saturating_sub(1));
+                .saturating_mul(active.saturating_sub(1)) as f64;
         let want = match (self.mode, s.slo_ms) {
             (ScaleMode::SloP95, Some(slo))
                 if slo > 0.0 && s.window_samples >= self.min_window_samples =>
@@ -490,6 +503,9 @@ struct ModelEntry {
     degrade_to: Option<String>,
     /// The tenant's telemetry (admission counters + retry hints).
     telemetry: Arc<TenantTelemetry>,
+    /// Per-item kernel cost multiplier fed to the autoscaler and the
+    /// EPC reclaim planner (see [`ScaleSignals::cost_multiplier`]).
+    cost_multiplier: f64,
 }
 
 /// Hysteresis bookkeeping: the autoscaler's tick counter plus each
@@ -572,10 +588,18 @@ impl DeploymentCore {
         // cadence, so session memory is bounded by (arrival rate × TTL)
         self.sessions.sweep(self.now_ms());
         let p = &self.policy;
-        let mut entries: Vec<(String, Arc<WorkerPool>, Option<f64>, f64)> = {
+        let mut entries: Vec<(String, Arc<WorkerPool>, Option<f64>, f64, f64)> = {
             let g = self.models.lock().unwrap();
             g.iter()
-                .map(|(name, e)| (name.clone(), e.pool.clone(), e.slo_ms, e.weight))
+                .map(|(name, e)| {
+                    (
+                        name.clone(),
+                        e.pool.clone(),
+                        e.slo_ms,
+                        e.weight,
+                        e.cost_multiplier,
+                    )
+                })
                 .collect()
         };
         // fixed evaluation order: scaling (and EPC reclaim) decisions
@@ -600,7 +624,7 @@ impl DeploymentCore {
         // the depth rule for the shared lanes.
         let mut all_have_slo = !entries.is_empty();
         let slo_mode = p.mode == ScaleMode::SloP95;
-        for (name, pool, slo_ms, _) in &entries {
+        for (name, pool, slo_ms, _, cost_multiplier) in &entries {
             let depth = pool.queue_depth();
             t1_backlog += depth;
             // one windowed-snapshot merge per tenant, and only for
@@ -659,6 +683,7 @@ impl DeploymentCore {
                 slo_ms: *slo_ms,
                 ticks_since_scale,
                 epc_headroom_workers: headroom,
+                cost_multiplier: *cost_multiplier,
             };
             let mut decision = p.decide(&signals);
             if decision.is_none() && headroom.is_some() {
@@ -717,6 +742,9 @@ impl DeploymentCore {
             ticks_since_scale: last_fabric.map(|l| tick_no - l),
             // tier-2 lanes hold no enclave state: never EPC-capped
             epc_headroom_workers: None,
+            // per-tenant kernel slowdowns are already folded into each
+            // pool's own signal; the shared lanes run baseline tails
+            cost_multiplier: 1.0,
         };
         if let Some(n) = p.decide(&signals) {
             if self.fabric.scale_to(n) != lanes {
@@ -740,7 +768,7 @@ impl DeploymentCore {
         model: &str,
         pool: &Arc<WorkerPool>,
         grow_by: usize,
-        entries: &[(String, Arc<WorkerPool>, Option<f64>, f64)],
+        entries: &[(String, Arc<WorkerPool>, Option<f64>, f64, f64)],
         tick_no: u64,
     ) -> bool {
         let Some(ledger) = &self.epc else {
@@ -758,13 +786,14 @@ impl DeploymentCore {
         let candidates: Vec<ReclaimCandidate> = entries
             .iter()
             .filter(|(name, ..)| name != model)
-            .map(|(name, vpool, _, weight)| ReclaimCandidate {
+            .map(|(name, vpool, _, weight, cm)| ReclaimCandidate {
                 tenant: name.clone(),
                 active: vpool.active_workers(),
                 floor: vpool.min_workers(),
                 queue_depth: vpool.queue_depth(),
                 weight: *weight,
                 worker_bytes: vpool.worker_epc_bytes(),
+                cost_multiplier: *cm,
             })
             .collect();
         let Some(plan) = EpcPacker::plan_reclaim(&candidates, needed - free) else {
@@ -1006,6 +1035,7 @@ pub struct DeploySpec {
     slo_ms: Option<f64>,
     limits: Option<AdmissionLimits>,
     shed_policy: ShedPolicy,
+    cost_multiplier: f64,
     pool: PoolOptions,
 }
 
@@ -1021,6 +1051,7 @@ impl DeploySpec {
             slo_ms: None,
             limits: None,
             shed_policy: ShedPolicy::Reject,
+            cost_multiplier: 1.0,
             pool: PoolOptions::default(),
         }
     }
@@ -1050,6 +1081,18 @@ impl DeploySpec {
     /// cheaper tier registered with [`Deployment::set_degrade`].
     pub fn shed_policy(mut self, policy: ShedPolicy) -> Self {
         self.shed_policy = policy;
+        self
+    }
+
+    /// Per-item kernel cost multiplier relative to the baseline
+    /// kernels (default 1.0).  An oblivious tenant deploys with
+    /// [`OBLIVIOUS_COST_MULTIPLIER`] so the autoscaler weighs its queue
+    /// depth accordingly and the EPC packer reclaims its workers last
+    /// among equals (see [`ScaleSignals::cost_multiplier`]).
+    ///
+    /// [`OBLIVIOUS_COST_MULTIPLIER`]: crate::runtime::reference::OBLIVIOUS_COST_MULTIPLIER
+    pub fn cost_multiplier(mut self, multiplier: f64) -> Self {
+        self.cost_multiplier = multiplier;
         self
     }
 
@@ -1160,6 +1203,7 @@ impl Deployment {
             slo_ms,
             limits,
             shed_policy,
+            cost_multiplier,
             pool: pool_opts,
         } = spec;
         let model = model.as_str();
@@ -1248,6 +1292,7 @@ impl Deployment {
                 shed_policy,
                 degrade_to: None,
                 telemetry: tenant_tel,
+                cost_multiplier,
             },
         );
         Ok(())
@@ -1941,6 +1986,7 @@ mod tests {
             slo_ms: None,
             ticks_since_scale: None,
             epc_headroom_workers: None,
+            cost_multiplier: 1.0,
         }
     }
 
@@ -1952,6 +1998,28 @@ mod tests {
         assert_eq!(p.decide(&signals(1, 2)), Some(1), "1 ≤ 1×(2−1) shrinks");
         assert_eq!(p.decide(&signals(2, 2)), None);
         assert_eq!(p.decide(&signals(0, 1)), None, "floor: never below 1");
+    }
+
+    #[test]
+    fn cost_multiplier_weighs_depth_in_decide() {
+        let p = AutoscalePolicy::default(); // high 4, low 1
+        // Pinned: the same queue that holds at baseline cost grows once
+        // the tenant runs oblivious kernels — 4 ≤ 4×1 holds, but
+        // 4 × OBLIVIOUS_COST_MULTIPLIER = 6 > 4 grows.
+        let mut s = signals(4, 1);
+        assert_eq!(p.decide(&s), None, "4 = 4×1 holds at baseline cost");
+        s.cost_multiplier = crate::runtime::reference::OBLIVIOUS_COST_MULTIPLIER;
+        assert_eq!(p.decide(&s), Some(2), "6 effective > 4 grows");
+        // ...and the same near-idle queue that would shrink at baseline
+        // is held: 1 ≤ 1×(2−1) shrinks, 1.5 effective does not.
+        let mut s = signals(1, 2);
+        assert_eq!(p.decide(&s), Some(1), "1 ≤ 1×1 shrinks at baseline");
+        s.cost_multiplier = crate::runtime::reference::OBLIVIOUS_COST_MULTIPLIER;
+        assert_eq!(p.decide(&s), None, "1.5 effective blocks the shrink");
+        // sub-1.0 multipliers are clamped: never cheaper than baseline
+        let mut s = signals(9, 2);
+        s.cost_multiplier = 0.1;
+        assert_eq!(p.decide(&s), Some(3), "0.1 clamps to 1.0: 9 > 8 grows");
     }
 
     #[test]

@@ -41,6 +41,11 @@ pub struct Enclave {
     /// Wall-clock of the last build/recovery (ms).
     pub last_build_ms: f64,
     build_counter: u64,
+    /// Data-oblivious mode: the non-linear ops run their branchless,
+    /// fixed-iteration kernels so the enclave's memory-touch sequence
+    /// depends only on tensor shapes (Privado's leak model).  Outputs
+    /// are bit-identical either way.
+    oblivious: bool,
 }
 
 impl Enclave {
@@ -60,9 +65,21 @@ impl Enclave {
             transitions: 0,
             last_build_ms: 0.0,
             build_counter: 0,
+            oblivious: false,
         };
         e.last_build_ms = e.build_work(t);
         e
+    }
+
+    /// Select data-oblivious non-linear kernels (per-model opt-in via
+    /// `--oblivious` / `:oblivious=on`).
+    pub fn set_oblivious(&mut self, oblivious: bool) {
+        self.oblivious = oblivious;
+    }
+
+    /// Whether the non-linear ops run their oblivious variants.
+    pub fn oblivious(&self) -> bool {
+        self.oblivious
     }
 
     /// The build-time work: touch + measure `declared_bytes` of pages.
@@ -200,13 +217,15 @@ impl Enclave {
 
     // -- in-enclave compute (the non-linear ops SGX keeps) -------------------
 
-    /// ReLU in place (measured NonLinear).
+    /// ReLU in place (measured NonLinear).  In oblivious mode the
+    /// branchless kernel rewrites every element (bit-identical output,
+    /// shape-determined access trace).
     pub fn relu(&self, x: &mut [f32], ledger: &mut Ledger) {
         let t = Timer::start();
-        for v in x.iter_mut() {
-            if *v < 0.0 {
-                *v = 0.0;
-            }
+        if self.oblivious {
+            crate::runtime::reference::relu_oblivious(x);
+        } else {
+            crate::runtime::reference::relu_naive(x);
         }
         ledger.add_measured(Cat::NonLinear, t.elapsed().as_nanos() as u64);
     }
@@ -223,7 +242,9 @@ impl Enclave {
         ledger.add_measured(Cat::NonLinear, t.elapsed().as_nanos() as u64);
     }
 
-    /// 2x2 stride-2 max pool over NHWC (measured NonLinear).
+    /// 2x2 stride-2 max pool over NHWC (measured NonLinear).  In
+    /// oblivious mode every window folds all four candidates through a
+    /// branchless select and stores once (bit-identical output).
     pub fn maxpool2x2(
         &self,
         x: &[f32],
@@ -234,28 +255,11 @@ impl Enclave {
         ledger: &mut Ledger,
     ) -> Vec<f32> {
         let t = Timer::start();
-        let oh = h / 2;
-        let ow = w / 2;
-        let mut out = vec![f32::NEG_INFINITY; n * oh * ow * c];
-        for b in 0..n {
-            for y in 0..h {
-                for xx in 0..w {
-                    let oy = y / 2;
-                    let ox = xx / 2;
-                    if oy >= oh || ox >= ow {
-                        continue;
-                    }
-                    let src = ((b * h + y) * w + xx) * c;
-                    let dst = ((b * oh + oy) * ow + ox) * c;
-                    for ch in 0..c {
-                        let v = x[src + ch];
-                        if v > out[dst + ch] {
-                            out[dst + ch] = v;
-                        }
-                    }
-                }
-            }
-        }
+        let out = if self.oblivious {
+            crate::runtime::reference::maxpool2x2_oblivious(x, n, h, w, c)
+        } else {
+            crate::runtime::reference::maxpool2x2_naive(x, n, h, w, c)
+        };
         ledger.add_measured(Cat::NonLinear, t.elapsed().as_nanos() as u64);
         out
     }

@@ -384,6 +384,245 @@ mod tests {
         );
     }
 
+    /// The data-oblivious tier-1 kernels must be drop-in: over random
+    /// (ragged) shapes and mixed-sign inputs — NaNs and `-0.0` included
+    /// — the branchless relu / maxpool / pad variants produce
+    /// bit-identical outputs to the branchy naive kernels they replace.
+    #[test]
+    fn oblivious_kernels_match_naive_bitwise_over_random_shapes() {
+        use crate::runtime::reference::{
+            maxpool2x2_naive, maxpool2x2_oblivious, pad2d_naive, pad2d_oblivious, relu_naive,
+            relu_oblivious,
+        };
+
+        struct Case {
+            n: usize,
+            h: usize,
+            w: usize,
+            c: usize,
+            pad: usize,
+            x: Vec<f32>,
+        }
+        impl std::fmt::Debug for Case {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(
+                    f,
+                    "Case(n={} h={} w={} c={} pad={})",
+                    self.n, self.h, self.w, self.c, self.pad
+                )
+            }
+        }
+
+        forall(
+            48,
+            2031,
+            |rng: &mut Rng, _s: Size| {
+                let n = 1 + rng.below(2) as usize;
+                let h = 1 + rng.below(8) as usize; // odd sizes exercise
+                let w = 1 + rng.below(8) as usize; // the ragged tails
+                let c = 1 + rng.below(4) as usize;
+                let pad = rng.below(3) as usize;
+                let mut x: Vec<f32> = (0..n * h * w * c)
+                    .map(|_| rng.range_f32(-2.0, 2.0))
+                    .collect();
+                // specials exercise the select masks bit-for-bit
+                for (i, v) in x.iter_mut().enumerate() {
+                    if i % 7 == 3 {
+                        *v = f32::NAN;
+                    } else if i % 7 == 5 {
+                        *v = -0.0;
+                    }
+                }
+                Case { n, h, w, c, pad, x }
+            },
+            |case: &Case| {
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+                let mut a = case.x.clone();
+                let mut b = case.x.clone();
+                relu_naive(&mut a);
+                relu_oblivious(&mut b);
+                if bits(&a) != bits(&b) {
+                    return Err("relu diverged bitwise".into());
+                }
+                let pa = maxpool2x2_naive(&case.x, case.n, case.h, case.w, case.c);
+                let pb = maxpool2x2_oblivious(&case.x, case.n, case.h, case.w, case.c);
+                if bits(&pa) != bits(&pb) {
+                    return Err("maxpool2x2 diverged bitwise".into());
+                }
+                let da = pad2d_naive(&case.x, case.n, case.h, case.w, case.c, case.pad);
+                let db = pad2d_oblivious(&case.x, case.n, case.h, case.w, case.c, case.pad);
+                if bits(&da) != bits(&db) {
+                    return Err("pad2d diverged bitwise".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The obliviousness claim itself: every oblivious kernel's memory
+    /// access trace is a pure function of the input *shape*.  Two random
+    /// inputs of the same shape must yield bit-identical touch streams
+    /// from relu, maxpool and pad — whatever the signs, magnitudes or
+    /// NaN placement of the data.
+    #[test]
+    fn oblivious_kernel_traces_depend_only_on_shape() {
+        use crate::runtime::atrace;
+        use crate::runtime::reference::{maxpool2x2_oblivious, pad2d_oblivious, relu_oblivious};
+
+        struct Case {
+            n: usize,
+            h: usize,
+            w: usize,
+            c: usize,
+            pad: usize,
+            a: Vec<f32>,
+            b: Vec<f32>,
+        }
+        impl std::fmt::Debug for Case {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(
+                    f,
+                    "Case(n={} h={} w={} c={} pad={})",
+                    self.n, self.h, self.w, self.c, self.pad
+                )
+            }
+        }
+
+        forall(
+            32,
+            2033,
+            |rng: &mut Rng, _s: Size| {
+                let n = 1 + rng.below(2) as usize;
+                let h = 1 + rng.below(8) as usize;
+                let w = 1 + rng.below(8) as usize;
+                let c = 1 + rng.below(4) as usize;
+                let pad = rng.below(3) as usize;
+                let len = n * h * w * c;
+                let mut a: Vec<f32> = (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+                let b: Vec<f32> = (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+                if !a.is_empty() {
+                    a[0] = f32::NAN; // trace must not see even a NaN
+                }
+                Case { n, h, w, c, pad, a, b }
+            },
+            |case: &Case| {
+                let (_, ta) = atrace::record(|| {
+                    let mut x = case.a.clone();
+                    relu_oblivious(&mut x);
+                });
+                let (_, tb) = atrace::record(|| {
+                    let mut x = case.b.clone();
+                    relu_oblivious(&mut x);
+                });
+                if ta != tb {
+                    return Err("oblivious relu trace depends on data".into());
+                }
+                let (_, ta) = atrace::record(|| {
+                    maxpool2x2_oblivious(&case.a, case.n, case.h, case.w, case.c);
+                });
+                let (_, tb) = atrace::record(|| {
+                    maxpool2x2_oblivious(&case.b, case.n, case.h, case.w, case.c);
+                });
+                if ta != tb {
+                    return Err("oblivious maxpool trace depends on data".into());
+                }
+                let (_, ta) = atrace::record(|| {
+                    pad2d_oblivious(&case.a, case.n, case.h, case.w, case.c, case.pad);
+                });
+                let (_, tb) = atrace::record(|| {
+                    pad2d_oblivious(&case.b, case.n, case.h, case.w, case.c, case.pad);
+                });
+                if ta != tb {
+                    return Err("oblivious pad trace depends on data".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// `--oblivious` must not perturb the blinded tier-1 path either:
+    /// the `lin_blind` residues an oblivious executor produces are
+    /// bit-identical to the baseline executor's, the unblinded outputs
+    /// still decode, and — unlike int8, which is allowed bounded drift —
+    /// the oblivious open tail is bit-identical too.
+    #[test]
+    fn oblivious_walk_keeps_blinded_offload_bit_identical_and_decodable() {
+        use crate::blinding::blind::{blind_into, unblind_into};
+        use crate::blinding::quant::{decodable, MOD_P};
+        use crate::enclave::cost::{CostModel, Ledger};
+        use crate::runtime::reference::ReferenceBackend;
+        use crate::runtime::{Device, StageExecutor};
+        use std::sync::Arc;
+
+        let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 7).unwrap());
+        let base_ex = StageExecutor::reference(rb.clone(), CostModel::default());
+        let obl_ex = StageExecutor::reference(rb, CostModel::default()).with_oblivious(true);
+        let n_in = 8 * 8 * 3; // sim8 layer-1 input
+
+        struct Case {
+            x: Vec<f32>,
+            r: Vec<u32>,
+        }
+        impl std::fmt::Debug for Case {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "Case(len={})", self.x.len())
+            }
+        }
+
+        forall(
+            16,
+            2035,
+            |rng: &mut Rng, _s: Size| {
+                let x: Vec<f32> = (0..n_in).map(|_| rng.range_f32(0.0, 1.0)).collect();
+                let r: Vec<u32> = (0..n_in).map(|_| rng.below(MOD_P)).collect();
+                Case { x, r }
+            },
+            |c: &Case| {
+                let mut ledger = Ledger::new();
+                // enclave side: fused quantize+blind
+                let mut blinded = vec![0f32; c.x.len()];
+                blind_into(&c.x, &c.r, &mut blinded);
+                // device side: blinded linear op on both executors
+                let ya = base_ex
+                    .run("sim8", "layer01_lin_blind", 1, &[&blinded], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                let yb = obl_ex
+                    .run("sim8", "layer01_lin_blind", 1, &[&blinded], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                if ya.data != yb.data {
+                    return Err("oblivious executor perturbed lin_blind residues".into());
+                }
+                // unblinding factors R = W_q·r mod P via the same stage
+                let rf: Vec<f32> = c.r.iter().map(|&v| v as f32).collect();
+                let ru = base_ex
+                    .run("sim8", "layer01_lin_blind", 1, &[&rf], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                let mut out = vec![0f32; yb.data.len()];
+                unblind_into(&yb.data, &ru.data, &mut out);
+                if let Some(v) = out.iter().find(|v| !decodable(**v)) {
+                    return Err(format!("unblinded output {v} outside decode range"));
+                }
+                // the open tail: bit-identical, not merely close
+                let pa = base_ex
+                    .run("sim8", "full_open", 1, &[&c.x], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                let pb = obl_ex
+                    .run("sim8", "full_open", 1, &[&c.x], Device::UntrustedCpu, &mut ledger)
+                    .map_err(|e| e.to_string())?;
+                let same_bits = pa.data.len() == pb.data.len()
+                    && pa
+                        .data
+                        .iter()
+                        .zip(&pb.data)
+                        .all(|(p, q)| p.to_bits() == q.to_bits());
+                if !same_bits {
+                    return Err("oblivious open tail diverged bitwise".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
     /// Weighted-fair service bound, with and without tail splitting:
     /// while every tenant stays backlogged, no tenant's served request
     /// share may drift below its weight-proportional entitlement minus

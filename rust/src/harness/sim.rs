@@ -601,6 +601,8 @@ pub fn replay(cfg: &SimConfig, trace: &Trace) -> SimResult {
                     ticks_since_scale: last_scale_tick.map(|l| tick_no - l),
                     // lanes are tier-2 capacity: never EPC-accounted
                     epc_headroom_workers: None,
+                    // baseline tier-2 kernels: no per-item slowdown
+                    cost_multiplier: 1.0,
                 };
                 if let Some(n) = policy.decide(&signals) {
                     let n = n.clamp(min_lanes, max_lanes);
@@ -874,6 +876,7 @@ pub fn replay_epc_packing(cfg: &EpcSimConfig, trace: &Trace) -> EpcSimResult {
                     slo_ms: None,
                     ticks_since_scale: ticks_since,
                     epc_headroom_workers: headroom,
+                    cost_multiplier: 1.0,
                 };
                 let mut decision = cfg.policy.decide(&signals);
                 if decision.is_none() && headroom.is_some() {
@@ -895,6 +898,7 @@ pub fn replay_epc_packing(cfg: &EpcSimConfig, trace: &Trace) -> EpcSimResult {
                                     queue_depth: p.queue.len(),
                                     weight: p.weight,
                                     worker_bytes: p.worker_bytes,
+                                    cost_multiplier: 1.0,
                                 })
                                 .collect();
                             let deficit =

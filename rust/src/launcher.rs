@@ -104,12 +104,21 @@ pub fn executor_for(config: &Config) -> Result<(Arc<StageExecutor>, Arc<Model>)>
         if config.tail_precision == "int8" {
             executor = executor.with_tail_precision(TailPrecision::Int8);
         }
+        if config.oblivious {
+            executor = executor.with_oblivious(true);
+        }
         Ok((Arc::new(executor), model))
     } else {
         anyhow::ensure!(
             config.tail_precision != "int8",
             "model {}: `--tail-precision int8` needs a sim* model \
              (no int8 HLO artifacts are exported)",
+            config.model
+        );
+        anyhow::ensure!(
+            !config.oblivious,
+            "model {}: `--oblivious` needs a sim* model (the compiled HLO \
+             artifacts keep their branchy kernels)",
             config.model
         );
         let stack = Stack::load(config)?;
@@ -420,12 +429,18 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
     if dep.epc_ledger().is_some() {
         pool_opts.worker_epc_bytes = worker_epc_bytes_for(&model, config)?;
     }
+    let cost_multiplier = if config.oblivious {
+        crate::runtime::reference::OBLIVIOUS_COST_MULTIPLIER
+    } else {
+        1.0
+    };
     dep.deploy_model(
         DeploySpec::new(&config.model, sample_bytes)
             .weight(weight)
             .slo_ms(slo_ms)
             .admission(limits)
             .shed_policy(shed_policy)
+            .cost_multiplier(cost_multiplier)
             .pool(pool_opts),
         move |band, domain| {
             let mut c = sched_cfg.clone();
@@ -454,6 +469,7 @@ pub fn deploy_from_config(dep: &Deployment, config: &Config, weight: f64) -> Res
                 // explicit: spillover must stay unthrottled even if the
                 // deployment carries a default admission policy
                 .admission(AdmissionLimits::default())
+                .cost_multiplier(cost_multiplier)
                 .pool(dpool_opts),
             move |band, domain| {
                 let mut c = dsched_cfg.clone();

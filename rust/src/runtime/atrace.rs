@@ -1,0 +1,109 @@
+//! Access-trace oracle: a recording shim over the non-linear kernels'
+//! memory-touch streams, used by tests and benches to *prove*
+//! obliviousness instead of asserting it by inspection.
+//!
+//! Privado's observation (PAPERS.md) is that an enclave's data-dependent
+//! memory accesses — the conditional store inside a branchy ReLU, the
+//! conditional max-update inside a pooling window — leak the input
+//! through the page/cache access trace even when the data itself is
+//! blinded.  The oblivious kernels in [`super::reference`] therefore
+//! touch memory in a sequence that depends only on the *shape*; this
+//! module records that sequence so a test can assert it:
+//!
+//! - an **oblivious** kernel's trace is bit-identical across any two
+//!   inputs of the same shape;
+//! - the **naive** ReLU/maxpool traces provably are not (given inputs
+//!   that flip their conditionals), which keeps the oracle honest — a
+//!   recorder that returned constant traces for everything would also
+//!   pass the first assertion.
+//!
+//! The shim is always compiled in but costs one relaxed atomic load per
+//! instrumented touch while nothing records — kernels stay hot.
+//! Recording is per-thread: the buffer lives in a thread-local, so
+//! parallel `cargo test` threads can record concurrently without
+//! interleaving each other's events.  The global counter only says
+//! "some thread is recording"; threads without an armed buffer (e.g.
+//! kernel-governor workers) drop their events.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of threads currently inside [`record`] — the fast-path gate.
+static RECORDERS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static TRACE: RefCell<Option<Vec<u64>>> = const { RefCell::new(None) };
+}
+
+/// Event kinds (packed into the top byte of each trace word).
+pub const KIND_RELU_STORE: u64 = 1;
+pub const KIND_POOL_STORE: u64 = 2;
+pub const KIND_PAD_STORE: u64 = 3;
+
+/// Record one memory touch: `kind` tags the kernel, `offset` is the
+/// element index written.  Near-free unless some thread is recording.
+#[inline]
+pub fn touch(kind: u64, offset: usize) {
+    if RECORDERS.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    TRACE.with(|t| {
+        if let Some(buf) = t.borrow_mut().as_mut() {
+            buf.push((kind << 56) | (offset as u64 & 0x00ff_ffff_ffff_ffff));
+        }
+    });
+}
+
+/// Run `f` with this thread's trace recorder armed; returns `f`'s
+/// result plus every touch the thread made, in program order.
+pub fn record<R>(f: impl FnOnce() -> R) -> (R, Vec<u64>) {
+    TRACE.with(|t| *t.borrow_mut() = Some(Vec::new()));
+    RECORDERS.fetch_add(1, Ordering::SeqCst);
+    let out = f();
+    RECORDERS.fetch_sub(1, Ordering::SeqCst);
+    let trace = TRACE.with(|t| t.borrow_mut().take()).unwrap_or_default();
+    (out, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_captures_in_program_order() {
+        let ((), trace) = record(|| {
+            touch(KIND_RELU_STORE, 3);
+            touch(KIND_POOL_STORE, 7);
+        });
+        assert_eq!(
+            trace,
+            vec![(KIND_RELU_STORE << 56) | 3, (KIND_POOL_STORE << 56) | 7]
+        );
+    }
+
+    #[test]
+    fn touches_outside_record_are_dropped() {
+        touch(KIND_RELU_STORE, 1);
+        let ((), trace) = record(|| touch(KIND_PAD_STORE, 2));
+        assert_eq!(trace.len(), 1);
+        touch(KIND_RELU_STORE, 9);
+        let ((), trace2) = record(|| ());
+        assert!(trace2.is_empty());
+    }
+
+    #[test]
+    fn nested_threads_do_not_interleave() {
+        let ((), trace) = record(|| {
+            touch(KIND_RELU_STORE, 0);
+            // a concurrently recording thread keeps its own buffer
+            let h = std::thread::spawn(|| record(|| touch(KIND_POOL_STORE, 5)).1);
+            let other = h.join().unwrap();
+            assert_eq!(other, vec![(KIND_POOL_STORE << 56) | 5]);
+            touch(KIND_RELU_STORE, 1);
+        });
+        assert_eq!(
+            trace,
+            vec![KIND_RELU_STORE << 56, (KIND_RELU_STORE << 56) | 1]
+        );
+    }
+}

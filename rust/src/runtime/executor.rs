@@ -86,6 +86,7 @@ pub enum TailPrecision {
 pub struct StageExecutor {
     backend: StageBackend,
     tail_precision: TailPrecision,
+    oblivious: bool,
     pub cost: CostModel,
 }
 
@@ -95,6 +96,7 @@ impl StageExecutor {
         Self {
             backend: StageBackend::Pjrt(registry),
             tail_precision: TailPrecision::F32,
+            oblivious: false,
             cost,
         }
     }
@@ -104,6 +106,7 @@ impl StageExecutor {
         Self {
             backend: StageBackend::Reference(backend),
             tail_precision: TailPrecision::F32,
+            oblivious: false,
             cost,
         }
     }
@@ -114,9 +117,24 @@ impl StageExecutor {
         self
     }
 
+    /// Route tail stages through the data-oblivious kernels (builder
+    /// style) — branchless ReLU/maxpool with a memory-touch sequence
+    /// fixed by the shape, selected per model via `:oblivious=on`.
+    /// Outputs stay bit-identical to the branchy path; composes with
+    /// [`TailPrecision::Int8`].
+    pub fn with_oblivious(mut self, oblivious: bool) -> Self {
+        self.oblivious = oblivious;
+        self
+    }
+
     /// The configured tail-stage precision.
     pub fn tail_precision(&self) -> TailPrecision {
         self.tail_precision
+    }
+
+    /// Whether tail stages run the data-oblivious kernels.
+    pub fn oblivious(&self) -> bool {
+        self.oblivious
     }
 
     /// Pre-compile/warm a set of stages (setup phase). No-op for the
@@ -172,8 +190,9 @@ impl StageExecutor {
             );
         }
 
-        let int8_tail = self.tail_precision == TailPrecision::Int8
-            && (stage.starts_with("tail_p") || stage == "full_open");
+        let tail_stage = stage.starts_with("tail_p") || stage == "full_open";
+        let int8_tail = self.tail_precision == TailPrecision::Int8 && tail_stage;
+        let oblivious_tail = self.oblivious && tail_stage;
         let t = Timer::start();
         let data = match &self.backend {
             StageBackend::Pjrt(reg) => {
@@ -181,6 +200,11 @@ impl StageExecutor {
                     !int8_tail,
                     "stage {stage}: int8 tails need the reference backend \
                      (no int8 HLO artifacts are exported)"
+                );
+                anyhow::ensure!(
+                    !oblivious_tail,
+                    "stage {stage}: oblivious tails need the reference backend \
+                     (the compiled HLO artifacts keep their branchy kernels)"
                 );
                 let exe = reg.get(model, stage, batch)?;
                 let shaped: Vec<(&[f32], &[usize])> = inputs
@@ -190,8 +214,14 @@ impl StageExecutor {
                     .collect();
                 reg.client().run_f32(&exe, &shaped)?
             }
+            StageBackend::Reference(rb) if int8_tail && oblivious_tail => {
+                rb.execute_tail_int8_oblivious(model, stage, batch, inputs)?
+            }
             StageBackend::Reference(rb) if int8_tail => {
                 rb.execute_tail_int8(model, stage, batch, inputs)?
+            }
+            StageBackend::Reference(rb) if oblivious_tail => {
+                rb.execute_oblivious(model, stage, batch, inputs)?
             }
             StageBackend::Reference(rb) => rb.execute(model, stage, batch, inputs)?,
         };
@@ -306,5 +336,50 @@ mod tests {
             .run("sim8", "layer01_lin_blind", 1, &[&xq], Device::UntrustedCpu, &mut l)
             .unwrap();
         assert_eq!(ya.data, yb.data, "lin_blind must not quantize");
+    }
+
+    #[test]
+    fn oblivious_dispatch_is_bit_identical_and_composes_with_int8() {
+        use crate::runtime::reference::ReferenceBackend;
+        let rb = Arc::new(ReferenceBackend::vgg_lite("sim8", 7).unwrap());
+        let base = StageExecutor::reference(rb.clone(), CostModel::default());
+        let obl = StageExecutor::reference(rb.clone(), CostModel::default())
+            .with_oblivious(true);
+        assert!(!base.oblivious());
+        assert!(obl.oblivious());
+
+        let x: Vec<f32> = (0..8 * 8 * 3).map(|i| (i % 13) as f32 / 6.5 - 1.0).collect();
+        let mut l = Ledger::new();
+        for stage in ["full_open", "layer01_lin_blind"] {
+            let a = base
+                .run("sim8", stage, 1, &[&x], Device::UntrustedCpu, &mut l)
+                .unwrap();
+            let b = obl
+                .run("sim8", stage, 1, &[&x], Device::UntrustedCpu, &mut l)
+                .unwrap();
+            assert_eq!(
+                a.data.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                b.data.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                "oblivious dispatch must not change {stage} outputs"
+            );
+        }
+
+        // int8 + oblivious compose: identical to int8 alone, bitwise
+        let i8_ex = StageExecutor::reference(rb.clone(), CostModel::default())
+            .with_tail_precision(TailPrecision::Int8);
+        let i8_obl = StageExecutor::reference(rb, CostModel::default())
+            .with_tail_precision(TailPrecision::Int8)
+            .with_oblivious(true);
+        let a = i8_ex
+            .run("sim8", "full_open", 1, &[&x], Device::UntrustedCpu, &mut l)
+            .unwrap();
+        let b = i8_obl
+            .run("sim8", "full_open", 1, &[&x], Device::UntrustedCpu, &mut l)
+            .unwrap();
+        assert_eq!(
+            a.data.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            b.data.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            "int8+oblivious must match int8 bitwise"
+        );
     }
 }

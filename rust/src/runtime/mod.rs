@@ -13,8 +13,12 @@
 //! - [`reference`]— pure-Rust stage interpreter over synthetic `sim*`
 //!                  models: the hermetic backend the pool tests, benches
 //!                  and offline builds execute against.
+//! - [`atrace`]   — access-trace oracle: records the non-linear
+//!                  kernels' memory-touch streams so tests can prove
+//!                  the oblivious kernels are input-independent.
 
 pub mod artifact;
+pub mod atrace;
 pub mod client;
 pub mod device;
 pub mod executor;

@@ -22,6 +22,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use super::atrace;
 use crate::blinding::quant::MOD_P;
 use crate::model::{Layer, LayerKind, Model, StageArtifact};
 use crate::util::rng::Rng;
@@ -29,6 +30,23 @@ use crate::util::rng::Rng;
 const MASK: u32 = MOD_P - 1;
 /// Batch sizes the synthetic stage catalog exports.
 pub const SIM_BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+/// Planning cost multiplier for data-oblivious tier-1 execution.
+///
+/// The oblivious kernels do strictly more work than their branchy
+/// counterparts — every ReLU element is rewritten, every pool window
+/// folds all four candidates, every padded cell is stored — so a tenant
+/// running them clears its queue more slowly per worker.  The SLO and
+/// EPC planners ([`AutoscalePolicy::decide`], [`EpcPacker`]) scale that
+/// tenant's queue-depth pressure by this constant so grow decisions and
+/// reclaim priorities stay honest under the slower kernels.  A fixed
+/// constant (not a runtime measurement) keeps every planning decision
+/// deterministic and replayable; `benches/fig23_oblivious.rs` reports
+/// the measured multiplier alongside it.
+///
+/// [`AutoscalePolicy::decide`]: crate::coordinator::AutoscalePolicy::decide
+/// [`EpcPacker`]: crate::coordinator::epc_sched::EpcPacker
+pub const OBLIVIOUS_COST_MULTIPLIER: f64 = 1.5;
 
 /// Per-layer parameters (quantized master copy; floats derived from it so
 /// the open and blinded paths share one source of truth).
@@ -259,12 +277,46 @@ impl ReferenceBackend {
             .strip_prefix("tail_p")
             .and_then(|s| s.parse::<usize>().ok())
         {
-            return self.open_walk(p + 1, batch, x.to_vec());
+            return self.open_walk(p + 1, batch, x.to_vec(), false);
         }
         if stage == "full_open" {
-            return self.open_walk(1, batch, x.to_vec());
+            return self.open_walk(1, batch, x.to_vec(), false);
         }
         bail!("reference backend: unknown stage `{stage}`")
+    }
+
+    /// Execute a tail stage (`tail_pNN` / `full_open`) on the
+    /// data-oblivious path: the non-linear kernels run their branchless,
+    /// fixed-iteration variants ([`relu_oblivious`],
+    /// [`maxpool2x2_oblivious`]), so the walk's memory-touch sequence
+    /// depends only on the stage shape — never the activations.
+    /// Outputs are bit-identical to [`ReferenceBackend::execute`] (the
+    /// selects reproduce the branchy semantics exactly); only the access
+    /// trace changes.  `StageExecutor` routes tail stages here when a
+    /// model opts in via `:oblivious=on`; the linear head stages
+    /// (`lin_open`, `lin_blind`) have no data-dependent branches to
+    /// begin with and run unchanged.
+    pub fn execute_oblivious(
+        &self,
+        model: &str,
+        stage: &str,
+        batch: usize,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<f32>> {
+        self.check_model(model)?;
+        let x = *inputs
+            .first()
+            .ok_or_else(|| anyhow!("stage {stage}: no input"))?;
+        if let Some(p) = stage
+            .strip_prefix("tail_p")
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            return self.open_walk(p + 1, batch, x.to_vec(), true);
+        }
+        if stage == "full_open" {
+            return self.open_walk(1, batch, x.to_vec(), true);
+        }
+        bail!("oblivious path: `{stage}` is not a tail stage")
     }
 
     /// Float linear layer + bias (the enclave applies ReLU itself).
@@ -304,7 +356,15 @@ impl ReferenceBackend {
     }
 
     /// Open execution of layers [from..=n] in float (tails + full model).
-    fn open_walk(&self, from: usize, batch: usize, mut x: Vec<f32>) -> Result<Vec<f32>> {
+    /// `oblivious` selects the branchless non-linear kernels (bit-
+    /// identical outputs, input-independent access trace).
+    fn open_walk(
+        &self,
+        from: usize,
+        batch: usize,
+        mut x: Vec<f32>,
+        oblivious: bool,
+    ) -> Result<Vec<f32>> {
         for idx in from..=self.model.num_layers() {
             let layer = self.model.layer(idx)?.clone();
             match layer.kind {
@@ -312,10 +372,10 @@ impl ReferenceBackend {
                     let mut y = self.linear_f32(idx, batch, &x)?;
                     bias_add(&mut y, &layer.bias);
                     if layer.has_relu {
-                        for v in y.iter_mut() {
-                            if *v < 0.0 {
-                                *v = 0.0;
-                            }
+                        if oblivious {
+                            relu_oblivious(&mut y);
+                        } else {
+                            relu_naive(&mut y);
                         }
                     }
                     x = y;
@@ -326,7 +386,11 @@ impl ReferenceBackend {
                         layer.in_shape[1],
                         layer.in_shape[2],
                     );
-                    x = maxpool2x2(&x, batch, h, w, c);
+                    x = if oblivious {
+                        maxpool2x2_oblivious(&x, batch, h, w, c)
+                    } else {
+                        maxpool2x2_naive(&x, batch, h, w, c)
+                    };
                 }
                 LayerKind::Flatten => {}
                 LayerKind::Softmax => {
@@ -361,16 +425,50 @@ impl ReferenceBackend {
             .strip_prefix("tail_p")
             .and_then(|s| s.parse::<usize>().ok())
         {
-            return self.int8_walk(p + 1, batch, x.to_vec());
+            return self.int8_walk(p + 1, batch, x.to_vec(), false);
         }
         if stage == "full_open" {
-            return self.int8_walk(1, batch, x.to_vec());
+            return self.int8_walk(1, batch, x.to_vec(), false);
+        }
+        bail!("int8 tail path: `{stage}` is not a tail stage")
+    }
+
+    /// The int8 tail path with oblivious non-linear kernels — the
+    /// composition `StageExecutor` selects when a model opts into both
+    /// `:tail=int8` and `:oblivious=on`.  Quantization itself is
+    /// branch-free (scale, multiply, clamp), so swapping the non-linear
+    /// kernels is all obliviousness needs here.
+    pub fn execute_tail_int8_oblivious(
+        &self,
+        model: &str,
+        stage: &str,
+        batch: usize,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<f32>> {
+        self.check_model(model)?;
+        let x = *inputs
+            .first()
+            .ok_or_else(|| anyhow!("stage {stage}: no input"))?;
+        if let Some(p) = stage
+            .strip_prefix("tail_p")
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            return self.int8_walk(p + 1, batch, x.to_vec(), true);
+        }
+        if stage == "full_open" {
+            return self.int8_walk(1, batch, x.to_vec(), true);
         }
         bail!("int8 tail path: `{stage}` is not a tail stage")
     }
 
     /// Open execution of layers [from..=n] with int8 linear layers.
-    fn int8_walk(&self, from: usize, batch: usize, mut x: Vec<f32>) -> Result<Vec<f32>> {
+    fn int8_walk(
+        &self,
+        from: usize,
+        batch: usize,
+        mut x: Vec<f32>,
+        oblivious: bool,
+    ) -> Result<Vec<f32>> {
         use crate::blinding::quant::{i8_scale, quantize_i8_slice};
         for idx in from..=self.model.num_layers() {
             let layer = self.model.layer(idx)?.clone();
@@ -397,10 +495,10 @@ impl ReferenceBackend {
                     let mut y: Vec<f32> = acc.iter().map(|&a| a as f32 * scale).collect();
                     bias_add(&mut y, &layer.bias);
                     if layer.has_relu {
-                        for v in y.iter_mut() {
-                            if *v < 0.0 {
-                                *v = 0.0;
-                            }
+                        if oblivious {
+                            relu_oblivious(&mut y);
+                        } else {
+                            relu_naive(&mut y);
                         }
                     }
                     x = y;
@@ -411,7 +509,11 @@ impl ReferenceBackend {
                         layer.in_shape[1],
                         layer.in_shape[2],
                     );
-                    x = maxpool2x2(&x, batch, h, w, c);
+                    x = if oblivious {
+                        maxpool2x2_oblivious(&x, batch, h, w, c)
+                    } else {
+                        maxpool2x2_naive(&x, batch, h, w, c)
+                    };
                 }
                 LayerKind::Flatten => {}
                 LayerKind::Softmax => {
@@ -462,7 +564,38 @@ fn bias_add(x: &mut [f32], bias: &[f32]) {
     }
 }
 
-fn maxpool2x2(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// Branchy ReLU — the baseline oracle the oblivious variant must match
+/// bitwise.  The conditional store is exactly Privado's leak: which
+/// elements get written depends on the sign pattern of the input, so
+/// the recorded access trace varies across inputs of the same shape.
+pub fn relu_naive(x: &mut [f32]) {
+    for (i, v) in x.iter_mut().enumerate() {
+        if *v < 0.0 {
+            atrace::touch(atrace::KIND_RELU_STORE, i);
+            *v = 0.0;
+        }
+    }
+}
+
+/// Branchless ReLU: every element is unconditionally rewritten through
+/// a select-via-arithmetic mask, so the store sequence depends only on
+/// the length.  The mask reproduces the branchy semantics exactly
+/// (`v < 0.0 → +0.0`, else keep — including `-0.0` and NaN, which the
+/// `<` comparison leaves untouched on both paths), so outputs are
+/// bit-identical to [`relu_naive`].  The comparison lowers to a flag
+/// materialization (setcc), not a branch.
+pub fn relu_oblivious(x: &mut [f32]) {
+    for (i, v) in x.iter_mut().enumerate() {
+        let keep = !((*v < 0.0) as u32).wrapping_neg();
+        atrace::touch(atrace::KIND_RELU_STORE, i);
+        *v = f32::from_bits(v.to_bits() & keep);
+    }
+}
+
+/// 2x2 stride-2 max pool over NHWC, branchy baseline: the conditional
+/// max-update leaks which window element won each comparison through
+/// the store trace.
+pub fn maxpool2x2_naive(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
     let (oh, ow) = (h / 2, w / 2);
     let mut out = vec![f32::NEG_INFINITY; n * oh * ow * c];
     for b in 0..n {
@@ -472,8 +605,115 @@ fn maxpool2x2(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
                 let dst = ((b * oh + y / 2) * ow + xx / 2) * c;
                 for ch in 0..c {
                     if x[src + ch] > out[dst + ch] {
+                        atrace::touch(atrace::KIND_POOL_STORE, dst + ch);
                         out[dst + ch] = x[src + ch];
                     }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Branchless 2x2 stride-2 max pool: every output cell folds its four
+/// candidates in a fixed order through select-via-arithmetic and is
+/// stored exactly once, so the access trace is a pure function of
+/// `(n, h, w, c)`.  The fold visits candidates in the same order the
+/// naive raster does and seeds the same `NEG_INFINITY`, so outputs are
+/// bit-identical to [`maxpool2x2_naive`] (NaN handling included: `>` is
+/// false on NaN comparisons either way).
+pub fn maxpool2x2_oblivious(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0f32; n * oh * ow * c];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((b * oh + oy) * ow + ox) * c;
+                for ch in 0..c {
+                    let mut acc = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let src = ((b * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ch;
+                            let v = x[src];
+                            let take = ((v > acc) as u32).wrapping_neg();
+                            acc = f32::from_bits(
+                                (v.to_bits() & take) | (acc.to_bits() & !take),
+                            );
+                        }
+                    }
+                    atrace::touch(atrace::KIND_POOL_STORE, dst + ch);
+                    out[dst + ch] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Zero-pad an NHWC feature map by `pad` on every spatial side — the
+/// skip-out-of-bounds baseline (the same index-range branch
+/// [`conv2d_f32_naive`]'s implicit padding uses).  Note the branches
+/// here test *indices*, never data, so unlike [`relu_naive`] /
+/// [`maxpool2x2_naive`] this trace is already input-invariant; the
+/// oblivious variant exists so every tier-1 spatial primitive has a
+/// fixed-iteration, unconditional-store form.
+pub fn pad2d_naive(x: &[f32], n: usize, h: usize, w: usize, c: usize, pad: usize) -> Vec<f32> {
+    let (ph, pw) = (h + 2 * pad, w + 2 * pad);
+    let mut out = vec![0f32; n * ph * pw * c];
+    for b in 0..n {
+        for y in 0..ph {
+            for xx in 0..pw {
+                let sy = y as isize - pad as isize;
+                let sx = xx as isize - pad as isize;
+                if sy < 0 || sy >= h as isize || sx < 0 || sx >= w as isize {
+                    continue;
+                }
+                let src = ((b * h + sy as usize) * w + sx as usize) * c;
+                let dst = ((b * ph + y) * pw + xx) * c;
+                for ch in 0..c {
+                    atrace::touch(atrace::KIND_PAD_STORE, dst + ch);
+                    out[dst + ch] = x[src + ch];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Branchless zero padding: every output cell is stored exactly once;
+/// out-of-range sources clamp their index to 0 via arithmetic and a
+/// mask selects `+0.0` instead, so iteration count, branch structure
+/// and store sequence are all fixed by the shape.  Bit-identical to
+/// [`pad2d_naive`] (the naive padding cells are the `+0.0` the vec
+/// initializer wrote).
+pub fn pad2d_oblivious(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let (ph, pw) = (h + 2 * pad, w + 2 * pad);
+    let mut out = vec![0f32; n * ph * pw * c];
+    for b in 0..n {
+        for y in 0..ph {
+            for xx in 0..pw {
+                // out-of-range wraps to a huge usize, failing `< h`
+                let sy = y.wrapping_sub(pad);
+                let sx = xx.wrapping_sub(pad);
+                let inside = (sy < h) & (sx < w);
+                let mask = (inside as u32).wrapping_neg();
+                // clamp via multiply: outside reads element 0 (a live,
+                // in-bounds address) and the mask discards the value
+                let csy = sy.wrapping_mul(inside as usize);
+                let csx = sx.wrapping_mul(inside as usize);
+                let src = ((b * h + csy) * w + csx) * c;
+                let dst = ((b * ph + y) * pw + xx) * c;
+                for ch in 0..c {
+                    let v = x[src + ch];
+                    atrace::touch(atrace::KIND_PAD_STORE, dst + ch);
+                    out[dst + ch] = f32::from_bits(v.to_bits() & mask);
                 }
             }
         }
@@ -1259,7 +1499,7 @@ impl ReferenceBackend {
                         layer.in_shape[1],
                         layer.in_shape[2],
                     );
-                    x = maxpool2x2(&x, batch, h, w, c);
+                    x = maxpool2x2_naive(&x, batch, h, w, c);
                 }
                 LayerKind::Flatten => {}
                 LayerKind::Softmax => {
@@ -1600,5 +1840,135 @@ mod tests {
         }
         // non-tail stages are rejected: the blinded head never quantizes
         assert!(b.execute_tail_int8("sim8", "layer01_lin_blind", 2, &[&head]).is_err());
+    }
+
+    /// The branchless kernels reproduce the branchy semantics bitwise —
+    /// including the awkward corners: `-0.0` survives ReLU (it is not
+    /// `< 0.0`), NaN passes through, and pooling folds NaN/∞ the same
+    /// way the conditional max does.
+    #[test]
+    fn oblivious_kernels_bit_identical_to_naive() {
+        let specials = [
+            -0.0f32,
+            0.0,
+            f32::NAN,
+            -f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1.5,
+            -1.5,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+        ];
+        let mut rng = Rng::new(7);
+        let mut v: Vec<f32> = (0..4 * 6 * 6 * 3 - specials.len())
+            .map(|_| rng.range_f32(-2.0, 2.0))
+            .collect();
+        v.extend_from_slice(&specials);
+
+        let mut naive = v.clone();
+        let mut obl = v.clone();
+        relu_naive(&mut naive);
+        relu_oblivious(&mut obl);
+        let nb: Vec<u32> = naive.iter().map(|f| f.to_bits()).collect();
+        let ob: Vec<u32> = obl.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(nb, ob, "relu variants diverged bitwise");
+
+        // even h/w and the ragged case (odd trailing row/col dropped)
+        for (h, w) in [(6, 6), (5, 7), (2, 2)] {
+            let m: Vec<f32> = (0..2 * h * w * 3)
+                .map(|i| if i % 9 == 0 { f32::NAN } else { rng.range_f32(-3.0, 3.0) })
+                .collect();
+            let a = maxpool2x2_naive(&m, 2, h, w, 3);
+            let b = maxpool2x2_oblivious(&m, 2, h, w, 3);
+            let ab: Vec<u32> = a.iter().map(|f| f.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|f| f.to_bits()).collect();
+            assert_eq!(ab, bb, "maxpool variants diverged at {h}x{w}");
+
+            for pad in [0usize, 1, 2] {
+                let p = pad2d_naive(&m, 2, h, w, 3, pad);
+                let q = pad2d_oblivious(&m, 2, h, w, 3, pad);
+                let pb: Vec<u32> = p.iter().map(|f| f.to_bits()).collect();
+                let qb: Vec<u32> = q.iter().map(|f| f.to_bits()).collect();
+                assert_eq!(pb, qb, "pad variants diverged at {h}x{w} pad {pad}");
+            }
+        }
+    }
+
+    /// The access-trace oracle: oblivious kernels touch memory in a
+    /// sequence fixed by the shape; the naive ReLU/maxpool provably do
+    /// not (their conditional stores follow the data).
+    #[test]
+    fn oblivious_traces_are_input_invariant_and_naive_traces_are_not() {
+        let a: Vec<f32> = (0..2 * 4 * 4 * 3)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let b: Vec<f32> = (0..2 * 4 * 4 * 3)
+            .map(|i| if i % 2 == 0 { -1.0 } else { 1.0 })
+            .collect();
+
+        let (_, ta) = atrace::record(|| relu_oblivious(&mut a.clone()));
+        let (_, tb) = atrace::record(|| relu_oblivious(&mut b.clone()));
+        assert_eq!(ta, tb, "oblivious relu trace must not follow the data");
+        assert!(!ta.is_empty());
+        let (_, na) = atrace::record(|| relu_naive(&mut a.clone()));
+        let (_, nb) = atrace::record(|| relu_naive(&mut b.clone()));
+        assert_ne!(na, nb, "naive relu trace must follow the data");
+
+        let (_, pa) = atrace::record(|| maxpool2x2_oblivious(&a, 2, 4, 4, 3));
+        let (_, pb) = atrace::record(|| maxpool2x2_oblivious(&b, 2, 4, 4, 3));
+        assert_eq!(pa, pb, "oblivious maxpool trace must not follow the data");
+        let (_, qa) = atrace::record(|| maxpool2x2_naive(&a, 2, 4, 4, 3));
+        let (_, qb) = atrace::record(|| maxpool2x2_naive(&b, 2, 4, 4, 3));
+        assert_ne!(qa, qb, "naive maxpool trace must follow the data");
+
+        // padding branches on indices, not data: both variants are
+        // input-invariant, the oblivious one additionally touches every
+        // output cell
+        let (_, da) = atrace::record(|| pad2d_oblivious(&a, 2, 4, 4, 3, 1));
+        let (_, db) = atrace::record(|| pad2d_oblivious(&b, 2, 4, 4, 3, 1));
+        assert_eq!(da, db);
+        assert_eq!(da.len(), 2 * 6 * 6 * 3, "oblivious pad stores every cell");
+        let (_, ea) = atrace::record(|| pad2d_naive(&a, 2, 4, 4, 3, 1));
+        let (_, eb) = atrace::record(|| pad2d_naive(&b, 2, 4, 4, 3, 1));
+        assert_eq!(ea, eb, "naive pad branches on indices only");
+    }
+
+    /// The oblivious tail walk is a pure access-pattern change: outputs
+    /// stay bit-identical to the branchy walk, on both the f32 and the
+    /// int8 tail, and non-tail stages are rejected like the int8 path.
+    #[test]
+    fn oblivious_walks_match_naive_walks_bitwise() {
+        let b = backend();
+        let x: Vec<f32> = (0..2 * 8 * 8 * 3)
+            .map(|i| ((i * 37) % 23) as f32 / 11.0 - 1.0)
+            .collect();
+        for stage in ["full_open", "tail_p06"] {
+            let input: Vec<f32> = if stage == "full_open" {
+                x.clone()
+            } else {
+                b.open_walk_prefix(1, 6, 2, x.clone())
+            };
+            let naive = b.execute("sim8", stage, 2, &[&input]).unwrap();
+            let obl = b.execute_oblivious("sim8", stage, 2, &[&input]).unwrap();
+            assert_eq!(
+                naive.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                obl.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                "oblivious {stage} diverged"
+            );
+            let i8n = b.execute_tail_int8("sim8", stage, 2, &[&input]).unwrap();
+            let i8o = b
+                .execute_tail_int8_oblivious("sim8", stage, 2, &[&input])
+                .unwrap();
+            assert_eq!(
+                i8n.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                i8o.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                "oblivious int8 {stage} diverged"
+            );
+        }
+        assert!(b.execute_oblivious("sim8", "layer01_lin_blind", 2, &[&x]).is_err());
+        assert!(b
+            .execute_tail_int8_oblivious("sim8", "layer01_lin_blind", 2, &[&x])
+            .is_err());
     }
 }

@@ -71,12 +71,13 @@ impl StrategyCtx {
     /// (layer, epoch), which would void the OTP across the pool.
     pub fn with_enclave(&mut self, declared_bytes: u64) -> Result<()> {
         let seed = self.config.seed.to_le_bytes();
-        let enclave = Enclave::create(
+        let mut enclave = Enclave::create(
             declared_bytes,
             self.config.usable_epc_bytes(),
             &seed,
             self.executor.cost.clone(),
         );
+        enclave.set_oblivious(self.config.oblivious);
         let key = enclave.derive_key(&format!(
             "blinding-stream-{}",
             self.config.blind_domain

@@ -89,6 +89,7 @@ fn readme_links_docs_and_renders_every_figure() {
     assert!(readme.contains("## Results"), "README lost its Results section");
     for fig in [
         "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21", "fig22",
+        "fig23",
     ] {
         assert!(
             readme.contains(fig),

@@ -1,0 +1,547 @@
+//! Hostile-scenario regression catalog: the arrival patterns and fault
+//! sequences that historically break serving systems, each replayed
+//! through the deterministic simulators in `origami::harness::sim` and
+//! pinned by digest across rng seeds {2019, 1} and two tick cadences
+//! (20 ms and 7 ms).
+//!
+//! The catalog covers:
+//! - a **diurnal** day: quiet morning, overloaded midday peak, quiet
+//!   evening — the autoscaler must grow through the peak and every
+//!   offered request must complete;
+//! - a **flash crowd**: a burst too fast for any scaling loop, absorbed
+//!   by shed-to-degrade admission while a steady tenant keeps its
+//!   latency;
+//! - **crash-and-respawn chaos**: a member fails mid-traffic and a
+//!   replacement joins mid-traffic, with zero compliant sessions lost —
+//!   plus a live leg proving the *full serving path* (encrypted
+//!   requests, blinded offload, real tier-2 tails) survives the
+//!   respawn bit-identically, not just the blinding-domain bookkeeping;
+//! - **attestation expiry mid-session**: a joiner whose handshake
+//!   evidence falls outside the track's TTL window is denied with zero
+//!   key material and zero serving impact;
+//! - a **mixed fleet** of small tenants beside a paper-scale `sim224`
+//!   tenant, packed into usable EPC with zero paging-storm ticks and
+//!   every request served.
+//!
+//! Determinism discipline: the cluster replays consume the seed (join
+//! challenges, link jitter) and the tick cadence, so their invariance
+//! is a real theorem about the routing code.  The queueing replays take
+//! no rng at all and fold only work-conserving outcomes (per-tenant
+//! served counts, shed ledgers) — the digest grid then pins that no
+//! cadence- or seed-shaped behavior leaks into what was served.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use origami::config::Config;
+use origami::coordinator::{AutoscalePolicy, ClusterOptions, ClusterRouter, Deployment, Frontend};
+use origami::enclave::cost::Ledger;
+use origami::harness::sim::{
+    replay, replay_cluster, replay_epc_packing, sim_seed, ClusterEvent, ClusterEventKind,
+    ClusterSimConfig, EpcSimConfig, EpcSimTenant, SimAdmission, SimConfig, SimNode, Trace,
+};
+use origami::launcher::{
+    build_strategy_with, deploy_from_config, encrypt_request, executor_for,
+    fabric_options_from_config, synth_images, worker_epc_bytes_from_config,
+};
+
+// ── the digest grid ─────────────────────────────────────────────────
+
+/// FNV-1a accumulator for scenario outcomes (same constants as the
+/// cluster replay's internal digest).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.write(s.as_bytes());
+    }
+}
+
+/// Replay `scenario` at every (seed, tick cadence) grid point — the
+/// pinned seeds plus whatever `ORIGAMI_SIM_SEED` CI injects — and
+/// require one digest everywhere.
+fn pinned_across_grid(name: &str, scenario: impl Fn(u64, f64) -> u64) {
+    let base = scenario(2019, 20.0);
+    for seed in [2019, 1, sim_seed()] {
+        for tick_ms in [20.0, 7.0] {
+            let got = scenario(seed, tick_ms);
+            assert_eq!(
+                got, base,
+                "scenario `{name}` drifted at seed {seed}, tick {tick_ms} ms"
+            );
+        }
+    }
+}
+
+// ── diurnal arrival cycle ───────────────────────────────────────────
+
+/// Quiet morning, overloaded midday peak, quiet evening: the midday
+/// block offers 4-request chunks costing 4 ms every 2 ms — twice what
+/// one lane serves — so the depth autoscaler must grow mid-day and
+/// every offered request must still complete.
+fn diurnal_digest(_seed: u64, tick_ms: f64) -> u64 {
+    let mut t = Trace::new();
+    t.push_periodic("web", 0.0, 10.0, 30, 1, 2.0);
+    t.push_periodic("web", 300.0, 2.0, 100, 4, 4.0);
+    t.push_periodic("web", 520.0, 10.0, 30, 1, 2.0);
+    // a steady background tenant runs across the whole day
+    t.push_periodic("batch", 0.0, 20.0, 40, 1, 4.0);
+    let r = replay(
+        &SimConfig {
+            weights: vec![("web".into(), 2.0), ("batch".into(), 1.0)],
+            lanes: 1,
+            max_lanes: 4,
+            split_chunk: 2,
+            policy: Some(AutoscalePolicy {
+                tick_ms: tick_ms as u64,
+                cooldown_ticks: 1,
+                ..AutoscalePolicy::default()
+            }),
+            ..SimConfig::default()
+        },
+        &t,
+    );
+    assert!(
+        r.peak_lanes > 1,
+        "the midday peak must grow the lane fleet (peak {})",
+        r.peak_lanes
+    );
+    assert!(r.scale_events >= 1);
+    assert_eq!(r.count(Some("web")), 30 + 400 + 30, "every web request completes");
+    assert_eq!(r.count(Some("batch")), 40, "every batch request completes");
+    assert!(r.rejected.is_empty() && r.degraded.is_empty());
+    // fold the work-conserving outcome only: lane counts and latencies
+    // legitimately follow the tick cadence, what was served must not
+    let mut d = Fnv::new();
+    for (tenant, n) in r.served_by_tenant() {
+        d.str(&tenant);
+        d.u64(n as u64);
+    }
+    d.0
+}
+
+#[test]
+fn diurnal_cycle_scales_and_conserves_every_request() {
+    pinned_across_grid("diurnal", diurnal_digest);
+}
+
+// ── flash crowd ─────────────────────────────────────────────────────
+
+/// 80 requests land in one instant — faster than any scaling loop can
+/// react, so the fleet is fixed and shed-to-degrade admission is the
+/// only defense.  Neither grid axis feeds this replay; the grid pins
+/// exactly that, over the *full* sample set.
+fn flash_crowd_digest(_seed: u64, _tick_ms: f64) -> u64 {
+    let mut t = Trace::new();
+    t.push_periodic("steady", 0.0, 5.0, 60, 1, 1.0);
+    for _ in 0..80 {
+        t.push(100.0, "crowd", 1, 2.0);
+    }
+    let r = replay(
+        &SimConfig {
+            weights: vec![("steady".into(), 1.0), ("crowd".into(), 1.0)],
+            lanes: 2,
+            split_chunk: 1,
+            admission: vec![(
+                "crowd".into(),
+                SimAdmission {
+                    rps: 0.0,
+                    burst: 0.0,
+                    inflight: 0,
+                    shed_depth: 24,
+                    degrade_ms: 6.0,
+                },
+            )],
+            ..SimConfig::default()
+        },
+        &t,
+    );
+    assert_eq!(r.count(Some("steady")), 60);
+    assert_eq!(
+        r.count(Some("crowd")),
+        80,
+        "shed requests degrade to the cheaper tier, they are never dropped"
+    );
+    assert_eq!(
+        r.degraded.get("crowd").copied().unwrap_or(0),
+        56,
+        "everything past the 24-deep queue degrades"
+    );
+    assert!(r.rejected.is_empty());
+    let steady_p95 = r.p95(Some("steady"));
+    assert!(
+        steady_p95 < 10.0,
+        "the steady tenant must keep its latency through the flash \
+         (p95 {steady_p95:.2} ms)"
+    );
+    assert!(r.p95(Some("crowd")) > steady_p95);
+    // a fixed fleet with no rng is exactly reproducible: fold every sample
+    let mut samples: Vec<(String, u64, bool)> = r
+        .samples
+        .iter()
+        .map(|s| (s.tenant.clone(), s.latency_ms.to_bits(), s.degraded))
+        .collect();
+    samples.sort();
+    let mut d = Fnv::new();
+    for (tenant, lat_bits, degraded) in samples {
+        d.str(&tenant);
+        d.u64(lat_bits);
+        d.u64(degraded as u64);
+    }
+    d.0
+}
+
+#[test]
+fn flash_crowd_sheds_to_degraded_tier_and_shields_the_steady_tenant() {
+    pinned_across_grid("flash-crowd", flash_crowd_digest);
+}
+
+// ── crash-and-respawn chaos (replay) ────────────────────────────────
+
+/// A member fails mid-traffic and a replacement joins mid-traffic.
+/// The route plan keeps the dead member's entry as a tombstone, so the
+/// replacement joins under a fresh node identity — exactly how a
+/// production respawn mints a fresh incarnation.
+fn chaos_digest(seed: u64, tick_ms: f64) -> u64 {
+    let mut cfg = ClusterSimConfig::three_node(seed);
+    cfg.tick_ms = tick_ms;
+    // arrivals span [0, 320) ms: the crash and the respawn land mid-stream
+    cfg.arrivals_per_session = 8;
+    cfg.events.push(ClusterEvent {
+        at_ms: 150.0,
+        kind: ClusterEventKind::MarkFailing { node: 1 },
+    });
+    cfg.nodes.push(SimNode::new("node-d", "prod").skew(1.0));
+    cfg.events.push(ClusterEvent {
+        at_ms: 250.0,
+        kind: ClusterEventKind::Join { node: 3 },
+    });
+    let r = replay_cluster(&cfg);
+    assert_eq!(
+        r.served,
+        48 * 8,
+        "every arrival is served across the crash and the respawn"
+    );
+    assert_eq!(r.lost, 0, "chaos must lose no compliant session");
+    assert_eq!(r.isolated, 0);
+    assert!(
+        r.moved >= 1,
+        "the failing member's pinned sessions must migrate to siblings"
+    );
+    assert_eq!((r.joins_ok, r.joins_denied), (3, 0));
+    assert!(r.incarnations.contains_key("node-d"));
+    let mut d = Fnv::new();
+    d.u64(r.served);
+    d.u64(r.isolated);
+    d.u64(r.lost);
+    d.u64(r.joins_ok);
+    d.u64(r.joins_denied);
+    for (node, inc) in &r.incarnations {
+        d.str(node);
+        d.u64(*inc);
+    }
+    d.u64(r.digest);
+    d.0
+}
+
+#[test]
+fn worker_crash_and_respawn_chaos_loses_no_compliant_session() {
+    pinned_across_grid("chaos-crash-respawn", chaos_digest);
+}
+
+// ── attestation expiry mid-session ──────────────────────────────────
+
+/// A joiner whose clock drifted 90 s ahead completes the handshake
+/// with evidence that lands outside the track's 60 s attestation TTL:
+/// the grant it receives is already expired on its own clock, so the
+/// join aborts with zero key material and zero routing impact — the
+/// in-flight sessions never notice.
+fn attestation_expiry_digest(seed: u64, tick_ms: f64) -> u64 {
+    let mut cfg = ClusterSimConfig::three_node(seed);
+    cfg.tick_ms = tick_ms;
+    cfg.arrivals_per_session = 8;
+    cfg.nodes.push(SimNode::new("node-late", "prod").skew(90_000.0));
+    cfg.events.push(ClusterEvent {
+        at_ms: 200.0,
+        kind: ClusterEventKind::Join { node: 3 },
+    });
+    let r = replay_cluster(&cfg);
+    assert_eq!(
+        (r.joins_ok, r.joins_denied),
+        (2, 1),
+        "evidence outside the attestation TTL must be refused"
+    );
+    assert!(
+        !r.incarnations.contains_key("node-late"),
+        "a denied join must leave no membership behind"
+    );
+    assert_eq!(r.served, 48 * 8, "serving continues unharmed");
+    assert_eq!(r.lost, 0, "an expired-attestation join loses no session");
+    assert_eq!(r.isolated, 0);
+    assert_eq!(r.moved, 0, "nobody drains, nothing migrates");
+    let mut d = Fnv::new();
+    d.u64(r.served);
+    d.u64(r.isolated);
+    d.u64(r.lost);
+    d.u64(r.joins_ok);
+    d.u64(r.joins_denied);
+    for (node, inc) in &r.incarnations {
+        d.str(node);
+        d.u64(*inc);
+    }
+    d.u64(r.digest);
+    d.0
+}
+
+#[test]
+fn attestation_expiry_mid_session_denies_the_join_and_loses_nothing() {
+    pinned_across_grid("attestation-expiry", attestation_expiry_digest);
+}
+
+// ── mixed fleet: small tenants beside paper-scale sim224 ────────────
+
+/// Two small tenants and one paper-scale `sim224` tenant share usable
+/// EPC under the packer: overload everything, require zero paging-storm
+/// ticks, residency inside the budget, and every request served — with
+/// the served ledger identical to naive (un-packed) scaling, since
+/// packing throttles capacity, never work.
+fn mixed_fleet_digest(_seed: u64, tick_ms: f64) -> u64 {
+    let big = Config {
+        model: "sim224".into(),
+        strategy: "origami/6".into(),
+        max_batch: 4,
+        ..Config::paper_scale()
+    };
+    let worker_bytes = worker_epc_bytes_from_config(&big).expect("sim224 memory analytics");
+    let usable = big.usable_epc_bytes();
+    let fit = (usable / worker_bytes) as usize;
+    assert!(
+        fit >= 2,
+        "paper-scale EPC must hold at least two sim224 workers \
+         ({worker_bytes} B each, {usable} B usable)"
+    );
+    let small_bytes = worker_bytes / 6;
+
+    let mut t = Trace::new();
+    t.push_periodic("sim224/a", 0.0, 2.0, 80, 2, 10.0);
+    t.push_periodic("edge-a", 0.0, 4.0, 60, 1, 2.0);
+    t.push_periodic("edge-b", 1.0, 4.0, 60, 1, 2.0);
+
+    let mk = |packing: bool| EpcSimConfig {
+        usable_bytes: usable,
+        overcommit: 1.0,
+        packing,
+        tenants: vec![
+            EpcSimTenant {
+                name: "sim224/a".into(),
+                worker_bytes,
+                min_workers: 1,
+                max_workers: fit,
+                weight: 1.0,
+            },
+            EpcSimTenant {
+                name: "edge-a".into(),
+                worker_bytes: small_bytes,
+                min_workers: 1,
+                max_workers: 4,
+                weight: 1.0,
+            },
+            EpcSimTenant {
+                name: "edge-b".into(),
+                worker_bytes: small_bytes,
+                min_workers: 1,
+                max_workers: 4,
+                weight: 1.0,
+            },
+        ],
+        policy: AutoscalePolicy {
+            high_depth_per_worker: 2,
+            low_depth_per_worker: 0,
+            tick_ms: tick_ms as u64,
+            cooldown_ticks: 1,
+            ..AutoscalePolicy::default()
+        },
+    };
+    let packed = replay_epc_packing(&mk(true), &t);
+    let naive = replay_epc_packing(&mk(false), &t);
+
+    assert_eq!(
+        packed.storm_ticks, 0,
+        "the packed mixed fleet must never enter the paging-storm regime"
+    );
+    assert!(
+        packed.peak_resident_bytes <= usable,
+        "packed residency exceeded usable EPC"
+    );
+    for (tenant, offered) in [("sim224/a", 160usize), ("edge-a", 60), ("edge-b", 60)] {
+        assert_eq!(
+            packed.served.get(tenant).copied().unwrap_or(0),
+            offered,
+            "tenant `{tenant}` must have every offered request served"
+        );
+    }
+    assert_eq!(
+        packed.served, naive.served,
+        "packing throttles capacity, never work"
+    );
+    let mut d = Fnv::new();
+    for (tenant, n) in &packed.served {
+        d.str(tenant);
+        d.u64(*n as u64);
+    }
+    d.u64(packed.storm_ticks);
+    d.0
+}
+
+#[test]
+fn mixed_fleet_of_small_and_sim224_tenants_packs_without_storms() {
+    pinned_across_grid("mixed-fleet-epc", mixed_fleet_digest);
+}
+
+// ── live leg: the full serving path survives crash-and-respawn ──────
+
+const MODEL: &str = "sim8";
+
+fn model_config() -> Config {
+    Config {
+        model: MODEL.into(),
+        strategy: "origami/6".into(),
+        workers: 1,
+        max_batch: 1, // batch == request: deterministic accounting
+        max_delay_ms: 0.0,
+        pool_epochs: 16,
+        pipeline: true,
+        ..Config::default()
+    }
+}
+
+struct Workload {
+    cfg: Config,
+    sessions: Vec<u64>,
+    images: Vec<Vec<f32>>,
+    expected: Vec<Vec<f32>>,
+}
+
+/// `n` encrypted requests plus their serial-reference answers.
+fn workload(n: usize, session_base: u64) -> anyhow::Result<Workload> {
+    let cfg = model_config();
+    let (_, m) = executor_for(&cfg)?;
+    let images = synth_images(n, m.image, m.in_channels, cfg.seed);
+    let sessions: Vec<u64> = (0..n as u64).map(|i| session_base + i).collect();
+    let (executor, m) = executor_for(&cfg)?;
+    let mut strategy = build_strategy_with(executor, m, &cfg)?;
+    let expected = images
+        .iter()
+        .zip(&sessions)
+        .map(|(img, &s)| {
+            let ct = encrypt_request(&cfg, s, img);
+            strategy.infer(&ct, 1, &[s], &mut Ledger::new())
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(Workload {
+        cfg,
+        sessions,
+        images,
+        expected,
+    })
+}
+
+fn member(cfg: &Config) -> anyhow::Result<Deployment> {
+    let dep = Deployment::builder(fabric_options_from_config(cfg)?)
+        .sweep_every_ms(0)
+        .build();
+    deploy_from_config(&dep, cfg, 1.0)?;
+    Ok(dep)
+}
+
+/// Serve request `i` of `load` through `front` and require the reply
+/// bit-identical to the serial reference.
+fn serve_one(front: &dyn Frontend, load: &Workload, i: usize) {
+    let s = load.sessions[i];
+    let ct = encrypt_request(&load.cfg, s, &load.images[i]);
+    let resp = front.infer_blocking(MODEL, ct, s).expect("infer");
+    assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+    assert_eq!(
+        resp.probs, load.expected[i],
+        "request {i} (session {s}) diverged from the serial reference"
+    );
+}
+
+#[test]
+fn full_serving_path_survives_crash_and_respawn() {
+    let load = workload(12, 700_000).expect("workload");
+    let router = ClusterRouter::new(ClusterOptions::default());
+    for name in ["n1", "n2", "n3"] {
+        router.add_node(name, "prod", Arc::new(member(&load.cfg).expect("member")));
+    }
+    for i in 0..load.sessions.len() {
+        serve_one(&router, &load, i);
+    }
+
+    // crash the member holding the most pins — the worst case
+    let mut pins: HashMap<String, usize> = HashMap::new();
+    for &s in &load.sessions {
+        if let Some(node) = router.pin_of(s) {
+            *pins.entry(node).or_insert(0) += 1;
+        }
+    }
+    let victim = pins
+        .iter()
+        .max_by_key(|(name, &n)| (n, std::cmp::Reverse((*name).clone())))
+        .map(|(name, _)| name.clone())
+        .expect("some node holds pins");
+    let moved = router.kill(&victim);
+    assert!(moved >= 1, "the victim's sessions must migrate");
+
+    // every session serves again, bit-identical, on the survivors
+    for i in 0..load.sessions.len() {
+        serve_one(&router, &load, i);
+    }
+    for &s in &load.sessions {
+        let node = router.pin_of(s).expect("session still pinned");
+        assert_ne!(node, victim, "session {s} still pinned to the dead node");
+    }
+
+    // respawn: the route plan tombstones the dead name, so the
+    // replacement joins under a fresh identity — the routing-layer face
+    // of a production respawn's fresh incarnation — and the whole
+    // serving path (encryption, blinding, tier-2 tails) runs through it
+    router.add_node(
+        "respawn-1",
+        "prod",
+        Arc::new(member(&load.cfg).expect("member")),
+    );
+    let probe = workload(48, 800_000).expect("probe workload");
+    let mut on_new = 0usize;
+    for i in 0..probe.sessions.len() {
+        serve_one(&router, &probe, i);
+        if router.pin_of(probe.sessions[i]).as_deref() == Some("respawn-1") {
+            on_new += 1;
+        }
+    }
+    assert!(
+        on_new >= 1,
+        "the respawned member must take a share of new sessions (got {on_new} of 48)"
+    );
+
+    // the pre-crash sessions keep serving bit-identically beside it
+    for i in 0..load.sessions.len() {
+        serve_one(&router, &load, i);
+    }
+    router.shutdown();
+}

@@ -212,6 +212,7 @@ fn base_signals() -> ScaleSignals {
         slo_ms: None,
         ticks_since_scale: None,
         epc_headroom_workers: None,
+        cost_multiplier: 1.0,
     }
 }
 
